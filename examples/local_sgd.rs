@@ -1,0 +1,48 @@
+//! Local SGD with compressed model deltas (Experiment 6 as a program):
+//! four workers train locally and average every 10 steps; the deltas are
+//! compressed with RLQSGD vs QSGD at the same bit budget.
+//!
+//! Run: `cargo run --release --example local_sgd`
+
+use dme::coordinator::CodecSpec;
+use dme::data::gen_lsq;
+use dme::opt::local_sgd::{run_local_sgd, LocalSgdConfig};
+
+fn main() {
+    let ds = gen_lsq(8192, 100, 11);
+    let cfg = LocalSgdConfig {
+        n_machines: 4,
+        lr: 0.02,
+        local_steps: 10,
+        rounds: 40,
+        batch: 256,
+        seed: 0,
+        y0: 0.5,
+        ..Default::default()
+    };
+
+    println!("Local SGD: 4 workers, avg every 10 steps, S=8192 d=100\n");
+    println!(
+        "{:<16} {:>14} {:>14} {:>16}",
+        "method", "final loss", "mean quant err", "max bits/round"
+    );
+    for (label, spec) in [
+        ("uncompressed", None),
+        ("RLQSGD(q=16)", Some(CodecSpec::Rlq { q: 16 })),
+        ("LQSGD(q=16)", Some(CodecSpec::Lq { q: 16 })),
+        ("QSGD-L2(q=16)", Some(CodecSpec::QsgdL2 { q: 16 })),
+        ("Hadamard(q=16)", Some(CodecSpec::Hadamard { q: 16 })),
+    ] {
+        let t = run_local_sgd(&ds, spec, &cfg);
+        let qerr = t.quant_err.iter().sum::<f64>() / t.quant_err.len() as f64;
+        println!(
+            "{:<16} {:>14.4e} {:>14.4e} {:>16}",
+            label,
+            t.loss.last().unwrap(),
+            qerr,
+            t.max_bits_sent.iter().max().unwrap()
+        );
+    }
+    println!("\nexpected shape (paper Fig 11): lattice methods reach lower loss and");
+    println!("an order-of-magnitude smaller quantization error than norm-based ones.");
+}

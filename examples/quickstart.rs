@@ -1,0 +1,83 @@
+//! Quickstart: the library's public API in five minutes.
+//!
+//! 1. Pairwise lattice quantization (Theorem 1's encode/decode contract).
+//! 2. MeanEstimation over a simulated 8-machine cluster, star and tree.
+//! 3. Robust (error-detecting) VarianceReduction.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dme::coordinator::{
+    mean_estimation_star, mean_estimation_tree, robust_variance_reduction, CodecSpec,
+};
+use dme::linalg::{dist2, dist_inf, mean_vecs};
+use dme::quant::{LatticeQuantizer, VectorCodec};
+use dme::rng::Rng;
+use dme::sim::summarize;
+
+fn main() {
+    // ---------------------------------------------------------------
+    // 1. Pairwise quantization: u sends a 64-dim vector to v using
+    //    d·log2(q) = 64·4 = 256 bits; v decodes with its own vector.
+    // ---------------------------------------------------------------
+    let d = 64;
+    let q = 16;
+    let y = 1.0; // known bound on ‖x_u − x_v‖∞
+    let mut shared = Rng::new(42); // shared randomness (both parties)
+    let mut rng = Rng::new(7);
+
+    let x_u: Vec<f64> = (0..d).map(|_| 1000.0 + rng.uniform(-0.4, 0.4)).collect();
+    let x_v: Vec<f64> = x_u.iter().map(|v| v + rng.uniform(-0.5, 0.5)).collect();
+
+    let mut codec = LatticeQuantizer::from_y(d, q, y, &mut shared);
+    let msg = codec.encode(&x_u, &mut rng);
+    let decoded = codec.decode(&msg, &x_v);
+    println!("== pairwise quantization ==");
+    println!("bits sent        : {} ({} per coordinate)", msg.bits, msg.bits / d as u64);
+    println!("‖decoded − x_u‖∞ : {:.4} (≤ s/2 = {:.4})", dist_inf(&decoded, &x_u), codec.lattice.s / 2.0);
+    println!("note: inputs live near 1000 — error depends only on their distance.\n");
+
+    // ---------------------------------------------------------------
+    // 2. MeanEstimation across 8 machines (inputs within y of each other).
+    // ---------------------------------------------------------------
+    let n = 8;
+    let inputs: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..d).map(|_| 1000.0 + rng.uniform(-0.5, 0.5)).collect())
+        .collect();
+    let mu = mean_vecs(&inputs);
+
+    let star = mean_estimation_star(&inputs, &CodecSpec::Lq { q }, y, 1, 0);
+    let t = summarize(&star.traffic);
+    println!("== mean estimation, star topology (Algorithm 3) ==");
+    println!("‖EST − μ‖²  : {:.3e}", dist2(star.estimate(), &mu).powi(2));
+    println!("max bits/machine (sent): {} — leader pays O(nd log q), workers O(d log q)", t.max_sent);
+
+    let tree = mean_estimation_tree(&inputs, n, y, 1, 0);
+    let t = summarize(&tree.traffic);
+    println!("== mean estimation, tree topology (Algorithm 4) ==");
+    println!("‖EST − μ‖²  : {:.3e}", dist2(tree.estimate(), &mu).powi(2));
+    println!("max bits/machine (sent): {} — worst-case O(d log q) for everyone\n", t.max_sent);
+
+    // ---------------------------------------------------------------
+    // 3. Robust VarianceReduction: one machine's input is wild; error
+    //    detection escalates its exchange instead of corrupting the mean.
+    // ---------------------------------------------------------------
+    let sigma = 0.5;
+    let nabla: Vec<f64> = (0..d).map(|_| 1000.0 + rng.next_gaussian()).collect();
+    let mut vr_inputs: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            nabla
+                .iter()
+                .map(|v| v + sigma / (d as f64).sqrt() * rng.next_gaussian())
+                .collect()
+        })
+        .collect();
+    for v in vr_inputs[5].iter_mut() {
+        *v += 40.0; // a heavy-tailed outlier
+    }
+    let out = robust_variance_reduction(&vr_inputs, sigma, 16, 2, 0);
+    println!("== robust variance reduction (Algorithm 6) ==");
+    println!("input  ‖x₀ − ∇‖² : {:.3e}", dist2(&vr_inputs[0], &nabla).powi(2));
+    println!("output ‖EST − ∇‖²: {:.3e}", dist2(&out.estimate, &nabla).powi(2));
+    println!("escalation rounds per worker (stage 1): {:?}", out.rounds_stage1);
+    println!("(the outlier machine used extra rounds; everyone else paid the base cost)");
+}

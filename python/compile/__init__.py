@@ -1,0 +1,5 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX graphs + AOT lowering.
+
+Never imported at runtime — ``make artifacts`` runs ``compile.aot`` once
+and the Rust binary consumes only ``artifacts/*.hlo.txt``.
+"""

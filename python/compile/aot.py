@@ -1,0 +1,146 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) graphs -> HLO text artifacts.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path. Each graph in ``GRAPHS`` is jitted, lowered to stablehlo,
+converted to an XlaComputation and dumped as **HLO text** plus a
+``manifest.json`` entry describing its shapes and static parameters.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which xla_extension
+0.5.1 (the version the Rust ``xla`` crate binds) rejects. The text parser
+reassigns ids and round-trips cleanly.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def graph_catalog():
+    """The full artifact set, keyed by name.
+
+    Returns {name: (fn, input_specs, params)}. Shapes are the ones used by
+    the experiment drivers and examples (see DESIGN.md experiment index).
+    """
+    g = {}
+
+    # LQSGD encode/decode, specialized per (d, q) used by the experiments.
+    for d, q in [(128, 8), (128, 16), (128, 64), (256, 8), (1024, 16)]:
+        g[f"lattice_encode_d{d}_q{q}"] = (
+            model.encode_graph(q),
+            [f32(d), f32(d), f32(1)],
+            {"d": d, "q": q},
+        )
+        g[f"lattice_decode_d{d}_q{q}"] = (
+            model.decode_graph(q),
+            [f32(d), f32(d), f32(d), f32(1)],
+            {"d": d, "q": q},
+        )
+
+    # RLQSGD rotation (standalone and fused pipelines).
+    for d in [128, 256, 1024]:
+        g[f"rotate_d{d}"] = (model.rotate_graph(), [f32(d), f32(d)], {"d": d})
+        g[f"unrotate_d{d}"] = (model.unrotate_graph(), [f32(d), f32(d)], {"d": d})
+    g["rotate_encode_d128_q8"] = (
+        model.rotate_encode_graph(8),
+        [f32(128), f32(128), f32(128), f32(1)],
+        {"d": 128, "q": 8},
+    )
+    g["decode_unrotate_d128_q8"] = (
+        model.decode_unrotate_graph(8),
+        [f32(128), f32(128), f32(128), f32(128), f32(1)],
+        {"d": 128, "q": 8},
+    )
+
+    # Least-squares batch gradients (Experiments 1-5).
+    for s, d in [(4096, 100), (1024, 12), (512, 100)]:
+        g[f"lsq_grad_s{s}_d{d}"] = (
+            model.lsq_grad_graph(),
+            [f32(s, d), f32(d), f32(s)],
+            {"s": s, "d": d},
+        )
+
+    # Power iteration partial updates (Experiment 8).
+    for s, d in [(4096, 128), (1024, 128)]:
+        g[f"power_update_s{s}_d{d}"] = (
+            model.power_update_graph(),
+            [f32(s, d), f32(d)],
+            {"s": s, "d": d},
+        )
+
+    # MLP training-step gradients (Experiment 7 analogue).
+    b, f, h, c = 128, 32, 64, 10
+    g["mlp_grad_b128_f32_h64_c10"] = (
+        model.mlp_grad_graph(h, c),
+        [f32(b, f), f32(b, c), f32(f, h), f32(h), f32(h, c), f32(c)],
+        {"batch": b, "features": f, "hidden": h, "classes": c},
+    )
+
+    # Fused leader round for the star topology (Algorithm 3).
+    g["me_round_n7_d128_q16"] = (
+        model.mean_estimate_round_graph(16, 7),
+        [f32(7, 128), f32(128), f32(128), f32(1)],
+        {"n": 7, "d": 128, "q": 16},
+    )
+
+    return g
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated graph names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    catalog = graph_catalog()
+    names = args.only.split(",") if args.only else sorted(catalog)
+
+    manifest = {"format": "hlo-text", "graphs": []}
+    for name in names:
+        fn, specs, params = catalog[name]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as fh:
+            fh.write(text)
+
+        # Output shapes from an abstract evaluation.
+        outs = jax.eval_shape(fn, *specs)
+        out_shapes = [list(o.shape) for o in outs]
+        manifest["graphs"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [list(s.shape) for s in specs],
+                "outputs": out_shapes,
+                "params": params,
+            }
+        )
+        print(f"  lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"wrote {len(manifest['graphs'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

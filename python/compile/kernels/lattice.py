@@ -1,0 +1,194 @@
+"""Layer-1 Pallas kernels: the quantization hot-spot.
+
+The paper's practical algorithm (Section 9.1) quantizes a d-dimensional
+vector onto a randomly offset cubic lattice and transmits only the
+coordinate-wise lattice index mod q. Encode, decode, and the RLQSGD
+Walsh-Hadamard rotation are implemented here as Pallas kernels so that the
+Layer-2 JAX graphs lower them into the same HLO module that the Rust
+runtime executes.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper
+evaluates on CPU/GPU clusters where quantization is bandwidth-bound. On
+TPU the same structure applies — these kernels are elementwise/VPU work
+tiled into VMEM blocks (``BLOCK`` lanes per grid step), with the FWHT
+expressed as log2(d) in-VMEM butterfly stages instead of the
+shared-memory butterflies a CUDA port would use. ``interpret=True``
+everywhere: the CPU PJRT plugin cannot run Mosaic custom-calls, so the
+kernels are lowered through the interpreter for correctness, and TPU
+performance is estimated analytically from the BlockSpec (DESIGN.md
+§Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM-friendly lane tile. 128 matches the TPU lane width; for the small
+# experiment dimensions a single block is used (grid collapses to 1).
+BLOCK = 128
+
+
+def _num_blocks(d):
+    return max(1, (d + BLOCK - 1) // BLOCK)
+
+
+def _block_len(d):
+    return min(d, BLOCK) if d % BLOCK == 0 or d < BLOCK else BLOCK
+
+
+# ---------------------------------------------------------------------------
+# Encode: color = round((x - offset)/s) mod q  (+ raw index k)
+# ---------------------------------------------------------------------------
+
+
+def _encode_kernel(x_ref, off_ref, s_ref, color_ref, k_ref, *, q):
+    s = s_ref[0]
+    t = (x_ref[...] - off_ref[...]) / s
+    k = jnp.round(t)
+    color_ref[...] = jnp.mod(k, jnp.float32(q)).astype(jnp.float32)
+    k_ref[...] = k.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("q",))
+def lattice_encode(x, offset, s, *, q):
+    """Pallas cubic-lattice encode. x, offset: f32[d]; s: f32[1].
+
+    Returns (color f32[d], k f32[d]). The color is the transmitted message
+    (d * log2(q) bits); k is kept for diagnostics / variance accounting.
+    """
+    d = x.shape[0]
+    if d % BLOCK == 0 and d > BLOCK:
+        grid = (d // BLOCK,)
+        spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    else:
+        grid = (1,)
+        spec = pl.BlockSpec((d,), lambda i: (0,))
+    sspec = pl.BlockSpec((1,), lambda i: (0,))
+    out_shape = [
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+    ]
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, q=q),
+        grid=grid,
+        in_specs=[spec, spec, sspec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=True,
+    )(x, offset, s)
+
+
+# ---------------------------------------------------------------------------
+# Decode: nearest lattice point to xv whose index ≡ color (mod q)
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(color_ref, xv_ref, off_ref, s_ref, z_ref, *, q):
+    s = s_ref[0]
+    t = (xv_ref[...] - off_ref[...]) / s
+    c = color_ref[...]
+    m = jnp.round((t - c) / jnp.float32(q))
+    k = c + jnp.float32(q) * m
+    z_ref[...] = (off_ref[...] + k * s).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("q",))
+def lattice_decode(color, xv, offset, s, *, q):
+    """Pallas cubic-lattice decode. Returns f32[d] decoded vector."""
+    d = xv.shape[0]
+    if d % BLOCK == 0 and d > BLOCK:
+        grid = (d // BLOCK,)
+        spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    else:
+        grid = (1,)
+        spec = pl.BlockSpec((d,), lambda i: (0,))
+    sspec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, q=q),
+        grid=grid,
+        in_specs=[spec, spec, spec, sspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(color, xv, offset, s)
+
+
+# ---------------------------------------------------------------------------
+# FWHT rotation (RLQSGD): one whole-vector block, log2(d) butterfly stages
+# ---------------------------------------------------------------------------
+
+
+def _fwht_kernel(x_ref, o_ref, *, d):
+    y = x_ref[...]
+    h = 1
+    while h < d:
+        y = y.reshape(d // (2 * h), 2, h)
+        a = y[:, 0, :]
+        b = y[:, 1, :]
+        y = jnp.stack([a + b, a - b], axis=1)
+        h *= 2
+    o_ref[...] = (y.reshape(d) / jnp.sqrt(jnp.float32(d))).astype(jnp.float32)
+
+
+def _rotate_fwd_kernel(x_ref, sign_ref, o_ref, *, d):
+    tmp = x_ref[...] * sign_ref[...]
+    y = tmp
+    h = 1
+    while h < d:
+        y = y.reshape(d // (2 * h), 2, h)
+        a = y[:, 0, :]
+        b = y[:, 1, :]
+        y = jnp.stack([a + b, a - b], axis=1)
+        h *= 2
+    o_ref[...] = (y.reshape(d) / jnp.sqrt(jnp.float32(d))).astype(jnp.float32)
+
+
+def _rotate_inv_kernel(y_ref, sign_ref, o_ref, *, d):
+    y = y_ref[...]
+    h = 1
+    while h < d:
+        y = y.reshape(d // (2 * h), 2, h)
+        a = y[:, 0, :]
+        b = y[:, 1, :]
+        y = jnp.stack([a + b, a - b], axis=1)
+        h *= 2
+    o_ref[...] = (y.reshape(d) / jnp.sqrt(jnp.float32(d)) * sign_ref[...]).astype(
+        jnp.float32
+    )
+
+
+def _whole_vec_call(kernel, d, n_in):
+    spec = pl.BlockSpec((d,), lambda: (0,))
+    return pl.pallas_call(
+        functools.partial(kernel, d=d),
+        in_specs=[spec] * n_in,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )
+
+
+@jax.jit
+def fwht(x):
+    """Normalized Walsh-Hadamard transform (Pallas). d must be a power of 2."""
+    d = x.shape[0]
+    assert d & (d - 1) == 0, "FWHT requires power-of-two dimension"
+    return _whole_vec_call(_fwht_kernel, d, 1)(x)
+
+
+@jax.jit
+def rotate_fwd(x, sign):
+    """RLQSGD rotation H @ (sign * x) as a single fused Pallas kernel."""
+    d = x.shape[0]
+    assert d & (d - 1) == 0
+    return _whole_vec_call(_rotate_fwd_kernel, d, 2)(x, sign)
+
+
+@jax.jit
+def rotate_inv(y, sign):
+    """Inverse rotation sign * (H @ y) as a single fused Pallas kernel."""
+    d = y.shape[0]
+    assert d & (d - 1) == 0
+    return _whole_vec_call(_rotate_inv_kernel, d, 2)(y, sign)

@@ -1,0 +1,94 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground-truth implementations of the paper's cubic-lattice
+quantization primitives (Davies et al., ICLR 2021, Section 9.1) and the
+structured random rotation (Section 6). The Pallas kernels in
+``lattice.py`` must match these bit-for-bit under ``interpret=True``;
+``python/tests`` enforces that with hypothesis sweeps.
+
+Conventions shared with the Rust layer (``rust/src/quant``):
+
+* The cubic lattice has side length ``s`` and a shared-randomness offset
+  ``offset`` (one uniform draw per coordinate in ``[-s/2, s/2)``).
+* ``encode`` rounds to the nearest lattice point with round-half-to-even
+  (matching ``jnp.round`` and Rust's ``round_ties_even``), then sends the
+  coordinate-wise lattice index mod ``q`` — the *color*.
+* ``decode`` recovers, among lattice points of that color, the one closest
+  to the decoder's own vector.
+"""
+
+import jax.numpy as jnp
+
+
+def lattice_encode_ref(x, offset, s, q):
+    """Cubic-lattice encode: returns (color, k) as float32.
+
+    ``k``     — per-coordinate lattice index, k = round((x - offset)/s)
+    ``color`` — k mod q, the d*log2(q)-bit message actually transmitted.
+    """
+    t = (x - offset) / s
+    k = jnp.round(t)
+    color = jnp.mod(k, q)
+    return color.astype(jnp.float32), k.astype(jnp.float32)
+
+
+def lattice_decode_ref(color, xv, offset, s, q):
+    """Cubic-lattice decode: nearest lattice point to ``xv`` with ``color``.
+
+    Among k ≡ color (mod q), the closest to t = (xv-offset)/s is
+    k = color + q * round((t - color)/q).
+    """
+    t = (xv - offset) / s
+    m = jnp.round((t - color) / q)
+    k = color + q * m
+    return (offset + k * s).astype(jnp.float32)
+
+
+def fwht_ref(x):
+    """Normalized fast Walsh-Hadamard transform (d must be a power of two)."""
+    d = x.shape[-1]
+    h = 1
+    y = x.astype(jnp.float32).reshape(1, d)
+    while h < d:
+        y = y.reshape(-1, d // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    y = y.reshape(x.shape)
+    return y / jnp.sqrt(jnp.float32(d))
+
+
+def rotate_fwd_ref(x, sign):
+    """RLQSGD forward rotation: H @ (sign * x)."""
+    return fwht_ref(x * sign)
+
+
+def rotate_inv_ref(y, sign):
+    """RLQSGD inverse rotation: sign * (H @ y) (H is an involution)."""
+    return sign * fwht_ref(y)
+
+
+def qsgd_encode_ref(x, norm, levels, u):
+    """QSGD stochastic quantization oracle (baseline, Alistarh et al. 2017).
+
+    Quantizes x/norm onto the grid {0, 1/levels, ..., 1} with stochastic
+    rounding driven by pre-drawn uniforms ``u``; returns the reconstructed
+    vector (sign * norm * level / levels).
+    """
+    scaled = jnp.abs(x) / norm * levels
+    low = jnp.floor(scaled)
+    prob = scaled - low
+    level = low + (u < prob).astype(jnp.float32)
+    return jnp.sign(x) * norm * level / levels
+
+
+def lsq_grad_ref(a, w, b):
+    """Least-squares batch gradient: (2/S) A^T (A w - b)."""
+    r = a @ w - b
+    return (2.0 / a.shape[0]) * (a.T @ r)
+
+
+def power_update_ref(x_rows, v):
+    """Distributed power-iteration partial update: u_i = X_i^T (X_i v)."""
+    return x_rows.T @ (x_rows @ v)

@@ -1,0 +1,163 @@
+"""Layer-2 JAX compute graphs, calling the Layer-1 Pallas kernels.
+
+Each function here is a complete graph that ``aot.py`` lowers to HLO text
+for the Rust coordinator. Graphs are shape-specialized (PJRT AOT requires
+static shapes); the specializations used by the experiments are listed in
+``aot.py::GRAPHS`` and recorded in ``artifacts/manifest.json``.
+
+Every graph takes and returns float32 arrays only (colors are small
+integers carried as f32) so the Rust side needs a single literal type.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lattice
+
+
+def encode_graph(q):
+    """(x[d], offset[d], s[1]) -> (color[d], k[d]) — LQSGD encode."""
+
+    def f(x, offset, s):
+        color, k = lattice.lattice_encode(x, offset, s, q=q)
+        return (color, k)
+
+    return f
+
+
+def decode_graph(q):
+    """(color[d], xv[d], offset[d], s[1]) -> (z[d]) — LQSGD decode."""
+
+    def f(color, xv, offset, s):
+        return (lattice.lattice_decode(color, xv, offset, s, q=q),)
+
+    return f
+
+
+def rotate_encode_graph(q):
+    """RLQSGD fused pipeline: rotate by HD, then lattice-encode.
+
+    (x[d], sign[d], offset[d], s[1]) -> (color[d], rx[d])
+    ``rx`` (the rotated input) is returned so the caller can maintain its
+    y_R estimate exactly as in Section 9.1.
+    """
+
+    def f(x, sign, offset, s):
+        rx = lattice.rotate_fwd(x, sign)
+        color, _k = lattice.lattice_encode(rx, offset, s, q=q)
+        return (color, rx)
+
+    return f
+
+
+def decode_unrotate_graph(q):
+    """RLQSGD fused decode: lattice-decode in rotated space, rotate back.
+
+    (color[d], rxv[d], sign[d], offset[d], s[1]) -> (z[d], rz[d])
+    ``rxv`` is the decoder's own vector already in rotated space.
+    """
+
+    def f(color, rxv, sign, offset, s):
+        rz = lattice.lattice_decode(color, rxv, offset, s, q=q)
+        z = lattice.rotate_inv(rz, sign)
+        return (z, rz)
+
+    return f
+
+
+def rotate_graph():
+    """(x[d], sign[d]) -> (H D x,) — standalone rotation."""
+
+    def f(x, sign):
+        return (lattice.rotate_fwd(x, sign),)
+
+    return f
+
+
+def unrotate_graph():
+    """(y[d], sign[d]) -> (D^-1 H y,) — standalone inverse rotation."""
+
+    def f(y, sign):
+        return (lattice.rotate_inv(y, sign),)
+
+    return f
+
+
+def lsq_grad_graph():
+    """(A[S,d], w[d], b[S]) -> (grad[d],) — least-squares batch gradient.
+
+    The workhorse of experiments 1-5 (Section 9.2)."""
+
+    def f(a, w, b):
+        r = a @ w - b
+        return ((2.0 / a.shape[0]) * (a.T @ r),)
+
+    return f
+
+
+def power_update_graph():
+    """(X[S,d], v[d]) -> (u[d],) — power-iteration partial update (Exp 8)."""
+
+    def f(x, v):
+        return (x.T @ (x @ v),)
+
+    return f
+
+
+def mlp_grad_graph(hidden, classes):
+    """Two-layer MLP grads for the NN-training experiment (Exp 7 analogue).
+
+    (X[B,f], Y[B] one-hot as f32[B,C], W1[f,h], b1[h], W2[h,C], b2[C])
+    -> (loss[1], gW1, gb1, gW2, gb2)   (softmax cross-entropy)
+    """
+
+    def loss_fn(params, xb, yb):
+        w1, b1, w2, b2 = params
+        z1 = jnp.tanh(xb @ w1 + b1)
+        logits = z1 @ w2 + b2
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.sum(yb * logp, axis=1))
+
+    def f(xb, yb, w1, b1, w2, b2):
+        params = (w1, b1, w2, b2)
+        loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb)
+        gw1, gb1, gw2, gb2 = grads
+        return (loss.reshape(1), gw1, gb1, gw2, gb2)
+
+    return f
+
+
+def mean_estimate_round_graph(q, n):
+    """Fused star-topology round at the leader (Algorithm 3, inner step).
+
+    Decodes n worker colors against the leader's vector, averages with the
+    leader's own input, and re-encodes the average for broadcast.
+
+    (colors[n,d], x_leader[d], offset[d], s[1])
+      -> (mu_color[d], mu_hat[d])
+    """
+
+    def f(colors, x_leader, offset, s):
+        def dec(c):
+            return lattice.lattice_decode(c, x_leader, offset, s, q=q)
+
+        decoded = jax.vmap(dec)(colors)  # [n, d]
+        mu_hat = (jnp.sum(decoded, axis=0) + x_leader) / jnp.float32(n + 1)
+        mu_color, _ = lattice.lattice_encode(mu_hat, offset, s, q=q)
+        return (mu_color, mu_hat)
+
+    return f
+
+
+# Convenience: jitted versions for the python test-suite.
+lsq_grad = jax.jit(lsq_grad_graph())
+power_update = jax.jit(power_update_graph())
+
+
+@functools.partial(jax.jit, static_argnames=("q",))
+def encode_decode_roundtrip(x, xv, offset, s, *, q):
+    """encode at u, decode at v — used by tests for the Theorem-1 guarantee."""
+    color, _ = lattice.lattice_encode(x, offset, s, q=q)
+    return lattice.lattice_decode(color, xv, offset, s, q=q)

@@ -1,0 +1,85 @@
+"""AOT pipeline: lowering to HLO text and manifest integrity."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+
+from compile import aot
+
+
+def test_to_hlo_text_produces_parseable_module():
+    cat = aot.graph_catalog()
+    fn, specs, _ = cat["lattice_encode_d128_q8"]
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # return_tuple=True ⇒ tuple-typed root
+    assert "(f32[128]" in text.replace(" ", "")[:20000] or "tuple" in text
+
+
+def test_catalog_covers_experiment_shapes():
+    cat = aot.graph_catalog()
+    required = [
+        "lattice_encode_d128_q16",
+        "lattice_decode_d128_q16",
+        "rotate_d128",
+        "unrotate_d128",
+        "lsq_grad_s4096_d100",
+        "power_update_s4096_d128",
+        "mlp_grad_b128_f32_h64_c10",
+        "me_round_n7_d128_q16",
+    ]
+    for name in required:
+        assert name in cat, f"missing artifact spec {name}"
+
+
+def test_existing_manifest_matches_catalog():
+    """If `make artifacts` has run, the manifest on disk must agree with
+    the current catalog (names, shapes)."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..")
+    path = os.path.join(root, "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        import pytest
+
+        pytest.skip("artifacts not built")
+    with open(path) as fh:
+        manifest = json.load(fh)
+    cat = aot.graph_catalog()
+    by_name = {g["name"]: g for g in manifest["graphs"]}
+    for name, (fn, specs, _params) in cat.items():
+        assert name in by_name, f"{name} missing from manifest (re-run make artifacts)"
+        g = by_name[name]
+        assert g["inputs"] == [list(s.shape) for s in specs], name
+        hlo = os.path.join(root, "artifacts", g["file"])
+        assert os.path.exists(hlo), hlo
+
+
+def test_aot_cli_subset(tmp_path):
+    """Run the aot module end to end for one graph into a temp dir."""
+    env = dict(os.environ)
+    cwd = os.path.join(os.path.dirname(__file__), "..")
+    out = tmp_path / "arts"
+    res = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--only",
+            "lattice_encode_d128_q8",
+        ],
+        cwd=cwd,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert res.returncode == 0, res.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["graphs"][0]["name"] == "lattice_encode_d128_q8"
+    assert (out / "lattice_encode_d128_q8.hlo.txt").exists()

@@ -1,0 +1,136 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps dimensions, quantization levels, scales and offsets;
+every property the Rust layer relies on is pinned here:
+
+* encode/decode match ``ref.py`` exactly (same rounding mode),
+* round-trip recovers the encoder's lattice point within the success
+  radius (Lemma 15 / §9.1),
+* FWHT is an orthonormal involution and matches the direct Hadamard
+  definition.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lattice, ref
+
+DIMS = st.sampled_from([4, 16, 60, 128, 256])
+POW2_DIMS = st.sampled_from([4, 16, 64, 128, 512])
+QS = st.sampled_from([2, 4, 8, 16, 64, 200])
+
+
+def vec(rng, d, scale=10.0, center=0.0):
+    return (center + scale * rng.standard_normal(d)).astype(np.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(d=DIMS, q=QS, seed=st.integers(0, 2**32 - 1))
+def test_encode_matches_ref(d, q, seed):
+    rng = np.random.default_rng(seed)
+    s = float(rng.uniform(0.05, 2.0))
+    x = vec(rng, d, center=float(rng.uniform(-100, 100)))
+    offset = (rng.uniform(-s / 2, s / 2, d)).astype(np.float32)
+    c, k = lattice.lattice_encode(x, offset, np.array([s], np.float32), q=q)
+    cr, kr = ref.lattice_encode_ref(x, offset, s, q)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(kr))
+    # colors in range
+    assert np.all(np.asarray(c) >= 0) and np.all(np.asarray(c) < q)
+
+
+@settings(max_examples=30, deadline=None)
+@given(d=DIMS, q=QS, seed=st.integers(0, 2**32 - 1))
+def test_decode_matches_ref(d, q, seed):
+    rng = np.random.default_rng(seed)
+    s = float(rng.uniform(0.05, 2.0))
+    x = vec(rng, d)
+    xv = (x + rng.uniform(-s, s, d)).astype(np.float32)
+    offset = (rng.uniform(-s / 2, s / 2, d)).astype(np.float32)
+    sarr = np.array([s], np.float32)
+    c, _ = lattice.lattice_encode(x, offset, sarr, q=q)
+    z = lattice.lattice_decode(c, xv, offset, sarr, q=q)
+    zr = ref.lattice_decode_ref(np.asarray(c), xv, offset, s, q)
+    # f32 op-ordering differences between the Pallas kernel and the ref
+    # (fma vs mul+add) leave ~1 ulp of noise; the decoded *lattice index*
+    # must still agree exactly.
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), rtol=1e-6, atol=1e-5)
+    k_kernel = np.round((np.asarray(z) - offset) / s)
+    k_ref = np.round((np.asarray(zr) - offset) / s)
+    np.testing.assert_array_equal(k_kernel, k_ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=DIMS, q=st.sampled_from([8, 16, 64]), seed=st.integers(0, 2**32 - 1))
+def test_roundtrip_within_success_radius(d, q, seed):
+    """Lemma 15 (practical form §9.1): if ‖x−xv‖∞ ≤ (q−1)s/2 the decoder
+    recovers exactly the encoder's lattice point."""
+    rng = np.random.default_rng(seed)
+    s = float(rng.uniform(0.1, 1.0))
+    radius = (q - 1) * s / 2.0
+    x = vec(rng, d, center=float(rng.uniform(-50, 50)))
+    xv = (x + rng.uniform(-radius, radius, d) * 0.999).astype(np.float32)
+    offset = (rng.uniform(-s / 2, s / 2, d)).astype(np.float32)
+    sarr = np.array([s], np.float32)
+    c, k = lattice.lattice_encode(x, offset, sarr, q=q)
+    z = lattice.lattice_decode(c, xv, offset, sarr, q=q)
+    expected = offset + np.asarray(k) * s
+    np.testing.assert_allclose(np.asarray(z), expected, atol=1e-5)
+    # quantization error bounded by s/2 (+ f32 slack)
+    assert np.max(np.abs(np.asarray(z) - x)) <= s / 2 + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=POW2_DIMS, seed=st.integers(0, 2**32 - 1))
+def test_fwht_involution_and_isometry(d, seed):
+    rng = np.random.default_rng(seed)
+    x = vec(rng, d)
+    y = np.asarray(lattice.fwht(x))
+    z = np.asarray(lattice.fwht(y))
+    np.testing.assert_allclose(z, x, atol=1e-3)
+    np.testing.assert_allclose(
+        np.linalg.norm(y), np.linalg.norm(x), rtol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=POW2_DIMS, seed=st.integers(0, 2**32 - 1))
+def test_rotate_fwd_inv_roundtrip(d, seed):
+    rng = np.random.default_rng(seed)
+    x = vec(rng, d, center=25.0)
+    sign = rng.choice([-1.0, 1.0], d).astype(np.float32)
+    y = lattice.rotate_fwd(x, sign)
+    z = np.asarray(lattice.rotate_inv(y, sign))
+    np.testing.assert_allclose(z, x, atol=1e-3)
+    yr = np.asarray(ref.rotate_fwd_ref(x, sign))
+    np.testing.assert_allclose(np.asarray(y), yr, atol=1e-4)
+
+
+def test_fwht_matches_direct_hadamard():
+    d = 8
+    x = np.arange(d, dtype=np.float32)
+    y = np.asarray(lattice.fwht(x))
+    H = np.array(
+        [[(-1) ** bin(i & j).count("1") for j in range(d)] for i in range(d)],
+        np.float32,
+    ) / np.sqrt(d)
+    np.testing.assert_allclose(y, H @ x, atol=1e-5)
+
+
+def test_fwht_rejects_non_power_of_two():
+    with pytest.raises(AssertionError):
+        lattice.fwht(np.zeros(12, np.float32))
+
+
+def test_blocked_grid_path_matches_single_block():
+    """d = 256 exercises the multi-block BlockSpec path of the encode
+    kernel; it must agree with the oracle exactly."""
+    rng = np.random.default_rng(0)
+    d, q, s = 256, 16, 0.25
+    x = vec(rng, d)
+    offset = rng.uniform(-s / 2, s / 2, d).astype(np.float32)
+    c, k = lattice.lattice_encode(x, offset, np.array([s], np.float32), q=q)
+    cr, kr = ref.lattice_encode_ref(x, offset, s, q)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(kr))

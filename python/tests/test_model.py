@@ -1,0 +1,135 @@
+"""Layer-2 correctness: the JAX graphs that get AOT-lowered.
+
+Checks the numerical semantics of each graph against numpy references
+and the shape contract recorded in the manifest (``aot.graph_catalog``).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_catalog_shapes_consistent():
+    """Every graph in the catalog must abstract-eval to the declared
+    output shapes (this is what the Rust manifest consumer relies on)."""
+    cat = aot.graph_catalog()
+    assert len(cat) >= 20
+    for name, (fn, specs, _params) in cat.items():
+        outs = jax.eval_shape(fn, *specs)
+        assert len(outs) >= 1, name
+        for o in outs:
+            assert o.dtype == jnp.float32, f"{name}: non-f32 output"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lsq_grad_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    s, d = 64, 10
+    a = rng.standard_normal((s, d)).astype(np.float32)
+    w = rng.standard_normal(d).astype(np.float32)
+    b = rng.standard_normal(s).astype(np.float32)
+    (g,) = model.lsq_grad(a, w, b)
+    expect = 2.0 / s * a.T @ (a @ w - b)
+    np.testing.assert_allclose(np.asarray(g), expect, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_power_update_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    s, d = 48, 12
+    x = rng.standard_normal((s, d)).astype(np.float32)
+    v = rng.standard_normal(d).astype(np.float32)
+    (u,) = model.power_update(x, v)
+    np.testing.assert_allclose(
+        np.asarray(u), x.T @ (x @ v), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_mlp_grad_matches_finite_differences():
+    rng = np.random.default_rng(3)
+    b_, f, h, c = 8, 5, 6, 3
+    fn = jax.jit(model.mlp_grad_graph(h, c))
+    xb = rng.standard_normal((b_, f)).astype(np.float32)
+    labels = rng.integers(0, c, b_)
+    yb = np.eye(c, dtype=np.float32)[labels]
+    w1 = (rng.standard_normal((f, h)) * 0.3).astype(np.float32)
+    b1 = np.zeros(h, np.float32)
+    w2 = (rng.standard_normal((h, c)) * 0.3).astype(np.float32)
+    b2 = np.zeros(c, np.float32)
+    loss, gw1, _gb1, gw2, _gb2 = fn(xb, yb, w1, b1, w2, b2)
+    eps = 1e-3
+    for (param, grad, idx) in [(w1, gw1, (2, 3)), (w2, gw2, (4, 1))]:
+        p_plus = param.copy()
+        p_plus[idx] += eps
+        p_minus = param.copy()
+        p_minus[idx] -= eps
+        if param is w1:
+            lp = fn(xb, yb, p_plus, b1, w2, b2)[0]
+            lm = fn(xb, yb, p_minus, b1, w2, b2)[0]
+        else:
+            lp = fn(xb, yb, w1, b1, p_plus, b2)[0]
+            lm = fn(xb, yb, w1, b1, p_minus, b2)[0]
+        fd = (float(lp[0]) - float(lm[0])) / (2 * eps)
+        assert abs(fd - float(np.asarray(grad)[idx])) < 5e-3
+    assert float(loss[0]) > 0
+
+
+def test_me_round_graph_semantics():
+    """The fused leader round must equal: decode each color against the
+    leader's vector, average with the leader input, re-encode."""
+    rng = np.random.default_rng(5)
+    n, d, q, s = 3, 16, 16, 0.5
+    fn = jax.jit(model.mean_estimate_round_graph(q, n))
+    offset = rng.uniform(-s / 2, s / 2, d).astype(np.float32)
+    x_leader = rng.standard_normal(d).astype(np.float32) * 0.2 + 7.0
+    workers = [
+        (x_leader + rng.uniform(-1, 1, d) * 0.4).astype(np.float32)
+        for _ in range(n)
+    ]
+    colors = np.stack(
+        [
+            np.asarray(ref.lattice_encode_ref(wv, offset, s, q)[0])
+            for wv in workers
+        ]
+    ).astype(np.float32)
+    mu_color, mu_hat = fn(colors, x_leader, offset, np.array([s], np.float32))
+    decoded = [
+        np.asarray(ref.lattice_decode_ref(c, x_leader, offset, s, q))
+        for c in colors
+    ]
+    expect_mu = (np.sum(decoded, axis=0) + x_leader) / (n + 1)
+    np.testing.assert_allclose(np.asarray(mu_hat), expect_mu, atol=1e-5)
+    expect_color = np.asarray(ref.lattice_encode_ref(expect_mu, offset, s, q)[0])
+    np.testing.assert_array_equal(np.asarray(mu_color), expect_color)
+
+
+def test_rotate_encode_pipeline_consistent():
+    rng = np.random.default_rng(6)
+    d, q, s = 128, 8, 0.3
+    fn = jax.jit(model.rotate_encode_graph(q))
+    x = rng.standard_normal(d).astype(np.float32) + 40.0
+    sign = rng.choice([-1.0, 1.0], d).astype(np.float32)
+    offset = rng.uniform(-s / 2, s / 2, d).astype(np.float32)
+    color, rx = fn(x, sign, offset, np.array([s], np.float32))
+    rx_ref = np.asarray(ref.rotate_fwd_ref(x, sign))
+    np.testing.assert_allclose(np.asarray(rx), rx_ref, atol=1e-4)
+    c_ref = np.asarray(ref.lattice_encode_ref(np.asarray(rx), offset, s, q)[0])
+    np.testing.assert_array_equal(np.asarray(color), c_ref)
+
+
+def test_encode_decode_roundtrip_helper():
+    rng = np.random.default_rng(7)
+    d, q, s = 64, 16, 0.4
+    x = rng.standard_normal(d).astype(np.float32) * 3
+    xv = (x + rng.uniform(-1, 1, d).astype(np.float32)).astype(np.float32)
+    offset = rng.uniform(-s / 2, s / 2, d).astype(np.float32)
+    z = model.encode_decode_roundtrip(
+        x, xv, offset, np.array([s], np.float32), q=q
+    )
+    assert np.max(np.abs(np.asarray(z) - x)) <= s / 2 + 1e-5

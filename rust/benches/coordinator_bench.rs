@@ -1,0 +1,61 @@
+//! End-to-end coordinator benchmarks: full MeanEstimation rounds over the
+//! simulated cluster (threads + channels + bit metering included), plus
+//! the robust VR protocol — the paper's Theorem 2/3/4 operations as
+//! deployed. One row per (topology, n, d).
+
+use dme::bench::Bencher;
+use dme::coordinator::{
+    mean_estimation_star, mean_estimation_tree, robust_variance_reduction, CodecSpec,
+};
+use dme::rng::Rng;
+
+fn inputs(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| 50.0 + rng.uniform(-0.5, 0.5)).collect())
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    println!("# coordinator_bench — full protocol rounds\n");
+
+    for (n, d) in [(4usize, 128usize), (8, 128), (8, 1024), (16, 1024)] {
+        let xs = inputs(n, d, 7);
+        let mut round = 0u64;
+        b.bench(
+            &format!("star  n={n} d={d} q=16 (threads)"),
+            Some((n * d) as u64),
+            || {
+                round += 1;
+                mean_estimation_star(&xs, &CodecSpec::Lq { q: 16 }, 1.0, 3, round)
+            },
+        );
+        // §Perf: same protocol on a persistent session (spawn amortized).
+        let mut sess = dme::coordinator::StarSession::new(n, d, CodecSpec::Lq { q: 16 }, 3);
+        b.bench(
+            &format!("star  n={n} d={d} q=16 (session)"),
+            Some((n * d) as u64),
+            || sess.round(&xs, 1.0),
+        );
+        let mut round = 0u64;
+        b.bench(
+            &format!("tree  n={n} d={d} (m=n)"),
+            Some((n * d) as u64),
+            || {
+                round += 1;
+                mean_estimation_tree(&xs, n, 1.0, 3, round)
+            },
+        );
+        let mut round = 0u64;
+        b.bench(
+            &format!("robust-vr n={n} d={d} q0=16"),
+            Some((n * d) as u64),
+            || {
+                round += 1;
+                robust_variance_reduction(&xs, 0.5, 16, 3, round)
+            },
+        );
+        println!();
+    }
+}

@@ -1,0 +1,31 @@
+//! Experiment-harness benchmark: times a reduced-scale regeneration of
+//! every paper figure/table (E1–E8 + tradeoff) to prove the full harness
+//! runs end to end under `cargo bench` and to track its cost.
+//!
+//! For the full-scale reports use `dme exp all` (see EXPERIMENTS.md).
+
+use dme::bench::Bencher;
+use dme::exp::{self, ExpOpts};
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    // Figure regeneration is seconds-scale: one timed sample is enough.
+    b.warmup = Duration::from_millis(0);
+    b.measure = Duration::from_millis(1);
+    b.min_samples = 1;
+    println!("# experiments_bench — reduced-scale figure regeneration\n");
+
+    let opts = ExpOpts {
+        scale: 0.08,
+        seeds: 1,
+        out_dir: None,
+    };
+    for id in exp::ALL_IDS {
+        b.bench(&format!("exp {id} (scale=0.08)"), None, || {
+            let r = exp::run(id, &opts).expect("known id");
+            assert!(!r.is_empty());
+            r.len()
+        });
+    }
+}

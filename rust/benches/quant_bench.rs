@@ -1,0 +1,62 @@
+//! Micro-benchmarks for the quantization hot path (criterion-lite).
+//!
+//! These are the §Perf L3 numbers recorded in EXPERIMENTS.md: encode /
+//! decode / FWHT throughput per codec at the experiment dimensions.
+//! Quantization is memory-bound (see DESIGN.md §4), so the target is
+//! element throughput, not flops.
+
+use dme::bench::Bencher;
+use dme::coordinator::CodecSpec;
+use dme::quant::{LatticeQuantizer, VectorCodec};
+use dme::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    println!("# quant_bench — codec encode/decode throughput\n");
+
+    for d in [128usize, 1024, 16384] {
+        let mut rng = Rng::new(1);
+        let x: Vec<f64> = (0..d).map(|_| 100.0 + rng.uniform(-0.5, 0.5)).collect();
+        let xv: Vec<f64> = x.iter().map(|v| v + rng.uniform(-0.2, 0.2)).collect();
+
+        // LQSGD
+        let mut shared = Rng::new(2);
+        let mut lq = LatticeQuantizer::from_y(d, 16, 1.0, &mut shared);
+        let msg = lq.encode(&x, &mut rng);
+        b.bench(&format!("lq_encode d={d} q=16"), Some(d as u64), || {
+            lq.encode(&x, &mut rng)
+        });
+        b.bench(&format!("lq_decode d={d} q=16"), Some(d as u64), || {
+            lq.decode(&msg, &xv)
+        });
+
+        // FWHT
+        let mut buf = x.clone();
+        b.bench(&format!("fwht d={d}"), Some(d as u64), || {
+            dme::quant::hadamard::fwht(&mut buf);
+            buf[0]
+        });
+
+        // Baselines at the same dimension.
+        for spec in [
+            CodecSpec::Rlq { q: 16 },
+            CodecSpec::QsgdL2 { q: 16 },
+            CodecSpec::Hadamard { q: 16 },
+            CodecSpec::EfSign,
+        ] {
+            let mut c = spec.build(d, 1.0, 3, 0);
+            let m = c.encode(&x, &mut rng);
+            b.bench(
+                &format!("{} encode d={d}", spec.label()),
+                Some(d as u64),
+                || c.encode(&x, &mut rng),
+            );
+            b.bench(
+                &format!("{} decode d={d}", spec.label()),
+                Some(d as u64),
+                || c.decode(&m, &xv),
+            );
+        }
+        println!();
+    }
+}

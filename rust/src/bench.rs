@@ -1,0 +1,168 @@
+//! criterion-lite: a minimal micro-benchmark harness (the offline build
+//! has no criterion crate — see DESIGN.md §6).
+//!
+//! Provides warmup, adaptive iteration count targeting a fixed measuring
+//! window, and median / p10 / p99 statistics. Used by the `benches/`
+//! targets (`cargo bench`, `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's results.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p99: Duration,
+    pub mean: Duration,
+    /// Optional throughput denominator (bytes or elements per iteration).
+    pub elems_per_iter: Option<u64>,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        let thr = match self.elems_per_iter {
+            Some(e) if self.median.as_nanos() > 0 => {
+                let per_sec = e as f64 / self.median.as_secs_f64();
+                if per_sec > 1e9 {
+                    format!("  {:8.2} Gelem/s", per_sec / 1e9)
+                } else {
+                    format!("  {:8.2} Melem/s", per_sec / 1e6)
+                }
+            }
+            _ => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} median  {:>12} p10  {:>12} p99  ({} iters){}",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.p10),
+            fmt_dur(self.p99),
+            self.iters,
+            thr
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner with a global time budget per benchmark.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Minimum sample count even if over budget.
+    pub min_samples: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(150),
+            measure: Duration::from_millis(700),
+            min_samples: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile for CI-ish runs (`DME_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("DME_BENCH_FAST").is_ok() {
+            Bencher {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(100),
+                min_samples: 5,
+                results: Vec::new(),
+            }
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Run a benchmark; `f` is one measured iteration and must return a
+    /// value (black-boxed to defeat dead-code elimination).
+    pub fn bench<T>(&mut self, name: &str, elems: Option<u64>, mut f: impl FnMut() -> T) -> &BenchStats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure || samples.len() < self.min_samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+            if samples.len() > 2_000_000 {
+                break;
+            }
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: n as u64,
+            median: samples[n / 2],
+            p10: samples[n / 10],
+            p99: samples[((n * 99) / 100).min(n - 1)],
+            mean: total / n as u32,
+            elems_per_iter: elems,
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_samples: 5,
+            results: Vec::new(),
+        };
+        let s = b.bench("noop-ish", Some(100), || {
+            (0..100).map(|i| i * i).sum::<usize>()
+        });
+        assert!(s.iters >= 5);
+        assert!(s.p10 <= s.median);
+        assert!(s.median <= s.p99);
+    }
+
+    #[test]
+    fn fmt_covers_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(10)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(10)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(10)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Layer-3 coordinator — the paper's distributed algorithms.
+//!
+//! * [`star`] — Algorithm 3: two-round MeanEstimation through a randomly
+//!   chosen leader (expected-cost bounds, Theorem 16).
+//! * [`tree`] — Algorithm 4: binary-tree MeanEstimation with worst-case
+//!   per-machine bounds (Theorem 2).
+//! * [`variance_reduction`] — the VR reduction (Theorems 17/19) and the
+//!   error-detecting Algorithm 6 built on RobustAgreement (Theorem 4).
+//! * [`y_estimator`] — the Section-9 policies for maintaining the input
+//!   variance estimate `y` across SGD iterations.
+//!
+//! All protocols run over [`crate::sim`] with exact bit metering; every
+//! machine's output is returned so tests can assert the *agreement*
+//! invariant (all machines output the same vector) as well as accuracy.
+
+pub mod session;
+pub mod star;
+pub mod sublinear_me;
+pub mod tree;
+pub mod variance_reduction;
+pub mod y_estimator;
+
+pub use session::{SessionRound, StarSession};
+pub use star::{mean_estimation_star, StarOutcome};
+pub use sublinear_me::{sublinear_mean_estimation, SublinearOutcome};
+pub use tree::{mean_estimation_tree, TreeOutcome};
+pub use variance_reduction::{
+    robust_variance_reduction, variance_reduction_star, vr_y_bound, RobustVrOutcome,
+};
+pub use y_estimator::{YEstimator, YPolicy};
+
+use crate::quant::baselines::{
+    EfSignSgd, FullPrecision, PowerSgd, Qsgd, QsgdNorm, SureshHadamard, TernGrad, TopK,
+    VqsgdCrossPolytope,
+};
+use crate::quant::convex_hull::ConvexHullEncoder;
+use crate::quant::{LatticeQuantizer, RotatedLatticeQuantizer, VectorCodec};
+use crate::rng::{hash2, Rng};
+
+/// Which compressor a protocol round should use.
+///
+/// `build` derives all *shared* randomness (lattice offset, rotation
+/// diagonal) deterministically from `(seed, round)`, so every machine
+/// constructs an identical codec without extra communication — exactly
+/// the shared-randomness assumption of Section 9.1. Stateful codecs
+/// (EF-SignSGD, PowerSGD, Top-K) carry error memory across rounds and
+/// must be built once per machine and reused; `CodecSpec::build` gives a
+/// fresh instance (drivers for those keep it alive across rounds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CodecSpec {
+    /// LQSGD — the paper's practical cubic-lattice scheme (§9.1).
+    Lq { q: u32 },
+    /// RLQSGD — LQSGD after the Walsh–Hadamard rotation (§6). `y` passed
+    /// to `build` must be the *rotated-space* ℓ∞ bound `y_R`.
+    Rlq { q: u32 },
+    /// Algorithm-1 stochastic rounding variant (no shared offset).
+    LqHull { q: u32 },
+    /// D4 checkerboard lattice, bucketed by 4 (§6 future work; saves one
+    /// bit per bucket via the parity-implied color LSB). d % 4 == 0.
+    D4 { q: u32 },
+    QsgdL2 { q: u32 },
+    QsgdLinf { q: u32 },
+    Hadamard { q: u32 },
+    Vqsgd { reps: u32 },
+    EfSign,
+    PowerSgd { rank: usize },
+    TernGrad,
+    TopK { k: usize },
+    Full,
+}
+
+impl CodecSpec {
+    /// Instantiate for dimension `d`, distance bound `y`, at a round seed.
+    pub fn build(&self, d: usize, y: f64, seed: u64, round: u64) -> Box<dyn VectorCodec> {
+        let mut shared = Rng::new(hash2(seed, round));
+        match *self {
+            CodecSpec::Lq { q } => Box::new(LatticeQuantizer::from_y(d, q, y, &mut shared)),
+            CodecSpec::Rlq { q } => {
+                Box::new(RotatedLatticeQuantizer::from_y_rot(d, q, y, &mut shared))
+            }
+            CodecSpec::LqHull { q } => Box::new(ConvexHullEncoder::from_y(d, q, y)),
+            CodecSpec::D4 { q } => {
+                Box::new(crate::quant::D4Quantizer::from_y(d, q, y, &mut shared))
+            }
+            CodecSpec::QsgdL2 { q } => Box::new(Qsgd::new(d, q, QsgdNorm::L2)),
+            CodecSpec::QsgdLinf { q } => Box::new(Qsgd::new(d, q, QsgdNorm::Linf)),
+            CodecSpec::Hadamard { q } => Box::new(SureshHadamard::new(d, q, &mut shared)),
+            CodecSpec::Vqsgd { reps } => Box::new(VqsgdCrossPolytope::new(d, reps)),
+            CodecSpec::EfSign => Box::new(EfSignSgd::new(d)),
+            CodecSpec::PowerSgd { rank } => Box::new(PowerSgd::for_dim(d, rank, &mut shared)),
+            CodecSpec::TernGrad => Box::new(TernGrad::new(d)),
+            CodecSpec::TopK { k } => Box::new(TopK::new(d, k)),
+            CodecSpec::Full => Box::new(FullPrecision::new(d)),
+        }
+    }
+
+    /// Short label for tables.
+    pub fn label(&self) -> String {
+        match *self {
+            CodecSpec::Lq { q } => format!("LQSGD(q={q})"),
+            CodecSpec::Rlq { q } => format!("RLQSGD(q={q})"),
+            CodecSpec::LqHull { q } => format!("LQ-hull(q={q})"),
+            CodecSpec::D4 { q } => format!("D4LQ(q={q})"),
+            CodecSpec::QsgdL2 { q } => format!("QSGD-L2(q={q})"),
+            CodecSpec::QsgdLinf { q } => format!("QSGD-Linf(q={q})"),
+            CodecSpec::Hadamard { q } => format!("Hadamard(q={q})"),
+            CodecSpec::Vqsgd { reps } => format!("vQSGD(R={reps})"),
+            CodecSpec::EfSign => "EF-SignSGD".into(),
+            CodecSpec::PowerSgd { rank } => format!("PowerSGD(r={rank})"),
+            CodecSpec::TernGrad => "TernGrad".into(),
+            CodecSpec::TopK { k } => format!("TopK(k={k})"),
+            CodecSpec::Full => "full32".into(),
+        }
+    }
+
+    /// Whether the codec keeps cross-round state (drivers must then reuse
+    /// one instance instead of rebuilding each round).
+    pub fn is_stateful(&self) -> bool {
+        matches!(
+            self,
+            CodecSpec::EfSign | CodecSpec::PowerSgd { .. } | CodecSpec::TopK { .. }
+        )
+    }
+}

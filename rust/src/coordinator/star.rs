@@ -1,0 +1,241 @@
+//! Algorithm 3 — star-topology MeanEstimation.
+//!
+//! A leader is chosen from shared randomness; every other machine sends
+//! its quantized input to the leader, which decodes against its own
+//! input, averages (including its own input), re-encodes the average and
+//! broadcasts it; all machines decode against their own inputs and
+//! output. Expected per-machine cost is `O(d log q)` bits (Theorem 16)
+//! because the `O(nd log q)` leader role is uniformly random.
+//!
+//! The implementation runs one OS thread per machine over [`crate::sim`]
+//! and works for *any* [`CodecSpec`]; for reference-free baselines the
+//! protocol degenerates to quantized gather + broadcast, which is exactly
+//! how the paper's Experiment 5 runs them.
+
+use super::CodecSpec;
+use crate::linalg::scale;
+use crate::rng::{hash2, Rng};
+use crate::sim::{Cluster, Traffic};
+use std::sync::Arc;
+
+/// Result of one star-topology MeanEstimation round.
+#[derive(Clone, Debug)]
+pub struct StarOutcome {
+    /// Every machine's output (the agreement invariant: all equal).
+    pub outputs: Vec<Vec<f64>>,
+    /// The leader's decoded per-worker estimates (diagnostics: lets
+    /// experiments compute per-input quantization error and maintain the
+    /// `y` estimate from quantized points as in §9.2).
+    pub decoded_at_leader: Vec<Vec<f64>>,
+    pub traffic: Vec<Traffic>,
+    pub leader: usize,
+}
+
+impl StarOutcome {
+    /// The common output (asserts agreement in debug builds).
+    pub fn estimate(&self) -> &[f64] {
+        debug_assert!(self
+            .outputs
+            .iter()
+            .all(|o| o == &self.outputs[0]));
+        &self.outputs[0]
+    }
+}
+
+/// Run one MeanEstimation round over the star topology.
+///
+/// * `inputs[v]` — machine v's vector (all of equal dimension `d`).
+/// * `spec`, `y` — compressor and its distance-bound parameter (for RLQ,
+///   `y` is the rotated-space bound).
+/// * `seed`, `round` — derive the leader and all shared randomness.
+pub fn mean_estimation_star(
+    inputs: &[Vec<f64>],
+    spec: &CodecSpec,
+    y: f64,
+    seed: u64,
+    round: u64,
+) -> StarOutcome {
+    let n = inputs.len();
+    assert!(n >= 1);
+    let d = inputs[0].len();
+    let leader = Rng::new(hash2(seed, round ^ 0x1EAD)).next_below(n as u64) as usize;
+    if n == 1 {
+        return StarOutcome {
+            outputs: vec![inputs[0].clone()],
+            decoded_at_leader: vec![inputs[0].clone()],
+            traffic: vec![Traffic::default()],
+            leader,
+        };
+    }
+
+    let cluster = Cluster::new(n);
+    let inputs = Arc::new(inputs.to_vec());
+    let spec = *spec;
+
+    struct MachineOut {
+        output: Vec<f64>,
+        decoded: Vec<Vec<f64>>, // leader only
+    }
+
+    let results = cluster.run(move |mut ep| {
+        let id = ep.id;
+        let x = &inputs[id];
+        let mut stash = Vec::new();
+        // Per-machine encoder randomness must differ across machines
+        // (stochastic rounding draws), while codec-internal *shared*
+        // randomness comes from (seed, round) inside build().
+        let mut enc_rng = Rng::new(hash2(hash2(seed, round), id as u64 + 1));
+        let mut codec = spec.build(d, y, seed, round);
+
+        if id == leader {
+            // Gather: decode every worker's message against our input.
+            let mut decoded: Vec<Vec<f64>> = vec![Vec::new(); n];
+            decoded[id] = x.clone();
+            for _ in 0..n - 1 {
+                let p = ep.recv();
+                decoded[p.from] = codec.decode(&p.msg, x);
+            }
+            // Average all n estimates (leader's own input included,
+            // exactly as Algorithm 3's "v simulates sending Q(x_v)" —
+            // using the raw input only sharpens the leader's own term).
+            let mut mu = vec![0.0; d];
+            for v in &decoded {
+                crate::linalg::axpy(&mut mu, 1.0, v);
+            }
+            let mu = scale(&mu, 1.0 / n as f64);
+            // Broadcast the quantized average.
+            let bmsg = codec.encode(&mu, &mut enc_rng);
+            ep.broadcast(&bmsg);
+            let output = codec.decode(&bmsg, x);
+            MachineOut {
+                output,
+                decoded,
+            }
+        } else {
+            let msg = codec.encode(x, &mut enc_rng);
+            ep.send(leader, msg);
+            let p = ep.recv_from(leader, &mut stash);
+            let output = codec.decode(&p.msg, x);
+            MachineOut {
+                output,
+                decoded: Vec::new(),
+            }
+        }
+    });
+
+    let traffic = cluster.traffic();
+    let mut outputs = Vec::with_capacity(n);
+    let mut decoded_at_leader = Vec::new();
+    for (i, r) in results.into_iter().enumerate() {
+        if i == leader {
+            decoded_at_leader = r.decoded;
+        }
+        outputs.push(r.output);
+    }
+    StarOutcome {
+        outputs,
+        decoded_at_leader,
+        traffic,
+        leader,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dist2, dist_inf, mean_vecs};
+
+    fn gen_inputs(n: usize, d: usize, center: f64, spread: f64, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                (0..d)
+                    .map(|_| center + rng.uniform(-spread, spread))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_machines_agree_lq() {
+        let inputs = gen_inputs(8, 32, 100.0, 0.5, 1);
+        let out = mean_estimation_star(&inputs, &CodecSpec::Lq { q: 16 }, 1.5, 7, 0);
+        for o in &out.outputs {
+            assert_eq!(o, &out.outputs[0], "agreement violated");
+        }
+    }
+
+    #[test]
+    fn lq_estimate_close_to_mean_despite_large_norm() {
+        // Inputs centered at 1000 (huge norm, tiny spread): the lattice
+        // scheme's error depends only on spread — the paper's headline.
+        let inputs = gen_inputs(4, 64, 1000.0, 0.1, 2);
+        let mu = mean_vecs(&inputs);
+        let y = 0.3;
+        let out = mean_estimation_star(&inputs, &CodecSpec::Lq { q: 16 }, y, 3, 0);
+        let s = 2.0 * y / 15.0;
+        // decode error ≤ s/2 per stage, two stages + averaging.
+        assert!(
+            dist_inf(out.estimate(), &mu) <= 1.5 * s,
+            "err {} vs s {}",
+            dist_inf(out.estimate(), &mu),
+            s
+        );
+    }
+
+    #[test]
+    fn qsgd_estimate_much_worse_at_large_center() {
+        // Sanity for the paper's claim: at equal bits QSGD error scales
+        // with the norm (center), LQSGD with the spread.
+        let inputs = gen_inputs(4, 64, 1000.0, 0.1, 4);
+        let mu = mean_vecs(&inputs);
+        let lq = mean_estimation_star(&inputs, &CodecSpec::Lq { q: 8 }, 0.3, 5, 0);
+        let qs = mean_estimation_star(&inputs, &CodecSpec::QsgdL2 { q: 8 }, 0.3, 5, 0);
+        let e_lq = dist2(lq.estimate(), &mu);
+        let e_qs = dist2(qs.estimate(), &mu);
+        assert!(
+            e_lq * 10.0 < e_qs,
+            "LQ {e_lq} should beat QSGD {e_qs} by >10x here"
+        );
+    }
+
+    #[test]
+    fn traffic_matches_formula() {
+        let n = 6;
+        let d = 32;
+        let q = 16u32;
+        let inputs = gen_inputs(n, d, 0.0, 1.0, 6);
+        let out = mean_estimation_star(&inputs, &CodecSpec::Lq { q }, 2.5, 8, 0);
+        let msg_bits = d as u64 * 4; // log2(16)
+        let t = &out.traffic;
+        for v in 0..n {
+            if v == out.leader {
+                assert_eq!(t[v].recv_bits, (n as u64 - 1) * msg_bits);
+                assert_eq!(t[v].sent_bits, (n as u64 - 1) * msg_bits);
+            } else {
+                assert_eq!(t[v].sent_bits, msg_bits);
+                assert_eq!(t[v].recv_bits, msg_bits);
+            }
+        }
+    }
+
+    #[test]
+    fn leader_uniform_over_rounds() {
+        let inputs = gen_inputs(5, 4, 0.0, 1.0, 9);
+        let mut counts = [0usize; 5];
+        for round in 0..200 {
+            let out = mean_estimation_star(&inputs, &CodecSpec::Full, 1.0, 10, round);
+            counts[out.leader] += 1;
+        }
+        for c in counts {
+            assert!(c > 15, "leader distribution too skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn single_machine_identity() {
+        let inputs = gen_inputs(1, 8, 5.0, 0.1, 10);
+        let out = mean_estimation_star(&inputs, &CodecSpec::Lq { q: 8 }, 1.0, 11, 0);
+        assert_eq!(out.estimate(), &inputs[0][..]);
+    }
+}

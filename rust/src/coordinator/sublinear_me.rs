@@ -1,0 +1,163 @@
+//! Algorithm 9 — SublinearMeanEstimation.
+//!
+//! In the o(d)-bits regime no variance reduction is possible (Theorems
+//! 7/38), so averaging is pointless: a uniformly random source machine
+//! broadcasts its sublinearly-quantized input down a binary tree and
+//! everyone outputs the decode. The source's input is itself an unbiased
+//! estimator of μ with variance ≤ y², and the quantizer adds O(y²/q²)
+//! (Theorem 36).
+//!
+//! Uses the exact small-d codec for d ≤ 8 and meters the analytic bit
+//! cost `d·log₂(1+q)` either way (the paper's own Exp-4 methodology for
+//! high d, where it shows the exact scheme is computationally
+//! infeasible — DESIGN.md §2).
+
+use crate::quant::sublinear::{SublinearCodec, SublinearModel};
+use crate::rng::{hash2, Rng};
+use crate::sim::Traffic;
+
+/// Result of one sublinear MeanEstimation round.
+#[derive(Clone, Debug)]
+pub struct SublinearOutcome {
+    /// Common output (all machines).
+    pub estimate: Vec<f64>,
+    pub source: usize,
+    pub traffic: Vec<Traffic>,
+    /// Analytic added variance `d·s²/12` at the chosen parameters.
+    pub model_variance: f64,
+    /// Whether the exact codec ran (d ≤ 8) or the model-metered path.
+    pub exact: bool,
+}
+
+/// Run Algorithm 9: `q` may be < 1 (the sublinear regime: ~`d·q` bits).
+pub fn sublinear_mean_estimation(
+    inputs: &[Vec<f64>],
+    q: f64,
+    y: f64,
+    seed: u64,
+    round: u64,
+) -> SublinearOutcome {
+    let n = inputs.len();
+    assert!(n >= 1 && q > 0.0 && y > 0.0);
+    let d = inputs[0].len();
+    let source = Rng::new(hash2(seed, round ^ 0x50BC)).next_below(n as u64) as usize;
+    let model = SublinearModel { d, y };
+    // ε-lattice at side s = y/q ⇒ decode radius qε covers ‖x_u−x_v‖ ≤ y.
+    let s = y / q.max(1e-12) * 2.0;
+    let bits = (d as f64 * (1.0 + 2.0 * q).log2()).ceil() as u64;
+
+    let mut traffic = vec![Traffic::default(); n];
+    // Binary-tree broadcast: every non-source machine receives once; each
+    // internal node sends ≤ 2 copies.
+    let order: Vec<usize> = (0..n).map(|i| (source + i) % n).collect();
+    for pos in 0..n {
+        for c in [2 * pos + 1, 2 * pos + 2] {
+            if c < n {
+                traffic[order[pos]].sent_bits += bits;
+                traffic[order[pos]].sent_msgs += 1;
+                traffic[order[c]].recv_bits += bits;
+                traffic[order[c]].recv_msgs += 1;
+            }
+        }
+    }
+
+    if d <= 8 {
+        let codec = SublinearCodec::new(d, s, q, hash2(seed, round));
+        if let Some((msg, _est)) = codec.encode(&inputs[source]) {
+            // Every machine decodes against its own input; within radius
+            // they all recover the same lattice point.
+            let mut outputs: Vec<Option<Vec<f64>>> =
+                (0..n).map(|v| codec.decode(&msg, &inputs[v])).collect();
+            if outputs.iter().all(|o| o.is_some()) {
+                let first = outputs.swap_remove(0).unwrap();
+                return SublinearOutcome {
+                    estimate: first,
+                    source,
+                    traffic,
+                    model_variance: model.variance_for_side(s),
+                    exact: true,
+                };
+            }
+        }
+        // Exact path failed (radius exceeded): fall through to the model
+        // path, which is what high-d deployments use anyway.
+    }
+    // Model path: randomly offset cubic quantization of the source input
+    // (the estimator Exp 4 simulates), metered at the sublinear bit cost.
+    let mut shared = Rng::new(hash2(seed, round ^ 0x0FF5));
+    let est: Vec<f64> = inputs[source]
+        .iter()
+        .map(|v| {
+            let off = shared.uniform(-s / 2.0, s / 2.0);
+            ((v - off) / s).round_ties_even() * s + off
+        })
+        .collect();
+    SublinearOutcome {
+        estimate: est,
+        source,
+        traffic,
+        model_variance: model.variance_for_side(s),
+        exact: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dist2, mean_vecs};
+
+    fn gen(n: usize, d: usize, center: f64, spread: f64, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                (0..d)
+                    .map(|_| center + rng.uniform(-spread, spread))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sublinear_bits_are_sublinear() {
+        let inputs = gen(8, 64, 10.0, 0.5, 1);
+        let out = sublinear_mean_estimation(&inputs, 0.2, 1.0, 2, 0);
+        // 64·log2(1.4) ≈ 31 bits ≪ 64 coordinates.
+        let max_sent = out.traffic.iter().map(|t| t.sent_bits).max().unwrap();
+        assert!(max_sent <= 2 * 32, "bits {max_sent}");
+        assert!(!out.exact);
+    }
+
+    #[test]
+    fn exact_small_d_path_agrees_across_machines() {
+        let inputs = gen(6, 4, 5.0, 0.05, 3);
+        let out = sublinear_mean_estimation(&inputs, 2.0, 0.5, 4, 0);
+        // estimate near the source input (variance d·s²/12 envelope).
+        let s = 0.5 / 2.0 * 2.0;
+        assert!(dist2(&out.estimate, &inputs[out.source]) <= s * 2.0);
+    }
+
+    #[test]
+    fn unbiased_for_the_mean_over_rounds() {
+        // E[EST] = E[x_source] = μ (+ unbiased quantization).
+        let inputs = gen(4, 4, 0.0, 1.0, 5);
+        let mu = mean_vecs(&inputs);
+        let rounds = 4000;
+        let mut acc = vec![0.0; 4];
+        for r in 0..rounds {
+            let out = sublinear_mean_estimation(&inputs, 0.5, 2.5, 6, r);
+            crate::linalg::axpy(&mut acc, 1.0, &out.estimate);
+        }
+        for (a, m) in acc.iter().zip(&mu) {
+            let mean = a / rounds as f64;
+            assert!((mean - m).abs() < 0.2, "{mean} vs {m}");
+        }
+    }
+
+    #[test]
+    fn variance_model_decreases_with_q() {
+        let inputs = gen(2, 16, 0.0, 1.0, 7);
+        let v1 = sublinear_mean_estimation(&inputs, 0.25, 1.0, 8, 0).model_variance;
+        let v2 = sublinear_mean_estimation(&inputs, 1.0, 1.0, 8, 0).model_variance;
+        assert!(v2 < v1);
+    }
+}

@@ -1,0 +1,257 @@
+//! Algorithm 4 — tree-topology MeanEstimation(m).
+//!
+//! Worst-case (not just expected) per-machine communication: sample
+//! `min(m, n)` machines as leaves of a complete binary tree, average
+//! upward with re-quantization at every internal node (parameters
+//! `ε = y/m²`, `q = m³` in paper terms — here lattice side `s = 2y/m²`
+//! and color count `q = m³` capped for word width), then broadcast the
+//! root's estimate down a binary tree over *all* machines, each relaying
+//! the identical message.
+//!
+//! Internal-node roles are assigned to machines round-robin so every
+//! machine plays O(1) roles (the paper's requirement); bits are metered
+//! against the *machine* playing each role via [`crate::sim`] endpoints
+//! driven sequentially (the tree has data dependencies level by level, so
+//! sequential execution is the faithful schedule).
+
+use crate::linalg::scale;
+use crate::quant::VectorCodec;
+use crate::rng::{hash2, Rng};
+use crate::sim::{Cluster, Traffic};
+
+/// Result of one tree-topology MeanEstimation round.
+#[derive(Clone, Debug)]
+pub struct TreeOutcome {
+    pub outputs: Vec<Vec<f64>>,
+    pub traffic: Vec<Traffic>,
+    /// The sampled leaf set T.
+    pub leaves: Vec<usize>,
+    /// Effective quantizer parameters used (s-side, q-colors).
+    pub q_used: u32,
+}
+
+impl TreeOutcome {
+    pub fn estimate(&self) -> &[f64] {
+        debug_assert!(self.outputs.iter().all(|o| o == &self.outputs[0]));
+        &self.outputs[0]
+    }
+}
+
+/// Tree quantizer parameters for a given `m` (paper: ε=y/m², q=m³).
+/// Returns (side, colors): side = 2·y/m², colors = min(m³, 2²⁰).
+pub fn tree_params(m: usize, y: f64) -> (f64, u32) {
+    let m = m.max(2) as f64;
+    let side = 2.0 * y / (m * m);
+    let q = (m * m * m).min((1u64 << 20) as f64) as u32;
+    (side.max(f64::MIN_POSITIVE), q.max(4))
+}
+
+/// Run Algorithm 4 with sample size `m`.
+pub fn mean_estimation_tree(
+    inputs: &[Vec<f64>],
+    m: usize,
+    y: f64,
+    seed: u64,
+    round: u64,
+) -> TreeOutcome {
+    let n = inputs.len();
+    assert!(n >= 1);
+    let d = inputs[0].len();
+    let mut shared = Rng::new(hash2(seed, round ^ 0x7EEE));
+    let m_eff = m.min(n).next_power_of_two().min(n.next_power_of_two());
+    // Sample T uniformly (if m >= n, T = all machines).
+    let leaves: Vec<usize> = if m_eff >= n {
+        (0..n).collect()
+    } else {
+        shared.sample_indices(n, m_eff)
+    };
+    let _n_leaves = leaves.len();
+    let (side, q) = tree_params(m.max(2), y);
+
+    // Build one shared-lattice codec (same (seed,round) ⇒ same offset).
+    let make_codec = || {
+        let mut sr = Rng::new(hash2(seed, round));
+        crate::quant::LatticeQuantizer::new(
+            crate::quant::CubicLattice::random_offset(d, side, &mut sr),
+            q,
+        )
+    };
+
+    if n == 1 {
+        return TreeOutcome {
+            outputs: vec![inputs[0].clone()],
+            traffic: vec![Traffic::default()],
+            leaves,
+            q_used: q,
+        };
+    }
+
+    let cluster = Cluster::new(n);
+    let mut eps = cluster.endpoints();
+
+    // --- Upward pass over a complete binary tree with `n_leaves` leaves.
+    // Level 0: the sampled leaves' own inputs. Internal node j at level l
+    // is played by machine role_of(l, j) (round-robin over all machines).
+    let role_of = |level: usize, j: usize| -> usize { (j * 2 + level * 3) % n };
+    let mut estimates: Vec<Vec<f64>> = leaves.iter().map(|&v| inputs[v].clone()).collect();
+    let mut owners: Vec<usize> = leaves.clone();
+    let mut level = 0usize;
+    while estimates.len() > 1 {
+        level += 1;
+        let mut next_est = Vec::with_capacity(estimates.len() / 2);
+        let mut next_own = Vec::with_capacity(estimates.len() / 2);
+        for j in 0..estimates.len() / 2 {
+            let parent = role_of(level, j);
+            // Children send their quantized estimates to the parent.
+            let mut decoded = Vec::with_capacity(2);
+            for c in 0..2 {
+                let child_idx = 2 * j + c;
+                let child = owners[child_idx];
+                let codec = make_codec();
+                let (msg, _pt) = codec.encode_with_point(&estimates[child_idx]);
+                if child != parent {
+                    eps[child].send(parent, msg.clone());
+                    let p = {
+                        let mut stash = Vec::new();
+                        eps[parent].recv_from(child, &mut stash)
+                    };
+                    decoded.push(codec.decode(&p.msg, &inputs[parent]));
+                } else {
+                    // Same machine plays both roles: no wire cost.
+                    decoded.push(codec.decode(&msg, &inputs[parent]));
+                }
+            }
+            let avg = scale(&crate::linalg::add(&decoded[0], &decoded[1]), 0.5);
+            next_est.push(avg);
+            next_own.push(parent);
+        }
+        if estimates.len() % 2 == 1 {
+            // Odd node passes through unchanged.
+            next_est.push(estimates.last().unwrap().clone());
+            next_own.push(*owners.last().unwrap());
+        }
+        estimates = next_est;
+        owners = next_own;
+    }
+    let root_est = estimates.pop().unwrap();
+    let root = owners.pop().unwrap();
+
+    // --- Downward broadcast over a binary tree rooted at `root` covering
+    // all machines; everyone relays the identical message.
+    let codec = make_codec();
+    let (bmsg, _pt) = codec.encode_with_point(&root_est);
+    // BFS order: machine ids re-indexed so root is position 0.
+    let order: Vec<usize> = (0..n).map(|i| (root + i) % n).collect();
+    for pos in 0..n {
+        let me = order[pos];
+        let c1 = 2 * pos + 1;
+        let c2 = 2 * pos + 2;
+        for c in [c1, c2] {
+            if c < n {
+                eps[me].send(order[c], bmsg.clone());
+                // Receive at the child (sequential schedule).
+                let mut stash = Vec::new();
+                let _ = eps[order[c]].recv_from(me, &mut stash);
+            }
+        }
+    }
+    let outputs: Vec<Vec<f64>> = (0..n).map(|v| codec.decode(&bmsg, &inputs[v])).collect();
+
+    TreeOutcome {
+        outputs,
+        traffic: cluster.traffic(),
+        leaves,
+        q_used: q,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dist_inf, mean_vecs};
+
+    fn gen_inputs(n: usize, d: usize, center: f64, spread: f64, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                (0..d)
+                    .map(|_| center + rng.uniform(-spread, spread))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn agreement_and_accuracy_full_sample() {
+        let n = 8;
+        let inputs = gen_inputs(n, 16, 50.0, 0.5, 1);
+        let y = 1.2;
+        let out = mean_estimation_tree(&inputs, n, y, 2, 0);
+        for o in &out.outputs {
+            assert_eq!(o, &out.outputs[0]);
+        }
+        let mu = mean_vecs(&inputs);
+        // Lemma 18: error ≤ O(y log m / m²) — generous envelope here.
+        let m = n as f64;
+        let bound = 10.0 * y * (m.log2() + 1.0) / (m * m);
+        assert!(
+            dist_inf(out.estimate(), &mu) <= bound,
+            "err {} bound {}",
+            dist_inf(out.estimate(), &mu),
+            bound
+        );
+    }
+
+    #[test]
+    fn subsample_unbiased_over_rounds() {
+        // With m < n the sample mean is an unbiased estimator of μ.
+        let n = 16;
+        let d = 4;
+        let inputs = gen_inputs(n, d, 0.0, 1.0, 3);
+        let mu = mean_vecs(&inputs);
+        let mut acc = vec![0.0; d];
+        let rounds = 400;
+        for r in 0..rounds {
+            let out = mean_estimation_tree(&inputs, 4, 2.5, 5, r);
+            crate::linalg::axpy(&mut acc, 1.0, out.estimate());
+        }
+        for (a, m) in acc.iter().zip(&mu) {
+            let mean = a / rounds as f64;
+            assert!((mean - m).abs() < 0.15, "{mean} vs {m}");
+        }
+    }
+
+    #[test]
+    fn per_machine_bits_bounded() {
+        // Worst-case guarantee: every machine sends/receives O(d log q)
+        // per upward role (O(1) roles) + 2 broadcast messages.
+        let n = 16;
+        let d = 32;
+        let inputs = gen_inputs(n, d, 0.0, 1.0, 7);
+        let out = mean_estimation_tree(&inputs, n, 2.5, 8, 0);
+        let msg_bits = d as u64 * crate::quant::bits::width_for(out.q_used as u64) as u64;
+        let cap = 8 * msg_bits; // O(1) roles × O(d log q)
+        for t in &out.traffic {
+            assert!(t.sent_bits <= cap, "sent {} > cap {}", t.sent_bits, cap);
+            assert!(t.recv_bits <= cap, "recv {} > cap {}", t.recv_bits, cap);
+        }
+    }
+
+    #[test]
+    fn tree_params_formula() {
+        let (s, q) = tree_params(8, 1.0);
+        assert!((s - 2.0 / 64.0).abs() < 1e-12);
+        assert_eq!(q, 512);
+    }
+
+    #[test]
+    fn odd_machine_counts_work() {
+        for n in [3, 5, 7, 9] {
+            let inputs = gen_inputs(n, 8, 10.0, 0.2, n as u64);
+            let out = mean_estimation_tree(&inputs, n, 0.5, 9, 0);
+            for o in &out.outputs {
+                assert_eq!(o, &out.outputs[0]);
+            }
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Input-variance (`y`) estimation policies — Section 9's practical
+//! mechanisms for maintaining the distance bound across SGD iterations.
+//!
+//! * `Fixed` — a constant bound (used when a pre-computed estimate exists).
+//! * `FromQuantized` — Experiment 2/3's rule: after a successful round,
+//!!  every machine knows all quantized points, so
+//!   `y(t+1) = slack · max_{i,j} ‖Q(g_i) − Q(g_j)‖∞` needs no extra
+//!   communication.
+//! * `LeaderMeasured` — Experiment 5's rule: the leader measures the same
+//!   quantity and broadcasts it as one 64-bit float per round (the bit
+//!   cost is charged to the caller via [`YEstimator::broadcast_bits`]).
+//!
+//! For RLQSGD the same policies apply to the *rotated* vectors (`y_R`).
+
+use crate::linalg::dist_inf;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum YPolicy {
+    /// Constant y.
+    Fixed,
+    /// y(t+1) = slack · max pairwise ℓ∞ distance of quantized points;
+    /// every machine computes it locally (zero communication).
+    FromQuantized { slack: f64 },
+    /// As `FromQuantized` but computed at the leader and broadcast as a
+    /// 64-bit float (n−1 messages charged per update period).
+    LeaderMeasured { slack: f64, period: usize },
+}
+
+/// Stateful y estimator driven once per round.
+#[derive(Clone, Debug)]
+pub struct YEstimator {
+    pub policy: YPolicy,
+    pub y: f64,
+    rounds_seen: usize,
+}
+
+impl YEstimator {
+    pub fn new(policy: YPolicy, y0: f64) -> Self {
+        assert!(y0 > 0.0, "initial y must be positive");
+        YEstimator {
+            policy,
+            y: y0,
+            rounds_seen: 0,
+        }
+    }
+
+    /// Max pairwise ℓ∞ distance among vectors.
+    pub fn max_pairwise_inf(points: &[Vec<f64>]) -> f64 {
+        let mut m: f64 = 0.0;
+        for i in 0..points.len() {
+            for j in i + 1..points.len() {
+                m = m.max(dist_inf(&points[i], &points[j]));
+            }
+        }
+        m
+    }
+
+    /// Update from this round's quantized points (decoded at the leader).
+    /// Returns the bits of side communication incurred by the policy.
+    pub fn update(&mut self, quantized_points: &[Vec<f64>], n_machines: usize) -> u64 {
+        self.rounds_seen += 1;
+        match self.policy {
+            YPolicy::Fixed => 0,
+            YPolicy::FromQuantized { slack } => {
+                let m = Self::max_pairwise_inf(quantized_points);
+                if m > 0.0 {
+                    self.y = slack * m;
+                } else {
+                    // All points quantized identically: the lattice is far
+                    // coarser than the true spread. Decay y geometrically
+                    // so the side length tracks the shrinking gradients
+                    // (decode still succeeds — spread < s/2 certainly).
+                    self.y *= 0.5;
+                }
+                0
+            }
+            YPolicy::LeaderMeasured { slack, period } => {
+                if period == 0 || self.rounds_seen % period.max(1) != 0 {
+                    return 0;
+                }
+                let m = Self::max_pairwise_inf(quantized_points);
+                if m > 0.0 {
+                    self.y = slack * m;
+                } else {
+                    self.y *= 0.5;
+                }
+                // Leader broadcasts one f64 to n−1 machines.
+                64 * (n_machines.saturating_sub(1) as u64)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut e = YEstimator::new(YPolicy::Fixed, 2.0);
+        e.update(&[vec![0.0, 0.0], vec![100.0, 0.0]], 4);
+        assert_eq!(e.y, 2.0);
+    }
+
+    #[test]
+    fn from_quantized_tracks_spread() {
+        let mut e = YEstimator::new(YPolicy::FromQuantized { slack: 1.5 }, 1.0);
+        let bits = e.update(&[vec![0.0, 0.0], vec![0.4, -0.2], vec![0.1, 0.6]], 3);
+        assert_eq!(bits, 0);
+        assert!((e.y - 1.5 * 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_spread_decays_y_geometrically() {
+        let mut e = YEstimator::new(YPolicy::FromQuantized { slack: 2.0 }, 0.7);
+        e.update(&[vec![1.0, 1.0], vec![1.0, 1.0]], 2);
+        assert_eq!(e.y, 0.35, "degenerate measurement must decay, not zero");
+        e.update(&[vec![1.0, 1.0], vec![1.0, 1.0]], 2);
+        assert_eq!(e.y, 0.175);
+    }
+
+    #[test]
+    fn leader_measured_charges_bits_periodically() {
+        let mut e = YEstimator::new(
+            YPolicy::LeaderMeasured {
+                slack: 3.0,
+                period: 5,
+            },
+            1.0,
+        );
+        let pts = vec![vec![0.0], vec![2.0]];
+        let mut total = 0;
+        for _ in 0..10 {
+            total += e.update(&pts, 8);
+        }
+        assert_eq!(total, 2 * 64 * 7);
+        assert!((e.y - 6.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,398 @@
+//! Workload substrates: dataset generators for every experiment, plus a
+//! LIBSVM parser so real files can be dropped in when available.
+//!
+//! * [`gen_lsq`] — the synthetic least-squares instances of §9.2
+//!   (A ~ N(0,1)^{S×d}, b = A w*).
+//! * [`gen_cpusmall_like`] — stand-in for LIBSVM `cpusmall_scale`
+//!   (S=8192, d=12, features scaled to [−1,1], mildly nonlinear target);
+//!   used by Experiment 5 when no real file is present (see DESIGN.md §2).
+//! * [`gen_classification`] — gaussian-mixture classification for the
+//!   neural-network experiment (E7 analogue).
+//! * [`gen_power_matrix`] — rows from a gaussian with a controlled
+//!   spectrum (first two eigenvalues large and comparable, §9.5).
+//! * [`parse_libsvm`] — the standard sparse text format.
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// A regression dataset `min_w ‖Aw − b‖²`.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    pub a: Matrix,
+    pub b: Vec<f64>,
+    /// Ground-truth weights when synthetic (None for parsed data).
+    pub w_star: Option<Vec<f64>>,
+}
+
+impl Regression {
+    pub fn samples(&self) -> usize {
+        self.a.rows
+    }
+    pub fn dim(&self) -> usize {
+        self.a.cols
+    }
+
+    /// Full-batch least-squares gradient at `w`: (2/S)·Aᵀ(Aw − b).
+    pub fn full_gradient(&self, w: &[f64]) -> Vec<f64> {
+        let mut r = self.a.matvec(w);
+        for (ri, bi) in r.iter_mut().zip(&self.b) {
+            *ri -= bi;
+        }
+        let mut g = self.a.matvec_t(&r);
+        let c = 2.0 / self.samples() as f64;
+        for gi in g.iter_mut() {
+            *gi *= c;
+        }
+        g
+    }
+
+    /// Gradient over a row subset.
+    pub fn batch_gradient(&self, w: &[f64], rows: &[usize]) -> Vec<f64> {
+        let mut g = vec![0.0; self.dim()];
+        for &i in rows {
+            let row = self.a.row(i);
+            let r = crate::linalg::dot(row, w) - self.b[i];
+            crate::linalg::axpy(&mut g, r, row);
+        }
+        let c = 2.0 / rows.len().max(1) as f64;
+        for gi in g.iter_mut() {
+            *gi *= c;
+        }
+        g
+    }
+
+    /// Mean squared error ‖Aw−b‖²/S.
+    pub fn loss(&self, w: &[f64]) -> f64 {
+        let r = self.a.matvec(w);
+        r.iter()
+            .zip(&self.b)
+            .map(|(ri, bi)| (ri - bi) * (ri - bi))
+            .sum::<f64>()
+            / self.samples() as f64
+    }
+
+    /// Random equal partition of rows into `n` groups (fresh each call —
+    /// the paper reshuffles every iteration).
+    pub fn partition(&self, n: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+        let mut idx: Vec<usize> = (0..self.samples()).collect();
+        rng.shuffle(&mut idx);
+        let chunk = self.samples() / n;
+        (0..n)
+            .map(|g| idx[g * chunk..(g + 1) * chunk].to_vec())
+            .collect()
+    }
+}
+
+/// §9.2 synthetic least-squares: A, w* ~ N(0,1), b = A w* (noise-free,
+/// so the optimum is exact and gradients vanish at w*).
+pub fn gen_lsq(samples: usize, d: usize, seed: u64) -> Regression {
+    let mut rng = Rng::new(seed);
+    let w_star = rng.gaussian_vec(d);
+    let mut a = Matrix::zeros(samples, d);
+    for v in a.data.iter_mut() {
+        *v = rng.next_gaussian();
+    }
+    let b = a.matvec(&w_star);
+    Regression {
+        a,
+        b,
+        w_star: Some(w_star),
+    }
+}
+
+/// cpusmall_scale stand-in: 12 features in [−1, 1] with heterogeneous
+/// distributions, target a noisy mildly-nonlinear function — shaped like
+/// the LIBSVM original (system activity → CPU usage regression).
+pub fn gen_cpusmall_like(samples: usize, seed: u64) -> Regression {
+    let d = 12;
+    let mut rng = Rng::new(seed);
+    let w_lin = rng.gaussian_vec(d);
+    let mut a = Matrix::zeros(samples, d);
+    let mut b = vec![0.0; samples];
+    for i in 0..samples {
+        for j in 0..d {
+            // Heterogeneous feature families, all scaled into [-1, 1].
+            let v = match j % 3 {
+                0 => rng.uniform(-1.0, 1.0),
+                1 => (rng.next_gaussian() * 0.33).clamp(-1.0, 1.0),
+                _ => {
+                    // skewed (exponential-ish) then scaled
+                    let e = -rng.next_f64().max(1e-12).ln() / 3.0;
+                    (e.min(1.0)) * 2.0 - 1.0
+                }
+            };
+            a.data[i * d + j] = v;
+        }
+        let row = &a.data[i * d..(i + 1) * d];
+        let lin = crate::linalg::dot(row, &w_lin);
+        let nonlin = 0.3 * row[0] * row[1] + 0.2 * row[2].powi(2);
+        b[i] = 30.0 * (lin + nonlin) + 50.0 + rng.next_gaussian();
+    }
+    Regression { a, b, w_star: None }
+}
+
+/// Gaussian-mixture classification: `classes` spherical clusters with
+/// unit-norm random centers separated enough to be learnable.
+pub struct Classification {
+    pub x: Matrix,
+    pub labels: Vec<usize>,
+    pub classes: usize,
+}
+
+impl Classification {
+    /// Split into (train, validation) at `n_train` samples.
+    pub fn split(&self, n_train: usize) -> (Classification, Classification) {
+        assert!(n_train < self.x.rows);
+        let f = self.x.cols;
+        let head = Classification {
+            x: self.x.row_block(0, n_train),
+            labels: self.labels[..n_train].to_vec(),
+            classes: self.classes,
+        };
+        let tail = Classification {
+            x: Matrix {
+                rows: self.x.rows - n_train,
+                cols: f,
+                data: self.x.data[n_train * f..].to_vec(),
+            },
+            labels: self.labels[n_train..].to_vec(),
+            classes: self.classes,
+        };
+        (head, tail)
+    }
+}
+
+pub fn gen_classification(
+    samples: usize,
+    features: usize,
+    classes: usize,
+    noise: f64,
+    seed: u64,
+) -> Classification {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f64>> = (0..classes)
+        .map(|_| {
+            let c = rng.gaussian_vec(features);
+            crate::linalg::scale(&crate::linalg::normalize(&c), 2.0)
+        })
+        .collect();
+    let mut x = Matrix::zeros(samples, features);
+    let mut labels = vec![0usize; samples];
+    for i in 0..samples {
+        let c = rng.next_below(classes as u64) as usize;
+        labels[i] = c;
+        for j in 0..features {
+            x.data[i * features + j] = centers[c][j] + noise * rng.next_gaussian();
+        }
+    }
+    Classification {
+        x,
+        labels,
+        classes,
+    }
+}
+
+/// §9.5 power-iteration input: rows `x = Σ_i √λ_i g_i v_i` with
+/// eigenvalues `lambdas` and principal directions either the standard
+/// basis (axis-aligned, Fig 14) or a random rotation (Fig 15).
+pub fn gen_power_matrix(
+    samples: usize,
+    d: usize,
+    lambdas: &[f64],
+    random_directions: bool,
+    seed: u64,
+) -> (Matrix, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    assert!(lambdas.len() <= d);
+    // Orthonormal directions: identity, or random via Gram-Schmidt.
+    let mut dirs: Vec<Vec<f64>> = Vec::with_capacity(lambdas.len());
+    if random_directions {
+        for _ in 0..lambdas.len() {
+            let mut v = rng.gaussian_vec(d);
+            for u in &dirs {
+                let c = crate::linalg::dot(&v, u);
+                crate::linalg::axpy(&mut v, -c, u);
+            }
+            dirs.push(crate::linalg::normalize(&v));
+        }
+    } else {
+        for (i, _) in lambdas.iter().enumerate() {
+            let mut v = vec![0.0; d];
+            // Paper Fig 14: principal eigenvector is e_2.
+            v[(i + 1) % d] = 1.0;
+            dirs.push(v);
+        }
+    }
+    let mut x = Matrix::zeros(samples, d);
+    let resid = 0.05; // small isotropic floor so X is full-rank
+    for i in 0..samples {
+        let row = &mut x.data[i * d..(i + 1) * d];
+        for v in row.iter_mut() {
+            *v = resid * rng.next_gaussian();
+        }
+        for (lam, dir) in lambdas.iter().zip(&dirs) {
+            let g = rng.next_gaussian() * lam.sqrt();
+            for (rj, dj) in row.iter_mut().zip(dir) {
+                *rj += g * dj;
+            }
+        }
+    }
+    (x, dirs[0].clone())
+}
+
+/// Parse LIBSVM format (`label idx:val idx:val ...`, 1-based indices).
+pub fn parse_libsvm(text: &str, dim_hint: Option<usize>) -> Regression {
+    let mut rows: Vec<(f64, Vec<(usize, f64)>)> = Vec::new();
+    let mut max_idx = dim_hint.unwrap_or(0);
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let label: f64 = match it.next().and_then(|t| t.parse().ok()) {
+            Some(l) => l,
+            None => continue,
+        };
+        let mut feats = Vec::new();
+        for tok in it {
+            if let Some((i, v)) = tok.split_once(':') {
+                if let (Ok(i), Ok(v)) = (i.parse::<usize>(), v.parse::<f64>()) {
+                    if i >= 1 {
+                        max_idx = max_idx.max(i);
+                        feats.push((i - 1, v));
+                    }
+                }
+            }
+        }
+        rows.push((label, feats));
+    }
+    let d = max_idx;
+    let mut a = Matrix::zeros(rows.len(), d);
+    let mut b = vec![0.0; rows.len()];
+    for (r, (label, feats)) in rows.into_iter().enumerate() {
+        b[r] = label;
+        for (j, v) in feats {
+            a.data[r * d + j] = v;
+        }
+    }
+    Regression { a, b, w_star: None }
+}
+
+/// Load `path` as LIBSVM if it exists, else fall back to the generator.
+pub fn cpusmall_or_synthetic(path: &str, samples: usize, seed: u64) -> Regression {
+    match std::fs::read_to_string(path) {
+        Ok(text) => parse_libsvm(&text, Some(12)),
+        Err(_) => gen_cpusmall_like(samples, seed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norm2;
+
+    #[test]
+    fn lsq_optimum_has_zero_gradient() {
+        let ds = gen_lsq(256, 10, 1);
+        let w = ds.w_star.clone().unwrap();
+        let g = ds.full_gradient(&w);
+        assert!(norm2(&g) < 1e-9);
+        assert!(ds.loss(&w) < 1e-18);
+    }
+
+    #[test]
+    fn batch_gradients_average_to_full() {
+        let ds = gen_lsq(128, 6, 2);
+        let w = vec![0.5; 6];
+        let mut rng = Rng::new(3);
+        let parts = ds.partition(4, &mut rng);
+        let full = ds.full_gradient(&w);
+        let mut acc = vec![0.0; 6];
+        for p in &parts {
+            crate::linalg::axpy(&mut acc, 0.25, &ds.batch_gradient(&w, p));
+        }
+        for (a, f) in acc.iter().zip(&full) {
+            assert!((a - f).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn partition_covers_all_rows_once() {
+        let ds = gen_lsq(64, 3, 4);
+        let mut rng = Rng::new(5);
+        let parts = ds.partition(4, &mut rng);
+        let mut all: Vec<usize> = parts.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cpusmall_like_shape_and_scaling() {
+        let ds = gen_cpusmall_like(512, 6);
+        assert_eq!(ds.dim(), 12);
+        assert_eq!(ds.samples(), 512);
+        for v in &ds.a.data {
+            assert!(*v >= -1.0 - 1e-9 && *v <= 1.0 + 1e-9);
+        }
+        // Targets are far from origin (the whole point of Exp 5).
+        let mean_b = ds.b.iter().sum::<f64>() / ds.b.len() as f64;
+        assert!(mean_b.abs() > 10.0);
+    }
+
+    #[test]
+    fn classification_clusters_learnable() {
+        let c = gen_classification(200, 8, 3, 0.1, 7);
+        // Nearest-center classification should be near-perfect at low noise.
+        let mut centers = vec![vec![0.0; 8]; 3];
+        let mut counts = [0usize; 3];
+        for i in 0..200 {
+            let l = c.labels[i];
+            counts[l] += 1;
+            crate::linalg::axpy(&mut centers[l], 1.0, c.x.row(i));
+        }
+        for (c_, n) in centers.iter_mut().zip(counts) {
+            for v in c_.iter_mut() {
+                *v /= n.max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..200 {
+            let row = c.x.row(i);
+            let best = (0..3)
+                .min_by(|&a, &b| {
+                    crate::linalg::dist2(row, &centers[a])
+                        .partial_cmp(&crate::linalg::dist2(row, &centers[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            if best == c.labels[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct > 190, "only {correct}/200 separable");
+    }
+
+    #[test]
+    fn power_matrix_top_direction_dominates() {
+        let (x, v1) = gen_power_matrix(2048, 16, &[10.0, 8.0, 1.0], false, 8);
+        // Empirical covariance action: ‖Xv1‖ should dominate ‖Xe_k‖ for
+        // a non-principal axis.
+        let xv = x.matvec(&v1);
+        let mut e_other = vec![0.0; 16];
+        e_other[7] = 1.0;
+        let xo = x.matvec(&e_other);
+        assert!(norm2(&xv) > 2.0 * norm2(&xo));
+    }
+
+    #[test]
+    fn libsvm_parser_roundtrip() {
+        let text = "1.5 1:0.5 3:-2.0\n-0.25 2:1.0\n# comment\n";
+        let ds = parse_libsvm(text, None);
+        assert_eq!(ds.samples(), 2);
+        assert_eq!(ds.dim(), 3);
+        assert_eq!(ds.b, vec![1.5, -0.25]);
+        assert_eq!(ds.a.row(0), &[0.5, 0.0, -2.0]);
+        assert_eq!(ds.a.row(1), &[0.0, 1.0, 0.0]);
+    }
+}

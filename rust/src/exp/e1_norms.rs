@@ -1,0 +1,95 @@
+//! Experiment 1 (Figures 1–2): norms relevant to quantization schemes.
+//!
+//! Least-squares on two machines; iterations use the *full* (unquantized)
+//! gradient, and per iteration we record the four quantities of §9.2:
+//! `‖g₀−g₁‖₂`, `‖g₀−g₁‖∞`, `‖g₀‖₂`, and `max(g₀)−min(g₀)`.
+//! Expected shape: the two distance norms sit far below the two
+//! norm-based quantities — inputs are not centered at the origin.
+
+use super::{mean_trace, render_series, ExpOpts, Series};
+use crate::data::gen_lsq;
+use crate::opt::dist_gd::{run_distributed_gd, GdAggregation, GdConfig};
+
+pub fn run(opts: &ExpOpts) -> String {
+    let mut out = String::from("# E1 — norms relevant to quantization (Figs 1-2)\n\n");
+    for (fig, samples) in [("Fig 1 (fewer samples)", 8192), ("Fig 2 (more samples)", 32768)] {
+        let s = opts.samples(samples);
+        let iters = opts.iters(50);
+        let mut d2 = Vec::new();
+        let mut dinf = Vec::new();
+        let mut n2 = Vec::new();
+        let mut rng_ = Vec::new();
+        for seed in 0..opts.seeds as u64 {
+            let ds = gen_lsq(s, 100, seed * 10);
+            let cfg = GdConfig {
+                n_machines: 2,
+                lr: 0.1,
+                iters,
+                seed,
+                ..Default::default()
+            };
+            let t = run_distributed_gd(&ds, &GdAggregation::Exact, &cfg);
+            d2.push(t.grad_dist_2);
+            dinf.push(t.grad_dist_inf);
+            n2.push(t.grad_norm_2);
+            rng_.push(t.grad_range);
+        }
+        let series = vec![
+            Series {
+                label: "|g0-g1|_2".into(),
+                values: mean_trace(&d2),
+            },
+            Series {
+                label: "|g0-g1|_inf".into(),
+                values: mean_trace(&dinf),
+            },
+            Series {
+                label: "|g0|_2".into(),
+                values: mean_trace(&n2),
+            },
+            Series {
+                label: "max-min(g0)".into(),
+                values: mean_trace(&rng_),
+            },
+        ];
+        out += &render_series(
+            &format!("{fig}: S={s}, d=100, n=2, mean of {} seeds", opts.seeds),
+            "iter",
+            &series,
+            12,
+        );
+        // Headline check printed inline.
+        let md2 = series[0].values.iter().sum::<f64>() / series[0].values.len() as f64;
+        let mn2 = series[2].values.iter().sum::<f64>() / series[2].values.len() as f64;
+        out += &format!(
+            "shape check: mean |g0-g1|_2 / |g0|_2 = {:.3} (paper: well below 1)\n\n",
+            md2 / mn2
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e1_distance_norms_below_input_norms() {
+        let r = run(&ExpOpts::fast());
+        assert!(r.contains("Fig 1"));
+        assert!(r.contains("Fig 2"));
+        // Extract the shape checks and assert the paper's claim holds.
+        for line in r.lines().filter(|l| l.starts_with("shape check")) {
+            let ratio: f64 = line
+                .split('=')
+                .nth(1)
+                .unwrap()
+                .split_whitespace()
+                .next()
+                .unwrap()
+                .parse()
+                .unwrap();
+            assert!(ratio < 0.7, "distance/norm ratio {ratio} not < 0.7");
+        }
+    }
+}

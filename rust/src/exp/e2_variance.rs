@@ -1,0 +1,152 @@
+//! Experiment 2 (Figures 3–4): output variance of quantization methods.
+//!
+//! Distributed SGD on two machines at 3 bits/coordinate (q = 8): each
+//! iteration the quantized batch gradients are exchanged and averaged;
+//! we plot `‖EST − ∇‖²` per iteration for every method, plus the *input*
+//! variance `mean_i ‖g_i − ∇‖²`. Expected shape: LQSGD is the only method
+//! below the input variance (it achieves variance reduction); norm-based
+//! schemes can exceed it.
+
+use super::{mean_trace, render_series, ExpOpts, Series};
+use crate::coordinator::CodecSpec;
+use crate::data::gen_lsq;
+use crate::opt::dist_gd::{run_distributed_gd, GdAggregation, GdConfig};
+
+pub fn methods_q(q: u32) -> Vec<(String, GdAggregation)> {
+    vec![
+        (
+            format!("LQSGD(q={q})"),
+            GdAggregation::AllToAll(CodecSpec::Lq { q }),
+        ),
+        (
+            format!("RLQSGD(q={q})"),
+            GdAggregation::AllToAll(CodecSpec::Rlq { q }),
+        ),
+        (
+            format!("QSGD-L2(q={q})"),
+            GdAggregation::AllToAll(CodecSpec::QsgdL2 { q }),
+        ),
+        (
+            format!("QSGD-Linf(q={q})"),
+            GdAggregation::AllToAll(CodecSpec::QsgdLinf { q }),
+        ),
+        (
+            format!("Hadamard(q={q})"),
+            GdAggregation::AllToAll(CodecSpec::Hadamard { q }),
+        ),
+    ]
+}
+
+/// Input variance trace: mean_i ‖g_i − ∇_full‖² under the *exact* GD
+/// trajectory (the reference the paper compares output variance against).
+fn input_variance(samples: usize, iters: usize, seed: u64) -> Vec<f64> {
+    let ds = gen_lsq(samples, 100, seed * 10);
+    let cfg = GdConfig {
+        n_machines: 2,
+        lr: 0.8,
+        iters,
+        seed,
+        ..Default::default()
+    };
+    // Re-derive per-iteration input variance from a custom loop: reuse the
+    // Exact driver's recorded ‖g0−g1‖₂ as a proxy is not exact, so
+    // recompute directly here.
+    let mut w = vec![0.0; ds.dim()];
+    let mut rng = crate::rng::Rng::new(crate::rng::hash2(seed, 0xDA7A));
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let parts = ds.partition(2, &mut rng);
+        let g0 = ds.batch_gradient(&w, &parts[0]);
+        let g1 = ds.batch_gradient(&w, &parts[1]);
+        let full = ds.full_gradient(&w);
+        let v = (crate::linalg::dist2(&g0, &full).powi(2)
+            + crate::linalg::dist2(&g1, &full).powi(2))
+            / 2.0;
+        out.push(v);
+        let est = crate::linalg::mean_vecs(&[g0, g1]);
+        crate::linalg::axpy(&mut w, -cfg.lr, &est);
+        let _ = &cfg;
+    }
+    out
+}
+
+pub fn run(opts: &ExpOpts) -> String {
+    let q = 8;
+    let mut out = String::from("# E2 — output variance at 3 bits/coordinate (Figs 3-4)\n\n");
+    for (fig, samples) in [("Fig 3 (fewer samples)", 8192), ("Fig 4 (more samples)", 32768)] {
+        let s = opts.samples(samples);
+        let iters = opts.iters(40);
+        let mut series = Vec::new();
+        // Input variance reference line.
+        let inp: Vec<Vec<f64>> = (0..opts.seeds as u64)
+            .map(|seed| input_variance(s, iters, seed))
+            .collect();
+        series.push(Series {
+            label: "input var".into(),
+            values: mean_trace(&inp),
+        });
+        for (label, agg) in methods_q(q) {
+            let traces: Vec<Vec<f64>> = (0..opts.seeds as u64)
+                .map(|seed| {
+                    let ds = gen_lsq(s, 100, seed * 10);
+                    let cfg = GdConfig {
+                        n_machines: 2,
+                        lr: 0.8,
+                        iters,
+                        seed,
+                        y0: 1.0,
+                        ..Default::default()
+                    };
+                    run_distributed_gd(&ds, &agg, &cfg).output_err2
+                })
+                .collect();
+            series.push(Series {
+                label,
+                values: mean_trace(&traces),
+            });
+        }
+        out += &render_series(
+            &format!("{fig}: S={s}, d=100, q={q}, mean of {} seeds", opts.seeds),
+            "iter",
+            &series,
+            12,
+        );
+        // Shape check: LQSGD mean variance below input variance.
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        let tail = |v: &[f64]| mean(&v[v.len() / 2..]);
+        let inp_m = tail(&series[0].values);
+        let lq_m = tail(&series[1].values);
+        let qs_m = tail(&series[3].values);
+        out += &format!(
+            "shape check (2nd-half means): LQSGD {:.3e} < input {:.3e} ; QSGD-L2 {:.3e}\n\n",
+            lq_m, inp_m, qs_m
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e2_lqsgd_achieves_variance_reduction() {
+        let opts = ExpOpts {
+            scale: 0.25,
+            seeds: 2,
+            out_dir: None,
+        };
+        let r = run(&opts);
+        for line in r.lines().filter(|l| l.starts_with("shape check")) {
+            // parse "LQSGD <a> < input <b> ; QSGD-L2 <c>"
+            let nums: Vec<f64> = line
+                .split_whitespace()
+                .filter_map(|t| t.trim_end_matches(';').parse().ok())
+                .collect();
+            assert!(nums.len() >= 3, "line: {line}");
+            let (lq, inp, qs) = (nums[0], nums[1], nums[2]);
+            assert!(lq < inp, "LQSGD {lq} must beat input variance {inp}");
+            assert!(lq < qs, "LQSGD {lq} must beat QSGD {qs}");
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Experiment 3 (Figures 5–6): convergence under quantized gradients.
+//!
+//! Same setup as E2 but now the quantized average *drives* the SGD update
+//! (lr = 0.8, the paper's deliberately high rate to expose quantization
+//! noise). Expected shape: LQSGD/RLQSGD track the naive-averaging curve;
+//! norm-based schemes converge slower or stall.
+
+use super::{mean_trace, render_series, ExpOpts, Series};
+use crate::data::gen_lsq;
+use crate::opt::dist_gd::{run_distributed_gd, GdAggregation, GdConfig};
+
+pub fn run(opts: &ExpOpts) -> String {
+    let q = 8;
+    let mut out = String::from("# E3 — convergence at 3 bits/coordinate (Figs 5-6)\n\n");
+    for (fig, samples) in [("Fig 5 (fewer samples)", 8192), ("Fig 6 (more samples)", 32768)] {
+        let s = opts.samples(samples);
+        let iters = opts.iters(40);
+        let mut series = Vec::new();
+        let mut methods: Vec<(String, GdAggregation)> =
+            vec![("naive avg".into(), GdAggregation::Exact)];
+        methods.extend(super::e2_variance::methods_q(q));
+        for (label, agg) in methods {
+            let traces: Vec<Vec<f64>> = (0..opts.seeds as u64)
+                .map(|seed| {
+                    let ds = gen_lsq(s, 100, seed * 10);
+                    let cfg = GdConfig {
+                        n_machines: 2,
+                        lr: 0.8,
+                        iters,
+                        seed,
+                        y0: 1.0,
+                        ..Default::default()
+                    };
+                    run_distributed_gd(&ds, &agg, &cfg).loss
+                })
+                .collect();
+            series.push(Series {
+                label,
+                values: mean_trace(&traces),
+            });
+        }
+        out += &render_series(
+            &format!("{fig}: S={s}, d=100, q={q}, lr=0.8, loss, mean of {} seeds", opts.seeds),
+            "iter",
+            &series,
+            12,
+        );
+        let last = |i: usize| *series[i].values.last().unwrap();
+        out += &format!(
+            "shape check (final loss): naive {:.3e}, LQSGD {:.3e}, QSGD-L2 {:.3e}\n\n",
+            last(0),
+            last(1),
+            last(3)
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e3_lqsgd_converges_like_naive() {
+        let opts = ExpOpts {
+            scale: 0.25,
+            seeds: 2,
+            out_dir: None,
+        };
+        let r = run(&opts);
+        for line in r.lines().filter(|l| l.starts_with("shape check")) {
+            let nums: Vec<f64> = line
+                .split_whitespace()
+                .filter_map(|t| t.trim_end_matches(',').parse().ok())
+                .collect();
+            let (naive, lq, qs) = (nums[0], nums[1], nums[2]);
+            assert!(
+                lq <= naive * 10.0 + 1e-6,
+                "LQSGD {lq} should track naive {naive}"
+            );
+            assert!(lq < qs, "LQSGD {lq} must out-converge QSGD {qs}");
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Experiment 6 (Figure 11): Local SGD with compressed model deltas.
+//!
+//! Workers average every 10 local steps; the transmitted model deltas are
+//! compressed with RLQSGD vs QSGD vs Hadamard vs uncompressed. Two
+//! panels: convergence (left) and quantization error (right).
+
+use super::{mean_trace, render_series, ExpOpts, Series};
+use crate::coordinator::CodecSpec;
+use crate::data::gen_lsq;
+use crate::opt::local_sgd::{run_local_sgd, LocalSgdConfig};
+
+pub fn run(opts: &ExpOpts) -> String {
+    let q = 16;
+    let mut out = String::from("# E6 — Local SGD with compressed deltas (Fig 11)\n\n");
+    let samples = opts.samples(8192);
+    let rounds = opts.iters(40);
+    let methods: Vec<(String, Option<CodecSpec>)> = vec![
+        ("uncompressed".into(), None),
+        (format!("RLQSGD(q={q})"), Some(CodecSpec::Rlq { q })),
+        (format!("LQSGD(q={q})"), Some(CodecSpec::Lq { q })),
+        (format!("QSGD-L2(q={q})"), Some(CodecSpec::QsgdL2 { q })),
+        (format!("Hadamard(q={q})"), Some(CodecSpec::Hadamard { q })),
+    ];
+    let mut loss_series = Vec::new();
+    let mut err_series = Vec::new();
+    for (label, spec) in methods {
+        let mut losses = Vec::new();
+        let mut errs = Vec::new();
+        for seed in 0..opts.seeds as u64 {
+            let ds = gen_lsq(samples, 100, seed * 10);
+            let cfg = LocalSgdConfig {
+                n_machines: 2,
+                lr: 0.02,
+                local_steps: 10,
+                rounds,
+                batch: 256,
+                seed,
+                y0: 0.5,
+                ..Default::default()
+            };
+            let t = run_local_sgd(&ds, spec, &cfg);
+            losses.push(t.loss);
+            errs.push(t.quant_err);
+        }
+        loss_series.push(Series {
+            label: label.clone(),
+            values: mean_trace(&losses),
+        });
+        err_series.push(Series {
+            label,
+            values: mean_trace(&errs),
+        });
+    }
+    out += &render_series(
+        &format!(
+            "Fig 11 left: Local SGD loss (S={samples}, d=100, avg every 10 steps, {} seeds)",
+            opts.seeds
+        ),
+        "round",
+        &loss_series,
+        12,
+    );
+    out += &render_series(
+        "Fig 11 right: quantization error ‖mean Δ̂ − mean Δ‖₂",
+        "round",
+        &err_series,
+        12,
+    );
+    let tail = |s: &Series| {
+        let v = &s.values;
+        v[v.len() / 2..].iter().sum::<f64>() / (v.len() - v.len() / 2) as f64
+    };
+    out += &format!(
+        "shape check (quant err, 2nd half): RLQSGD {:.3e}, LQSGD {:.3e}, QSGD-L2 {:.3e}, Hadamard {:.3e}\n\n",
+        tail(&err_series[1]),
+        tail(&err_series[2]),
+        tail(&err_series[3]),
+        tail(&err_series[4])
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e6_lattice_quant_error_below_norm_based() {
+        let opts = ExpOpts {
+            scale: 0.2,
+            seeds: 1,
+            out_dir: None,
+        };
+        let r = run(&opts);
+        for line in r.lines().filter(|l| l.starts_with("shape check")) {
+            let nums: Vec<f64> = line
+                .split_whitespace()
+                .filter_map(|t| t.trim_end_matches(',').parse().ok())
+                .collect();
+            let (rlq, lq, qs) = (nums[0], nums[1], nums[2]);
+            assert!(
+                rlq.min(lq) < qs,
+                "lattice err (rlq {rlq}, lq {lq}) must beat QSGD {qs}"
+            );
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Experiment 8 (Figures 14–16): distributed power iteration.
+//!
+//! S = 8192, d = 128, q = 64 (6 bits/coordinate); the first two
+//! eigenvalues are large and comparable so convergence is slow enough to
+//! expose quantization. Three panels per figure: relevant norms (left),
+//! convergence 1−|⟨x,v₁⟩| (center), quantization error (right).
+//! Fig 14: principal direction e₂; Fig 15: random direction; Fig 16:
+//! 8 workers.
+
+use super::{mean_trace, render_series, ExpOpts, Series};
+use crate::coordinator::CodecSpec;
+use crate::data::gen_power_matrix;
+use crate::opt::power_iteration::{run_power_iteration, PowerConfig};
+
+fn panel(
+    opts: &ExpOpts,
+    title: &str,
+    n_machines: usize,
+    random_dirs: bool,
+) -> String {
+    let q = 64;
+    // Rows must split evenly across machines.
+    let samples = (opts.samples(8192) / n_machines.max(8)) * n_machines.max(8);
+    let d = 128;
+    let iters = opts.iters(50);
+    let methods: Vec<(String, Option<CodecSpec>)> = vec![
+        ("baseline".into(), None),
+        (format!("LQSGD(q={q})"), Some(CodecSpec::Lq { q })),
+        (format!("RLQSGD(q={q})"), Some(CodecSpec::Rlq { q })),
+        (format!("QSGD-L2(q={q})"), Some(CodecSpec::QsgdL2 { q })),
+        (format!("Hadamard(q={q})"), Some(CodecSpec::Hadamard { q })),
+    ];
+
+    let mut out = String::new();
+    // Norms panel from the baseline run.
+    let mut norm_dist = Vec::new();
+    let mut norm_range = Vec::new();
+    let mut conv_series = Vec::new();
+    let mut err_series = Vec::new();
+    for (label, spec) in &methods {
+        let mut conv = Vec::new();
+        let mut qerr = Vec::new();
+        for seed in 0..opts.seeds as u64 {
+            let (m, v1) =
+                gen_power_matrix(samples, d, &[10.0, 8.5, 2.0], random_dirs, 500 + seed);
+            let cfg = PowerConfig {
+                n_machines,
+                iters,
+                seed,
+                y0: 2.0 * samples as f64 / n_machines as f64 / 100.0,
+                ..Default::default()
+            };
+            let t = run_power_iteration(&m, &v1, *spec, &cfg);
+            if spec.is_none() {
+                norm_dist.push(t.u_dist_inf.clone());
+                norm_range.push(t.u_range.clone());
+            }
+            conv.push(t.angle_err);
+            qerr.push(t.quant_err);
+        }
+        conv_series.push(Series {
+            label: label.clone(),
+            values: mean_trace(&conv),
+        });
+        if spec.is_some() {
+            err_series.push(Series {
+                label: label.clone(),
+                values: mean_trace(&qerr),
+            });
+        }
+    }
+    out += &render_series(
+        &format!("{title} — left: norms (baseline trajectory)"),
+        "iter",
+        &[
+            Series {
+                label: "|u0-u1|_inf".into(),
+                values: mean_trace(&norm_dist),
+            },
+            Series {
+                label: "max-min(u0)".into(),
+                values: mean_trace(&norm_range),
+            },
+        ],
+        10,
+    );
+    out += &render_series(
+        &format!("{title} — center: convergence 1-|<x,v1>|"),
+        "iter",
+        &conv_series,
+        10,
+    );
+    out += &render_series(
+        &format!("{title} — right: quantization error"),
+        "iter",
+        &err_series,
+        10,
+    );
+    let last = |s: &Series| *s.values.last().unwrap();
+    out += &format!(
+        "shape check (final angle err): baseline {:.3e}, LQSGD {:.3e}, RLQSGD {:.3e}, QSGD-L2 {:.3e}\n\n",
+        last(&conv_series[0]),
+        last(&conv_series[1]),
+        last(&conv_series[2]),
+        last(&conv_series[3])
+    );
+    out
+}
+
+pub fn run(opts: &ExpOpts) -> String {
+    let mut out = String::from("# E8 — distributed power iteration (Figs 14-16)\n\n");
+    out += &panel(opts, "Fig 14: principal = e2, 2 workers", 2, false);
+    out += &panel(opts, "Fig 15: principal = random, 2 workers", 2, true);
+    out += &panel(opts, "Fig 16: 8 workers", 8, true);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e8_lattice_tracks_baseline() {
+        let opts = ExpOpts {
+            scale: 0.15,
+            seeds: 1,
+            out_dir: None,
+        };
+        let r = panel(&opts, "t", 2, false);
+        let line = r
+            .lines()
+            .find(|l| l.starts_with("shape check"))
+            .expect("shape check line");
+        let nums: Vec<f64> = line
+            .split_whitespace()
+            .filter_map(|t| t.trim_end_matches(',').parse().ok())
+            .collect();
+        let (base, lq, _rlq, qs) = (nums[0], nums[1], nums[2], nums[3]);
+        assert!(
+            lq < base + 0.2,
+            "LQ angle {lq} should be near baseline {base}"
+        );
+        assert!(lq <= qs * 2.0 + 1e-9, "LQ {lq} should not lose badly to QSGD {qs}");
+    }
+}

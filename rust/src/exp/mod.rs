@@ -1,0 +1,218 @@
+//! Experiment harness — regenerates every figure and table of the paper's
+//! Section 9 (see DESIGN.md §3 for the index).
+//!
+//! Each `eN::run(&ExpOpts)` returns a plain-text report with the same
+//! rows/series the paper plots; `dme exp N` prints it and writes
+//! `results/eN.txt`. Absolute values differ from the paper's testbed; the
+//! *shape* (who wins, by what factor, where crossovers fall) is the
+//! reproduction target.
+
+pub mod ablation;
+pub mod e1_norms;
+pub mod e2_variance;
+pub mod e3_convergence;
+pub mod e4_sublinear;
+pub mod e5_cpusmall;
+pub mod e6_local_sgd;
+pub mod e7_nn;
+pub mod e8_power;
+pub mod tradeoff;
+
+use std::fmt::Write as _;
+
+/// Options shared by the experiment drivers.
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    /// Scale factor: 1.0 = paper-size workloads; smaller for smoke runs.
+    pub scale: f64,
+    pub seeds: usize,
+    pub out_dir: Option<String>,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            scale: 1.0,
+            seeds: 5,
+            out_dir: Some("results".to_string()),
+        }
+    }
+}
+
+impl ExpOpts {
+    pub fn fast() -> Self {
+        ExpOpts {
+            scale: 0.1,
+            seeds: 2,
+            out_dir: None,
+        }
+    }
+
+    /// Scale a sample count (power-of-two floor, min 64).
+    pub fn samples(&self, full: usize) -> usize {
+        (((full as f64) * self.scale) as usize).max(64)
+    }
+
+    /// Scale an iteration count (min 5).
+    pub fn iters(&self, full: usize) -> usize {
+        (((full as f64) * self.scale) as usize).max(5)
+    }
+}
+
+/// A labelled series (one figure line).
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub values: Vec<f64>,
+}
+
+/// Render aligned series as a column table, one row per iteration
+/// (sub-sampled to ≤ `max_rows` rows for readability).
+pub fn render_series(title: &str, x_label: &str, series: &[Series], max_rows: usize) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "## {title}");
+    let n = series.iter().map(|s| s.values.len()).max().unwrap_or(0);
+    let step = (n / max_rows.max(1)).max(1);
+    let _ = write!(out, "{:>6}", x_label);
+    for s in series {
+        let _ = write!(out, "  {:>18}", truncate(&s.label, 18));
+    }
+    let _ = writeln!(out);
+    let mut i = 0;
+    while i < n {
+        let _ = write!(out, "{i:>6}");
+        for s in series {
+            match s.values.get(i) {
+                Some(v) => {
+                    let _ = write!(out, "  {v:>18.6e}");
+                }
+                None => {
+                    let _ = write!(out, "  {:>18}", "-");
+                }
+            }
+        }
+        let _ = writeln!(out);
+        if i + step > n - 1 && i != n - 1 {
+            i = n - 1; // always include the last row
+        } else {
+            i += step;
+        }
+    }
+    out.push('\n');
+    out
+}
+
+/// Render a simple key/value row table.
+pub fn render_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "## {title}");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    for (h, w) in headers.iter().zip(&widths) {
+        let _ = write!(out, "{h:>w$}  ", w = w);
+    }
+    let _ = writeln!(out);
+    for row in rows {
+        for (cell, w) in row.iter().zip(&widths) {
+            let _ = write!(out, "{cell:>w$}  ", w = w);
+        }
+        let _ = writeln!(out);
+    }
+    out.push('\n');
+    out
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        s[..n].to_string()
+    }
+}
+
+/// Element-wise mean of several equally-long traces.
+pub fn mean_trace(traces: &[Vec<f64>]) -> Vec<f64> {
+    if traces.is_empty() {
+        return Vec::new();
+    }
+    let n = traces.iter().map(|t| t.len()).min().unwrap();
+    (0..n)
+        .map(|i| traces.iter().map(|t| t[i]).sum::<f64>() / traces.len() as f64)
+        .collect()
+}
+
+/// Write a report to `results/<name>.txt` when an out dir is configured.
+pub fn save_report(opts: &ExpOpts, name: &str, report: &str) {
+    if let Some(dir) = &opts.out_dir {
+        let _ = std::fs::create_dir_all(dir);
+        let path = format!("{dir}/{name}.txt");
+        if std::fs::write(&path, report).is_ok() {
+            eprintln!("[saved {path}]");
+        }
+    }
+}
+
+/// Run an experiment by id ("1".."8", "tradeoff"); returns the report.
+pub fn run(id: &str, opts: &ExpOpts) -> Option<String> {
+    let report = match id {
+        "1" => e1_norms::run(opts),
+        "2" => e2_variance::run(opts),
+        "3" => e3_convergence::run(opts),
+        "4" => e4_sublinear::run(opts),
+        "5" => e5_cpusmall::run(opts),
+        "6" => e6_local_sgd::run(opts),
+        "7" => e7_nn::run(opts),
+        "8" => e8_power::run(opts),
+        "tradeoff" | "9" => tradeoff::run(opts),
+        "ablation" => ablation::run(opts),
+        _ => return None,
+    };
+    let name = match id {
+        "tradeoff" | "9" => "tradeoff".to_string(),
+        "ablation" => "ablation".to_string(),
+        _ => format!("e{id}"),
+    };
+    save_report(opts, &name, &report);
+    Some(report)
+}
+
+pub const ALL_IDS: &[&str] = &[
+    "1", "2", "3", "4", "5", "6", "7", "8", "tradeoff", "ablation",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_series_includes_last_row() {
+        let s = vec![Series {
+            label: "a".into(),
+            values: (0..100).map(|i| i as f64).collect(),
+        }];
+        let r = render_series("t", "it", &s, 10);
+        assert!(r.contains("99"));
+        assert!(r.lines().count() < 20);
+    }
+
+    #[test]
+    fn mean_trace_averages() {
+        let m = mean_trace(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn render_table_aligns() {
+        let t = render_table(
+            "T",
+            &["method", "acc"],
+            &[vec!["LQSGD".into(), "0.95".into()]],
+        );
+        assert!(t.contains("LQSGD"));
+        assert!(t.contains("acc"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Bits ↔ variance trade-off — the empirical face of Theorems 2/6.
+//!
+//! Sweeps q over the star and tree topologies at fixed inputs and
+//! reports, per q: exact max bits sent/received by any machine, measured
+//! output variance `E‖EST − μ‖²`, the upper-bound model `49·s²·d`
+//! (per-coordinate uniform error through two quantization stages), and
+//! the lower-bound shape `Ω(y² 2^{−2b/d})` (Theorem 38). Expected shape:
+//! measured variance decays ~1/q² per ℓ∞ coordinate (the paper states
+//! O(y²/q) after normalizing b = d log q; both bounds bracket the
+//! measurement).
+
+use super::{render_table, ExpOpts};
+use crate::coordinator::{mean_estimation_star, mean_estimation_tree, CodecSpec};
+use crate::linalg::{dist2, mean_vecs};
+use crate::rng::Rng;
+
+pub fn run(opts: &ExpOpts) -> String {
+    let d = 64;
+    let n = 8;
+    let y = 1.0;
+    let trials = (20.0 * opts.scale.max(0.05)).ceil() as u64 * 5;
+    let mut out = String::from("# Tradeoff — bits vs output variance (Theorems 2/6 shape)\n\n");
+
+    // Fixed inputs centered far from the origin.
+    let mut rng = Rng::new(99);
+    let inputs: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            (0..d)
+                .map(|_| 250.0 + rng.uniform(-y / 2.0, y / 2.0))
+                .collect()
+        })
+        .collect();
+    let mu = mean_vecs(&inputs);
+
+    let mut rows = Vec::new();
+    for q in [4u32, 8, 16, 32, 64, 128] {
+        // Star topology measurements.
+        let mut var_star = 0.0;
+        let mut bits_star = 0u64;
+        for t in 0..trials {
+            let o = mean_estimation_star(&inputs, &CodecSpec::Lq { q }, y, 7, t);
+            var_star += dist2(o.estimate(), &mu).powi(2);
+            bits_star = bits_star.max(
+                o.traffic
+                    .iter()
+                    .map(|tr| tr.sent_bits + tr.recv_bits)
+                    .max()
+                    .unwrap(),
+            );
+        }
+        var_star /= trials as f64;
+        // Tree topology.
+        let mut var_tree = 0.0;
+        let mut bits_tree = 0u64;
+        for t in 0..trials {
+            let o = mean_estimation_tree(&inputs, q as usize, y, 8, t);
+            var_tree += dist2(o.estimate(), &mu).powi(2);
+            bits_tree = bits_tree.max(
+                o.traffic
+                    .iter()
+                    .map(|tr| tr.sent_bits + tr.recv_bits)
+                    .max()
+                    .unwrap(),
+            );
+        }
+        var_tree /= trials as f64;
+
+        // Models.
+        let s = 2.0 * y / (q as f64 - 1.0);
+        let ub_model = 2.0 * d as f64 * s * s / 12.0; // two quantization stages
+        let b = bits_star as f64;
+        let lb_model = y * y * (2f64).powf(-2.0 * b / d as f64);
+        rows.push(vec![
+            format!("{q}"),
+            format!("{bits_star}"),
+            format!("{var_star:.3e}"),
+            format!("{bits_tree}"),
+            format!("{var_tree:.3e}"),
+            format!("{ub_model:.3e}"),
+            format!("{lb_model:.3e}"),
+        ]);
+    }
+    out += &render_table(
+        &format!("n={n}, d={d}, y={y}, {trials} trials; bits = max over machines (sent+recv)"),
+        &[
+            "q",
+            "star bits",
+            "star var",
+            "tree bits",
+            "tree var",
+            "UB model",
+            "LB shape",
+        ],
+        &rows,
+    );
+    out += "expected: star var ≈ UB model, halves ~4x per q doubling; LB shape decays much faster (it is the info-theoretic floor at that many bits).\n";
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variance_decreases_monotonically_in_q() {
+        let opts = ExpOpts {
+            scale: 0.2,
+            seeds: 1,
+            out_dir: None,
+        };
+        let r = run(&opts);
+        let vars: Vec<f64> = r
+            .lines()
+            .filter(|l| {
+                l.trim_start()
+                    .chars()
+                    .next()
+                    .map_or(false, |c| c.is_ascii_digit())
+            })
+            .map(|l| {
+                l.split_whitespace()
+                    .nth(2)
+                    .unwrap()
+                    .parse::<f64>()
+                    .unwrap()
+            })
+            .collect();
+        assert!(vars.len() >= 4);
+        for w in vars.windows(2) {
+            assert!(w[1] < w[0] * 1.2, "variance should trend down: {vars:?}");
+        }
+        // Roughly 4x drop per q doubling (1/q² per coordinate).
+        assert!(vars[0] / vars[2] > 4.0, "{vars:?}");
+    }
+}

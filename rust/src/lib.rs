@@ -1,0 +1,46 @@
+//! # dme — Lattice-based Distributed Mean Estimation and Variance Reduction
+//!
+//! Reproduction of *"New Bounds For Distributed Mean Estimation and Variance
+//! Reduction"* (Davies, Gurunathan, Moshrefi, Ashkboos, Alistarh — ICLR 2021)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas, build time)** — the quantization hot-spot (cubic
+//!   lattice encode/decode, fast Walsh–Hadamard transform) as Pallas kernels,
+//!   validated against a pure-`jnp` oracle.
+//! * **Layer 2 (JAX, build time)** — compute graphs (least-squares batch
+//!   gradients, power-iteration updates, MLP training steps, fused
+//!   rotate+encode pipelines) lowered once to HLO text by
+//!   `python/compile/aot.py`.
+//! * **Layer 3 (Rust, run time)** — this crate: the distributed coordinator
+//!   (star / binary-tree topologies with exact bit accounting), the full
+//!   quantization library (including every baseline the paper compares
+//!   against), and the PJRT runtime that loads the AOT artifacts. Python is
+//!   never on the request path.
+//!
+//! The public API is organized as:
+//!
+//! * [`quant`] — quantizers: `LatticeQuantizer` (LQSGD), `RotatedLattice`
+//!   (RLQSGD), robust/error-detecting agreement, the sublinear scheme, and
+//!   baselines (QSGD, Suresh–Hadamard, vQSGD, EF-SignSGD, PowerSGD, TernGrad,
+//!   Top-K).
+//! * [`coordinator`] — the paper's algorithms 3–6 over a simulated
+//!   message-passing cluster.
+//! * [`sim`] — the in-process distributed substrate (threads + channels with
+//!   exact per-machine bit metering).
+//! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
+//! * [`data`], [`opt`] — workload substrates (datasets, SGD/local-SGD/power
+//!   iteration drivers).
+//! * [`exp`] — the benchmark harness regenerating every figure and table of
+//!   the paper's Section 9.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod linalg;
+pub mod opt;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod sim;

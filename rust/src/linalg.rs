@@ -1,0 +1,278 @@
+//! Small dense linear-algebra substrate.
+//!
+//! The experiments need matvecs, Gram products and norms over modest
+//! matrices (≤ 32768 × 256). The offline build has no BLAS crate, so this
+//! module provides a compact row-major implementation tuned enough (tiled
+//! transpose-matvec, fused residual updates) that the workload generators
+//! never dominate an experiment run.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(&row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// View of a contiguous row range `[lo, hi)` as a sub-matrix.
+    pub fn row_block(&self, lo: usize, hi: usize) -> Matrix {
+        Matrix {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+        y
+    }
+
+    /// y = Aᵀ x (single pass over A, accumulating rows — cache friendly).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for (yj, aij) in y.iter_mut().zip(row) {
+                *yj += xi * aij;
+            }
+        }
+        y
+    }
+
+    /// Gram product u = Aᵀ (A v) without materializing A v twice.
+    pub fn gram_apply(&self, v: &[f64]) -> Vec<f64> {
+        let av = self.matvec(v);
+        self.matvec_t(&av)
+    }
+
+    /// C = A B (small sizes only; used by PowerSGD factors).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self.data[i * self.cols + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[k * b.cols..(k + 1) * b.cols];
+                let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+        c
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled for ILP; the compiler auto-vectorizes this shape well.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// a + b.
+pub fn add(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// a - b.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// c * a.
+pub fn scale(a: &[f64], c: f64) -> Vec<f64> {
+    a.iter().map(|x| c * x).collect()
+}
+
+/// y += c * x (in place).
+pub fn axpy(y: &mut [f64], c: f64, x: &[f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += c * xi;
+    }
+}
+
+/// ℓ2 norm.
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// ℓ2 distance.
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// ℓ∞ norm.
+pub fn norm_inf(a: &[f64]) -> f64 {
+    a.iter().fold(0.0, |m, x| m.max(x.abs()))
+}
+
+/// ℓ∞ distance.
+pub fn dist_inf(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).fold(0.0, |m, (x, y)| m.max((x - y).abs()))
+}
+
+/// ℓ1 norm.
+pub fn norm1(a: &[f64]) -> f64 {
+    a.iter().map(|x| x.abs()).sum()
+}
+
+/// max(a) - min(a) — the "coordinate difference" QSGD-Linf uses (Exp 1).
+pub fn coord_range(a: &[f64]) -> f64 {
+    let mx = a.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mn = a.iter().cloned().fold(f64::INFINITY, f64::min);
+    mx - mn
+}
+
+/// Mean of several equally-long vectors.
+pub fn mean_vecs(vs: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!vs.is_empty());
+    let d = vs[0].len();
+    let mut m = vec![0.0; d];
+    for v in vs {
+        axpy(&mut m, 1.0, v);
+    }
+    scale(&m, 1.0 / vs.len() as f64)
+}
+
+/// Normalize to unit ℓ2 norm (returns zero vector unchanged).
+pub fn normalize(a: &[f64]) -> Vec<f64> {
+    let n = norm2(a);
+    if n == 0.0 {
+        a.to_vec()
+    } else {
+        scale(a, 1.0 / n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..13).map(|i| i as f64 * 0.5).collect();
+        let b: Vec<f64> = (0..13).map(|i| 13.0 - i as f64).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let m = Matrix::from_rows(vec![
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+        ]);
+        let x = vec![7.0, 9.0];
+        let direct = m.matvec_t(&x);
+        let via_t = m.transpose().matvec(&x);
+        for (a, b) in direct.iter().zip(&via_t) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gram_apply_matches_composition() {
+        let m = Matrix::from_rows(vec![
+            vec![1.0, -1.0],
+            vec![2.0, 0.5],
+            vec![0.0, 3.0],
+        ]);
+        let v = vec![0.3, -0.7];
+        let g = m.gram_apply(&v);
+        let expect = m.matvec_t(&m.matvec(&v));
+        for (a, b) in g.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let i = Matrix::from_rows(vec![vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let c = a.matmul(&i);
+        assert_eq!(c.data, a.data);
+    }
+
+    #[test]
+    fn norms() {
+        let a = vec![3.0, -4.0];
+        assert!((norm2(&a) - 5.0).abs() < 1e-12);
+        assert!((norm1(&a) - 7.0).abs() < 1e-12);
+        assert!((norm_inf(&a) - 4.0).abs() < 1e-12);
+        assert!((coord_range(&a) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_vecs_simple() {
+        let m = mean_vecs(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m, vec![2.0, 3.0]);
+    }
+}

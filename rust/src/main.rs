@@ -1,0 +1,210 @@
+//! `dme` — CLI for the lattice-DME reproduction.
+//!
+//! Subcommands:
+//!   dme exp <1..8|tradeoff|all> [scale=<f>] [seeds=<n>]   regenerate figures/tables
+//!   dme me  [n=..] [d=..] [q=..] [seed=..]                one MeanEstimation round (star+tree)
+//!   dme vr  [n=..] [d=..] [q=..] [seed=..]                robust VarianceReduction round
+//!   dme runtime [graph=<name>]                            PJRT artifact smoke check
+//!   dme info                                              artifact + config summary
+
+use dme::config::RunConfig;
+use dme::coordinator::{
+    mean_estimation_star, mean_estimation_tree, robust_variance_reduction, CodecSpec,
+};
+use dme::exp::{self, ExpOpts};
+use dme::rng::Rng;
+use dme::sim::summarize;
+
+fn parse_kv(args: &[String]) -> Vec<(String, String)> {
+    args.iter()
+        .filter_map(|a| a.split_once('=').map(|(k, v)| (k.to_string(), v.to_string())))
+        .collect()
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: dme <command>\n\
+         \n\
+         commands:\n\
+         \x20 exp <1..8|tradeoff|all> [scale=1.0] [seeds=5]   regenerate paper figures/tables\n\
+         \x20 me  [n=8] [d=64] [q=16] [seed=0]                MeanEstimation round, star + tree\n\
+         \x20 vr  [n=8] [d=64] [q=16] [seed=0]                robust VarianceReduction round\n\
+         \x20 runtime [graph=lattice_encode_d128_q8]          PJRT artifact smoke check\n\
+         \x20 info                                            artifact + config summary"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "exp" => cmd_exp(&args[1..]),
+        "me" => cmd_me(&args[1..]),
+        "vr" => cmd_vr(&args[1..]),
+        "runtime" => cmd_runtime(&args[1..]),
+        "info" => cmd_info(),
+        _ => usage(),
+    }
+}
+
+fn cmd_exp(args: &[String]) {
+    let id = args.first().map(String::as_str).unwrap_or("all");
+    let mut opts = ExpOpts::default();
+    for (k, v) in parse_kv(args) {
+        match k.as_str() {
+            "scale" => opts.scale = v.parse().unwrap_or(1.0),
+            "seeds" => opts.seeds = v.parse().unwrap_or(5),
+            "out" => opts.out_dir = Some(v),
+            _ => {}
+        }
+    }
+    let ids: Vec<&str> = if id == "all" {
+        exp::ALL_IDS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        match exp::run(id, &opts) {
+            Some(report) => println!("{report}"),
+            None => {
+                eprintln!("unknown experiment '{id}'");
+                usage();
+            }
+        }
+    }
+}
+
+fn build_cfg(args: &[String]) -> RunConfig {
+    let mut cfg = RunConfig {
+        n_machines: 8,
+        dim: 64,
+        q: 16,
+        ..Default::default()
+    };
+    for (k, v) in parse_kv(args) {
+        if let Err(e) = cfg.apply(&k, &v) {
+            eprintln!("{e}");
+            usage();
+        }
+    }
+    cfg
+}
+
+fn gen_inputs(cfg: &RunConfig, spread: f64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(cfg.seed);
+    (0..cfg.n_machines)
+        .map(|_| {
+            (0..cfg.dim)
+                .map(|_| 100.0 + rng.uniform(-spread / 2.0, spread / 2.0))
+                .collect()
+        })
+        .collect()
+}
+
+fn cmd_me(args: &[String]) {
+    let cfg = build_cfg(args);
+    let y = 1.0;
+    let inputs = gen_inputs(&cfg, y);
+    let mu = dme::linalg::mean_vecs(&inputs);
+
+    let star = mean_estimation_star(&inputs, &CodecSpec::Lq { q: cfg.q }, y, cfg.seed, 0);
+    let s = summarize(&star.traffic);
+    println!(
+        "star : leader={} err2={:.3e} max_sent={}b max_recv={}b mean_sent={:.0}b",
+        star.leader,
+        dme::linalg::dist2(star.estimate(), &mu).powi(2),
+        s.max_sent,
+        s.max_recv,
+        s.mean_sent
+    );
+
+    let tree = mean_estimation_tree(&inputs, cfg.n_machines, y, cfg.seed, 0);
+    let s = summarize(&tree.traffic);
+    println!(
+        "tree : q_used={} err2={:.3e} max_sent={}b max_recv={}b mean_sent={:.0}b",
+        tree.q_used,
+        dme::linalg::dist2(tree.estimate(), &mu).powi(2),
+        s.max_sent,
+        s.max_recv,
+        s.mean_sent
+    );
+}
+
+fn cmd_vr(args: &[String]) {
+    let cfg = build_cfg(args);
+    let sigma = 1.0;
+    let mut rng = Rng::new(cfg.seed);
+    let nabla: Vec<f64> = (0..cfg.dim).map(|_| 100.0 + rng.next_gaussian()).collect();
+    let inputs: Vec<Vec<f64>> = (0..cfg.n_machines)
+        .map(|_| {
+            nabla
+                .iter()
+                .map(|v| v + sigma / (cfg.dim as f64).sqrt() * rng.next_gaussian())
+                .collect()
+        })
+        .collect();
+    let out = robust_variance_reduction(&inputs, sigma, cfg.q, cfg.seed, 0);
+    let s = summarize(&out.traffic);
+    let in_var = dme::linalg::dist2(&inputs[0], &nabla).powi(2);
+    let out_var = dme::linalg::dist2(&out.estimate, &nabla).powi(2);
+    println!(
+        "robust-vr: leader={} input_err2={:.3e} output_err2={:.3e} (reduction {:.1}x)",
+        out.leader,
+        in_var,
+        out_var,
+        in_var / out_var.max(1e-300)
+    );
+    println!(
+        "traffic  : max_sent={}b max_recv={}b mean_sent={:.0}b stage1_rounds={:?}",
+        s.max_sent, s.max_recv, s.mean_sent, out.rounds_stage1
+    );
+}
+
+fn cmd_runtime(args: &[String]) {
+    let kv = parse_kv(args);
+    let graph = kv
+        .iter()
+        .find(|(k, _)| k == "graph")
+        .map(|(_, v)| v.clone())
+        .unwrap_or_else(|| "lattice_encode_d128_q8".to_string());
+    match dme::runtime::Engine::discover() {
+        Err(e) => {
+            eprintln!("runtime unavailable: {e}");
+            std::process::exit(1);
+        }
+        Ok(eng) => {
+            println!("platform: {}", eng.platform());
+            println!("artifacts: {}", eng.manifest.specs.len());
+            let g = eng.load(&graph).expect("load graph");
+            println!("loaded '{}' with outputs {:?}", g.name, g.out_shapes);
+            // Exercise it with constant inputs of the right shapes.
+            let spec = eng.manifest.get(&graph).unwrap().clone();
+            let bufs: Vec<Vec<f32>> = spec
+                .inputs
+                .iter()
+                .map(|s| vec![0.1f32; s.iter().product::<usize>().max(1)])
+                .collect();
+            let inputs: Vec<(&[f32], &[usize])> = bufs
+                .iter()
+                .zip(&spec.inputs)
+                .map(|(b, s)| (b.as_slice(), s.as_slice()))
+                .collect();
+            let outs = g.run_f32(&inputs).expect("execute");
+            println!(
+                "executed: {} outputs, first lens {:?}",
+                outs.len(),
+                outs.iter().take(3).map(|o| o.len()).collect::<Vec<_>>()
+            );
+        }
+    }
+}
+
+fn cmd_info() {
+    println!("dme — lattice-based distributed mean estimation (ICLR 2021 reproduction)");
+    match dme::runtime::find_artifact_dir() {
+        Some(d) => println!("artifact dir: {}", d.display()),
+        None => println!("artifact dir: NOT FOUND (run `make artifacts`)"),
+    }
+    println!("experiments : dme exp <1..8|tradeoff|all>");
+}

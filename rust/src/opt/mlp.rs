@@ -1,0 +1,353 @@
+//! Pure-Rust MLP + distributed training with per-layer gradient
+//! compression — the Experiment 7 analogue (see DESIGN.md §2 for the
+//! ResNet→MLP substitution rationale).
+//!
+//! Architecture: one tanh hidden layer + softmax cross-entropy (the same
+//! shape as the `mlp_grad_*` AOT artifact, so the Rust and JAX paths are
+//! cross-checkable). Compression is applied *per layer* exactly as the
+//! paper does for ResNet20/CIFAR-100 ("quantization is applied at the
+//! level of each layer").
+
+use super::allreduce::Aggregator;
+use crate::coordinator::{CodecSpec, YPolicy};
+use crate::data::Classification;
+use crate::rng::{hash2, Rng};
+
+/// A two-layer MLP with parameters stored flat per layer.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub features: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub w1: Vec<f64>, // features × hidden
+    pub b1: Vec<f64>, // hidden
+    pub w2: Vec<f64>, // hidden × classes
+    pub b2: Vec<f64>, // classes
+}
+
+/// Per-layer gradients in the same layout.
+#[derive(Clone, Debug)]
+pub struct MlpGrads {
+    pub w1: Vec<f64>,
+    pub b1: Vec<f64>,
+    pub w2: Vec<f64>,
+    pub b2: Vec<f64>,
+}
+
+impl Mlp {
+    pub fn new(features: usize, hidden: usize, classes: usize, rng: &mut Rng) -> Self {
+        let xavier1 = (2.0 / (features + hidden) as f64).sqrt();
+        let xavier2 = (2.0 / (hidden + classes) as f64).sqrt();
+        Mlp {
+            features,
+            hidden,
+            classes,
+            w1: (0..features * hidden)
+                .map(|_| rng.next_gaussian() * xavier1)
+                .collect(),
+            b1: vec![0.0; hidden],
+            w2: (0..hidden * classes)
+                .map(|_| rng.next_gaussian() * xavier2)
+                .collect(),
+            b2: vec![0.0; classes],
+        }
+    }
+
+    /// Forward pass for one sample: returns (hidden activations, logits).
+    fn forward(&self, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let mut h = self.b1.clone();
+        for (i, xi) in x.iter().enumerate() {
+            if *xi == 0.0 {
+                continue;
+            }
+            let row = &self.w1[i * self.hidden..(i + 1) * self.hidden];
+            for (hj, wij) in h.iter_mut().zip(row) {
+                *hj += xi * wij;
+            }
+        }
+        for v in h.iter_mut() {
+            *v = v.tanh();
+        }
+        let mut logits = self.b2.clone();
+        for (j, hj) in h.iter().enumerate() {
+            let row = &self.w2[j * self.classes..(j + 1) * self.classes];
+            for (lk, wjk) in logits.iter_mut().zip(row) {
+                *lk += hj * wjk;
+            }
+        }
+        (h, logits)
+    }
+
+    fn softmax(logits: &[f64]) -> Vec<f64> {
+        let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|l| (l - m).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        exps.iter().map(|e| e / z).collect()
+    }
+
+    /// Mean CE loss and gradients over the given sample indices.
+    pub fn loss_and_grads(&self, data: &Classification, idx: &[usize]) -> (f64, MlpGrads) {
+        let mut g = MlpGrads {
+            w1: vec![0.0; self.w1.len()],
+            b1: vec![0.0; self.b1.len()],
+            w2: vec![0.0; self.w2.len()],
+            b2: vec![0.0; self.b2.len()],
+        };
+        let mut loss = 0.0;
+        let inv = 1.0 / idx.len().max(1) as f64;
+        for &i in idx {
+            let x = data.x.row(i);
+            let label = data.labels[i];
+            let (h, logits) = self.forward(x);
+            let p = Self::softmax(&logits);
+            loss -= (p[label].max(1e-300)).ln();
+            // dL/dlogits = p − onehot
+            let mut dl = p;
+            dl[label] -= 1.0;
+            // layer 2
+            for (j, hj) in h.iter().enumerate() {
+                let row = &mut g.w2[j * self.classes..(j + 1) * self.classes];
+                for (gk, dk) in row.iter_mut().zip(&dl) {
+                    *gk += hj * dk * inv;
+                }
+            }
+            for (gb, dk) in g.b2.iter_mut().zip(&dl) {
+                *gb += dk * inv;
+            }
+            // backprop into hidden
+            let mut dh = vec![0.0; self.hidden];
+            for (j, dhj) in dh.iter_mut().enumerate() {
+                let row = &self.w2[j * self.classes..(j + 1) * self.classes];
+                *dhj = crate::linalg::dot(row, &dl) * (1.0 - h[j] * h[j]);
+            }
+            // layer 1
+            for (i_f, xi) in x.iter().enumerate() {
+                if *xi == 0.0 {
+                    continue;
+                }
+                let row = &mut g.w1[i_f * self.hidden..(i_f + 1) * self.hidden];
+                for (gj, dhj) in row.iter_mut().zip(&dh) {
+                    *gj += xi * dhj * inv;
+                }
+            }
+            for (gb, dhj) in g.b1.iter_mut().zip(&dh) {
+                *gb += dhj * inv;
+            }
+        }
+        (loss * inv, g)
+    }
+
+    pub fn apply(&mut self, g: &MlpGrads, lr: f64) {
+        crate::linalg::axpy(&mut self.w1, -lr, &g.w1);
+        crate::linalg::axpy(&mut self.b1, -lr, &g.b1);
+        crate::linalg::axpy(&mut self.w2, -lr, &g.w2);
+        crate::linalg::axpy(&mut self.b2, -lr, &g.b2);
+    }
+
+    /// Classification accuracy over sample indices.
+    pub fn accuracy(&self, data: &Classification, idx: &[usize]) -> f64 {
+        let mut correct = 0;
+        for &i in idx {
+            let (_, logits) = self.forward(data.x.row(i));
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == data.labels[i] {
+                correct += 1;
+            }
+        }
+        correct as f64 / idx.len().max(1) as f64
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MlpTrainConfig {
+    pub n_machines: usize,
+    pub hidden: usize,
+    pub lr: f64,
+    pub epochs: usize,
+    pub batch_per_machine: usize,
+    pub seed: u64,
+    pub y0: f64,
+}
+
+impl Default for MlpTrainConfig {
+    fn default() -> Self {
+        MlpTrainConfig {
+            n_machines: 4,
+            hidden: 64,
+            lr: 0.5,
+            epochs: 20,
+            batch_per_machine: 64,
+            seed: 0,
+            y0: 0.5,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MlpTrainReport {
+    pub train_acc: f64,
+    pub val_acc: f64,
+    pub train_loss: Vec<f64>,
+    pub decode_mismatches: usize,
+}
+
+/// Distributed training with per-layer compression; `spec = None` is the
+/// uncompressed baseline row of Figures 12–13.
+pub fn train_distributed(
+    train: &Classification,
+    val: &Classification,
+    spec: Option<CodecSpec>,
+    cfg: &MlpTrainConfig,
+) -> MlpTrainReport {
+    let mut rng = Rng::new(hash2(cfg.seed, 0x311D));
+    let mut model = Mlp::new(train.x.cols, cfg.hidden, train.classes, &mut rng);
+    let n = cfg.n_machines;
+    // One aggregator per layer (per-layer quantization).
+    let layer_dims = [
+        model.w1.len(),
+        model.b1.len(),
+        model.w2.len(),
+        model.b2.len(),
+    ];
+    let mut aggs: Vec<Option<Aggregator>> = layer_dims
+        .iter()
+        .map(|&d| {
+            spec.map(|s| {
+                Aggregator::new(
+                    s,
+                    n,
+                    d,
+                    cfg.y0,
+                    YPolicy::FromQuantized { slack: 3.0 },
+                    cfg.seed,
+                )
+            })
+        })
+        .collect();
+
+    let n_train = train.x.rows;
+    let steps_per_epoch = (n_train / (n * cfg.batch_per_machine)).max(1);
+    let mut train_loss = Vec::new();
+    let mut mismatches = 0;
+
+    for _epoch in 0..cfg.epochs {
+        let mut epoch_loss = 0.0;
+        for _step in 0..steps_per_epoch {
+            // Each machine samples its own batch.
+            let grads: Vec<(f64, MlpGrads)> = (0..n)
+                .map(|_| {
+                    let idx: Vec<usize> = (0..cfg.batch_per_machine)
+                        .map(|_| rng.next_below(n_train as u64) as usize)
+                        .collect();
+                    model.loss_and_grads(train, &idx)
+                })
+                .collect();
+            epoch_loss += grads.iter().map(|(l, _)| l).sum::<f64>() / n as f64;
+
+            // Aggregate layer by layer.
+            let layers: [fn(&MlpGrads) -> &Vec<f64>; 4] = [
+                |g| &g.w1,
+                |g| &g.b1,
+                |g| &g.w2,
+                |g| &g.b2,
+            ];
+            let mut agg_out: Vec<Vec<f64>> = Vec::with_capacity(4);
+            for (li, get) in layers.iter().enumerate() {
+                let vecs: Vec<Vec<f64>> = grads.iter().map(|(_, g)| get(g).clone()).collect();
+                match aggs[li].as_mut() {
+                    None => agg_out.push(crate::linalg::mean_vecs(&vecs)),
+                    Some(a) => {
+                        let rep = a.step(&vecs);
+                        mismatches += rep.decode_mismatches;
+                        agg_out.push(rep.estimate);
+                    }
+                }
+            }
+            let g = MlpGrads {
+                w1: agg_out[0].clone(),
+                b1: agg_out[1].clone(),
+                w2: agg_out[2].clone(),
+                b2: agg_out[3].clone(),
+            };
+            model.apply(&g, cfg.lr);
+        }
+        train_loss.push(epoch_loss / steps_per_epoch as f64);
+    }
+
+    let train_idx: Vec<usize> = (0..n_train).collect();
+    let val_idx: Vec<usize> = (0..val.x.rows).collect();
+    MlpTrainReport {
+        train_acc: model.accuracy(train, &train_idx),
+        val_acc: model.accuracy(val, &val_idx),
+        train_loss,
+        decode_mismatches: mismatches,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_classification;
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let data = gen_classification(16, 5, 3, 0.3, 1);
+        let mut rng = Rng::new(2);
+        let model = Mlp::new(5, 4, 3, &mut rng);
+        let idx: Vec<usize> = (0..16).collect();
+        let (_, g) = model.loss_and_grads(&data, &idx);
+        let eps = 1e-6;
+        // Check a few W1 and W2 entries.
+        for (which, k) in [(0usize, 3usize), (0, 7), (1, 2), (1, 5)] {
+            let mut mp = model.clone();
+            let mut mm = model.clone();
+            let (gref, param_p, param_m): (f64, &mut Vec<f64>, &mut Vec<f64>) = match which {
+                0 => (g.w1[k], &mut mp.w1, &mut mm.w1),
+                _ => (g.w2[k], &mut mp.w2, &mut mm.w2),
+            };
+            param_p[k] += eps;
+            param_m[k] -= eps;
+            let (lp, _) = mp.loss_and_grads(&data, &idx);
+            let (lm, _) = mm.loss_and_grads(&data, &idx);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - gref).abs() < 1e-5,
+                "layer {which} idx {k}: fd {fd} vs {gref}"
+            );
+        }
+    }
+
+    #[test]
+    fn uncompressed_training_learns() {
+        let (train, val) = gen_classification(1000, 8, 4, 0.35, 3).split(800);
+        let cfg = MlpTrainConfig {
+            epochs: 15,
+            ..Default::default()
+        };
+        let rep = train_distributed(&train, &val, None, &cfg);
+        assert!(rep.val_acc > 0.9, "val acc {}", rep.val_acc);
+        assert!(rep.train_loss.first().unwrap() > rep.train_loss.last().unwrap());
+    }
+
+    #[test]
+    fn lq_compressed_training_close_to_baseline() {
+        let (train, val) = gen_classification(1000, 8, 4, 0.35, 5).split(800);
+        let cfg = MlpTrainConfig {
+            epochs: 15,
+            ..Default::default()
+        };
+        let base = train_distributed(&train, &val, None, &cfg);
+        let lq = train_distributed(&train, &val, Some(CodecSpec::Lq { q: 16 }), &cfg);
+        assert!(
+            lq.val_acc > base.val_acc - 0.1,
+            "LQ {} vs base {}",
+            lq.val_acc,
+            base.val_acc
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! Optimization drivers: the applications of Section 9.
+//!
+//! * [`allreduce`] — quantized gradient exchange (the all-to-all pattern
+//!   of Experiments 2–4 and the building block for the others).
+//! * [`dist_gd`] — distributed (stochastic) gradient descent on
+//!   regression workloads (Experiments 1–5).
+//! * [`local_sgd`] — Local SGD with compressed model deltas (Experiment 6).
+//! * [`mlp`] — pure-Rust MLP + distributed training with per-layer
+//!   gradient compression (Experiment 7 analogue).
+//! * [`power_iteration`] — distributed power iteration (Experiment 8).
+
+pub mod allreduce;
+pub mod dist_gd;
+pub mod local_sgd;
+pub mod mlp;
+pub mod power_iteration;
+
+pub use allreduce::{Aggregator, StepReport};
+pub use dist_gd::{run_distributed_gd, GdConfig, GdTrace};
+pub use local_sgd::{run_local_sgd, LocalSgdConfig, LocalSgdTrace};
+pub use mlp::{Mlp, MlpTrainConfig, MlpTrainReport};
+pub use power_iteration::{run_power_iteration, PowerConfig, PowerTrace};

@@ -1,0 +1,119 @@
+//! EF-SignSGD / 1-bit SGD with error feedback (Seide et al. 2014,
+//! Karimireddy et al. 2019) — the 1-bit comparator of Experiment 7.
+//!
+//! Encoder state: the error memory `e`. Each step compresses `p = x + e`
+//! to `sign(p)·‖p‖₁/d` (1 bit/coordinate + one float) and stores the
+//! residual back into `e`. The decode side is stateless.
+
+use crate::quant::bits::{BitReader, BitWriter};
+use crate::quant::{Message, VectorCodec};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct EfSignSgd {
+    pub d: usize,
+    /// Error-feedback memory (encoder side).
+    pub error: Vec<f64>,
+}
+
+impl EfSignSgd {
+    pub fn new(d: usize) -> Self {
+        EfSignSgd {
+            d,
+            error: vec![0.0; d],
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.error.iter_mut().for_each(|e| *e = 0.0);
+    }
+}
+
+impl VectorCodec for EfSignSgd {
+    fn name(&self) -> String {
+        "EF-SignSGD".to_string()
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn encode(&mut self, x: &[f64], _rng: &mut Rng) -> Message {
+        assert_eq!(x.len(), self.d);
+        let p: Vec<f64> = x.iter().zip(&self.error).map(|(a, e)| a + e).collect();
+        let scale = crate::linalg::norm1(&p) / self.d as f64;
+        let mut w = BitWriter::with_capacity(self.d + 64);
+        w.push_f64(scale);
+        for &v in &p {
+            w.push(if v < 0.0 { 1 } else { 0 }, 1);
+        }
+        // Update error memory: e ← p − decode(msg).
+        for (e, &v) in self.error.iter_mut().zip(&p) {
+            let dec = if v < 0.0 { -scale } else { scale };
+            *e = v - dec;
+        }
+        let (bytes, bits) = w.finish();
+        Message { bytes, bits }
+    }
+
+    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
+        let mut r = BitReader::new(&msg.bytes);
+        let scale = r.read_f64();
+        (0..self.d)
+            .map(|_| if r.read(1) == 1 { -scale } else { scale })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_bit_per_coordinate() {
+        let mut c = EfSignSgd::new(100);
+        let mut rng = Rng::new(30);
+        let msg = c.encode(&vec![1.0; 100], &mut rng);
+        assert_eq!(msg.bits, 64 + 100);
+    }
+
+    #[test]
+    fn error_feedback_accumulates_residual() {
+        let mut c = EfSignSgd::new(2);
+        let mut rng = Rng::new(31);
+        let x = vec![1.0, 0.1];
+        let msg = c.encode(&x, &mut rng);
+        let z = c.decode(&msg, &[]);
+        // residual stored:
+        for i in 0..2 {
+            assert!((c.error[i] - (x[i] - z[i])).abs() < 1e-12);
+        }
+        // Feeding zero next step flushes part of the error back out.
+        let msg2 = c.encode(&[0.0, 0.0], &mut rng);
+        let z2 = c.decode(&msg2, &[]);
+        assert!(z2.iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn ef_mean_converges_to_signal() {
+        // Over many steps of a constant signal, EF makes the *cumulative*
+        // decoded sum track the cumulative input (the EF guarantee).
+        let d = 4;
+        let mut c = EfSignSgd::new(d);
+        let mut rng = Rng::new(32);
+        let x = vec![0.9, -0.4, 0.05, 0.0];
+        let steps = 500;
+        let mut acc = vec![0.0; d];
+        for _ in 0..steps {
+            let msg = c.encode(&x, &mut rng);
+            let z = c.decode(&msg, &[]);
+            for (a, zi) in acc.iter_mut().zip(&z) {
+                *a += zi;
+            }
+        }
+        for (a, xi) in acc.iter().zip(&x) {
+            let mean = a / steps as f64;
+            assert!((mean - xi).abs() < 0.05, "{mean} vs {xi}");
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Full-precision "codec": ships raw f32 coordinates. The paper's naive
+//! averaging baseline (32 bits/coordinate, no quantization variance beyond
+//! the f64→f32 cast, which is negligible at experiment scales).
+
+use crate::quant::bits::{BitReader, BitWriter};
+use crate::quant::{Message, VectorCodec};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct FullPrecision {
+    pub d: usize,
+}
+
+impl FullPrecision {
+    pub fn new(d: usize) -> Self {
+        FullPrecision { d }
+    }
+}
+
+impl VectorCodec for FullPrecision {
+    fn name(&self) -> String {
+        "full32".to_string()
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn encode(&mut self, x: &[f64], _rng: &mut Rng) -> Message {
+        assert_eq!(x.len(), self.d);
+        let mut w = BitWriter::with_capacity(self.d * 32);
+        for &v in x {
+            w.push_f32(v as f32);
+        }
+        let (bytes, bits) = w.finish();
+        Message { bytes, bits }
+    }
+
+    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
+        let mut r = BitReader::new(&msg.bytes);
+        (0..self.d).map(|_| r.read_f32() as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_f32_exact() {
+        let mut c = FullPrecision::new(5);
+        let x = vec![1.5, -2.25, 0.0, 1e10, -3.5e-5];
+        let mut rng = Rng::new(0);
+        let msg = c.encode(&x, &mut rng);
+        assert_eq!(msg.bits, 5 * 32);
+        let z = c.decode(&msg, &[]);
+        for (a, b) in x.iter().zip(&z) {
+            assert_eq!(*a as f32, *b as f32);
+        }
+    }
+}

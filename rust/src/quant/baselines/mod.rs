@@ -1,0 +1,30 @@
+//! Baseline compressors — every comparator in the paper's Section 9.
+//!
+//! | codec | reference | experiments |
+//! |---|---|---|
+//! | [`FullPrecision`] | "none" / naive averaging | E2–E8 |
+//! | [`Qsgd`] (L2 and L∞ normalization) | Alistarh et al. 2017 | E1–E5, E7, E8 |
+//! | [`SureshHadamard`] | Suresh et al. 2017 | E2–E3, E8 |
+//! | [`VqsgdCrossPolytope`] | Gandikota et al. 2019 | E4 |
+//! | [`EfSignSgd`] | Karimireddy et al. 2019 | E7 |
+//! | [`PowerSgd`] | Vogels et al. 2019 | E7 |
+//! | [`TernGrad`] | Wen et al. 2017 | extension |
+//! | [`TopK`] | sparsification baseline | extension |
+
+mod ef_sign;
+mod full;
+mod powersgd;
+mod qsgd;
+mod suresh;
+mod terngrad;
+mod topk;
+mod vqsgd;
+
+pub use ef_sign::EfSignSgd;
+pub use full::FullPrecision;
+pub use powersgd::PowerSgd;
+pub use qsgd::{Qsgd, QsgdNorm};
+pub use suresh::SureshHadamard;
+pub use terngrad::TernGrad;
+pub use topk::TopK;
+pub use vqsgd::VqsgdCrossPolytope;

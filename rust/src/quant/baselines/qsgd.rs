@@ -1,0 +1,204 @@
+//! QSGD (Alistarh et al., NeurIPS 2017) with the two normalizations used
+//! by the paper's experiments:
+//!
+//! * **L2** — the original scheme: coordinates quantized stochastically
+//!   onto `{0, 1/L, …, 1}·‖x‖₂` with a sign bit.
+//! * **L∞** — the variant in the released QSGD implementation referenced
+//!   by Experiment 1: normalize by the coordinate range `max(x) − min(x)`
+//!   and quantize `(x − min)/range` (no sign bit; min/max shipped).
+//!
+//! Wire cost: `d·(⌈log₂(L+1)⌉ [+1 sign])` bits plus one or two 64-bit
+//! floats of side information — exactly the overhead the paper notes.
+
+use crate::quant::bits::{width_for, BitReader, BitWriter};
+use crate::quant::{Message, VectorCodec};
+use crate::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QsgdNorm {
+    L2,
+    Linf,
+}
+
+#[derive(Clone, Debug)]
+pub struct Qsgd {
+    pub d: usize,
+    /// Number of non-zero quantization levels L (paper's `qlevel − 1`;
+    /// q=8 ⇒ levels 0..=7 ⇒ 3 bits).
+    pub levels: u32,
+    pub norm: QsgdNorm,
+}
+
+impl Qsgd {
+    pub fn new(d: usize, q: u32, norm: QsgdNorm) -> Self {
+        assert!(q >= 2);
+        Qsgd {
+            d,
+            levels: q - 1,
+            norm,
+        }
+    }
+
+    fn level_width(&self) -> u32 {
+        width_for(self.levels as u64 + 1)
+    }
+}
+
+impl VectorCodec for Qsgd {
+    fn name(&self) -> String {
+        match self.norm {
+            QsgdNorm::L2 => format!("QSGD-L2(q={})", self.levels + 1),
+            QsgdNorm::Linf => format!("QSGD-Linf(q={})", self.levels + 1),
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message {
+        assert_eq!(x.len(), self.d);
+        let w_lvl = self.level_width();
+        match self.norm {
+            QsgdNorm::L2 => {
+                let norm = crate::linalg::norm2(x);
+                let mut w = BitWriter::with_capacity(self.d * (w_lvl as usize + 1) + 64);
+                w.push_f64(norm);
+                for &v in x {
+                    let sign = if v < 0.0 { 1u64 } else { 0u64 };
+                    let scaled = if norm > 0.0 {
+                        v.abs() / norm * self.levels as f64
+                    } else {
+                        0.0
+                    };
+                    let low = scaled.floor();
+                    let lvl = low as u64
+                        + if rng.next_f64() < scaled - low { 1 } else { 0 };
+                    w.push(sign, 1);
+                    w.push(lvl.min(self.levels as u64), w_lvl);
+                }
+                let (bytes, bits) = w.finish();
+                Message { bytes, bits }
+            }
+            QsgdNorm::Linf => {
+                let mn = x.iter().cloned().fold(f64::INFINITY, f64::min);
+                let mx = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let range = (mx - mn).max(0.0);
+                let mut w = BitWriter::with_capacity(self.d * w_lvl as usize + 128);
+                w.push_f64(mn);
+                w.push_f64(mx);
+                for &v in x {
+                    let scaled = if range > 0.0 {
+                        (v - mn) / range * self.levels as f64
+                    } else {
+                        0.0
+                    };
+                    let low = scaled.floor();
+                    let lvl = (low as u64
+                        + if rng.next_f64() < scaled - low { 1 } else { 0 })
+                    .min(self.levels as u64);
+                    w.push(lvl, w_lvl);
+                }
+                let (bytes, bits) = w.finish();
+                Message { bytes, bits }
+            }
+        }
+    }
+
+    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
+        let mut r = BitReader::new(&msg.bytes);
+        let w_lvl = self.level_width();
+        match self.norm {
+            QsgdNorm::L2 => {
+                let norm = r.read_f64();
+                (0..self.d)
+                    .map(|_| {
+                        let sign = if r.read(1) == 1 { -1.0 } else { 1.0 };
+                        let lvl = r.read(w_lvl) as f64;
+                        sign * norm * lvl / self.levels as f64
+                    })
+                    .collect()
+            }
+            QsgdNorm::Linf => {
+                let mn = r.read_f64();
+                let mx = r.read_f64();
+                let range = mx - mn;
+                (0..self.d)
+                    .map(|_| mn + r.read(w_lvl) as f64 / self.levels as f64 * range)
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dist2, norm2};
+
+    #[test]
+    fn l2_unbiased() {
+        let d = 8;
+        let mut c = Qsgd::new(d, 8, QsgdNorm::L2);
+        let x = vec![0.5, -1.0, 2.0, 0.0, -0.25, 3.0, -2.5, 1.25];
+        let mut rng = Rng::new(9);
+        let trials = 50_000;
+        let mut acc = vec![0.0; d];
+        for _ in 0..trials {
+            let msg = c.encode(&x, &mut rng);
+            let z = c.decode(&msg, &[]);
+            for (a, zi) in acc.iter_mut().zip(&z) {
+                *a += zi;
+            }
+        }
+        let norm = norm2(&x);
+        for (a, xi) in acc.iter().zip(&x) {
+            let mean = a / trials as f64;
+            let tol = 5.0 * norm / 7.0 / (trials as f64).sqrt() + 1e-9;
+            assert!((mean - xi).abs() < tol, "{mean} vs {xi}");
+        }
+    }
+
+    #[test]
+    fn linf_unbiased() {
+        let d = 6;
+        let mut c = Qsgd::new(d, 16, QsgdNorm::Linf);
+        let x = vec![10.0, 10.3, 9.8, 10.05, 10.21, 9.93]; // non-origin-centered
+        let mut rng = Rng::new(10);
+        let trials = 50_000;
+        let mut acc = vec![0.0; d];
+        for _ in 0..trials {
+            let msg = c.encode(&x, &mut rng);
+            let z = c.decode(&msg, &[]);
+            for (a, zi) in acc.iter_mut().zip(&z) {
+                *a += zi;
+            }
+        }
+        for (a, xi) in acc.iter().zip(&x) {
+            let mean = a / trials as f64;
+            assert!((mean - xi).abs() < 0.005, "{mean} vs {xi}");
+        }
+    }
+
+    #[test]
+    fn bit_cost_formula() {
+        let mut c = Qsgd::new(100, 8, QsgdNorm::L2);
+        let mut rng = Rng::new(1);
+        let msg = c.encode(&vec![1.0; 100], &mut rng);
+        assert_eq!(msg.bits, 64 + 100 * (1 + 3));
+        let mut c = Qsgd::new(100, 8, QsgdNorm::Linf);
+        let msg = c.encode(&vec![1.0; 100], &mut rng);
+        assert_eq!(msg.bits, 128 + 100 * 3);
+    }
+
+    #[test]
+    fn zero_vector_roundtrip() {
+        for norm in [QsgdNorm::L2, QsgdNorm::Linf] {
+            let mut c = Qsgd::new(4, 8, norm);
+            let mut rng = Rng::new(2);
+            let msg = c.encode(&[0.0; 4], &mut rng);
+            let z = c.decode(&msg, &[]);
+            assert!(dist2(&z, &[0.0; 4]) < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Suresh et al. (ICML 2017) structured-rotation stochastic quantization —
+//! the "Hadamard" baseline of the paper's Experiments 2–3.
+//!
+//! Scheme: rotate by `HD` (shared-random sign diagonal), then stochastic
+//! uniform quantization of the rotated vector between its per-vector min
+//! and max with `L` levels. Cost: `d·⌈log₂ L⌉` bits + two floats. Like
+//! QSGD (and unlike the lattice scheme) the error scales with the input
+//! *norm*, which is exactly the gap the paper exposes.
+
+use crate::quant::bits::{width_for, BitReader, BitWriter};
+use crate::quant::hadamard::Rotation;
+use crate::quant::{Message, VectorCodec};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SureshHadamard {
+    pub rotation: Rotation,
+    pub levels: u32,
+}
+
+impl SureshHadamard {
+    /// `q` quantization points per coordinate (q=8 ⇒ 3 bits/coord).
+    pub fn new(d: usize, q: u32, shared: &mut Rng) -> Self {
+        assert!(q >= 2);
+        SureshHadamard {
+            rotation: Rotation::new(d, shared),
+            levels: q - 1,
+        }
+    }
+
+    fn width(&self) -> u32 {
+        width_for(self.levels as u64 + 1)
+    }
+}
+
+impl VectorCodec for SureshHadamard {
+    fn name(&self) -> String {
+        format!("Hadamard(q={})", self.levels + 1)
+    }
+
+    fn dim(&self) -> usize {
+        self.rotation.d
+    }
+
+    fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message {
+        let rx = self.rotation.forward(x);
+        let mn = rx.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mx = rx.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let range = (mx - mn).max(0.0);
+        let w_lvl = self.width();
+        let mut w = BitWriter::with_capacity(rx.len() * w_lvl as usize + 128);
+        w.push_f64(mn);
+        w.push_f64(mx);
+        for &v in &rx {
+            let scaled = if range > 0.0 {
+                (v - mn) / range * self.levels as f64
+            } else {
+                0.0
+            };
+            let low = scaled.floor();
+            let lvl =
+                (low as u64 + if rng.next_f64() < scaled - low { 1 } else { 0 })
+                    .min(self.levels as u64);
+            w.push(lvl, w_lvl);
+        }
+        let (bytes, bits) = w.finish();
+        Message { bytes, bits }
+    }
+
+    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
+        let dp = self.rotation.padded_dim();
+        let mut r = BitReader::new(&msg.bytes);
+        let mn = r.read_f64();
+        let mx = r.read_f64();
+        let range = mx - mn;
+        let w_lvl = self.width();
+        let rz: Vec<f64> = (0..dp)
+            .map(|_| mn + r.read(w_lvl) as f64 / self.levels as f64 * range)
+            .collect();
+        self.rotation.inverse(&rz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiased_through_rotation() {
+        let d = 16;
+        let mut shared = Rng::new(14);
+        let mut c = SureshHadamard::new(d, 16, &mut shared);
+        let x: Vec<f64> = (0..d).map(|i| 5.0 + (i as f64) * 0.1).collect();
+        let mut rng = Rng::new(15);
+        let trials = 40_000;
+        let mut acc = vec![0.0; d];
+        for _ in 0..trials {
+            let msg = c.encode(&x, &mut rng);
+            let z = c.decode(&msg, &[]);
+            for (a, zi) in acc.iter_mut().zip(&z) {
+                *a += zi;
+            }
+        }
+        for (a, xi) in acc.iter().zip(&x) {
+            let mean = a / trials as f64;
+            assert!((mean - xi).abs() < 0.05, "{mean} vs {xi}");
+        }
+    }
+
+    #[test]
+    fn bit_cost() {
+        let mut shared = Rng::new(16);
+        let mut c = SureshHadamard::new(100, 8, &mut shared); // pads to 128
+        let mut rng = Rng::new(17);
+        let msg = c.encode(&vec![1.0; 100], &mut rng);
+        assert_eq!(msg.bits, 128 + 128 * 3);
+    }
+}

@@ -1,0 +1,98 @@
+//! TernGrad (Wen et al., NeurIPS 2017) — ternary gradients. Included as a
+//! library extension (not in the paper's comparison set, but a standard
+//! point on the bits/variance curve between EF-Sign and QSGD).
+//!
+//! Each coordinate is quantized to `{−1, 0, +1}·‖x‖∞` with stochastic
+//! rounding on `|x_i|/‖x‖∞`. Cost: 2 bits/coordinate + one float.
+
+use crate::quant::bits::{BitReader, BitWriter};
+use crate::quant::{Message, VectorCodec};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TernGrad {
+    pub d: usize,
+}
+
+impl TernGrad {
+    pub fn new(d: usize) -> Self {
+        TernGrad { d }
+    }
+}
+
+impl VectorCodec for TernGrad {
+    fn name(&self) -> String {
+        "TernGrad".to_string()
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message {
+        assert_eq!(x.len(), self.d);
+        let m = crate::linalg::norm_inf(x);
+        let mut w = BitWriter::with_capacity(self.d * 2 + 64);
+        w.push_f64(m);
+        for &v in x {
+            let t = if m > 0.0 && rng.next_f64() < v.abs() / m {
+                if v < 0.0 {
+                    2u64 // -1
+                } else {
+                    1u64 // +1
+                }
+            } else {
+                0u64
+            };
+            w.push(t, 2);
+        }
+        let (bytes, bits) = w.finish();
+        Message { bytes, bits }
+    }
+
+    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
+        let mut r = BitReader::new(&msg.bytes);
+        let m = r.read_f64();
+        (0..self.d)
+            .map(|_| match r.read(2) {
+                1 => m,
+                2 => -m,
+                _ => 0.0,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiased() {
+        let d = 4;
+        let mut c = TernGrad::new(d);
+        let x = vec![0.5, -0.25, 1.0, 0.0];
+        let mut rng = Rng::new(50);
+        let trials = 60_000;
+        let mut acc = vec![0.0; d];
+        for _ in 0..trials {
+            let msg = c.encode(&x, &mut rng);
+            let z = c.decode(&msg, &[]);
+            for (a, zi) in acc.iter_mut().zip(&z) {
+                *a += zi;
+            }
+        }
+        for (a, xi) in acc.iter().zip(&x) {
+            let mean = a / trials as f64;
+            assert!((mean - xi).abs() < 0.02, "{mean} vs {xi}");
+        }
+    }
+
+    #[test]
+    fn two_bits_per_coord() {
+        let mut c = TernGrad::new(64);
+        let mut rng = Rng::new(51);
+        let msg = c.encode(&vec![0.3; 64], &mut rng);
+        assert_eq!(msg.bits, 64 + 128);
+    }
+}

@@ -1,0 +1,104 @@
+//! Top-K sparsification with error feedback — a standard sparsifying
+//! baseline (Stich et al. 2018; library extension beyond the paper's set).
+//!
+//! Sends the k largest-magnitude coordinates as (index, f32) pairs;
+//! the residual is kept in error memory. Biased but EF-corrected.
+
+use crate::quant::bits::{width_for, BitReader, BitWriter};
+use crate::quant::{Message, VectorCodec};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TopK {
+    pub d: usize,
+    pub k: usize,
+    error: Vec<f64>,
+}
+
+impl TopK {
+    pub fn new(d: usize, k: usize) -> Self {
+        assert!(k >= 1 && k <= d);
+        TopK {
+            d,
+            k,
+            error: vec![0.0; d],
+        }
+    }
+
+    fn idx_width(&self) -> u32 {
+        width_for(self.d as u64).max(1)
+    }
+}
+
+impl VectorCodec for TopK {
+    fn name(&self) -> String {
+        format!("TopK(k={})", self.k)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn encode(&mut self, x: &[f64], _rng: &mut Rng) -> Message {
+        assert_eq!(x.len(), self.d);
+        let p: Vec<f64> = x.iter().zip(&self.error).map(|(a, e)| a + e).collect();
+        let mut idx: Vec<usize> = (0..self.d).collect();
+        idx.sort_by(|&a, &b| p[b].abs().partial_cmp(&p[a].abs()).unwrap());
+        idx.truncate(self.k);
+        idx.sort_unstable();
+        let mut w = BitWriter::with_capacity(self.k * (self.idx_width() as usize + 32));
+        for &i in &idx {
+            w.push(i as u64, self.idx_width());
+            w.push_f32(p[i] as f32);
+        }
+        // error feedback
+        let mut kept = vec![false; self.d];
+        for &i in &idx {
+            kept[i] = true;
+        }
+        for i in 0..self.d {
+            self.error[i] = if kept[i] { p[i] - p[i] as f32 as f64 } else { p[i] };
+        }
+        let (bytes, bits) = w.finish();
+        Message { bytes, bits }
+    }
+
+    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
+        let mut r = BitReader::new(&msg.bytes);
+        let mut out = vec![0.0; self.d];
+        for _ in 0..self.k {
+            let i = r.read(self.idx_width()) as usize;
+            out[i] = r.read_f32() as f64;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_largest() {
+        let mut c = TopK::new(6, 2);
+        let mut rng = Rng::new(60);
+        let x = vec![0.1, -5.0, 0.2, 3.0, -0.05, 0.0];
+        let msg = c.encode(&x, &mut rng);
+        let z = c.decode(&msg, &[]);
+        assert!((z[1] - -5.0).abs() < 1e-6);
+        assert!((z[3] - 3.0).abs() < 1e-6);
+        assert_eq!(z[0], 0.0);
+        assert_eq!(msg.bits, 2 * (3 + 32));
+    }
+
+    #[test]
+    fn error_feedback_flushes_small_coords() {
+        let mut c = TopK::new(3, 1);
+        let mut rng = Rng::new(61);
+        let x = vec![1.0, 0.9, 0.0];
+        let _ = c.encode(&x, &mut rng); // sends idx 0
+        let msg = c.encode(&x, &mut rng); // now idx 1 has error 0.9 + 0.9
+        let z = c.decode(&msg, &[]);
+        assert!(z[1] > 1.5, "EF must promote the starved coordinate");
+    }
+}

@@ -1,0 +1,157 @@
+//! vQSGD cross-polytope quantizer with repetition (Gandikota et al. 2019)
+//! — the sublinear-communication comparator of Experiment 4.
+//!
+//! A unit vector `v = x/‖x‖₂` lies in the ℓ₁ ball of radius `‖v‖₁`, i.e.
+//! in the convex hull of the scaled cross-polytope vertices
+//! `{±‖v‖₁ e_i}`. Sampling vertex `sign(v_i)·‖v‖₁·e_i` with probability
+//! `|v_i|/‖v‖₁` is unbiased; each repetition costs `⌈log₂(2d)⌉` bits, and
+//! `R` repetitions are averaged to divide the variance by `R`. Two floats
+//! (`‖x‖₂`, `‖v‖₁`) of side information are shipped once.
+
+use crate::quant::bits::{width_for, BitReader, BitWriter};
+use crate::quant::{Message, VectorCodec};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct VqsgdCrossPolytope {
+    pub d: usize,
+    /// Number of repetitions R.
+    pub reps: u32,
+}
+
+impl VqsgdCrossPolytope {
+    pub fn new(d: usize, reps: u32) -> Self {
+        assert!(reps >= 1);
+        VqsgdCrossPolytope { d, reps }
+    }
+
+    /// Repetitions that fit a budget of `bits` total (minus side floats).
+    pub fn reps_for_bits(d: usize, bits: u64) -> u32 {
+        let per = width_for(2 * d as u64) as u64;
+        ((bits.saturating_sub(128)) / per).max(1) as u32
+    }
+
+    fn idx_width(&self) -> u32 {
+        width_for(2 * self.d as u64)
+    }
+}
+
+impl VectorCodec for VqsgdCrossPolytope {
+    fn name(&self) -> String {
+        format!("vQSGD-cp(R={})", self.reps)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message {
+        assert_eq!(x.len(), self.d);
+        let norm2 = crate::linalg::norm2(x);
+        let mut w = BitWriter::with_capacity(self.reps as usize * self.idx_width() as usize + 128);
+        if norm2 == 0.0 {
+            w.push_f64(0.0);
+            w.push_f64(0.0);
+            for _ in 0..self.reps {
+                w.push(0, self.idx_width());
+            }
+            let (bytes, bits) = w.finish();
+            return Message { bytes, bits };
+        }
+        let v: Vec<f64> = x.iter().map(|a| a / norm2).collect();
+        let norm1 = crate::linalg::norm1(&v);
+        w.push_f64(norm2);
+        w.push_f64(norm1);
+        // CDF sampling per repetition.
+        for _ in 0..self.reps {
+            let mut target = rng.next_f64() * norm1;
+            let mut pick = self.d - 1;
+            for (i, vi) in v.iter().enumerate() {
+                target -= vi.abs();
+                if target <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            let signed_idx = (pick as u64) << 1 | if v[pick] < 0.0 { 1 } else { 0 };
+            w.push(signed_idx, self.idx_width());
+        }
+        let (bytes, bits) = w.finish();
+        Message { bytes, bits }
+    }
+
+    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
+        let mut r = BitReader::new(&msg.bytes);
+        let norm2 = r.read_f64();
+        let norm1 = r.read_f64();
+        let mut out = vec![0.0; self.d];
+        if norm2 == 0.0 {
+            return out;
+        }
+        let scale = norm2 * norm1 / self.reps as f64;
+        for _ in 0..self.reps {
+            let signed_idx = r.read(self.idx_width());
+            let i = (signed_idx >> 1) as usize;
+            let sgn = if signed_idx & 1 == 1 { -1.0 } else { 1.0 };
+            out[i] += sgn * scale;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiased() {
+        let d = 8;
+        let mut c = VqsgdCrossPolytope::new(d, 4);
+        let x = vec![1.0, -2.0, 0.5, 0.0, 3.0, -0.1, 0.7, -1.3];
+        let mut rng = Rng::new(20);
+        let trials = 100_000;
+        let mut acc = vec![0.0; d];
+        for _ in 0..trials {
+            let msg = c.encode(&x, &mut rng);
+            let z = c.decode(&msg, &[]);
+            for (a, zi) in acc.iter_mut().zip(&z) {
+                *a += zi;
+            }
+        }
+        for (a, xi) in acc.iter().zip(&x) {
+            let mean = a / trials as f64;
+            assert!((mean - xi).abs() < 0.05, "{mean} vs {xi}");
+        }
+    }
+
+    #[test]
+    fn bits_sublinear_in_d() {
+        let d = 256;
+        let mut c = VqsgdCrossPolytope::new(d, VqsgdCrossPolytope::reps_for_bits(d, 128 + 128));
+        let mut rng = Rng::new(21);
+        let msg = c.encode(&vec![1.0; d], &mut rng);
+        // ⌈log2(512)⌉ = 9 bits per repetition; budget keeps it ≪ 32·d.
+        assert!(msg.bits < 32 * d as u64 / 4);
+    }
+
+    #[test]
+    fn variance_halves_with_double_reps() {
+        let d = 32;
+        let mut rng = Rng::new(22);
+        let x: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let var = |reps: u32, rng: &mut Rng| {
+            let mut c = VqsgdCrossPolytope::new(d, reps);
+            let trials = 4000;
+            let mut total = 0.0;
+            for _ in 0..trials {
+                let msg = c.encode(&x, rng);
+                let z = c.decode(&msg, &[]);
+                total += crate::linalg::dist2(&z, &x).powi(2);
+            }
+            total / trials as f64
+        };
+        let v1 = var(2, &mut rng);
+        let v2 = var(4, &mut rng);
+        assert!(v2 < v1 * 0.7, "v1={v1} v2={v2}");
+    }
+}

@@ -1,0 +1,217 @@
+//! Bit-level packing for wire messages.
+//!
+//! The paper's cost measure is exact bits (a color is `log₂ q` bits, not a
+//! byte), so messages are bit-packed: `BitWriter`/`BitReader` stream
+//! fixed-width fields LSB-first into a byte buffer.
+
+/// Width in bits needed to represent values `0..n` (n ≥ 1).
+#[inline]
+pub fn width_for(n: u64) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        64 - (n - 1).leading_zeros()
+    }
+}
+
+/// LSB-first bit writer with a 64-bit accumulator (full words are flushed
+/// in one `to_le_bytes` store — the hot path of every lattice encode).
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    acc_bits: u32,
+    /// Bits already written (including those still in the accumulator).
+    len: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bits: usize) -> Self {
+        BitWriter {
+            buf: Vec::with_capacity(bits / 8 + 9),
+            acc: 0,
+            acc_bits: 0,
+            len: 0,
+        }
+    }
+
+    /// Append the low `width` bits of `v`.
+    #[inline]
+    pub fn push(&mut self, v: u64, width: u32) {
+        debug_assert!(width <= 64);
+        debug_assert!(width == 64 || v < (1u64 << width));
+        if width == 0 {
+            return;
+        }
+        self.len += width as u64;
+        self.acc |= v << self.acc_bits;
+        let total = self.acc_bits + width;
+        if total >= 64 {
+            self.buf.extend_from_slice(&self.acc.to_le_bytes());
+            let consumed = 64 - self.acc_bits;
+            if consumed >= width {
+                self.acc = 0;
+                self.acc_bits = 0;
+            } else {
+                self.acc = v >> consumed;
+                self.acc_bits = width - consumed;
+            }
+        } else {
+            self.acc_bits = total;
+        }
+    }
+
+    /// Append a full f64 (64 bits).
+    pub fn push_f64(&mut self, v: f64) {
+        self.push(v.to_bits(), 64);
+    }
+
+    /// Append an f32 (32 bits).
+    pub fn push_f32(&mut self, v: f32) {
+        self.push(v.to_bits() as u64, 32);
+    }
+
+    pub fn bit_len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn finish(mut self) -> (Vec<u8>, u64) {
+        // Flush the accumulator's remaining bytes (trim to ⌈len/8⌉).
+        if self.acc_bits > 0 {
+            let bytes = (self.acc_bits as usize + 7) / 8;
+            self.buf
+                .extend_from_slice(&self.acc.to_le_bytes()[..bytes]);
+        }
+        debug_assert_eq!(self.buf.len(), (self.len as usize + 7) / 8);
+        (self.buf, self.len)
+    }
+}
+
+/// LSB-first bit reader.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Read `width` bits (panics past end — messages are length-checked by
+    /// construction in this codebase).
+    #[inline]
+    pub fn read(&mut self, width: u32) -> u64 {
+        debug_assert!(width <= 64);
+        if width == 0 {
+            return 0;
+        }
+        let byte = (self.pos / 8) as usize;
+        let shift = (self.pos % 8) as u32;
+        // Fast path: one unaligned word load covers the field.
+        if width + shift <= 64 && byte + 8 <= self.buf.len() {
+            let w = u64::from_le_bytes(self.buf[byte..byte + 8].try_into().unwrap());
+            self.pos += width as u64;
+            let v = w >> shift;
+            return if width == 64 { v } else { v & ((1u64 << width) - 1) };
+        }
+        // Slow path (tail of the buffer / wide straddling fields).
+        let mut v = 0u64;
+        let mut got = 0u32;
+        while got < width {
+            let byte = self.buf[(self.pos / 8) as usize];
+            let bit_in_byte = (self.pos % 8) as u32;
+            let avail = 8 - bit_in_byte;
+            let take = (width - got).min(avail);
+            let chunk = ((byte >> bit_in_byte) as u64) & ((1u64 << take) - 1);
+            v |= chunk << got;
+            got += take;
+            self.pos += take as u64;
+        }
+        v
+    }
+
+    pub fn read_f64(&mut self) -> f64 {
+        f64::from_bits(self.read(64))
+    }
+
+    pub fn read_f32(&mut self) -> f32 {
+        f32::from_bits(self.read(32) as u32)
+    }
+
+    pub fn bits_consumed(&self) -> u64 {
+        self.pos
+    }
+}
+
+/// Pack a slice of small unsigned values at a fixed width.
+pub fn pack(values: &[u64], width: u32) -> (Vec<u8>, u64) {
+    let mut w = BitWriter::with_capacity(values.len() * width as usize);
+    for &v in values {
+        w.push(v, width);
+    }
+    w.finish()
+}
+
+/// Unpack `count` fixed-width values.
+pub fn unpack(bytes: &[u8], width: u32, count: usize) -> Vec<u64> {
+    let mut r = BitReader::new(bytes);
+    (0..count).map(|_| r.read(width)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn width_for_basics() {
+        assert_eq!(width_for(1), 0);
+        assert_eq!(width_for(2), 1);
+        assert_eq!(width_for(8), 3);
+        assert_eq!(width_for(9), 4);
+        assert_eq!(width_for(1 << 20), 20);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(5);
+        for width in [1u32, 3, 5, 7, 8, 11, 16, 31] {
+            let n = 257;
+            let vals: Vec<u64> = (0..n)
+                .map(|_| rng.next_u64() & ((1u64 << width) - 1))
+                .collect();
+            let (bytes, bits) = pack(&vals, width);
+            assert_eq!(bits, n as u64 * width as u64);
+            assert_eq!(bytes.len(), (bits as usize + 7) / 8);
+            assert_eq!(unpack(&bytes, width, n), vals);
+        }
+    }
+
+    #[test]
+    fn mixed_fields() {
+        let mut w = BitWriter::new();
+        w.push(5, 3);
+        w.push_f64(3.5);
+        w.push(1023, 10);
+        w.push_f32(-2.25);
+        let (bytes, bits) = w.finish();
+        assert_eq!(bits, 3 + 64 + 10 + 32);
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3), 5);
+        assert_eq!(r.read_f64(), 3.5);
+        assert_eq!(r.read(10), 1023);
+        assert_eq!(r.read_f32(), -2.25);
+    }
+
+    #[test]
+    fn zero_width_reads_zero() {
+        let (bytes, bits) = pack(&[0, 0, 0], 0);
+        assert_eq!(bits, 0);
+        assert_eq!(unpack(&bytes, 0, 3), vec![0, 0, 0]);
+    }
+}

@@ -1,0 +1,146 @@
+//! Algorithm 1's theoretical unbiased rounding (convex-hull method),
+//! specialized to the cubic lattice.
+//!
+//! For the cubic lattice the convex hull of the 2^d surrounding lattice
+//! points factorizes coordinate-wise, so sampling a hull vertex with
+//! hull-coefficient probabilities reduces to independent per-coordinate
+//! stochastic rounding: round `t = (x−offset)/s` down with probability
+//! `1−frac(t)`, up with probability `frac(t)`. This gives `E[z] = x`
+//! *without* shared randomness (unlike the §9.1 random-offset variant),
+//! at the cost of encoder-side randomness. Both variants are exposed so
+//! the ablation bench can compare them (DESIGN.md E2 ablation).
+
+use super::bits::{pack, unpack, width_for};
+use super::lattice::{side_for_y, CubicLattice};
+use super::{Message, VectorCodec};
+use crate::rng::Rng;
+
+/// LQSGD with encoder-side stochastic rounding (Algorithm 1) instead of a
+/// shared random offset.
+#[derive(Clone, Debug)]
+pub struct ConvexHullEncoder {
+    pub lattice: CubicLattice,
+    pub q: u32,
+    width: u32,
+}
+
+impl ConvexHullEncoder {
+    pub fn new(lattice: CubicLattice, q: u32) -> Self {
+        assert!(q >= 2);
+        let width = width_for(q as u64);
+        ConvexHullEncoder { lattice, q, width }
+    }
+
+    /// Paper parameterization from the distance bound `y`: note the
+    /// stochastic rounding may move the encoded point up to `s` from `x`
+    /// (vs `s/2` for nearest-point), so the success condition tightens to
+    /// `‖x_u − x_v‖∞ ≤ (q−2)s/2`; we keep `s = 2y/(q−2)` accordingly.
+    pub fn from_y(d: usize, q: u32, y: f64) -> Self {
+        assert!(q >= 3);
+        let s = side_for_y(y.max(f64::MIN_POSITIVE), q - 1); // 2y/(q-2)
+        Self::new(CubicLattice::centered(d, s), q)
+    }
+
+    /// Stochastically round to a lattice index (unbiased).
+    pub fn stochastic_index(&self, x: &[f64], rng: &mut Rng, out: &mut [i64]) {
+        let inv = 1.0 / self.lattice.s;
+        for ((o, xi), off) in out.iter_mut().zip(x).zip(&self.lattice.offset) {
+            let t = (xi - off) * inv;
+            let low = t.floor();
+            let p_up = t - low;
+            *o = low as i64 + if rng.next_f64() < p_up { 1 } else { 0 };
+        }
+    }
+
+    pub fn message_bits(&self) -> u64 {
+        self.lattice.dim() as u64 * self.width as u64
+    }
+}
+
+impl VectorCodec for ConvexHullEncoder {
+    fn name(&self) -> String {
+        format!("LQ-hull(q={})", self.q)
+    }
+
+    fn dim(&self) -> usize {
+        self.lattice.dim()
+    }
+
+    fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message {
+        let d = self.lattice.dim();
+        let mut k = vec![0i64; d];
+        self.stochastic_index(x, rng, &mut k);
+        let colors: Vec<u64> = k
+            .iter()
+            .map(|&ki| CubicLattice::color_of(ki, self.q) as u64)
+            .collect();
+        let (bytes, bits) = pack(&colors, self.width);
+        Message { bytes, bits }
+    }
+
+    fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
+        let d = self.lattice.dim();
+        let colors64 = unpack(&msg.bytes, self.width, d);
+        let colors: Vec<u32> = colors64.iter().map(|&c| c as u32).collect();
+        let mut out = vec![0.0; d];
+        self.lattice.decode(&colors, reference, self.q, &mut out);
+        out
+    }
+
+    fn needs_reference(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        let enc = ConvexHullEncoder::from_y(1, 8, 1.0);
+        let s = enc.lattice.s;
+        let x = vec![0.37 * s];
+        let mut rng = Rng::new(100);
+        let trials = 200_000;
+        let mut sum = 0.0;
+        let mut k = vec![0i64];
+        for _ in 0..trials {
+            enc.stochastic_index(&x, &mut rng, &mut k);
+            sum += k[0] as f64 * s;
+        }
+        let mean = sum / trials as f64;
+        let tol = 5.0 * s / (trials as f64).sqrt();
+        assert!((mean - x[0]).abs() < tol, "mean {mean} vs {}", x[0]);
+    }
+
+    #[test]
+    fn rounds_to_adjacent_points_only() {
+        let enc = ConvexHullEncoder::from_y(16, 8, 1.0);
+        let mut rng = Rng::new(7);
+        let x: Vec<f64> = (0..16).map(|_| rng.uniform(-4.0, 4.0)).collect();
+        let mut k = vec![0i64; 16];
+        for _ in 0..100 {
+            enc.stochastic_index(&x, &mut rng, &mut k);
+            for (ki, xi) in k.iter().zip(&x) {
+                let t = xi / enc.lattice.s;
+                assert!(
+                    *ki == t.floor() as i64 || *ki == t.floor() as i64 + 1,
+                    "rounded to non-adjacent point"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_within_tightened_radius() {
+        let mut enc = ConvexHullEncoder::from_y(32, 8, 0.5);
+        let mut rng = Rng::new(8);
+        let x: Vec<f64> = (0..32).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let xv: Vec<f64> = x.iter().map(|v| v + rng.uniform(-0.5, 0.5)).collect();
+        let msg = enc.encode(&x, &mut rng);
+        let z = enc.decode(&msg, &xv);
+        // Must decode to a point within s of x (the encoded point).
+        assert!(crate::linalg::dist_inf(&z, &x) <= enc.lattice.s + 1e-12);
+    }
+}

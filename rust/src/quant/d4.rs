@@ -1,0 +1,360 @@
+//! D4 lattice quantizer — the paper's §6 future-work item ("find specific
+//! lattices which admit more efficient algorithms, and also have a good
+//! r_c/r_p ratio under ℓ1 or ℓ2 norm") made concrete.
+//!
+//! Coordinates are processed in buckets of 4 (the bucketing §6 notes is
+//! already standard in NN training) on the checkerboard lattice
+//! `D4 = {k ∈ ℤ⁴ : Σk_i even}` — the densest lattice packing in 4
+//! dimensions. Relative to the cubic lattice at the same scale:
+//!
+//! * **1 bit saved per bucket**: with even `q`, every color vector
+//!   `c = k mod q` of a D4 point has even coordinate sum, so the last
+//!   color's lowest bit is implied by the other three and is never
+//!   transmitted (`4·log₂q − 1` bits per bucket).
+//! * **same decode geometry**: distinct same-color points still differ by
+//!   `q·m`, so proximity decoding succeeds under the usual radius, and
+//!   the coordinate-wise nearest same-color point is automatically in D4.
+//! * **~0.4 dB rate–distortion gain** (D4's normalized second moment
+//!   0.0766 vs the cube's 1/12) — measured by the ablation test below.
+//!
+//! Unbiasedness uses *subtractive dither*: the shared offset is drawn
+//! uniformly from the D4 **Voronoi cell** (the 24-cell) by rejection
+//! sampling, making the quantization error uniform over the cell and
+//! zero-mean — the exact analogue of §9.1's cube-uniform offset.
+
+use super::bits::{width_for, BitReader, BitWriter};
+use super::{Message, VectorCodec};
+use crate::rng::Rng;
+
+/// Nearest D4 point to `t` (Conway–Sloane): round coordinate-wise; if the
+/// parity is odd, re-round the coordinate whose fractional part is
+/// farthest from its integer toward the other side.
+pub fn nearest_d4(t: &[f64; 4]) -> [i64; 4] {
+    let mut k = [0i64; 4];
+    let mut sum = 0i64;
+    for i in 0..4 {
+        k[i] = t[i].round_ties_even() as i64;
+        sum += k[i];
+    }
+    if sum.rem_euclid(2) != 0 {
+        // Flip the worst-rounded coordinate.
+        let mut worst = 0;
+        let mut worst_err = -1.0;
+        for i in 0..4 {
+            let err = (t[i] - k[i] as f64).abs();
+            if err > worst_err {
+                worst_err = err;
+                worst = i;
+            }
+        }
+        let d = t[worst] - k[worst] as f64;
+        k[worst] += if d > 0.0 {
+            1
+        } else if d < 0.0 {
+            -1
+        } else {
+            1 // exact integer: either neighbour restores parity
+        };
+    }
+    k
+}
+
+/// Draw a point uniform over the D4 Voronoi cell (24-cell) of the origin,
+/// by rejection from the enclosing cube `[-1, 1]⁴` (acceptance = 1/8).
+pub fn voronoi_dither_d4(rng: &mut Rng) -> [f64; 4] {
+    loop {
+        let u = [
+            rng.uniform(-1.0, 1.0),
+            rng.uniform(-1.0, 1.0),
+            rng.uniform(-1.0, 1.0),
+            rng.uniform(-1.0, 1.0),
+        ];
+        if nearest_d4(&u) == [0, 0, 0, 0] {
+            return u;
+        }
+    }
+}
+
+/// D4 bucketed lattice quantizer (d must be a multiple of 4; `q` even
+/// and a power of two).
+#[derive(Clone, Debug)]
+pub struct D4Quantizer {
+    pub d: usize,
+    pub q: u32,
+    pub s: f64,
+    /// Per-coordinate dither, Voronoi-uniform per 4-bucket, scaled by s.
+    pub offset: Vec<f64>,
+    width: u32,
+}
+
+impl D4Quantizer {
+    pub fn new(d: usize, q: u32, s: f64, shared: &mut Rng) -> Self {
+        assert!(d % 4 == 0, "D4 buckets need d % 4 == 0");
+        assert!(q >= 4 && q.is_power_of_two(), "q must be an even power of two");
+        assert!(s > 0.0);
+        let mut offset = Vec::with_capacity(d);
+        for _ in 0..d / 4 {
+            let th = voronoi_dither_d4(shared);
+            offset.extend(th.iter().map(|v| v * s));
+        }
+        D4Quantizer {
+            d,
+            q,
+            s,
+            offset,
+            width: width_for(q as u64),
+        }
+    }
+
+    /// Paper-style parameterization from an ℓ∞ distance bound `y`:
+    /// the D4 rounding can move one coordinate up to `s` (vs `s/2`
+    /// cubic), so the success condition tightens to `(q−2)·s/2 ≥ y + s`.
+    pub fn from_y(d: usize, q: u32, y: f64, shared: &mut Rng) -> Self {
+        let s = 2.0 * y.max(f64::MIN_POSITIVE) / (q as f64 - 4.0).max(1.0);
+        Self::new(d, q, s, shared)
+    }
+
+    /// Exact message size: `(4·⌈log₂q⌉ − 1) · d/4` bits.
+    pub fn message_bits(&self) -> u64 {
+        (4 * self.width as u64 - 1) * (self.d as u64 / 4)
+    }
+
+    /// Quantize to the dithered D4 lattice; returns bucket indices.
+    fn quantize(&self, x: &[f64]) -> Vec<[i64; 4]> {
+        let inv = 1.0 / self.s;
+        (0..self.d / 4)
+            .map(|b| {
+                let mut t = [0.0f64; 4];
+                for i in 0..4 {
+                    let j = 4 * b + i;
+                    t[i] = (x[j] - self.offset[j]) * inv;
+                }
+                nearest_d4(&t)
+            })
+            .collect()
+    }
+
+    /// Reconstruct the lattice point for bucket indices.
+    pub fn point(&self, ks: &[[i64; 4]]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.d);
+        for (b, k) in ks.iter().enumerate() {
+            for i in 0..4 {
+                out.push(self.offset[4 * b + i] + self.s * k[i] as f64);
+            }
+        }
+        out
+    }
+
+    /// Encode returning the quantized point as well.
+    pub fn encode_with_point(&self, x: &[f64]) -> (Message, Vec<f64>) {
+        assert_eq!(x.len(), self.d);
+        let ks = self.quantize(x);
+        let mask = (self.q - 1) as i64;
+        let mut w = BitWriter::with_capacity(self.message_bits() as usize);
+        for k in &ks {
+            // Three full colors + the fourth without its implied LSB.
+            let c: Vec<u64> = k.iter().map(|&ki| (ki & mask) as u64).collect();
+            debug_assert_eq!((c[0] + c[1] + c[2] + c[3]) % 2, 0);
+            w.push(c[0], self.width);
+            w.push(c[1], self.width);
+            w.push(c[2], self.width);
+            w.push(c[3] >> 1, self.width - 1);
+        }
+        let (bytes, bits) = w.finish();
+        (Message { bytes, bits }, self.point(&ks))
+    }
+}
+
+impl VectorCodec for D4Quantizer {
+    fn name(&self) -> String {
+        format!("D4LQ(q={})", self.q)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn encode(&mut self, x: &[f64], _rng: &mut Rng) -> Message {
+        self.encode_with_point(x).0
+    }
+
+    fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
+        assert_eq!(reference.len(), self.d);
+        let mut r = BitReader::new(&msg.bytes);
+        let inv_sq = 1.0 / (self.s * self.q as f64);
+        let inv_q = 1.0 / self.q as f64;
+        let qi = self.q as i64;
+        let mut out = Vec::with_capacity(self.d);
+        for b in 0..self.d / 4 {
+            let c0 = r.read(self.width);
+            let c1 = r.read(self.width);
+            let c2 = r.read(self.width);
+            let c3_hi = r.read(self.width - 1);
+            // Implied parity bit: sum of colors is even.
+            let lsb = (c0 ^ c1 ^ c2) & 1;
+            let c3 = (c3_hi << 1) | lsb;
+            for (i, c) in [c0, c1, c2, c3].into_iter().enumerate() {
+                let j = 4 * b + i;
+                let m = ((reference[j] - self.offset[j]) * inv_sq
+                    - c as f64 * inv_q)
+                    .round_ties_even() as i64;
+                let k = c as i64 + qi * m;
+                out.push(self.offset[j] + self.s * k as f64);
+            }
+        }
+        out
+    }
+
+    fn needs_reference(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dist_inf;
+
+    #[test]
+    fn nearest_d4_always_even_and_optimal() {
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            let t = [
+                rng.uniform(-5.0, 5.0),
+                rng.uniform(-5.0, 5.0),
+                rng.uniform(-5.0, 5.0),
+                rng.uniform(-5.0, 5.0),
+            ];
+            let k = nearest_d4(&t);
+            assert_eq!(k.iter().sum::<i64>().rem_euclid(2), 0);
+            // Optimality: no D4 point within the ±1 box around round(t)
+            // is closer (exhaustive over the 3^4 neighbourhood).
+            let d2 = |k: &[i64; 4]| -> f64 {
+                k.iter()
+                    .zip(&t)
+                    .map(|(&ki, ti)| (ti - ki as f64).powi(2))
+                    .sum()
+            };
+            let best = d2(&k);
+            let base: Vec<i64> = t.iter().map(|v| v.round_ties_even() as i64).collect();
+            for a in -1..=1i64 {
+                for b in -1..=1i64 {
+                    for c in -1..=1i64 {
+                        for e in -1..=1i64 {
+                            let cand = [base[0] + a, base[1] + b, base[2] + c, base[3] + e];
+                            if cand.iter().sum::<i64>().rem_euclid(2) == 0 {
+                                assert!(
+                                    d2(&cand) >= best - 1e-12,
+                                    "{cand:?} beats {k:?} for {t:?}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dither_stays_in_voronoi_cell() {
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let u = voronoi_dither_d4(&mut rng);
+            assert_eq!(nearest_d4(&u), [0, 0, 0, 0]);
+        }
+    }
+
+    #[test]
+    fn bit_saving_one_per_bucket() {
+        let mut shared = Rng::new(3);
+        let c = D4Quantizer::new(128, 16, 0.3, &mut shared);
+        assert_eq!(c.message_bits(), (4 * 4 - 1) * 32); // 480 vs cubic 512
+        let mut c = c;
+        let msg = c.encode(&vec![1.0; 128], &mut Rng::new(0));
+        assert_eq!(msg.bits, 480);
+    }
+
+    #[test]
+    fn roundtrip_exact_within_radius() {
+        let mut shared = Rng::new(4);
+        let mut rng = Rng::new(5);
+        let d = 64;
+        let q = 16;
+        for _ in 0..40 {
+            let y = rng.uniform(0.1, 3.0);
+            let mut codec = D4Quantizer::from_y(d, q, y, &mut shared);
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-50.0, 50.0)).collect();
+            let xv: Vec<f64> = x.iter().map(|v| v + rng.uniform(-y, y)).collect();
+            let (msg, point) = codec.encode_with_point(&x);
+            let z = codec.decode(&msg, &xv);
+            for (zi, pi) in z.iter().zip(&point) {
+                assert!((zi - pi).abs() < 1e-9, "decode != encoded point");
+            }
+            let _ = codec.encode(&x, &mut rng);
+        }
+    }
+
+    #[test]
+    fn unbiased_via_voronoi_dither() {
+        let d = 4;
+        let x = vec![0.37, -1.21, 5.05, 2.93];
+        let trials = 40_000;
+        let mut shared = Rng::new(6);
+        let mut acc = vec![0.0; d];
+        let s = 0.5;
+        for _ in 0..trials {
+            let c = D4Quantizer::new(d, 8, s, &mut shared);
+            let (_, p) = c.encode_with_point(&x);
+            for (a, pi) in acc.iter_mut().zip(&p) {
+                *a += pi;
+            }
+        }
+        for (a, xi) in acc.iter().zip(&x) {
+            let mean = a / trials as f64;
+            let tol = 6.0 * s / (trials as f64).sqrt();
+            assert!((mean - xi).abs() < tol, "biased: {mean} vs {xi}");
+        }
+    }
+
+    #[test]
+    fn rate_distortion_beats_cubic() {
+        // At matched scale, D4 spends 1 bit/bucket less; compare the
+        // rate-distortion product MSE·4^{bits/d}: lower is better.
+        let d = 256;
+        let q = 16u32;
+        let s = 0.4;
+        let trials = 3000;
+        let mut shared = Rng::new(7);
+        let mut rng = Rng::new(8);
+        let x: Vec<f64> = (0..d).map(|_| rng.uniform(-10.0, 10.0)).collect();
+
+        let mut mse_d4 = 0.0;
+        for _ in 0..trials {
+            let c = D4Quantizer::new(d, q, s, &mut shared);
+            let (_, p) = c.encode_with_point(&x);
+            mse_d4 += x.iter().zip(&p).map(|(a, b)| (a - b).powi(2)).sum::<f64>();
+        }
+        mse_d4 /= (trials * d) as f64;
+        let bits_d4 = (4.0 * 4.0 - 1.0) / 4.0; // 3.75 bits/coord
+
+        let mut mse_cube = 0.0;
+        for _ in 0..trials {
+            let c = crate::quant::LatticeQuantizer::new(
+                crate::quant::CubicLattice::random_offset(d, s, &mut shared),
+                q,
+            );
+            let (_, p) = c.encode_with_point(&x);
+            mse_cube += x.iter().zip(&p).map(|(a, b)| (a - b).powi(2)).sum::<f64>();
+        }
+        mse_cube /= (trials * d) as f64;
+        let bits_cube = 4.0;
+
+        let rd_d4 = mse_d4 * 4f64.powf(bits_d4);
+        let rd_cube = mse_cube * 4f64.powf(bits_cube);
+        assert!(
+            rd_d4 < rd_cube,
+            "D4 RD product {rd_d4:.4} must beat cubic {rd_cube:.4} \
+             (mse d4 {mse_d4:.5} @ {bits_d4}b, cube {mse_cube:.5} @ {bits_cube}b)"
+        );
+    }
+}

@@ -1,0 +1,251 @@
+//! RLQSGD — cubic lattice + structured random rotation (Section 6).
+//!
+//! The rotation `HD` (normalized Walsh–Hadamard times a random ±1
+//! diagonal) flattens any vector's coordinates so that
+//! `‖HDx‖∞ = O(d^{-1/2}‖x‖₂ √log nd)` (Lemma 24), making the ℓ∞-optimal
+//! cubic lattice near-optimal under ℓ₂ (Theorem 5). The diagonal is drawn
+//! from shared randomness; `H` is fixed. Inputs whose dimension is not a
+//! power of two are zero-padded (standard practice, also done in [36]).
+
+use super::lattice::side_for_y;
+use super::lq::LatticeQuantizer;
+use super::{Message, VectorCodec};
+use crate::rng::Rng;
+
+/// In-place normalized fast Walsh–Hadamard transform.
+/// `x.len()` must be a power of two. O(d log d).
+pub fn fwht(x: &mut [f64]) {
+    let d = x.len();
+    assert!(d.is_power_of_two(), "FWHT needs power-of-two length");
+    let mut h = 1;
+    while h < d {
+        let stride = h * 2;
+        let mut i = 0;
+        while i < d {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += stride;
+        }
+        h = stride;
+    }
+    let norm = 1.0 / (d as f64).sqrt();
+    for v in x.iter_mut() {
+        *v *= norm;
+    }
+}
+
+/// Next power of two ≥ n.
+pub fn pad_dim(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// The `HD` rotation with its shared-random sign diagonal.
+#[derive(Clone, Debug)]
+pub struct Rotation {
+    /// ±1 diagonal, length = padded dimension.
+    pub sign: Vec<f64>,
+    /// Original (unpadded) dimension.
+    pub d: usize,
+}
+
+impl Rotation {
+    /// Draw the diagonal from shared randomness.
+    pub fn new(d: usize, shared: &mut Rng) -> Self {
+        let dp = pad_dim(d);
+        let sign = (0..dp).map(|_| shared.next_sign()).collect();
+        Rotation { sign, d }
+    }
+
+    pub fn padded_dim(&self) -> usize {
+        self.sign.len()
+    }
+
+    /// Forward rotation: zero-pad, multiply by D, apply H.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.d);
+        let dp = self.padded_dim();
+        let mut y = vec![0.0; dp];
+        for i in 0..self.d {
+            y[i] = x[i] * self.sign[i];
+        }
+        fwht(&mut y);
+        y
+    }
+
+    /// Inverse rotation: apply H (involution), multiply by D, truncate.
+    pub fn inverse(&self, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.padded_dim());
+        let mut z = y.to_vec();
+        fwht(&mut z);
+        for (zi, si) in z.iter_mut().zip(&self.sign) {
+            *zi *= si;
+        }
+        z.truncate(self.d);
+        z
+    }
+}
+
+/// RLQSGD codec: rotate with `HD`, lattice-quantize in rotated space,
+/// decode against the rotated reference, rotate back.
+pub struct RotatedLatticeQuantizer {
+    pub rotation: Rotation,
+    pub inner: LatticeQuantizer,
+}
+
+impl RotatedLatticeQuantizer {
+    /// `y_rot` is the ℓ∞ distance bound *in rotated space* (the
+    /// experiments maintain `y_R = slack · ‖HD(g₀−g₁)‖∞`, Section 9.1).
+    pub fn from_y_rot(d: usize, q: u32, y_rot: f64, shared: &mut Rng) -> Self {
+        let rotation = Rotation::new(d, shared);
+        let dp = rotation.padded_dim();
+        let s = side_for_y(y_rot.max(f64::MIN_POSITIVE), q);
+        let inner = LatticeQuantizer::new(
+            super::lattice::CubicLattice::random_offset(dp, s, shared),
+            q,
+        );
+        RotatedLatticeQuantizer { rotation, inner }
+    }
+
+    /// Message size: padded_d · ⌈log₂ q⌉ bits.
+    pub fn message_bits(&self) -> u64 {
+        self.inner.message_bits()
+    }
+
+    /// Encode returning the rotated input too (for y_R estimation).
+    pub fn encode_with_rotated(&self, x: &[f64]) -> (Message, Vec<f64>) {
+        let rx = self.rotation.forward(x);
+        let (msg, _) = self.inner.encode_with_point(&rx);
+        (msg, rx)
+    }
+}
+
+impl VectorCodec for RotatedLatticeQuantizer {
+    fn name(&self) -> String {
+        format!("RLQSGD(q={})", self.inner.q)
+    }
+
+    fn dim(&self) -> usize {
+        self.rotation.d
+    }
+
+    fn encode(&mut self, x: &[f64], _rng: &mut Rng) -> Message {
+        self.encode_with_rotated(x).0
+    }
+
+    fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
+        let r_ref = self.rotation.forward(reference);
+        let rz = self.inner.decode(msg, &r_ref);
+        self.rotation.inverse(&rz)
+    }
+
+    fn needs_reference(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dist2, norm2, norm_inf};
+
+    #[test]
+    fn fwht_involution() {
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..128).map(|_| rng.next_gaussian()).collect();
+        let mut y = x.clone();
+        fwht(&mut y);
+        fwht(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fwht_preserves_l2() {
+        let mut rng = Rng::new(4);
+        let x: Vec<f64> = (0..256).map(|_| rng.next_gaussian()).collect();
+        let mut y = x.clone();
+        fwht(&mut y);
+        assert!((norm2(&x) - norm2(&y)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fwht_matches_direct_hadamard_small() {
+        // H_4 (normalized), direct definition H_{ij} = (-1)^{<i,j>}/sqrt(d).
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let mut y = x.clone();
+        fwht(&mut y);
+        let d = 4usize;
+        for i in 0..d {
+            let mut expect = 0.0;
+            for (j, xj) in x.iter().enumerate() {
+                let bits = (i & j).count_ones();
+                let sgn = if bits % 2 == 0 { 1.0 } else { -1.0 };
+                expect += sgn * xj;
+            }
+            expect /= (d as f64).sqrt();
+            assert!((y[i] - expect).abs() < 1e-12, "{} vs {}", y[i], expect);
+        }
+    }
+
+    #[test]
+    fn rotation_roundtrip_with_padding() {
+        let mut shared = Rng::new(5);
+        let rot = Rotation::new(100, &mut shared); // pads to 128
+        assert_eq!(rot.padded_dim(), 128);
+        let mut rng = Rng::new(6);
+        let x: Vec<f64> = (0..100).map(|_| rng.next_gaussian()).collect();
+        let y = rot.forward(&x);
+        let z = rot.inverse(&y);
+        assert!(dist2(&x, &z) < 1e-9);
+    }
+
+    #[test]
+    fn rotation_flattens_coordinates() {
+        // Lemma 24: a spike vector gets spread to O(d^{-1/2}) coordinates.
+        let d = 1024;
+        let mut shared = Rng::new(9);
+        let rot = Rotation::new(d, &mut shared);
+        let mut x = vec![0.0; d];
+        x[3] = 1.0;
+        let y = rot.forward(&x);
+        assert!(norm_inf(&y) <= 1.5 / (d as f64).sqrt() + 1e-12);
+    }
+
+    #[test]
+    fn rlq_roundtrip_within_y() {
+        let mut shared = Rng::new(12);
+        let mut rng = Rng::new(13);
+        let d = 100;
+        let q = 16;
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let xv: Vec<f64> = x.iter().map(|v| v + rng.uniform(-0.05, 0.05)).collect();
+            // y in rotated space: measure actual rotated distance w/ slack.
+            let rot_probe = Rotation::new(d, &mut shared.clone());
+            let rdist = norm_inf(&crate::linalg::sub(
+                &rot_probe.forward(&x),
+                &rot_probe.forward(&xv),
+            ));
+            let mut codec =
+                RotatedLatticeQuantizer::from_y_rot(d, q, (rdist * 1.5).max(1e-6), &mut shared);
+            // Keep the rotation used in the codec consistent for the bound:
+            let rx = codec.rotation.forward(&x);
+            let rxv = codec.rotation.forward(&xv);
+            let actual = norm_inf(&crate::linalg::sub(&rx, &rxv));
+            let y_used = codec.inner.lattice.success_radius(q);
+            if actual <= y_used {
+                let msg = codec.encode(&x, &mut rng);
+                let z = codec.decode(&msg, &xv);
+                // Error bounded by s/2 in rotated ℓ∞, so ℓ2 error ≤ s/2·sqrt(dp).
+                let s = codec.inner.lattice.s;
+                let bound = s / 2.0 * (codec.rotation.padded_dim() as f64).sqrt() + 1e-9;
+                assert!(dist2(&z, &x) <= bound, "{} > {}", dist2(&z, &x), bound);
+            }
+        }
+    }
+}

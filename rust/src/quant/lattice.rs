@@ -1,0 +1,184 @@
+//! The cubic lattice substrate (Definition 9, specialized per Section 6/9.1).
+//!
+//! A scaled cubic lattice with side `s` and per-coordinate offset
+//! `offset[i]` consists of the points `offset + s·k, k ∈ ℤ^d`. Under ℓ∞ it
+//! is an ε-lattice with `r_p = r_c = s/2` — optimal (Theorem 11). The
+//! shared-randomness offset (uniform in `[-s/2, s/2)^d`) makes
+//! nearest-point rounding unbiased (Section 9.1), replacing the
+//! convex-hull rounding of Algorithm 1 (kept in [`super::convex_hull`]).
+//!
+//! Rounding is **round-half-to-even** to bit-match `jnp.round` in the
+//! Pallas kernels, so Rust-native and AOT/HLO paths agree exactly.
+
+use crate::rng::Rng;
+
+/// A scaled, offset cubic lattice in `d` dimensions.
+#[derive(Clone, Debug)]
+pub struct CubicLattice {
+    /// Side length (`s` in Section 9.1; `2ε` in the theory sections).
+    pub s: f64,
+    /// Per-coordinate offset, shared between encoder and decoder.
+    pub offset: Vec<f64>,
+}
+
+impl CubicLattice {
+    /// Lattice with a fixed offset.
+    pub fn with_offset(s: f64, offset: Vec<f64>) -> Self {
+        assert!(s > 0.0, "side length must be positive");
+        CubicLattice { s, offset }
+    }
+
+    /// Lattice with the paper's shared-random offset: uniform in
+    /// `[-s/2, s/2)` per coordinate, drawn from shared randomness.
+    pub fn random_offset(d: usize, s: f64, shared: &mut Rng) -> Self {
+        assert!(s > 0.0, "side length must be positive");
+        let offset = (0..d).map(|_| shared.uniform(-s / 2.0, s / 2.0)).collect();
+        CubicLattice { s, offset }
+    }
+
+    /// Unshifted lattice (offset 0) — the theoretical sections' `Λ_ε`.
+    pub fn centered(d: usize, s: f64) -> Self {
+        Self::with_offset(s, vec![0.0; d])
+    }
+
+    pub fn dim(&self) -> usize {
+        self.offset.len()
+    }
+
+    /// Index of the nearest lattice point, coordinate-wise:
+    /// `k_i = round((x_i - offset_i)/s)` with ties-to-even.
+    #[inline]
+    pub fn nearest_index(&self, x: &[f64], out: &mut [i64]) {
+        debug_assert_eq!(x.len(), self.dim());
+        let inv = 1.0 / self.s;
+        for ((o, xi), off) in out.iter_mut().zip(x).zip(&self.offset) {
+            *o = ((xi - off) * inv).round_ties_even() as i64;
+        }
+    }
+
+    /// Reconstruct the point for a lattice index.
+    #[inline]
+    pub fn point(&self, k: &[i64], out: &mut [f64]) {
+        for ((o, ki), off) in out.iter_mut().zip(k).zip(&self.offset) {
+            *o = off + self.s * *ki as f64;
+        }
+    }
+
+    /// Color of an index under the mod-q coloring (Section 3.1):
+    /// `c_i = k_i mod q ∈ [0, q)`.
+    #[inline]
+    pub fn color_of(k: i64, q: u32) -> u32 {
+        (k.rem_euclid(q as i64)) as u32
+    }
+
+    /// Nearest index with the given color (Section 3.3 / Lemma 15):
+    /// among `k ≡ c (mod q)`, the closest to `t = (x - offset)/s` is
+    /// `k = c + q·round((t - c)/q)`.
+    #[inline]
+    pub fn decode_index(&self, color: u32, x_ref: f64, offset: f64, q: u32) -> i64 {
+        let t = (x_ref - offset) / self.s;
+        let c = color as f64;
+        let qf = q as f64;
+        let m = ((t - c) / qf).round_ties_even();
+        color as i64 + (q as i64) * (m as i64)
+    }
+
+    /// Full decode: nearest same-color lattice point to `x_ref`, writing
+    /// the reconstructed vector into `out`.
+    pub fn decode(&self, colors: &[u32], x_ref: &[f64], q: u32, out: &mut [f64]) {
+        debug_assert_eq!(colors.len(), self.dim());
+        for i in 0..colors.len() {
+            let k = self.decode_index(colors[i], x_ref[i], self.offset[i], q);
+            out[i] = self.offset[i] + self.s * k as f64;
+        }
+    }
+
+    /// ℓ∞ packing radius (= cover radius for the cubic lattice): s/2.
+    pub fn packing_radius(&self) -> f64 {
+        self.s / 2.0
+    }
+
+    /// Decoding success radius under ℓ∞ (Section 9.1): decoding succeeds
+    /// whenever `‖x_enc − x_dec‖∞ ≤ (q−1)s/2`.
+    pub fn success_radius(&self, q: u32) -> f64 {
+        (q as f64 - 1.0) * self.s / 2.0
+    }
+}
+
+/// Side length from a distance bound `y` (Section 9.1): `s = 2y/(q−1)`
+/// guarantees decode success whenever inputs are within ℓ∞ distance `y`.
+pub fn side_for_y(y: f64, q: u32) -> f64 {
+    assert!(q >= 2);
+    2.0 * y / (q as f64 - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_point_within_half_side() {
+        let mut rng = Rng::new(3);
+        let lat = CubicLattice::random_offset(64, 0.25, &mut rng);
+        let x: Vec<f64> = (0..64).map(|_| rng.uniform(-10.0, 10.0)).collect();
+        let mut k = vec![0i64; 64];
+        let mut p = vec![0.0; 64];
+        lat.nearest_index(&x, &mut k);
+        lat.point(&k, &mut p);
+        for (xi, pi) in x.iter().zip(&p) {
+            assert!((xi - pi).abs() <= 0.125 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn color_nonnegative_for_negative_indices() {
+        assert_eq!(CubicLattice::color_of(-1, 8), 7);
+        assert_eq!(CubicLattice::color_of(-8, 8), 0);
+        assert_eq!(CubicLattice::color_of(-9, 8), 7);
+        assert_eq!(CubicLattice::color_of(5, 8), 5);
+    }
+
+    #[test]
+    fn same_color_points_are_qs_apart() {
+        // Lemma 12 specialization: same-color indices differ by multiples
+        // of q, so same-color lattice points are ≥ q·s apart in ℓ∞.
+        let q = 8u32;
+        for k1 in -50i64..50 {
+            for k2 in -50i64..50 {
+                if k1 != k2 && CubicLattice::color_of(k1, q) == CubicLattice::color_of(k2, q) {
+                    assert_eq!((k1 - k2).rem_euclid(q as i64), 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_recovers_within_success_radius() {
+        let mut rng = Rng::new(11);
+        let q = 16u32;
+        let d = 32;
+        for trial in 0..50 {
+            let y = 1.0 + trial as f64 * 0.1;
+            let s = side_for_y(y, q);
+            let lat = CubicLattice::random_offset(d, s, &mut rng);
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            // Decoder vector within distance y in every coordinate.
+            let xv: Vec<f64> = x.iter().map(|xi| xi + rng.uniform(-y, y)).collect();
+            let mut k = vec![0i64; d];
+            lat.nearest_index(&x, &mut k);
+            let colors: Vec<u32> = k.iter().map(|&ki| CubicLattice::color_of(ki, q)).collect();
+            let mut z = vec![0.0; d];
+            lat.decode(&colors, &xv, q, &mut z);
+            let mut zk = vec![0i64; d];
+            lat.nearest_index(&z, &mut zk);
+            assert_eq!(zk, k, "decode must recover the encoded lattice point");
+        }
+    }
+
+    #[test]
+    fn success_radius_formula() {
+        let lat = CubicLattice::centered(4, 0.5);
+        assert!((lat.success_radius(9) - 2.0).abs() < 1e-12);
+        assert!((side_for_y(2.0, 9) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,244 @@
+//! LQSGD — the paper's practical lattice quantizer (Section 9.1).
+//!
+//! Encoder: round to the nearest point of a shared-randomly-offset cubic
+//! lattice, transmit the coordinate-wise index mod q (`⌈d·log₂ q⌉` bits,
+//! bit-packed). Decoder: nearest same-color lattice point to its own
+//! vector. Unbiasedness comes from the shared random offset; decode is
+//! exact whenever `‖x_u − x_v‖∞ ≤ (q−1)s/2`.
+
+use super::bits::width_for;
+use super::lattice::{side_for_y, CubicLattice};
+use super::{Message, VectorCodec};
+use crate::rng::Rng;
+
+/// The LQSGD codec. One instance per round (the offset is per-round shared
+/// randomness); `q` and `s` are fixed at construction.
+#[derive(Clone, Debug)]
+pub struct LatticeQuantizer {
+    pub lattice: CubicLattice,
+    pub q: u32,
+    width: u32,
+}
+
+impl LatticeQuantizer {
+    /// From an explicit lattice.
+    pub fn new(lattice: CubicLattice, q: u32) -> Self {
+        assert!(q >= 2, "need at least 2 colors");
+        let width = width_for(q as u64);
+        LatticeQuantizer { lattice, q, width }
+    }
+
+    /// The paper's parameterization: given a distance bound `y` (ℓ∞),
+    /// choose `s = 2y/(q−1)` and a shared-random offset.
+    pub fn from_y(d: usize, q: u32, y: f64, shared: &mut Rng) -> Self {
+        let s = side_for_y(y.max(f64::MIN_POSITIVE), q);
+        Self::new(CubicLattice::random_offset(d, s, shared), q)
+    }
+
+    /// Deterministic variant used by tests (offset 0).
+    pub fn centered(d: usize, q: u32, s: f64) -> Self {
+        Self::new(CubicLattice::centered(d, s), q)
+    }
+
+    /// Exact message size for this codec: `d · ⌈log₂ q⌉` bits.
+    pub fn message_bits(&self) -> u64 {
+        self.lattice.dim() as u64 * self.width as u64
+    }
+
+    /// Encode and also return the quantized point Q(x) (the nearest
+    /// lattice point) — used by the experiments' y-estimation policies,
+    /// which measure `‖Q(g₀) − Q(g₁)‖∞` (Section 9.2 Exp 2).
+    ///
+    /// Single fused pass (§Perf): round → color → bit-pack → reconstruct,
+    /// no intermediate index/color vectors.
+    pub fn encode_with_point(&self, x: &[f64]) -> (Message, Vec<f64>) {
+        let d = self.lattice.dim();
+        assert_eq!(x.len(), d);
+        let s = self.lattice.s;
+        let inv = 1.0 / s;
+        let q = self.q as i64;
+        let width = self.width;
+        let mut w = super::bits::BitWriter::with_capacity(d * width as usize);
+        let mut point = Vec::with_capacity(d);
+        if (self.q & (self.q - 1)) == 0 {
+            // Power-of-two q (every experiment config): mod is a mask —
+            // two's-complement arithmetic makes it correct for negatives.
+            let mask = (self.q - 1) as i64;
+            for (xi, off) in x.iter().zip(&self.lattice.offset) {
+                let k = ((xi - off) * inv).round_ties_even() as i64;
+                w.push((k & mask) as u64, width);
+                point.push(off + s * k as f64);
+            }
+        } else {
+            for (xi, off) in x.iter().zip(&self.lattice.offset) {
+                let k = ((xi - off) * inv).round_ties_even() as i64;
+                let c = k.rem_euclid(q) as u64;
+                w.push(c, width);
+                point.push(off + s * k as f64);
+            }
+        }
+        let (bytes, bits) = w.finish();
+        (Message { bytes, bits }, point)
+    }
+}
+
+impl VectorCodec for LatticeQuantizer {
+    fn name(&self) -> String {
+        format!("LQSGD(q={})", self.q)
+    }
+
+    fn dim(&self) -> usize {
+        self.lattice.dim()
+    }
+
+    /// Deterministic given the (shared-random) offset; `_rng` unused.
+    fn encode(&mut self, x: &[f64], _rng: &mut Rng) -> Message {
+        self.encode_with_point(x).0
+    }
+
+    /// Fused decode (§Perf): bit-read → nearest-same-color → reconstruct
+    /// per coordinate, single pass.
+    fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
+        let d = self.lattice.dim();
+        assert_eq!(reference.len(), d);
+        let s = self.lattice.s;
+        // Fold the two divisions into one reciprocal multiply each
+        // (§Perf): t/q = (x−off) · (1/(s·q)).
+        let inv_sq = 1.0 / (s * self.q as f64);
+        let inv_q = 1.0 / self.q as f64;
+        let qi = self.q as i64;
+        let width = self.width;
+        let mut r = super::bits::BitReader::new(&msg.bytes);
+        let mut out = Vec::with_capacity(d);
+        for (xr, off) in reference.iter().zip(&self.lattice.offset) {
+            let c = r.read(width) as i64;
+            let m = ((xr - off) * inv_sq - c as f64 * inv_q).round_ties_even() as i64;
+            let k = c + qi * m;
+            out.push(off + s * k as f64);
+        }
+        out
+    }
+
+    fn needs_reference(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dist_inf;
+
+    #[test]
+    fn exact_bit_count() {
+        let mut rng = Rng::new(1);
+        let codec = LatticeQuantizer::from_y(100, 8, 1.0, &mut rng);
+        assert_eq!(codec.message_bits(), 300);
+        let codec = LatticeQuantizer::from_y(100, 16, 1.0, &mut rng);
+        assert_eq!(codec.message_bits(), 400);
+        // Non-power-of-two q: ceil(log2 5) = 3 bits.
+        let codec = LatticeQuantizer::from_y(100, 5, 1.0, &mut rng);
+        assert_eq!(codec.message_bits(), 300);
+    }
+
+    #[test]
+    fn decode_exact_within_y() {
+        let mut shared = Rng::new(7);
+        let mut rng = Rng::new(8);
+        let d = 100;
+        let q = 8;
+        let y = 0.5;
+        for _ in 0..20 {
+            let mut codec = LatticeQuantizer::from_y(d, q, y, &mut shared);
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-100.0, 100.0)).collect();
+            let xv: Vec<f64> = x.iter().map(|xi| xi + rng.uniform(-y, y)).collect();
+            assert!(dist_inf(&x, &xv) <= y);
+            let (msg, point) = codec.encode_with_point(&x);
+            let z = codec.decode(&msg, &xv);
+            for (zi, pi) in z.iter().zip(&point) {
+                assert!(
+                    (zi - pi).abs() < 1e-9,
+                    "decoded point must equal encoded lattice point"
+                );
+            }
+            // Quantization error bounded by s/2 per coordinate.
+            let s = codec.lattice.s;
+            assert!(dist_inf(&z, &x) <= s / 2.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn unbiased_over_shared_offsets() {
+        // E[Q(x)] = x when the offset is uniform in [-s/2, s/2).
+        let d = 4;
+        let q = 8;
+        let y = 1.0;
+        let x = vec![0.3141, -2.718, 10.0, -0.001];
+        let trials = 60_000;
+        let mut shared = Rng::new(42);
+        let mut acc = vec![0.0; d];
+        let s = side_for_y(y, q);
+        for _ in 0..trials {
+            let codec = LatticeQuantizer::from_y(d, q, y, &mut shared);
+            let (_, point) = codec.encode_with_point(&x);
+            for (a, p) in acc.iter_mut().zip(&point) {
+                *a += p;
+            }
+        }
+        for (a, xi) in acc.iter().zip(&x) {
+            let mean = a / trials as f64;
+            // std of the mean ≈ (s/sqrt 12)/sqrt(trials)
+            let tol = 5.0 * (s / 12f64.sqrt()) / (trials as f64).sqrt();
+            assert!(
+                (mean - xi).abs() < tol,
+                "biased: mean {mean} vs {xi} (tol {tol})"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_fails_gracefully_far_outside_radius() {
+        // Outside the success radius the decoder returns *some* same-color
+        // point near its reference — distance to the true point is then
+        // at least q*s in the offending coordinate.
+        let mut shared = Rng::new(3);
+        let q = 8;
+        let mut codec = LatticeQuantizer::from_y(4, q, 0.1, &mut shared);
+        let x = vec![0.0; 4];
+        let far = vec![1000.0; 4];
+        let mut rng = Rng::new(4);
+        let msg = codec.encode(&x, &mut rng);
+        let z = codec.decode(&msg, &far);
+        // Decoded near the (wrong) reference, not near x.
+        assert!(dist_inf(&z, &far) <= q as f64 * codec.lattice.s);
+    }
+
+    #[test]
+    fn variance_matches_uniform_model() {
+        // With random offset, per-coordinate error is U[-s/2, s/2):
+        // E[err²] = s²/12 (the model the paper uses in Exp 4).
+        let d = 512;
+        let q = 8;
+        let y = 1.0;
+        let s = side_for_y(y, q);
+        let mut shared = Rng::new(17);
+        let x: Vec<f64> = (0..d).map(|i| (i as f64) * 0.0137).collect();
+        let mut total = 0.0;
+        let trials = 2000;
+        for _ in 0..trials {
+            let codec = LatticeQuantizer::from_y(d, q, y, &mut shared);
+            let (_, p) = codec.encode_with_point(&x);
+            total += x
+                .iter()
+                .zip(&p)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>();
+        }
+        let measured = total / (trials as f64 * d as f64);
+        let model = s * s / 12.0;
+        assert!(
+            (measured / model - 1.0).abs() < 0.05,
+            "measured {measured} vs model {model}"
+        );
+    }
+}

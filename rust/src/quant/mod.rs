@@ -1,0 +1,110 @@
+//! Quantization library — the paper's contribution plus every baseline it
+//! compares against.
+//!
+//! The central abstraction is [`VectorCodec`]: a (possibly stateful)
+//! compressor that turns a `d`-dimensional vector into a [`Message`] of
+//! metered bits and reconstructs a vector on the receiving side. Lattice
+//! codecs additionally use the *decoder's own vector* (`reference`) to
+//! disambiguate the color class — the paper's key mechanism (Section 3.3).
+//!
+//! Implementations:
+//!
+//! | codec | paper | module |
+//! |---|---|---|
+//! | `LatticeQuantizer` (LQSGD) | §9.1 practical scheme | [`lq`] |
+//! | `RotatedLatticeQuantizer` (RLQSGD) | §6 cubic lattice + HD rotation | [`hadamard`] |
+//! | `ConvexHullEncoder` | Alg 1 theoretical unbiased rounding | [`convex_hull`] |
+//! | `RobustAgreement` | §5 error detection (Alg 5) | [`robust`] |
+//! | `SublinearCodec` | §7 (Alg 7–9) | [`sublinear`] |
+//! | QSGD L2/L∞, Suresh–Hadamard, vQSGD, EF-SignSGD, PowerSGD, TernGrad, Top-K | §9 comparators | [`baselines`] |
+
+pub mod baselines;
+pub mod bits;
+pub mod convex_hull;
+pub mod d4;
+pub mod hadamard;
+pub mod lattice;
+pub mod lq;
+pub mod robust;
+pub mod sublinear;
+
+pub use d4::D4Quantizer;
+pub use hadamard::RotatedLatticeQuantizer;
+pub use lattice::CubicLattice;
+pub use lq::LatticeQuantizer;
+
+use crate::rng::Rng;
+
+/// A wire message: concrete bytes plus the exact information content in
+/// bits (colors are bit-packed, so `bits <= 8 * bytes.len() < bits + 8`;
+/// codecs that also ship side floats count them at 64 bits each).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Message {
+    pub bytes: Vec<u8>,
+    pub bits: u64,
+}
+
+impl Message {
+    pub fn empty() -> Self {
+        Message {
+            bytes: Vec::new(),
+            bits: 0,
+        }
+    }
+}
+
+/// A vector compressor with metered communication.
+///
+/// `encode` may mutate internal state (error feedback, PowerSGD warm
+/// starts). `decode` reconstructs from the message alone plus, for
+/// lattice codecs, the receiver's `reference` vector; baselines ignore
+/// `reference`.
+pub trait VectorCodec: Send {
+    /// Human-readable name used in experiment tables.
+    fn name(&self) -> String;
+
+    /// Dimension this codec instance is configured for.
+    fn dim(&self) -> usize;
+
+    /// Compress `x`. `rng` drives any stochastic rounding.
+    fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message;
+
+    /// Reconstruct from `msg`; `reference` is the decoder's own vector.
+    fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64>;
+
+    /// True if decoding needs a reference vector within the codec's
+    /// guarantee radius (lattice family). Used by the coordinator to
+    /// decide which topology invariants to check.
+    fn needs_reference(&self) -> bool {
+        false
+    }
+}
+
+/// Round-trip helper used throughout tests and experiments: encode at `u`,
+/// decode at `v`, return (reconstruction, bits).
+pub fn roundtrip(
+    codec: &mut dyn VectorCodec,
+    x_u: &[f64],
+    x_v: &[f64],
+    rng: &mut Rng,
+) -> (Vec<f64>, u64) {
+    let msg = codec.encode(x_u, rng);
+    let bits = msg.bits;
+    (codec.decode(&msg, x_v), bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_helper_reports_bits() {
+        let mut rng = Rng::new(1);
+        let mut codec = LatticeQuantizer::from_y(8, 8, 1.0, &mut rng);
+        let x = vec![0.5; 8];
+        let (z, bits) = roundtrip(&mut codec, &x, &x, &mut rng);
+        assert_eq!(z.len(), 8);
+        assert_eq!(bits, 8 * 3); // d * log2(q)
+    }
+}

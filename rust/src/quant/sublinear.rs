@@ -1,0 +1,291 @@
+//! Sublinear-communication quantization (Section 7, Algorithms 7–9).
+//!
+//! Two components:
+//!
+//! 1. **Analytic model** ([`SublinearModel`]) — what the paper's own
+//!    Experiment 4 evaluates: at a budget of `b` bits total
+//!    (`b/d = log₂(1 + 4y/s)` per coordinate), the induced output variance
+//!    of the randomly-offset cubic lattice is `d·s²/12`. The paper states
+//!    a naive implementation is infeasible at high d and simulates this
+//!    model; we reproduce exactly that (and additionally implement the
+//!    scheme for small d, below).
+//!
+//! 2. **Exact small-d implementation** ([`SublinearCodec`]) — Algorithms
+//!    7–8 on the cubic lattice under ℓ₂: random offset θ ~ Vor(0), round
+//!    `x+θ` to the nearest lattice point `z`, color it with a salted hash
+//!    into `(1+2q)^{3d}` colors (the random coloring `ĉ ∘ c_{3+2q}`),
+//!    retry with fresh shared randomness until the color of `z` is unique
+//!    among lattice points whose *expanded Voronoi region* contains `x+θ`;
+//!    the decoder searches lattice points near `x_v + θ` for the matching
+//!    color. Enumeration over the `(2⌈q⌉+3)^d` index box restricts this to
+//!    small d (the paper's own conclusion) — it exists here to validate
+//!    the model's unbiasedness and success probability, not for speed.
+
+use super::Message;
+use crate::rng::{hash2, Rng};
+
+/// The analytic bits↔variance model used by Experiment 4.
+#[derive(Clone, Copy, Debug)]
+pub struct SublinearModel {
+    pub d: usize,
+    /// ℓ∞ distance bound between encode and decode vectors.
+    pub y: f64,
+}
+
+impl SublinearModel {
+    /// Side length that spends `bits_per_coord` bits per coordinate:
+    /// from `log₂(1 + 4y/s) = b/d` ⇒ `s = 4y / (2^{b/d} − 1)`.
+    pub fn side_for_bits(&self, bits_per_coord: f64) -> f64 {
+        assert!(bits_per_coord > 0.0);
+        4.0 * self.y / ((2f64).powf(bits_per_coord) - 1.0)
+    }
+
+    /// Output variance (ℓ₂², expectation) of the randomly-offset cubic
+    /// lattice at side `s`: each coordinate error is U[−s/2, s/2).
+    pub fn variance_for_side(&self, s: f64) -> f64 {
+        self.d as f64 * s * s / 12.0
+    }
+
+    /// Variance at a bit budget (the quantity plotted in Figs 7–8).
+    pub fn variance_for_bits(&self, bits_per_coord: f64) -> f64 {
+        self.variance_for_side(self.side_for_bits(bits_per_coord))
+    }
+}
+
+/// Exact Algorithm 7/8 for small d (≤ ~6).
+pub struct SublinearCodec {
+    pub d: usize,
+    /// Lattice side (`2ε` in paper terms; Voronoi cell = side-s cube).
+    pub s: f64,
+    /// Sublinear parameter q (may be < 1); colors = ceil((1+2q)^{3d}).
+    pub q: f64,
+    /// Shared randomness seed (both parties derive θ and the coloring).
+    pub seed: u64,
+    /// Cap on encode retries.
+    pub max_iters: u32,
+}
+
+impl SublinearCodec {
+    pub fn new(d: usize, s: f64, q: f64, seed: u64) -> Self {
+        assert!(d <= 8, "exact sublinear codec is exponential in d");
+        assert!(s > 0.0 && q > 0.0);
+        SublinearCodec {
+            d,
+            s,
+            q,
+            seed,
+            max_iters: 64,
+        }
+    }
+
+    /// Number of colors `(1+2q)^{3d}` (≥ 2) and bits per message.
+    pub fn n_colors(&self) -> u64 {
+        let c = (1.0 + 2.0 * self.q).powi(3 * self.d as i32).ceil();
+        (c as u64).max(2)
+    }
+
+    pub fn bits_per_message(&self) -> f64 {
+        (self.n_colors() as f64).log2()
+    }
+
+    fn theta(&self, iter: u32) -> Vec<f64> {
+        let mut r = Rng::new(hash2(self.seed, iter as u64));
+        (0..self.d)
+            .map(|_| r.uniform(-self.s / 2.0, self.s / 2.0))
+            .collect()
+    }
+
+    fn color(&self, k: &[i64], iter: u32) -> u64 {
+        let mut h = hash2(self.seed, 0xC0105 ^ iter as u64);
+        for &ki in k {
+            h = hash2(h, ki as u64);
+        }
+        h % self.n_colors()
+    }
+
+    fn nearest(&self, p: &[f64]) -> Vec<i64> {
+        p.iter()
+            .map(|v| (v / self.s).round_ties_even() as i64)
+            .collect()
+    }
+
+    fn point(&self, k: &[i64]) -> Vec<f64> {
+        k.iter().map(|&ki| ki as f64 * self.s).collect()
+    }
+
+    /// Lattice points whose expanded Voronoi region contains `p`:
+    /// for the cubic lattice, `Vor⁺(λ)` is the cube of half-side
+    /// `s/2 + 2qε = s(1+2q)/2` around λ (ℓ∞ over-approximation of the
+    /// ℓ₂ expansion — conservative, so success only improves).
+    fn expanded_regions(&self, p: &[f64]) -> Vec<Vec<i64>> {
+        let radius = self.s * (1.0 + 2.0 * self.q) / 2.0;
+        let lo_hi: Vec<(i64, i64)> = p
+            .iter()
+            .map(|v| {
+                (
+                    ((v - radius) / self.s).ceil() as i64,
+                    ((v + radius) / self.s).floor() as i64,
+                )
+            })
+            .collect();
+        let mut out = Vec::new();
+        let mut idx: Vec<i64> = lo_hi.iter().map(|&(lo, _)| lo).collect();
+        loop {
+            // all coordinates within the expanded cube by construction
+            out.push(idx.clone());
+            // odometer
+            let mut c = 0;
+            loop {
+                idx[c] += 1;
+                if idx[c] <= lo_hi[c].1 {
+                    break;
+                }
+                idx[c] = lo_hi[c].0;
+                c += 1;
+                if c == self.d {
+                    return out;
+                }
+            }
+        }
+    }
+
+    /// Algorithm 7: returns (message, encoded point z − θ) on success.
+    pub fn encode(&self, x: &[f64]) -> Option<(Message, Vec<f64>)> {
+        assert_eq!(x.len(), self.d);
+        for iter in 0..self.max_iters {
+            let theta = self.theta(iter);
+            let shifted: Vec<f64> = x.iter().zip(&theta).map(|(a, t)| a + t).collect();
+            let z = self.nearest(&shifted);
+            let cz = self.color(&z, iter);
+            let unique = self
+                .expanded_regions(&shifted)
+                .iter()
+                .all(|k| k == &z || self.color(k, iter) != cz);
+            if unique {
+                // Message: iteration counter + color index.
+                let mut w = super::bits::BitWriter::new();
+                w.push(iter as u64, 32);
+                let cbits = super::bits::width_for(self.n_colors()).max(1);
+                w.push(cz, cbits);
+                let (bytes, _) = w.finish();
+                // Metered at the *information* cost: log2(n_colors) + |i|.
+                let bits = (self.bits_per_message().ceil() as u64).max(1) + 8;
+                let zp = self.point(&z);
+                let est: Vec<f64> = zp.iter().zip(&theta).map(|(a, t)| a - t).collect();
+                return Some((Message { bytes, bits }, est));
+            }
+        }
+        None
+    }
+
+    /// Algorithm 8: decode against `x_v`; exact when `‖x−x_v‖₂ ≤ qε = qs/2`.
+    pub fn decode(&self, msg: &Message, x_v: &[f64]) -> Option<Vec<f64>> {
+        let mut r = super::bits::BitReader::new(&msg.bytes);
+        let iter = r.read(32) as u32;
+        let cbits = super::bits::width_for(self.n_colors()).max(1);
+        let cz = r.read(cbits);
+        let theta = self.theta(iter);
+        let shifted: Vec<f64> = x_v.iter().zip(&theta).map(|(a, t)| a + t).collect();
+        // Search lattice points whose Voronoi region intersects
+        // B_{qε}(x_v + θ): superset = expanded regions of the point.
+        let mut best: Option<(f64, Vec<i64>)> = None;
+        for k in self.expanded_regions(&shifted) {
+            if self.color(&k, iter) == cz {
+                let p = self.point(&k);
+                let d2: f64 = p
+                    .iter()
+                    .zip(&shifted)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if best.as_ref().map_or(true, |(bd, _)| d2 < *bd) {
+                    best = Some((d2, k));
+                }
+            }
+        }
+        best.map(|(_, k)| {
+            let p = self.point(&k);
+            p.iter().zip(&theta).map(|(a, t)| a - t).collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dist2;
+
+    #[test]
+    fn model_matches_paper_formula() {
+        let m = SublinearModel { d: 256, y: 1.0 };
+        // 0.5 bits/coord: s = 4y/(sqrt(2)-1)
+        let s = m.side_for_bits(0.5);
+        assert!((s - 4.0 / (2f64.sqrt() - 1.0)).abs() < 1e-9);
+        let v = m.variance_for_bits(0.5);
+        assert!((v - 256.0 * s * s / 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_monotone_in_bits() {
+        let m = SublinearModel { d: 128, y: 2.0 };
+        let mut prev = f64::INFINITY;
+        for b in [0.1, 0.25, 0.5, 1.0, 2.0, 4.0] {
+            let v = m.variance_for_bits(b);
+            assert!(v < prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn exact_codec_roundtrip_close_inputs() {
+        let d = 3;
+        let c = SublinearCodec::new(d, 1.0, 1.5, 99);
+        let mut rng = Rng::new(5);
+        let mut ok = 0;
+        let mut total = 0;
+        for _ in 0..100 {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            // ‖x − x_v‖₂ ≤ q·s/2
+            let lim = c.q * c.s / 2.0 / (d as f64).sqrt();
+            let xv: Vec<f64> = x.iter().map(|v| v + rng.uniform(-lim, lim)).collect();
+            if let Some((msg, est)) = c.encode(&x) {
+                total += 1;
+                if let Some(z) = c.decode(&msg, &xv) {
+                    if dist2(&z, &est) < 1e-9 {
+                        ok += 1;
+                    }
+                }
+            }
+        }
+        assert!(total > 80, "encode should almost always succeed");
+        assert!(ok as f64 >= 0.95 * total as f64, "{ok}/{total} decoded");
+    }
+
+    #[test]
+    fn exact_codec_unbiased() {
+        let d = 2;
+        let x = vec![0.337, -1.29];
+        let mut acc = vec![0.0; d];
+        let trials = 20_000;
+        let mut got = 0;
+        for t in 0..trials {
+            let c = SublinearCodec::new(d, 0.8, 1.0, 7000 + t);
+            if let Some((_, est)) = c.encode(&x) {
+                acc[0] += est[0];
+                acc[1] += est[1];
+                got += 1;
+            }
+        }
+        for i in 0..d {
+            let mean = acc[i] / got as f64;
+            let tol = 5.0 * 0.8 / (got as f64).sqrt();
+            assert!((mean - x[i]).abs() < tol, "coord {i}: {mean} vs {}", x[i]);
+        }
+    }
+
+    #[test]
+    fn bits_scale_sublinearly() {
+        // q < 1 → bits/coord = 3·log2(1+2q) < 3 — sublinear regime exists.
+        let c = SublinearCodec::new(4, 1.0, 0.2, 1);
+        assert!(c.bits_per_message() / 4.0 < 3.0);
+    }
+}

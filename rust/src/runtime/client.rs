@@ -1,0 +1,111 @@
+//! PJRT engine: compiles HLO-text artifacts once, executes them many times.
+
+use super::manifest::ArtifactManifest;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A compiled, ready-to-run XLA graph.
+pub struct LoadedGraph {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Output shapes from the manifest (the graph returns a tuple).
+    pub out_shapes: Vec<Vec<usize>>,
+}
+
+impl LoadedGraph {
+    /// Execute with f32 inputs; returns each tuple element flattened.
+    ///
+    /// `inputs` are (data, dims) pairs; dims must match the artifact spec.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = if dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims_i64)
+                    .with_context(|| format!("reshape input to {dims:?}"))?
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing graph '{}'", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let elems = out.to_tuple().context("decomposing result tuple")?;
+        let mut flat = Vec::with_capacity(elems.len());
+        for e in elems {
+            flat.push(e.to_vec::<f32>().context("reading f32 output")?);
+        }
+        Ok(flat)
+    }
+}
+
+/// The runtime engine: a PJRT CPU client plus a cache of compiled graphs.
+///
+/// Compilation happens once per artifact (at startup or first use); the
+/// request path only executes.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: ArtifactManifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedGraph>>>,
+}
+
+impl Engine {
+    /// Create an engine over the artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let manifest = ArtifactManifest::load(artifact_dir)?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Create an engine by auto-discovering the artifact directory.
+    pub fn discover() -> Result<Self> {
+        let dir = super::find_artifact_dir()
+            .ok_or_else(|| anyhow!("artifact dir not found; run `make artifacts`"))?;
+        Self::new(&dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile) a graph by manifest name, caching the executable.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedGraph>> {
+        if let Some(g) = self.cache.lock().unwrap().get(name) {
+            return Ok(g.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling '{name}': {e:?}"))?;
+        let graph = std::sync::Arc::new(LoadedGraph {
+            name: name.to_string(),
+            exe,
+            out_shapes: spec.outputs.clone(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), graph.clone());
+        Ok(graph)
+    }
+}

@@ -1,0 +1,129 @@
+//! Artifact manifest: describes every AOT-compiled HLO module emitted by
+//! `python/compile/aot.py` (name, file, input/output shapes and dtypes, and
+//! the static parameters the graph was specialized with).
+
+use crate::config::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled graph.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Logical name, e.g. `lattice_encode_d128`.
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Input shapes (row-major dims per argument).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes (the graph returns a tuple).
+    pub outputs: Vec<Vec<usize>>,
+    /// Static specialization parameters (e.g. `{"d": 128, "q": 8}`).
+    pub params: BTreeMap<String, f64>,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub specs: BTreeMap<String, ArtifactSpec>,
+}
+
+fn shapes(v: &Json) -> Result<Vec<Vec<usize>>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of shapes"))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| anyhow!("expected shape array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("expected dim")))
+                .collect()
+        })
+        .collect()
+}
+
+impl ArtifactManifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let mut specs = BTreeMap::new();
+        let graphs = json
+            .get("graphs")
+            .and_then(|g| g.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'graphs' array"))?;
+        for g in graphs {
+            let name = g
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("graph missing 'name'"))?
+                .to_string();
+            let file = g
+                .get("file")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("graph missing 'file'"))?
+                .to_string();
+            let inputs = shapes(g.get("inputs").ok_or_else(|| anyhow!("missing inputs"))?)?;
+            let outputs = shapes(g.get("outputs").ok_or_else(|| anyhow!("missing outputs"))?)?;
+            let mut params = BTreeMap::new();
+            if let Some(p) = g.get("params").and_then(|p| p.as_obj()) {
+                for (k, v) in p {
+                    if let Some(n) = v.as_f64() {
+                        params.insert(k.clone(), n);
+                    }
+                }
+            }
+            specs.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name,
+                    file,
+                    inputs,
+                    outputs,
+                    params,
+                },
+            );
+        }
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            specs,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_manifest_from_temp() {
+        let dir = std::env::temp_dir().join(format!("dme_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"graphs": [{"name": "g1", "file": "g1.hlo.txt",
+                "inputs": [[2,2],[2,2]], "outputs": [[2,2]],
+                "params": {"d": 2}}]}"#,
+        )
+        .unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let s = m.get("g1").unwrap();
+        assert_eq!(s.inputs, vec![vec![2, 2], vec![2, 2]]);
+        assert_eq!(s.params.get("d"), Some(&2.0));
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,42 @@
+//! PJRT runtime: load and execute AOT-compiled XLA artifacts.
+//!
+//! `python/compile/aot.py` lowers the Layer-2 JAX graphs (which in turn call
+//! the Layer-1 Pallas kernels) to **HLO text** under `artifacts/`. This module
+//! wraps the `xla` crate (`PjRtClient` over the PJRT C API) so the Layer-3
+//! coordinator can execute those graphs from the hot path without any Python.
+//!
+//! HLO *text* (not serialized `HloModuleProto`) is the interchange format:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+
+mod client;
+mod manifest;
+
+pub use client::{Engine, LoadedGraph};
+pub use manifest::{ArtifactManifest, ArtifactSpec};
+
+/// Default artifact directory relative to the repository root.
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$DME_ARTIFACTS`, else `artifacts/` in the
+/// current dir, else walking up to 3 parents (so examples/tests work from
+/// `target/` working directories).
+pub fn find_artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("DME_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    for _ in 0..4 {
+        let cand = dir.join(ARTIFACT_DIR);
+        if cand.join("manifest.json").is_file() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    None
+}

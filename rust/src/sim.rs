@@ -1,0 +1,306 @@
+//! Distributed substrate: an in-process message-passing cluster with
+//! exact per-machine bit metering.
+//!
+//! The paper's model (Section 1.1 "Distributed Model") is synchronous
+//! fault-free message passing, and its cost measure is *bits sent and
+//! received by any machine*. This module provides exactly that: `n`
+//! endpoints connected all-to-all over typed channels; every `send`
+//! increments the sender's sent-counter and the receiver's
+//! received-counter by the message's metered bit count (bit-exact, not
+//! byte-padded — see `quant::Message`).
+//!
+//! Machines run as real OS threads (`Cluster::run`), so protocol code is
+//! written exactly as it would be against a network stack; there is no
+//! global scheduler to accidentally serialize a protocol bug away.
+
+use crate::quant::Message;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// A routed packet.
+#[derive(Debug)]
+pub struct Packet {
+    pub from: usize,
+    pub msg: Message,
+}
+
+/// Shared per-machine traffic counters.
+#[derive(Debug, Default)]
+pub struct Meter {
+    pub sent_bits: AtomicU64,
+    pub recv_bits: AtomicU64,
+    pub sent_msgs: AtomicU64,
+    pub recv_msgs: AtomicU64,
+}
+
+/// Traffic snapshot for reporting.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Traffic {
+    pub sent_bits: u64,
+    pub recv_bits: u64,
+    pub sent_msgs: u64,
+    pub recv_msgs: u64,
+}
+
+impl Traffic {
+    pub fn total_bits(&self) -> u64 {
+        self.sent_bits + self.recv_bits
+    }
+}
+
+/// One machine's handle onto the cluster network.
+pub struct Endpoint {
+    pub id: usize,
+    pub n: usize,
+    rx: Receiver<Packet>,
+    txs: Vec<Sender<Packet>>,
+    meters: Arc<Vec<Meter>>,
+}
+
+impl Endpoint {
+    /// Send `msg` to machine `to`, metering both sides.
+    pub fn send(&self, to: usize, msg: Message) {
+        assert_ne!(to, self.id, "no self-sends");
+        let bits = msg.bits;
+        self.meters[self.id].sent_bits.fetch_add(bits, Ordering::Relaxed);
+        self.meters[self.id].sent_msgs.fetch_add(1, Ordering::Relaxed);
+        self.meters[to].recv_bits.fetch_add(bits, Ordering::Relaxed);
+        self.meters[to].recv_msgs.fetch_add(1, Ordering::Relaxed);
+        self.txs[to]
+            .send(Packet { from: self.id, msg })
+            .expect("peer hung up");
+    }
+
+    /// Blocking receive of the next packet from anyone.
+    pub fn recv(&self) -> Packet {
+        self.rx.recv().expect("cluster shut down")
+    }
+
+    /// Blocking receive of the next packet from a specific peer
+    /// (out-of-order packets from other peers are queued and re-delivered
+    /// in arrival order by subsequent calls).
+    pub fn recv_from(&mut self, from: usize, stash: &mut Vec<Packet>) -> Packet {
+        if let Some(pos) = stash.iter().position(|p| p.from == from) {
+            return stash.remove(pos);
+        }
+        loop {
+            let p = self.recv();
+            if p.from == from {
+                return p;
+            }
+            stash.push(p);
+        }
+    }
+
+    /// Send the same message to every other machine.
+    pub fn broadcast(&self, msg: &Message) {
+        for to in 0..self.n {
+            if to != self.id {
+                self.send(to, msg.clone());
+            }
+        }
+    }
+}
+
+/// The cluster: builds endpoints and runs one closure per machine.
+pub struct Cluster {
+    pub n: usize,
+    meters: Arc<Vec<Meter>>,
+}
+
+impl Cluster {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let meters = Arc::new((0..n).map(|_| Meter::default()).collect::<Vec<_>>());
+        Cluster { n, meters }
+    }
+
+    /// Construct all endpoints (used by sequential protocol drivers that
+    /// want metering without threads, e.g. the tree topology).
+    pub fn endpoints(&self) -> Vec<Endpoint> {
+        let n = self.n;
+        let mut txs = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .enumerate()
+            .map(|(id, rx)| Endpoint {
+                id,
+                n,
+                rx,
+                txs: txs.clone(),
+                meters: self.meters.clone(),
+            })
+            .collect()
+    }
+
+    /// Run `f(endpoint)` on `n` threads; returns each machine's result in
+    /// machine order. Panics in any machine propagate.
+    pub fn run<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(Endpoint) -> T + Send + Sync + 'static,
+    {
+        let endpoints = self.endpoints();
+        let f = Arc::new(f);
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                let f = f.clone();
+                std::thread::Builder::new()
+                    .name(format!("machine-{}", ep.id))
+                    .spawn(move || f(ep))
+                    .expect("spawn")
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("machine panicked"))
+            .collect()
+    }
+
+    /// Traffic snapshot per machine.
+    pub fn traffic(&self) -> Vec<Traffic> {
+        self.meters
+            .iter()
+            .map(|m| Traffic {
+                sent_bits: m.sent_bits.load(Ordering::Relaxed),
+                recv_bits: m.recv_bits.load(Ordering::Relaxed),
+                sent_msgs: m.sent_msgs.load(Ordering::Relaxed),
+                recv_msgs: m.recv_msgs.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Reset counters between rounds.
+    pub fn reset_traffic(&self) {
+        for m in self.meters.iter() {
+            m.sent_bits.store(0, Ordering::Relaxed);
+            m.recv_bits.store(0, Ordering::Relaxed);
+            m.sent_msgs.store(0, Ordering::Relaxed);
+            m.recv_msgs.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Summary statistics over per-machine traffic (the paper reports the
+/// worst machine and the mean).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrafficSummary {
+    pub max_sent: u64,
+    pub max_recv: u64,
+    pub mean_sent: f64,
+    pub mean_recv: f64,
+    pub max_total: u64,
+}
+
+pub fn summarize(traffic: &[Traffic]) -> TrafficSummary {
+    let n = traffic.len().max(1) as f64;
+    TrafficSummary {
+        max_sent: traffic.iter().map(|t| t.sent_bits).max().unwrap_or(0),
+        max_recv: traffic.iter().map(|t| t.recv_bits).max().unwrap_or(0),
+        mean_sent: traffic.iter().map(|t| t.sent_bits).sum::<u64>() as f64 / n,
+        mean_recv: traffic.iter().map(|t| t.recv_bits).sum::<u64>() as f64 / n,
+        max_total: traffic.iter().map(|t| t.total_bits()).max().unwrap_or(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(bits: u64) -> Message {
+        Message {
+            bytes: vec![0u8; (bits as usize + 7) / 8],
+            bits,
+        }
+    }
+
+    #[test]
+    fn ping_pong_two_threads() {
+        let cluster = Cluster::new(2);
+        let results = cluster.run(|mut ep| {
+            let mut stash = Vec::new();
+            if ep.id == 0 {
+                ep.send(1, msg(100));
+                let p = ep.recv_from(1, &mut stash);
+                p.msg.bits
+            } else {
+                let p = ep.recv_from(0, &mut stash);
+                ep.send(0, msg(p.msg.bits * 2));
+                0
+            }
+        });
+        assert_eq!(results[0], 200);
+        let t = cluster.traffic();
+        assert_eq!(t[0].sent_bits, 100);
+        assert_eq!(t[0].recv_bits, 200);
+        assert_eq!(t[1].sent_bits, 200);
+        assert_eq!(t[1].recv_bits, 100);
+    }
+
+    #[test]
+    fn broadcast_meters_all_receivers() {
+        let cluster = Cluster::new(4);
+        cluster.run(|ep| {
+            if ep.id == 0 {
+                ep.broadcast(&msg(64));
+            } else {
+                let p = ep.recv();
+                assert_eq!(p.from, 0);
+            }
+        });
+        let t = cluster.traffic();
+        assert_eq!(t[0].sent_bits, 3 * 64);
+        for i in 1..4 {
+            assert_eq!(t[i].recv_bits, 64);
+        }
+        let s = summarize(&t);
+        assert_eq!(s.max_sent, 192);
+        assert_eq!(s.max_recv, 64);
+    }
+
+    #[test]
+    fn recv_from_stashes_out_of_order() {
+        let cluster = Cluster::new(3);
+        let results = cluster.run(|mut ep| {
+            let mut stash = Vec::new();
+            match ep.id {
+                0 => {
+                    // Wait for 2 first even though 1 likely arrives first.
+                    let a = ep.recv_from(2, &mut stash);
+                    let b = ep.recv_from(1, &mut stash);
+                    (a.msg.bits, b.msg.bits)
+                }
+                1 => {
+                    ep.send(0, msg(11));
+                    (0, 0)
+                }
+                _ => {
+                    ep.send(0, msg(22));
+                    (0, 0)
+                }
+            }
+        });
+        assert_eq!(results[0], (22, 11));
+    }
+
+    #[test]
+    fn reset_traffic_clears() {
+        let cluster = Cluster::new(2);
+        cluster.run(|ep| {
+            if ep.id == 0 {
+                ep.send(1, msg(10));
+            } else {
+                ep.recv();
+            }
+        });
+        cluster.reset_traffic();
+        assert_eq!(cluster.traffic()[0].sent_bits, 0);
+    }
+}

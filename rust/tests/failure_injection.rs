@@ -1,0 +1,153 @@
+//! Failure-injection tests: wrong parameters, corrupted wire bytes,
+//! adversarial references. The system must degrade *detectably* (robust
+//! path) or *boundedly* (plain lattice path) — never silently corrupt
+//! beyond its documented envelopes.
+
+use dme::coordinator::{variance_reduction_star, CodecSpec};
+use dme::linalg::{dist2, dist_inf, mean_vecs};
+use dme::quant::robust::{RobustAgreement, RobustOutcome};
+use dme::quant::{LatticeQuantizer, VectorCodec};
+use dme::rng::Rng;
+
+/// Corrupting color bits moves the decode to a *different lattice point*
+/// of the same lattice — the error is quantized (a multiple of s), never
+/// a garbage float.
+#[test]
+fn corrupted_message_decodes_to_lattice_point() {
+    let d = 32;
+    let q = 16u32;
+    let mut shared = Rng::new(1);
+    let mut codec = LatticeQuantizer::from_y(d, q, 1.0, &mut shared);
+    let mut rng = Rng::new(2);
+    let x: Vec<f64> = (0..d).map(|_| rng.uniform(-5.0, 5.0)).collect();
+    let mut msg = codec.encode(&x, &mut rng);
+    // Flip some bits.
+    for i in [0usize, 3, 7] {
+        msg.bytes[i] ^= 0xA5;
+    }
+    let z = codec.decode(&msg, &x);
+    // Every coordinate still reconstructs as offset + s·k for integer k.
+    for (i, zi) in z.iter().enumerate() {
+        let k = (zi - codec.lattice.offset[i]) / codec.lattice.s;
+        assert!((k - k.round()).abs() < 1e-9, "non-lattice decode at {i}");
+    }
+}
+
+/// The robust protocol's hash check catches corrupted colors with
+/// probability 1 − 2⁻³²: flipping payload bits yields FAR, not a wrong
+/// accepted value.
+#[test]
+fn robust_detects_corrupted_wire_bytes() {
+    let d = 48;
+    let ra = RobustAgreement::new(d, 16, 1.0, 42);
+    let mut rng = Rng::new(3);
+    let x: Vec<f64> = (0..d).map(|_| rng.uniform(-10.0, 10.0)).collect();
+    let mut detected = 0;
+    let trials = 50;
+    for t in 0..trials {
+        let (mut msg, _) = ra.encode_round(&x, 16);
+        let i = (t as usize) % (msg.bytes.len() - 4); // keep inside colors
+        msg.bytes[i] ^= 1 << (t % 8);
+        match ra.decode_round(&msg, &x, 16) {
+            RobustOutcome::Far => detected += 1,
+            RobustOutcome::Ok(z) => {
+                // Only acceptable if the flip didn't change any decoded
+                // index (flip in padding bits).
+                let (orig, _) = ra.encode_round(&x, 16);
+                assert_ne!(orig.bytes, msg.bytes);
+                let _ = z;
+            }
+        }
+    }
+    assert!(
+        detected >= trials * 9 / 10,
+        "only {detected}/{trials} corruptions detected"
+    );
+}
+
+/// A lying `y` (too small by 100×) breaks decoding *within the documented
+/// envelope*: decoded points stay near the reference (same-color class),
+/// within q·s of it — no unbounded blowup.
+#[test]
+fn wrong_y_fails_boundedly() {
+    let d = 16;
+    let q = 8u32;
+    let y_claimed = 0.01;
+    let mut shared = Rng::new(4);
+    let mut codec = LatticeQuantizer::from_y(d, q, y_claimed, &mut shared);
+    let mut rng = Rng::new(5);
+    let x: Vec<f64> = (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let xv: Vec<f64> = x.iter().map(|v| v + rng.uniform(-1.0, 1.0)).collect(); // 100x the claim
+    let msg = codec.encode(&x, &mut rng);
+    let z = codec.decode(&msg, &xv);
+    assert!(dist_inf(&z, &xv) <= q as f64 * codec.lattice.s);
+}
+
+/// Theorem-17 wrapper: star VR reduces error vs a single input on
+/// well-behaved inputs, and the α parameter controls the budget.
+#[test]
+fn vr_star_reduction_works() {
+    let n = 16;
+    let d = 32;
+    let sigma_c = 0.1;
+    let mut rng = Rng::new(6);
+    let nabla: Vec<f64> = (0..d).map(|_| 50.0 + rng.next_gaussian()).collect();
+    let inputs: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            nabla
+                .iter()
+                .map(|v| v + sigma_c * rng.next_gaussian())
+                .collect()
+        })
+        .collect();
+    let sigma = sigma_c * (d as f64).sqrt();
+    let mut in_err = 0.0;
+    let mut out_err = 0.0;
+    for round in 0..20 {
+        let out = variance_reduction_star(
+            &inputs,
+            &CodecSpec::Lq { q: 1024 },
+            sigma,
+            4.0,
+            7,
+            round,
+        );
+        in_err += dist2(&inputs[0], &nabla).powi(2);
+        out_err += dist2(out.estimate(), &nabla).powi(2);
+    }
+    // μ itself has variance σ²/n; quantization at q=1024 is negligible.
+    let mu = mean_vecs(&inputs);
+    assert!(out_err < in_err / 4.0, "in {in_err} out {out_err}");
+    let out = variance_reduction_star(&inputs, &CodecSpec::Lq { q: 1024 }, sigma, 4.0, 7, 99);
+    assert!(dist2(out.estimate(), &mu) < 0.05);
+}
+
+/// Zero and constant vectors round-trip through every lattice codec.
+#[test]
+fn degenerate_inputs_roundtrip() {
+    let d = 16;
+    for spec in [
+        CodecSpec::Lq { q: 8 },
+        CodecSpec::Rlq { q: 8 },
+        CodecSpec::D4 { q: 8 },
+    ] {
+        for val in [0.0, 1e6, -3.25] {
+            let x = vec![val; d];
+            let mut codec = spec.build(d, 1.0, 11, 0);
+            let mut rng = Rng::new(12);
+            let msg = codec.encode(&x, &mut rng);
+            let z = codec.decode(&msg, &x);
+            let tol = match spec {
+                // RLQ error bound is ℓ2 over the padded space.
+                CodecSpec::Rlq { .. } => 2.0,
+                _ => 1.0,
+            } + val.abs() * 1e-9;
+            assert!(
+                dist_inf(&z, &x) <= tol,
+                "{} on constant {val}: err {}",
+                spec.label(),
+                dist_inf(&z, &x)
+            );
+        }
+    }
+}

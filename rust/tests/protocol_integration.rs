@@ -1,0 +1,189 @@
+//! Protocol-level integration tests: the paper's theorems as executable
+//! contracts over the full coordinator + sim + quant stack.
+
+use dme::coordinator::{
+    mean_estimation_star, mean_estimation_tree, robust_variance_reduction, vr_y_bound, CodecSpec,
+};
+use dme::linalg::{dist2, mean_vecs};
+use dme::rng::Rng;
+use dme::sim::summarize;
+
+fn gen_inputs(n: usize, d: usize, center: f64, spread: f64, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..d)
+                .map(|_| center + rng.uniform(-spread / 2.0, spread / 2.0))
+                .collect()
+        })
+        .collect()
+}
+
+/// Theorem 2 shape: output variance scales as ~1/q² (per-coordinate
+/// uniform error), measured end-to-end through the star protocol.
+#[test]
+fn variance_scales_inverse_q_squared() {
+    let n = 8;
+    let d = 64;
+    let y = 1.0;
+    let inputs = gen_inputs(n, d, 500.0, y, 1);
+    let mu = mean_vecs(&inputs);
+    let measure = |q: u32| {
+        let trials = 120;
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let o = mean_estimation_star(&inputs, &CodecSpec::Lq { q }, y, 2, t);
+            acc += dist2(o.estimate(), &mu).powi(2);
+        }
+        acc / trials as f64
+    };
+    let v8 = measure(8);
+    let v32 = measure(32);
+    let ratio = v8 / v32;
+    // (32/8)² = 16 in the limit; wide tolerance for sampling noise.
+    assert!(
+        ratio > 6.0 && ratio < 40.0,
+        "v8/v32 = {ratio} (expected ~16)"
+    );
+}
+
+/// Theorem 3 shape: averaging n inputs reduces variance ~n-fold vs one
+/// input, through the full quantized pipeline.
+#[test]
+fn variance_reduction_scales_with_n() {
+    let d = 32;
+    let sigma_c = 0.2; // per-coordinate input std
+    let mut errs = Vec::new();
+    for &n in &[2usize, 8, 32] {
+        let trials = 60;
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let mut rng = Rng::new(1000 + t);
+            let nabla: Vec<f64> = (0..d).map(|_| 100.0 + rng.next_gaussian()).collect();
+            let inputs: Vec<Vec<f64>> = (0..n)
+                .map(|_| {
+                    nabla
+                        .iter()
+                        .map(|v| v + sigma_c * rng.next_gaussian())
+                        .collect()
+                })
+                .collect();
+            // y via the Chebyshev reduction with a fine q so quantization
+            // noise is negligible next to sampling noise.
+            let y = vr_y_bound(sigma_c * (d as f64).sqrt(), n, 4.0);
+            let o = mean_estimation_star(&inputs, &CodecSpec::Lq { q: 4096 }, y, 3, t as u64);
+            acc += dist2(o.estimate(), &nabla).powi(2);
+        }
+        errs.push(acc / trials as f64);
+    }
+    // err(n=2)/err(n=32) ≈ 16.
+    let r = errs[0] / errs[2];
+    assert!(r > 6.0, "variance must drop ~n-fold: {errs:?} (ratio {r})");
+}
+
+/// Theorem 4 behavior: expected bits stay near the base cost when inputs
+/// are concentrated, and only the outlier pair escalates otherwise.
+#[test]
+fn robust_vr_bits_concentrate() {
+    let n = 12;
+    let d = 64;
+    let sigma = 0.5;
+    let inputs = gen_inputs(n, d, 50.0, sigma, 7);
+    let out = robust_variance_reduction(&inputs, sigma, 16, 8, 0);
+    assert!(out.rounds_stage1.iter().all(|&r| r == 1));
+    let s = summarize(&out.traffic);
+    // Base cost: d·⌈log2 16⌉ + 32 hash = 288 bits forward per worker.
+    let base = (d as u64) * 4 + 32;
+    let non_leader_max = out
+        .traffic
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != out.leader)
+        .map(|(_, t)| t.sent_bits)
+        .max()
+        .unwrap();
+    assert_eq!(non_leader_max, base);
+    assert!(s.max_sent >= base * (n as u64 - 1)); // the leader's broadcast
+}
+
+/// Agreement holds across every codec family on the star topology
+/// (baselines included — they simply ignore the reference).
+#[test]
+fn star_agreement_for_all_codecs() {
+    let n = 5;
+    let d = 48;
+    let inputs = gen_inputs(n, d, 10.0, 0.5, 11);
+    for spec in [
+        CodecSpec::Lq { q: 16 },
+        CodecSpec::Rlq { q: 16 },
+        CodecSpec::LqHull { q: 16 },
+        CodecSpec::D4 { q: 16 },
+        CodecSpec::QsgdL2 { q: 16 },
+        CodecSpec::QsgdLinf { q: 16 },
+        CodecSpec::Hadamard { q: 16 },
+        CodecSpec::Vqsgd { reps: 8 },
+        CodecSpec::TernGrad,
+        CodecSpec::Full,
+    ] {
+        let out = mean_estimation_star(&inputs, &spec, 1.0, 13, 0);
+        for o in &out.outputs {
+            assert_eq!(o, &out.outputs[0], "agreement violated for {}", spec.label());
+        }
+    }
+}
+
+/// Star and tree topologies agree with each other (both estimate μ) and
+/// their traffic profiles differ exactly as the paper describes: star
+/// concentrates cost at the leader, tree spreads it.
+#[test]
+fn star_vs_tree_traffic_profile() {
+    let n = 16;
+    let d = 64;
+    let y = 1.0;
+    let inputs = gen_inputs(n, d, 0.0, y, 17);
+    let mu = mean_vecs(&inputs);
+
+    let star = mean_estimation_star(&inputs, &CodecSpec::Lq { q: 64 }, y, 19, 0);
+    let tree = mean_estimation_tree(&inputs, n, y, 19, 0);
+    assert!(dist2(star.estimate(), &mu) < 0.2);
+    assert!(dist2(tree.estimate(), &mu) < 0.2);
+
+    let st = summarize(&star.traffic);
+    let tt = summarize(&tree.traffic);
+    // Star: worst machine (leader) ≈ (n−1)× the mean worker cost.
+    assert!(st.max_sent as f64 > 5.0 * st.mean_sent);
+    // Tree: the worst machine is within a small constant of the mean.
+    assert!((tt.max_sent as f64) < 8.0 * tt.mean_sent.max(1.0));
+}
+
+/// End-to-end Experiment-5-like run: star SGD with per-round y broadcast
+/// converges on a real-shaped dataset from a far-away init.
+#[test]
+fn star_sgd_cpusmall_like_converges() {
+    use dme::coordinator::YPolicy;
+    use dme::opt::dist_gd::{run_distributed_gd, GdAggregation, GdConfig};
+    let ds = dme::data::gen_cpusmall_like(1024, 5);
+    let cfg = GdConfig {
+        n_machines: 8,
+        lr: 0.3,
+        iters: 80,
+        seed: 0,
+        y0: 200.0,
+        y_policy: YPolicy::LeaderMeasured {
+            slack: 3.0,
+            period: 1,
+        },
+        w0: Some(vec![-1000.0; ds.dim()]),
+    };
+    let t = run_distributed_gd(
+        &ds,
+        &GdAggregation::Star(CodecSpec::Lq { q: 16 }),
+        &cfg,
+    );
+    let first = t.loss[0];
+    let last = *t.loss.last().unwrap();
+    assert!(
+        last < first / 100.0,
+        "star SGD must make >100x progress: {first} → {last}"
+    );
+}

@@ -1,0 +1,227 @@
+//! Cross-layer integration: the AOT-compiled Pallas/JAX artifacts must
+//! agree with the Rust-native implementations on the same inputs.
+//!
+//! These tests require `make artifacts`; they skip (with a notice) when
+//! the artifact directory is absent so `cargo test` works on a fresh
+//! checkout.
+
+use dme::quant::{CubicLattice, LatticeQuantizer, VectorCodec};
+use dme::rng::Rng;
+use dme::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    match Engine::discover() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping runtime integration: {e}");
+            None
+        }
+    }
+}
+
+fn f32v(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&v| v as f32).collect()
+}
+
+#[test]
+fn aot_encode_decode_matches_native() {
+    let Some(eng) = engine() else { return };
+    let enc = eng.load("lattice_encode_d128_q8").unwrap();
+    let dec = eng.load("lattice_decode_d128_q8").unwrap();
+    let d = 128;
+    let q = 8;
+    let mut rng = Rng::new(5);
+    for trial in 0..20 {
+        let s = 0.05 + 0.1 * trial as f64;
+        let offset: Vec<f64> = (0..d).map(|_| rng.uniform(-s / 2.0, s / 2.0)).collect();
+        let x: Vec<f64> = (0..d).map(|_| rng.uniform(-50.0, 50.0)).collect();
+        let radius = (q as f64 - 1.0) * s / 2.0 * 0.95;
+        let xv: Vec<f64> = x.iter().map(|v| v + rng.uniform(-radius, radius)).collect();
+
+        let native = LatticeQuantizer::new(CubicLattice::with_offset(s, offset.clone()), q);
+        let (msg, _pt) = native.encode_with_point(&x);
+        let zn = native.decode(&msg, &xv);
+
+        let s_arr = [s as f32];
+        let colors = enc
+            .run_f32(&[(&f32v(&x), &[d]), (&f32v(&offset), &[d]), (&s_arr, &[1])])
+            .unwrap();
+        let za = dec
+            .run_f32(&[
+                (&colors[0], &[d]),
+                (&f32v(&xv), &[d]),
+                (&f32v(&offset), &[d]),
+                (&s_arr, &[1]),
+            ])
+            .unwrap();
+        for i in 0..d {
+            assert!(
+                (za[0][i] as f64 - zn[i]).abs() < 1e-3,
+                "trial {trial} coord {i}: aot {} native {}",
+                za[0][i],
+                zn[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn aot_rotation_matches_native_fwht() {
+    let Some(eng) = engine() else { return };
+    let rot = eng.load("rotate_d128").unwrap();
+    let unrot = eng.load("unrotate_d128").unwrap();
+    let d = 128;
+    let mut rng = Rng::new(6);
+    let x: Vec<f64> = (0..d).map(|_| rng.next_gaussian() * 3.0).collect();
+    let sign: Vec<f64> = (0..d).map(|_| rng.next_sign()).collect();
+
+    // Native: H(x·sign)
+    let mut native: Vec<f64> = x.iter().zip(&sign).map(|(a, s)| a * s).collect();
+    dme::quant::hadamard::fwht(&mut native);
+
+    let y = rot
+        .run_f32(&[(&f32v(&x), &[d]), (&f32v(&sign), &[d])])
+        .unwrap();
+    for i in 0..d {
+        assert!((y[0][i] as f64 - native[i]).abs() < 1e-3);
+    }
+    // And the inverse returns x.
+    let back = unrot
+        .run_f32(&[(&y[0], &[d]), (&f32v(&sign), &[d])])
+        .unwrap();
+    for i in 0..d {
+        assert!((back[0][i] as f64 - x[i]).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn aot_lsq_grad_matches_native() {
+    let Some(eng) = engine() else { return };
+    let g = eng.load("lsq_grad_s512_d100").unwrap();
+    let ds = dme::data::gen_lsq(512, 100, 9);
+    let w: Vec<f64> = (0..100).map(|i| (i as f64) * 0.01 - 0.5).collect();
+    let native = ds.full_gradient(&w);
+    let out = g
+        .run_f32(&[
+            (&f32v(&ds.a.data), &[512, 100]),
+            (&f32v(&w), &[100]),
+            (&f32v(&ds.b), &[512]),
+        ])
+        .unwrap();
+    for i in 0..100 {
+        let rel = (out[0][i] as f64 - native[i]).abs() / (1.0 + native[i].abs());
+        assert!(rel < 1e-4, "coord {i}: aot {} native {}", out[0][i], native[i]);
+    }
+}
+
+#[test]
+fn aot_me_round_matches_star_semantics() {
+    let Some(eng) = engine() else { return };
+    let gr = eng.load("me_round_n7_d128_q16").unwrap();
+    let d = 128;
+    let q = 16u32;
+    let s = 0.25f64;
+    let n_workers = 7;
+    let mut rng = Rng::new(11);
+    let offset: Vec<f64> = (0..d).map(|_| rng.uniform(-s / 2.0, s / 2.0)).collect();
+    let x_leader: Vec<f64> = (0..d).map(|_| 10.0 + rng.uniform(-0.4, 0.4)).collect();
+    let lat = CubicLattice::with_offset(s, offset.clone());
+    let native = LatticeQuantizer::new(lat, q);
+
+    // Worker colors + native decoded points.
+    let mut colors_flat = Vec::with_capacity(n_workers * d);
+    let mut decoded = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        let xw: Vec<f64> = x_leader.iter().map(|v| v + rng.uniform(-0.4, 0.4)).collect();
+        let (msg, _) = native.encode_with_point(&xw);
+        decoded.push(native.decode(&msg, &x_leader));
+        let cols = dme::quant::bits::unpack(&msg.bytes, 4, d);
+        colors_flat.extend(cols.iter().map(|&c| c as f32));
+    }
+    let mut mu = vec![0.0; d];
+    for z in &decoded {
+        dme::linalg::axpy(&mut mu, 1.0, z);
+    }
+    dme::linalg::axpy(&mut mu, 1.0, &x_leader);
+    let mu: Vec<f64> = mu.iter().map(|v| v / (n_workers + 1) as f64).collect();
+    let (expect_msg, _) = native.encode_with_point(&mu);
+    let expect_colors = dme::quant::bits::unpack(&expect_msg.bytes, 4, d);
+
+    let s_arr = [s as f32];
+    let out = gr
+        .run_f32(&[
+            (&colors_flat, &[n_workers, d]),
+            (&f32v(&x_leader), &[d]),
+            (&f32v(&offset), &[d]),
+            (&s_arr, &[1]),
+        ])
+        .unwrap();
+    let mut color_mismatches = 0;
+    for i in 0..d {
+        assert!(
+            (out[1][i] as f64 - mu[i]).abs() < 1e-3,
+            "mu mismatch at {i}: {} vs {}",
+            out[1][i],
+            mu[i]
+        );
+        if out[0][i] as u64 != expect_colors[i] {
+            color_mismatches += 1;
+        }
+    }
+    // The fused graph re-encodes the f32 average; values landing within
+    // ~1 ulp of a rounding boundary may flip — tolerate a handful.
+    assert!(
+        color_mismatches <= 2,
+        "too many re-encode color mismatches: {color_mismatches}"
+    );
+}
+
+#[test]
+fn aot_mlp_grad_runs_and_decreases_loss() {
+    let Some(eng) = engine() else { return };
+    let g = eng.load("mlp_grad_b128_f32_h64_c10").unwrap();
+    let (b, f, h, c) = (128usize, 32usize, 64usize, 10usize);
+    let mut rng = Rng::new(13);
+    let xb: Vec<f32> = (0..b * f).map(|_| rng.next_gaussian() as f32).collect();
+    let labels: Vec<usize> = (0..b).map(|_| rng.next_below(c as u64) as usize).collect();
+    let mut yb = vec![0.0f32; b * c];
+    for (i, &l) in labels.iter().enumerate() {
+        yb[i * c + l] = 1.0;
+    }
+    let mut w1: Vec<f32> = (0..f * h).map(|_| (rng.next_gaussian() * 0.2) as f32).collect();
+    let mut b1 = vec![0.0f32; h];
+    let mut w2: Vec<f32> = (0..h * c).map(|_| (rng.next_gaussian() * 0.2) as f32).collect();
+    let mut b2 = vec![0.0f32; c];
+
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        let out = g
+            .run_f32(&[
+                (&xb, &[b, f]),
+                (&yb, &[b, c]),
+                (&w1, &[f, h]),
+                (&b1, &[h]),
+                (&w2, &[h, c]),
+                (&b2, &[c]),
+            ])
+            .unwrap();
+        losses.push(out[0][0]);
+        let lr = 0.5f32;
+        for (p, gr) in w1.iter_mut().zip(&out[1]) {
+            *p -= lr * gr;
+        }
+        for (p, gr) in b1.iter_mut().zip(&out[2]) {
+            *p -= lr * gr;
+        }
+        for (p, gr) in w2.iter_mut().zip(&out[3]) {
+            *p -= lr * gr;
+        }
+        for (p, gr) in b2.iter_mut().zip(&out[4]) {
+            *p -= lr * gr;
+        }
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.7),
+        "training via AOT grads must reduce loss: {losses:?}"
+    );
+}
