@@ -22,10 +22,9 @@ const N: usize = 2;
 const Q: u32 = 16;
 const ITERS: usize = 150;
 
-fn main() -> anyhow::Result<()> {
-    let eng = dme::runtime::Engine::discover().map_err(|e| {
-        anyhow::anyhow!("{e}\nhint: run `make artifacts` first")
-    })?;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let eng = dme::runtime::Engine::discover()
+        .map_err(|e| format!("{e}\nhint: run `make artifacts` first"))?;
     println!("PJRT platform: {}", eng.platform());
     let g_grad = eng.load("lsq_grad_s4096_d100")?;
     let g_enc = eng.load("lattice_encode_d128_q16")?;

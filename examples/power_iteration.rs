@@ -18,9 +18,9 @@ const N: usize = 2;
 const Q: u32 = 64;
 const ITERS: usize = 60;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let eng = dme::runtime::Engine::discover()
-        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+        .map_err(|e| format!("{e}\nhint: run `make artifacts` first"))?;
     let g_upd = eng.load("power_update_s4096_d128")?;
     println!("PJRT platform: {} — power_update graph loaded\n", eng.platform());
 

@@ -3,11 +3,15 @@
 //! 1. Pairwise lattice quantization (Theorem 1's encode/decode contract).
 //! 2. MeanEstimation over a simulated 8-machine cluster, star and tree.
 //! 3. Robust (error-detecting) VarianceReduction.
+//! 4. The session API (`DmeBuilder` → `DmeSession`) — the primary entry
+//!    point: one persistent cluster driven for many rounds, as in an SGD
+//!    deployment (§9).
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use dme::coordinator::{
-    mean_estimation_star, mean_estimation_tree, robust_variance_reduction, CodecSpec,
+    mean_estimation_star, mean_estimation_tree, robust_variance_reduction, CodecSpec, DmeBuilder,
+    Topology, YPolicy,
 };
 use dme::linalg::{dist2, dist_inf, mean_vecs};
 use dme::quant::{LatticeQuantizer, VectorCodec};
@@ -79,5 +83,32 @@ fn main() {
     println!("input  ‖x₀ − ∇‖² : {:.3e}", dist2(&vr_inputs[0], &nabla).powi(2));
     println!("output ‖EST − ∇‖²: {:.3e}", dist2(&out.estimate, &nabla).powi(2));
     println!("escalation rounds per worker (stage 1): {:?}", out.rounds_stage1);
-    println!("(the outlier machine used extra rounds; everyone else paid the base cost)");
+    println!("(the outlier machine used extra rounds; everyone else paid the base cost)\n");
+
+    // ---------------------------------------------------------------
+    // 4. The session API: configure once, round many times. The cluster
+    //    threads stay alive and every per-machine buffer is recycled, so
+    //    a steady-state round allocates O(1) vectors — this is how the
+    //    optimizer drivers (opt::dist_gd etc.) consume the protocols.
+    // ---------------------------------------------------------------
+    let mut session = DmeBuilder::new(n, d)
+        .topology(Topology::Star) // or Topology::Tree { m: n }
+        .codec(CodecSpec::Lq { q })
+        .y0(1.0)
+        .y_policy(YPolicy::FromQuantized { slack: 1.5 }) // §9.2 zero-cost y maintenance
+        .seed(42)
+        .build();
+    println!("== persistent session (DmeBuilder → DmeSession) ==");
+    for round in 0..3 {
+        let out = session.round(&inputs);
+        println!(
+            "round {round}: leader={:?} agree={} ‖EST − μ‖²={:.3e} y={:.3} cum max_sent={}b",
+            out.leader,
+            out.agreement,
+            dist2(&out.estimate, &mu).powi(2),
+            out.y_used,
+            out.traffic.max_sent,
+        );
+    }
+    println!("(same protocol bits as the one-shot calls above — minus the per-round thread spawns)");
 }

@@ -2,11 +2,18 @@
 //! simulated cluster (threads + channels + bit metering included), plus
 //! the robust VR protocol — the paper's Theorem 2/3/4 operations as
 //! deployed. One row per (topology, n, d).
+//!
+//! The `session_bench` section isolates the §Perf claims behind the
+//! `DmeBuilder`/`DmeSession` redesign: spawn-per-round vs a persistent
+//! session (thread amortization) and `encode`/`decode` vs
+//! `encode_into`/`decode_into` (allocation amortization) at d ∈ {128,
+//! 4096}.
 
 use dme::bench::Bencher;
 use dme::coordinator::{
-    mean_estimation_star, mean_estimation_tree, robust_variance_reduction, CodecSpec,
+    mean_estimation_star, mean_estimation_tree, robust_variance_reduction, CodecSpec, DmeBuilder,
 };
+use dme::quant::{LatticeQuantizer, Message, VectorCodec};
 use dme::rng::Rng;
 
 fn inputs(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
@@ -56,6 +63,78 @@ fn main() {
                 robust_variance_reduction(&xs, 0.5, 16, 3, round)
             },
         );
+        println!();
+    }
+
+    session_bench(&mut b);
+}
+
+/// Spawn-per-round vs persistent session vs zero-realloc codec calls.
+fn session_bench(b: &mut Bencher) {
+    println!("# session_bench — persistent sessions + encode_into/decode_into\n");
+    let n = 8;
+    for d in [128usize, 4096] {
+        let xs = inputs(n, d, 11);
+        let spec = CodecSpec::Lq { q: 16 };
+
+        // (a) Legacy deployment: a fresh cluster per round — n thread
+        // spawns and O(n·d) fresh vectors every round. Built directly
+        // (diagnostics off) so the comparison isolates spawn + alloc
+        // cost, not the legacy wrapper's diagnostics copies.
+        let mut round = 0u64;
+        b.bench(
+            &format!("round n={n} d={d} spawn-per-round"),
+            Some((n * d) as u64),
+            || {
+                round += 1;
+                let mut one = DmeBuilder::new(n, d).codec(spec).seed(5).build();
+                one.set_round(round);
+                one.round_with_y(&xs, 1.0)
+            },
+        );
+
+        // (b) Persistent session: threads spawned once, buffers recycled,
+        // codecs write through encode_into/decode_into scratch space.
+        let mut sess = DmeBuilder::new(n, d).codec(spec).seed(5).build();
+        b.bench(
+            &format!("round n={n} d={d} persistent-session"),
+            Some((n * d) as u64),
+            || sess.round_with_y(&xs, 1.0),
+        );
+        // Both topologies stay persistent now.
+        let mut tree = DmeBuilder::new(n, d)
+            .topology(dme::coordinator::Topology::Tree { m: n })
+            .seed(5)
+            .build();
+        b.bench(
+            &format!("round n={n} d={d} persistent-tree"),
+            Some((n * d) as u64),
+            || tree.round_with_y(&xs, 1.0),
+        );
+
+        // (c) Codec level: allocating vs buffer-reusing encode/decode.
+        let mut shared = Rng::new(2);
+        let mut lq = LatticeQuantizer::from_y(d, 16, 1.0, &mut shared);
+        let x = &xs[0];
+        let xv = &xs[1];
+        let mut rng = Rng::new(3);
+        b.bench(&format!("lq encode (alloc)   d={d}"), Some(d as u64), || {
+            lq.encode(x, &mut rng)
+        });
+        let mut msg = Message::empty();
+        b.bench(&format!("lq encode_into      d={d}"), Some(d as u64), || {
+            lq.encode_into(x, &mut rng, &mut msg);
+            msg.bits
+        });
+        let wire = lq.encode(x, &mut rng);
+        b.bench(&format!("lq decode (alloc)   d={d}"), Some(d as u64), || {
+            lq.decode(&wire, xv)
+        });
+        let mut out = vec![0.0; d];
+        b.bench(&format!("lq decode_into      d={d}"), Some(d as u64), || {
+            lq.decode_into(&wire, xv, &mut out);
+            out[0]
+        });
         println!();
     }
 }

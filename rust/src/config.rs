@@ -324,6 +324,13 @@ pub struct RunConfig {
     pub samples: usize,
     /// Multiplier applied to measured distances when estimating `y`.
     pub y_slack: f64,
+    /// Session topology: `star`, `tree`, `tree:<m>`, or `both`
+    /// (CLI `dme me`/`dme vr`; parsed by
+    /// [`crate::coordinator::Topology::parse`]).
+    pub topology: String,
+    /// `dme vr`: use the error-detecting Algorithm 6 instead of the
+    /// Chebyshev reduction.
+    pub robust: bool,
 }
 
 impl Default for RunConfig {
@@ -337,6 +344,8 @@ impl Default for RunConfig {
             lr: 0.8,
             samples: 8192,
             y_slack: 1.5,
+            topology: "both".to_string(),
+            robust: true,
         }
     }
 }
@@ -360,6 +369,12 @@ impl RunConfig {
             "lr" => self.lr = parse!(),
             "samples" => self.samples = parse!(),
             "y_slack" => self.y_slack = parse!(),
+            "topology" => self.topology = value.to_string(),
+            "robust" => match value {
+                "1" | "true" | "yes" => self.robust = true,
+                "0" | "false" | "no" => self.robust = false,
+                _ => return Err(format!("bad value '{value}' for robust (0|1)")),
+            },
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -405,5 +420,17 @@ mod tests {
         assert_eq!(c.q, 64);
         assert!(c.apply("bogus", "1").is_err());
         assert!(c.apply("n", "xyz").is_err());
+    }
+
+    #[test]
+    fn topology_and_robust_keys() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.topology, "both");
+        assert!(c.robust);
+        c.apply("topology", "tree:4").unwrap();
+        c.apply("robust", "0").unwrap();
+        assert_eq!(c.topology, "tree:4");
+        assert!(!c.robust);
+        assert!(c.apply("robust", "maybe").is_err());
     }
 }

@@ -1,0 +1,1008 @@
+//! The unified session API — `DmeBuilder` → [`DmeSession`].
+//!
+//! The paper's deployment story (§9, variance-reduced parallel SGD) is
+//! thousands of rounds over the same machines, so the primary entry point
+//! is a *persistent* session rather than the historical one-shot free
+//! functions: the builder fixes the cluster shape (`n`, `d`), the
+//! [`Topology`] (star or binary tree), the [`CodecSpec`], the `y`
+//! maintenance [`YPolicy`] and the variance-reduction [`Robustness`];
+//! [`DmeSession::round`] then drives MeanEstimation rounds over
+//! long-lived machine threads, and every protocol — star, tree, robust
+//! VR, sublinear — reports through one [`RoundOutcome`].
+//!
+//! Performance (§Perf): spawning one thread per machine per round costs
+//! ~20 µs/thread, an order of magnitude more than the quantization work
+//! itself at small `d`. The session keeps the cluster threads alive and
+//! recycles every per-machine buffer through the round loop (input and
+//! output vectors ping-pong between driver and workers; encode/decode go
+//! through [`VectorCodec::encode_into`] / `decode_into` scratch space),
+//! so the steady-state round allocates O(1) rather than O(n·d) vectors.
+//!
+//! Protocol behavior is bit-identical to the legacy one-shot functions
+//! (`mean_estimation_star`, `mean_estimation_tree`,
+//! `robust_variance_reduction`) for the same `(seed, round)` — those now
+//! wrap a one-round session, and `rust/tests/session_parity.rs` pins the
+//! equivalence against independent reference implementations.
+
+use super::topology::Topology;
+use super::tree::tree_round_schedule;
+use super::variance_reduction::{robust_vr_core, vr_y_bound};
+use super::{CodecSpec, YEstimator, YPolicy};
+use crate::quant::{CubicLattice, LatticeQuantizer, Message, VectorCodec};
+use crate::rng::{hash2, Rng};
+use crate::sim::{summarize, Cluster, Endpoint, Packet, Traffic, TrafficSummary};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// How [`DmeSession::round_vr`] turns a variance bound into a protocol.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Robustness {
+    /// Theorem 17 reduction: MeanEstimation with the Chebyshev envelope
+    /// `y = 2σ√(αn)` over the session's topology. Succeeds with
+    /// probability ≥ 1 − 1/α.
+    Chebyshev,
+    /// Algorithm 6: pairwise RobustAgreement through a random leader —
+    /// bits adapt to the true distances and heavy-tailed inputs escalate
+    /// instead of corrupting the mean. `q0` is the starting quantization
+    /// parameter.
+    ErrorDetecting { q0: u32 },
+}
+
+/// One round's result — the single outcome type for every protocol the
+/// session runs (star / tree MeanEstimation, robust VR, sublinear ME).
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    /// The session round this outcome belongs to.
+    pub round: u64,
+    /// The common output estimate of the mean.
+    pub estimate: Vec<f64>,
+    /// The agreement invariant: did every machine output the same vector?
+    pub agreement: bool,
+    /// The distance bound in effect (for VR rounds: σ, or the Chebyshev
+    /// `y` via [`Robustness::Chebyshev`]).
+    pub y_used: f64,
+    /// Star leader / robust-VR leader / sublinear source machine.
+    pub leader: Option<usize>,
+    /// Tree topology: the sampled leaf set T (empty otherwise).
+    pub leaves: Vec<usize>,
+    /// Tree topology: effective color count of the tree quantizer.
+    pub q_used: Option<u32>,
+    /// Robust VR: RobustAgreement escalation rounds per worker (stage 1)
+    /// and per broadcast (stage 2); empty for other protocols.
+    pub rounds_stage1: Vec<u32>,
+    pub rounds_stage2: Vec<u32>,
+    /// Every machine's output — populated only with
+    /// [`DmeBuilder::diagnostics`] (the hot path recycles these buffers).
+    pub outputs: Vec<Vec<f64>>,
+    /// Star topology: the leader's decoded per-worker estimates, present
+    /// when diagnostics are on or the `y` policy needs them (§9.2).
+    pub decoded_at_leader: Vec<Vec<f64>>,
+    /// Exact per-machine traffic of *this round* (including `y`-policy
+    /// side communication).
+    pub round_traffic: Vec<Traffic>,
+    /// Cumulative traffic summary since session start.
+    pub traffic: TrafficSummary,
+}
+
+impl RoundOutcome {
+    /// Max bits sent by any machine this round — the per-iteration cost
+    /// the optimizer traces record.
+    pub fn max_sent_bits(&self) -> u64 {
+        self.round_traffic
+            .iter()
+            .map(|t| t.sent_bits)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Configures and builds a [`DmeSession`].
+#[derive(Clone, Debug)]
+pub struct DmeBuilder {
+    n: usize,
+    d: usize,
+    topology: Topology,
+    spec: CodecSpec,
+    y0: f64,
+    y_policy: YPolicy,
+    robustness: Robustness,
+    alpha: f64,
+    seed: u64,
+    diagnostics: bool,
+}
+
+impl DmeBuilder {
+    /// Start a builder for `n` machines exchanging `d`-dimensional
+    /// vectors. Defaults: star topology, `LQSGD(q=16)`, fixed `y = 1`,
+    /// Chebyshev VR with `α = 4`, seed 0, diagnostics off.
+    pub fn new(n: usize, d: usize) -> Self {
+        assert!(n >= 1, "need at least one machine");
+        assert!(d >= 1, "need at least one dimension");
+        DmeBuilder {
+            n,
+            d,
+            topology: Topology::Star,
+            spec: CodecSpec::Lq { q: 16 },
+            y0: 1.0,
+            y_policy: YPolicy::Fixed,
+            robustness: Robustness::Chebyshev,
+            alpha: 4.0,
+            seed: 0,
+            diagnostics: false,
+        }
+    }
+
+    /// Select the communication topology (see [`Topology`]).
+    pub fn topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
+        self
+    }
+
+    /// Select the compressor (star topology; the tree uses the paper's
+    /// own `ε = y/m²`, `q = m³` lattice parameterization). Stateful
+    /// codecs (EF-SignSGD, PowerSGD, Top-K) are built once per machine
+    /// and keep their error memory across the session's rounds; shared-
+    /// randomness codecs are rebuilt from `(seed, round)` every round.
+    pub fn codec(mut self, spec: CodecSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Initial distance bound `y` (ℓ∞; rotated-space for RLQ).
+    pub fn y0(mut self, y0: f64) -> Self {
+        assert!(y0 > 0.0, "y0 must be positive");
+        self.y0 = y0;
+        self
+    }
+
+    /// How `y` is maintained across rounds (star topology only — the
+    /// tree's `y` is an explicit per-round argument; see
+    /// [`DmeSession::round_with_y`]).
+    pub fn y_policy(mut self, policy: YPolicy) -> Self {
+        self.y_policy = policy;
+        self
+    }
+
+    /// Seed for all shared randomness (leader schedule, lattice offsets,
+    /// rotations); two sessions with equal configuration and seed run
+    /// bit-identical protocols.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Chebyshev VR failure-budget parameter (success prob ≥ 1 − 1/α).
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        assert!(alpha > 1.0, "alpha must exceed 1");
+        self.alpha = alpha;
+        self
+    }
+
+    /// Use error-detecting VR (Algorithm 6) with initial parameter `q0`
+    /// instead of the Chebyshev reduction.
+    pub fn robust(mut self, q0: u32) -> Self {
+        self.robustness = Robustness::ErrorDetecting { q0 };
+        self
+    }
+
+    /// Collect per-machine outputs and the leader's decoded points into
+    /// each [`RoundOutcome`] (off by default: the hot path recycles those
+    /// buffers instead).
+    pub fn diagnostics(mut self, on: bool) -> Self {
+        self.diagnostics = on;
+        self
+    }
+
+    /// Build the session. Machine threads spawn lazily on the first
+    /// MeanEstimation round and live until the session drops.
+    pub fn build(self) -> DmeSession {
+        if matches!(self.topology, Topology::Tree { .. }) {
+            assert!(
+                self.y_policy == YPolicy::Fixed,
+                "tree topology has no leader to measure y: use YPolicy::Fixed \
+                 and round_with_y (got {:?})",
+                self.y_policy
+            );
+        }
+        let collect_decoded = self.diagnostics || self.y_policy != YPolicy::Fixed;
+        DmeSession {
+            n: self.n,
+            d: self.d,
+            topology: self.topology,
+            spec: self.spec,
+            seed: self.seed,
+            robustness: self.robustness,
+            alpha: self.alpha,
+            diagnostics: self.diagnostics,
+            collect_decoded,
+            y_est: YEstimator::new(self.y_policy, self.y0),
+            cluster: Cluster::new(self.n),
+            workers: None,
+            round: 0,
+            last_snapshot: vec![Traffic::default(); self.n],
+            bufs: (0..self.n).map(|_| None).collect(),
+        }
+    }
+}
+
+/// A long-lived cluster running the paper's protocols round after round —
+/// see the [module docs](self) for the design and cost model.
+pub struct DmeSession {
+    n: usize,
+    d: usize,
+    topology: Topology,
+    spec: CodecSpec,
+    seed: u64,
+    robustness: Robustness,
+    alpha: f64,
+    diagnostics: bool,
+    collect_decoded: bool,
+    y_est: YEstimator,
+    cluster: Cluster,
+    workers: Option<Workers>,
+    round: u64,
+    /// Meter snapshot at the end of the previous round (per-round deltas).
+    last_snapshot: Vec<Traffic>,
+    /// Recycled per-machine (input, output) buffers.
+    bufs: Vec<Option<(Vec<f64>, Vec<f64>)>>,
+}
+
+struct Workers {
+    cmd_tx: Vec<Sender<RoundCmd>>,
+    out_rx: Vec<Receiver<WorkerOut>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// One round's instruction to a machine thread. The vectors are recycled
+/// buffers owned by the driver between rounds and by the worker during
+/// one: `input` arrives filled, `out` returns filled.
+struct RoundCmd {
+    round: u64,
+    y: f64,
+    input: Vec<f64>,
+    out: Vec<f64>,
+}
+
+struct WorkerOut {
+    input: Vec<f64>,
+    output: Vec<f64>,
+    /// Leader only, when decoded-point collection is on.
+    decoded: Vec<Vec<f64>>,
+}
+
+/// What a cluster round produced before traffic accounting.
+struct Collected {
+    estimate: Vec<f64>,
+    agreement: bool,
+    outputs: Vec<Vec<f64>>,
+    decoded_at_leader: Vec<Vec<f64>>,
+    leader: Option<usize>,
+    leaves: Vec<usize>,
+    q_used: Option<u32>,
+}
+
+fn star_leader(seed: u64, round: u64, n: usize) -> usize {
+    Rng::new(hash2(seed, round ^ 0x1EAD)).next_below(n as u64) as usize
+}
+
+impl DmeSession {
+    /// Run one MeanEstimation round with the session's current `y`
+    /// (maintained by the configured [`YPolicy`]); `inputs[v]` is machine
+    /// v's vector.
+    pub fn round(&mut self, inputs: &[Vec<f64>]) -> RoundOutcome {
+        self.check_inputs(inputs);
+        let y = self.y_est.y;
+        let round = self.next_round();
+        let parts = self.run_cluster_round(inputs, y, round);
+        // Maintain y from the leader's decoded points (§9.2 policies).
+        // The builder restricts non-Fixed policies to the star topology.
+        if self.y_est.policy != YPolicy::Fixed {
+            debug_assert!(matches!(self.topology, Topology::Star));
+            let side = self.y_est.update(&parts.decoded_at_leader, self.n);
+            if side > 0 && self.n > 1 {
+                // LeaderMeasured: the leader ships one f64 per peer.
+                let leader = parts.leader.unwrap_or(0);
+                let per = side / (self.n as u64 - 1);
+                let mut extra = vec![Traffic::default(); self.n];
+                for (v, t) in extra.iter_mut().enumerate() {
+                    if v == leader {
+                        t.sent_bits = side;
+                    } else {
+                        t.recv_bits = per;
+                    }
+                }
+                self.cluster.add_traffic(&extra);
+            }
+        }
+        self.outcome(round, y, parts)
+    }
+
+    /// Run one MeanEstimation round at an explicit distance bound,
+    /// leaving the session's `y` estimator untouched (the legacy one-shot
+    /// contract; also the natural call for the tree topology).
+    pub fn round_with_y(&mut self, inputs: &[Vec<f64>], y: f64) -> RoundOutcome {
+        self.check_inputs(inputs);
+        let round = self.next_round();
+        let parts = self.run_cluster_round(inputs, y, round);
+        self.outcome(round, y, parts)
+    }
+
+    /// Run one VarianceReduction round: inputs are i.i.d. unbiased
+    /// estimates with standard deviation ≤ `sigma`. Dispatches on the
+    /// configured [`Robustness`].
+    pub fn round_vr(&mut self, inputs: &[Vec<f64>], sigma: f64) -> RoundOutcome {
+        match self.robustness {
+            Robustness::Chebyshev => {
+                let y = vr_y_bound(sigma, self.n, self.alpha);
+                self.round_with_y(inputs, y)
+            }
+            Robustness::ErrorDetecting { q0 } => {
+                self.check_inputs(inputs);
+                let round = self.next_round();
+                let r = robust_vr_core(inputs, sigma, q0, self.seed, round);
+                self.cluster.add_traffic(&r.traffic);
+                let (round_traffic, traffic) = self.take_round_traffic();
+                RoundOutcome {
+                    round,
+                    agreement: true,
+                    y_used: sigma,
+                    leader: Some(r.leader),
+                    leaves: Vec::new(),
+                    q_used: None,
+                    rounds_stage1: r.rounds_stage1,
+                    rounds_stage2: r.rounds_stage2,
+                    outputs: if self.diagnostics {
+                        vec![r.estimate.clone(); self.n]
+                    } else {
+                        Vec::new()
+                    },
+                    decoded_at_leader: Vec::new(),
+                    estimate: r.estimate,
+                    round_traffic,
+                    traffic,
+                }
+            }
+        }
+    }
+
+    /// Run one sublinear MeanEstimation round (Algorithm 9): a random
+    /// source's input is broadcast at `~d·log₂(1+2q)` bits (`q` may be
+    /// < 1) under distance bound `y`. No averaging happens — variance
+    /// reduction is impossible in the o(d) regime (Theorem 7).
+    pub fn round_sublinear(&mut self, inputs: &[Vec<f64>], q: f64, y: f64) -> RoundOutcome {
+        self.check_inputs(inputs);
+        let round = self.next_round();
+        let out = super::sublinear_me::sublinear_mean_estimation(inputs, q, y, self.seed, round);
+        self.cluster.add_traffic(&out.traffic);
+        let (round_traffic, traffic) = self.take_round_traffic();
+        RoundOutcome {
+            round,
+            agreement: true,
+            y_used: y,
+            leader: Some(out.source),
+            leaves: Vec::new(),
+            q_used: None,
+            rounds_stage1: Vec::new(),
+            rounds_stage2: Vec::new(),
+            outputs: if self.diagnostics {
+                vec![out.estimate.clone(); self.n]
+            } else {
+                Vec::new()
+            },
+            decoded_at_leader: Vec::new(),
+            estimate: out.estimate,
+            round_traffic,
+            traffic,
+        }
+    }
+
+    /// Jump the round counter (reproduce a specific legacy round: the
+    /// one-shot wrappers use this to pin `(seed, round)` randomness).
+    pub fn set_round(&mut self, round: u64) {
+        self.round = round;
+    }
+
+    /// Rounds run so far (the next round's index).
+    pub fn rounds_run(&self) -> u64 {
+        self.round
+    }
+
+    /// The current distance-bound estimate.
+    pub fn y(&self) -> f64 {
+        self.y_est.y
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    pub fn spec(&self) -> CodecSpec {
+        self.spec
+    }
+
+    /// Cumulative traffic summary since session start.
+    pub fn cumulative_traffic(&self) -> TrafficSummary {
+        summarize(&self.cluster.traffic())
+    }
+
+    // ------------------------------------------------------------------
+    // internals
+    // ------------------------------------------------------------------
+
+    fn check_inputs(&self, inputs: &[Vec<f64>]) {
+        assert_eq!(inputs.len(), self.n, "one input vector per machine");
+        for x in inputs {
+            assert_eq!(x.len(), self.d, "input dimension mismatch");
+        }
+    }
+
+    fn next_round(&mut self) -> u64 {
+        let r = self.round;
+        self.round += 1;
+        r
+    }
+
+    /// Per-round traffic delta plus the cumulative summary.
+    fn take_round_traffic(&mut self) -> (Vec<Traffic>, TrafficSummary) {
+        let now = self.cluster.traffic();
+        let delta = now
+            .iter()
+            .zip(&self.last_snapshot)
+            .map(|(a, b)| Traffic {
+                sent_bits: a.sent_bits - b.sent_bits,
+                recv_bits: a.recv_bits - b.recv_bits,
+                sent_msgs: a.sent_msgs - b.sent_msgs,
+                recv_msgs: a.recv_msgs - b.recv_msgs,
+            })
+            .collect();
+        let summary = summarize(&now);
+        self.last_snapshot = now;
+        (delta, summary)
+    }
+
+    fn outcome(&mut self, round: u64, y: f64, parts: Collected) -> RoundOutcome {
+        let (round_traffic, traffic) = self.take_round_traffic();
+        RoundOutcome {
+            round,
+            estimate: parts.estimate,
+            agreement: parts.agreement,
+            y_used: y,
+            leader: parts.leader,
+            leaves: parts.leaves,
+            q_used: parts.q_used,
+            rounds_stage1: Vec::new(),
+            rounds_stage2: Vec::new(),
+            outputs: parts.outputs,
+            decoded_at_leader: parts.decoded_at_leader,
+            round_traffic,
+            traffic,
+        }
+    }
+
+    fn ensure_workers(&mut self) {
+        if self.workers.is_some() {
+            return;
+        }
+        let endpoints = self.cluster.endpoints();
+        let mut cmd_tx = Vec::with_capacity(self.n);
+        let mut out_rx = Vec::with_capacity(self.n);
+        let mut handles = Vec::with_capacity(self.n);
+        for ep in endpoints {
+            let (ctx, crx) = channel::<RoundCmd>();
+            let (otx, orx) = channel::<WorkerOut>();
+            cmd_tx.push(ctx);
+            out_rx.push(orx);
+            let spec = self.spec;
+            let seed = self.seed;
+            let d = self.d;
+            let collect = self.collect_decoded;
+            let topology = self.topology;
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dme-machine-{}", ep.id))
+                    .spawn(move || match topology {
+                        Topology::Star => star_worker(ep, spec, d, seed, collect, crx, otx),
+                        Topology::Tree { m } => tree_worker(ep, m, d, seed, crx, otx),
+                    })
+                    .expect("spawn machine thread"),
+            );
+        }
+        self.workers = Some(Workers {
+            cmd_tx,
+            out_rx,
+            handles,
+        });
+    }
+
+    fn run_cluster_round(&mut self, inputs: &[Vec<f64>], y: f64, round: u64) -> Collected {
+        // Protocol stats every machine derives from shared randomness —
+        // derived once more here so the driver can report them.
+        let (leader, leaves, q_used) = match self.topology {
+            Topology::Star => (Some(star_leader(self.seed, round, self.n)), Vec::new(), None),
+            Topology::Tree { m } => {
+                let (leaves, _side, q) = tree_round_schedule(self.n, m, y, self.seed, round);
+                (None, leaves, Some(q))
+            }
+        };
+
+        if self.n == 1 {
+            // Degenerate cluster: the machine outputs its own input, no
+            // communication (matches the legacy one-shot functions).
+            let x = inputs[0].clone();
+            return Collected {
+                agreement: true,
+                outputs: if self.diagnostics { vec![x.clone()] } else { Vec::new() },
+                decoded_at_leader: if self.collect_decoded && leader.is_some() {
+                    vec![x.clone()]
+                } else {
+                    Vec::new()
+                },
+                estimate: x,
+                leader,
+                leaves,
+                q_used,
+            };
+        }
+
+        self.ensure_workers();
+        let d = self.d;
+        let workers = self.workers.as_ref().expect("workers spawned");
+        for (i, input) in inputs.iter().enumerate() {
+            let (mut inbuf, outbuf) = self.bufs[i]
+                .take()
+                .unwrap_or_else(|| (vec![0.0; d], vec![0.0; d]));
+            inbuf.copy_from_slice(input);
+            workers.cmd_tx[i]
+                .send(RoundCmd {
+                    round,
+                    y,
+                    input: inbuf,
+                    out: outbuf,
+                })
+                .expect("machine thread alive");
+        }
+        let mut estimate = Vec::new();
+        let mut agreement = true;
+        let mut outputs = Vec::new();
+        let mut decoded_at_leader = Vec::new();
+        for (i, rx) in workers.out_rx.iter().enumerate() {
+            let wo = rx.recv().expect("machine thread alive");
+            if i == 0 {
+                estimate = wo.output.clone();
+            } else if agreement && wo.output != estimate {
+                agreement = false;
+            }
+            if self.diagnostics {
+                outputs.push(wo.output.clone());
+            }
+            if !wo.decoded.is_empty() {
+                decoded_at_leader = wo.decoded;
+            }
+            self.bufs[i] = Some((wo.input, wo.output));
+        }
+        Collected {
+            estimate,
+            agreement,
+            outputs,
+            decoded_at_leader,
+            leader,
+            leaves,
+            q_used,
+        }
+    }
+}
+
+impl Drop for DmeSession {
+    fn drop(&mut self) {
+        if let Some(w) = self.workers.take() {
+            // Closing the command channels unblocks every worker's recv.
+            drop(w.cmd_tx);
+            for h in w.handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Star machine loop — Algorithm 3 with persistent scratch space. The
+/// protocol (leader schedule, codec construction, encoder randomness,
+/// summation order) matches the legacy one-shot implementation exactly.
+fn star_worker(
+    mut ep: Endpoint,
+    spec: CodecSpec,
+    d: usize,
+    seed: u64,
+    collect_decoded: bool,
+    crx: Receiver<RoundCmd>,
+    otx: Sender<WorkerOut>,
+) {
+    let id = ep.id;
+    let n = ep.n;
+    let mut stash: Vec<Packet> = Vec::new();
+    let mut msg = Message::empty();
+    // Leader-role scratch, sized lazily on first leadership.
+    let mut decoded: Vec<Vec<f64>> = Vec::new();
+    let mut mu = vec![0.0; d];
+    // Stateful codecs (EF-SignSGD, PowerSGD, Top-K) carry error memory
+    // across rounds and must be built once per machine (the Aggregator
+    // contract — see `CodecSpec::is_stateful`); shared-randomness codecs
+    // are rebuilt from (seed, round) every round.
+    let mut held_codec: Option<Box<dyn VectorCodec>> = None;
+    while let Ok(RoundCmd {
+        round,
+        y,
+        input,
+        mut out,
+    }) = crx.recv()
+    {
+        let leader = star_leader(seed, round, n);
+        if held_codec.is_none() || !spec.is_stateful() {
+            held_codec = Some(spec.build(d, y, seed, round));
+        }
+        let codec = held_codec.as_mut().expect("codec built");
+        // Per-machine encoder randomness must differ across machines
+        // (stochastic rounding draws), while codec-internal *shared*
+        // randomness comes from (seed, round) inside build().
+        let mut enc_rng = Rng::new(hash2(hash2(seed, round), id as u64 + 1));
+        let mut decoded_out = Vec::new();
+        if id == leader {
+            if decoded.is_empty() {
+                decoded = vec![vec![0.0; d]; n];
+            }
+            // Gather: decode every worker's message against our input,
+            // stored by sender so the average sums in machine order
+            // (bit-for-bit the legacy order).
+            decoded[id].copy_from_slice(&input);
+            for _ in 0..n - 1 {
+                let p = ep.recv();
+                codec.decode_into(&p.msg, &input, &mut decoded[p.from]);
+            }
+            for m in mu.iter_mut() {
+                *m = 0.0;
+            }
+            for z in &decoded {
+                crate::linalg::axpy(&mut mu, 1.0, z);
+            }
+            let inv_n = 1.0 / n as f64;
+            for m in mu.iter_mut() {
+                *m = inv_n * *m;
+            }
+            // Broadcast the quantized average.
+            codec.encode_into(&mu, &mut enc_rng, &mut msg);
+            ep.broadcast(&msg);
+            codec.decode_into(&msg, &input, &mut out);
+            if collect_decoded {
+                decoded_out = decoded.clone();
+            }
+        } else {
+            codec.encode_into(&input, &mut enc_rng, &mut msg);
+            ep.send(leader, msg.clone());
+            let p = ep.recv_from(leader, &mut stash);
+            codec.decode_into(&p.msg, &input, &mut out);
+        }
+        if otx
+            .send(WorkerOut {
+                input,
+                output: out,
+                decoded: decoded_out,
+            })
+            .is_err()
+        {
+            break;
+        }
+    }
+}
+
+/// Tree machine loop — Algorithm 4. Every machine derives the full
+/// deterministic schedule (leaf sample, per-level round-robin roles,
+/// broadcast order) from shared randomness and executes only its own
+/// sends/receives; since `sim` sends never block and all machines walk
+/// the schedule in the same global (level, node, child) order, every
+/// receive's matching send is already issued — no deadlock. Messages and
+/// metering are bit-identical to the legacy sequential driver.
+fn tree_worker(
+    mut ep: Endpoint,
+    m: usize,
+    d: usize,
+    seed: u64,
+    crx: Receiver<RoundCmd>,
+    otx: Sender<WorkerOut>,
+) {
+    let id = ep.id;
+    let n = ep.n;
+    let mut stash: Vec<Packet> = Vec::new();
+    while let Ok(RoundCmd {
+        round,
+        y,
+        input,
+        mut out,
+    }) = crx.recv()
+    {
+        let (leaves, side, q) = tree_round_schedule(n, m, y, seed, round);
+        // One shared-lattice codec per round (the legacy driver rebuilds
+        // an identical one per edge; construction is deterministic in
+        // (seed, round), so one instance is equivalent).
+        let codec = {
+            let mut sr = Rng::new(hash2(seed, round));
+            LatticeQuantizer::new(CubicLattice::random_offset(d, side, &mut sr), q)
+        };
+
+        // --- Upward pass: (owner, estimate-if-mine) per node, level by
+        // level; internal node j at level l is played by machine
+        // (2j + 3l) mod n.
+        let mut ests: Vec<(usize, Option<Vec<f64>>)> = leaves
+            .iter()
+            .map(|&v| (v, if v == id { Some(input.clone()) } else { None }))
+            .collect();
+        let mut level = 0usize;
+        while ests.len() > 1 {
+            level += 1;
+            let pairs = ests.len() / 2;
+            let mut next: Vec<(usize, Option<Vec<f64>>)> = Vec::with_capacity(pairs + 1);
+            for j in 0..pairs {
+                let parent = (j * 2 + level * 3) % n;
+                let mut decoded: Vec<Vec<f64>> = Vec::with_capacity(2);
+                for c in 0..2 {
+                    let idx = 2 * j + c;
+                    let child = ests[idx].0;
+                    if child == id {
+                        let est = ests[idx].1.as_ref().expect("owner holds estimate");
+                        let (msg, _pt) = codec.encode_with_point(est);
+                        if child != parent {
+                            ep.send(parent, msg);
+                        } else {
+                            // Same machine plays both roles: no wire cost.
+                            decoded.push(codec.decode(&msg, &input));
+                        }
+                    } else if parent == id {
+                        let p = ep.recv_from(child, &mut stash);
+                        decoded.push(codec.decode(&p.msg, &input));
+                    }
+                }
+                let avg = if parent == id {
+                    Some(crate::linalg::scale(
+                        &crate::linalg::add(&decoded[0], &decoded[1]),
+                        0.5,
+                    ))
+                } else {
+                    None
+                };
+                next.push((parent, avg));
+            }
+            if ests.len() % 2 == 1 {
+                // Odd node passes through unchanged.
+                next.push(ests.pop().expect("odd tail node"));
+            }
+            ests = next;
+        }
+        let (root, root_est) = ests.pop().expect("tree root");
+
+        // --- Downward broadcast over a binary tree rooted at `root`
+        // covering all machines (ids re-indexed so root is position 0);
+        // everyone relays the identical message.
+        let mypos = (id + n - root) % n;
+        let bmsg = if id == root {
+            codec.encode_with_point(root_est.as_ref().expect("root owns estimate")).0
+        } else {
+            let parent = (root + (mypos - 1) / 2) % n;
+            ep.recv_from(parent, &mut stash).msg
+        };
+        for cpos in [2 * mypos + 1, 2 * mypos + 2] {
+            if cpos < n {
+                ep.send((root + cpos) % n, bmsg.clone());
+            }
+        }
+        codec.decode_into(&bmsg, &input, &mut out);
+
+        if otx
+            .send(WorkerOut {
+                input,
+                output: out,
+                decoded: Vec::new(),
+            })
+            .is_err()
+        {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dist_inf, mean_vecs};
+
+    fn gen(n: usize, d: usize, center: f64, spread: f64, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| center + rng.uniform(-spread, spread)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn star_session_many_rounds_agree_and_meter_cumulatively() {
+        let n = 6;
+        let d = 32;
+        let inputs = gen(n, d, 50.0, 0.4, 1);
+        let mu = mean_vecs(&inputs);
+        let mut sess = DmeBuilder::new(n, d)
+            .codec(CodecSpec::Lq { q: 64 })
+            .seed(7)
+            .build();
+        let mut prev = 0;
+        for r in 0..30 {
+            let out = sess.round_with_y(&inputs, 1.0);
+            assert_eq!(out.round, r);
+            assert!(out.agreement, "round {r} disagreed");
+            assert!(out.leader.is_some());
+            assert!(dist_inf(&out.estimate, &mu) < 0.1);
+            assert!(out.traffic.max_sent > prev, "cumulative bits must grow");
+            prev = out.traffic.max_sent;
+        }
+        assert_eq!(sess.rounds_run(), 30);
+    }
+
+    #[test]
+    fn tree_session_many_rounds_agree() {
+        let n = 8;
+        let d = 16;
+        let inputs = gen(n, d, 20.0, 0.5, 2);
+        let mu = mean_vecs(&inputs);
+        let mut sess = DmeBuilder::new(n, d)
+            .topology(Topology::Tree { m: n })
+            .seed(3)
+            .build();
+        for _ in 0..20 {
+            let out = sess.round_with_y(&inputs, 1.2);
+            assert!(out.agreement);
+            assert_eq!(out.leaves.len(), n);
+            assert!(out.q_used.is_some());
+            assert!(dist_inf(&out.estimate, &mu) < 0.5);
+        }
+    }
+
+    #[test]
+    fn round_traffic_deltas_sum_to_cumulative() {
+        let n = 5;
+        let d = 24;
+        let inputs = gen(n, d, 0.0, 0.4, 4);
+        let mut sess = DmeBuilder::new(n, d).seed(11).build();
+        let mut acc = vec![0u64; n];
+        let mut last = None;
+        for _ in 0..7 {
+            let out = sess.round_with_y(&inputs, 1.0);
+            for (a, t) in acc.iter_mut().zip(&out.round_traffic) {
+                *a += t.sent_bits;
+            }
+            last = Some(out);
+        }
+        let cum = last.unwrap().traffic;
+        assert_eq!(cum.max_sent, *acc.iter().max().unwrap());
+    }
+
+    #[test]
+    fn y_policy_adapts_inside_session() {
+        let n = 4;
+        let d = 16;
+        let inputs = gen(n, d, 5.0, 0.01, 5);
+        let mut sess = DmeBuilder::new(n, d)
+            .y0(10.0) // deliberately loose start
+            .y_policy(YPolicy::FromQuantized { slack: 1.5 })
+            .seed(6)
+            .build();
+        sess.round(&inputs);
+        assert!(sess.y() < 10.0, "y should tighten: {}", sess.y());
+    }
+
+    #[test]
+    fn chebyshev_vr_round_reduces_variance() {
+        let n = 16;
+        let d = 32;
+        let sig_c = 0.1;
+        let mut rng = Rng::new(40);
+        let nabla: Vec<f64> = (0..d).map(|_| 100.0 + rng.next_gaussian()).collect();
+        let inputs: Vec<Vec<f64>> = (0..n)
+            .map(|_| nabla.iter().map(|v| v + sig_c * rng.next_gaussian()).collect())
+            .collect();
+        let mut sess = DmeBuilder::new(n, d)
+            .codec(CodecSpec::Lq { q: 4096 })
+            .seed(41)
+            .build();
+        let out = sess.round_vr(&inputs, sig_c * (d as f64).sqrt());
+        let e_in = crate::linalg::dist2(&inputs[0], &nabla);
+        let e_out = crate::linalg::dist2(&out.estimate, &nabla);
+        assert!(e_out < e_in, "VR must reduce error: in {e_in} out {e_out}");
+    }
+
+    #[test]
+    fn robust_vr_round_reports_stages() {
+        let n = 6;
+        let d = 16;
+        let inputs = gen(n, d, 0.0, 0.05, 50);
+        let mut sess = DmeBuilder::new(n, d).robust(8).seed(51).build();
+        let out = sess.round_vr(&inputs, 0.1);
+        assert_eq!(out.rounds_stage1.len(), n - 1);
+        assert!(out.leader.is_some());
+        assert!(out.round_traffic.iter().any(|t| t.sent_bits > 0));
+    }
+
+    #[test]
+    fn sublinear_round_through_session() {
+        let inputs = gen(8, 64, 10.0, 0.5, 60);
+        let mut sess = DmeBuilder::new(8, 64).seed(61).build();
+        let out = sess.round_sublinear(&inputs, 0.2, 1.0);
+        assert!(out.leader.is_some());
+        let max_sent = out.round_traffic.iter().map(|t| t.sent_bits).max().unwrap();
+        assert!(max_sent <= 64, "sublinear bits must stay o(d): {max_sent}");
+    }
+
+    #[test]
+    fn diagnostics_mode_returns_outputs_and_decoded() {
+        let n = 4;
+        let d = 8;
+        let inputs = gen(n, d, 1.0, 0.2, 70);
+        let mut sess = DmeBuilder::new(n, d).diagnostics(true).seed(71).build();
+        let out = sess.round_with_y(&inputs, 1.0);
+        assert_eq!(out.outputs.len(), n);
+        assert_eq!(out.decoded_at_leader.len(), n);
+        for o in &out.outputs {
+            assert_eq!(o, &out.estimate);
+        }
+    }
+
+    #[test]
+    fn single_machine_identity() {
+        let inputs = gen(1, 8, 5.0, 0.1, 80);
+        let mut sess = DmeBuilder::new(1, 8).diagnostics(true).seed(81).build();
+        let out = sess.round_with_y(&inputs, 1.0);
+        assert_eq!(out.estimate, inputs[0]);
+        assert_eq!(out.round_traffic, vec![Traffic::default()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "tree topology")]
+    fn tree_rejects_adaptive_y_policy() {
+        let _ = DmeBuilder::new(4, 8)
+            .topology(Topology::Tree { m: 4 })
+            .y_policy(YPolicy::FromQuantized { slack: 1.5 })
+            .build();
+    }
+
+    #[test]
+    fn stateful_codec_persists_across_session_rounds() {
+        // EF-SignSGD's error memory must survive the round loop (the
+        // Aggregator contract): round 1 of a warm session encodes
+        // x + e with e ≠ 0, so its estimate differs from round 1 of a
+        // fresh session (e = 0) at the same (seed, round).
+        let n = 4;
+        let d = 8;
+        let inputs = gen(n, d, 0.5, 0.3, 95);
+        let mk = || DmeBuilder::new(n, d).codec(CodecSpec::EfSign).seed(21).build();
+        let mut warm = mk();
+        let _r0 = warm.round_with_y(&inputs, 1.0);
+        let r1 = warm.round_with_y(&inputs, 1.0);
+        let mut fresh = mk();
+        fresh.set_round(1);
+        let f1 = fresh.round_with_y(&inputs, 1.0);
+        assert_ne!(
+            r1.estimate, f1.estimate,
+            "error feedback must persist across session rounds"
+        );
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let inputs = gen(3, 8, 0.0, 0.3, 90);
+        let mut sess = DmeBuilder::new(3, 8).seed(91).build();
+        let _ = sess.round_with_y(&inputs, 1.0);
+        drop(sess); // must not hang or panic
+    }
+}

@@ -1,28 +1,52 @@
-//! Layer-3 coordinator — the paper's distributed algorithms.
+//! Layer-3 coordinator — the paper's distributed algorithms behind one
+//! session-oriented API.
 //!
+//! **Primary entry point:** [`DmeBuilder`] → [`DmeSession`] (module
+//! [`api`]). The builder fixes `n`, `d`, the [`Topology`] (star or
+//! binary tree), the [`CodecSpec`], the `y`-maintenance [`YPolicy`] and
+//! the VR [`Robustness`]; the session keeps the cluster threads alive
+//! across rounds (the §9 deployment pattern: thousands of rounds over
+//! the same machines) and reports every protocol through one
+//! [`RoundOutcome`].
+//!
+//! Protocol modules:
+//!
+//! * [`api`] — the `DmeBuilder`/`DmeSession` pair and `RoundOutcome`.
+//! * [`topology`] — star vs binary-tree layout selection.
 //! * [`star`] — Algorithm 3: two-round MeanEstimation through a randomly
 //!   chosen leader (expected-cost bounds, Theorem 16).
 //! * [`tree`] — Algorithm 4: binary-tree MeanEstimation with worst-case
 //!   per-machine bounds (Theorem 2).
 //! * [`variance_reduction`] — the VR reduction (Theorems 17/19) and the
 //!   error-detecting Algorithm 6 built on RobustAgreement (Theorem 4).
+//! * [`sublinear_me`] — Algorithm 9, the o(d)-bits regime.
 //! * [`y_estimator`] — the Section-9 policies for maintaining the input
 //!   variance estimate `y` across SGD iterations.
 //!
+//! The historical one-shot free functions ([`mean_estimation_star`],
+//! [`mean_estimation_tree`], [`robust_variance_reduction`],
+//! [`sublinear_mean_estimation`]) remain as thin wrappers over one-round
+//! sessions, bit-identical for the same `(seed, round)` — existing tests
+//! and experiments pin that behavior (`rust/tests/session_parity.rs`).
+//!
 //! All protocols run over [`crate::sim`] with exact bit metering; every
-//! machine's output is returned so tests can assert the *agreement*
-//! invariant (all machines output the same vector) as well as accuracy.
+//! round reports the *agreement* invariant (all machines output the same
+//! vector) alongside accuracy and traffic.
 
+pub mod api;
 pub mod session;
 pub mod star;
 pub mod sublinear_me;
+pub mod topology;
 pub mod tree;
 pub mod variance_reduction;
 pub mod y_estimator;
 
+pub use api::{DmeBuilder, DmeSession, Robustness, RoundOutcome};
 pub use session::{SessionRound, StarSession};
 pub use star::{mean_estimation_star, StarOutcome};
 pub use sublinear_me::{sublinear_mean_estimation, SublinearOutcome};
+pub use topology::Topology;
 pub use tree::{mean_estimation_tree, TreeOutcome};
 pub use variance_reduction::{
     robust_variance_reduction, variance_reduction_star, vr_y_bound, RobustVrOutcome,

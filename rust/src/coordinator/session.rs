@@ -1,23 +1,16 @@
-//! Persistent star session — the multi-round deployment of Algorithm 3.
+//! Back-compat star session — the original persistent-cluster API, now a
+//! thin shim over the topology-agnostic [`super::DmeSession`].
 //!
-//! [`super::star::mean_estimation_star`] spawns one thread per machine
-//! per round, which is faithful but dominates wall time for small d
-//! (§Perf: ~20 µs/thread spawn vs ~3 µs of quantization work at d=128).
-//! In an SGD deployment the same machines run thousands of rounds, so
-//! this module keeps the cluster threads alive and drives rounds through
-//! per-machine input/output channels. Bit metering and protocol logic
-//! are identical (same codec construction, same leader schedule).
+//! Historically this module carried the only multi-round deployment of
+//! Algorithm 3 (star-only, input vectors cloned into every round). The
+//! generalized session in [`super::api`] supersedes it: both topologies,
+//! recycled buffers, unified [`super::RoundOutcome`]. `StarSession` is
+//! kept so existing callers and benchmarks compile unchanged; new code
+//! should use [`super::DmeBuilder`] directly.
 
+use super::api::DmeBuilder;
 use super::CodecSpec;
-use crate::rng::{hash2, Rng};
-use crate::sim::{summarize, Cluster, TrafficSummary};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread::JoinHandle;
-
-enum Cmd {
-    Round { round: u64, y: f64, input: Vec<f64> },
-    Shutdown,
-}
+use crate::sim::TrafficSummary;
 
 /// One round's result from a persistent session.
 #[derive(Clone, Debug)]
@@ -30,103 +23,27 @@ pub struct SessionRound {
 
 /// A long-lived star-topology cluster: spawn once, run many rounds.
 pub struct StarSession {
-    n: usize,
+    inner: super::DmeSession,
     spec: CodecSpec,
-    seed: u64,
-    cmd_tx: Vec<Sender<Cmd>>,
-    out_rx: Vec<Receiver<Vec<f64>>>,
-    handles: Vec<JoinHandle<()>>,
-    cluster: Cluster,
-    round: u64,
 }
 
 impl StarSession {
     pub fn new(n: usize, d: usize, spec: CodecSpec, seed: u64) -> Self {
         assert!(n >= 2);
-        let cluster = Cluster::new(n);
-        let endpoints = cluster.endpoints();
-        let mut cmd_tx = Vec::with_capacity(n);
-        let mut out_rx = Vec::with_capacity(n);
-        let mut handles = Vec::with_capacity(n);
-        for mut ep in endpoints {
-            let (ctx, crx) = channel::<Cmd>();
-            let (otx, orx) = channel::<Vec<f64>>();
-            cmd_tx.push(ctx);
-            out_rx.push(orx);
-            let spec = spec;
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("star-machine-{}", ep.id))
-                    .spawn(move || {
-                        let id = ep.id;
-                        let n = ep.n;
-                        let mut stash = Vec::new();
-                        while let Ok(Cmd::Round { round, y, input }) = crx.recv() {
-                            let leader = Rng::new(hash2(seed, round ^ 0x1EAD))
-                                .next_below(n as u64)
-                                as usize;
-                            let mut codec = spec.build(d, y, seed, round);
-                            let mut enc_rng =
-                                Rng::new(hash2(hash2(seed, round), id as u64 + 1));
-                            let output = if id == leader {
-                                let mut sum = input.clone();
-                                for _ in 0..n - 1 {
-                                    let p = ep.recv();
-                                    let z = codec.decode(&p.msg, &input);
-                                    crate::linalg::axpy(&mut sum, 1.0, &z);
-                                }
-                                let mu = crate::linalg::scale(&sum, 1.0 / n as f64);
-                                let bmsg = codec.encode(&mu, &mut enc_rng);
-                                ep.broadcast(&bmsg);
-                                codec.decode(&bmsg, &input)
-                            } else {
-                                let msg = codec.encode(&input, &mut enc_rng);
-                                ep.send(leader, msg);
-                                let p = ep.recv_from(leader, &mut stash);
-                                codec.decode(&p.msg, &input)
-                            };
-                            let _ = otx.send(output);
-                        }
-                    })
-                    .expect("spawn"),
-            );
-        }
         StarSession {
-            n,
+            inner: DmeBuilder::new(n, d).codec(spec).seed(seed).build(),
             spec,
-            seed,
-            cmd_tx,
-            out_rx,
-            handles,
-            cluster,
-            round: 0,
         }
     }
 
     /// Run one MeanEstimation round; `inputs[v]` is machine v's vector.
     pub fn round(&mut self, inputs: &[Vec<f64>], y: f64) -> SessionRound {
-        assert_eq!(inputs.len(), self.n);
-        let round = self.round;
-        self.round += 1;
-        for (tx, input) in self.cmd_tx.iter().zip(inputs) {
-            tx.send(Cmd::Round {
-                round,
-                y,
-                input: input.clone(),
-            })
-            .expect("machine alive");
-        }
-        let mut outputs: Vec<Vec<f64>> = Vec::with_capacity(self.n);
-        for rx in &self.out_rx {
-            outputs.push(rx.recv().expect("machine alive"));
-        }
-        debug_assert!(outputs.iter().all(|o| o == &outputs[0]));
-        let leader =
-            Rng::new(hash2(self.seed, round ^ 0x1EAD)).next_below(self.n as u64) as usize;
+        let out = self.inner.round_with_y(inputs, y);
+        debug_assert!(out.agreement);
         SessionRound {
-            estimate: outputs.swap_remove(0),
-            leader,
-            traffic: summarize(&self.cluster.traffic()),
+            estimate: out.estimate,
+            leader: out.leader.expect("star round reports a leader"),
+            traffic: out.traffic,
         }
     }
 
@@ -135,19 +52,7 @@ impl StarSession {
     }
 
     pub fn rounds_run(&self) -> u64 {
-        self.round
-    }
-}
-
-impl Drop for StarSession {
-    fn drop(&mut self) {
-        for tx in &self.cmd_tx {
-            let _ = tx.send(Cmd::Shutdown);
-        }
-        // Channels closing unblocks recv(); join everything.
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        self.inner.rounds_run()
     }
 }
 
@@ -155,6 +60,7 @@ impl Drop for StarSession {
 mod tests {
     use super::*;
     use crate::linalg::{dist_inf, mean_vecs};
+    use crate::rng::Rng;
 
     fn gen(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
         let mut rng = Rng::new(seed);

@@ -7,16 +7,17 @@
 //! output. Expected per-machine cost is `O(d log q)` bits (Theorem 16)
 //! because the `O(nd log q)` leader role is uniformly random.
 //!
-//! The implementation runs one OS thread per machine over [`crate::sim`]
-//! and works for *any* [`CodecSpec`]; for reference-free baselines the
-//! protocol degenerates to quantized gather + broadcast, which is exactly
-//! how the paper's Experiment 5 runs them.
+//! The protocol runs on the persistent machine threads of
+//! [`super::DmeSession`] and works for *any* [`CodecSpec`]; for
+//! reference-free baselines it degenerates to quantized gather +
+//! broadcast, which is exactly how the paper's Experiment 5 runs them.
+//! [`mean_estimation_star`] is the legacy one-round entry point, kept as
+//! a thin wrapper over a one-round session (bit-identical outputs and
+//! metering; see `rust/tests/session_parity.rs`).
 
+use super::api::DmeBuilder;
 use super::CodecSpec;
-use crate::linalg::scale;
-use crate::rng::{hash2, Rng};
-use crate::sim::{Cluster, Traffic};
-use std::sync::Arc;
+use crate::sim::Traffic;
 
 /// Result of one star-topology MeanEstimation round.
 #[derive(Clone, Debug)]
@@ -42,7 +43,9 @@ impl StarOutcome {
     }
 }
 
-/// Run one MeanEstimation round over the star topology.
+/// Run one MeanEstimation round over the star topology — legacy one-round
+/// entry point; new code should hold a [`DmeBuilder`]-built session
+/// across rounds.
 ///
 /// * `inputs[v]` — machine v's vector (all of equal dimension `d`).
 /// * `spec`, `y` — compressor and its distance-bound parameter (for RLQ,
@@ -58,85 +61,18 @@ pub fn mean_estimation_star(
     let n = inputs.len();
     assert!(n >= 1);
     let d = inputs[0].len();
-    let leader = Rng::new(hash2(seed, round ^ 0x1EAD)).next_below(n as u64) as usize;
-    if n == 1 {
-        return StarOutcome {
-            outputs: vec![inputs[0].clone()],
-            decoded_at_leader: vec![inputs[0].clone()],
-            traffic: vec![Traffic::default()],
-            leader,
-        };
-    }
-
-    let cluster = Cluster::new(n);
-    let inputs = Arc::new(inputs.to_vec());
-    let spec = *spec;
-
-    struct MachineOut {
-        output: Vec<f64>,
-        decoded: Vec<Vec<f64>>, // leader only
-    }
-
-    let results = cluster.run(move |mut ep| {
-        let id = ep.id;
-        let x = &inputs[id];
-        let mut stash = Vec::new();
-        // Per-machine encoder randomness must differ across machines
-        // (stochastic rounding draws), while codec-internal *shared*
-        // randomness comes from (seed, round) inside build().
-        let mut enc_rng = Rng::new(hash2(hash2(seed, round), id as u64 + 1));
-        let mut codec = spec.build(d, y, seed, round);
-
-        if id == leader {
-            // Gather: decode every worker's message against our input.
-            let mut decoded: Vec<Vec<f64>> = vec![Vec::new(); n];
-            decoded[id] = x.clone();
-            for _ in 0..n - 1 {
-                let p = ep.recv();
-                decoded[p.from] = codec.decode(&p.msg, x);
-            }
-            // Average all n estimates (leader's own input included,
-            // exactly as Algorithm 3's "v simulates sending Q(x_v)" —
-            // using the raw input only sharpens the leader's own term).
-            let mut mu = vec![0.0; d];
-            for v in &decoded {
-                crate::linalg::axpy(&mut mu, 1.0, v);
-            }
-            let mu = scale(&mu, 1.0 / n as f64);
-            // Broadcast the quantized average.
-            let bmsg = codec.encode(&mu, &mut enc_rng);
-            ep.broadcast(&bmsg);
-            let output = codec.decode(&bmsg, x);
-            MachineOut {
-                output,
-                decoded,
-            }
-        } else {
-            let msg = codec.encode(x, &mut enc_rng);
-            ep.send(leader, msg);
-            let p = ep.recv_from(leader, &mut stash);
-            let output = codec.decode(&p.msg, x);
-            MachineOut {
-                output,
-                decoded: Vec::new(),
-            }
-        }
-    });
-
-    let traffic = cluster.traffic();
-    let mut outputs = Vec::with_capacity(n);
-    let mut decoded_at_leader = Vec::new();
-    for (i, r) in results.into_iter().enumerate() {
-        if i == leader {
-            decoded_at_leader = r.decoded;
-        }
-        outputs.push(r.output);
-    }
+    let mut sess = DmeBuilder::new(n, d)
+        .codec(*spec)
+        .seed(seed)
+        .diagnostics(true)
+        .build();
+    sess.set_round(round);
+    let out = sess.round_with_y(inputs, y);
     StarOutcome {
-        outputs,
-        decoded_at_leader,
-        traffic,
-        leader,
+        outputs: out.outputs,
+        decoded_at_leader: out.decoded_at_leader,
+        traffic: out.round_traffic,
+        leader: out.leader.expect("star round reports a leader"),
     }
 }
 
@@ -144,6 +80,7 @@ pub fn mean_estimation_star(
 mod tests {
     use super::*;
     use crate::linalg::{dist2, dist_inf, mean_vecs};
+    use crate::rng::Rng;
 
     fn gen_inputs(n: usize, d: usize, center: f64, spread: f64, seed: u64) -> Vec<Vec<f64>> {
         let mut rng = Rng::new(seed);

@@ -1,0 +1,68 @@
+//! Communication topologies the unified session API runs over.
+//!
+//! The paper gives two MeanEstimation layouts with complementary cost
+//! profiles: the star (Algorithm 3, expected `O(d log q)` bits per
+//! machine, leader pays `O(nd log q)`) and the binary tree (Algorithm 4,
+//! worst-case `O(d log q)` for everyone). [`Topology`] selects between
+//! them at session-build time; the rest of the
+//! [`DmeSession`](super::DmeSession) API is identical for both.
+
+/// Which protocol layout a [`super::DmeSession`] drives each round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Algorithm 3: two rounds through a per-round random leader.
+    Star,
+    /// Algorithm 4: `min(m, n)` sampled leaves averaged up a binary tree
+    /// with re-quantization at every internal node, then broadcast down.
+    /// `m` is the sample size (`m >= n` ⇒ every machine is a leaf). The
+    /// tree codec is the paper's own parameterization (`ε = y/m²`,
+    /// `q = m³` — see [`super::tree::tree_params`]); the session's
+    /// [`super::CodecSpec`] is not consulted.
+    Tree { m: usize },
+}
+
+impl Topology {
+    /// Short label for tables and CLI output.
+    pub fn label(&self) -> String {
+        match *self {
+            Topology::Star => "star".to_string(),
+            Topology::Tree { m } => format!("tree(m={m})"),
+        }
+    }
+
+    /// Parse a CLI argument: `star`, `tree` (full participation given
+    /// `n`), or `tree:<m>`.
+    pub fn parse(s: &str, n: usize) -> Result<Topology, String> {
+        match s {
+            "star" => Ok(Topology::Star),
+            "tree" => Ok(Topology::Tree { m: n }),
+            _ => match s.strip_prefix("tree:") {
+                Some(m) => m
+                    .parse()
+                    .map(|m| Topology::Tree { m })
+                    .map_err(|_| format!("bad tree sample size '{m}'")),
+                None => Err(format!("unknown topology '{s}' (star | tree | tree:<m>)")),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(Topology::parse("star", 8), Ok(Topology::Star));
+        assert_eq!(Topology::parse("tree", 8), Ok(Topology::Tree { m: 8 }));
+        assert_eq!(Topology::parse("tree:4", 8), Ok(Topology::Tree { m: 4 }));
+        assert!(Topology::parse("ring", 8).is_err());
+        assert!(Topology::parse("tree:x", 8).is_err());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Topology::Star.label(), "star");
+        assert_eq!(Topology::Tree { m: 4 }.label(), "tree(m=4)");
+    }
+}

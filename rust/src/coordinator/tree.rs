@@ -9,15 +9,18 @@
 //! the identical message.
 //!
 //! Internal-node roles are assigned to machines round-robin so every
-//! machine plays O(1) roles (the paper's requirement); bits are metered
-//! against the *machine* playing each role via [`crate::sim`] endpoints
-//! driven sequentially (the tree has data dependencies level by level, so
-//! sequential execution is the faithful schedule).
+//! machine plays O(1) roles (the paper's requirement). The protocol now
+//! executes on the persistent machine threads of
+//! [`super::DmeSession`] — every machine derives the full deterministic
+//! schedule from shared randomness and runs its own sends/receives —
+//! and [`mean_estimation_tree`] is a thin one-round wrapper kept for the
+//! legacy API (bit-identical outputs and metering; see
+//! `rust/tests/session_parity.rs`).
 
-use crate::linalg::scale;
-use crate::quant::VectorCodec;
+use super::api::DmeBuilder;
+use super::topology::Topology;
 use crate::rng::{hash2, Rng};
-use crate::sim::{Cluster, Traffic};
+use crate::sim::Traffic;
 
 /// Result of one tree-topology MeanEstimation round.
 #[derive(Clone, Debug)]
@@ -46,7 +49,30 @@ pub fn tree_params(m: usize, y: f64) -> (f64, u32) {
     (side.max(f64::MIN_POSITIVE), q.max(4))
 }
 
-/// Run Algorithm 4 with sample size `m`.
+/// The deterministic per-round schedule every machine (and the session
+/// driver) derives from shared randomness: the sampled leaf set plus the
+/// quantizer parameters `(leaves, side, q)`.
+pub(crate) fn tree_round_schedule(
+    n: usize,
+    m: usize,
+    y: f64,
+    seed: u64,
+    round: u64,
+) -> (Vec<usize>, f64, u32) {
+    let mut shared = Rng::new(hash2(seed, round ^ 0x7EEE));
+    let m_eff = m.min(n).next_power_of_two().min(n.next_power_of_two());
+    // Sample T uniformly (if m >= n, T = all machines).
+    let leaves: Vec<usize> = if m_eff >= n {
+        (0..n).collect()
+    } else {
+        shared.sample_indices(n, m_eff)
+    };
+    let (side, q) = tree_params(m.max(2), y);
+    (leaves, side, q)
+}
+
+/// Run Algorithm 4 with sample size `m` — legacy one-round entry point;
+/// new code should hold a [`DmeBuilder`]-built session across rounds.
 pub fn mean_estimation_tree(
     inputs: &[Vec<f64>],
     m: usize,
@@ -57,111 +83,18 @@ pub fn mean_estimation_tree(
     let n = inputs.len();
     assert!(n >= 1);
     let d = inputs[0].len();
-    let mut shared = Rng::new(hash2(seed, round ^ 0x7EEE));
-    let m_eff = m.min(n).next_power_of_two().min(n.next_power_of_two());
-    // Sample T uniformly (if m >= n, T = all machines).
-    let leaves: Vec<usize> = if m_eff >= n {
-        (0..n).collect()
-    } else {
-        shared.sample_indices(n, m_eff)
-    };
-    let _n_leaves = leaves.len();
-    let (side, q) = tree_params(m.max(2), y);
-
-    // Build one shared-lattice codec (same (seed,round) ⇒ same offset).
-    let make_codec = || {
-        let mut sr = Rng::new(hash2(seed, round));
-        crate::quant::LatticeQuantizer::new(
-            crate::quant::CubicLattice::random_offset(d, side, &mut sr),
-            q,
-        )
-    };
-
-    if n == 1 {
-        return TreeOutcome {
-            outputs: vec![inputs[0].clone()],
-            traffic: vec![Traffic::default()],
-            leaves,
-            q_used: q,
-        };
-    }
-
-    let cluster = Cluster::new(n);
-    let mut eps = cluster.endpoints();
-
-    // --- Upward pass over a complete binary tree with `n_leaves` leaves.
-    // Level 0: the sampled leaves' own inputs. Internal node j at level l
-    // is played by machine role_of(l, j) (round-robin over all machines).
-    let role_of = |level: usize, j: usize| -> usize { (j * 2 + level * 3) % n };
-    let mut estimates: Vec<Vec<f64>> = leaves.iter().map(|&v| inputs[v].clone()).collect();
-    let mut owners: Vec<usize> = leaves.clone();
-    let mut level = 0usize;
-    while estimates.len() > 1 {
-        level += 1;
-        let mut next_est = Vec::with_capacity(estimates.len() / 2);
-        let mut next_own = Vec::with_capacity(estimates.len() / 2);
-        for j in 0..estimates.len() / 2 {
-            let parent = role_of(level, j);
-            // Children send their quantized estimates to the parent.
-            let mut decoded = Vec::with_capacity(2);
-            for c in 0..2 {
-                let child_idx = 2 * j + c;
-                let child = owners[child_idx];
-                let codec = make_codec();
-                let (msg, _pt) = codec.encode_with_point(&estimates[child_idx]);
-                if child != parent {
-                    eps[child].send(parent, msg.clone());
-                    let p = {
-                        let mut stash = Vec::new();
-                        eps[parent].recv_from(child, &mut stash)
-                    };
-                    decoded.push(codec.decode(&p.msg, &inputs[parent]));
-                } else {
-                    // Same machine plays both roles: no wire cost.
-                    decoded.push(codec.decode(&msg, &inputs[parent]));
-                }
-            }
-            let avg = scale(&crate::linalg::add(&decoded[0], &decoded[1]), 0.5);
-            next_est.push(avg);
-            next_own.push(parent);
-        }
-        if estimates.len() % 2 == 1 {
-            // Odd node passes through unchanged.
-            next_est.push(estimates.last().unwrap().clone());
-            next_own.push(*owners.last().unwrap());
-        }
-        estimates = next_est;
-        owners = next_own;
-    }
-    let root_est = estimates.pop().unwrap();
-    let root = owners.pop().unwrap();
-
-    // --- Downward broadcast over a binary tree rooted at `root` covering
-    // all machines; everyone relays the identical message.
-    let codec = make_codec();
-    let (bmsg, _pt) = codec.encode_with_point(&root_est);
-    // BFS order: machine ids re-indexed so root is position 0.
-    let order: Vec<usize> = (0..n).map(|i| (root + i) % n).collect();
-    for pos in 0..n {
-        let me = order[pos];
-        let c1 = 2 * pos + 1;
-        let c2 = 2 * pos + 2;
-        for c in [c1, c2] {
-            if c < n {
-                eps[me].send(order[c], bmsg.clone());
-                // Receive at the child (sequential schedule).
-                let mut stash = Vec::new();
-                let _ = eps[order[c]].recv_from(me, &mut stash);
-            }
-        }
-    }
-    let outputs: Vec<Vec<f64>> = (0..n).map(|v| codec.decode(&bmsg, &inputs[v])).collect();
-
+    let mut sess = DmeBuilder::new(n, d)
+        .topology(Topology::Tree { m })
+        .seed(seed)
+        .diagnostics(true)
+        .build();
+    sess.set_round(round);
+    let out = sess.round_with_y(inputs, y);
     TreeOutcome {
-        outputs,
-        traffic: cluster.traffic(),
-        leaves,
-        q_used: q,
+        outputs: out.outputs,
+        traffic: out.round_traffic,
+        leaves: out.leaves,
+        q_used: out.q_used.expect("tree round reports q"),
     }
 }
 
@@ -253,5 +186,13 @@ mod tests {
                 assert_eq!(o, &out.outputs[0]);
             }
         }
+    }
+
+    #[test]
+    fn single_machine_identity() {
+        let inputs = gen_inputs(1, 8, 5.0, 0.1, 10);
+        let out = mean_estimation_tree(&inputs, 1, 1.0, 11, 0);
+        assert_eq!(out.estimate(), &inputs[0][..]);
+        assert_eq!(out.traffic, vec![Traffic::default()]);
     }
 }

@@ -52,7 +52,35 @@ pub struct RobustVrOutcome {
 /// `q0` is the initial quantization parameter; `sigma` the input standard
 /// deviation estimate (sets the initial lattice scale ε = σ/q0²-ish; we
 /// use the practical `s = 2σ/(q0−1)` and let escalation absorb outliers).
+///
+/// Legacy one-round entry point, now a thin wrapper over a one-round
+/// [`super::DmeSession`] built with
+/// [`robust(q0)`](super::DmeBuilder::robust); bit-identical behavior.
 pub fn robust_variance_reduction(
+    inputs: &[Vec<f64>],
+    sigma: f64,
+    q0: u32,
+    seed: u64,
+    round: u64,
+) -> RobustVrOutcome {
+    let n = inputs.len();
+    assert!(n >= 1);
+    let d = inputs[0].len();
+    let mut sess = super::api::DmeBuilder::new(n, d).robust(q0).seed(seed).build();
+    sess.set_round(round);
+    let out = sess.round_vr(inputs, sigma);
+    RobustVrOutcome {
+        estimate: out.estimate,
+        traffic: out.round_traffic,
+        leader: out.leader.expect("robust VR reports a leader"),
+        rounds_stage1: out.rounds_stage1,
+        rounds_stage2: out.rounds_stage2,
+    }
+}
+
+/// The sequential Algorithm-6 round shared by the session API and the
+/// legacy wrapper above.
+pub(crate) fn robust_vr_core(
     inputs: &[Vec<f64>],
     sigma: f64,
     q0: u32,

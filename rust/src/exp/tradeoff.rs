@@ -10,7 +10,7 @@
 //! measurement).
 
 use super::{render_table, ExpOpts};
-use crate::coordinator::{mean_estimation_star, mean_estimation_tree, CodecSpec};
+use crate::coordinator::{CodecSpec, DmeBuilder, Topology};
 use crate::linalg::{dist2, mean_vecs};
 use crate::rng::Rng;
 
@@ -34,14 +34,17 @@ pub fn run(opts: &ExpOpts) -> String {
 
     let mut rows = Vec::new();
     for q in [4u32, 8, 16, 32, 64, 128] {
-        // Star topology measurements.
+        // Star topology measurements over one persistent session (the
+        // round counter advances the shared randomness per trial exactly
+        // as the historical per-trial one-shot calls did).
+        let mut star = DmeBuilder::new(n, d).codec(CodecSpec::Lq { q }).seed(7).build();
         let mut var_star = 0.0;
         let mut bits_star = 0u64;
-        for t in 0..trials {
-            let o = mean_estimation_star(&inputs, &CodecSpec::Lq { q }, y, 7, t);
-            var_star += dist2(o.estimate(), &mu).powi(2);
+        for _ in 0..trials {
+            let o = star.round_with_y(&inputs, y);
+            var_star += dist2(&o.estimate, &mu).powi(2);
             bits_star = bits_star.max(
-                o.traffic
+                o.round_traffic
                     .iter()
                     .map(|tr| tr.sent_bits + tr.recv_bits)
                     .max()
@@ -50,13 +53,17 @@ pub fn run(opts: &ExpOpts) -> String {
         }
         var_star /= trials as f64;
         // Tree topology.
+        let mut tree = DmeBuilder::new(n, d)
+            .topology(Topology::Tree { m: q as usize })
+            .seed(8)
+            .build();
         let mut var_tree = 0.0;
         let mut bits_tree = 0u64;
-        for t in 0..trials {
-            let o = mean_estimation_tree(&inputs, q as usize, y, 8, t);
-            var_tree += dist2(o.estimate(), &mu).powi(2);
+        for _ in 0..trials {
+            let o = tree.round_with_y(&inputs, y);
+            var_tree += dist2(&o.estimate, &mu).powi(2);
             bits_tree = bits_tree.max(
-                o.traffic
+                o.round_traffic
                     .iter()
                     .map(|tr| tr.sent_bits + tr.recv_bits)
                     .max()

@@ -17,21 +17,64 @@
 //!   against), and the PJRT runtime that loads the AOT artifacts. Python is
 //!   never on the request path.
 //!
+//! The primary entry point is the **session API**: a
+//! [`coordinator::DmeBuilder`] configures the cluster shape, topology,
+//! codec and `y` policy once, and the [`coordinator::DmeSession`] it
+//! builds keeps the machine threads alive across rounds — the paper's §9
+//! deployment pattern (thousands of rounds inside an optimizer loop),
+//! with per-round buffers recycled through
+//! [`quant::VectorCodec::encode_into`] / `decode_into` scratch space:
+//!
+//! ```
+//! use dme::coordinator::{CodecSpec, DmeBuilder, Topology};
+//!
+//! let n = 4;
+//! let d = 16;
+//! let inputs: Vec<Vec<f64>> = (0..n)
+//!     .map(|i| vec![10.0 + 0.01 * i as f64; d])
+//!     .collect();
+//! let mut session = DmeBuilder::new(n, d)
+//!     .topology(Topology::Star) // or Topology::Tree { m: n }
+//!     .codec(CodecSpec::Lq { q: 16 })
+//!     .seed(7)
+//!     .build();
+//! for _ in 0..3 {
+//!     let out = session.round_with_y(&inputs, 1.0);
+//!     assert!(out.agreement, "all machines output the same vector");
+//! }
+//! ```
+//!
+//! The historical one-shot free functions (`mean_estimation_star`,
+//! `mean_estimation_tree`, `robust_variance_reduction`, …) remain as thin
+//! wrappers over one-round sessions, bit-identical for the same
+//! `(seed, round)`.
+//!
 //! The public API is organized as:
 //!
 //! * [`quant`] — quantizers: `LatticeQuantizer` (LQSGD), `RotatedLattice`
 //!   (RLQSGD), robust/error-detecting agreement, the sublinear scheme, and
 //!   baselines (QSGD, Suresh–Hadamard, vQSGD, EF-SignSGD, PowerSGD, TernGrad,
 //!   Top-K).
-//! * [`coordinator`] — the paper's algorithms 3–6 over a simulated
-//!   message-passing cluster.
+//! * [`coordinator`] — the `DmeBuilder`/`DmeSession` API and the paper's
+//!   algorithms 3–6 over a simulated message-passing cluster.
 //! * [`sim`] — the in-process distributed substrate (threads + channels with
 //!   exact per-machine bit metering).
-//! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
+//! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`
+//!   (feature `pjrt`; a stub otherwise).
 //! * [`data`], [`opt`] — workload substrates (datasets, SGD/local-SGD/power
-//!   iteration drivers).
+//!   iteration drivers, all consuming the session API).
 //! * [`exp`] — the benchmark harness regenerating every figure and table of
 //!   the paper's Section 9.
+
+// Style posture for `clippy -D warnings` in CI: the offline substrate is
+// written with explicit index loops and ceil-divisions where they read
+// closer to the paper's pseudocode; keep those patterns allowed.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_div_ceil,
+    clippy::too_many_arguments,
+    clippy::type_complexity
+)]
 
 pub mod bench;
 pub mod config;

@@ -1,16 +1,18 @@
 //! `dme` — CLI for the lattice-DME reproduction.
 //!
 //! Subcommands:
-//!   dme exp <1..8|tradeoff|all> [scale=<f>] [seeds=<n>]   regenerate figures/tables
-//!   dme me  [n=..] [d=..] [q=..] [seed=..]                one MeanEstimation round (star+tree)
-//!   dme vr  [n=..] [d=..] [q=..] [seed=..]                robust VarianceReduction round
-//!   dme runtime [graph=<name>]                            PJRT artifact smoke check
-//!   dme info                                              artifact + config summary
+//!   dme exp <1..8|tradeoff|all> [scale=<f>] [seeds=<n>]       regenerate figures/tables
+//!   dme me  [n=..] [d=..] [q=..] [seed=..] [topology=..]      MeanEstimation rounds
+//!   dme vr  [n=..] [d=..] [q=..] [seed=..] [topology=..] [robust=0|1]
+//!                                                             VarianceReduction round
+//!   dme runtime [graph=<name>]                                PJRT artifact smoke check
+//!   dme info                                                  artifact + config summary
+//!
+//! `topology=` takes `star`, `tree`, `tree:<m>` or `both` (default) and
+//! routes through the session API (`DmeBuilder` → `DmeSession`).
 
 use dme::config::RunConfig;
-use dme::coordinator::{
-    mean_estimation_star, mean_estimation_tree, robust_variance_reduction, CodecSpec,
-};
+use dme::coordinator::{CodecSpec, DmeBuilder, DmeSession, RoundOutcome, Topology};
 use dme::exp::{self, ExpOpts};
 use dme::rng::Rng;
 use dme::sim::summarize;
@@ -27,8 +29,10 @@ fn usage() -> ! {
          \n\
          commands:\n\
          \x20 exp <1..8|tradeoff|all> [scale=1.0] [seeds=5]   regenerate paper figures/tables\n\
-         \x20 me  [n=8] [d=64] [q=16] [seed=0]                MeanEstimation round, star + tree\n\
-         \x20 vr  [n=8] [d=64] [q=16] [seed=0]                robust VarianceReduction round\n\
+         \x20 me  [n=8] [d=64] [q=16] [seed=0] [topology=both]\n\
+         \x20                                                 MeanEstimation rounds (star|tree|tree:<m>|both)\n\
+         \x20 vr  [n=8] [d=64] [q=16] [seed=0] [topology=star] [robust=1]\n\
+         \x20                                                 VarianceReduction round\n\
          \x20 runtime [graph=lattice_encode_d128_q8]          PJRT artifact smoke check\n\
          \x20 info                                            artifact + config summary"
     );
@@ -102,33 +106,55 @@ fn gen_inputs(cfg: &RunConfig, spread: f64) -> Vec<Vec<f64>> {
         .collect()
 }
 
+/// The topologies a `topology=` argument selects (`both` ⇒ star + tree).
+fn topologies(cfg: &RunConfig) -> Vec<Topology> {
+    if cfg.topology == "both" {
+        return vec![Topology::Star, Topology::Tree { m: cfg.n_machines }];
+    }
+    match Topology::parse(&cfg.topology, cfg.n_machines) {
+        Ok(t) => vec![t],
+        Err(e) => {
+            eprintln!("{e}");
+            usage();
+        }
+    }
+}
+
+fn me_session(cfg: &RunConfig, topology: Topology) -> DmeSession {
+    DmeBuilder::new(cfg.n_machines, cfg.dim)
+        .topology(topology)
+        .codec(CodecSpec::Lq { q: cfg.q })
+        .seed(cfg.seed)
+        .build()
+}
+
+fn print_round(label: &str, out: &RoundOutcome, mu: &[f64]) {
+    let s = summarize(&out.round_traffic);
+    let stats = match out.leader {
+        Some(l) => format!("leader={l}"),
+        None => format!("q_used={}", out.q_used.unwrap_or(0)),
+    };
+    println!(
+        "{label:<12}: {stats} agree={} err2={:.3e} max_sent={}b max_recv={}b mean_sent={:.0}b",
+        out.agreement,
+        dme::linalg::dist2(&out.estimate, mu).powi(2),
+        s.max_sent,
+        s.max_recv,
+        s.mean_sent
+    );
+}
+
 fn cmd_me(args: &[String]) {
     let cfg = build_cfg(args);
     let y = 1.0;
     let inputs = gen_inputs(&cfg, y);
     let mu = dme::linalg::mean_vecs(&inputs);
 
-    let star = mean_estimation_star(&inputs, &CodecSpec::Lq { q: cfg.q }, y, cfg.seed, 0);
-    let s = summarize(&star.traffic);
-    println!(
-        "star : leader={} err2={:.3e} max_sent={}b max_recv={}b mean_sent={:.0}b",
-        star.leader,
-        dme::linalg::dist2(star.estimate(), &mu).powi(2),
-        s.max_sent,
-        s.max_recv,
-        s.mean_sent
-    );
-
-    let tree = mean_estimation_tree(&inputs, cfg.n_machines, y, cfg.seed, 0);
-    let s = summarize(&tree.traffic);
-    println!(
-        "tree : q_used={} err2={:.3e} max_sent={}b max_recv={}b mean_sent={:.0}b",
-        tree.q_used,
-        dme::linalg::dist2(tree.estimate(), &mu).powi(2),
-        s.max_sent,
-        s.max_recv,
-        s.mean_sent
-    );
+    for topology in topologies(&cfg) {
+        let mut sess = me_session(&cfg, topology);
+        let out = sess.round_with_y(&inputs, y);
+        print_round(&topology.label(), &out, &mu);
+    }
 }
 
 fn cmd_vr(args: &[String]) {
@@ -144,15 +170,39 @@ fn cmd_vr(args: &[String]) {
                 .collect()
         })
         .collect();
-    let out = robust_variance_reduction(&inputs, sigma, cfg.q, cfg.seed, 0);
-    let s = summarize(&out.traffic);
+    // Robust VR (Algorithm 6) is leader-based; the Chebyshev reduction
+    // (Theorem 17) runs MeanEstimation over any configured topology.
+    let topology = if cfg.topology == "both" {
+        Topology::Star
+    } else {
+        topologies(&cfg)[0]
+    };
+    let mut builder = DmeBuilder::new(cfg.n_machines, cfg.dim)
+        .topology(topology)
+        .codec(CodecSpec::Lq { q: cfg.q })
+        .seed(cfg.seed);
+    if cfg.robust {
+        builder = builder.robust(cfg.q);
+    }
+    let mut sess = builder.build();
+    let out = sess.round_vr(&inputs, sigma);
+    let s = summarize(&out.round_traffic);
     let in_var = dme::linalg::dist2(&inputs[0], &nabla).powi(2);
     let out_var = dme::linalg::dist2(&out.estimate, &nabla).powi(2);
+    let label = if cfg.robust {
+        "robust-vr".to_string()
+    } else {
+        format!("vr/{}", topology.label())
+    };
+    // Tree rounds have no leader; they report the effective tree-codec
+    // color count instead (the tree ignores `q=` — it uses the paper's
+    // own ε=y/m², q=m³ parameterization).
+    let stats = match out.leader {
+        Some(l) => format!("leader={l}"),
+        None => format!("q_used={}", out.q_used.unwrap_or(0)),
+    };
     println!(
-        "robust-vr: leader={} input_err2={:.3e} output_err2={:.3e} (reduction {:.1}x)",
-        out.leader,
-        in_var,
-        out_var,
+        "{label}: {stats} input_err2={in_var:.3e} output_err2={out_var:.3e} (reduction {:.1}x)",
         in_var / out_var.max(1e-300)
     );
     println!(

@@ -10,7 +10,7 @@
 //! and exact bits.
 
 use super::allreduce::Aggregator;
-use crate::coordinator::{mean_estimation_star, CodecSpec, YEstimator, YPolicy};
+use crate::coordinator::{CodecSpec, DmeBuilder, YPolicy};
 use crate::data::Regression;
 use crate::linalg::{coord_range, dist2, dist_inf, norm2};
 use crate::rng::{hash2, Rng};
@@ -97,10 +97,23 @@ pub fn run_distributed_gd(ds: &Regression, agg: &GdAggregation, cfg: &GdConfig) 
         )),
         _ => None,
     };
-    // y estimator for the Star path (leader-measured, Exp 5 style).
-    let mut star_y = YEstimator::new(cfg.y_policy, cfg.y0);
+    // Persistent cluster for the Star path (Exp 5 style): the session
+    // owns the y estimator and keeps the machine threads alive across
+    // iterations — bit-identical to the historical one-shot-per-iteration
+    // protocol, minus the per-round thread spawns.
+    let mut star_sess = match agg {
+        GdAggregation::Star(spec) => Some(
+            DmeBuilder::new(n, d)
+                .codec(*spec)
+                .seed(cfg.seed)
+                .y0(cfg.y0)
+                .y_policy(cfg.y_policy)
+                .build(),
+        ),
+        _ => None,
+    };
 
-    for it in 0..cfg.iters {
+    for _ in 0..cfg.iters {
         let parts = ds.partition(n, &mut part_rng);
         let grads: Vec<Vec<f64>> = parts.iter().map(|p| ds.batch_gradient(&w, p)).collect();
         let full = ds.full_gradient(&w);
@@ -120,18 +133,13 @@ pub fn run_distributed_gd(ds: &Regression, agg: &GdAggregation, cfg: &GdConfig) 
                 let mb = rep.bits_sent.iter().copied().max().unwrap_or(0);
                 (rep.estimate, mb, rep.y_used)
             }
-            GdAggregation::Star(spec) => {
-                let y = star_y.y;
-                let out = mean_estimation_star(&grads, spec, y, cfg.seed, it as u64);
-                let side = star_y.update(&out.decoded_at_leader, n);
-                let mb = out
-                    .traffic
-                    .iter()
-                    .map(|t| t.sent_bits)
-                    .max()
-                    .unwrap_or(0)
-                    + side;
-                (out.outputs[0].clone(), mb, y)
+            GdAggregation::Star(_) => {
+                let sess = star_sess.as_mut().unwrap();
+                let out = sess.round(&grads);
+                // Round traffic already folds the y policy's side bits in
+                // at the leader.
+                let mb = out.max_sent_bits();
+                (out.estimate, mb, out.y_used)
             }
         };
 

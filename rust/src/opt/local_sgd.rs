@@ -7,7 +7,7 @@
 //! which is why RLQSGD is the natural fit).
 
 use super::allreduce::Aggregator;
-use crate::coordinator::{CodecSpec, YPolicy};
+use crate::coordinator::{CodecSpec, Topology, YPolicy};
 use crate::data::Regression;
 use crate::linalg::dist2;
 use crate::rng::{hash2, Rng};
@@ -24,6 +24,11 @@ pub struct LocalSgdConfig {
     pub seed: u64,
     pub y0: f64,
     pub y_policy: YPolicy,
+    /// `None` (default): the historical all-to-all exchange. `Some(t)`:
+    /// aggregate the deltas through a persistent [`crate::coordinator::DmeBuilder`] session
+    /// over topology `t` (tree sessions pin `y` at `y0` — the tree has
+    /// no leader to measure it).
+    pub topology: Option<Topology>,
 }
 
 impl Default for LocalSgdConfig {
@@ -37,6 +42,7 @@ impl Default for LocalSgdConfig {
             seed: 0,
             y0: 1.0,
             y_policy: YPolicy::FromQuantized { slack: 2.0 },
+            topology: None,
         }
     }
 }
@@ -57,7 +63,28 @@ pub fn run_local_sgd(ds: &Regression, spec: Option<CodecSpec>, cfg: &LocalSgdCon
     let n = cfg.n_machines;
     let mut w_global = vec![0.0; d];
     let mut trace = LocalSgdTrace::default();
-    let mut agg = spec.map(|s| Aggregator::new(s, n, d, cfg.y0, cfg.y_policy, cfg.seed));
+    // Compressed averaging backend: a persistent session over the
+    // configured topology, or the historical all-to-all aggregator.
+    assert!(
+        cfg.topology.is_none() || spec.is_some(),
+        "cfg.topology requires a codec (spec = None is the uncompressed baseline)"
+    );
+    let mut sess = match (cfg.topology, spec) {
+        (Some(topology), Some(s)) => Some(super::topology_session(
+            n,
+            d,
+            topology,
+            s,
+            cfg.seed,
+            cfg.y0,
+            cfg.y_policy,
+        )),
+        _ => None,
+    };
+    let mut agg = match (&sess, spec) {
+        (None, Some(s)) => Some(Aggregator::new(s, n, d, cfg.y0, cfg.y_policy, cfg.seed)),
+        _ => None,
+    };
     let mut rng = Rng::new(hash2(cfg.seed, 0x10CA1));
 
     // Static shard per worker (Local SGD's data-local regime).
@@ -79,13 +106,16 @@ pub fn run_local_sgd(ds: &Regression, spec: Option<CodecSpec>, cfg: &LocalSgdCon
         }
         let true_mean = crate::linalg::mean_vecs(&deltas);
 
-        let (applied, bits) = match agg.as_mut() {
-            None => (true_mean.clone(), 0),
-            Some(a) => {
-                let rep = a.step(&deltas);
-                let mb = rep.bits_sent.iter().copied().max().unwrap_or(0);
-                (rep.estimate, mb)
-            }
+        let (applied, bits) = if let Some(s) = sess.as_mut() {
+            let out = s.round(&deltas);
+            let mb = out.max_sent_bits();
+            (out.estimate, mb)
+        } else if let Some(a) = agg.as_mut() {
+            let rep = a.step(&deltas);
+            let mb = rep.bits_sent.iter().copied().max().unwrap_or(0);
+            (rep.estimate, mb)
+        } else {
+            (true_mean.clone(), 0)
         };
         trace.quant_err.push(dist2(&applied, &true_mean));
         trace.max_bits_sent.push(bits);
@@ -127,6 +157,26 @@ mod tests {
         let lr_ = rlq.loss.last().unwrap();
         assert!(lr_ < &(lb * 5.0 + 0.1), "RLQ {lr_} vs base {lb}");
         assert!(rlq.max_bits_sent.iter().any(|&b| b > 0));
+    }
+
+    #[test]
+    fn star_topology_session_tracks_baseline() {
+        let ds = gen_lsq(1024, 16, 4);
+        let base_cfg = LocalSgdConfig {
+            rounds: 30,
+            y0: 0.5,
+            ..Default::default()
+        };
+        let star_cfg = LocalSgdConfig {
+            topology: Some(Topology::Star),
+            ..base_cfg.clone()
+        };
+        let base = run_local_sgd(&ds, None, &base_cfg);
+        let star = run_local_sgd(&ds, Some(CodecSpec::Lq { q: 64 }), &star_cfg);
+        let lb = base.loss.last().unwrap();
+        let ls = star.loss.last().unwrap();
+        assert!(ls < &(lb * 5.0 + 0.1), "star {ls} vs base {lb}");
+        assert!(star.max_bits_sent.iter().any(|&b| b > 0));
     }
 
     #[test]

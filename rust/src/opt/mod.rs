@@ -15,6 +15,34 @@ pub mod local_sgd;
 pub mod mlp;
 pub mod power_iteration;
 
+use crate::coordinator::{CodecSpec, DmeBuilder, DmeSession, Topology, YPolicy};
+
+/// The persistent aggregation session the optimizer drivers share when
+/// configured with an explicit topology: star keeps the caller's `y`
+/// policy; tree pins `y` at `y0` (it has no leader to measure it — see
+/// [`DmeBuilder::y_policy`]).
+pub(crate) fn topology_session(
+    n: usize,
+    d: usize,
+    topology: Topology,
+    spec: CodecSpec,
+    seed: u64,
+    y0: f64,
+    y_policy: YPolicy,
+) -> DmeSession {
+    let policy = match topology {
+        Topology::Star => y_policy,
+        Topology::Tree { .. } => YPolicy::Fixed,
+    };
+    DmeBuilder::new(n, d)
+        .topology(topology)
+        .codec(spec)
+        .seed(seed)
+        .y0(y0)
+        .y_policy(policy)
+        .build()
+}
+
 pub use allreduce::{Aggregator, StepReport};
 pub use dist_gd::{run_distributed_gd, GdConfig, GdTrace};
 pub use local_sgd::{run_local_sgd, LocalSgdConfig, LocalSgdTrace};

@@ -8,7 +8,7 @@
 //! error.
 
 use super::allreduce::Aggregator;
-use crate::coordinator::{CodecSpec, YPolicy};
+use crate::coordinator::{CodecSpec, Topology, YPolicy};
 use crate::linalg::{coord_range, dist2, dist_inf, normalize, Matrix};
 use crate::rng::{hash2, Rng};
 
@@ -19,6 +19,10 @@ pub struct PowerConfig {
     pub seed: u64,
     pub y0: f64,
     pub y_policy: YPolicy,
+    /// `None` (default): the historical all-to-all exchange. `Some(t)`:
+    /// exchange the partial updates through a persistent
+    /// [`crate::coordinator::DmeBuilder`] session over topology `t` (tree sessions pin `y` at `y0`).
+    pub topology: Option<Topology>,
 }
 
 impl Default for PowerConfig {
@@ -29,6 +33,7 @@ impl Default for PowerConfig {
             seed: 0,
             y0: 1.0,
             y_policy: YPolicy::FromQuantized { slack: 2.0 },
+            topology: None,
         }
     }
 }
@@ -66,7 +71,26 @@ pub fn run_power_iteration(
 
     let mut rng = Rng::new(hash2(cfg.seed, 0x9013E));
     let mut x = normalize(&rng.gaussian_vec(d));
-    let mut agg = spec.map(|s| Aggregator::new(s, n, d, cfg.y0, cfg.y_policy, cfg.seed));
+    assert!(
+        cfg.topology.is_none() || spec.is_some(),
+        "cfg.topology requires a codec (spec = None is the full-precision baseline)"
+    );
+    let mut sess = match (cfg.topology, spec) {
+        (Some(topology), Some(s)) => Some(super::topology_session(
+            n,
+            d,
+            topology,
+            s,
+            cfg.seed,
+            cfg.y0,
+            cfg.y_policy,
+        )),
+        _ => None,
+    };
+    let mut agg = match (&sess, spec) {
+        (None, Some(s)) => Some(Aggregator::new(s, n, d, cfg.y0, cfg.y_policy, cfg.seed)),
+        _ => None,
+    };
     let mut trace = PowerTrace::default();
 
     for _ in 0..cfg.iters {
@@ -78,13 +102,16 @@ pub fn run_power_iteration(
         trace.u_dist_inf.push(dist_inf(&us[0], &us[1 % n]));
         trace.u_range.push(coord_range(&us[0]));
 
-        let (applied, bits) = match agg.as_mut() {
-            None => (true_sum.clone(), 0),
-            Some(a) => {
-                let rep = a.step(&us);
-                let mb = rep.bits_sent.iter().copied().max().unwrap_or(0);
-                (crate::linalg::scale(&rep.estimate, n as f64), mb)
-            }
+        let (applied, bits) = if let Some(s) = sess.as_mut() {
+            let out = s.round(&us);
+            let mb = out.max_sent_bits();
+            (crate::linalg::scale(&out.estimate, n as f64), mb)
+        } else if let Some(a) = agg.as_mut() {
+            let rep = a.step(&us);
+            let mb = rep.bits_sent.iter().copied().max().unwrap_or(0);
+            (crate::linalg::scale(&rep.estimate, n as f64), mb)
+        } else {
+            (true_sum.clone(), 0)
         };
         trace.quant_err.push(dist2(&applied, &true_sum));
         trace.max_bits_sent.push(bits);
@@ -147,6 +174,25 @@ mod tests {
         let md = t.u_dist_inf.iter().sum::<f64>() / 20.0;
         let mr = t.u_range.iter().sum::<f64>() / 20.0;
         assert!(md < mr, "dist {md} range {mr}");
+    }
+
+    #[test]
+    fn star_topology_session_converges() {
+        let (m, v1) = gen_power_matrix(1024, 32, &[10.0, 8.0, 1.0], false, 5);
+        let cfg = PowerConfig {
+            n_machines: 4,
+            iters: 60,
+            y0: 50.0,
+            topology: Some(Topology::Star),
+            ..Default::default()
+        };
+        let t = run_power_iteration(&m, &v1, Some(CodecSpec::Lq { q: 64 }), &cfg);
+        assert!(
+            t.angle_err.last().unwrap() < &0.1,
+            "angle {:?}",
+            t.angle_err.last()
+        );
+        assert!(t.max_bits_sent.iter().all(|&b| b > 0));
     }
 
     #[test]

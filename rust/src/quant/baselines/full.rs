@@ -40,6 +40,25 @@ impl VectorCodec for FullPrecision {
         let mut r = BitReader::new(&msg.bytes);
         (0..self.d).map(|_| r.read_f32() as f64).collect()
     }
+
+    fn encode_into(&mut self, x: &[f64], _rng: &mut Rng, out: &mut Message) {
+        assert_eq!(x.len(), self.d);
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        for &v in x {
+            w.push_f32(v as f32);
+        }
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+
+    fn decode_into(&self, msg: &Message, _reference: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.d);
+        let mut r = BitReader::new(&msg.bytes);
+        for o in out.iter_mut() {
+            *o = r.read_f32() as f64;
+        }
+    }
 }
 
 #[cfg(test)]

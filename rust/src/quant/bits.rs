@@ -39,6 +39,19 @@ impl BitWriter {
         }
     }
 
+    /// Write into a recycled buffer (cleared, capacity kept) — the
+    /// zero-realloc path of [`crate::quant::VectorCodec::encode_into`]:
+    /// after the first round a session's scratch message never grows.
+    pub fn reusing(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        BitWriter {
+            buf,
+            acc: 0,
+            acc_bits: 0,
+            len: 0,
+        }
+    }
+
     /// Append the low `width` bits of `v`.
     #[inline]
     pub fn push(&mut self, v: u64, width: u32) {

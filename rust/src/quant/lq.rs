@@ -99,8 +99,44 @@ impl VectorCodec for LatticeQuantizer {
     /// Fused decode (§Perf): bit-read → nearest-same-color → reconstruct
     /// per coordinate, single pass.
     fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.lattice.dim()];
+        self.decode_into(msg, reference, &mut out);
+        out
+    }
+
+    /// Zero-alloc encode: same fused pass as [`Self::encode_with_point`]
+    /// minus the point reconstruction, writing into the recycled scratch.
+    fn encode_into(&mut self, x: &[f64], _rng: &mut Rng, out: &mut Message) {
+        let d = self.lattice.dim();
+        assert_eq!(x.len(), d);
+        let s = self.lattice.s;
+        let inv = 1.0 / s;
+        let q = self.q as i64;
+        let width = self.width;
+        let mut w = super::bits::BitWriter::reusing(std::mem::take(&mut out.bytes));
+        if (self.q & (self.q - 1)) == 0 {
+            let mask = (self.q - 1) as i64;
+            for (xi, off) in x.iter().zip(&self.lattice.offset) {
+                let k = ((xi - off) * inv).round_ties_even() as i64;
+                w.push((k & mask) as u64, width);
+            }
+        } else {
+            for (xi, off) in x.iter().zip(&self.lattice.offset) {
+                let k = ((xi - off) * inv).round_ties_even() as i64;
+                w.push(k.rem_euclid(q) as u64, width);
+            }
+        }
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+
+    /// Zero-alloc decode into a caller-owned buffer (identical values to
+    /// `decode`; same fused loop).
+    fn decode_into(&self, msg: &Message, reference: &[f64], out: &mut [f64]) {
         let d = self.lattice.dim();
         assert_eq!(reference.len(), d);
+        assert_eq!(out.len(), d);
         let s = self.lattice.s;
         // Fold the two divisions into one reciprocal multiply each
         // (§Perf): t/q = (x−off) · (1/(s·q)).
@@ -109,14 +145,12 @@ impl VectorCodec for LatticeQuantizer {
         let qi = self.q as i64;
         let width = self.width;
         let mut r = super::bits::BitReader::new(&msg.bytes);
-        let mut out = Vec::with_capacity(d);
-        for (xr, off) in reference.iter().zip(&self.lattice.offset) {
+        for (o, (xr, off)) in out.iter_mut().zip(reference.iter().zip(&self.lattice.offset)) {
             let c = r.read(width) as i64;
             let m = ((xr - off) * inv_sq - c as f64 * inv_q).round_ties_even() as i64;
             let k = c + qi * m;
-            out.push(off + s * k as f64);
+            *o = off + s * k as f64;
         }
-        out
     }
 
     fn needs_reference(&self) -> bool {
@@ -193,6 +227,30 @@ mod tests {
                 (mean - xi).abs() < tol,
                 "biased: mean {mean} vs {xi} (tol {tol})"
             );
+        }
+    }
+
+    #[test]
+    fn encode_into_and_decode_into_match_allocating_paths() {
+        let mut shared = Rng::new(21);
+        let mut rng = Rng::new(22);
+        for q in [5u32, 8, 16, 255] {
+            let d = 97;
+            let mut codec = LatticeQuantizer::from_y(d, q, 1.0, &mut shared);
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-50.0, 50.0)).collect();
+            let xv: Vec<f64> = x.iter().map(|v| v + rng.uniform(-0.9, 0.9)).collect();
+            let fresh = codec.encode(&x, &mut rng);
+            // Scratch starts with stale garbage from a previous round.
+            let mut scratch = Message {
+                bytes: vec![0xFF; 4],
+                bits: 32,
+            };
+            codec.encode_into(&x, &mut rng, &mut scratch);
+            assert_eq!(scratch, fresh, "encode_into must be bit-identical");
+            let z = codec.decode(&fresh, &xv);
+            let mut z2 = vec![0.0; d];
+            codec.decode_into(&fresh, &xv, &mut z2);
+            assert_eq!(z, z2, "decode_into must be value-identical");
         }
     }
 

@@ -72,6 +72,26 @@ pub trait VectorCodec: Send {
     /// Reconstruct from `msg`; `reference` is the decoder's own vector.
     fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64>;
 
+    /// Compress `x` into a caller-owned scratch message (§Perf, the
+    /// session hot path): implementations reuse `out.bytes`' capacity so
+    /// a multi-round loop allocates nothing after its first round. The
+    /// default falls back to [`VectorCodec::encode`]; codecs on the round
+    /// loop (the lattice family, full precision) override it.
+    ///
+    /// Must produce bytes and bit count identical to `encode` — the
+    /// session parity tests pin this.
+    fn encode_into(&mut self, x: &[f64], rng: &mut Rng, out: &mut Message) {
+        *out = self.encode(x, rng);
+    }
+
+    /// Reconstruct from `msg` into a caller-owned buffer of length
+    /// [`VectorCodec::dim`] (zero-alloc counterpart of `decode`; same
+    /// values bit-for-bit). Default falls back to `decode` + copy.
+    fn decode_into(&self, msg: &Message, reference: &[f64], out: &mut [f64]) {
+        let z = self.decode(msg, reference);
+        out.copy_from_slice(&z);
+    }
+
     /// True if decoding needs a reference vector within the codec's
     /// guarantee radius (lattice family). Used by the coordinator to
     /// decide which topology invariants to check.
@@ -106,5 +126,24 @@ mod tests {
         let (z, bits) = roundtrip(&mut codec, &x, &x, &mut rng);
         assert_eq!(z.len(), 8);
         assert_eq!(bits, 8 * 3); // d * log2(q)
+    }
+
+    #[test]
+    fn default_into_methods_match_allocating_paths() {
+        // A codec without overrides exercises the trait's fallback
+        // implementations of encode_into/decode_into.
+        let d = 16;
+        let mut codec = crate::quant::baselines::Qsgd::new(d, 16, crate::quant::baselines::QsgdNorm::L2);
+        let x: Vec<f64> = (0..d).map(|i| i as f64 * 0.37 - 2.0).collect();
+        let mut rng_a = Rng::new(5);
+        let mut rng_b = Rng::new(5);
+        let fresh = codec.encode(&x, &mut rng_a);
+        let mut scratch = Message::empty();
+        codec.encode_into(&x, &mut rng_b, &mut scratch);
+        assert_eq!(scratch, fresh);
+        let z = codec.decode(&fresh, &x);
+        let mut z2 = vec![0.0; d];
+        codec.decode_into(&fresh, &x, &mut z2);
+        assert_eq!(z, z2);
     }
 }

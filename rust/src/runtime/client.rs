@@ -1,7 +1,12 @@
 //! PJRT engine: compiles HLO-text artifacts once, executes them many times.
+//!
+//! Compiled only with the `pjrt` cargo feature, which additionally requires
+//! the `xla` crate (PjRtClient over the PJRT C API) to be vendored into the
+//! build environment; without the feature, `client_stub` provides the same
+//! API surface with `Engine::discover()` reporting the missing backend.
 
 use super::manifest::ArtifactManifest;
-use anyhow::{anyhow, Context, Result};
+use super::{rt_err, Result};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
@@ -27,22 +32,27 @@ impl LoadedGraph {
                 lit
             } else {
                 lit.reshape(&dims_i64)
-                    .with_context(|| format!("reshape input to {dims:?}"))?
+                    .map_err(|e| rt_err(format!("reshape input to {dims:?}: {e:?}")))?
             };
             literals.push(lit);
         }
         let result = self
             .exe
             .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing graph '{}'", self.name))?;
+            .map_err(|e| rt_err(format!("executing graph '{}': {e:?}", self.name)))?;
         let out = result[0][0]
             .to_literal_sync()
-            .context("fetching result literal")?;
+            .map_err(|e| rt_err(format!("fetching result literal: {e:?}")))?;
         // aot.py lowers with return_tuple=True: decompose the tuple.
-        let elems = out.to_tuple().context("decomposing result tuple")?;
+        let elems = out
+            .to_tuple()
+            .map_err(|e| rt_err(format!("decomposing result tuple: {e:?}")))?;
         let mut flat = Vec::with_capacity(elems.len());
         for e in elems {
-            flat.push(e.to_vec::<f32>().context("reading f32 output")?);
+            flat.push(
+                e.to_vec::<f32>()
+                    .map_err(|e| rt_err(format!("reading f32 output: {e:?}")))?,
+            );
         }
         Ok(flat)
     }
@@ -61,7 +71,8 @@ pub struct Engine {
 impl Engine {
     /// Create an engine over the artifact directory.
     pub fn new(artifact_dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| rt_err(format!("PJRT cpu client: {e:?}")))?;
         let manifest = ArtifactManifest::load(artifact_dir)?;
         Ok(Engine {
             client,
@@ -73,7 +84,7 @@ impl Engine {
     /// Create an engine by auto-discovering the artifact directory.
     pub fn discover() -> Result<Self> {
         let dir = super::find_artifact_dir()
-            .ok_or_else(|| anyhow!("artifact dir not found; run `make artifacts`"))?;
+            .ok_or_else(|| rt_err("artifact dir not found; run `make artifacts`"))?;
         Self::new(&dir)
     }
 
@@ -89,14 +100,14 @@ impl Engine {
         let spec = self.manifest.get(name)?.clone();
         let path = self.manifest.hlo_path(&spec);
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            path.to_str().ok_or_else(|| rt_err("non-utf8 path"))?,
         )
-        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        .map_err(|e| rt_err(format!("parsing HLO text {}: {e:?}", path.display())))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow!("compiling '{name}': {e:?}"))?;
+            .map_err(|e| rt_err(format!("compiling '{name}': {e:?}")))?;
         let graph = std::sync::Arc::new(LoadedGraph {
             name: name.to_string(),
             exe,

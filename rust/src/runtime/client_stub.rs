@@ -1,0 +1,54 @@
+//! Stub PJRT engine — built when the `pjrt` feature is off.
+//!
+//! Mirrors the API surface of [`super::client`] so every consumer (the
+//! CLI's `dme runtime`, the AOT examples, the runtime integration tests)
+//! compiles unchanged; `Engine::discover()` reports the missing backend
+//! and the callers' existing "skip with a notice" paths take over.
+
+use super::{rt_err, ArtifactManifest, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+const NO_PJRT: &str = "PJRT runtime unavailable: dme was built without the `pjrt` \
+     feature (it requires the vendored `xla` crate; see rust/src/runtime/client.rs)";
+
+/// A compiled, ready-to-run XLA graph (stub: never constructible, since
+/// [`Engine::new`] always fails without the backend).
+pub struct LoadedGraph {
+    pub name: String,
+    /// Output shapes from the manifest (the graph returns a tuple).
+    pub out_shapes: Vec<Vec<usize>>,
+}
+
+impl LoadedGraph {
+    /// Execute with f32 inputs; returns each tuple element flattened.
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        Err(rt_err(format!("cannot execute graph '{}': {NO_PJRT}", self.name)))
+    }
+}
+
+/// The runtime engine (stub).
+pub struct Engine {
+    pub manifest: ArtifactManifest,
+}
+
+impl Engine {
+    /// Create an engine over the artifact directory.
+    pub fn new(_artifact_dir: &Path) -> Result<Self> {
+        Err(rt_err(NO_PJRT))
+    }
+
+    /// Create an engine by auto-discovering the artifact directory.
+    pub fn discover() -> Result<Self> {
+        Err(rt_err(NO_PJRT))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without `pjrt`)".to_string()
+    }
+
+    /// Load (compile) a graph by manifest name.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedGraph>> {
+        Err(rt_err(format!("cannot load graph '{name}': {NO_PJRT}")))
+    }
+}

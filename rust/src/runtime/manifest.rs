@@ -2,8 +2,8 @@
 //! `python/compile/aot.py` (name, file, input/output shapes and dtypes, and
 //! the static parameters the graph was specialized with).
 
+use super::{rt_err, Result};
 use crate::config::Json;
-use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -31,13 +31,13 @@ pub struct ArtifactManifest {
 
 fn shapes(v: &Json) -> Result<Vec<Vec<usize>>> {
     v.as_arr()
-        .ok_or_else(|| anyhow!("expected array of shapes"))?
+        .ok_or_else(|| rt_err("expected array of shapes"))?
         .iter()
         .map(|s| {
             s.as_arr()
-                .ok_or_else(|| anyhow!("expected shape array"))?
+                .ok_or_else(|| rt_err("expected shape array"))?
                 .iter()
-                .map(|d| d.as_usize().ok_or_else(|| anyhow!("expected dim")))
+                .map(|d| d.as_usize().ok_or_else(|| rt_err("expected dim")))
                 .collect()
         })
         .collect()
@@ -48,26 +48,27 @@ impl ArtifactManifest {
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        let json = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+            .map_err(|e| rt_err(format!("reading {}: {e}", path.display())))?;
+        let json = Json::parse(&text)
+            .map_err(|e| rt_err(format!("parsing {}: {e}", path.display())))?;
         let mut specs = BTreeMap::new();
         let graphs = json
             .get("graphs")
             .and_then(|g| g.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing 'graphs' array"))?;
+            .ok_or_else(|| rt_err("manifest missing 'graphs' array"))?;
         for g in graphs {
             let name = g
                 .get("name")
                 .and_then(|n| n.as_str())
-                .ok_or_else(|| anyhow!("graph missing 'name'"))?
+                .ok_or_else(|| rt_err("graph missing 'name'"))?
                 .to_string();
             let file = g
                 .get("file")
                 .and_then(|n| n.as_str())
-                .ok_or_else(|| anyhow!("graph missing 'file'"))?
+                .ok_or_else(|| rt_err("graph missing 'file'"))?
                 .to_string();
-            let inputs = shapes(g.get("inputs").ok_or_else(|| anyhow!("missing inputs"))?)?;
-            let outputs = shapes(g.get("outputs").ok_or_else(|| anyhow!("missing outputs"))?)?;
+            let inputs = shapes(g.get("inputs").ok_or_else(|| rt_err("missing inputs"))?)?;
+            let outputs = shapes(g.get("outputs").ok_or_else(|| rt_err("missing outputs"))?)?;
             let mut params = BTreeMap::new();
             if let Some(p) = g.get("params").and_then(|p| p.as_obj()) {
                 for (k, v) in p {
@@ -96,7 +97,7 @@ impl ArtifactManifest {
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
         self.specs
             .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+            .ok_or_else(|| rt_err(format!("artifact '{name}' not in manifest")))
     }
 
     pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {

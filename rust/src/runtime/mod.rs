@@ -9,11 +9,37 @@
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
 
+#[cfg(feature = "pjrt")]
 mod client;
+#[cfg(not(feature = "pjrt"))]
+mod client_stub;
 mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use client::{Engine, LoadedGraph};
+#[cfg(not(feature = "pjrt"))]
+pub use client_stub::{Engine, LoadedGraph};
 pub use manifest::{ArtifactManifest, ArtifactSpec};
+
+/// Runtime-layer error (the offline toolchain has no `anyhow`; this is a
+/// plain message type that composes with `Box<dyn Error>` call sites).
+#[derive(Clone, Debug)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Result alias used throughout the runtime layer.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+pub(crate) fn rt_err(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}
 
 /// Default artifact directory relative to the repository root.
 pub const ARTIFACT_DIR: &str = "artifacts";

@@ -177,6 +177,19 @@ impl Cluster {
             .collect()
     }
 
+    /// Fold externally-metered traffic into the per-machine counters —
+    /// used by session rounds whose protocol runs off-cluster (robust VR,
+    /// sublinear broadcast) so cumulative accounting stays unified.
+    pub fn add_traffic(&self, extra: &[Traffic]) {
+        assert_eq!(extra.len(), self.n);
+        for (m, t) in self.meters.iter().zip(extra) {
+            m.sent_bits.fetch_add(t.sent_bits, Ordering::Relaxed);
+            m.recv_bits.fetch_add(t.recv_bits, Ordering::Relaxed);
+            m.sent_msgs.fetch_add(t.sent_msgs, Ordering::Relaxed);
+            m.recv_msgs.fetch_add(t.recv_msgs, Ordering::Relaxed);
+        }
+    }
+
     /// Reset counters between rounds.
     pub fn reset_traffic(&self) {
         for m in self.meters.iter() {

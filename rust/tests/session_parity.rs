@@ -1,0 +1,439 @@
+//! Session ↔ legacy parity: `DmeSession` (and the one-shot wrappers now
+//! built on it) must be **bit-identical** — estimates, per-machine
+//! outputs, and exact traffic — to the original one-shot protocol
+//! implementations for the same `(seed, round)`.
+//!
+//! The originals are preserved *here*, as independent reference
+//! implementations written against the public sim/quant/rng APIs, so the
+//! parity check stays meaningful now that the library's free functions
+//! are thin wrappers over one-round sessions.
+
+use dme::coordinator::{CodecSpec, DmeBuilder, Topology};
+use dme::quant::robust::RobustAgreement;
+use dme::quant::{CubicLattice, LatticeQuantizer, VectorCodec};
+use dme::rng::{hash2, Rng};
+use dme::sim::{Cluster, Traffic};
+use std::sync::Arc;
+
+fn gen_inputs(n: usize, d: usize, center: f64, spread: f64, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..d)
+                .map(|_| center + rng.uniform(-spread, spread))
+                .collect()
+        })
+        .collect()
+}
+
+// ----------------------------------------------------------------------
+// Reference Algorithm 3 (star) — the seed's original implementation.
+// ----------------------------------------------------------------------
+
+struct RefStar {
+    outputs: Vec<Vec<f64>>,
+    decoded_at_leader: Vec<Vec<f64>>,
+    traffic: Vec<Traffic>,
+    leader: usize,
+}
+
+fn reference_star(
+    inputs: &[Vec<f64>],
+    spec: &CodecSpec,
+    y: f64,
+    seed: u64,
+    round: u64,
+) -> RefStar {
+    let n = inputs.len();
+    let d = inputs[0].len();
+    let leader = Rng::new(hash2(seed, round ^ 0x1EAD)).next_below(n as u64) as usize;
+    assert!(n >= 2, "reference covers the threaded path");
+
+    let cluster = Cluster::new(n);
+    let inputs = Arc::new(inputs.to_vec());
+    let spec = *spec;
+
+    struct MachineOut {
+        output: Vec<f64>,
+        decoded: Vec<Vec<f64>>, // leader only
+    }
+
+    let results = cluster.run(move |mut ep| {
+        let id = ep.id;
+        let x = &inputs[id];
+        let mut stash = Vec::new();
+        let mut enc_rng = Rng::new(hash2(hash2(seed, round), id as u64 + 1));
+        let mut codec = spec.build(d, y, seed, round);
+
+        if id == leader {
+            let mut decoded: Vec<Vec<f64>> = vec![Vec::new(); n];
+            decoded[id] = x.clone();
+            for _ in 0..n - 1 {
+                let p = ep.recv();
+                decoded[p.from] = codec.decode(&p.msg, x);
+            }
+            let mut mu = vec![0.0; d];
+            for v in &decoded {
+                dme::linalg::axpy(&mut mu, 1.0, v);
+            }
+            let mu = dme::linalg::scale(&mu, 1.0 / n as f64);
+            let bmsg = codec.encode(&mu, &mut enc_rng);
+            ep.broadcast(&bmsg);
+            let output = codec.decode(&bmsg, x);
+            MachineOut { output, decoded }
+        } else {
+            let msg = codec.encode(x, &mut enc_rng);
+            ep.send(leader, msg);
+            let p = ep.recv_from(leader, &mut stash);
+            let output = codec.decode(&p.msg, x);
+            MachineOut {
+                output,
+                decoded: Vec::new(),
+            }
+        }
+    });
+
+    let traffic = cluster.traffic();
+    let mut outputs = Vec::with_capacity(n);
+    let mut decoded_at_leader = Vec::new();
+    for (i, r) in results.into_iter().enumerate() {
+        if i == leader {
+            decoded_at_leader = r.decoded;
+        }
+        outputs.push(r.output);
+    }
+    RefStar {
+        outputs,
+        decoded_at_leader,
+        traffic,
+        leader,
+    }
+}
+
+// ----------------------------------------------------------------------
+// Reference Algorithm 4 (tree) — the seed's original sequential driver.
+// ----------------------------------------------------------------------
+
+struct RefTree {
+    outputs: Vec<Vec<f64>>,
+    traffic: Vec<Traffic>,
+    leaves: Vec<usize>,
+    q_used: u32,
+}
+
+fn tree_params(m: usize, y: f64) -> (f64, u32) {
+    let m = m.max(2) as f64;
+    let side = 2.0 * y / (m * m);
+    let q = (m * m * m).min((1u64 << 20) as f64) as u32;
+    (side.max(f64::MIN_POSITIVE), q.max(4))
+}
+
+fn reference_tree(inputs: &[Vec<f64>], m: usize, y: f64, seed: u64, round: u64) -> RefTree {
+    let n = inputs.len();
+    let d = inputs[0].len();
+    let mut shared = Rng::new(hash2(seed, round ^ 0x7EEE));
+    let m_eff = m.min(n).next_power_of_two().min(n.next_power_of_two());
+    let leaves: Vec<usize> = if m_eff >= n {
+        (0..n).collect()
+    } else {
+        shared.sample_indices(n, m_eff)
+    };
+    let (side, q) = tree_params(m.max(2), y);
+
+    let make_codec = || {
+        let mut sr = Rng::new(hash2(seed, round));
+        LatticeQuantizer::new(CubicLattice::random_offset(d, side, &mut sr), q)
+    };
+
+    assert!(n >= 2, "reference covers the threaded path");
+    let cluster = Cluster::new(n);
+    let mut eps = cluster.endpoints();
+
+    let role_of = |level: usize, j: usize| -> usize { (j * 2 + level * 3) % n };
+    let mut estimates: Vec<Vec<f64>> = leaves.iter().map(|&v| inputs[v].clone()).collect();
+    let mut owners: Vec<usize> = leaves.clone();
+    let mut level = 0usize;
+    while estimates.len() > 1 {
+        level += 1;
+        let mut next_est = Vec::with_capacity(estimates.len() / 2);
+        let mut next_own = Vec::with_capacity(estimates.len() / 2);
+        for j in 0..estimates.len() / 2 {
+            let parent = role_of(level, j);
+            let mut decoded = Vec::with_capacity(2);
+            for c in 0..2 {
+                let child_idx = 2 * j + c;
+                let child = owners[child_idx];
+                let codec = make_codec();
+                let (msg, _pt) = codec.encode_with_point(&estimates[child_idx]);
+                if child != parent {
+                    eps[child].send(parent, msg.clone());
+                    let p = {
+                        let mut stash = Vec::new();
+                        eps[parent].recv_from(child, &mut stash)
+                    };
+                    decoded.push(codec.decode(&p.msg, &inputs[parent]));
+                } else {
+                    decoded.push(codec.decode(&msg, &inputs[parent]));
+                }
+            }
+            let avg = dme::linalg::scale(&dme::linalg::add(&decoded[0], &decoded[1]), 0.5);
+            next_est.push(avg);
+            next_own.push(parent);
+        }
+        if estimates.len() % 2 == 1 {
+            next_est.push(estimates.last().unwrap().clone());
+            next_own.push(*owners.last().unwrap());
+        }
+        estimates = next_est;
+        owners = next_own;
+    }
+    let root_est = estimates.pop().unwrap();
+    let root = owners.pop().unwrap();
+
+    let codec = make_codec();
+    let (bmsg, _pt) = codec.encode_with_point(&root_est);
+    let order: Vec<usize> = (0..n).map(|i| (root + i) % n).collect();
+    for pos in 0..n {
+        let me = order[pos];
+        for c in [2 * pos + 1, 2 * pos + 2] {
+            if c < n {
+                eps[me].send(order[c], bmsg.clone());
+                let mut stash = Vec::new();
+                let _ = eps[order[c]].recv_from(me, &mut stash);
+            }
+        }
+    }
+    let outputs: Vec<Vec<f64>> = (0..n).map(|v| codec.decode(&bmsg, &inputs[v])).collect();
+
+    RefTree {
+        outputs,
+        traffic: cluster.traffic(),
+        leaves,
+        q_used: q,
+    }
+}
+
+// ----------------------------------------------------------------------
+// Reference Algorithm 6 (robust VR) — the seed's original driver.
+// ----------------------------------------------------------------------
+
+struct RefRobustVr {
+    estimate: Vec<f64>,
+    traffic: Vec<Traffic>,
+    leader: usize,
+    rounds_stage1: Vec<u32>,
+}
+
+fn reference_robust_vr(
+    inputs: &[Vec<f64>],
+    sigma: f64,
+    q0: u32,
+    seed: u64,
+    round: u64,
+) -> RefRobustVr {
+    let n = inputs.len();
+    let d = inputs[0].len();
+    let leader = Rng::new(hash2(seed, round ^ 0x10BD)).next_below(n as u64) as usize;
+    let mut traffic = vec![Traffic::default(); n];
+    let mut rounds_stage1 = Vec::new();
+
+    let mut estimates: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for u in 0..n {
+        if u == leader {
+            estimates.push(inputs[leader].clone());
+            continue;
+        }
+        let ra = RobustAgreement::new(
+            d,
+            q0,
+            sigma.max(1e-12),
+            hash2(seed, round * 1000 + u as u64),
+        );
+        let t = ra.run(&inputs[u], &inputs[leader]);
+        traffic[u].sent_bits += t.bits_forward;
+        traffic[leader].recv_bits += t.bits_forward;
+        traffic[leader].sent_bits += t.bits_backward;
+        traffic[u].recv_bits += t.bits_backward;
+        traffic[u].sent_msgs += t.rounds as u64;
+        rounds_stage1.push(t.rounds);
+        estimates.push(t.estimate.expect("robust agreement exhausted"));
+    }
+
+    let nabla_hat = dme::linalg::mean_vecs(&estimates);
+
+    let ra_bcast = RobustAgreement::new(
+        d,
+        q0,
+        sigma.max(1e-12),
+        hash2(seed, round * 1000 + 0xBCA5),
+    );
+    let mut estimate = nabla_hat.clone();
+    for (u, input) in inputs.iter().enumerate() {
+        if u == leader {
+            continue;
+        }
+        let t = ra_bcast.run(&nabla_hat, input);
+        traffic[leader].sent_bits += t.bits_forward;
+        traffic[u].recv_bits += t.bits_forward;
+        traffic[u].sent_bits += t.bits_backward;
+        traffic[leader].recv_bits += t.bits_backward;
+        estimate = t.estimate.expect("broadcast agreement exhausted");
+    }
+
+    RefRobustVr {
+        estimate,
+        traffic,
+        leader,
+        rounds_stage1,
+    }
+}
+
+// ----------------------------------------------------------------------
+// Parity tests
+// ----------------------------------------------------------------------
+
+#[test]
+fn star_session_bit_identical_to_reference_across_rounds() {
+    for (n, d, q) in [(2usize, 16usize, 8u32), (6, 32, 16), (9, 33, 64)] {
+        let seed = 1000 + n as u64;
+        let y = 1.0;
+        let inputs = gen_inputs(n, d, 100.0, y / 2.0, seed);
+        let spec = CodecSpec::Lq { q };
+        let mut sess = DmeBuilder::new(n, d)
+            .codec(spec)
+            .seed(seed)
+            .diagnostics(true)
+            .build();
+        for round in 0..5 {
+            let r = reference_star(&inputs, &spec, y, seed, round);
+            let s = sess.round_with_y(&inputs, y);
+            assert!(s.agreement, "n={n} round={round}");
+            assert_eq!(s.leader, Some(r.leader), "n={n} round={round}");
+            assert_eq!(s.estimate, r.outputs[0], "n={n} round={round} estimate");
+            assert_eq!(s.outputs, r.outputs, "n={n} round={round} outputs");
+            assert_eq!(
+                s.decoded_at_leader, r.decoded_at_leader,
+                "n={n} round={round} decoded"
+            );
+            assert_eq!(
+                s.round_traffic, r.traffic,
+                "n={n} round={round} traffic"
+            );
+        }
+    }
+}
+
+#[test]
+fn star_session_parity_for_baseline_codecs() {
+    // The session must replicate the protocol for reference-free codecs
+    // too (gather + broadcast degenerate form).
+    let n = 5;
+    let d = 24;
+    let inputs = gen_inputs(n, d, 10.0, 0.5, 77);
+    for spec in [
+        CodecSpec::QsgdL2 { q: 16 },
+        CodecSpec::Hadamard { q: 16 },
+        CodecSpec::Full,
+    ] {
+        let mut sess = DmeBuilder::new(n, d)
+            .codec(spec)
+            .seed(5)
+            .diagnostics(true)
+            .build();
+        let r = reference_star(&inputs, &spec, 1.0, 5, 0);
+        let s = sess.round_with_y(&inputs, 1.0);
+        assert_eq!(s.outputs, r.outputs, "{}", spec.label());
+        assert_eq!(s.round_traffic, r.traffic, "{}", spec.label());
+    }
+}
+
+#[test]
+fn tree_session_bit_identical_to_reference_across_rounds() {
+    // Full participation, subsampled, and odd machine counts.
+    for (n, m) in [(2usize, 2usize), (8, 8), (16, 4), (7, 7), (9, 4)] {
+        let seed = 2000 + n as u64 + m as u64;
+        let y = 1.5;
+        let inputs = gen_inputs(n, 8, 50.0, y / 2.0, seed);
+        let mut sess = DmeBuilder::new(n, 8)
+            .topology(Topology::Tree { m })
+            .seed(seed)
+            .diagnostics(true)
+            .build();
+        for round in 0..4 {
+            let r = reference_tree(&inputs, m, y, seed, round);
+            let s = sess.round_with_y(&inputs, y);
+            assert!(s.agreement, "n={n} m={m} round={round}");
+            assert_eq!(s.leaves, r.leaves, "n={n} m={m} round={round} leaves");
+            assert_eq!(s.q_used, Some(r.q_used), "n={n} m={m} round={round}");
+            assert_eq!(s.outputs, r.outputs, "n={n} m={m} round={round} outputs");
+            assert_eq!(
+                s.round_traffic, r.traffic,
+                "n={n} m={m} round={round} traffic"
+            );
+        }
+    }
+}
+
+#[test]
+fn legacy_wrappers_match_references() {
+    // The public one-shot functions (now session wrappers) must still be
+    // bit-identical to the original implementations.
+    let n = 6;
+    let d = 20;
+    let y = 1.0;
+    let inputs = gen_inputs(n, d, 5.0, y / 2.0, 300);
+    let spec = CodecSpec::Lq { q: 16 };
+
+    let r = reference_star(&inputs, &spec, y, 9, 3);
+    let w = dme::coordinator::mean_estimation_star(&inputs, &spec, y, 9, 3);
+    assert_eq!(w.outputs, r.outputs);
+    assert_eq!(w.decoded_at_leader, r.decoded_at_leader);
+    assert_eq!(w.traffic, r.traffic);
+    assert_eq!(w.leader, r.leader);
+
+    let rt = reference_tree(&inputs, n, y, 10, 2);
+    let wt = dme::coordinator::mean_estimation_tree(&inputs, n, y, 10, 2);
+    assert_eq!(wt.outputs, rt.outputs);
+    assert_eq!(wt.traffic, rt.traffic);
+    assert_eq!(wt.leaves, rt.leaves);
+    assert_eq!(wt.q_used, rt.q_used);
+}
+
+#[test]
+fn robust_vr_session_matches_reference() {
+    let n = 8;
+    let d = 16;
+    let sigma = 0.3;
+    let inputs = gen_inputs(n, d, 0.0, sigma, 400);
+    let r = reference_robust_vr(&inputs, sigma, 8, 11, 4);
+    let mut sess = DmeBuilder::new(n, d).robust(8).seed(11).build();
+    sess.set_round(4);
+    let s = sess.round_vr(&inputs, sigma);
+    assert_eq!(s.estimate, r.estimate);
+    assert_eq!(s.leader, Some(r.leader));
+    assert_eq!(s.rounds_stage1, r.rounds_stage1);
+    assert_eq!(s.round_traffic, r.traffic);
+}
+
+#[test]
+fn session_round_counter_reproduces_any_round() {
+    // set_round pins the shared randomness: round r of a fresh session
+    // equals round r reached by iteration.
+    let n = 4;
+    let d = 12;
+    let inputs = gen_inputs(n, d, 1.0, 0.4, 500);
+    let spec = CodecSpec::Lq { q: 16 };
+    let mut iterated = DmeBuilder::new(n, d).codec(spec).seed(13).build();
+    let mut last = None;
+    for _ in 0..6 {
+        last = Some(iterated.round_with_y(&inputs, 1.0));
+    }
+    let mut jumped = DmeBuilder::new(n, d).codec(spec).seed(13).build();
+    jumped.set_round(5);
+    let direct = jumped.round_with_y(&inputs, 1.0);
+    let last = last.unwrap();
+    assert_eq!(last.round, direct.round);
+    assert_eq!(last.estimate, direct.estimate);
+    assert_eq!(last.leader, direct.leader);
+    assert_eq!(last.round_traffic, direct.round_traffic);
+}
