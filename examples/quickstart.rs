@@ -5,7 +5,12 @@
 //! 3. Robust (error-detecting) VarianceReduction.
 //! 4. The session API (`DmeBuilder` → `DmeSession`) — the primary entry
 //!    point: one persistent cluster driven for many rounds, as in an SGD
-//!    deployment (§9).
+//!    deployment (§9). The leader aggregates by *streaming fold*: each
+//!    arriving packet is decode-accumulated straight into an O(d) sum
+//!    (`VectorCodec::decode_accumulate_into`), so leader memory does not
+//!    grow with the cluster.
+//! 5. The fold kernels stand-alone (`coordinator::fold`): sequential and
+//!    chunk-sharded parallel aggregation of pre-collected messages.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -87,9 +92,13 @@ fn main() {
 
     // ---------------------------------------------------------------
     // 4. The session API: configure once, round many times. The cluster
-    //    threads stay alive and every per-machine buffer is recycled, so
-    //    a steady-state round allocates O(1) vectors — this is how the
+    //    threads stay alive, every per-machine buffer is recycled, and
+    //    the leader folds each incoming bitstream straight into its O(d)
+    //    accumulator (streaming fold — no O(n·d) decoded set), so a
+    //    steady-state round allocates O(1) vectors — this is how the
     //    optimizer drivers (opt::dist_gd etc.) consume the protocols.
+    //    Turning `.diagnostics(true)` on switches the leader to the
+    //    collecting path and surfaces `decoded_at_leader`.
     // ---------------------------------------------------------------
     let mut session = DmeBuilder::new(n, d)
         .topology(Topology::Star) // or Topology::Tree { m: n }
@@ -110,5 +119,32 @@ fn main() {
             out.traffic.max_sent,
         );
     }
-    println!("(same protocol bits as the one-shot calls above — minus the per-round thread spawns)");
+    println!("(same protocol bits as the one-shot calls above — minus the per-round thread spawns)\n");
+
+    // ---------------------------------------------------------------
+    // 5. The fold kernels directly: aggregate a batch of already-
+    //    collected messages. `fold_mean` is the sequential fused fold;
+    //    `fold_mean_chunked` shards d across threads — both bit-identical
+    //    to decode-then-sum.
+    // ---------------------------------------------------------------
+    use dme::coordinator::{fold_mean, fold_mean_chunked, FoldPart};
+    let mut lq = LatticeQuantizer::from_y(d, q, y, &mut Rng::new(42));
+    let reference = inputs[0].clone();
+    let msgs: Vec<_> = inputs[1..]
+        .iter()
+        .map(|x| {
+            let mut m = dme::quant::Message::empty();
+            lq.encode_into(x, &mut rng, &mut m);
+            m
+        })
+        .collect();
+    let mut parts = vec![FoldPart::Own(&inputs[0])];
+    parts.extend(msgs.iter().map(FoldPart::Encoded));
+    let mut seq = vec![0.0; d];
+    fold_mean(&lq, &parts, &reference, &mut seq);
+    let mut par = vec![0.0; d];
+    fold_mean_chunked(&lq, &parts, &reference, &mut par, 1024);
+    println!("== streaming fold kernels (coordinator::fold) ==");
+    println!("‖fold − μ‖∞        : {:.4}", dist_inf(&seq, &mu));
+    println!("chunk-sharded == sequential: {}", seq == par);
 }

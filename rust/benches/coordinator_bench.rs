@@ -8,10 +8,17 @@
 //! session (thread amortization) and `encode`/`decode` vs
 //! `encode_into`/`decode_into` (allocation amortization) at d ∈ {128,
 //! 4096}.
+//!
+//! The `fold_bench` section isolates the streaming-fold data plane:
+//! decode-then-sum (legacy leader, O(n·d) buffers + two passes) vs the
+//! fused block-kernel streaming fold (`decode_accumulate_into`, one pass,
+//! O(d)) vs the chunk-sharded parallel fold, at n ∈ {16, 256} and
+//! d ∈ {128, 4096}.
 
 use dme::bench::Bencher;
 use dme::coordinator::{
-    mean_estimation_star, mean_estimation_tree, robust_variance_reduction, CodecSpec, DmeBuilder,
+    fold_mean, fold_mean_chunked, mean_estimation_star, mean_estimation_tree,
+    robust_variance_reduction, CodecSpec, DmeBuilder, FoldPart,
 };
 use dme::quant::{LatticeQuantizer, Message, VectorCodec};
 use dme::rng::Rng;
@@ -67,6 +74,76 @@ fn main() {
     }
 
     session_bench(&mut b);
+    fold_bench(&mut b);
+}
+
+/// Leader aggregation data plane: legacy decode-then-sum vs the fused
+/// streaming fold vs the chunk-sharded parallel fold. All three produce
+/// bit-identical estimates (pinned by `coordinator::fold` tests); the
+/// rows measure the cost of materializing n decoded vectors vs folding
+/// the bitstreams directly.
+fn fold_bench(b: &mut Bencher) {
+    println!("# fold_bench — decode-then-sum vs streaming fold vs chunk-sharded fold\n");
+    for n in [16usize, 256] {
+        for d in [128usize, 4096] {
+            let xs = inputs(n, d, 13);
+            let reference = xs[0].clone();
+            let mut shared = Rng::new(4);
+            let mut lq = LatticeQuantizer::from_y(d, 16, 1.0, &mut shared);
+            let mut rng = Rng::new(5);
+            let msgs: Vec<Message> = xs[1..].iter().map(|x| lq.encode(x, &mut rng)).collect();
+            let mut parts: Vec<FoldPart> = vec![FoldPart::Own(&xs[0])];
+            parts.extend(msgs.iter().map(FoldPart::Encoded));
+
+            // (a) Legacy leader: decode every message into its own
+            // (pre-allocated) buffer, then a second pass sums them.
+            let mut decoded = vec![vec![0.0; d]; n];
+            let mut mu = vec![0.0; d];
+            b.bench(
+                &format!("fold n={n} d={d} decode-then-sum"),
+                Some((n * d) as u64),
+                || {
+                    decoded[0].copy_from_slice(&xs[0]);
+                    for (z, msg) in decoded[1..].iter_mut().zip(&msgs) {
+                        lq.decode_into(msg, &reference, z);
+                    }
+                    for m in mu.iter_mut() {
+                        *m = 0.0;
+                    }
+                    for z in &decoded {
+                        dme::linalg::axpy(&mut mu, 1.0, z);
+                    }
+                    let inv_n = 1.0 / n as f64;
+                    for m in mu.iter_mut() {
+                        *m = inv_n * *m;
+                    }
+                    mu[0]
+                },
+            );
+
+            // (b) Fused block-kernel streaming fold: one pass per
+            // bitstream straight into the O(d) accumulator.
+            b.bench(
+                &format!("fold n={n} d={d} streaming-fused"),
+                Some((n * d) as u64),
+                || {
+                    fold_mean(&lq, &parts, &reference, &mut mu);
+                    mu[0]
+                },
+            );
+
+            // (c) Chunk-sharded parallel fold (1024-coordinate shards).
+            b.bench(
+                &format!("fold n={n} d={d} chunk-sharded"),
+                Some((n * d) as u64),
+                || {
+                    fold_mean_chunked(&lq, &parts, &reference, &mut mu, 1024);
+                    mu[0]
+                },
+            );
+            println!();
+        }
+    }
 }
 
 /// Spawn-per-round vs persistent session vs zero-realloc codec calls.

@@ -18,6 +18,20 @@
 //! through [`VectorCodec::encode_into`] / `decode_into` scratch space),
 //! so the steady-state round allocates O(1) rather than O(n·d) vectors.
 //!
+//! Aggregation is a **streaming fold** (§Perf): the leader never
+//! materializes the `n` decoded vectors — each arriving packet is folded
+//! straight into the O(d) accumulator by
+//! [`VectorCodec::decode_accumulate_into`], one fused pass over the
+//! packed bitstream, in pinned machine order (machine 0 first, the
+//! leader's own input folded at its machine index) so the sum is
+//! bit-identical to the historical decode-all-then-sum. The O(n·d)
+//! decoded collection survives only behind [`DmeBuilder::diagnostics`]
+//! and the `y`-policy measurement rounds, in buffers the leader recycles
+//! across rounds; `y` policies ship one spread scalar back to the driver
+//! instead of `n` vectors. Tree inner nodes fold their children the same
+//! way. For offline aggregation of very wide vectors there is also a
+//! chunk-sharded parallel fold — see [`super::fold`].
+//!
 //! Protocol behavior is bit-identical to the legacy one-shot functions
 //! (`mean_estimation_star`, `mean_estimation_tree`,
 //! `robust_variance_reduction`) for the same `(seed, round)` — those now
@@ -75,7 +89,9 @@ pub struct RoundOutcome {
     /// [`DmeBuilder::diagnostics`] (the hot path recycles these buffers).
     pub outputs: Vec<Vec<f64>>,
     /// Star topology: the leader's decoded per-worker estimates, present
-    /// when diagnostics are on or the `y` policy needs them (§9.2).
+    /// only with [`DmeBuilder::diagnostics`] (the hot path streams the
+    /// fold and never materializes them; `y` policies consume a spread
+    /// scalar measured at the leader instead).
     pub decoded_at_leader: Vec<Vec<f64>>,
     /// Exact per-machine traffic of *this round* (including `y`-policy
     /// side communication).
@@ -204,7 +220,6 @@ impl DmeBuilder {
                 self.y_policy
             );
         }
-        let collect_decoded = self.diagnostics || self.y_policy != YPolicy::Fixed;
         DmeSession {
             n: self.n,
             d: self.d,
@@ -214,7 +229,6 @@ impl DmeBuilder {
             robustness: self.robustness,
             alpha: self.alpha,
             diagnostics: self.diagnostics,
-            collect_decoded,
             y_est: YEstimator::new(self.y_policy, self.y0),
             cluster: Cluster::new(self.n),
             workers: None,
@@ -236,7 +250,6 @@ pub struct DmeSession {
     robustness: Robustness,
     alpha: f64,
     diagnostics: bool,
-    collect_decoded: bool,
     y_est: YEstimator,
     cluster: Cluster,
     workers: Option<Workers>,
@@ -259,6 +272,9 @@ struct Workers {
 struct RoundCmd {
     round: u64,
     y: f64,
+    /// The `y` policy wants a spread measurement this round (the leader
+    /// then collects decoded points and measures max pairwise ℓ∞).
+    measure: bool,
     input: Vec<f64>,
     out: Vec<f64>,
 }
@@ -266,8 +282,12 @@ struct RoundCmd {
 struct WorkerOut {
     input: Vec<f64>,
     output: Vec<f64>,
-    /// Leader only, when decoded-point collection is on.
+    /// Leader only, with diagnostics on (a per-round copy for the caller;
+    /// the working buffers stay in the worker and are recycled).
     decoded: Vec<Vec<f64>>,
+    /// Leader only, when `RoundCmd::measure` asked for it: the max
+    /// pairwise ℓ∞ distance of the decoded points (§9.2 `y` policies).
+    spread: Option<f64>,
 }
 
 /// What a cluster round produced before traffic accounting.
@@ -276,6 +296,7 @@ struct Collected {
     agreement: bool,
     outputs: Vec<Vec<f64>>,
     decoded_at_leader: Vec<Vec<f64>>,
+    spread: Option<f64>,
     leader: Option<usize>,
     leaves: Vec<usize>,
     q_used: Option<u32>,
@@ -293,12 +314,15 @@ impl DmeSession {
         self.check_inputs(inputs);
         let y = self.y_est.y;
         let round = self.next_round();
-        let parts = self.run_cluster_round(inputs, y, round);
-        // Maintain y from the leader's decoded points (§9.2 policies).
-        // The builder restricts non-Fixed policies to the star topology.
+        let measure = self.y_est.needs_spread();
+        let parts = self.run_cluster_round(inputs, y, round, measure);
+        // Maintain y from the spread the leader measured over its decoded
+        // points (§9.2 policies) — one scalar crosses the channel, not
+        // n vectors. The builder restricts non-Fixed policies to the star
+        // topology.
         if self.y_est.policy != YPolicy::Fixed {
             debug_assert!(matches!(self.topology, Topology::Star));
-            let side = self.y_est.update(&parts.decoded_at_leader, self.n);
+            let side = self.y_est.update_spread(parts.spread, self.n);
             if side > 0 && self.n > 1 {
                 // LeaderMeasured: the leader ships one f64 per peer.
                 let leader = parts.leader.unwrap_or(0);
@@ -323,7 +347,7 @@ impl DmeSession {
     pub fn round_with_y(&mut self, inputs: &[Vec<f64>], y: f64) -> RoundOutcome {
         self.check_inputs(inputs);
         let round = self.next_round();
-        let parts = self.run_cluster_round(inputs, y, round);
+        let parts = self.run_cluster_round(inputs, y, round, false);
         self.outcome(round, y, parts)
     }
 
@@ -503,13 +527,15 @@ impl DmeSession {
             let spec = self.spec;
             let seed = self.seed;
             let d = self.d;
-            let collect = self.collect_decoded;
+            let diagnostics = self.diagnostics;
             let topology = self.topology;
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("dme-machine-{}", ep.id))
                     .spawn(move || match topology {
-                        Topology::Star => star_worker(ep, spec, d, seed, collect, crx, otx),
+                        Topology::Star => {
+                            star_worker(ep, spec, d, seed, diagnostics, crx, otx)
+                        }
                         Topology::Tree { m } => tree_worker(ep, m, d, seed, crx, otx),
                     })
                     .expect("spawn machine thread"),
@@ -522,7 +548,13 @@ impl DmeSession {
         });
     }
 
-    fn run_cluster_round(&mut self, inputs: &[Vec<f64>], y: f64, round: u64) -> Collected {
+    fn run_cluster_round(
+        &mut self,
+        inputs: &[Vec<f64>],
+        y: f64,
+        round: u64,
+        measure: bool,
+    ) -> Collected {
         // Protocol stats every machine derives from shared randomness —
         // derived once more here so the driver can report them.
         let (leader, leaves, q_used) = match self.topology {
@@ -540,11 +572,14 @@ impl DmeSession {
             return Collected {
                 agreement: true,
                 outputs: if self.diagnostics { vec![x.clone()] } else { Vec::new() },
-                decoded_at_leader: if self.collect_decoded && leader.is_some() {
+                decoded_at_leader: if self.diagnostics && leader.is_some() {
                     vec![x.clone()]
                 } else {
                     Vec::new()
                 },
+                // A single point has zero spread (the legacy measurement
+                // over the one-element decoded set).
+                spread: if measure { Some(0.0) } else { None },
                 estimate: x,
                 leader,
                 leaves,
@@ -564,6 +599,7 @@ impl DmeSession {
                 .send(RoundCmd {
                     round,
                     y,
+                    measure,
                     input: inbuf,
                     out: outbuf,
                 })
@@ -573,6 +609,7 @@ impl DmeSession {
         let mut agreement = true;
         let mut outputs = Vec::new();
         let mut decoded_at_leader = Vec::new();
+        let mut spread = None;
         for (i, rx) in workers.out_rx.iter().enumerate() {
             let wo = rx.recv().expect("machine thread alive");
             if i == 0 {
@@ -586,6 +623,9 @@ impl DmeSession {
             if !wo.decoded.is_empty() {
                 decoded_at_leader = wo.decoded;
             }
+            if wo.spread.is_some() {
+                spread = wo.spread;
+            }
             self.bufs[i] = Some((wo.input, wo.output));
         }
         Collected {
@@ -593,6 +633,7 @@ impl DmeSession {
             agreement,
             outputs,
             decoded_at_leader,
+            spread,
             leader,
             leaves,
             q_used,
@@ -615,12 +656,21 @@ impl Drop for DmeSession {
 /// Star machine loop — Algorithm 3 with persistent scratch space. The
 /// protocol (leader schedule, codec construction, encoder randomness,
 /// summation order) matches the legacy one-shot implementation exactly.
+///
+/// The leader's aggregation is a streaming fold: each packet is decoded
+/// and accumulated into the O(d) `mu` buffer in one fused pass
+/// ([`VectorCodec::decode_accumulate_into`]), in pinned machine order —
+/// machine 0 first, the leader's own input folded at index `id` — which
+/// is bit-for-bit the legacy decode-all-then-sum order. Only diagnostics
+/// and `y`-policy measurement rounds still materialize the O(n·d)
+/// decoded set, into buffers recycled across rounds.
+#[allow(clippy::too_many_arguments)]
 fn star_worker(
     mut ep: Endpoint,
     spec: CodecSpec,
     d: usize,
     seed: u64,
-    collect_decoded: bool,
+    diagnostics: bool,
     crx: Receiver<RoundCmd>,
     otx: Sender<WorkerOut>,
 ) {
@@ -628,7 +678,7 @@ fn star_worker(
     let n = ep.n;
     let mut stash: Vec<Packet> = Vec::new();
     let mut msg = Message::empty();
-    // Leader-role scratch, sized lazily on first leadership.
+    // Leader-role scratch, sized lazily on first collecting leadership.
     let mut decoded: Vec<Vec<f64>> = Vec::new();
     let mut mu = vec![0.0; d];
     // Stateful codecs (EF-SignSGD, PowerSGD, Top-K) carry error memory
@@ -639,6 +689,7 @@ fn star_worker(
     while let Ok(RoundCmd {
         round,
         y,
+        measure,
         input,
         mut out,
     }) = crx.recv()
@@ -653,23 +704,46 @@ fn star_worker(
         // randomness comes from (seed, round) inside build().
         let mut enc_rng = Rng::new(hash2(hash2(seed, round), id as u64 + 1));
         let mut decoded_out = Vec::new();
+        let mut spread = None;
         if id == leader {
-            if decoded.is_empty() {
-                decoded = vec![vec![0.0; d]; n];
-            }
-            // Gather: decode every worker's message against our input,
-            // stored by sender so the average sums in machine order
-            // (bit-for-bit the legacy order).
-            decoded[id].copy_from_slice(&input);
-            for _ in 0..n - 1 {
-                let p = ep.recv();
-                codec.decode_into(&p.msg, &input, &mut decoded[p.from]);
-            }
             for m in mu.iter_mut() {
                 *m = 0.0;
             }
-            for z in &decoded {
-                crate::linalg::axpy(&mut mu, 1.0, z);
+            if diagnostics || measure {
+                // Collecting path (diagnostics / §9.2 spread measurement):
+                // decode every worker's message against our input as it
+                // arrives, stored by sender in recycled buffers, then sum
+                // in machine order (bit-for-bit the legacy order).
+                if decoded.is_empty() {
+                    decoded = vec![vec![0.0; d]; n];
+                }
+                decoded[id].copy_from_slice(&input);
+                for _ in 0..n - 1 {
+                    let p = ep.recv();
+                    codec.decode_into(&p.msg, &input, &mut decoded[p.from]);
+                }
+                for z in &decoded {
+                    crate::linalg::axpy(&mut mu, 1.0, z);
+                }
+                if measure {
+                    spread = Some(YEstimator::max_pairwise_inf(&decoded));
+                }
+                if diagnostics {
+                    decoded_out = decoded.clone();
+                }
+            } else {
+                // Streaming fold (the hot path): gather in machine order
+                // via recv_from (out-of-order arrivals wait in the stash)
+                // and fold each bitstream straight into `mu` — O(d)
+                // leader memory however large the cluster.
+                for v in 0..n {
+                    if v == id {
+                        crate::linalg::axpy(&mut mu, 1.0, &input);
+                    } else {
+                        let p = ep.recv_from(v, &mut stash);
+                        codec.decode_accumulate_into(&p.msg, &input, 1.0, &mut mu);
+                    }
+                }
             }
             let inv_n = 1.0 / n as f64;
             for m in mu.iter_mut() {
@@ -679,9 +753,6 @@ fn star_worker(
             codec.encode_into(&mu, &mut enc_rng, &mut msg);
             ep.broadcast(&msg);
             codec.decode_into(&msg, &input, &mut out);
-            if collect_decoded {
-                decoded_out = decoded.clone();
-            }
         } else {
             codec.encode_into(&input, &mut enc_rng, &mut msg);
             ep.send(leader, msg.clone());
@@ -693,6 +764,7 @@ fn star_worker(
                 input,
                 output: out,
                 decoded: decoded_out,
+                spread,
             })
             .is_err()
         {
@@ -722,6 +794,7 @@ fn tree_worker(
     while let Ok(RoundCmd {
         round,
         y,
+        measure: _,
         input,
         mut out,
     }) = crx.recv()
@@ -749,7 +822,15 @@ fn tree_worker(
             let mut next: Vec<(usize, Option<Vec<f64>>)> = Vec::with_capacity(pairs + 1);
             for j in 0..pairs {
                 let parent = (j * 2 + level * 3) % n;
-                let mut decoded: Vec<Vec<f64>> = Vec::with_capacity(2);
+                // Streaming fold at the inner node: both children are
+                // decode-accumulated straight into the node's estimate
+                // buffer (no per-child decoded vectors), then halved in
+                // place — bit-identical to the legacy add-then-scale.
+                let mut acc = if parent == id {
+                    Some(vec![0.0; d])
+                } else {
+                    None
+                };
                 for c in 0..2 {
                     let idx = 2 * j + c;
                     let child = ests[idx].0;
@@ -760,22 +841,21 @@ fn tree_worker(
                             ep.send(parent, msg);
                         } else {
                             // Same machine plays both roles: no wire cost.
-                            decoded.push(codec.decode(&msg, &input));
+                            let a = acc.as_mut().expect("parent holds accumulator");
+                            codec.decode_accumulate_into(&msg, &input, 1.0, a);
                         }
                     } else if parent == id {
                         let p = ep.recv_from(child, &mut stash);
-                        decoded.push(codec.decode(&p.msg, &input));
+                        let a = acc.as_mut().expect("parent holds accumulator");
+                        codec.decode_accumulate_into(&p.msg, &input, 1.0, a);
                     }
                 }
-                let avg = if parent == id {
-                    Some(crate::linalg::scale(
-                        &crate::linalg::add(&decoded[0], &decoded[1]),
-                        0.5,
-                    ))
-                } else {
-                    None
-                };
-                next.push((parent, avg));
+                if let Some(a) = acc.as_mut() {
+                    for v in a.iter_mut() {
+                        *v *= 0.5;
+                    }
+                }
+                next.push((parent, acc));
             }
             if ests.len() % 2 == 1 {
                 // Odd node passes through unchanged.
@@ -807,6 +887,7 @@ fn tree_worker(
                 input,
                 output: out,
                 decoded: Vec::new(),
+                spread: None,
             })
             .is_err()
         {

@@ -1,0 +1,228 @@
+//! Streaming and chunk-sharded aggregation folds over packed bitstreams.
+//!
+//! The session's star leader folds packets as they *arrive* (see
+//! [`super::api`]), which is the right shape when messages trickle in
+//! over a network. This module covers the other deployment shape the
+//! paper's §9 serving story implies: all `n` messages are already in
+//! leader memory (a batch of RPCs, a replay log, a parameter-server
+//! shard) and the only question is how fast `d` coordinates can be
+//! folded. [`fold_mean`] is the sequential fused fold;
+//! [`fold_mean_chunked`] shards `d` into cache-sized chunks folded by
+//! parallel threads via [`VectorCodec::decode_accumulate_range`] — a
+//! fixed-width bitstream is random-access, so each thread seeks straight
+//! to its chunk's bit offset in every message. The chunked fold pays off
+//! only for codecs that *override* `decode_accumulate_range` with a real
+//! seek (the lattice family, full precision); codecs on the allocating
+//! default would decode the full vector once per chunk, so stick with
+//! [`fold_mean`] for those.
+//!
+//! Both folds add per coordinate in the same pinned order (part 0 first),
+//! so `fold_mean`, `fold_mean_chunked`, and the session leader's
+//! streaming fold produce bit-identical estimates — the property
+//! `rust/tests/prop.rs` and the unit tests below pin.
+
+use crate::quant::{Message, VectorCodec};
+
+/// One aggregation input: either the folder's own uncompressed vector
+/// (the leader folds its input without a wire round-trip) or an encoded
+/// packet from a peer.
+pub enum FoldPart<'a> {
+    Own(&'a [f64]),
+    Encoded(&'a Message),
+}
+
+/// Sequential streaming fold: `out = (Σ parts) / parts.len()`, decoding
+/// every encoded part against `reference` and accumulating in part order
+/// with a single fused pass per part. O(d) memory, zero allocations.
+pub fn fold_mean(
+    codec: &dyn VectorCodec,
+    parts: &[FoldPart],
+    reference: &[f64],
+    out: &mut [f64],
+) {
+    assert!(!parts.is_empty(), "fold needs at least one part");
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for part in parts {
+        match part {
+            FoldPart::Own(x) => crate::linalg::axpy(out, 1.0, x),
+            FoldPart::Encoded(msg) => codec.decode_accumulate_into(msg, reference, 1.0, out),
+        }
+    }
+    let inv_n = 1.0 / parts.len() as f64;
+    for o in out.iter_mut() {
+        *o = inv_n * *o;
+    }
+}
+
+/// Chunk-sharded parallel fold: splits `d` into chunks of ~`chunk`
+/// coordinates (rounded up to the codec's
+/// [`VectorCodec::fold_chunk_align`]) and folds each chunk across *all*
+/// parts, chunks distributed over at most `available_parallelism`
+/// threads (each thread walks its run of cache-sized chunks in order, so
+/// tiny chunks or huge `d` never explode the thread count). Per
+/// coordinate the additions happen in the identical part order as
+/// [`fold_mean`], so the result is bit-identical — sharding changes
+/// wall-clock, never the estimate.
+///
+/// Requires a `Sync` codec (the lattice family minus RLQSGD, whose
+/// decode scratch is interior-mutable — and whose global rotation rules
+/// out range decoding anyway). Only worth calling for codecs that
+/// override [`VectorCodec::decode_accumulate_range`] with a seek-based
+/// kernel (`LatticeQuantizer`, `D4Quantizer`, `FullPrecision`): on the
+/// default implementation every chunk re-decodes the full vector, which
+/// is strictly more work than [`fold_mean`].
+pub fn fold_mean_chunked<C: VectorCodec + Sync + ?Sized>(
+    codec: &C,
+    parts: &[FoldPart],
+    reference: &[f64],
+    out: &mut [f64],
+    chunk: usize,
+) {
+    assert!(!parts.is_empty(), "fold needs at least one part");
+    let align = codec.fold_chunk_align().max(1);
+    let chunk = chunk.max(1).div_ceil(align) * align;
+    // Contiguous runs of chunks per thread, capped at the core count.
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let n_chunks = out.len().div_ceil(chunk).max(1);
+    let group = n_chunks.div_ceil(threads) * chunk;
+    let inv_n = 1.0 / parts.len() as f64;
+    std::thread::scope(|scope| {
+        for (gi, run) in out.chunks_mut(group).enumerate() {
+            scope.spawn(move || {
+                for (ci, shard) in run.chunks_mut(chunk).enumerate() {
+                    let lo = gi * group + ci * chunk;
+                    for o in shard.iter_mut() {
+                        *o = 0.0;
+                    }
+                    for part in parts {
+                        match part {
+                            FoldPart::Own(x) => {
+                                crate::linalg::axpy(shard, 1.0, &x[lo..lo + shard.len()])
+                            }
+                            FoldPart::Encoded(msg) => {
+                                codec.decode_accumulate_range(msg, reference, 1.0, lo, shard)
+                            }
+                        }
+                    }
+                    for o in shard.iter_mut() {
+                        *o = inv_n * *o;
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::baselines::FullPrecision;
+    use crate::quant::{D4Quantizer, LatticeQuantizer};
+    use crate::rng::Rng;
+
+    fn gen(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| 10.0 + rng.uniform(-0.45, 0.45)).collect())
+            .collect()
+    }
+
+    /// Reference: decode every message into its own buffer, then sum in
+    /// part order and divide — the legacy leader data plane.
+    fn decode_then_sum(
+        codec: &dyn VectorCodec,
+        parts: &[FoldPart],
+        reference: &[f64],
+        d: usize,
+    ) -> Vec<f64> {
+        let mut mu = vec![0.0; d];
+        for part in parts {
+            match part {
+                FoldPart::Own(x) => crate::linalg::axpy(&mut mu, 1.0, x),
+                FoldPart::Encoded(msg) => {
+                    let z = codec.decode(msg, reference);
+                    crate::linalg::axpy(&mut mu, 1.0, &z);
+                }
+            }
+        }
+        let inv_n = 1.0 / parts.len() as f64;
+        for m in mu.iter_mut() {
+            *m = inv_n * *m;
+        }
+        mu
+    }
+
+    #[test]
+    fn streaming_and_chunked_folds_match_decode_then_sum() {
+        let n = 9;
+        let d = 257;
+        let inputs = gen(n, d, 5);
+        let mut shared = Rng::new(6);
+        let mut codec = LatticeQuantizer::from_y(d, 16, 1.0, &mut shared);
+        let mut rng = Rng::new(7);
+        let reference = inputs[0].clone();
+        let msgs: Vec<Message> = inputs[1..]
+            .iter()
+            .map(|x| crate::quant::VectorCodec::encode(&mut codec, x, &mut rng))
+            .collect();
+        let mut parts = vec![FoldPart::Own(&inputs[0])];
+        parts.extend(msgs.iter().map(FoldPart::Encoded));
+
+        let expect = decode_then_sum(&codec, &parts, &reference, d);
+        let mut seq = vec![9.9; d];
+        fold_mean(&codec, &parts, &reference, &mut seq);
+        assert_eq!(seq, expect, "sequential fused fold");
+        for chunk in [1usize, 7, 64, 300] {
+            let mut par = vec![-1.0; d];
+            fold_mean_chunked(&codec, &parts, &reference, &mut par, chunk);
+            assert_eq!(par, expect, "chunked fold, chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn chunked_fold_respects_d4_bucket_alignment() {
+        let n = 5;
+        let d = 64;
+        let inputs = gen(n, d, 8);
+        let mut shared = Rng::new(9);
+        let mut codec = D4Quantizer::from_y(d, 16, 1.0, &mut shared);
+        let mut rng = Rng::new(10);
+        let reference = inputs[0].clone();
+        let msgs: Vec<Message> = inputs[1..]
+            .iter()
+            .map(|x| crate::quant::VectorCodec::encode(&mut codec, x, &mut rng))
+            .collect();
+        let mut parts = vec![FoldPart::Own(&inputs[0])];
+        parts.extend(msgs.iter().map(FoldPart::Encoded));
+        let expect = decode_then_sum(&codec, &parts, &reference, d);
+        // chunk=6 would split a bucket; alignment rounds it up to 8.
+        let mut par = vec![0.0; d];
+        fold_mean_chunked(&codec, &parts, &reference, &mut par, 6);
+        assert_eq!(par, expect);
+    }
+
+    #[test]
+    fn folds_cover_reference_free_codecs() {
+        let n = 4;
+        let d = 33;
+        let inputs = gen(n, d, 11);
+        let mut codec = FullPrecision::new(d);
+        let mut rng = Rng::new(12);
+        let msgs: Vec<Message> = inputs
+            .iter()
+            .map(|x| crate::quant::VectorCodec::encode(&mut codec, x, &mut rng))
+            .collect();
+        let parts: Vec<FoldPart> = msgs.iter().map(FoldPart::Encoded).collect();
+        let expect = decode_then_sum(&codec, &parts, &inputs[0], d);
+        let mut seq = vec![0.0; d];
+        fold_mean(&codec, &parts, &inputs[0], &mut seq);
+        let mut par = vec![0.0; d];
+        fold_mean_chunked(&codec, &parts, &inputs[0], &mut par, 8);
+        assert_eq!(seq, expect);
+        assert_eq!(par, expect);
+    }
+}

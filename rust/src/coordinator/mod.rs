@@ -12,6 +12,14 @@
 //! Protocol modules:
 //!
 //! * [`api`] — the `DmeBuilder`/`DmeSession` pair and `RoundOutcome`.
+//!   Leader aggregation is a streaming fold: packets are decoded and
+//!   accumulated in one fused pass per packet
+//!   (`VectorCodec::decode_accumulate_into`) at O(d) leader memory, with
+//!   the O(n·d) decoded collection surviving only behind diagnostics /
+//!   `y`-policy measurement rounds.
+//! * [`fold`] — the fold kernels as free functions: sequential
+//!   [`fold_mean`] plus the chunk-sharded parallel [`fold_mean_chunked`]
+//!   for batch aggregation of very wide vectors.
 //! * [`topology`] — star vs binary-tree layout selection.
 //! * [`star`] — Algorithm 3: two-round MeanEstimation through a randomly
 //!   chosen leader (expected-cost bounds, Theorem 16).
@@ -34,6 +42,7 @@
 //! vector) alongside accuracy and traffic.
 
 pub mod api;
+pub mod fold;
 pub mod session;
 pub mod star;
 pub mod sublinear_me;
@@ -43,6 +52,7 @@ pub mod variance_reduction;
 pub mod y_estimator;
 
 pub use api::{DmeBuilder, DmeSession, Robustness, RoundOutcome};
+pub use fold::{fold_mean, fold_mean_chunked, FoldPart};
 pub use session::{SessionRound, StarSession};
 pub use star::{mean_estimation_star, StarOutcome};
 pub use sublinear_me::{sublinear_mean_estimation, SublinearOutcome};

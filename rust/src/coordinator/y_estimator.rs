@@ -55,38 +55,65 @@ impl YEstimator {
         m
     }
 
+    /// Whether the *next* [`Self::update_spread`] will consume a spread
+    /// measurement. The session forwards this to the leader's machine
+    /// thread so the O(n²·d) pairwise measurement (and the O(n·d) decoded
+    /// collection behind it) runs only on rounds that need it — the
+    /// streaming-fold leader path skips both entirely.
+    pub fn needs_spread(&self) -> bool {
+        match self.policy {
+            YPolicy::Fixed => false,
+            YPolicy::FromQuantized { .. } => true,
+            YPolicy::LeaderMeasured { period, .. } => {
+                period > 0 && (self.rounds_seen + 1) % period.max(1) == 0
+            }
+        }
+    }
+
     /// Update from this round's quantized points (decoded at the leader).
     /// Returns the bits of side communication incurred by the policy.
     pub fn update(&mut self, quantized_points: &[Vec<f64>], n_machines: usize) -> u64 {
+        let spread = if self.needs_spread() {
+            Some(Self::max_pairwise_inf(quantized_points))
+        } else {
+            None
+        };
+        self.update_spread(spread, n_machines)
+    }
+
+    /// Update from a pre-computed max-pairwise-ℓ∞ spread measurement
+    /// (`None` when the policy did not request one this round — see
+    /// [`Self::needs_spread`]). This is the session's entry point: the
+    /// measurement is taken at the leader, which ships back one scalar
+    /// instead of `n` decoded vectors. Returns the policy's side bits.
+    pub fn update_spread(&mut self, spread: Option<f64>, n_machines: usize) -> u64 {
         self.rounds_seen += 1;
         match self.policy {
             YPolicy::Fixed => 0,
             YPolicy::FromQuantized { slack } => {
-                let m = Self::max_pairwise_inf(quantized_points);
-                if m > 0.0 {
-                    self.y = slack * m;
-                } else {
-                    // All points quantized identically: the lattice is far
-                    // coarser than the true spread. Decay y geometrically
-                    // so the side length tracks the shrinking gradients
-                    // (decode still succeeds — spread < s/2 certainly).
-                    self.y *= 0.5;
-                }
+                self.apply(slack, spread.expect("FromQuantized measures every round"));
                 0
             }
             YPolicy::LeaderMeasured { slack, period } => {
                 if period == 0 || self.rounds_seen % period.max(1) != 0 {
                     return 0;
                 }
-                let m = Self::max_pairwise_inf(quantized_points);
-                if m > 0.0 {
-                    self.y = slack * m;
-                } else {
-                    self.y *= 0.5;
-                }
+                self.apply(slack, spread.expect("LeaderMeasured measures on period rounds"));
                 // Leader broadcasts one f64 to n−1 machines.
                 64 * (n_machines.saturating_sub(1) as u64)
             }
+        }
+    }
+
+    fn apply(&mut self, slack: f64, m: f64) {
+        if m > 0.0 {
+            self.y = slack * m;
+        } else {
+            // All points quantized identically: the lattice is far
+            // coarser than the true spread. Decay y geometrically
+            // so the side length tracks the shrinking gradients
+            // (decode still succeeds — spread < s/2 certainly).
+            self.y *= 0.5;
         }
     }
 }
@@ -117,6 +144,37 @@ mod tests {
         assert_eq!(e.y, 0.35, "degenerate measurement must decay, not zero");
         e.update(&[vec![1.0, 1.0], vec![1.0, 1.0]], 2);
         assert_eq!(e.y, 0.175);
+    }
+
+    #[test]
+    fn update_spread_matches_update_and_needs_spread_gates_measurement() {
+        let pts = vec![vec![0.0, 0.0], vec![0.4, -0.2], vec![0.1, 0.6]];
+        let mut a = YEstimator::new(YPolicy::FromQuantized { slack: 1.5 }, 1.0);
+        let mut b = YEstimator::new(YPolicy::FromQuantized { slack: 1.5 }, 1.0);
+        assert!(b.needs_spread());
+        a.update(&pts, 3);
+        b.update_spread(Some(YEstimator::max_pairwise_inf(&pts)), 3);
+        assert_eq!(a.y, b.y);
+
+        // LeaderMeasured only wants a measurement on period rounds.
+        let mut e = YEstimator::new(
+            YPolicy::LeaderMeasured {
+                slack: 2.0,
+                period: 3,
+            },
+            1.0,
+        );
+        let mut measured = 0;
+        for _ in 0..9 {
+            let spread = e.needs_spread().then_some(2.0);
+            if spread.is_some() {
+                measured += 1;
+            }
+            e.update_spread(spread, 4);
+        }
+        assert_eq!(measured, 3);
+        assert!((e.y - 4.0).abs() < 1e-12);
+        assert!(!YEstimator::new(YPolicy::Fixed, 1.0).needs_spread());
     }
 
     #[test]

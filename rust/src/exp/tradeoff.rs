@@ -36,7 +36,10 @@ pub fn run(opts: &ExpOpts) -> String {
     for q in [4u32, 8, 16, 32, 64, 128] {
         // Star topology measurements over one persistent session (the
         // round counter advances the shared randomness per trial exactly
-        // as the historical per-trial one-shot calls did).
+        // as the historical per-trial one-shot calls did). Diagnostics
+        // stay off, so the leader runs the streaming fold — O(d) memory,
+        // one fused decode-accumulate pass per packet — while producing
+        // bit-identical estimates.
         let mut star = DmeBuilder::new(n, d).codec(CodecSpec::Lq { q }).seed(7).build();
         let mut var_star = 0.0;
         let mut bits_star = 0u64;

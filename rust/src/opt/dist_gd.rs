@@ -100,7 +100,10 @@ pub fn run_distributed_gd(ds: &Regression, agg: &GdAggregation, cfg: &GdConfig) 
     // Persistent cluster for the Star path (Exp 5 style): the session
     // owns the y estimator and keeps the machine threads alive across
     // iterations — bit-identical to the historical one-shot-per-iteration
-    // protocol, minus the per-round thread spawns.
+    // protocol, minus the per-round thread spawns. With diagnostics off
+    // the leader aggregates by streaming fold (decode_accumulate_into),
+    // so its memory stays O(d) however many machines feed it; y-policy
+    // measurement rounds ship one spread scalar back, not n vectors.
     let mut star_sess = match agg {
         GdAggregation::Star(spec) => Some(
             DmeBuilder::new(n, d)

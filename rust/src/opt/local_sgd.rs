@@ -27,7 +27,9 @@ pub struct LocalSgdConfig {
     /// `None` (default): the historical all-to-all exchange. `Some(t)`:
     /// aggregate the deltas through a persistent [`crate::coordinator::DmeBuilder`] session
     /// over topology `t` (tree sessions pin `y` at `y0` — the tree has
-    /// no leader to measure it).
+    /// no leader to measure it). Session aggregation runs the streaming
+    /// fold: the leader (star) and every inner node (tree) fold incoming
+    /// bitstreams straight into an O(d) accumulator.
     pub topology: Option<Topology>,
 }
 

@@ -59,6 +59,33 @@ impl VectorCodec for FullPrecision {
             *o = r.read_f32() as f64;
         }
     }
+
+    /// Fused streaming-fold kernel: widen-and-accumulate in one pass.
+    fn decode_accumulate_into(&self, msg: &Message, _reference: &[f64], weight: f64, acc: &mut [f64]) {
+        assert_eq!(acc.len(), self.d);
+        let mut r = BitReader::new(&msg.bytes);
+        for a in acc.iter_mut() {
+            *a += weight * (r.read_f32() as f64);
+        }
+    }
+
+    /// Chunk-sharded fold kernel: f32 fields are fixed-width, so chunk
+    /// `lo` starts at bit `32·lo`.
+    fn decode_accumulate_range(
+        &self,
+        msg: &Message,
+        _reference: &[f64],
+        weight: f64,
+        lo: usize,
+        acc: &mut [f64],
+    ) {
+        assert!(lo + acc.len() <= self.d);
+        let mut r = BitReader::new(&msg.bytes);
+        r.seek(32 * lo as u64);
+        for a in acc.iter_mut() {
+            *a += weight * (r.read_f32() as f64);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -145,6 +145,77 @@ impl D4Quantizer {
         out
     }
 
+    /// The shared fused decode loop over buckets `bucket_lo..bucket_lo +
+    /// buckets`: seeks to the bucket's bit offset, splits each packed
+    /// bucket into its colors (reconstructing the parity-implied fourth
+    /// LSB), and hands every coordinate to `emit(index, value)`. All
+    /// decode entry points share this loop, so they are value-identical
+    /// by construction.
+    ///
+    /// A packed bucket is one fixed-width `4·width − 1`-bit field, so for
+    /// `width ≤ 16` (q ≤ 65536, every experiment config) whole buckets
+    /// stream through the word-granular block kernel
+    /// [`BitReader::read_block`] — one unaligned load covers
+    /// ⌊64/(4·width−1)⌋ buckets — and the colors are split out with
+    /// shifts. Wider q falls back to per-field reads.
+    fn decode_fold(
+        &self,
+        msg: &Message,
+        reference: &[f64],
+        bucket_lo: usize,
+        buckets: usize,
+        mut emit: impl FnMut(usize, f64),
+    ) {
+        let w = self.width;
+        let bucket_bits = 4 * w as u64 - 1;
+        let mut r = BitReader::new(&msg.bytes);
+        r.seek(bucket_lo as u64 * bucket_bits);
+        let inv_sq = 1.0 / (self.s * self.q as f64);
+        let inv_q = 1.0 / self.q as f64;
+        let qi = self.q as i64;
+        let mut do_bucket = |b: usize, c0: u64, c1: u64, c2: u64, c3_hi: u64| {
+            // Implied parity bit: sum of colors is even.
+            let lsb = (c0 ^ c1 ^ c2) & 1;
+            let c3 = (c3_hi << 1) | lsb;
+            for (i, c) in [c0, c1, c2, c3].into_iter().enumerate() {
+                let j = 4 * b + i;
+                let m = ((reference[j] - self.offset[j]) * inv_sq - c as f64 * inv_q)
+                    .round_ties_even() as i64;
+                let k = c as i64 + qi * m;
+                emit(j, self.offset[j] + self.s * k as f64);
+            }
+        };
+        if bucket_bits <= 64 {
+            const BLOCK: usize = 64;
+            let mask = (1u64 << w) - 1;
+            let mut packed = [0u64; BLOCK];
+            let mut done = 0;
+            while done < buckets {
+                let take = (buckets - done).min(BLOCK);
+                r.read_block(bucket_bits as u32, &mut packed[..take]);
+                for (i, &pv) in packed[..take].iter().enumerate() {
+                    // LSB-first field order matches the encoder's pushes.
+                    do_bucket(
+                        bucket_lo + done + i,
+                        pv & mask,
+                        (pv >> w) & mask,
+                        (pv >> (2 * w)) & mask,
+                        pv >> (3 * w),
+                    );
+                }
+                done += take;
+            }
+        } else {
+            for b in bucket_lo..bucket_lo + buckets {
+                let c0 = r.read(w);
+                let c1 = r.read(w);
+                let c2 = r.read(w);
+                let c3_hi = r.read(w - 1);
+                do_bucket(b, c0, c1, c2, c3_hi);
+            }
+        }
+    }
+
     /// Encode returning the quantized point as well.
     pub fn encode_with_point(&self, x: &[f64]) -> (Message, Vec<f64>) {
         assert_eq!(x.len(), self.d);
@@ -179,30 +250,46 @@ impl VectorCodec for D4Quantizer {
     }
 
     fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
-        assert_eq!(reference.len(), self.d);
-        let mut r = BitReader::new(&msg.bytes);
-        let inv_sq = 1.0 / (self.s * self.q as f64);
-        let inv_q = 1.0 / self.q as f64;
-        let qi = self.q as i64;
-        let mut out = Vec::with_capacity(self.d);
-        for b in 0..self.d / 4 {
-            let c0 = r.read(self.width);
-            let c1 = r.read(self.width);
-            let c2 = r.read(self.width);
-            let c3_hi = r.read(self.width - 1);
-            // Implied parity bit: sum of colors is even.
-            let lsb = (c0 ^ c1 ^ c2) & 1;
-            let c3 = (c3_hi << 1) | lsb;
-            for (i, c) in [c0, c1, c2, c3].into_iter().enumerate() {
-                let j = 4 * b + i;
-                let m = ((reference[j] - self.offset[j]) * inv_sq
-                    - c as f64 * inv_q)
-                    .round_ties_even() as i64;
-                let k = c as i64 + qi * m;
-                out.push(self.offset[j] + self.s * k as f64);
-            }
-        }
+        let mut out = vec![0.0; self.d];
+        self.decode_into(msg, reference, &mut out);
         out
+    }
+
+    fn decode_into(&self, msg: &Message, reference: &[f64], out: &mut [f64]) {
+        assert_eq!(reference.len(), self.d);
+        assert_eq!(out.len(), self.d);
+        self.decode_fold(msg, reference, 0, self.d / 4, |j, v| out[j] = v);
+    }
+
+    /// Fused streaming-fold kernel (single pass, parity bit reconstructed
+    /// inline, no decoded-vector materialization).
+    fn decode_accumulate_into(&self, msg: &Message, reference: &[f64], weight: f64, acc: &mut [f64]) {
+        assert_eq!(reference.len(), self.d);
+        assert_eq!(acc.len(), self.d);
+        self.decode_fold(msg, reference, 0, self.d / 4, |j, v| acc[j] += weight * v);
+    }
+
+    /// Chunk-sharded fold kernel. Chunks must respect the bucket format:
+    /// `lo` and `acc.len()` are multiples of 4 (see
+    /// [`VectorCodec::fold_chunk_align`]).
+    fn decode_accumulate_range(
+        &self,
+        msg: &Message,
+        reference: &[f64],
+        weight: f64,
+        lo: usize,
+        acc: &mut [f64],
+    ) {
+        assert_eq!(reference.len(), self.d);
+        assert!(lo % 4 == 0 && acc.len() % 4 == 0, "D4 chunks are bucket-aligned");
+        assert!(lo + acc.len() <= self.d);
+        self.decode_fold(msg, reference, lo / 4, acc.len() / 4, |j, v| {
+            acc[j - lo] += weight * v
+        });
+    }
+
+    fn fold_chunk_align(&self) -> usize {
+        4
     }
 
     fn needs_reference(&self) -> bool {
@@ -291,6 +378,37 @@ mod tests {
                 assert!((zi - pi).abs() < 1e-9, "decode != encoded point");
             }
             let _ = codec.encode(&x, &mut rng);
+        }
+    }
+
+    #[test]
+    fn fused_fold_kernels_match_decode_plus_axpy() {
+        let mut shared = Rng::new(9);
+        let mut rng = Rng::new(10);
+        for (d, q) in [(4usize, 8u32), (64, 16), (256, 8)] {
+            let mut codec = D4Quantizer::from_y(d, q, 1.0, &mut shared);
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-20.0, 20.0)).collect();
+            let xv: Vec<f64> = x.iter().map(|v| v + rng.uniform(-0.5, 0.5)).collect();
+            let msg = codec.encode(&x, &mut rng);
+            let z = codec.decode(&msg, &xv);
+            let mut z2 = vec![0.0; d];
+            codec.decode_into(&msg, &xv, &mut z2);
+            assert_eq!(z, z2, "decode_into parity");
+            let w = rng.uniform(-2.0, 2.0);
+            let stale: Vec<f64> = (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let mut expect = stale.clone();
+            crate::linalg::axpy(&mut expect, w, &z);
+            let mut acc = stale.clone();
+            codec.decode_accumulate_into(&msg, &xv, w, &mut acc);
+            assert_eq!(acc, expect, "fused fold (d={d} q={q})");
+            if d >= 16 {
+                let lo = 4 * (d / 12); // bucket-aligned interior chunk
+                let hi = d - 4;
+                let mut acc_r = stale[lo..hi].to_vec();
+                codec.decode_accumulate_range(&msg, &xv, w, lo, &mut acc_r);
+                assert_eq!(acc_r, expect[lo..hi], "range fold (d={d} q={q})");
+            }
+            assert_eq!(codec.fold_chunk_align(), 4);
         }
     }
 

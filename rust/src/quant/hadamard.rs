@@ -66,34 +66,60 @@ impl Rotation {
 
     /// Forward rotation: zero-pad, multiply by D, apply H.
     pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = Vec::new();
+        self.forward_into(x, &mut y);
+        y
+    }
+
+    /// Forward rotation into a caller-owned scratch buffer (§Perf): the
+    /// buffer is cleared and refilled to the padded length, so after its
+    /// first use a round loop re-rotates with zero allocations. Values
+    /// are identical to [`Self::forward`].
+    pub fn forward_into(&self, x: &[f64], out: &mut Vec<f64>) {
         assert_eq!(x.len(), self.d);
         let dp = self.padded_dim();
-        let mut y = vec![0.0; dp];
+        out.clear();
+        out.resize(dp, 0.0);
         for i in 0..self.d {
-            y[i] = x[i] * self.sign[i];
+            out[i] = x[i] * self.sign[i];
         }
-        fwht(&mut y);
-        y
+        fwht(out);
     }
 
     /// Inverse rotation: apply H (involution), multiply by D, truncate.
     pub fn inverse(&self, y: &[f64]) -> Vec<f64> {
         assert_eq!(y.len(), self.padded_dim());
         let mut z = y.to_vec();
-        fwht(&mut z);
-        for (zi, si) in z.iter_mut().zip(&self.sign) {
-            *zi *= si;
-        }
+        self.inverse_in_place(&mut z);
         z.truncate(self.d);
         z
+    }
+
+    /// In-place inverse rotation of a padded-length buffer: applies H
+    /// then the sign diagonal. The caller reads the first `d` entries
+    /// (the pad tail holds reconstruction residue, as in
+    /// [`Self::inverse`] before its truncate).
+    pub fn inverse_in_place(&self, y: &mut [f64]) {
+        assert_eq!(y.len(), self.padded_dim());
+        fwht(y);
+        for (yi, si) in y.iter_mut().zip(&self.sign) {
+            *yi *= si;
+        }
     }
 }
 
 /// RLQSGD codec: rotate with `HD`, lattice-quantize in rotated space,
 /// decode against the rotated reference, rotate back.
+///
+/// The rotated-space scratch buffers live behind a `RefCell` because the
+/// decode paths take `&self`; the codec is still `Send` (one machine
+/// thread owns it), which is all [`VectorCodec`] requires.
 pub struct RotatedLatticeQuantizer {
     pub rotation: Rotation,
     pub inner: LatticeQuantizer,
+    /// (rotated reference, rotated payload) — recycled by every `_into`
+    /// call so the round loop allocates nothing after its first round.
+    scratch: std::cell::RefCell<(Vec<f64>, Vec<f64>)>,
 }
 
 impl RotatedLatticeQuantizer {
@@ -107,7 +133,11 @@ impl RotatedLatticeQuantizer {
             super::lattice::CubicLattice::random_offset(dp, s, shared),
             q,
         );
-        RotatedLatticeQuantizer { rotation, inner }
+        RotatedLatticeQuantizer {
+            rotation,
+            inner,
+            scratch: std::cell::RefCell::new((Vec::new(), Vec::new())),
+        }
     }
 
     /// Message size: padded_d · ⌈log₂ q⌉ bits.
@@ -120,6 +150,24 @@ impl RotatedLatticeQuantizer {
         let rx = self.rotation.forward(x);
         let (msg, _) = self.inner.encode_with_point(&rx);
         (msg, rx)
+    }
+
+    /// The shared scratch decode pipeline (rotate reference → lattice
+    /// decode → inverse-rotate in place), handing the first `d` unrotated
+    /// coordinates to `sink`. Both decode entry points are this pipeline
+    /// with a different sink, so they are value-identical by
+    /// construction.
+    fn decode_to_scratch(&self, msg: &Message, reference: &[f64], sink: impl FnOnce(&[f64])) {
+        let d = self.rotation.d;
+        assert_eq!(reference.len(), d);
+        let mut sc = self.scratch.borrow_mut();
+        let (rref, rz) = &mut *sc;
+        self.rotation.forward_into(reference, rref);
+        rz.clear();
+        rz.resize(self.rotation.padded_dim(), 0.0);
+        self.inner.decode_into(msg, rref, rz);
+        self.rotation.inverse_in_place(rz);
+        sink(&rz[..d]);
     }
 }
 
@@ -137,9 +185,38 @@ impl VectorCodec for RotatedLatticeQuantizer {
     }
 
     fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
-        let r_ref = self.rotation.forward(reference);
-        let rz = self.inner.decode(msg, &r_ref);
-        self.rotation.inverse(&rz)
+        let mut out = vec![0.0; self.rotation.d];
+        self.decode_into(msg, reference, &mut out);
+        out
+    }
+
+    /// Zero-alloc encode through the scratch rotation buffer + the inner
+    /// lattice's recycled bit writer (bit-identical to `encode`).
+    fn encode_into(&mut self, x: &[f64], rng: &mut Rng, out: &mut Message) {
+        let (rx, _) = self.scratch.get_mut();
+        self.rotation.forward_into(x, rx);
+        self.inner.encode_into(rx, rng, out);
+    }
+
+    /// Zero-alloc decode: the shared scratch pipeline (`decode_to_scratch`)
+    /// with the unrotated coordinates copied out. Value-identical to
+    /// `decode`.
+    fn decode_into(&self, msg: &Message, reference: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.rotation.d);
+        self.decode_to_scratch(msg, reference, |z| out.copy_from_slice(z));
+    }
+
+    /// Fused fold: same scratch pipeline, with the final unrotated
+    /// coordinates accumulated instead of copied. (A single-pass bitstream
+    /// fold is impossible here — the inverse rotation is global — but the
+    /// accumulate still avoids materializing a decoded vector per packet.)
+    fn decode_accumulate_into(&self, msg: &Message, reference: &[f64], weight: f64, acc: &mut [f64]) {
+        assert_eq!(acc.len(), self.rotation.d);
+        self.decode_to_scratch(msg, reference, |z| {
+            for (a, zi) in acc.iter_mut().zip(z) {
+                *a += weight * zi;
+            }
+        });
     }
 
     fn needs_reference(&self) -> bool {
@@ -214,6 +291,53 @@ mod tests {
         x[3] = 1.0;
         let y = rot.forward(&x);
         assert!(norm_inf(&y) <= 1.5 / (d as f64).sqrt() + 1e-12);
+    }
+
+    #[test]
+    fn scratch_rotation_variants_match_allocating_paths() {
+        let mut shared = Rng::new(20);
+        let rot = Rotation::new(100, &mut shared); // pads to 128
+        let mut rng = Rng::new(21);
+        let x: Vec<f64> = (0..100).map(|_| rng.next_gaussian()).collect();
+        let y = rot.forward(&x);
+        let mut y2 = vec![5.0; 3]; // stale scratch, wrong length
+        rot.forward_into(&x, &mut y2);
+        assert_eq!(y, y2);
+        let z = rot.inverse(&y);
+        let mut z2 = y.clone();
+        rot.inverse_in_place(&mut z2);
+        assert_eq!(z, &z2[..100]);
+    }
+
+    #[test]
+    fn rlq_into_and_fold_paths_match_allocating_paths() {
+        let mut shared = Rng::new(30);
+        let mut rng = Rng::new(31);
+        for d in [16usize, 100] {
+            let mut codec = RotatedLatticeQuantizer::from_y_rot(d, 16, 2.0, &mut shared);
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let xv: Vec<f64> = x.iter().map(|v| v + rng.uniform(-0.05, 0.05)).collect();
+            let mut rng_a = rng.clone();
+            let fresh = codec.encode(&x, &mut rng_a);
+            let mut scratch_msg = crate::quant::Message {
+                bytes: vec![0xAB; 3],
+                bits: 24,
+            };
+            codec.encode_into(&x, &mut rng, &mut scratch_msg);
+            assert_eq!(scratch_msg, fresh, "encode_into must be bit-identical");
+            let z = codec.decode(&fresh, &xv);
+            let mut z2 = vec![0.0; d];
+            codec.decode_into(&fresh, &xv, &mut z2);
+            assert_eq!(z, z2, "decode_into must be value-identical");
+            // Fused fold ≡ decode + axpy with a stale accumulator.
+            let stale: Vec<f64> = (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let w = 0.625;
+            let mut expect = stale.clone();
+            crate::linalg::axpy(&mut expect, w, &z);
+            let mut acc = stale;
+            codec.decode_accumulate_into(&fresh, &xv, w, &mut acc);
+            assert_eq!(acc, expect, "fused fold must match decode + axpy");
+        }
     }
 
     #[test]

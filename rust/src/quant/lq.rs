@@ -45,6 +45,50 @@ impl LatticeQuantizer {
         self.lattice.dim() as u64 * self.width as u64
     }
 
+    /// The shared fused decode loop: colors for coordinates
+    /// `lo..lo + len` are pulled through the word-granular block kernel
+    /// ([`super::bits::BitReader::read_block`], one unaligned load per
+    /// ⌊64/width⌋ colors) and each reconstructed coordinate is handed to
+    /// `emit(index, value)`. Every decode entry point (`decode_into`,
+    /// `decode_accumulate_into`, `decode_accumulate_range`) is this loop
+    /// with a different sink, so they are value-identical by
+    /// construction.
+    fn decode_fold(
+        &self,
+        msg: &Message,
+        reference: &[f64],
+        lo: usize,
+        len: usize,
+        mut emit: impl FnMut(usize, f64),
+    ) {
+        const BLOCK: usize = 128;
+        let s = self.lattice.s;
+        // Fold the two divisions into one reciprocal multiply each
+        // (§Perf): t/q = (x−off) · (1/(s·q)).
+        let inv_sq = 1.0 / (s * self.q as f64);
+        let inv_q = 1.0 / self.q as f64;
+        let qi = self.q as i64;
+        let width = self.width;
+        let mut r = super::bits::BitReader::new(&msg.bytes);
+        r.seek(lo as u64 * width as u64);
+        let mut colors = [0u64; BLOCK];
+        let mut done = 0;
+        while done < len {
+            let take = (len - done).min(BLOCK);
+            r.read_block(width, &mut colors[..take]);
+            for (i, &cu) in colors[..take].iter().enumerate() {
+                let idx = lo + done + i;
+                let c = cu as i64;
+                let m = ((reference[idx] - self.lattice.offset[idx]) * inv_sq
+                    - c as f64 * inv_q)
+                    .round_ties_even() as i64;
+                let k = c + qi * m;
+                emit(idx, self.lattice.offset[idx] + s * k as f64);
+            }
+            done += take;
+        }
+    }
+
     /// Encode and also return the quantized point Q(x) (the nearest
     /// lattice point) — used by the experiments' y-estimation policies,
     /// which measure `‖Q(g₀) − Q(g₁)‖∞` (Section 9.2 Exp 2).
@@ -132,25 +176,40 @@ impl VectorCodec for LatticeQuantizer {
     }
 
     /// Zero-alloc decode into a caller-owned buffer (identical values to
-    /// `decode`; same fused loop).
+    /// `decode`; block-kernel fused loop).
     fn decode_into(&self, msg: &Message, reference: &[f64], out: &mut [f64]) {
         let d = self.lattice.dim();
         assert_eq!(reference.len(), d);
         assert_eq!(out.len(), d);
-        let s = self.lattice.s;
-        // Fold the two divisions into one reciprocal multiply each
-        // (§Perf): t/q = (x−off) · (1/(s·q)).
-        let inv_sq = 1.0 / (s * self.q as f64);
-        let inv_q = 1.0 / self.q as f64;
-        let qi = self.q as i64;
-        let width = self.width;
-        let mut r = super::bits::BitReader::new(&msg.bytes);
-        for (o, (xr, off)) in out.iter_mut().zip(reference.iter().zip(&self.lattice.offset)) {
-            let c = r.read(width) as i64;
-            let m = ((xr - off) * inv_sq - c as f64 * inv_q).round_ties_even() as i64;
-            let k = c + qi * m;
-            *o = off + s * k as f64;
-        }
+        self.decode_fold(msg, reference, 0, d, |idx, v| out[idx] = v);
+    }
+
+    /// Fused streaming-fold kernel: one pass bitstream → accumulator,
+    /// never materializing the decoded vector.
+    fn decode_accumulate_into(&self, msg: &Message, reference: &[f64], weight: f64, acc: &mut [f64]) {
+        let d = self.lattice.dim();
+        assert_eq!(reference.len(), d);
+        assert_eq!(acc.len(), d);
+        self.decode_fold(msg, reference, 0, d, |idx, v| acc[idx] += weight * v);
+    }
+
+    /// Chunk-sharded fold kernel: seeks straight to coordinate `lo`'s bit
+    /// offset (fixed-width stream ⇒ random access) and folds only
+    /// `lo..lo + acc.len()`.
+    fn decode_accumulate_range(
+        &self,
+        msg: &Message,
+        reference: &[f64],
+        weight: f64,
+        lo: usize,
+        acc: &mut [f64],
+    ) {
+        let d = self.lattice.dim();
+        assert_eq!(reference.len(), d);
+        assert!(lo + acc.len() <= d);
+        self.decode_fold(msg, reference, lo, acc.len(), |idx, v| {
+            acc[idx - lo] += weight * v
+        });
     }
 
     fn needs_reference(&self) -> bool {
@@ -251,6 +310,35 @@ mod tests {
             let mut z2 = vec![0.0; d];
             codec.decode_into(&fresh, &xv, &mut z2);
             assert_eq!(z, z2, "decode_into must be value-identical");
+        }
+    }
+
+    #[test]
+    fn fused_fold_kernels_match_decode_plus_axpy() {
+        let mut shared = Rng::new(31);
+        let mut rng = Rng::new(32);
+        for (d, q) in [(1usize, 8u32), (7, 5), (97, 8), (300, 16), (4096, 255)] {
+            let mut codec = LatticeQuantizer::from_y(d, q, 1.0, &mut shared);
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-50.0, 50.0)).collect();
+            let xv: Vec<f64> = x.iter().map(|v| v + rng.uniform(-0.9, 0.9)).collect();
+            let msg = codec.encode(&x, &mut rng);
+            let z = codec.decode(&msg, &xv);
+            let w = rng.uniform(-2.0, 2.0);
+            // Stale accumulator, arbitrary weight.
+            let stale: Vec<f64> = (0..d).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            let mut expect = stale.clone();
+            crate::linalg::axpy(&mut expect, w, &z);
+            let mut acc = stale.clone();
+            codec.decode_accumulate_into(&msg, &xv, w, &mut acc);
+            assert_eq!(acc, expect, "fused fold must be bit-identical (d={d} q={q})");
+            // Range kernel over an interior chunk reproduces the slice.
+            if d >= 8 {
+                let lo = d / 3;
+                let hi = d - d / 4;
+                let mut acc_r = stale[lo..hi].to_vec();
+                codec.decode_accumulate_range(&msg, &xv, w, lo, &mut acc_r);
+                assert_eq!(acc_r, expect[lo..hi], "range fold chunk (d={d} q={q})");
+            }
         }
     }
 

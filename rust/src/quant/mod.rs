@@ -7,16 +7,27 @@
 //! codecs additionally use the *decoder's own vector* (`reference`) to
 //! disambiguate the color class — the paper's key mechanism (Section 3.3).
 //!
+//! Beyond the allocating `encode`/`decode` pair, the trait carries the
+//! aggregation hot path: `encode_into`/`decode_into` recycle caller
+//! scratch, and [`VectorCodec::decode_accumulate_into`] /
+//! [`VectorCodec::decode_accumulate_range`] fuse decode with a weighted
+//! accumulate so a leader can fold `n` incoming bitstreams into one O(d)
+//! sum without ever materializing the decoded vectors (the streaming-fold
+//! data plane of [`crate::coordinator`]). Lattice decodes pull colors
+//! through the word-granular block kernels in [`bits`]
+//! ([`bits::BitReader::read_block`]) rather than per-coordinate reads.
+//!
 //! Implementations:
 //!
-//! | codec | paper | module |
-//! |---|---|---|
-//! | `LatticeQuantizer` (LQSGD) | §9.1 practical scheme | [`lq`] |
-//! | `RotatedLatticeQuantizer` (RLQSGD) | §6 cubic lattice + HD rotation | [`hadamard`] |
-//! | `ConvexHullEncoder` | Alg 1 theoretical unbiased rounding | [`convex_hull`] |
-//! | `RobustAgreement` | §5 error detection (Alg 5) | [`robust`] |
-//! | `SublinearCodec` | §7 (Alg 7–9) | [`sublinear`] |
-//! | QSGD L2/L∞, Suresh–Hadamard, vQSGD, EF-SignSGD, PowerSGD, TernGrad, Top-K | §9 comparators | [`baselines`] |
+//! | codec | paper | module | fused fold |
+//! |---|---|---|---|
+//! | `LatticeQuantizer` (LQSGD) | §9.1 practical scheme | [`lq`] | block kernel + range |
+//! | `RotatedLatticeQuantizer` (RLQSGD) | §6 cubic lattice + HD rotation | [`hadamard`] | scratch rotation, fused accumulate |
+//! | `D4Quantizer` | §6 future work, checkerboard lattice | [`d4`] | bucket kernel + range |
+//! | `ConvexHullEncoder` | Alg 1 theoretical unbiased rounding | [`convex_hull`] | default |
+//! | `RobustAgreement` | §5 error detection (Alg 5) | [`robust`] | — |
+//! | `SublinearCodec` | §7 (Alg 7–9) | [`sublinear`] | — |
+//! | QSGD L2/L∞, Suresh–Hadamard, vQSGD, EF-SignSGD, PowerSGD, TernGrad, Top-K | §9 comparators | [`baselines`] | default (`full32`: fused + range) |
 
 pub mod baselines;
 pub mod bits;
@@ -92,6 +103,54 @@ pub trait VectorCodec: Send {
         out.copy_from_slice(&z);
     }
 
+    /// Fused decode-accumulate (§Perf, the streaming-fold hot path):
+    /// `acc[i] += weight * decode(msg, reference)[i]` in a single pass
+    /// over the packed bitstream — the aggregation kernel a leader runs
+    /// once per arriving packet, keeping its memory O(d) regardless of
+    /// cluster size.
+    ///
+    /// Must be arithmetically identical (bit-for-bit, IEEE op for op) to
+    /// `decode_into` followed by [`crate::linalg::axpy`] — the coordinator
+    /// parity tests pin this. The default does exactly that via the
+    /// allocating `decode`; the codecs on the round loop (lattice family,
+    /// full precision) override it with single-pass fused loops.
+    fn decode_accumulate_into(&self, msg: &Message, reference: &[f64], weight: f64, acc: &mut [f64]) {
+        let z = self.decode(msg, reference);
+        crate::linalg::axpy(acc, weight, &z);
+    }
+
+    /// Chunk-restricted fused decode-accumulate: accumulate coordinates
+    /// `lo..lo + acc.len()` only, with `reference` the full-length
+    /// reference vector. Fixed-width codecs override this with a direct
+    /// [`bits::BitReader::seek`] into the stream, which is what lets the
+    /// chunk-sharded parallel fold ([`crate::coordinator::fold`]) split
+    /// `d` into cache-sized shards folded by independent threads.
+    ///
+    /// Chunk boundaries must be multiples of [`Self::fold_chunk_align`].
+    /// The default decodes the whole vector (allocating) and accumulates
+    /// the slice — correct for every codec, including ones like RLQSGD
+    /// whose global rotation makes true range decoding impossible.
+    fn decode_accumulate_range(
+        &self,
+        msg: &Message,
+        reference: &[f64],
+        weight: f64,
+        lo: usize,
+        acc: &mut [f64],
+    ) {
+        let z = self.decode(msg, reference);
+        for (a, zi) in acc.iter_mut().zip(&z[lo..lo + acc.len()]) {
+            *a += weight * zi;
+        }
+    }
+
+    /// Coordinate alignment required of `decode_accumulate_range` chunk
+    /// boundaries (1 for scalar codecs; 4 for the D4 bucket format, whose
+    /// parity-implied bit couples the four coordinates of a bucket).
+    fn fold_chunk_align(&self) -> usize {
+        1
+    }
+
     /// True if decoding needs a reference vector within the codec's
     /// guarantee radius (lattice family). Used by the coordinator to
     /// decide which topology invariants to check.
@@ -145,5 +204,30 @@ mod tests {
         let mut z2 = vec![0.0; d];
         codec.decode_into(&fresh, &x, &mut z2);
         assert_eq!(z, z2);
+    }
+
+    #[test]
+    fn default_decode_accumulate_matches_decode_plus_axpy() {
+        let d = 16;
+        let mut codec = crate::quant::baselines::Qsgd::new(d, 16, crate::quant::baselines::QsgdNorm::L2);
+        let x: Vec<f64> = (0..d).map(|i| (i as f64).sin() * 3.0).collect();
+        let mut rng = Rng::new(8);
+        let msg = codec.encode(&x, &mut rng);
+        // Stale accumulator contents must be preserved and added to.
+        let mut acc: Vec<f64> = (0..d).map(|i| i as f64 * 0.11 - 0.7).collect();
+        let mut expect = acc.clone();
+        let z = codec.decode(&msg, &x);
+        crate::linalg::axpy(&mut expect, -0.75, &z);
+        codec.decode_accumulate_into(&msg, &x, -0.75, &mut acc);
+        assert_eq!(acc, expect);
+        // Range default: middle chunk only.
+        let mut acc_r = vec![1.5; 5];
+        let mut expect_r = acc_r.clone();
+        for (a, zi) in expect_r.iter_mut().zip(&z[6..11]) {
+            *a += 2.0 * zi;
+        }
+        codec.decode_accumulate_range(&msg, &x, 2.0, 6, &mut acc_r);
+        assert_eq!(acc_r, expect_r);
+        assert_eq!(codec.fold_chunk_align(), 1);
     }
 }

@@ -8,7 +8,7 @@
 use dme::coordinator::{
     mean_estimation_star, mean_estimation_tree, robust_variance_reduction, CodecSpec,
 };
-use dme::linalg::{dist_inf, mean_vecs};
+use dme::linalg::{axpy, dist_inf, mean_vecs};
 use dme::quant::{LatticeQuantizer, RotatedLatticeQuantizer, VectorCodec};
 use dme::rng::{hash2, Rng};
 
@@ -233,6 +233,141 @@ fn prop_robust_vr_never_corrupts() {
             dist_inf(&out.estimate, &mu),
             s0
         );
+    });
+}
+
+/// The streaming-fold contract: for *every* registered codec,
+/// `decode_accumulate_into(msg, ref, w, acc)` must equal `decode_into`
+/// followed by a weighted axpy — bit for bit, with random weights and a
+/// stale (non-zero) accumulator. This is what lets the coordinator swap
+/// decode-then-sum for the fused fold without moving a single estimate
+/// bit.
+#[test]
+fn prop_decode_accumulate_equals_decode_plus_axpy_all_codecs() {
+    check("decode_accumulate", 40, |rng| {
+        let d = 16; // multiple of 4 (D4) and power of two (PowerSGD grid)
+        let y = 10f64.powf(rng.uniform(-1.0, 1.0));
+        let seed = rng.next_u64();
+        let round = rng.next_below(4);
+        let specs = [
+            CodecSpec::Lq { q: 16 },
+            CodecSpec::Rlq { q: 16 },
+            CodecSpec::LqHull { q: 8 },
+            CodecSpec::D4 { q: 16 },
+            CodecSpec::QsgdL2 { q: 16 },
+            CodecSpec::QsgdLinf { q: 16 },
+            CodecSpec::Hadamard { q: 16 },
+            CodecSpec::Vqsgd { reps: 4 },
+            CodecSpec::EfSign,
+            CodecSpec::PowerSgd { rank: 2 },
+            CodecSpec::TernGrad,
+            CodecSpec::TopK { k: 5 },
+            CodecSpec::Full,
+        ];
+        for spec in specs {
+            let mut codec = spec.build(d, y, seed, round);
+            let center = rng.uniform(-100.0, 100.0);
+            let x = rand_vec(rng, d, center, y);
+            let reference: Vec<f64> = x.iter().map(|v| v + rng.uniform(-y, y) * 0.5).collect();
+            let mut enc_rng = rng.fork(7);
+            let msg = codec.encode(&x, &mut enc_rng);
+            let weight = rng.uniform(-3.0, 3.0);
+            let stale = rand_vec(rng, d, 0.0, 5.0);
+            // Reference path: materialize the decode, then weighted add.
+            let mut expect = stale.clone();
+            let mut z = vec![0.0; d];
+            codec.decode_into(&msg, &reference, &mut z);
+            axpy(&mut expect, weight, &z);
+            // Fused path.
+            let mut acc = stale.clone();
+            codec.decode_accumulate_into(&msg, &reference, weight, &mut acc);
+            assert_eq!(acc, expect, "fused fold diverged for {}", spec.label());
+            // Range variant on an aligned interior chunk.
+            let align = codec.fold_chunk_align();
+            let lo = align;
+            let hi = d - align;
+            let mut acc_r = stale[lo..hi].to_vec();
+            codec.decode_accumulate_range(&msg, &reference, weight, lo, &mut acc_r);
+            assert_eq!(
+                acc_r,
+                expect[lo..hi],
+                "range fold diverged for {}",
+                spec.label()
+            );
+        }
+    });
+}
+
+/// The block kernel underneath the lattice decodes: `read_block` must
+/// equal repeated `read` for every width 1..=32, any count, any
+/// (misaligned) starting offset.
+#[test]
+fn prop_read_block_equals_repeated_read() {
+    check("read_block", 150, |rng| {
+        let width = 1 + rng.next_below(32) as u32;
+        let prefix = rng.next_below(64) as u32; // misaligns the stream
+        let n = 1 + rng.next_below(300) as usize;
+        let mask = (1u64 << width) - 1;
+        let vals: Vec<u64> = (0..n).map(|_| rng.next_u64() & mask).collect();
+        let mut w = dme::quant::bits::BitWriter::new();
+        let pv = if prefix == 0 {
+            0
+        } else {
+            rng.next_u64() & ((1u64 << prefix) - 1)
+        };
+        w.push(pv, prefix);
+        for &v in &vals {
+            w.push(v, width);
+        }
+        let (bytes, _) = w.finish();
+        // Scalar reference.
+        let mut r1 = dme::quant::bits::BitReader::new(&bytes);
+        r1.seek(prefix as u64);
+        let scalar: Vec<u64> = (0..n).map(|_| r1.read(width)).collect();
+        assert_eq!(scalar, vals);
+        // Block kernel, in randomly sized sub-blocks.
+        let mut r2 = dme::quant::bits::BitReader::new(&bytes);
+        r2.seek(prefix as u64);
+        let mut block = vec![0u64; n];
+        let mut done = 0;
+        while done < n {
+            let take = (1 + rng.next_below(50) as usize).min(n - done);
+            r2.read_block(width, &mut block[done..done + take]);
+            done += take;
+        }
+        assert_eq!(block, vals);
+        assert_eq!(r1.bits_consumed(), r2.bits_consumed());
+    });
+}
+
+/// Session-level invariant: the streaming-fold leader (diagnostics off)
+/// and the collecting leader (diagnostics on) produce identical
+/// estimates and traffic for the same (seed, round).
+#[test]
+fn prop_streaming_and_collecting_leaders_agree() {
+    check("fold_vs_collect", 30, |rng| {
+        let n = 2 + rng.next_below(7) as usize;
+        let d = rand_dim(rng);
+        let q = [8u32, 16, 64][rng.next_below(3) as usize];
+        let seed = rng.next_u64();
+        let inputs: Vec<Vec<f64>> = (0..n).map(|_| rand_vec(rng, d, 10.0, 0.45)).collect();
+        let mk = |diag: bool| {
+            dme::coordinator::DmeBuilder::new(n, d)
+                .codec(CodecSpec::Lq { q })
+                .seed(seed)
+                .diagnostics(diag)
+                .build()
+        };
+        let mut streaming = mk(false);
+        let mut collecting = mk(true);
+        for _ in 0..3 {
+            let s = streaming.round_with_y(&inputs, 1.0);
+            let c = collecting.round_with_y(&inputs, 1.0);
+            assert_eq!(s.estimate, c.estimate);
+            assert_eq!(s.round_traffic, c.round_traffic);
+            assert!(s.decoded_at_leader.is_empty());
+            assert_eq!(c.decoded_at_leader.len(), n);
+        }
     });
 }
 

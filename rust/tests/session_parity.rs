@@ -324,6 +324,48 @@ fn star_session_bit_identical_to_reference_across_rounds() {
 }
 
 #[test]
+fn streaming_fold_bit_identical_to_reference_decode_then_sum() {
+    // With diagnostics off the leader never materializes the n decoded
+    // vectors — each packet is folded straight into the O(d) accumulator
+    // (quant::VectorCodec::decode_accumulate_into) in pinned machine
+    // order. The estimate and metering must still be bit-identical to
+    // the original decode-all-then-sum implementation.
+    for (n, d, q) in [(2usize, 16usize, 8u32), (6, 32, 16), (9, 33, 64), (16, 128, 16)] {
+        let seed = 4000 + n as u64;
+        let y = 1.0;
+        let inputs = gen_inputs(n, d, 100.0, y / 2.0, seed);
+        let spec = CodecSpec::Lq { q };
+        let mut sess = DmeBuilder::new(n, d).codec(spec).seed(seed).build();
+        for round in 0..5 {
+            let r = reference_star(&inputs, &spec, y, seed, round);
+            let s = sess.round_with_y(&inputs, y);
+            assert!(s.agreement, "n={n} round={round}");
+            assert_eq!(s.estimate, r.outputs[0], "n={n} round={round} estimate");
+            assert_eq!(s.round_traffic, r.traffic, "n={n} round={round} traffic");
+            assert!(
+                s.decoded_at_leader.is_empty(),
+                "streaming leader must not ship decoded vectors"
+            );
+        }
+    }
+    // Same contract for the fused RLQ / D4 / full-precision overrides.
+    let n = 5;
+    let d = 32;
+    let inputs = gen_inputs(n, d, 10.0, 0.4, 99);
+    for spec in [
+        CodecSpec::Rlq { q: 16 },
+        CodecSpec::D4 { q: 16 },
+        CodecSpec::Full,
+    ] {
+        let mut sess = DmeBuilder::new(n, d).codec(spec).seed(17).build();
+        let r = reference_star(&inputs, &spec, 1.0, 17, 0);
+        let s = sess.round_with_y(&inputs, 1.0);
+        assert_eq!(s.estimate, r.outputs[0], "{}", spec.label());
+        assert_eq!(s.round_traffic, r.traffic, "{}", spec.label());
+    }
+}
+
+#[test]
 fn star_session_parity_for_baseline_codecs() {
     // The session must replicate the protocol for reference-free codecs
     // too (gather + broadcast degenerate form).
