@@ -111,7 +111,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             }
             let msg = native.clone().encode(&me_pad, &mut Rng::new(0));
             let zn = native.decode(&msg, &other_pad);
-            let diff = dist_inf(&zn[..D].to_vec(), decoded.last().unwrap());
+            let diff = dist_inf(&zn[..D], decoded.last().unwrap());
             max_native_diff = max_native_diff.max(diff);
         }
 
@@ -142,7 +142,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "AOT and native paths must agree (f32 tolerance)"
     );
     let final_loss = ds.loss(&w);
-    println!("final loss: {final_loss:.6e} (started near {:.3e})", ds.loss(&vec![0.0; D]));
+    println!("final loss: {final_loss:.6e} (started near {:.3e})", ds.loss(&[0.0; D]));
     assert!(final_loss < 1e-2, "training must converge");
 
     // Persist the loss curve for EXPERIMENTS.md.

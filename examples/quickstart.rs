@@ -11,6 +11,10 @@
 //!    grow with the cluster.
 //! 5. The fold kernels stand-alone (`coordinator::fold`): sequential and
 //!    chunk-sharded parallel aggregation of pre-collected messages.
+//! 6. The vectorized encode plane (`quant::encode_chunked`,
+//!    `BitWriter::push_block`): the write-side twin of (5) — block
+//!    kernels behind `encode_into` plus a chunk-parallel encode for huge
+//!    gradients, all bit-identical to the scalar encode.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -146,5 +150,24 @@ fn main() {
     fold_mean_chunked(&lq, &parts, &reference, &mut par, 1024);
     println!("== streaming fold kernels (coordinator::fold) ==");
     println!("‖fold − μ‖∞        : {:.4}", dist_inf(&seq, &mu));
-    println!("chunk-sharded == sequential: {}", seq == par);
+    println!("chunk-sharded == sequential: {}\n", seq == par);
+
+    // ---------------------------------------------------------------
+    // 6. The fast encode path. `encode_into` already runs the fused
+    //    block kernels (round → mask-color → one packed word store per
+    //    ⌊64/width⌋ colors via BitWriter::push_block); for a huge
+    //    gradient, `encode_chunked` additionally shards the pack across
+    //    cores at byte-aligned chunk boundaries. Every variant produces
+    //    the identical wire message — vectorization never moves a bit.
+    // ---------------------------------------------------------------
+    let big_d = 1 << 16;
+    let grad: Vec<f64> = (0..big_d).map(|i| (i as f64 * 0.001).sin()).collect();
+    let mut big_lq = LatticeQuantizer::from_y(big_d, q, y, &mut Rng::new(9));
+    let mut seq_msg = dme::quant::Message::empty();
+    big_lq.encode_into(&grad, &mut rng, &mut seq_msg); // fused block kernel
+    let mut par_msg = dme::quant::Message::empty();
+    dme::quant::encode_chunked(&big_lq, &grad, &mut par_msg, 8192); // cores
+    println!("== vectorized encode plane (quant::encode_chunked) ==");
+    println!("gradient dims      : {big_d} → {} wire bits", seq_msg.bits);
+    println!("chunk-parallel == sequential encode: {}", par_msg == seq_msg);
 }

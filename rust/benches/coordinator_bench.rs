@@ -14,13 +14,19 @@
 //! fused block-kernel streaming fold (`decode_accumulate_into`, one pass,
 //! O(d)) vs the chunk-sharded parallel fold, at n ∈ {16, 256} and
 //! d ∈ {128, 4096}.
+//!
+//! The `encode_plane_bench` section is the fold section's write-side
+//! twin: per-machine round encode through the fused block kernels
+//! (`encode_into`) vs the chunk-parallel `encode_chunked` — the paper's
+//! deployment has every one of n machines encoding each round, so this
+//! is the plane that dominates round latency at scale.
 
 use dme::bench::Bencher;
 use dme::coordinator::{
     fold_mean, fold_mean_chunked, mean_estimation_star, mean_estimation_tree,
     robust_variance_reduction, CodecSpec, DmeBuilder, FoldPart,
 };
-use dme::quant::{LatticeQuantizer, Message, VectorCodec};
+use dme::quant::{encode_chunked, D4Quantizer, LatticeQuantizer, Message, VectorCodec};
 use dme::rng::Rng;
 
 fn inputs(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
@@ -75,6 +81,40 @@ fn main() {
 
     session_bench(&mut b);
     fold_bench(&mut b);
+    encode_plane_bench(&mut b);
+}
+
+/// Write-side twin of `fold_bench`: one machine's per-round encode at
+/// gradient scale, sequential fused block kernel vs chunk-parallel
+/// sharding (both bit-identical to the scalar encode — pinned by the
+/// prop/parity tests; the rows measure wall-clock only).
+fn encode_plane_bench(b: &mut Bencher) {
+    println!("# encode_plane_bench — sequential vs chunk-parallel encode\n");
+    for d in [4096usize, 65536] {
+        let mut rng = Rng::new(19);
+        let x: Vec<f64> = (0..d).map(|_| 50.0 + rng.uniform(-0.5, 0.5)).collect();
+        let mut shared = Rng::new(20);
+        let mut lq = LatticeQuantizer::from_y(d, 16, 1.0, &mut shared);
+        let mut d4 = D4Quantizer::from_y(d, 16, 1.0, &mut shared);
+        let mut msg = Message::empty();
+        b.bench(&format!("encode lq d={d} sequential"), Some(d as u64), || {
+            lq.encode_into(&x, &mut rng, &mut msg);
+            msg.bits
+        });
+        b.bench(&format!("encode lq d={d} chunk-parallel"), Some(d as u64), || {
+            encode_chunked(&lq, &x, &mut msg, 8192);
+            msg.bits
+        });
+        b.bench(&format!("encode d4 d={d} sequential"), Some(d as u64), || {
+            d4.encode_into(&x, &mut rng, &mut msg);
+            msg.bits
+        });
+        b.bench(&format!("encode d4 d={d} chunk-parallel"), Some(d as u64), || {
+            encode_chunked(&d4, &x, &mut msg, 8192);
+            msg.bits
+        });
+        println!();
+    }
 }
 
 /// Leader aggregation data plane: legacy decode-then-sum vs the fused

@@ -4,11 +4,114 @@
 //! decode / FWHT throughput per codec at the experiment dimensions.
 //! Quantization is memory-bound (see DESIGN.md §4), so the target is
 //! element throughput, not flops.
+//!
+//! The `encode_bench` section isolates the vectorized encode data plane
+//! against its scalar ancestors, each pair bit-identical by the parity
+//! tests: per-field `BitWriter::push` vs the word-granular `push_block`,
+//! the seed's two-pass radix-2 FWHT (`fwht_reference`) vs the fused
+//! blocked multi-radix rotation, and sequential `encode_into` vs the
+//! chunk-parallel `encode_chunked`, at d ∈ {128, 4096, 65536}.
 
 use dme::bench::Bencher;
 use dme::coordinator::CodecSpec;
-use dme::quant::{LatticeQuantizer, VectorCodec};
+use dme::quant::bits::BitWriter;
+use dme::quant::hadamard::{fwht, fwht_reference, Rotation};
+use dme::quant::{encode_chunked, D4Quantizer, LatticeQuantizer, Message, VectorCodec};
 use dme::rng::Rng;
+
+/// The seed's scalar encode loop (per-coordinate push), kept inline as
+/// the baseline the fused block kernel is measured against.
+fn lq_encode_scalar(lq: &LatticeQuantizer, x: &[f64], out: &mut Message) {
+    let s = lq.lattice.s;
+    let inv = 1.0 / s;
+    let mask = (lq.q - 1) as i64;
+    let width = dme::quant::bits::width_for(lq.q as u64);
+    let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+    for (xi, off) in x.iter().zip(&lq.lattice.offset) {
+        let k = ((xi - off) * inv).round_ties_even() as i64;
+        w.push((k & mask) as u64, width);
+    }
+    let (bytes, bits) = w.finish();
+    out.bytes = bytes;
+    out.bits = bits;
+}
+
+fn encode_bench(b: &mut Bencher) {
+    println!("# encode_bench — scalar vs block/fused/parallel encode plane\n");
+    for d in [128usize, 4096, 65536] {
+        let mut rng = Rng::new(21);
+        let x: Vec<f64> = (0..d).map(|_| 100.0 + rng.uniform(-0.5, 0.5)).collect();
+
+        // (a) Bit packing: one push per field vs one store per
+        // ⌊64/width⌋ fields (width 5 keeps every store misaligned).
+        let vals: Vec<u64> = (0..d).map(|_| rng.next_u64() & 31).collect();
+        let mut buf = Vec::new();
+        b.bench(&format!("pack w=5 scalar-push   d={d}"), Some(d as u64), || {
+            let mut w = BitWriter::reusing(std::mem::take(&mut buf));
+            for &v in &vals {
+                w.push(v, 5);
+            }
+            let (bytes, bits) = w.finish();
+            buf = bytes;
+            bits
+        });
+        b.bench(&format!("pack w=5 push_block    d={d}"), Some(d as u64), || {
+            let mut w = BitWriter::reusing(std::mem::take(&mut buf));
+            w.push_block(&vals, 5);
+            let (bytes, bits) = w.finish();
+            buf = bytes;
+            bits
+        });
+
+        // (b) Rotation: the seed's two-pass radix-2 FWHT vs the fused
+        // cache-blocked multi-radix kernel (bit-identical outputs), plus
+        // the one-pass rotation with sign/norm fused into the butterflies.
+        let mut fbuf = x.clone();
+        b.bench(&format!("fwht two-pass radix-2  d={d}"), Some(d as u64), || {
+            fwht_reference(&mut fbuf);
+            fbuf[0]
+        });
+        b.bench(&format!("fwht fused multiradix  d={d}"), Some(d as u64), || {
+            fwht(&mut fbuf);
+            fbuf[0]
+        });
+        let mut shared = Rng::new(3);
+        let rot = Rotation::new(d, &mut shared);
+        let mut rbuf = Vec::new();
+        b.bench(&format!("rotation forward_into  d={d}"), Some(d as u64), || {
+            rot.forward_into(&x, &mut rbuf);
+            rbuf[0]
+        });
+
+        // (c) Lattice encode: scalar per-coordinate loop vs the fused
+        // block kernel behind encode_into vs the chunk-parallel encode.
+        let mut shared = Rng::new(4);
+        let mut lq = LatticeQuantizer::from_y(d, 16, 1.0, &mut shared);
+        let mut msg = Message::empty();
+        b.bench(&format!("lq q=16 encode scalar  d={d}"), Some(d as u64), || {
+            lq_encode_scalar(&lq, &x, &mut msg);
+            msg.bits
+        });
+        b.bench(&format!("lq q=16 encode_into    d={d}"), Some(d as u64), || {
+            lq.encode_into(&x, &mut rng, &mut msg);
+            msg.bits
+        });
+        b.bench(&format!("lq q=16 encode_chunked d={d}"), Some(d as u64), || {
+            encode_chunked(&lq, &x, &mut msg, 4096);
+            msg.bits
+        });
+        let mut d4 = D4Quantizer::from_y(d, 16, 1.0, &mut shared);
+        b.bench(&format!("d4 q=16 encode_into    d={d}"), Some(d as u64), || {
+            d4.encode_into(&x, &mut rng, &mut msg);
+            msg.bits
+        });
+        b.bench(&format!("d4 q=16 encode_chunked d={d}"), Some(d as u64), || {
+            encode_chunked(&d4, &x, &mut msg, 4096);
+            msg.bits
+        });
+        println!();
+    }
+}
 
 fn main() {
     let mut b = Bencher::from_env();
@@ -59,4 +162,6 @@ fn main() {
         }
         println!();
     }
+
+    encode_bench(&mut b);
 }

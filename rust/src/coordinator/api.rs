@@ -32,6 +32,18 @@
 //! way. For offline aggregation of very wide vectors there is also a
 //! chunk-sharded parallel fold — see [`super::fold`].
 //!
+//! The encode side of every machine is the same story in the other
+//! direction (§Perf): `encode_into` runs the codecs' fused block
+//! kernels — round → mask-color → one packed accumulator store per
+//! ⌊64/width⌋ colors via [`crate::quant::bits::BitWriter::push_block`],
+//! with RLQSGD's rotation a single-pass cache-blocked multi-radix FWHT —
+//! so sessions pick the whole vectorized encode plane up automatically,
+//! bit-identically to the scalar per-coordinate encode (pinned by
+//! `rust/tests/session_parity.rs`). A machine encoding one huge gradient
+//! can additionally shard the pack across cores with
+//! [`crate::quant::encode_chunked`], the write-side twin of the chunked
+//! fold.
+//!
 //! Protocol behavior is bit-identical to the legacy one-shot functions
 //! (`mean_estimation_star`, `mean_estimation_tree`,
 //! `robust_variance_reduction`) for the same `(seed, round)` — those now

@@ -20,6 +20,11 @@
 //! so `fold_mean`, `fold_mean_chunked`, and the session leader's
 //! streaming fold produce bit-identical estimates — the property
 //! `rust/tests/prop.rs` and the unit tests below pin.
+//!
+//! The write-side twin of the chunked fold lives in the quant layer:
+//! [`crate::quant::encode_chunked`] shards one machine's *encode* of a
+//! huge gradient across threads at byte-aligned chunk boundaries, again
+//! bit-identically to the sequential stream.
 
 use crate::quant::{Message, VectorCodec};
 

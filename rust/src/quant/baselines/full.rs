@@ -52,6 +52,20 @@ impl VectorCodec for FullPrecision {
         out.bits = bits;
     }
 
+    /// Chunk kernel for the parallel encode: f32 fields are fixed-width,
+    /// so coordinates `lo..lo + len` occupy exactly bits `32·lo..32·(lo+len)`.
+    fn encode_range(&self, x: &[f64], lo: usize, len: usize, w: &mut BitWriter) {
+        assert_eq!(x.len(), self.d);
+        assert!(lo + len <= self.d);
+        for &v in &x[lo..lo + len] {
+            w.push_f32(v as f32);
+        }
+    }
+
+    fn supports_encode_range(&self) -> bool {
+        true
+    }
+
     fn decode_into(&self, msg: &Message, _reference: &[f64], out: &mut [f64]) {
         assert_eq!(out.len(), self.d);
         let mut r = BitReader::new(&msg.bytes);

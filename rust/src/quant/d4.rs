@@ -119,21 +119,6 @@ impl D4Quantizer {
         (4 * self.width as u64 - 1) * (self.d as u64 / 4)
     }
 
-    /// Quantize to the dithered D4 lattice; returns bucket indices.
-    fn quantize(&self, x: &[f64]) -> Vec<[i64; 4]> {
-        let inv = 1.0 / self.s;
-        (0..self.d / 4)
-            .map(|b| {
-                let mut t = [0.0f64; 4];
-                for i in 0..4 {
-                    let j = 4 * b + i;
-                    t[i] = (x[j] - self.offset[j]) * inv;
-                }
-                nearest_d4(&t)
-            })
-            .collect()
-    }
-
     /// Reconstruct the lattice point for bucket indices.
     pub fn point(&self, ks: &[[i64; 4]]) -> Vec<f64> {
         let mut out = Vec::with_capacity(self.d);
@@ -216,23 +201,80 @@ impl D4Quantizer {
         }
     }
 
-    /// Encode returning the quantized point as well.
+    /// The shared fused encode loop over buckets `bucket_lo..bucket_lo +
+    /// buckets` — the write-side twin of [`Self::decode_fold`]: each
+    /// bucket is quantized to its D4 index (reciprocal-folded, §Perf),
+    /// masked to its colors (`q` is a power of two by construction, so
+    /// there is never a per-coordinate branch), composed into one packed
+    /// `4·width − 1`-bit field (three full colors + the fourth without
+    /// its parity-implied LSB, LSB-first — exactly the field order the
+    /// scalar pushes produced), and streamed through the word-granular
+    /// write kernel [`BitWriter::push_block`]. Wider `q` (width > 16)
+    /// falls back to per-field pushes, mirroring the decode fallback.
+    /// Every encode entry point is this loop with a different `emit`
+    /// sink, so they are bit-identical by construction.
+    fn encode_fold(
+        &self,
+        x: &[f64],
+        bucket_lo: usize,
+        buckets: usize,
+        w: &mut BitWriter,
+        mut emit: impl FnMut(usize, i64),
+    ) {
+        let wd = self.width;
+        let mask = (self.q - 1) as i64;
+        let inv = 1.0 / self.s;
+        let mut quantize_bucket = |b: usize| -> [u64; 4] {
+            let mut t = [0.0f64; 4];
+            for (i, ti) in t.iter_mut().enumerate() {
+                let j = 4 * b + i;
+                *ti = (x[j] - self.offset[j]) * inv;
+            }
+            let k = nearest_d4(&t);
+            let mut c = [0u64; 4];
+            for (i, ci) in c.iter_mut().enumerate() {
+                *ci = (k[i] & mask) as u64;
+                emit(4 * b + i, k[i]);
+            }
+            debug_assert_eq!((c[0] + c[1] + c[2] + c[3]) % 2, 0);
+            c
+        };
+        let bucket_bits = 4 * wd - 1;
+        if bucket_bits <= 64 {
+            const BLOCK: usize = 64;
+            let mut packed = [0u64; BLOCK];
+            let mut done = 0;
+            while done < buckets {
+                let take = (buckets - done).min(BLOCK);
+                for (slot, p) in packed[..take].iter_mut().enumerate() {
+                    let c = quantize_bucket(bucket_lo + done + slot);
+                    *p = c[0] | (c[1] << wd) | (c[2] << (2 * wd)) | ((c[3] >> 1) << (3 * wd));
+                }
+                w.push_block(&packed[..take], bucket_bits);
+                done += take;
+            }
+        } else {
+            for b in bucket_lo..bucket_lo + buckets {
+                let c = quantize_bucket(b);
+                w.push(c[0], wd);
+                w.push(c[1], wd);
+                w.push(c[2], wd);
+                w.push(c[3] >> 1, wd - 1);
+            }
+        }
+    }
+
+    /// Encode returning the quantized point as well (the block kernel
+    /// [`Self::encode_fold`] with a point-reconstruction sink).
     pub fn encode_with_point(&self, x: &[f64]) -> (Message, Vec<f64>) {
         assert_eq!(x.len(), self.d);
-        let ks = self.quantize(x);
-        let mask = (self.q - 1) as i64;
         let mut w = BitWriter::with_capacity(self.message_bits() as usize);
-        for k in &ks {
-            // Three full colors + the fourth without its implied LSB.
-            let c: Vec<u64> = k.iter().map(|&ki| (ki & mask) as u64).collect();
-            debug_assert_eq!((c[0] + c[1] + c[2] + c[3]) % 2, 0);
-            w.push(c[0], self.width);
-            w.push(c[1], self.width);
-            w.push(c[2], self.width);
-            w.push(c[3] >> 1, self.width - 1);
-        }
+        let mut point = vec![0.0; self.d];
+        self.encode_fold(x, 0, self.d / 4, &mut w, |j, k| {
+            point[j] = self.offset[j] + self.s * k as f64;
+        });
         let (bytes, bits) = w.finish();
-        (Message { bytes, bits }, self.point(&ks))
+        (Message { bytes, bits }, point)
     }
 }
 
@@ -245,8 +287,26 @@ impl VectorCodec for D4Quantizer {
         self.d
     }
 
+    /// Same bucket block kernel as `encode_into`, minus the point sink
+    /// the y-estimation paths pay for in [`Self::encode_with_point`].
     fn encode(&mut self, x: &[f64], _rng: &mut Rng) -> Message {
-        self.encode_with_point(x).0
+        assert_eq!(x.len(), self.d);
+        let mut w = BitWriter::with_capacity(self.message_bits() as usize);
+        self.encode_fold(x, 0, self.d / 4, &mut w, |_, _| {});
+        let (bytes, bits) = w.finish();
+        Message { bytes, bits }
+    }
+
+    /// Zero-alloc encode: the bucket block kernel [`Self::encode_fold`]
+    /// minus the point reconstruction, writing into the recycled scratch
+    /// (bit-identical to `encode`).
+    fn encode_into(&mut self, x: &[f64], _rng: &mut Rng, out: &mut Message) {
+        assert_eq!(x.len(), self.d);
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        self.encode_fold(x, 0, self.d / 4, &mut w, |_, _| {});
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
     }
 
     fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
@@ -290,6 +350,27 @@ impl VectorCodec for D4Quantizer {
 
     fn fold_chunk_align(&self) -> usize {
         4
+    }
+
+    /// Chunk kernel for the parallel encode: `lo`/`len` must be
+    /// bucket-aligned (multiples of 4), matching
+    /// [`VectorCodec::fold_chunk_align`] on the decode side.
+    fn encode_range(&self, x: &[f64], lo: usize, len: usize, w: &mut BitWriter) {
+        assert_eq!(x.len(), self.d);
+        assert!(lo % 4 == 0 && len % 4 == 0, "D4 chunks are bucket-aligned");
+        assert!(lo + len <= self.d);
+        self.encode_fold(x, lo / 4, len / 4, w, |_, _| {});
+    }
+
+    fn supports_encode_range(&self) -> bool {
+        true
+    }
+
+    /// A packed bucket is `4·width − 1` bits — always odd — so byte
+    /// alignment needs 8 buckets: 32 coordinates per chunk quantum (the
+    /// encode-side refinement of the decode folds' bucket alignment).
+    fn encode_chunk_align(&self) -> usize {
+        8 * 4
     }
 
     fn needs_reference(&self) -> bool {
@@ -378,6 +459,30 @@ mod tests {
                 assert!((zi - pi).abs() < 1e-9, "decode != encoded point");
             }
             let _ = codec.encode(&x, &mut rng);
+        }
+    }
+
+    #[test]
+    fn encode_into_and_range_match_allocating_encode() {
+        let mut shared = Rng::new(11);
+        let mut rng = Rng::new(12);
+        for d in [4usize, 64, 260] {
+            let mut codec = D4Quantizer::from_y(d, 16, 1.0, &mut shared);
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-20.0, 20.0)).collect();
+            let fresh = codec.encode(&x, &mut rng);
+            // Scratch starts with stale garbage from a previous round.
+            let mut scratch = Message {
+                bytes: vec![0xFF; 4],
+                bits: 32,
+            };
+            codec.encode_into(&x, &mut rng, &mut scratch);
+            assert_eq!(scratch, fresh, "encode_into must be bit-identical (d={d})");
+            // The range kernel over the full span reproduces the stream.
+            let mut w = BitWriter::new();
+            codec.encode_range(&x, 0, d, &mut w);
+            assert_eq!(w.finish(), (fresh.bytes, fresh.bits));
+            assert!(codec.supports_encode_range());
+            assert_eq!(codec.encode_chunk_align(), 32);
         }
     }
 

@@ -12,9 +12,143 @@ use super::lq::LatticeQuantizer;
 use super::{Message, VectorCodec};
 use crate::rng::Rng;
 
+/// Butterfly layers with stride < `FWHT_BLOCK` run to completion inside
+/// one resident chunk before the next chunk is touched (§Perf): 4096
+/// f64 = 32 KiB ≈ one L1d, so the low-stride layers — log₂(4096) of the
+/// log₂(d) total — never leave cache, instead of streaming the whole
+/// vector once per layer.
+const FWHT_BLOCK: usize = 1 << 12;
+
+/// One radix-2 butterfly layer at stride `h` (`x.len()` a multiple of 2h).
+fn radix2_layer(x: &mut [f64], h: usize) {
+    for group in x.chunks_mut(2 * h) {
+        let (lo, hi) = group.split_at_mut(h);
+        for (a, b) in lo.iter_mut().zip(hi) {
+            let (u, v) = (*a, *b);
+            *a = u + v;
+            *b = u - v;
+        }
+    }
+}
+
+/// Fused radix-4 pass covering strides `h` and `2h` in one sweep
+/// (`x.len()` a multiple of 4h): both radix-2 stages happen in registers
+/// — 4 loads + 4 stores where two radix-2 layers pay 8 of each — with
+/// the identical add/sub associativity, so the result is bit-identical.
+fn radix4_layer(x: &mut [f64], h: usize) {
+    for group in x.chunks_mut(4 * h) {
+        let (g01, g23) = group.split_at_mut(2 * h);
+        let (g0, g1) = g01.split_at_mut(h);
+        let (g2, g3) = g23.split_at_mut(h);
+        for j in 0..h {
+            let (y0, y1, y2, y3) = (g0[j], g1[j], g2[j], g3[j]);
+            // Stage h:
+            let u0 = y0 + y1;
+            let u1 = y0 - y1;
+            let u2 = y2 + y3;
+            let u3 = y2 - y3;
+            // Stage 2h:
+            g0[j] = u0 + u2;
+            g1[j] = u1 + u3;
+            g2[j] = u0 - u2;
+            g3[j] = u1 - u3;
+        }
+    }
+}
+
+/// Butterfly layers at strides `h0, 2·h0, …, h1` over one slice, paired
+/// into radix-4 passes (a single radix-2 layer leads when the layer
+/// count is odd).
+fn layers(x: &mut [f64], h0: usize, h1: usize) {
+    debug_assert!(h0.is_power_of_two() && h1.is_power_of_two() && h0 <= h1);
+    let count = (h1 / h0).trailing_zeros() + 1;
+    let mut h = h0;
+    if count % 2 == 1 {
+        radix2_layer(x, h);
+        h *= 2;
+    }
+    while h < h1 {
+        radix4_layer(x, h);
+        h *= 4;
+    }
+}
+
+/// Butterfly layers at strides `h0..=h1` (doubling), cache-blocked: the
+/// strides that fit inside a [`FWHT_BLOCK`] chunk are finished per chunk
+/// while it is L1-resident; only block-crossing strides stream the full
+/// buffer (as fused radix-4 pairs). No-op when `h0 > h1`.
+fn fwht_span(x: &mut [f64], mut h0: usize, h1: usize) {
+    if h0 > h1 {
+        return;
+    }
+    let block = FWHT_BLOCK.min(x.len());
+    let in_block_hi = (block / 2).min(h1);
+    if h0 <= in_block_hi {
+        for chunk in x.chunks_mut(block) {
+            layers(chunk, h0, in_block_hi);
+        }
+        h0 = in_block_hi * 2;
+    }
+    if h0 <= h1 {
+        layers(x, h0, h1);
+    }
+}
+
+/// The final butterfly layer (stride d/2) with `scale` fused into its
+/// stores: `fl(fl(a±b)·scale)` is exactly what a separate post-pass over
+/// the layer's output computes, so the fusion is bit-identical to
+/// butterfly-then-normalize.
+fn final_layer_scaled(x: &mut [f64], scale: f64) {
+    let h = x.len() / 2;
+    let (lo, hi) = x.split_at_mut(h);
+    for (a, b) in lo.iter_mut().zip(hi) {
+        let (u, v) = (*a, *b);
+        *a = (u + v) * scale;
+        *b = (u - v) * scale;
+    }
+}
+
+/// The final butterfly layer with a per-element diagonal fused into its
+/// stores (the inverse rotation's `sign[i]·norm`). Bit-identical to
+/// butterfly, then ·norm, then ·sign: the signs are exact and scaling by
+/// a constant after the final rounding is the same operation either way.
+fn final_layer_diag(x: &mut [f64], diag: &[f64]) {
+    debug_assert_eq!(x.len(), diag.len());
+    let h = x.len() / 2;
+    let (lo, hi) = x.split_at_mut(h);
+    let (dlo, dhi) = diag.split_at(h);
+    for j in 0..h {
+        let (u, v) = (lo[j], hi[j]);
+        lo[j] = (u + v) * dlo[j];
+        hi[j] = (u - v) * dhi[j];
+    }
+}
+
 /// In-place normalized fast Walsh–Hadamard transform.
 /// `x.len()` must be a power of two. O(d log d).
+///
+/// §Perf: cache-blocked multi-radix (fused radix-4 passes, one leading
+/// radix-2 layer when log₂ d is odd) with the 1/√d normalization folded
+/// into the final butterfly layer's stores — one pass fewer over the
+/// data than butterflies + normalize, and bit-identical to the plain
+/// radix-2 two-pass form (kept as [`fwht_reference`] and pinned by the
+/// parity tests below).
 pub fn fwht(x: &mut [f64]) {
+    let d = x.len();
+    assert!(d.is_power_of_two(), "FWHT needs power-of-two length");
+    if d == 1 {
+        return; // zero layers, norm = 1 exactly
+    }
+    let norm = 1.0 / (d as f64).sqrt();
+    fwht_span(x, 1, d / 4);
+    final_layer_scaled(x, norm);
+}
+
+/// The seed's plain radix-2, two-pass (butterflies then a separate
+/// normalization sweep) FWHT — kept as the parity and benchmark baseline
+/// for the blocked multi-radix one-pass [`fwht`], which must match it
+/// bit for bit.
+pub fn fwht_reference(x: &mut [f64]) {
     let d = x.len();
     assert!(d.is_power_of_two(), "FWHT needs power-of-two length");
     let mut h = 1;
@@ -44,20 +178,41 @@ pub fn pad_dim(n: usize) -> usize {
 }
 
 /// The `HD` rotation with its shared-random sign diagonal.
+///
+/// §Perf: both directions are single-pass — the sign diagonal (and the
+/// zero pad) is fused into the forward transform's first butterfly
+/// layer, and the 1/√d normalization (plus, for the inverse, the sign
+/// diagonal again) into the final butterfly layer's stores. Each fusion
+/// commutes exactly with IEEE rounding (signs are exact; the final
+/// layer's post-scale is the same multiply either way), so the fused
+/// one-pass rotations are bit-identical to the legacy
+/// load-multiply → [`fwht_reference`] → scale-sweep pipeline — pinned by
+/// the parity tests below.
 #[derive(Clone, Debug)]
 pub struct Rotation {
     /// ±1 diagonal, length = padded dimension.
     pub sign: Vec<f64>,
     /// Original (unpadded) dimension.
     pub d: usize,
+    /// 1/√(padded dim) — fused into the forward's final butterfly layer.
+    norm: f64,
+    /// `sign[i] · norm` — the inverse's fused output diagonal.
+    inv_diag: Vec<f64>,
 }
 
 impl Rotation {
     /// Draw the diagonal from shared randomness.
     pub fn new(d: usize, shared: &mut Rng) -> Self {
         let dp = pad_dim(d);
-        let sign = (0..dp).map(|_| shared.next_sign()).collect();
-        Rotation { sign, d }
+        let sign: Vec<f64> = (0..dp).map(|_| shared.next_sign()).collect();
+        let norm = 1.0 / (dp as f64).sqrt();
+        let inv_diag = sign.iter().map(|s| s * norm).collect();
+        Rotation {
+            sign,
+            d,
+            norm,
+            inv_diag,
+        }
     }
 
     pub fn padded_dim(&self) -> usize {
@@ -75,15 +230,36 @@ impl Rotation {
     /// buffer is cleared and refilled to the padded length, so after its
     /// first use a round loop re-rotates with zero allocations. Values
     /// are identical to [`Self::forward`].
+    ///
+    /// Single pass: the first butterfly layer loads straight from `x`
+    /// with the sign diagonal and the zero pad applied in registers; the
+    /// final layer folds in the 1/√dp normalization.
     pub fn forward_into(&self, x: &[f64], out: &mut Vec<f64>) {
         assert_eq!(x.len(), self.d);
         let dp = self.padded_dim();
         out.clear();
         out.resize(dp, 0.0);
-        for i in 0..self.d {
-            out[i] = x[i] * self.sign[i];
+        let load = |i: usize| if i < self.d { x[i] * self.sign[i] } else { 0.0 };
+        if dp == 1 {
+            out[0] = load(0); // zero layers, norm = 1 exactly
+            return;
         }
-        fwht(out);
+        if dp == 2 {
+            // The first layer is also the final one: sign and norm both
+            // fuse into the single butterfly.
+            let (a, b) = (load(0), load(1));
+            out[0] = (a + b) * self.norm;
+            out[1] = (a - b) * self.norm;
+            return;
+        }
+        for (t, pair) in out.chunks_mut(2).enumerate() {
+            let a = load(2 * t);
+            let b = load(2 * t + 1);
+            pair[0] = a + b;
+            pair[1] = a - b;
+        }
+        fwht_span(out, 2, dp / 4);
+        final_layer_scaled(out, self.norm);
     }
 
     /// Inverse rotation: apply H (involution), multiply by D, truncate.
@@ -99,12 +275,19 @@ impl Rotation {
     /// then the sign diagonal. The caller reads the first `d` entries
     /// (the pad tail holds reconstruction residue, as in
     /// [`Self::inverse`] before its truncate).
+    ///
+    /// Single pass: the final butterfly layer's stores are multiplied by
+    /// the precomputed `sign[i]/√dp` diagonal, replacing the legacy
+    /// normalize sweep + sign sweep.
     pub fn inverse_in_place(&self, y: &mut [f64]) {
         assert_eq!(y.len(), self.padded_dim());
-        fwht(y);
-        for (yi, si) in y.iter_mut().zip(&self.sign) {
-            *yi *= si;
+        let dp = y.len();
+        if dp == 1 {
+            y[0] *= self.inv_diag[0];
+            return;
         }
+        fwht_span(y, 1, dp / 4);
+        final_layer_diag(y, &self.inv_diag);
     }
 }
 
@@ -266,6 +449,54 @@ mod tests {
             }
             expect /= (d as f64).sqrt();
             assert!((y[i] - expect).abs() < 1e-12, "{} vs {}", y[i], expect);
+        }
+    }
+
+    #[test]
+    fn blocked_multiradix_fwht_bit_identical_to_reference() {
+        // Every size class: trivial (1, 2), odd/even log₂ d, one block,
+        // exactly one block, and multi-block (crossing FWHT_BLOCK = 4096,
+        // exercising the streamed radix-4 stage and the block-crossing
+        // final layer).
+        let mut rng = Rng::new(77);
+        for d in [1usize, 2, 4, 8, 64, 128, 1024, 4096, 8192, 16384] {
+            let x: Vec<f64> = (0..d).map(|_| rng.next_gaussian() * 3.0).collect();
+            let mut fused = x.clone();
+            fwht(&mut fused);
+            let mut two_pass = x;
+            fwht_reference(&mut two_pass);
+            assert_eq!(fused, two_pass, "d={d}");
+        }
+    }
+
+    #[test]
+    fn fused_rotation_bit_identical_to_two_pass_reference() {
+        // The one-pass rotations (sign fused into the first layer, norm —
+        // and for the inverse, norm·sign — into the last) must match the
+        // seed's pipeline: fill·sign → two-pass FWHT → scale sweeps.
+        let mut rng = Rng::new(78);
+        for d in [1usize, 2, 3, 5, 100, 1000, 5000] {
+            let mut shared = Rng::new(d as u64 + 400);
+            let rot = Rotation::new(d, &mut shared);
+            let dp = rot.padded_dim();
+            let x: Vec<f64> = (0..d).map(|_| rng.next_gaussian() * 2.0).collect();
+
+            let mut expect = vec![0.0; dp];
+            for i in 0..d {
+                expect[i] = x[i] * rot.sign[i];
+            }
+            fwht_reference(&mut expect);
+            assert_eq!(rot.forward(&x), expect, "forward d={d}");
+
+            let y: Vec<f64> = (0..dp).map(|_| rng.next_gaussian()).collect();
+            let mut inv_expect = y.clone();
+            fwht_reference(&mut inv_expect);
+            for (v, s) in inv_expect.iter_mut().zip(&rot.sign) {
+                *v *= s;
+            }
+            let mut inv = y;
+            rot.inverse_in_place(&mut inv);
+            assert_eq!(inv, inv_expect, "inverse d={d}");
         }
     }
 

@@ -19,13 +19,20 @@ pub struct CubicLattice {
     pub s: f64,
     /// Per-coordinate offset, shared between encoder and decoder.
     pub offset: Vec<f64>,
+    /// 1/s, precomputed at construction (§Perf): the per-coordinate
+    /// divisions in the round/decode loops become multiplies.
+    inv_s: f64,
 }
 
 impl CubicLattice {
     /// Lattice with a fixed offset.
     pub fn with_offset(s: f64, offset: Vec<f64>) -> Self {
         assert!(s > 0.0, "side length must be positive");
-        CubicLattice { s, offset }
+        CubicLattice {
+            s,
+            offset,
+            inv_s: 1.0 / s,
+        }
     }
 
     /// Lattice with the paper's shared-random offset: uniform in
@@ -33,7 +40,7 @@ impl CubicLattice {
     pub fn random_offset(d: usize, s: f64, shared: &mut Rng) -> Self {
         assert!(s > 0.0, "side length must be positive");
         let offset = (0..d).map(|_| shared.uniform(-s / 2.0, s / 2.0)).collect();
-        CubicLattice { s, offset }
+        Self::with_offset(s, offset)
     }
 
     /// Unshifted lattice (offset 0) — the theoretical sections' `Λ_ε`.
@@ -45,12 +52,19 @@ impl CubicLattice {
         self.offset.len()
     }
 
+    /// The precomputed reciprocal side length 1/s (§Perf: construction
+    /// pays the division once; round loops multiply).
+    #[inline]
+    pub fn inv_s(&self) -> f64 {
+        self.inv_s
+    }
+
     /// Index of the nearest lattice point, coordinate-wise:
     /// `k_i = round((x_i - offset_i)/s)` with ties-to-even.
     #[inline]
     pub fn nearest_index(&self, x: &[f64], out: &mut [i64]) {
         debug_assert_eq!(x.len(), self.dim());
-        let inv = 1.0 / self.s;
+        let inv = self.inv_s;
         for ((o, xi), off) in out.iter_mut().zip(x).zip(&self.offset) {
             *o = ((xi - off) * inv).round_ties_even() as i64;
         }
@@ -74,21 +88,44 @@ impl CubicLattice {
     /// Nearest index with the given color (Section 3.3 / Lemma 15):
     /// among `k ≡ c (mod q)`, the closest to `t = (x - offset)/s` is
     /// `k = c + q·round((t - c)/q)`.
+    ///
+    /// §Perf: the two per-coordinate divisions of the seed form
+    /// (`(x−off)/s`, `/q`) are folded into reciprocal multiplies — the
+    /// same fold the fused decode loops in [`crate::quant::lq`] use.
+    /// Loops should hoist the reciprocals and call
+    /// [`Self::decode_index_folded`] directly.
     #[inline]
     pub fn decode_index(&self, color: u32, x_ref: f64, offset: f64, q: u32) -> i64 {
-        let t = (x_ref - offset) / self.s;
-        let c = color as f64;
         let qf = q as f64;
-        let m = ((t - c) / qf).round_ties_even();
+        Self::decode_index_folded(color, x_ref, offset, q, 1.0 / (self.s * qf), 1.0 / qf)
+    }
+
+    /// [`Self::decode_index`] with the reciprocals precomputed by the
+    /// caller: `inv_sq = 1/(s·q)`, `inv_q = 1/q`, so the hot loop is two
+    /// multiplies, a round, and an integer reconstruction.
+    #[inline]
+    pub fn decode_index_folded(
+        color: u32,
+        x_ref: f64,
+        offset: f64,
+        q: u32,
+        inv_sq: f64,
+        inv_q: f64,
+    ) -> i64 {
+        let c = color as f64;
+        let m = ((x_ref - offset) * inv_sq - c * inv_q).round_ties_even();
         color as i64 + (q as i64) * (m as i64)
     }
 
     /// Full decode: nearest same-color lattice point to `x_ref`, writing
-    /// the reconstructed vector into `out`.
+    /// the reconstructed vector into `out`. Reciprocals hoisted once per
+    /// call (§Perf).
     pub fn decode(&self, colors: &[u32], x_ref: &[f64], q: u32, out: &mut [f64]) {
         debug_assert_eq!(colors.len(), self.dim());
+        let inv_sq = 1.0 / (self.s * q as f64);
+        let inv_q = 1.0 / q as f64;
         for i in 0..colors.len() {
-            let k = self.decode_index(colors[i], x_ref[i], self.offset[i], q);
+            let k = Self::decode_index_folded(colors[i], x_ref[i], self.offset[i], q, inv_sq, inv_q);
             out[i] = self.offset[i] + self.s * k as f64;
         }
     }

@@ -89,38 +89,76 @@ impl LatticeQuantizer {
         }
     }
 
+    /// The shared fused encode loop — the write-side twin of
+    /// [`Self::decode_fold`]: coordinates `lo..lo + len` are rounded to
+    /// their lattice index (reciprocal-folded, §Perf), reduced to their
+    /// color (a mask when `q` is a power of two — the branch is hoisted
+    /// to block granularity, never per coordinate), gathered into a
+    /// block, and packed through the word-granular write kernel
+    /// [`super::bits::BitWriter::push_block`] (one accumulator store per
+    /// ⌊64/width⌋ colors). Every encode entry point (`encode`,
+    /// `encode_into`, `encode_with_point`, `encode_range`) is this loop
+    /// with a different `emit` sink, so they are bit-identical by
+    /// construction.
+    fn encode_fold(
+        &self,
+        x: &[f64],
+        lo: usize,
+        len: usize,
+        w: &mut super::bits::BitWriter,
+        mut emit: impl FnMut(usize, i64),
+    ) {
+        const BLOCK: usize = 128;
+        let inv = self.lattice.inv_s();
+        let width = self.width;
+        let mut colors = [0u64; BLOCK];
+        let pow2 = (self.q & (self.q - 1)) == 0;
+        let mask = (self.q - 1) as i64;
+        let q = self.q as i64;
+        let offset = &self.lattice.offset;
+        let mut done = 0;
+        while done < len {
+            let take = (len - done).min(BLOCK);
+            let base = lo + done;
+            if pow2 {
+                // Two's-complement arithmetic makes the mask correct for
+                // negative indices.
+                for (j, c) in colors[..take].iter_mut().enumerate() {
+                    let idx = base + j;
+                    let k = ((x[idx] - offset[idx]) * inv).round_ties_even() as i64;
+                    *c = (k & mask) as u64;
+                    emit(idx, k);
+                }
+            } else {
+                for (j, c) in colors[..take].iter_mut().enumerate() {
+                    let idx = base + j;
+                    let k = ((x[idx] - offset[idx]) * inv).round_ties_even() as i64;
+                    *c = k.rem_euclid(q) as u64;
+                    emit(idx, k);
+                }
+            }
+            w.push_block(&colors[..take], width);
+            done += take;
+        }
+    }
+
     /// Encode and also return the quantized point Q(x) (the nearest
     /// lattice point) — used by the experiments' y-estimation policies,
     /// which measure `‖Q(g₀) − Q(g₁)‖∞` (Section 9.2 Exp 2).
     ///
-    /// Single fused pass (§Perf): round → color → bit-pack → reconstruct,
-    /// no intermediate index/color vectors.
+    /// Single fused pass (§Perf): the block kernel [`Self::encode_fold`]
+    /// with a point-reconstruction sink, no intermediate index/color
+    /// vectors.
     pub fn encode_with_point(&self, x: &[f64]) -> (Message, Vec<f64>) {
         let d = self.lattice.dim();
         assert_eq!(x.len(), d);
         let s = self.lattice.s;
-        let inv = 1.0 / s;
-        let q = self.q as i64;
-        let width = self.width;
-        let mut w = super::bits::BitWriter::with_capacity(d * width as usize);
-        let mut point = Vec::with_capacity(d);
-        if (self.q & (self.q - 1)) == 0 {
-            // Power-of-two q (every experiment config): mod is a mask —
-            // two's-complement arithmetic makes it correct for negatives.
-            let mask = (self.q - 1) as i64;
-            for (xi, off) in x.iter().zip(&self.lattice.offset) {
-                let k = ((xi - off) * inv).round_ties_even() as i64;
-                w.push((k & mask) as u64, width);
-                point.push(off + s * k as f64);
-            }
-        } else {
-            for (xi, off) in x.iter().zip(&self.lattice.offset) {
-                let k = ((xi - off) * inv).round_ties_even() as i64;
-                let c = k.rem_euclid(q) as u64;
-                w.push(c, width);
-                point.push(off + s * k as f64);
-            }
-        }
+        let offset = &self.lattice.offset;
+        let mut w = super::bits::BitWriter::with_capacity(d * self.width as usize);
+        let mut point = vec![0.0; d];
+        self.encode_fold(x, 0, d, &mut w, |idx, k| {
+            point[idx] = offset[idx] + s * k as f64;
+        });
         let (bytes, bits) = w.finish();
         (Message { bytes, bits }, point)
     }
@@ -136,8 +174,15 @@ impl VectorCodec for LatticeQuantizer {
     }
 
     /// Deterministic given the (shared-random) offset; `_rng` unused.
+    /// Same block kernel as `encode_into`, minus the point sink the
+    /// y-estimation paths pay for in [`Self::encode_with_point`].
     fn encode(&mut self, x: &[f64], _rng: &mut Rng) -> Message {
-        self.encode_with_point(x).0
+        let d = self.lattice.dim();
+        assert_eq!(x.len(), d);
+        let mut w = super::bits::BitWriter::with_capacity(d * self.width as usize);
+        self.encode_fold(x, 0, d, &mut w, |_, _| {});
+        let (bytes, bits) = w.finish();
+        Message { bytes, bits }
     }
 
     /// Fused decode (§Perf): bit-read → nearest-same-color → reconstruct
@@ -148,31 +193,36 @@ impl VectorCodec for LatticeQuantizer {
         out
     }
 
-    /// Zero-alloc encode: same fused pass as [`Self::encode_with_point`]
-    /// minus the point reconstruction, writing into the recycled scratch.
+    /// Zero-alloc encode: the block kernel [`Self::encode_fold`] minus
+    /// the point reconstruction, writing into the recycled scratch.
     fn encode_into(&mut self, x: &[f64], _rng: &mut Rng, out: &mut Message) {
         let d = self.lattice.dim();
         assert_eq!(x.len(), d);
-        let s = self.lattice.s;
-        let inv = 1.0 / s;
-        let q = self.q as i64;
-        let width = self.width;
         let mut w = super::bits::BitWriter::reusing(std::mem::take(&mut out.bytes));
-        if (self.q & (self.q - 1)) == 0 {
-            let mask = (self.q - 1) as i64;
-            for (xi, off) in x.iter().zip(&self.lattice.offset) {
-                let k = ((xi - off) * inv).round_ties_even() as i64;
-                w.push((k & mask) as u64, width);
-            }
-        } else {
-            for (xi, off) in x.iter().zip(&self.lattice.offset) {
-                let k = ((xi - off) * inv).round_ties_even() as i64;
-                w.push(k.rem_euclid(q) as u64, width);
-            }
-        }
+        self.encode_fold(x, 0, d, &mut w, |_, _| {});
         let (bytes, bits) = w.finish();
         out.bytes = bytes;
         out.bits = bits;
+    }
+
+    /// Chunk kernel for the parallel encode
+    /// ([`crate::quant::encode_chunked`]): appends exactly the fields for
+    /// coordinates `lo..lo + len` — a fixed-width stream, so the caller
+    /// can stitch byte-aligned chunks back together bit-identically.
+    fn encode_range(&self, x: &[f64], lo: usize, len: usize, w: &mut super::bits::BitWriter) {
+        assert_eq!(x.len(), self.lattice.dim());
+        assert!(lo + len <= x.len());
+        self.encode_fold(x, lo, len, w, |_, _| {});
+    }
+
+    fn supports_encode_range(&self) -> bool {
+        true
+    }
+
+    /// Coordinates per byte-aligned chunk quantum: `8/gcd(width, 8)`
+    /// fields fill a whole number of bytes.
+    fn encode_chunk_align(&self) -> usize {
+        super::bits::byte_align_fields(self.width)
     }
 
     /// Zero-alloc decode into a caller-owned buffer (identical values to
@@ -310,6 +360,35 @@ mod tests {
             let mut z2 = vec![0.0; d];
             codec.decode_into(&fresh, &xv, &mut z2);
             assert_eq!(z, z2, "decode_into must be value-identical");
+        }
+    }
+
+    #[test]
+    fn encode_range_chunks_stitch_into_the_sequential_stream() {
+        let mut shared = Rng::new(41);
+        let mut rng = Rng::new(42);
+        for q in [8u32, 16, 255] {
+            let d = 203;
+            let mut codec = LatticeQuantizer::from_y(d, q, 1.0, &mut shared);
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-50.0, 50.0)).collect();
+            let full = codec.encode(&x, &mut rng);
+            // Split at a byte-aligned coordinate; the two range streams
+            // must concatenate into the sequential message unchanged.
+            let align = codec.encode_chunk_align();
+            let lo = (d / 2).div_ceil(align) * align;
+            let mut w = crate::quant::bits::BitWriter::new();
+            codec.encode_range(&x, 0, lo, &mut w);
+            let (mut bytes, head_bits) = w.finish();
+            assert_eq!(head_bits % 8, 0, "interior chunk must end on a byte");
+            let mut w = crate::quant::bits::BitWriter::new();
+            codec.encode_range(&x, lo, d - lo, &mut w);
+            let (tail, tail_bits) = w.finish();
+            bytes.extend_from_slice(&tail);
+            let stitched = Message {
+                bytes,
+                bits: head_bits + tail_bits,
+            };
+            assert_eq!(stitched, full, "q={q}");
         }
     }
 

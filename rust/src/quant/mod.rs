@@ -13,9 +13,36 @@
 //! [`VectorCodec::decode_accumulate_range`] fuse decode with a weighted
 //! accumulate so a leader can fold `n` incoming bitstreams into one O(d)
 //! sum without ever materializing the decoded vectors (the streaming-fold
-//! data plane of [`crate::coordinator`]). Lattice decodes pull colors
-//! through the word-granular block kernels in [`bits`]
-//! ([`bits::BitReader::read_block`]) rather than per-coordinate reads.
+//! data plane of [`crate::coordinator`]).
+//!
+//! # §Perf — the symmetric encode/decode block-kernel design
+//!
+//! Both directions of the wire hot path are word-granular and fused, and
+//! they mirror each other:
+//!
+//! * **Decode plane** (PR 2): lattice decodes pull colors through
+//!   [`bits::BitReader::read_block`] (one unaligned load per
+//!   ⌊64/width⌋ fields) inside a shared `decode_fold` loop whose sink
+//!   distinguishes `decode_into` / `decode_accumulate_into` /
+//!   `decode_accumulate_range`; [`crate::coordinator::fold_mean_chunked`]
+//!   shards `d` across threads via seekable range kernels.
+//! * **Encode plane** (this PR's twin): lattice encodes round, color and
+//!   pack through [`bits::BitWriter::push_block`] (one accumulator store
+//!   per ⌊64/width⌋ fields) inside a shared `encode_fold` loop whose
+//!   sink distinguishes `encode` / `encode_into` / `encode_with_point` /
+//!   [`VectorCodec::encode_range`]; [`encode_chunked`] shards `d` across
+//!   threads at byte-aligned chunk boundaries
+//!   ([`VectorCodec::encode_chunk_align`]). The `HD` rotation feeding
+//!   RLQSGD's encode is itself single-pass: a cache-blocked multi-radix
+//!   FWHT with the sign diagonal fused into the first butterfly layer
+//!   and the 1/√d normalization into the last (see [`hadamard`]).
+//!
+//! Every fused/blocked/parallel path is **bit-identical** to its scalar
+//! ancestor — block kernels repack the same LSB-first stream, the FWHT
+//! fusions commute exactly with IEEE rounding, and chunk boundaries land
+//! on byte boundaries — pinned by `rust/tests/prop.rs` and the
+//! `session_parity` suite, which is what lets sessions pick all of it up
+//! automatically through `encode_into` without moving a single wire bit.
 //!
 //! Implementations:
 //!
@@ -151,11 +178,131 @@ pub trait VectorCodec: Send {
         1
     }
 
+    /// Append the wire fields for coordinates `lo..lo + len` of `x` to
+    /// `w` — the encode twin of [`Self::decode_accumulate_range`]. Only
+    /// meaningful for codecs whose message is a pure fixed-width
+    /// coordinate stream (no header, no cross-chunk state): those
+    /// override it (`LatticeQuantizer`, `D4Quantizer`, `FullPrecision`)
+    /// and advertise it through [`Self::supports_encode_range`], which
+    /// is what lets the chunk-parallel [`encode_chunked`] shard a huge
+    /// gradient's encode across cores. The only alignment the call
+    /// itself needs is the codec's field coupling (D4 buckets: `lo` and
+    /// `len` multiples of 4); byte alignment matters *between* streams —
+    /// when independently written streams are concatenated, every
+    /// interior boundary must be a multiple of
+    /// [`Self::encode_chunk_align`] (the final, tail run may be ragged),
+    /// which is exactly how [`encode_chunked`] cuts its runs.
+    ///
+    /// There is no generic fallback — a codec with a message header or
+    /// global state (RLQSGD's rotation, PowerSGD's factors) has no
+    /// meaningful coordinate sub-stream — so the default panics; gate
+    /// calls on `supports_encode_range`.
+    fn encode_range(&self, x: &[f64], lo: usize, len: usize, w: &mut bits::BitWriter) {
+        let _ = (x, lo, len, w);
+        panic!("{} does not support range encoding", self.name());
+    }
+
+    /// True if [`Self::encode_range`] is implemented (fixed-width,
+    /// headerless wire format).
+    fn supports_encode_range(&self) -> bool {
+        false
+    }
+
+    /// Coordinate alignment required of `encode_range` chunk boundaries:
+    /// the smallest coordinate count whose fields fill a whole number of
+    /// *bytes*, so independently written chunks concatenate into the
+    /// sequential bitstream unchanged. Strictly finer than
+    /// [`Self::fold_chunk_align`]: decode chunks only have to respect
+    /// field coupling (D4 buckets), encode chunks additionally have to
+    /// land on byte boundaries (e.g. 8 coordinates at width 3; 8 buckets
+    /// = 32 coordinates for D4's odd `4·width − 1`-bit buckets).
+    fn encode_chunk_align(&self) -> usize {
+        1
+    }
+
     /// True if decoding needs a reference vector within the codec's
     /// guarantee radius (lattice family). Used by the coordinator to
     /// decide which topology invariants to check.
     fn needs_reference(&self) -> bool {
         false
+    }
+}
+
+/// Chunk-parallel encode for large `d` — the write-side twin of
+/// [`crate::coordinator::fold_mean_chunked`], so a single machine with a
+/// huge gradient saturates cores: `d` is split into chunks of ~`chunk`
+/// coordinates (rounded up to the codec's byte-boundary
+/// [`VectorCodec::encode_chunk_align`]), contiguous runs of chunks are
+/// handed to at most `available_parallelism` scoped threads, and each
+/// thread streams its run through [`VectorCodec::encode_range`] into its
+/// own writer. Because every run boundary is a byte boundary of the wire
+/// format, concatenating the per-thread buffers reproduces the
+/// sequential [`VectorCodec::encode_into`] stream **bit-identically** —
+/// sharding changes wall-clock, never a wire bit (pinned by the prop
+/// tests).
+///
+/// `out` is recycled like `encode_into`'s scratch: cleared, capacity
+/// kept. Requires [`VectorCodec::supports_encode_range`] (the lattice
+/// family minus RLQSGD — whose global rotation has no coordinate
+/// sub-stream — plus full precision); panics otherwise.
+pub fn encode_chunked<C: VectorCodec + Sync + ?Sized>(
+    codec: &C,
+    x: &[f64],
+    out: &mut Message,
+    chunk: usize,
+) {
+    assert!(
+        codec.supports_encode_range(),
+        "{} does not support range encoding",
+        codec.name()
+    );
+    let d = codec.dim();
+    assert_eq!(x.len(), d);
+    let align = codec.encode_chunk_align().max(1);
+    let chunk = chunk.max(1).div_ceil(align) * align;
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let n_chunks = d.div_ceil(chunk).max(1);
+    let group = n_chunks.div_ceil(threads) * chunk;
+    let bytes = &mut out.bytes;
+    bytes.clear();
+    out.bits = 0;
+    if d <= group {
+        // One run: no thread to amortize, encode in place.
+        let mut w = bits::BitWriter::reusing(std::mem::take(bytes));
+        codec.encode_range(x, 0, d, &mut w);
+        let (b, bits) = w.finish();
+        *bytes = b;
+        out.bits = bits;
+        return;
+    }
+    let runs: Vec<(usize, usize)> = (0..d.div_ceil(group))
+        .map(|gi| (gi * group, group.min(d - gi * group)))
+        .collect();
+    let parts: Vec<(Vec<u8>, u64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = runs
+            .iter()
+            .map(|&(lo, len)| {
+                scope.spawn(move || {
+                    let mut w = bits::BitWriter::new();
+                    codec.encode_range(x, lo, len, &mut w);
+                    w.finish()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("encode shard panicked"))
+            .collect()
+    });
+    for (i, (pb, pbits)) in parts.iter().enumerate() {
+        debug_assert!(
+            i + 1 == parts.len() || pbits % 8 == 0,
+            "interior chunk must end on a byte boundary"
+        );
+        bytes.extend_from_slice(pb);
+        out.bits += pbits;
     }
 }
 
@@ -204,6 +351,57 @@ mod tests {
         let mut z2 = vec![0.0; d];
         codec.decode_into(&fresh, &x, &mut z2);
         assert_eq!(z, z2);
+    }
+
+    /// Sharded encode at several chunk sizes (including chunks smaller
+    /// than the alignment quantum and larger than d) must reproduce the
+    /// sequential wire message bit for bit, stale scratch included.
+    fn check_chunked<C: VectorCodec + Sync>(codec: &mut C, x: &[f64], rng: &mut Rng) {
+        assert!(codec.supports_encode_range(), "{}", codec.name());
+        let expect = codec.encode(x, rng);
+        for chunk in [1usize, 97, 1024, 100_000] {
+            let mut msg = Message {
+                bytes: vec![0xEE; 7],
+                bits: 56,
+            };
+            encode_chunked(codec, x, &mut msg, chunk);
+            assert_eq!(msg, expect, "{} chunk={chunk}", codec.name());
+        }
+    }
+
+    #[test]
+    fn encode_chunked_bit_identical_to_sequential_encode() {
+        let mut shared = Rng::new(61);
+        let mut rng = Rng::new(62);
+        // LQ at an awkward width (q=8 → 3 bits: byte alignment needs 8
+        // coords), D4 (32-coord quantum), and full precision, at a
+        // dimension that leaves ragged tail chunks.
+        let d = 4096 + 32;
+        let x: Vec<f64> = (0..d).map(|_| rng.uniform(-40.0, 40.0)).collect();
+        check_chunked(
+            &mut LatticeQuantizer::from_y(d, 8, 1.0, &mut shared),
+            &x,
+            &mut rng,
+        );
+        check_chunked(&mut D4Quantizer::from_y(d, 16, 1.0, &mut shared), &x, &mut rng);
+        check_chunked(
+            &mut crate::quant::baselines::FullPrecision::new(d),
+            &x,
+            &mut rng,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "does not support range encoding")]
+    fn encode_chunked_rejects_codecs_without_range_encoding() {
+        // QSGD ships a norm header, so it has no coordinate sub-stream
+        // (RLQSGD is ruled out the same way, by its global rotation —
+        // and also by `Sync`, which its decode scratch forgoes).
+        let codec =
+            crate::quant::baselines::Qsgd::new(16, 16, crate::quant::baselines::QsgdNorm::L2);
+        let x = vec![0.0; 16];
+        let mut msg = Message::empty();
+        encode_chunked(&codec, &x, &mut msg, 8);
     }
 
     #[test]

@@ -101,9 +101,7 @@ impl RobustAgreement {
             .map(|&ki| CubicLattice::color_of(ki, q) as u64)
             .collect();
         let mut w = BitWriter::with_capacity(self.d * width as usize + 32);
-        for &c in &colors {
-            w.push(c, width);
-        }
+        w.push_block(&colors, width);
         w.push(Self::hash_indices(&k, hash2(self.seed, q as u64)) as u64, 32);
         let (bytes, bits) = w.finish();
         (Message { bytes, bits }, k)
@@ -121,8 +119,18 @@ impl RobustAgreement {
         }
         let sent_hash = r.read(32) as u32;
         let mut k = vec![0i64; self.d];
+        // Reciprocals hoisted out of the per-coordinate loop (§Perf).
+        let inv_sq = 1.0 / (lat.s * q as f64);
+        let inv_q = 1.0 / q as f64;
         for i in 0..self.d {
-            k[i] = lat.decode_index(all[i] as u32, x_v[i], lat.offset[i], q);
+            k[i] = CubicLattice::decode_index_folded(
+                all[i] as u32,
+                x_v[i],
+                lat.offset[i],
+                q,
+                inv_sq,
+                inv_q,
+            );
         }
         if Self::hash_indices(&k, hash2(self.seed, q as u64)) == sent_hash {
             let mut z = vec![0.0; self.d];

@@ -371,6 +371,198 @@ fn prop_streaming_and_collecting_leaders_agree() {
     });
 }
 
+/// The write-side block kernel: `push_block` must produce the identical
+/// byte stream and bit count as repeated `push`, for every width 0..=64
+/// (width 0 fields carry no bits at all), any count, and any misaligned
+/// starting offset — and the stream must round-trip through `read_block`,
+/// non-word-aligned tail included.
+#[test]
+fn prop_push_block_equals_repeated_push() {
+    check("push_block", 150, |rng| {
+        let width = rng.next_below(65) as u32; // 0..=64
+        let prefix = rng.next_below(64) as u32; // misaligns the stream
+        let n = 1 + rng.next_below(300) as usize;
+        let mask = if width == 0 {
+            0
+        } else if width == 64 {
+            u64::MAX
+        } else {
+            (1u64 << width) - 1
+        };
+        let vals: Vec<u64> = (0..n).map(|_| rng.next_u64() & mask).collect();
+        let pv = if prefix == 0 {
+            0
+        } else {
+            rng.next_u64() & ((1u64 << prefix) - 1)
+        };
+        // Scalar reference stream.
+        let mut ws = dme::quant::bits::BitWriter::new();
+        ws.push(pv, prefix);
+        for &v in &vals {
+            ws.push(v, width);
+        }
+        // Block stream, in randomly sized sub-blocks.
+        let mut wb = dme::quant::bits::BitWriter::new();
+        wb.push(pv, prefix);
+        let mut done = 0;
+        while done < n {
+            let take = (1 + rng.next_below(50) as usize).min(n - done);
+            wb.push_block(&vals[done..done + take], width);
+            done += take;
+        }
+        assert_eq!(wb.bit_len(), ws.bit_len());
+        let (bytes, bits) = ws.finish();
+        assert_eq!(wb.finish(), (bytes.clone(), bits));
+        // And the written fields round-trip through the read-side twin.
+        let mut r = dme::quant::bits::BitReader::new(&bytes);
+        r.seek(prefix as u64);
+        let mut out = vec![u64::MAX; n];
+        r.read_block(width, &mut out);
+        assert_eq!(out, vals);
+    });
+}
+
+/// The seed's scalar per-coordinate LQ encode loop (one `push` per
+/// color) — the reference the fused block kernel must match bit for bit.
+fn lq_encode_scalar(lq: &LatticeQuantizer, x: &[f64]) -> dme::quant::Message {
+    let width = dme::quant::bits::width_for(lq.q as u64);
+    let inv = 1.0 / lq.lattice.s;
+    let q = lq.q as i64;
+    let mut w = dme::quant::bits::BitWriter::new();
+    for (xi, off) in x.iter().zip(&lq.lattice.offset) {
+        let k = ((xi - off) * inv).round_ties_even() as i64;
+        let c = if (lq.q & (lq.q - 1)) == 0 {
+            (k & (q - 1)) as u64
+        } else {
+            k.rem_euclid(q) as u64
+        };
+        w.push(c, width);
+    }
+    let (bytes, bits) = w.finish();
+    dme::quant::Message { bytes, bits }
+}
+
+/// Encode-plane parity: for LQ (power-of-two and general q), RLQ (scalar
+/// two-pass rotation + scalar pack) and D4 (scalar per-bucket pushes),
+/// the fused block-kernel `encode_into` must reproduce the scalar
+/// reference encode bit for bit, stale scratch included.
+#[test]
+fn prop_encode_block_kernels_match_scalar_reference() {
+    check("encode_block", 60, |rng| {
+        let y = 10f64.powf(rng.uniform(-1.0, 1.0));
+        let center = rng.uniform(-100.0, 100.0);
+        let mut stale = dme::quant::Message {
+            bytes: vec![0xCD; 5],
+            bits: 40,
+        };
+
+        // LQ at a random dimension and both q classes.
+        let d = rand_dim(rng);
+        let q = rand_q(rng);
+        let mut shared = rng.fork(11);
+        let mut lq = LatticeQuantizer::from_y(d, q, y, &mut shared);
+        let x = rand_vec(rng, d, center, y);
+        let expect = lq_encode_scalar(&lq, &x);
+        let mut enc_rng = rng.fork(12);
+        lq.encode_into(&x, &mut enc_rng, &mut stale);
+        assert_eq!(stale, expect, "LQ d={d} q={q}");
+
+        // RLQ: scalar reference = sign-multiply → two-pass radix-2 FWHT
+        // (the seed rotation) → scalar pack on the inner lattice.
+        let mut shared = rng.fork(13);
+        let mut rlq = RotatedLatticeQuantizer::from_y_rot(d, 16, y, &mut shared);
+        let mut rx = vec![0.0; rlq.rotation.padded_dim()];
+        for i in 0..d {
+            rx[i] = x[i] * rlq.rotation.sign[i];
+        }
+        dme::quant::hadamard::fwht_reference(&mut rx);
+        let expect = lq_encode_scalar(&rlq.inner, &rx);
+        let mut enc_rng = rng.fork(14);
+        rlq.encode_into(&x, &mut enc_rng, &mut stale);
+        assert_eq!(stale, expect, "RLQ d={d}");
+
+        // D4: scalar reference = per-bucket nearest_d4 + four pushes.
+        let d = 4 * (1 + rng.next_below(40) as usize);
+        let x = rand_vec(rng, d, center, y);
+        let mut shared = rng.fork(15);
+        let mut d4 = dme::quant::D4Quantizer::from_y(d, 16, y, &mut shared);
+        let width = dme::quant::bits::width_for(d4.q as u64);
+        let inv = 1.0 / d4.s;
+        let mask = (d4.q - 1) as i64;
+        let mut w = dme::quant::bits::BitWriter::new();
+        for b in 0..d / 4 {
+            let mut t = [0.0f64; 4];
+            for (i, ti) in t.iter_mut().enumerate() {
+                let j = 4 * b + i;
+                *ti = (x[j] - d4.offset[j]) * inv;
+            }
+            let k = dme::quant::d4::nearest_d4(&t);
+            let c: Vec<u64> = k.iter().map(|&ki| (ki & mask) as u64).collect();
+            w.push(c[0], width);
+            w.push(c[1], width);
+            w.push(c[2], width);
+            w.push(c[3] >> 1, width - 1);
+        }
+        let (bytes, bits) = w.finish();
+        let expect = dme::quant::Message { bytes, bits };
+        let mut enc_rng = rng.fork(16);
+        d4.encode_into(&x, &mut enc_rng, &mut stale);
+        assert_eq!(stale, expect, "D4 d={d}");
+    });
+}
+
+/// Chunk-parallel encode: for every range-encoding codec, any chunk
+/// size, and ragged dimensions, `encode_chunked` must equal the
+/// sequential `encode_into` stream bit for bit — sharding may only ever
+/// change wall-clock.
+#[test]
+fn prop_encode_chunked_matches_sequential() {
+    check("encode_chunked", 60, |rng| {
+        let y = 1.0;
+        let chunk = 1 + rng.next_below(200) as usize;
+        let mut stale = dme::quant::Message {
+            bytes: vec![0xAB; 3],
+            bits: 24,
+        };
+
+        let d = rand_dim(rng);
+        let q = rand_q(rng);
+        let mut shared = rng.fork(21);
+        let mut lq = LatticeQuantizer::from_y(d, q, y, &mut shared);
+        let center = rng.uniform(-50.0, 50.0);
+        let x = rand_vec(rng, d, center, y);
+        let mut enc_rng = rng.fork(22);
+        let expect = dme::quant::VectorCodec::encode(&mut lq, &x, &mut enc_rng);
+        dme::quant::encode_chunked(&lq, &x, &mut stale, chunk);
+        assert_eq!(stale, expect, "LQ d={d} q={q} chunk={chunk}");
+
+        let d = 4 * (1 + rng.next_below(64) as usize);
+        let x = rand_vec(rng, d, 0.0, y);
+        let mut shared = rng.fork(23);
+        let mut d4 = dme::quant::D4Quantizer::from_y(d, 16, y, &mut shared);
+        let expect = dme::quant::VectorCodec::encode(&mut d4, &x, &mut enc_rng);
+        dme::quant::encode_chunked(&d4, &x, &mut stale, chunk);
+        assert_eq!(stale, expect, "D4 d={d} chunk={chunk}");
+    });
+}
+
+/// The blocked multi-radix one-pass FWHT is bit-identical to the seed's
+/// two-pass radix-2 reference at every power-of-two size, including
+/// multi-block ones.
+#[test]
+fn prop_fused_fwht_matches_reference() {
+    check("fwht_parity", 40, |rng| {
+        let logd = rng.next_below(14) as u32; // 1 .. 8192
+        let d = 1usize << logd;
+        let x: Vec<f64> = (0..d).map(|_| rng.next_gaussian() * 2.0).collect();
+        let mut fused = x.clone();
+        dme::quant::hadamard::fwht(&mut fused);
+        let mut reference = x;
+        dme::quant::hadamard::fwht_reference(&mut reference);
+        assert_eq!(fused, reference, "d={d}");
+    });
+}
+
 /// Bit-packing: pack→unpack round-trips any width/value set (the wire
 /// format underneath every lattice message).
 #[test]

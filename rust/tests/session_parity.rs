@@ -289,6 +289,113 @@ fn reference_robust_vr(
 }
 
 // ----------------------------------------------------------------------
+// Scalar encode-plane reference: the session's codecs now run blocked /
+// fused / chunk-parallel encode kernels (`BitWriter::push_block`,
+// `encode_fold`, the one-pass multi-radix rotation, `encode_chunked`);
+// this reference re-runs the star protocol with the seed's fully scalar
+// wire loops — one `push`/`read` per color — so any wire bit moved by
+// the vectorized encode plane fails these asserts.
+// ----------------------------------------------------------------------
+
+fn scalar_lq_encode(lq: &LatticeQuantizer, x: &[f64]) -> dme::quant::Message {
+    let width = dme::quant::bits::width_for(lq.q as u64);
+    let inv = 1.0 / lq.lattice.s;
+    let mask = (lq.q - 1) as i64; // q is a power of two in these tests
+    let mut w = dme::quant::bits::BitWriter::new();
+    for (xi, off) in x.iter().zip(&lq.lattice.offset) {
+        let k = ((xi - off) * inv).round_ties_even() as i64;
+        w.push((k & mask) as u64, width);
+    }
+    let (bytes, bits) = w.finish();
+    dme::quant::Message { bytes, bits }
+}
+
+fn scalar_lq_decode(
+    lq: &LatticeQuantizer,
+    msg: &dme::quant::Message,
+    reference: &[f64],
+) -> Vec<f64> {
+    let d = lq.lattice.dim();
+    let width = dme::quant::bits::width_for(lq.q as u64);
+    let s = lq.lattice.s;
+    let inv_sq = 1.0 / (s * lq.q as f64);
+    let inv_q = 1.0 / lq.q as f64;
+    let qi = lq.q as i64;
+    let mut r = dme::quant::bits::BitReader::new(&msg.bytes);
+    (0..d)
+        .map(|i| {
+            let c = r.read(width) as i64;
+            let m = ((reference[i] - lq.lattice.offset[i]) * inv_sq - c as f64 * inv_q)
+                .round_ties_even() as i64;
+            let k = c + qi * m;
+            lq.lattice.offset[i] + s * k as f64
+        })
+        .collect()
+}
+
+/// One star round computed entirely with the scalar wire loops: encode
+/// every machine, fold the decoded vectors at the leader in pinned
+/// machine order, re-encode the mean, decode everywhere.
+fn scalar_star_round(
+    inputs: &[Vec<f64>],
+    q: u32,
+    y: f64,
+    seed: u64,
+    round: u64,
+) -> (Vec<f64>, Vec<Vec<f64>>, usize) {
+    let n = inputs.len();
+    let d = inputs[0].len();
+    let leader = Rng::new(hash2(seed, round ^ 0x1EAD)).next_below(n as u64) as usize;
+    let lq = LatticeQuantizer::from_y(d, q, y, &mut Rng::new(hash2(seed, round)));
+    let mut mu = vec![0.0; d];
+    for (v, input) in inputs.iter().enumerate() {
+        if v == leader {
+            dme::linalg::axpy(&mut mu, 1.0, input);
+        } else {
+            let msg = scalar_lq_encode(&lq, input);
+            let z = scalar_lq_decode(&lq, &msg, &inputs[leader]);
+            dme::linalg::axpy(&mut mu, 1.0, &z);
+        }
+    }
+    let inv_n = 1.0 / n as f64;
+    for m in mu.iter_mut() {
+        *m = inv_n * *m;
+    }
+    let bmsg = scalar_lq_encode(&lq, &mu);
+    let outputs: Vec<Vec<f64>> = inputs
+        .iter()
+        .map(|x| scalar_lq_decode(&lq, &bmsg, x))
+        .collect();
+    (outputs[0].clone(), outputs, leader)
+}
+
+#[test]
+fn session_block_encode_plane_bit_identical_to_scalar_encode() {
+    for (n, d, q) in [(2usize, 16usize, 8u32), (6, 33, 16), (9, 128, 64)] {
+        let seed = 6000 + n as u64;
+        let y = 1.0;
+        let inputs = gen_inputs(n, d, 100.0, y / 2.0, seed);
+        let mut streaming = DmeBuilder::new(n, d)
+            .codec(CodecSpec::Lq { q })
+            .seed(seed)
+            .build();
+        let mut collecting = DmeBuilder::new(n, d)
+            .codec(CodecSpec::Lq { q })
+            .seed(seed)
+            .diagnostics(true)
+            .build();
+        for round in 0..4 {
+            let (estimate, outputs, leader) = scalar_star_round(&inputs, q, y, seed, round);
+            let s = streaming.round_with_y(&inputs, y);
+            let c = collecting.round_with_y(&inputs, y);
+            assert_eq!(s.leader, Some(leader), "n={n} round={round}");
+            assert_eq!(s.estimate, estimate, "n={n} round={round} streaming");
+            assert_eq!(c.outputs, outputs, "n={n} round={round} outputs");
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
 // Parity tests
 // ----------------------------------------------------------------------
 
