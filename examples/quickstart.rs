@@ -15,6 +15,11 @@
 //!    `BitWriter::push_block`): the write-side twin of (5) — block
 //!    kernels behind `encode_into` plus a chunk-parallel encode for huge
 //!    gradients, all bit-identical to the scalar encode.
+//! 7. Batched rounds (`DmeSession::round_batch_with_y`): ship many
+//!    vectors — e.g. every layer gradient of an SGD step — as slots of
+//!    one batched round: a single command/response crossing per worker,
+//!    uploads staged in a pooled packet arena, per-slot results
+//!    bit-identical to sequential rounds.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -169,5 +174,49 @@ fn main() {
     dme::quant::encode_chunked(&big_lq, &grad, &mut par_msg, 8192); // cores
     println!("== vectorized encode plane (quant::encode_chunked) ==");
     println!("gradient dims      : {big_d} → {} wire bits", seq_msg.bits);
-    println!("chunk-parallel == sequential encode: {}", par_msg == seq_msg);
+    println!("chunk-parallel == sequential encode: {}\n", par_msg == seq_msg);
+
+    // ---------------------------------------------------------------
+    // 7. Batched per-layer SGD rounds. An SGD step ships one gradient
+    //    *per layer* — here four layers of very different widths — and
+    //    the batched control plane exchanges all of them in ONE
+    //    command/response crossing per worker: uploads are pre-encoded
+    //    back-to-back into a pooled packet arena, per-slot shared
+    //    randomness comes from one fan-out, and every slot is
+    //    bit-identical to the sequential round at the same index
+    //    (pinned by rust/tests/session_parity.rs). This is how
+    //    opt::mlp::train_distributed aggregates its layers.
+    // ---------------------------------------------------------------
+    let layer_dims = [512usize, 64, 256, 4]; // w1, b1, w2, b2
+    let slots: Vec<Vec<Vec<f64>>> = layer_dims
+        .iter()
+        .map(|&dl| {
+            (0..n)
+                .map(|_| (0..dl).map(|_| 0.3 + rng.uniform(-0.2, 0.2)).collect())
+                .collect()
+        })
+        .collect();
+    let ys = [1.0, 1.0, 1.0, 1.0]; // per-layer distance bounds
+    let mut batched = DmeBuilder::new(n, 512).codec(CodecSpec::Lq { q }).seed(7).build();
+    let outs = batched.round_batch_with_y(&slots, &ys);
+    println!("== batched per-layer rounds (DmeSession::round_batch_with_y) ==");
+    for (li, o) in outs.iter().enumerate() {
+        let mu_l = mean_vecs(&slots[li]);
+        println!(
+            "layer {li} (d={:>3}): slot round={} leader={:?} agree={} ‖EST − μ‖∞={:.4}",
+            layer_dims[li],
+            o.round,
+            o.leader,
+            o.agreement,
+            dist_inf(&o.estimate, &mu_l),
+        );
+    }
+    // The batch is pure scheduling: replaying the slots as sequential
+    // rounds on a fresh session reproduces every estimate exactly.
+    let mut sequential = DmeBuilder::new(n, 512).codec(CodecSpec::Lq { q }).seed(7).build();
+    let same = outs.iter().enumerate().all(|(li, o)| {
+        sequential.round_with_y(&slots[li], ys[li]).estimate == o.estimate
+    });
+    println!("batched == sequential rounds, slot for slot: {same}");
+    println!("(4 layers, 1 worker crossing — the control-plane cost of a single round)");
 }

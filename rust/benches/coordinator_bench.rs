@@ -20,6 +20,12 @@
 //! (`encode_into`) vs the chunk-parallel `encode_chunked` — the paper's
 //! deployment has every one of n machines encoding each round, so this
 //! is the plane that dominates round latency at scale.
+//!
+//! The `batch_bench` section measures the batched round *control plane*:
+//! B sequential `round_with_y` calls vs one `round_batch_with_y` of B
+//! slots (bit-identical per slot — pinned by `session_parity`), at
+//! B ∈ {1, 8, 64}, d ∈ {128, 4096}, star and tree. The gap is the
+//! per-round crossing + staging cost the batch amortizes.
 
 use dme::bench::Bencher;
 use dme::coordinator::{
@@ -82,6 +88,50 @@ fn main() {
     session_bench(&mut b);
     fold_bench(&mut b);
     encode_plane_bench(&mut b);
+    batch_bench(&mut b);
+
+    b.write_json("coordinator_bench").expect("write bench json");
+}
+
+/// Control-plane amortization: B sequential rounds vs one batched call
+/// of B slots over the same persistent session. Throughput denominators
+/// are B·n·d, so the rows are directly comparable per element.
+fn batch_bench(b: &mut Bencher) {
+    println!("# batch_bench — sequential rounds vs round_batch\n");
+    let n = 8;
+    for topology in [dme::coordinator::Topology::Star, dme::coordinator::Topology::Tree { m: n }] {
+        for d in [128usize, 4096] {
+            let xs = inputs(n, d, 17);
+            for bsz in [1usize, 8, 64] {
+                let label = topology.label();
+                let mut seq = DmeBuilder::new(n, d).topology(topology).seed(9).build();
+                b.bench(
+                    &format!("{label} d={d} B={bsz} sequential"),
+                    Some((bsz * n * d) as u64),
+                    || {
+                        let mut last = 0.0;
+                        for _ in 0..bsz {
+                            last = seq.round_with_y(&xs, 1.0).estimate[0];
+                        }
+                        last
+                    },
+                );
+                let slots = vec![xs.clone(); bsz];
+                let ys = vec![1.0; bsz];
+                let mut batched = DmeBuilder::new(n, d).topology(topology).seed(9).build();
+                let mut outcomes = Vec::new();
+                b.bench(
+                    &format!("{label} d={d} B={bsz} round_batch"),
+                    Some((bsz * n * d) as u64),
+                    || {
+                        batched.round_batch_into(&slots, &ys, &mut outcomes);
+                        outcomes[0].estimate[0]
+                    },
+                );
+            }
+            println!();
+        }
+    }
 }
 
 /// Write-side twin of `fold_bench`: one machine's per-round encode at

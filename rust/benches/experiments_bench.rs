@@ -20,6 +20,7 @@ fn main() {
         scale: 0.08,
         seeds: 1,
         out_dir: None,
+        batch: 1,
     };
     for id in exp::ALL_IDS {
         b.bench(&format!("exp {id} (scale=0.08)"), None, || {
@@ -28,4 +29,6 @@ fn main() {
             r.len()
         });
     }
+
+    b.write_json("experiments_bench").expect("write bench json");
 }

@@ -164,4 +164,6 @@ fn main() {
     }
 
     encode_bench(&mut b);
+
+    b.write_json("quant_bench").expect("write bench json");
 }

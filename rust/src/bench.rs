@@ -4,7 +4,16 @@
 //! Provides warmup, adaptive iteration count targeting a fixed measuring
 //! window, and median / p10 / p99 statistics. Used by the `benches/`
 //! targets (`cargo bench`, `harness = false`).
+//!
+//! Every bench target finishes with [`Bencher::write_json`], emitting a
+//! machine-readable `BENCH_<name>.json` summary (schema documented in
+//! `rust/benches/README.md`) so per-case ns/op is trackable across PRs.
+//! Passing `--smoke` to a bench binary (CI does) runs exactly one
+//! iteration per case — enough to exercise the code and produce the
+//! JSON without paying measurement time.
 
+use crate::config::Json;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// One benchmark's results.
@@ -83,9 +92,23 @@ impl Bencher {
         Self::default()
     }
 
-    /// Quick profile for CI-ish runs (`DME_BENCH_FAST=1`).
+    /// One iteration per case, no warmup — the CI smoke profile: runs
+    /// every benchmark body once and still emits the JSON summary.
+    pub fn smoke() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_millis(0),
+            min_samples: 1,
+            results: Vec::new(),
+        }
+    }
+
+    /// Profile from the invocation: `--smoke` (one iteration per case,
+    /// CI), `DME_BENCH_FAST=1` (short windows), else the default.
     pub fn from_env() -> Self {
-        if std::env::var("DME_BENCH_FAST").is_ok() {
+        if std::env::args().any(|a| a == "--smoke") {
+            Self::smoke()
+        } else if std::env::var("DME_BENCH_FAST").is_ok() {
             Bencher {
                 warmup: Duration::from_millis(20),
                 measure: Duration::from_millis(100),
@@ -136,6 +159,49 @@ impl Bencher {
     pub fn results(&self) -> &[BenchStats] {
         &self.results
     }
+
+    /// The machine-readable summary (`BENCH_<name>.json` schema v1 — see
+    /// `rust/benches/README.md`): per-case median/p10/p99/mean ns per
+    /// iteration, iteration count, and the optional throughput
+    /// denominator.
+    pub fn to_json(&self, bench_name: &str) -> Json {
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|s| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(s.name.clone()));
+                o.insert("iters".to_string(), Json::Num(s.iters as f64));
+                o.insert("median_ns".to_string(), Json::Num(s.median.as_nanos() as f64));
+                o.insert("p10_ns".to_string(), Json::Num(s.p10.as_nanos() as f64));
+                o.insert("p99_ns".to_string(), Json::Num(s.p99.as_nanos() as f64));
+                o.insert("mean_ns".to_string(), Json::Num(s.mean.as_nanos() as f64));
+                o.insert(
+                    "elems_per_iter".to_string(),
+                    match s.elems_per_iter {
+                        Some(e) => Json::Num(e as f64),
+                        None => Json::Null,
+                    },
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str(bench_name.to_string()));
+        root.insert("schema".to_string(), Json::Num(1.0));
+        root.insert("cases".to_string(), Json::Arr(cases));
+        Json::Obj(root)
+    }
+
+    /// Write `BENCH_<name>.json` into the working directory and return
+    /// its path. Bench targets call this last; CI smoke runs assert the
+    /// file parses.
+    pub fn write_json(&self, bench_name: &str) -> std::io::Result<String> {
+        let path = format!("BENCH_{bench_name}.json");
+        std::fs::write(&path, format!("{}\n", self.to_json(bench_name)))?;
+        println!("[saved {path}: {} cases]", self.results.len());
+        Ok(path)
+    }
 }
 
 #[cfg(test)]
@@ -156,6 +222,25 @@ mod tests {
         assert!(s.iters >= 5);
         assert!(s.p10 <= s.median);
         assert!(s.median <= s.p99);
+    }
+
+    #[test]
+    fn json_summary_round_trips_through_the_parser() {
+        let mut b = Bencher::smoke();
+        b.bench("case-a", Some(64), || 1 + 1);
+        b.bench("case-b", None, || 2 + 2);
+        let j = b.to_json("unit");
+        let parsed = Json::parse(&j.to_string()).expect("self-emitted json parses");
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("unit"));
+        assert_eq!(parsed.get("schema").unwrap().as_f64(), Some(1.0));
+        let cases = parsed.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].get("name").unwrap().as_str(), Some("case-a"));
+        assert_eq!(cases[0].get("elems_per_iter").unwrap().as_f64(), Some(64.0));
+        assert_eq!(cases[1].get("elems_per_iter"), Some(&Json::Null));
+        assert!(cases[0].get("median_ns").unwrap().as_f64().is_some());
+        // Smoke profile: exactly one iteration per case.
+        assert_eq!(cases[0].get("iters").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

@@ -331,6 +331,10 @@ pub struct RunConfig {
     /// `dme vr`: use the error-detecting Algorithm 6 instead of the
     /// Chebyshev reduction.
     pub robust: bool,
+    /// Batched-round width (`dme me`/`dme vr`/`dme exp`): run this many
+    /// rounds as slots of one `round_batch` call — one worker channel
+    /// crossing per batch instead of per round. 1 = sequential rounds.
+    pub batch: usize,
 }
 
 impl Default for RunConfig {
@@ -346,6 +350,7 @@ impl Default for RunConfig {
             y_slack: 1.5,
             topology: "both".to_string(),
             robust: true,
+            batch: 1,
         }
     }
 }
@@ -369,6 +374,12 @@ impl RunConfig {
             "lr" => self.lr = parse!(),
             "samples" => self.samples = parse!(),
             "y_slack" => self.y_slack = parse!(),
+            "batch" => {
+                self.batch = parse!();
+                if self.batch == 0 {
+                    return Err(format!("bad value '{value}' for batch (must be >= 1)"));
+                }
+            }
             "topology" => self.topology = value.to_string(),
             "robust" => match value {
                 "1" | "true" | "yes" => self.robust = true,
@@ -420,6 +431,16 @@ mod tests {
         assert_eq!(c.q, 64);
         assert!(c.apply("bogus", "1").is_err());
         assert!(c.apply("n", "xyz").is_err());
+    }
+
+    #[test]
+    fn batch_key() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.batch, 1);
+        c.apply("batch", "64").unwrap();
+        assert_eq!(c.batch, 64);
+        assert!(c.apply("batch", "0").is_err());
+        assert!(c.apply("batch", "x").is_err());
     }
 
     #[test]

@@ -44,6 +44,32 @@
 //! [`crate::quant::encode_chunked`], the write-side twin of the chunked
 //! fold.
 //!
+//! With the data plane vectorized, the per-round *control plane* — one
+//! command/response channel crossing per worker (~20 µs/machine), one
+//! staged wire `Message` per worker, one shared-randomness derivation —
+//! dominates at small-to-medium `d`. The batch round plane (§Perf)
+//! amortizes all three: [`DmeSession::round_batch`] (and
+//! `round_batch_with_y` / `round_vr_batch`) processes `B` vectors per
+//! machine with **one** crossing per worker per batch. Inputs and
+//! outputs travel as flat per-worker arenas (slot vectors concatenated,
+//! recycled across batches); each worker pre-encodes all its uploads
+//! back-to-back through the fused block kernels into a pooled
+//! [`crate::quant::PacketArena`] (one recycled `Vec<u8>` of
+//! length-prefixed packets — replacing the per-round staged `Message`);
+//! per-slot shared randomness comes from a single
+//! [`crate::rng::fork_round_seeds`] fan-out per batch; and the leader
+//! folds each slot through the same streaming
+//! `decode_accumulate_into` path as sequential rounds. The batch is a
+//! pure *scheduling* change: slot `b` of a batch starting at round `r`
+//! is bit-identical — estimate, outputs, and per-machine traffic — to a
+//! sequential round at index `r + b` with the same `(seed, y)`, pinned
+//! by `rust/tests/session_parity.rs`. Steady-state batch allocation is
+//! O(1): input/output arenas, traffic tallies, and the packet arena are
+//! recycled, and `round_batch_into` additionally recycles the caller's
+//! outcome buffers. (Per-slot codec construction — the shared-randomness
+//! dither offsets — and the wire packets themselves are data-plane costs
+//! identical to sequential rounds.)
+//!
 //! Protocol behavior is bit-identical to the legacy one-shot functions
 //! (`mean_estimation_star`, `mean_estimation_tree`,
 //! `robust_variance_reduction`) for the same `(seed, round)` — those now
@@ -54,8 +80,8 @@ use super::topology::Topology;
 use super::tree::tree_round_schedule;
 use super::variance_reduction::{robust_vr_core, vr_y_bound};
 use super::{CodecSpec, YEstimator, YPolicy};
-use crate::quant::{CubicLattice, LatticeQuantizer, Message, VectorCodec};
-use crate::rng::{hash2, Rng};
+use crate::quant::{CubicLattice, LatticeQuantizer, Message, PacketArena, VectorCodec};
+use crate::rng::{fork_round_seeds, hash2, Rng};
 use crate::sim::{summarize, Cluster, Endpoint, Packet, Traffic, TrafficSummary};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -121,6 +147,42 @@ impl RoundOutcome {
             .map(|t| t.sent_bits)
             .max()
             .unwrap_or(0)
+    }
+
+    /// Reset every field for reuse, keeping buffer capacity — the batch
+    /// plane's outcome recycling (see [`DmeSession::round_batch_into`]).
+    /// The exhaustive destructuring makes adding a `RoundOutcome` field
+    /// without updating this reset a compile error, so recycled outcomes
+    /// can never leak a stale field across batches.
+    fn reset_for_reuse(&mut self) {
+        let RoundOutcome {
+            round,
+            estimate,
+            agreement,
+            y_used,
+            leader,
+            leaves,
+            q_used,
+            rounds_stage1,
+            rounds_stage2,
+            outputs,
+            decoded_at_leader,
+            round_traffic,
+            traffic,
+        } = self;
+        *round = 0;
+        estimate.clear();
+        *agreement = true;
+        *y_used = 0.0;
+        *leader = None;
+        leaves.clear();
+        *q_used = None;
+        rounds_stage1.clear();
+        rounds_stage2.clear();
+        outputs.clear();
+        decoded_at_leader.clear();
+        round_traffic.clear();
+        *traffic = TrafficSummary::default();
     }
 }
 
@@ -247,6 +309,7 @@ impl DmeBuilder {
             round: 0,
             last_snapshot: vec![Traffic::default(); self.n],
             bufs: (0..self.n).map(|_| None).collect(),
+            batch_bufs: (0..self.n).map(|_| None).collect(),
         }
     }
 }
@@ -270,12 +333,22 @@ pub struct DmeSession {
     last_snapshot: Vec<Traffic>,
     /// Recycled per-machine (input, output) buffers.
     bufs: Vec<Option<(Vec<f64>, Vec<f64>)>>,
+    /// Recycled per-machine batch arenas (§Perf: one flat input arena,
+    /// one output arena, one tally vector per worker, reused across
+    /// `round_batch` calls).
+    batch_bufs: Vec<Option<BatchCmd>>,
 }
 
 struct Workers {
-    cmd_tx: Vec<Sender<RoundCmd>>,
-    out_rx: Vec<Receiver<WorkerOut>>,
+    cmd_tx: Vec<Sender<Cmd>>,
+    out_rx: Vec<Receiver<WorkerMsg>>,
     handles: Vec<JoinHandle<()>>,
+}
+
+/// One driver→worker channel crossing: a single round or a whole batch.
+enum Cmd {
+    Round(RoundCmd),
+    Batch(BatchCmd),
 }
 
 /// One round's instruction to a machine thread. The vectors are recycled
@@ -291,6 +364,29 @@ struct RoundCmd {
     out: Vec<f64>,
 }
 
+/// A batch of `B` rounds in one crossing (§Perf). All vectors are
+/// recycled driver-owned arenas: `input`/`out` hold the machine's `B`
+/// slot vectors concatenated in slot order (`dims[b]` coordinates each),
+/// `traffic` arrives zeroed and returns the worker's exact per-slot
+/// sent/received tally (the per-slot decomposition of the cluster
+/// meters, which only observe the batch total).
+#[derive(Default)]
+struct BatchCmd {
+    first_round: u64,
+    /// Explicit distance bound per slot.
+    ys: Vec<f64>,
+    /// Per-slot dimensions (identical across machines).
+    dims: Vec<usize>,
+    input: Vec<f64>,
+    out: Vec<f64>,
+    traffic: Vec<Traffic>,
+}
+
+enum WorkerMsg {
+    Round(WorkerOut),
+    Batch(BatchOut),
+}
+
 struct WorkerOut {
     input: Vec<f64>,
     output: Vec<f64>,
@@ -300,6 +396,20 @@ struct WorkerOut {
     /// Leader only, when `RoundCmd::measure` asked for it: the max
     /// pairwise ℓ∞ distance of the decoded points (§9.2 `y` policies).
     spread: Option<f64>,
+}
+
+/// A batch's response: the same recycled arenas handed back, plus (with
+/// diagnostics on) the decoded per-machine points of every slot this
+/// machine led.
+struct BatchOut {
+    ys: Vec<f64>,
+    dims: Vec<usize>,
+    input: Vec<f64>,
+    out: Vec<f64>,
+    traffic: Vec<Traffic>,
+    /// `decoded[b]` is non-empty only for slots this machine led while
+    /// diagnostics were on.
+    decoded: Vec<Vec<Vec<f64>>>,
 }
 
 /// What a cluster round produced before traffic accounting.
@@ -316,6 +426,33 @@ struct Collected {
 
 fn star_leader(seed: u64, round: u64, n: usize) -> usize {
     Rng::new(hash2(seed, round ^ 0x1EAD)).next_below(n as u64) as usize
+}
+
+/// Take a recycled outcome from `pool` (every field reset, buffer
+/// capacity kept) or build an empty one — the batch plane's outcome
+/// recycling (§Perf; see [`DmeSession::round_batch_into`]).
+fn recycle_outcome(pool: &mut Vec<RoundOutcome>) -> RoundOutcome {
+    match pool.pop() {
+        Some(mut o) => {
+            o.reset_for_reuse();
+            o
+        }
+        None => RoundOutcome {
+            round: 0,
+            estimate: Vec::new(),
+            agreement: true,
+            y_used: 0.0,
+            leader: None,
+            leaves: Vec::new(),
+            q_used: None,
+            rounds_stage1: Vec::new(),
+            rounds_stage2: Vec::new(),
+            outputs: Vec::new(),
+            decoded_at_leader: Vec::new(),
+            round_traffic: Vec::new(),
+            traffic: TrafficSummary::default(),
+        },
+    }
 }
 
 impl DmeSession {
@@ -361,6 +498,86 @@ impl DmeSession {
         let round = self.next_round();
         let parts = self.run_cluster_round(inputs, y, round, false);
         self.outcome(round, y, parts)
+    }
+
+    /// Run `B = inputs.len()` MeanEstimation rounds in one batch at the
+    /// session's current `y` (§Perf): `inputs[b]` is slot `b`'s
+    /// per-machine vectors — exactly the argument a sequential
+    /// [`DmeSession::round`] call would take. The whole batch costs
+    /// **one** command/response channel crossing per worker; each worker
+    /// pre-encodes all its uploads back-to-back into a pooled
+    /// [`PacketArena`] and per-slot shared randomness is derived by a
+    /// single [`fork_round_seeds`] fan-out. Slot `b` is bit-identical —
+    /// estimate, outputs, per-machine traffic — to a sequential round at
+    /// index `first_round + b` (pinned by `rust/tests/session_parity.rs`).
+    ///
+    /// Slots may have different dimensions than the session's `d` (the
+    /// per-layer SGD use: one slot per layer gradient); stateful codecs
+    /// (EF-SignSGD, PowerSGD, Top-K) keep one error memory at dimension
+    /// `d` and therefore require uniform `d`-sized slots. Adaptive `y`
+    /// policies measure at the leader *between* rounds, which a batch
+    /// deliberately amortizes away — sessions with a non-`Fixed` policy
+    /// should either drive sequential [`DmeSession::round`] calls or pass
+    /// explicit per-slot bounds via [`DmeSession::round_batch_with_y`].
+    pub fn round_batch(&mut self, inputs: &[Vec<Vec<f64>>]) -> Vec<RoundOutcome> {
+        assert_eq!(
+            self.y_est.policy,
+            YPolicy::Fixed,
+            "adaptive y policies measure at the leader between rounds; use \
+             sequential round() or explicit bounds via round_batch_with_y"
+        );
+        let ys = vec![self.y_est.y; inputs.len()];
+        let mut outcomes = Vec::new();
+        self.round_batch_core(inputs, &ys, &mut outcomes);
+        outcomes
+    }
+
+    /// [`DmeSession::round_batch`] with an explicit distance bound per
+    /// slot, leaving the session's `y` estimator untouched (the batched
+    /// form of [`DmeSession::round_with_y`]). `ys[b]` is slot `b`'s
+    /// bound, so per-layer batches can carry per-layer bounds.
+    pub fn round_batch_with_y(
+        &mut self,
+        inputs: &[Vec<Vec<f64>>],
+        ys: &[f64],
+    ) -> Vec<RoundOutcome> {
+        let mut outcomes = Vec::new();
+        self.round_batch_core(inputs, ys, &mut outcomes);
+        outcomes
+    }
+
+    /// Zero-steady-state-allocation form of
+    /// [`DmeSession::round_batch_with_y`]: outcome buffers already in
+    /// `outcomes` are recycled (cleared, capacity kept) before it is
+    /// refilled with the batch's `B` outcomes, so a driver passing the
+    /// same vector back every batch allocates nothing once warm.
+    pub fn round_batch_into(
+        &mut self,
+        inputs: &[Vec<Vec<f64>>],
+        ys: &[f64],
+        outcomes: &mut Vec<RoundOutcome>,
+    ) {
+        self.round_batch_core(inputs, ys, outcomes);
+    }
+
+    /// Batched VarianceReduction: each slot holds i.i.d. unbiased
+    /// estimates with standard deviation ≤ `sigma`. The Chebyshev
+    /// reduction maps the whole batch onto [`DmeSession::round_batch_with_y`]
+    /// at `y = 2σ√(αn)` (one crossing per worker); error-detecting
+    /// robustness runs its escalation protocol off-cluster per slot —
+    /// there is no worker crossing to amortize — so it falls back to
+    /// sequential [`DmeSession::round_vr`] calls.
+    pub fn round_vr_batch(&mut self, inputs: &[Vec<Vec<f64>>], sigma: f64) -> Vec<RoundOutcome> {
+        match self.robustness {
+            Robustness::Chebyshev => {
+                let y = vr_y_bound(sigma, self.n, self.alpha);
+                let ys = vec![y; inputs.len()];
+                self.round_batch_with_y(inputs, &ys)
+            }
+            Robustness::ErrorDetecting { .. } => {
+                inputs.iter().map(|slot| self.round_vr(slot, sigma)).collect()
+            }
+        }
     }
 
     /// Run one VarianceReduction round: inputs are i.i.d. unbiased
@@ -532,8 +749,8 @@ impl DmeSession {
         let mut out_rx = Vec::with_capacity(self.n);
         let mut handles = Vec::with_capacity(self.n);
         for ep in endpoints {
-            let (ctx, crx) = channel::<RoundCmd>();
-            let (otx, orx) = channel::<WorkerOut>();
+            let (ctx, crx) = channel::<Cmd>();
+            let (otx, orx) = channel::<WorkerMsg>();
             cmd_tx.push(ctx);
             out_rx.push(orx);
             let spec = self.spec;
@@ -548,7 +765,7 @@ impl DmeSession {
                         Topology::Star => {
                             star_worker(ep, spec, d, seed, diagnostics, crx, otx)
                         }
-                        Topology::Tree { m } => tree_worker(ep, m, d, seed, crx, otx),
+                        Topology::Tree { m } => tree_worker(ep, m, seed, crx, otx),
                     })
                     .expect("spawn machine thread"),
             );
@@ -560,6 +777,173 @@ impl DmeSession {
         });
     }
 
+    /// Shared-randomness protocol stats for one round index, re-derived
+    /// driver-side for reporting (every machine derives the same).
+    fn slot_schedule(&self, round: u64, y: f64) -> (Option<usize>, Vec<usize>, Option<u32>) {
+        match self.topology {
+            Topology::Star => (Some(star_leader(self.seed, round, self.n)), Vec::new(), None),
+            Topology::Tree { m } => {
+                let (leaves, _side, q) = tree_round_schedule(self.n, m, y, self.seed, round);
+                (None, leaves, Some(q))
+            }
+        }
+    }
+
+    /// The batch round plane's driver side (§Perf, module docs): validate
+    /// the slots, advance the round window by `B`, ship **one**
+    /// [`Cmd::Batch`] per worker, and decompose the responses into
+    /// per-slot outcomes. Per-slot traffic deltas come from the workers'
+    /// exact tallies (the cluster meters only observe the batch total);
+    /// their prefix sums reproduce the cumulative summaries sequential
+    /// rounds would have reported, and the decomposition is checked
+    /// against the meters in debug builds.
+    fn round_batch_core(
+        &mut self,
+        inputs: &[Vec<Vec<f64>>],
+        ys: &[f64],
+        outcomes: &mut Vec<RoundOutcome>,
+    ) {
+        let b_total = inputs.len();
+        assert_eq!(ys.len(), b_total, "one distance bound per slot");
+        let mut pool = std::mem::take(outcomes);
+        if b_total == 0 {
+            *outcomes = pool;
+            return;
+        }
+        let n = self.n;
+        let stateful = self.spec.is_stateful();
+        let mut dims = Vec::with_capacity(b_total);
+        let mut total = 0usize;
+        for (b, slot) in inputs.iter().enumerate() {
+            assert_eq!(slot.len(), n, "slot {b}: one input vector per machine");
+            let d_b = slot[0].len();
+            assert!(d_b >= 1, "slot {b}: need at least one dimension");
+            for x in slot {
+                assert_eq!(x.len(), d_b, "slot {b}: input dimension mismatch");
+            }
+            if stateful {
+                assert_eq!(
+                    d_b, self.d,
+                    "stateful codecs carry one error memory at the session dimension"
+                );
+            }
+            dims.push(d_b);
+            total += d_b;
+        }
+        for (b, y) in ys.iter().enumerate() {
+            assert!(*y > 0.0, "slot {b}: y must be positive");
+        }
+        let first_round = self.round;
+        self.round += b_total as u64;
+
+        if n == 1 {
+            // Degenerate cluster, slot by slot (matches the sequential
+            // n = 1 path: the machine outputs its own input, no wire).
+            for (b, slot) in inputs.iter().enumerate() {
+                let r = first_round + b as u64;
+                let (leader, leaves, q_used) = self.slot_schedule(r, ys[b]);
+                let mut oc = recycle_outcome(&mut pool);
+                oc.round = r;
+                oc.estimate.extend_from_slice(&slot[0]);
+                oc.agreement = true;
+                oc.y_used = ys[b];
+                oc.leader = leader;
+                oc.leaves = leaves;
+                oc.q_used = q_used;
+                if self.diagnostics {
+                    oc.outputs.push(slot[0].clone());
+                    if oc.leader.is_some() {
+                        oc.decoded_at_leader.push(slot[0].clone());
+                    }
+                }
+                let (rt, summary) = self.take_round_traffic();
+                oc.round_traffic = rt;
+                oc.traffic = summary;
+                outcomes.push(oc);
+            }
+            return;
+        }
+
+        self.ensure_workers();
+        let workers = self.workers.as_ref().expect("workers spawned");
+        for i in 0..n {
+            let mut bc = self.batch_bufs[i].take().unwrap_or_default();
+            bc.first_round = first_round;
+            bc.ys.clear();
+            bc.ys.extend_from_slice(ys);
+            bc.dims.clear();
+            bc.dims.extend_from_slice(&dims);
+            bc.input.clear();
+            for slot in inputs {
+                bc.input.extend_from_slice(&slot[i]);
+            }
+            bc.out.clear();
+            bc.out.resize(total, 0.0);
+            bc.traffic.clear();
+            bc.traffic.resize(b_total, Traffic::default());
+            workers.cmd_tx[i]
+                .send(Cmd::Batch(bc))
+                .expect("machine thread alive");
+        }
+        let mut outs: Vec<BatchOut> = Vec::with_capacity(n);
+        for rx in workers.out_rx.iter() {
+            match rx.recv().expect("machine thread alive") {
+                WorkerMsg::Batch(bo) => outs.push(bo),
+                WorkerMsg::Round(_) => unreachable!("single-round reply to a batch command"),
+            }
+        }
+
+        let mut cum = self.last_snapshot.clone();
+        let mut lo = 0usize;
+        for b in 0..b_total {
+            let hi = lo + dims[b];
+            let r = first_round + b as u64;
+            let (leader, leaves, q_used) = self.slot_schedule(r, ys[b]);
+            let est = &outs[0].out[lo..hi];
+            let mut oc = recycle_outcome(&mut pool);
+            oc.round = r;
+            oc.estimate.extend_from_slice(est);
+            oc.agreement = outs.iter().all(|o| o.out[lo..hi] == *est);
+            oc.y_used = ys[b];
+            oc.leader = leader;
+            oc.leaves = leaves;
+            oc.q_used = q_used;
+            if self.diagnostics {
+                for o in &outs {
+                    oc.outputs.push(o.out[lo..hi].to_vec());
+                }
+                if let Some(l) = leader {
+                    if let Some(dec) = outs[l].decoded.get(b) {
+                        oc.decoded_at_leader = dec.clone();
+                    }
+                }
+            }
+            for (v, o) in outs.iter().enumerate() {
+                let t = o.traffic[b];
+                oc.round_traffic.push(t);
+                cum[v].accumulate(&t);
+            }
+            oc.traffic = summarize(&cum);
+            outcomes.push(oc);
+            lo = hi;
+        }
+        self.last_snapshot = self.cluster.traffic();
+        debug_assert_eq!(
+            cum, self.last_snapshot,
+            "per-slot tallies must decompose the cluster meters exactly"
+        );
+        for (i, bo) in outs.into_iter().enumerate() {
+            self.batch_bufs[i] = Some(BatchCmd {
+                first_round: 0,
+                ys: bo.ys,
+                dims: bo.dims,
+                input: bo.input,
+                out: bo.out,
+                traffic: bo.traffic,
+            });
+        }
+    }
+
     fn run_cluster_round(
         &mut self,
         inputs: &[Vec<f64>],
@@ -569,13 +953,7 @@ impl DmeSession {
     ) -> Collected {
         // Protocol stats every machine derives from shared randomness —
         // derived once more here so the driver can report them.
-        let (leader, leaves, q_used) = match self.topology {
-            Topology::Star => (Some(star_leader(self.seed, round, self.n)), Vec::new(), None),
-            Topology::Tree { m } => {
-                let (leaves, _side, q) = tree_round_schedule(self.n, m, y, self.seed, round);
-                (None, leaves, Some(q))
-            }
-        };
+        let (leader, leaves, q_used) = self.slot_schedule(round, y);
 
         if self.n == 1 {
             // Degenerate cluster: the machine outputs its own input, no
@@ -608,13 +986,13 @@ impl DmeSession {
                 .unwrap_or_else(|| (vec![0.0; d], vec![0.0; d]));
             inbuf.copy_from_slice(input);
             workers.cmd_tx[i]
-                .send(RoundCmd {
+                .send(Cmd::Round(RoundCmd {
                     round,
                     y,
                     measure,
                     input: inbuf,
                     out: outbuf,
-                })
+                }))
                 .expect("machine thread alive");
         }
         let mut estimate = Vec::new();
@@ -623,7 +1001,10 @@ impl DmeSession {
         let mut decoded_at_leader = Vec::new();
         let mut spread = None;
         for (i, rx) in workers.out_rx.iter().enumerate() {
-            let wo = rx.recv().expect("machine thread alive");
+            let wo = match rx.recv().expect("machine thread alive") {
+                WorkerMsg::Round(wo) => wo,
+                WorkerMsg::Batch(_) => unreachable!("batch reply to a single-round command"),
+            };
             if i == 0 {
                 estimate = wo.output.clone();
             } else if agreement && wo.output != estimate {
@@ -683,8 +1064,8 @@ fn star_worker(
     d: usize,
     seed: u64,
     diagnostics: bool,
-    crx: Receiver<RoundCmd>,
-    otx: Sender<WorkerOut>,
+    crx: Receiver<Cmd>,
+    otx: Sender<WorkerMsg>,
 ) {
     let id = ep.id;
     let n = ep.n;
@@ -693,19 +1074,54 @@ fn star_worker(
     // Leader-role scratch, sized lazily on first collecting leadership.
     let mut decoded: Vec<Vec<f64>> = Vec::new();
     let mut mu = vec![0.0; d];
+    // Batch-plane scratch (§Perf): the pooled upload arena and a fold
+    // accumulator sized to the largest slot seen, both recycled across
+    // batches.
+    let mut arena = PacketArena::new();
+    let mut batch_mu: Vec<f64> = Vec::new();
     // Stateful codecs (EF-SignSGD, PowerSGD, Top-K) carry error memory
     // across rounds and must be built once per machine (the Aggregator
     // contract — see `CodecSpec::is_stateful`); shared-randomness codecs
     // are rebuilt from (seed, round) every round.
     let mut held_codec: Option<Box<dyn VectorCodec>> = None;
-    while let Ok(RoundCmd {
-        round,
-        y,
-        measure,
-        input,
-        mut out,
-    }) = crx.recv()
-    {
+    while let Ok(cmd) = crx.recv() {
+        let RoundCmd {
+            round,
+            y,
+            measure,
+            input,
+            mut out,
+        } = match cmd {
+            Cmd::Round(rc) => rc,
+            Cmd::Batch(mut bc) => {
+                let slot_decoded = star_batch_slots(
+                    &mut ep,
+                    spec,
+                    seed,
+                    diagnostics,
+                    &mut bc,
+                    &mut stash,
+                    &mut msg,
+                    &mut batch_mu,
+                    &mut arena,
+                    &mut held_codec,
+                );
+                if otx
+                    .send(WorkerMsg::Batch(BatchOut {
+                        ys: bc.ys,
+                        dims: bc.dims,
+                        input: bc.input,
+                        out: bc.out,
+                        traffic: bc.traffic,
+                        decoded: slot_decoded,
+                    }))
+                    .is_err()
+                {
+                    break;
+                }
+                continue;
+            }
+        };
         let leader = star_leader(seed, round, n);
         if held_codec.is_none() || !spec.is_stateful() {
             held_codec = Some(spec.build(d, y, seed, round));
@@ -772,17 +1188,170 @@ fn star_worker(
             codec.decode_into(&p.msg, &input, &mut out);
         }
         if otx
-            .send(WorkerOut {
+            .send(WorkerMsg::Round(WorkerOut {
                 input,
                 output: out,
                 decoded: decoded_out,
                 spread,
-            })
+            }))
             .is_err()
         {
             break;
         }
     }
+}
+
+/// One worker's side of a whole batch (§Perf; star topology).
+///
+/// Phase 1 pre-encodes every upload — the slots this machine does *not*
+/// lead — back-to-back through the codecs' fused block kernels into the
+/// pooled [`PacketArena`], with all per-slot shared randomness derived
+/// by one [`fork_round_seeds`] fan-out. Phase 2 walks the slots in round
+/// order and plays the exact sequential protocol per slot: uploads come
+/// off the arena, leader slots stream-fold in pinned machine order
+/// (`recv_from`, machine 0 first), and every send/receive is tallied
+/// into the slot's `Traffic` entry so the driver can report per-slot
+/// deltas. Stateful codecs skip the staging phase — their error memory
+/// must advance in protocol order — and encode inline in phase 2.
+///
+/// Slot `b` is bit-identical to a sequential round at index
+/// `first_round + b`: same leader, same codec stream, same encoder
+/// randomness (`hash2(hash2(seed, round), id + 1)`), same fold order.
+#[allow(clippy::too_many_arguments)]
+fn star_batch_slots(
+    ep: &mut Endpoint,
+    spec: CodecSpec,
+    seed: u64,
+    diagnostics: bool,
+    cmd: &mut BatchCmd,
+    stash: &mut Vec<Packet>,
+    msg: &mut Message,
+    mu: &mut Vec<f64>,
+    arena: &mut PacketArena,
+    held_codec: &mut Option<Box<dyn VectorCodec>>,
+) -> Vec<Vec<Vec<f64>>> {
+    let id = ep.id;
+    let n = ep.n;
+    let b_total = cmd.dims.len();
+    let stateful = spec.is_stateful();
+    let seeds = fork_round_seeds(seed, cmd.first_round, b_total);
+    let leaders: Vec<usize> = (0..b_total)
+        .map(|b| star_leader(seed, cmd.first_round + b as u64, n))
+        .collect();
+
+    // --- Phase 1: stage the uploads into the pooled arena.
+    arena.clear();
+    let mut codecs: Vec<Option<Box<dyn VectorCodec>>> = Vec::with_capacity(b_total);
+    if stateful {
+        codecs.resize_with(b_total, || None);
+    } else {
+        let mut lo = 0usize;
+        for b in 0..b_total {
+            let d_b = cmd.dims[b];
+            let mut codec = spec.build_with(d_b, cmd.ys[b], &mut Rng::new(seeds[b]));
+            if id != leaders[b] {
+                let mut enc_rng = Rng::new(hash2(seeds[b], id as u64 + 1));
+                codec.encode_into(&cmd.input[lo..lo + d_b], &mut enc_rng, msg);
+                arena.push(msg);
+            }
+            codecs.push(Some(codec));
+            lo += d_b;
+        }
+    }
+
+    // --- Phase 2: play each slot's round.
+    let mut uploads = arena.reader();
+    let mut slot_decoded: Vec<Vec<Vec<f64>>> = if diagnostics {
+        vec![Vec::new(); b_total]
+    } else {
+        Vec::new()
+    };
+    let mut lo = 0usize;
+    for b in 0..b_total {
+        let d_b = cmd.dims[b];
+        let r = cmd.first_round + b as u64;
+        let leader = leaders[b];
+        let input = &cmd.input[lo..lo + d_b];
+        let out = &mut cmd.out[lo..lo + d_b];
+        let t = &mut cmd.traffic[b];
+        if stateful && held_codec.is_none() {
+            *held_codec = Some(spec.build(d_b, cmd.ys[b], seed, r));
+        }
+        let codec = if stateful {
+            held_codec.as_mut().expect("stateful codec built")
+        } else {
+            codecs[b].as_mut().expect("slot codec built")
+        };
+        let mut enc_rng = Rng::new(hash2(seeds[b], id as u64 + 1));
+        if id == leader {
+            if mu.len() < d_b {
+                mu.resize(d_b, 0.0);
+            }
+            let acc = &mut mu[..d_b];
+            for m in acc.iter_mut() {
+                *m = 0.0;
+            }
+            if diagnostics {
+                // Collecting path: decode per sender (pinned machine
+                // order — required in a batch, where arrival order may
+                // interleave slots), then sum in machine order; decodes
+                // are independent, so this is bit-identical to the
+                // sequential arrival-order collection.
+                let mut dec = vec![vec![0.0; d_b]; n];
+                dec[id].copy_from_slice(input);
+                for v in 0..n {
+                    if v == id {
+                        continue;
+                    }
+                    let p = ep.recv_from(v, stash);
+                    t.recv_bits += p.msg.bits;
+                    t.recv_msgs += 1;
+                    codec.decode_into(&p.msg, input, &mut dec[v]);
+                }
+                for z in &dec {
+                    crate::linalg::axpy(acc, 1.0, z);
+                }
+                slot_decoded[b] = dec;
+            } else {
+                // Streaming fold, pinned machine order (the hot path).
+                for v in 0..n {
+                    if v == id {
+                        crate::linalg::axpy(acc, 1.0, input);
+                    } else {
+                        let p = ep.recv_from(v, stash);
+                        t.recv_bits += p.msg.bits;
+                        t.recv_msgs += 1;
+                        codec.decode_accumulate_into(&p.msg, input, 1.0, acc);
+                    }
+                }
+            }
+            let inv_n = 1.0 / n as f64;
+            for m in acc.iter_mut() {
+                *m = inv_n * *m;
+            }
+            codec.encode_into(acc, &mut enc_rng, msg);
+            t.sent_bits += msg.bits * (n as u64 - 1);
+            t.sent_msgs += n as u64 - 1;
+            ep.broadcast(msg);
+            codec.decode_into(msg, input, out);
+        } else {
+            let up = if stateful {
+                codec.encode_into(input, &mut enc_rng, msg);
+                msg.clone()
+            } else {
+                uploads.next_message().expect("staged upload packet")
+            };
+            t.sent_bits += up.bits;
+            t.sent_msgs += 1;
+            ep.send(leader, up);
+            let p = ep.recv_from(leader, stash);
+            t.recv_bits += p.msg.bits;
+            t.recv_msgs += 1;
+            codec.decode_into(&p.msg, input, out);
+        }
+        lo += d_b;
+    }
+    slot_decoded
 }
 
 /// Tree machine loop — Algorithm 4. Every machine derives the full
@@ -792,120 +1361,195 @@ fn star_worker(
 /// the schedule in the same global (level, node, child) order, every
 /// receive's matching send is already issued — no deadlock. Messages and
 /// metering are bit-identical to the legacy sequential driver.
-fn tree_worker(
-    mut ep: Endpoint,
+fn tree_worker(mut ep: Endpoint, m: usize, seed: u64, crx: Receiver<Cmd>, otx: Sender<WorkerMsg>) {
+    let mut stash: Vec<Packet> = Vec::new();
+    while let Ok(cmd) = crx.recv() {
+        match cmd {
+            Cmd::Round(RoundCmd {
+                round,
+                y,
+                measure: _,
+                input,
+                mut out,
+            }) => {
+                let shared_seed = hash2(seed, round);
+                let mut tally = Traffic::default();
+                tree_slot_round(
+                    &mut ep, m, seed, shared_seed, round, y, &input, &mut out, &mut stash,
+                    &mut tally,
+                );
+                if otx
+                    .send(WorkerMsg::Round(WorkerOut {
+                        input,
+                        output: out,
+                        decoded: Vec::new(),
+                        spread: None,
+                    }))
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Cmd::Batch(mut bc) => {
+                // The batched tree plane: one crossing per worker, the
+                // per-slot shared-randomness streams derived in one
+                // fan-out, then the exact sequential tree round per slot
+                // (every receive is already sender-addressed, so slots
+                // interleave safely across machines).
+                let b_total = bc.dims.len();
+                let seeds = fork_round_seeds(seed, bc.first_round, b_total);
+                let mut lo = 0usize;
+                for b in 0..b_total {
+                    let d_b = bc.dims[b];
+                    let r = bc.first_round + b as u64;
+                    tree_slot_round(
+                        &mut ep,
+                        m,
+                        seed,
+                        seeds[b],
+                        r,
+                        bc.ys[b],
+                        &bc.input[lo..lo + d_b],
+                        &mut bc.out[lo..lo + d_b],
+                        &mut stash,
+                        &mut bc.traffic[b],
+                    );
+                    lo += d_b;
+                }
+                if otx
+                    .send(WorkerMsg::Batch(BatchOut {
+                        ys: bc.ys,
+                        dims: bc.dims,
+                        input: bc.input,
+                        out: bc.out,
+                        traffic: bc.traffic,
+                        decoded: Vec::new(),
+                    }))
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// One machine's side of one tree round — the body both the sequential
+/// loop and the batch plane execute, parameterized by the slot's
+/// `(round, y, input, out)` and tallying every send/receive into `t`
+/// (the batch plane's per-slot traffic decomposition; the sequential
+/// path discards the tally — its metering comes from the cluster).
+/// `shared_seed` must equal `hash2(seed, round)` (the batch plane
+/// derives it once per batch via [`fork_round_seeds`]).
+#[allow(clippy::too_many_arguments)]
+fn tree_slot_round(
+    ep: &mut Endpoint,
     m: usize,
-    d: usize,
     seed: u64,
-    crx: Receiver<RoundCmd>,
-    otx: Sender<WorkerOut>,
+    shared_seed: u64,
+    round: u64,
+    y: f64,
+    input: &[f64],
+    out: &mut [f64],
+    stash: &mut Vec<Packet>,
+    t: &mut Traffic,
 ) {
     let id = ep.id;
     let n = ep.n;
-    let mut stash: Vec<Packet> = Vec::new();
-    while let Ok(RoundCmd {
-        round,
-        y,
-        measure: _,
-        input,
-        mut out,
-    }) = crx.recv()
-    {
-        let (leaves, side, q) = tree_round_schedule(n, m, y, seed, round);
-        // One shared-lattice codec per round (the legacy driver rebuilds
-        // an identical one per edge; construction is deterministic in
-        // (seed, round), so one instance is equivalent).
-        let codec = {
-            let mut sr = Rng::new(hash2(seed, round));
-            LatticeQuantizer::new(CubicLattice::random_offset(d, side, &mut sr), q)
-        };
+    let d = input.len();
+    let (leaves, side, q) = tree_round_schedule(n, m, y, seed, round);
+    // One shared-lattice codec per round (the legacy driver rebuilds
+    // an identical one per edge; construction is deterministic in
+    // (seed, round), so one instance is equivalent).
+    let codec = {
+        let mut sr = Rng::new(shared_seed);
+        LatticeQuantizer::new(CubicLattice::random_offset(d, side, &mut sr), q)
+    };
 
-        // --- Upward pass: (owner, estimate-if-mine) per node, level by
-        // level; internal node j at level l is played by machine
-        // (2j + 3l) mod n.
-        let mut ests: Vec<(usize, Option<Vec<f64>>)> = leaves
-            .iter()
-            .map(|&v| (v, if v == id { Some(input.clone()) } else { None }))
-            .collect();
-        let mut level = 0usize;
-        while ests.len() > 1 {
-            level += 1;
-            let pairs = ests.len() / 2;
-            let mut next: Vec<(usize, Option<Vec<f64>>)> = Vec::with_capacity(pairs + 1);
-            for j in 0..pairs {
-                let parent = (j * 2 + level * 3) % n;
-                // Streaming fold at the inner node: both children are
-                // decode-accumulated straight into the node's estimate
-                // buffer (no per-child decoded vectors), then halved in
-                // place — bit-identical to the legacy add-then-scale.
-                let mut acc = if parent == id {
-                    Some(vec![0.0; d])
-                } else {
-                    None
-                };
-                for c in 0..2 {
-                    let idx = 2 * j + c;
-                    let child = ests[idx].0;
-                    if child == id {
-                        let est = ests[idx].1.as_ref().expect("owner holds estimate");
-                        let (msg, _pt) = codec.encode_with_point(est);
-                        if child != parent {
-                            ep.send(parent, msg);
-                        } else {
-                            // Same machine plays both roles: no wire cost.
-                            let a = acc.as_mut().expect("parent holds accumulator");
-                            codec.decode_accumulate_into(&msg, &input, 1.0, a);
-                        }
-                    } else if parent == id {
-                        let p = ep.recv_from(child, &mut stash);
+    // --- Upward pass: (owner, estimate-if-mine) per node, level by
+    // level; internal node j at level l is played by machine
+    // (2j + 3l) mod n.
+    let mut ests: Vec<(usize, Option<Vec<f64>>)> = leaves
+        .iter()
+        .map(|&v| (v, if v == id { Some(input.to_vec()) } else { None }))
+        .collect();
+    let mut level = 0usize;
+    while ests.len() > 1 {
+        level += 1;
+        let pairs = ests.len() / 2;
+        let mut next: Vec<(usize, Option<Vec<f64>>)> = Vec::with_capacity(pairs + 1);
+        for j in 0..pairs {
+            let parent = (j * 2 + level * 3) % n;
+            // Streaming fold at the inner node: both children are
+            // decode-accumulated straight into the node's estimate
+            // buffer (no per-child decoded vectors), then halved in
+            // place — bit-identical to the legacy add-then-scale.
+            let mut acc = if parent == id {
+                Some(vec![0.0; d])
+            } else {
+                None
+            };
+            for c in 0..2 {
+                let idx = 2 * j + c;
+                let child = ests[idx].0;
+                if child == id {
+                    let est = ests[idx].1.as_ref().expect("owner holds estimate");
+                    let (msg, _pt) = codec.encode_with_point(est);
+                    if child != parent {
+                        t.sent_bits += msg.bits;
+                        t.sent_msgs += 1;
+                        ep.send(parent, msg);
+                    } else {
+                        // Same machine plays both roles: no wire cost.
                         let a = acc.as_mut().expect("parent holds accumulator");
-                        codec.decode_accumulate_into(&p.msg, &input, 1.0, a);
+                        codec.decode_accumulate_into(&msg, input, 1.0, a);
                     }
+                } else if parent == id {
+                    let p = ep.recv_from(child, stash);
+                    t.recv_bits += p.msg.bits;
+                    t.recv_msgs += 1;
+                    let a = acc.as_mut().expect("parent holds accumulator");
+                    codec.decode_accumulate_into(&p.msg, input, 1.0, a);
                 }
-                if let Some(a) = acc.as_mut() {
-                    for v in a.iter_mut() {
-                        *v *= 0.5;
-                    }
+            }
+            if let Some(a) = acc.as_mut() {
+                for v in a.iter_mut() {
+                    *v *= 0.5;
                 }
-                next.push((parent, acc));
             }
-            if ests.len() % 2 == 1 {
-                // Odd node passes through unchanged.
-                next.push(ests.pop().expect("odd tail node"));
-            }
-            ests = next;
+            next.push((parent, acc));
         }
-        let (root, root_est) = ests.pop().expect("tree root");
-
-        // --- Downward broadcast over a binary tree rooted at `root`
-        // covering all machines (ids re-indexed so root is position 0);
-        // everyone relays the identical message.
-        let mypos = (id + n - root) % n;
-        let bmsg = if id == root {
-            codec.encode_with_point(root_est.as_ref().expect("root owns estimate")).0
-        } else {
-            let parent = (root + (mypos - 1) / 2) % n;
-            ep.recv_from(parent, &mut stash).msg
-        };
-        for cpos in [2 * mypos + 1, 2 * mypos + 2] {
-            if cpos < n {
-                ep.send((root + cpos) % n, bmsg.clone());
-            }
+        if ests.len() % 2 == 1 {
+            // Odd node passes through unchanged.
+            next.push(ests.pop().expect("odd tail node"));
         }
-        codec.decode_into(&bmsg, &input, &mut out);
+        ests = next;
+    }
+    let (root, root_est) = ests.pop().expect("tree root");
 
-        if otx
-            .send(WorkerOut {
-                input,
-                output: out,
-                decoded: Vec::new(),
-                spread: None,
-            })
-            .is_err()
-        {
-            break;
+    // --- Downward broadcast over a binary tree rooted at `root`
+    // covering all machines (ids re-indexed so root is position 0);
+    // everyone relays the identical message.
+    let mypos = (id + n - root) % n;
+    let bmsg = if id == root {
+        codec
+            .encode_with_point(root_est.as_ref().expect("root owns estimate"))
+            .0
+    } else {
+        let parent = (root + (mypos - 1) / 2) % n;
+        let p = ep.recv_from(parent, stash);
+        t.recv_bits += p.msg.bits;
+        t.recv_msgs += 1;
+        p.msg
+    };
+    for cpos in [2 * mypos + 1, 2 * mypos + 2] {
+        if cpos < n {
+            t.sent_bits += bmsg.bits;
+            t.sent_msgs += 1;
+            ep.send((root + cpos) % n, bmsg.clone());
         }
     }
+    codec.decode_into(&bmsg, input, out);
 }
 
 #[cfg(test)]
@@ -1097,5 +1741,130 @@ mod tests {
         let mut sess = DmeBuilder::new(3, 8).seed(91).build();
         let _ = sess.round_with_y(&inputs, 1.0);
         drop(sess); // must not hang or panic
+    }
+
+    #[test]
+    fn round_batch_agrees_and_advances_round_window() {
+        let n = 5;
+        let d = 16;
+        let slots: Vec<Vec<Vec<f64>>> = (0..4).map(|b| gen(n, d, 30.0, 0.4, 200 + b)).collect();
+        let mut sess = DmeBuilder::new(n, d).codec(CodecSpec::Lq { q: 64 }).seed(21).build();
+        let outs = sess.round_batch(&slots);
+        assert_eq!(outs.len(), 4);
+        assert_eq!(sess.rounds_run(), 4);
+        for (b, o) in outs.iter().enumerate() {
+            assert_eq!(o.round, b as u64);
+            assert!(o.agreement, "slot {b} disagreed");
+            assert!(o.leader.is_some());
+            let mu = mean_vecs(&slots[b]);
+            assert!(dist_inf(&o.estimate, &mu) < 0.1, "slot {b}");
+        }
+        // Cumulative traffic grows slot over slot.
+        for w in outs.windows(2) {
+            assert!(w[1].traffic.max_sent > w[0].traffic.max_sent);
+        }
+        // The next sequential round continues the window.
+        let o = sess.round_with_y(&slots[0], 1.0);
+        assert_eq!(o.round, 4);
+    }
+
+    #[test]
+    fn round_batch_supports_per_layer_slot_dimensions() {
+        // The per-layer SGD shape: slots of different widths through one
+        // session, each with its own distance bound.
+        let n = 4;
+        let dims = [24usize, 4, 12, 3];
+        let slots: Vec<Vec<Vec<f64>>> = dims
+            .iter()
+            .enumerate()
+            .map(|(b, &d_b)| gen(n, d_b, 5.0, 0.25, 300 + b as u64))
+            .collect();
+        let ys = [2.0, 1.5, 1.8, 1.2];
+        let mut sess = DmeBuilder::new(n, 24).seed(31).build();
+        let outs = sess.round_batch_with_y(&slots, &ys);
+        for (b, o) in outs.iter().enumerate() {
+            assert_eq!(o.estimate.len(), dims[b]);
+            assert!(o.agreement, "slot {b}");
+            assert_eq!(o.y_used, ys[b]);
+            let mu = mean_vecs(&slots[b]);
+            assert!(dist_inf(&o.estimate, &mu) < ys[b], "slot {b}");
+        }
+    }
+
+    #[test]
+    fn round_batch_into_recycles_outcome_buffers() {
+        let n = 3;
+        let d = 8;
+        let slots: Vec<Vec<Vec<f64>>> = (0..3).map(|b| gen(n, d, 2.0, 0.3, 400 + b)).collect();
+        let ys = vec![1.0; 3];
+        let mut sess = DmeBuilder::new(n, d).seed(41).build();
+        let mut outcomes = Vec::new();
+        sess.round_batch_into(&slots, &ys, &mut outcomes);
+        let first: Vec<Vec<f64>> = outcomes.iter().map(|o| o.estimate.clone()).collect();
+        // Second batch reuses the same outcome vector; results must be
+        // the fresh rounds 3..6, not stale round-0 leftovers.
+        sess.round_batch_into(&slots, &ys, &mut outcomes);
+        assert_eq!(outcomes.len(), 3);
+        for (b, o) in outcomes.iter().enumerate() {
+            assert_eq!(o.round, 3 + b as u64);
+            assert!(o.agreement);
+            assert_eq!(o.estimate.len(), d);
+            assert!(o.outputs.is_empty() && o.decoded_at_leader.is_empty());
+        }
+        // Shared randomness moved on, so estimates differ in general.
+        assert_ne!(first[0], outcomes[0].estimate);
+    }
+
+    #[test]
+    fn round_vr_batch_matches_sequential_round_vr() {
+        let n = 8;
+        let d = 16;
+        let sigma = 0.2;
+        let slots: Vec<Vec<Vec<f64>>> = (0..3).map(|b| gen(n, d, 10.0, 0.1, 500 + b)).collect();
+        let mut batched = DmeBuilder::new(n, d).seed(51).build();
+        let mut seq = DmeBuilder::new(n, d).seed(51).build();
+        let outs = batched.round_vr_batch(&slots, sigma);
+        for (b, o) in outs.iter().enumerate() {
+            let s = seq.round_vr(&slots[b], sigma);
+            assert_eq!(o.estimate, s.estimate, "slot {b}");
+            assert_eq!(o.y_used, s.y_used, "slot {b}");
+            assert_eq!(o.round_traffic, s.round_traffic, "slot {b}");
+        }
+        // Error-detecting robustness falls back to sequential rounds.
+        let mut robust = DmeBuilder::new(n, d).robust(8).seed(52).build();
+        let r = robust.round_vr_batch(&slots[..2], sigma);
+        assert_eq!(r.len(), 2);
+        assert_eq!(robust.rounds_run(), 2);
+        assert!(r.iter().all(|o| !o.rounds_stage1.is_empty()));
+    }
+
+    #[test]
+    fn round_batch_single_machine_identity() {
+        let slots: Vec<Vec<Vec<f64>>> = (0..2).map(|b| gen(1, 8, 5.0, 0.1, 600 + b)).collect();
+        let mut sess = DmeBuilder::new(1, 8).diagnostics(true).seed(61).build();
+        let outs = sess.round_batch(&slots);
+        for (b, o) in outs.iter().enumerate() {
+            assert_eq!(o.estimate, slots[b][0]);
+            assert_eq!(o.round_traffic, vec![Traffic::default()]);
+            assert_eq!(o.outputs, vec![slots[b][0].clone()]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "adaptive y policies")]
+    fn round_batch_rejects_adaptive_y_policy() {
+        let slots = vec![gen(4, 8, 1.0, 0.2, 700)];
+        let mut sess = DmeBuilder::new(4, 8)
+            .y_policy(YPolicy::FromQuantized { slack: 1.5 })
+            .build();
+        let _ = sess.round_batch(&slots);
+    }
+
+    #[test]
+    fn round_batch_empty_is_a_noop() {
+        let mut sess = DmeBuilder::new(3, 8).seed(71).build();
+        let outs = sess.round_batch(&[]);
+        assert!(outs.is_empty());
+        assert_eq!(sess.rounds_run(), 0);
     }
 }

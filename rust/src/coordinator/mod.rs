@@ -106,22 +106,30 @@ pub enum CodecSpec {
 impl CodecSpec {
     /// Instantiate for dimension `d`, distance bound `y`, at a round seed.
     pub fn build(&self, d: usize, y: f64, seed: u64, round: u64) -> Box<dyn VectorCodec> {
-        let mut shared = Rng::new(hash2(seed, round));
+        self.build_with(d, y, &mut Rng::new(hash2(seed, round)))
+    }
+
+    /// Instantiate from an explicit shared-randomness stream — the batch
+    /// round plane derives all per-slot streams in one
+    /// [`crate::rng::fork_round_seeds`] fan-out per batch and then builds
+    /// each slot's codec from its stream, bit-identically to
+    /// [`Self::build`] at the matching `(seed, round)`.
+    pub fn build_with(&self, d: usize, y: f64, shared: &mut Rng) -> Box<dyn VectorCodec> {
         match *self {
-            CodecSpec::Lq { q } => Box::new(LatticeQuantizer::from_y(d, q, y, &mut shared)),
+            CodecSpec::Lq { q } => Box::new(LatticeQuantizer::from_y(d, q, y, shared)),
             CodecSpec::Rlq { q } => {
-                Box::new(RotatedLatticeQuantizer::from_y_rot(d, q, y, &mut shared))
+                Box::new(RotatedLatticeQuantizer::from_y_rot(d, q, y, shared))
             }
             CodecSpec::LqHull { q } => Box::new(ConvexHullEncoder::from_y(d, q, y)),
             CodecSpec::D4 { q } => {
-                Box::new(crate::quant::D4Quantizer::from_y(d, q, y, &mut shared))
+                Box::new(crate::quant::D4Quantizer::from_y(d, q, y, shared))
             }
             CodecSpec::QsgdL2 { q } => Box::new(Qsgd::new(d, q, QsgdNorm::L2)),
             CodecSpec::QsgdLinf { q } => Box::new(Qsgd::new(d, q, QsgdNorm::Linf)),
-            CodecSpec::Hadamard { q } => Box::new(SureshHadamard::new(d, q, &mut shared)),
+            CodecSpec::Hadamard { q } => Box::new(SureshHadamard::new(d, q, shared)),
             CodecSpec::Vqsgd { reps } => Box::new(VqsgdCrossPolytope::new(d, reps)),
             CodecSpec::EfSign => Box::new(EfSignSgd::new(d)),
-            CodecSpec::PowerSgd { rank } => Box::new(PowerSgd::for_dim(d, rank, &mut shared)),
+            CodecSpec::PowerSgd { rank } => Box::new(PowerSgd::for_dim(d, rank, shared)),
             CodecSpec::TernGrad => Box::new(TernGrad::new(d)),
             CodecSpec::TopK { k } => Box::new(TopK::new(d, k)),
             CodecSpec::Full => Box::new(FullPrecision::new(d)),

@@ -223,6 +223,7 @@ mod tests {
             scale: 0.1,
             seeds: 1,
             out_dir: None,
+            batch: 1,
         };
         let a = ablation_a(&opts);
         // hull variance factor must be > 1 (worse than shared offset).
@@ -253,6 +254,7 @@ mod tests {
             scale: 0.15,
             seeds: 1,
             out_dir: None,
+            batch: 1,
         };
         let b = ablation_b(&opts);
         let rates: Vec<f64> = b

@@ -135,6 +135,7 @@ mod tests {
             scale: 0.25,
             seeds: 2,
             out_dir: None,
+            batch: 1,
         };
         let r = run(&opts);
         for line in r.lines().filter(|l| l.starts_with("shape check")) {

@@ -126,6 +126,7 @@ mod tests {
             scale: 0.1,
             seeds: 1,
             out_dir: None,
+            batch: 1,
         };
         let r = run(&opts);
         assert!(r.contains("sublinear-LQ"));

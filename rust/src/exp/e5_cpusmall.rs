@@ -58,6 +58,7 @@ pub fn run(opts: &ExpOpts) -> String {
                             period: 1,
                         },
                         w0: Some(vec![-1000.0; d]),
+                        batch_slots: 1,
                     };
                     run_distributed_gd(&ds, &agg, &cfg).loss
                 })
@@ -103,6 +104,7 @@ mod tests {
             scale: 0.25,
             seeds: 1,
             out_dir: None,
+            batch: 1,
         };
         let r = run(&opts);
         for line in r.lines().filter(|l| l.starts_with("shape check")) {

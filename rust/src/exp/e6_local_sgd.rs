@@ -90,6 +90,7 @@ mod tests {
             scale: 0.2,
             seeds: 1,
             out_dir: None,
+            batch: 1,
         };
         let r = run(&opts);
         for line in r.lines().filter(|l| l.starts_with("shape check")) {

@@ -83,6 +83,7 @@ mod tests {
             scale: 0.15,
             seeds: 1,
             out_dir: None,
+            batch: 1,
         };
         let r = run(&opts);
         assert!(r.contains("none"));

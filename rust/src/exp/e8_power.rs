@@ -125,6 +125,7 @@ mod tests {
             scale: 0.15,
             seeds: 1,
             out_dir: None,
+            batch: 1,
         };
         let r = panel(&opts, "t", 2, false);
         let line = r

@@ -27,6 +27,12 @@ pub struct ExpOpts {
     pub scale: f64,
     pub seeds: usize,
     pub out_dir: Option<String>,
+    /// Batched-round width for session-driven experiments (CLI
+    /// `batch=`): `tradeoff` groups its trials into
+    /// `round_batch_with_y` calls of this many slots — bit-identical to
+    /// the sequential trials, one worker crossing per group. 1 keeps the
+    /// sequential loop.
+    pub batch: usize,
 }
 
 impl Default for ExpOpts {
@@ -35,6 +41,7 @@ impl Default for ExpOpts {
             scale: 1.0,
             seeds: 5,
             out_dir: Some("results".to_string()),
+            batch: 1,
         }
     }
 }
@@ -45,6 +52,7 @@ impl ExpOpts {
             scale: 0.1,
             seeds: 2,
             out_dir: None,
+            batch: 1,
         }
     }
 

@@ -10,14 +10,62 @@
 //! measurement).
 
 use super::{render_table, ExpOpts};
-use crate::coordinator::{CodecSpec, DmeBuilder, Topology};
+use crate::coordinator::{CodecSpec, DmeBuilder, DmeSession, Topology};
 use crate::linalg::{dist2, mean_vecs};
 use crate::rng::Rng;
+
+/// Run `trials` rounds of the same inputs through `sess`, accumulating
+/// squared error vs `mu` and the max per-machine (sent+recv) bits. With
+/// `batch > 1` the trials ride [`DmeSession::round_batch_with_y`] in
+/// groups of `batch` slots — **bit-identical** to the sequential loop
+/// (each slot is the round at the same index; pinned by a test below),
+/// one worker crossing per group instead of per trial.
+fn run_trials(
+    sess: &mut DmeSession,
+    inputs: &[Vec<f64>],
+    mu: &[f64],
+    y: f64,
+    trials: u64,
+    batch: usize,
+) -> (f64, u64) {
+    let mut var = 0.0;
+    let mut bits = 0u64;
+    let mut tally = |o: &crate::coordinator::RoundOutcome| {
+        var += dist2(&o.estimate, mu).powi(2);
+        bits = bits.max(
+            o.round_traffic
+                .iter()
+                .map(|tr| tr.sent_bits + tr.recv_bits)
+                .max()
+                .unwrap(),
+        );
+    };
+    if batch <= 1 {
+        for _ in 0..trials {
+            tally(&sess.round_with_y(inputs, y));
+        }
+    } else {
+        let mut done = 0u64;
+        let mut outcomes = Vec::new();
+        while done < trials {
+            let take = batch.min((trials - done) as usize);
+            let slots = vec![inputs.to_vec(); take];
+            let ys = vec![y; take];
+            sess.round_batch_into(&slots, &ys, &mut outcomes);
+            for o in &outcomes {
+                tally(o);
+            }
+            done += take as u64;
+        }
+    }
+    (var / trials as f64, bits)
+}
 
 pub fn run(opts: &ExpOpts) -> String {
     let d = 64;
     let n = 8;
     let y = 1.0;
+    let batch = opts.batch.max(1);
     let trials = (20.0 * opts.scale.max(0.05)).ceil() as u64 * 5;
     let mut out = String::from("# Tradeoff — bits vs output variance (Theorems 2/6 shape)\n\n");
 
@@ -41,39 +89,13 @@ pub fn run(opts: &ExpOpts) -> String {
         // one fused decode-accumulate pass per packet — while producing
         // bit-identical estimates.
         let mut star = DmeBuilder::new(n, d).codec(CodecSpec::Lq { q }).seed(7).build();
-        let mut var_star = 0.0;
-        let mut bits_star = 0u64;
-        for _ in 0..trials {
-            let o = star.round_with_y(&inputs, y);
-            var_star += dist2(&o.estimate, &mu).powi(2);
-            bits_star = bits_star.max(
-                o.round_traffic
-                    .iter()
-                    .map(|tr| tr.sent_bits + tr.recv_bits)
-                    .max()
-                    .unwrap(),
-            );
-        }
-        var_star /= trials as f64;
+        let (var_star, bits_star) = run_trials(&mut star, &inputs, &mu, y, trials, batch);
         // Tree topology.
         let mut tree = DmeBuilder::new(n, d)
             .topology(Topology::Tree { m: q as usize })
             .seed(8)
             .build();
-        let mut var_tree = 0.0;
-        let mut bits_tree = 0u64;
-        for _ in 0..trials {
-            let o = tree.round_with_y(&inputs, y);
-            var_tree += dist2(&o.estimate, &mu).powi(2);
-            bits_tree = bits_tree.max(
-                o.round_traffic
-                    .iter()
-                    .map(|tr| tr.sent_bits + tr.recv_bits)
-                    .max()
-                    .unwrap(),
-            );
-        }
-        var_tree /= trials as f64;
+        let (var_tree, bits_tree) = run_trials(&mut tree, &inputs, &mu, y, trials, batch);
 
         // Models.
         let s = 2.0 * y / (q as f64 - 1.0);
@@ -91,7 +113,10 @@ pub fn run(opts: &ExpOpts) -> String {
         ]);
     }
     out += &render_table(
-        &format!("n={n}, d={d}, y={y}, {trials} trials; bits = max over machines (sent+recv)"),
+        &format!(
+            "n={n}, d={d}, y={y}, {trials} trials (batch={batch}; batched rounds are \
+             bit-identical to sequential trials); bits = max over machines (sent+recv)"
+        ),
         &[
             "q",
             "star bits",
@@ -112,11 +137,38 @@ mod tests {
     use super::*;
 
     #[test]
+    fn batched_trials_reproduce_sequential_report_exactly() {
+        // The batch is a pure scheduling change: grouping the trials into
+        // round_batch calls must not move a single reported digit (only
+        // the batch= header line differs).
+        let seq = run(&ExpOpts {
+            scale: 0.1,
+            seeds: 1,
+            out_dir: None,
+            batch: 1,
+        });
+        let batched = run(&ExpOpts {
+            scale: 0.1,
+            seeds: 1,
+            out_dir: None,
+            batch: 7,
+        });
+        let strip = |r: &str| -> Vec<String> {
+            r.lines()
+                .filter(|l| !l.contains("batch="))
+                .map(str::to_string)
+                .collect()
+        };
+        assert_eq!(strip(&seq), strip(&batched));
+    }
+
+    #[test]
     fn variance_decreases_monotonically_in_q() {
         let opts = ExpOpts {
             scale: 0.2,
             seeds: 1,
             out_dir: None,
+            batch: 1,
         };
         let r = run(&opts);
         let vars: Vec<f64> = r

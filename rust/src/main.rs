@@ -1,15 +1,20 @@
 //! `dme` — CLI for the lattice-DME reproduction.
 //!
 //! Subcommands:
-//!   dme exp <1..8|tradeoff|all> [scale=<f>] [seeds=<n>]       regenerate figures/tables
-//!   dme me  [n=..] [d=..] [q=..] [seed=..] [topology=..]      MeanEstimation rounds
-//!   dme vr  [n=..] [d=..] [q=..] [seed=..] [topology=..] [robust=0|1]
-//!                                                             VarianceReduction round
+//!   dme exp <1..8|tradeoff|all> [scale=<f>] [seeds=<n>] [batch=<B>]
+//!                                                             regenerate figures/tables
+//!   dme me  [n=..] [d=..] [q=..] [seed=..] [topology=..] [batch=<B>]
+//!                                                             MeanEstimation rounds
+//!   dme vr  [n=..] [d=..] [q=..] [seed=..] [topology=..] [robust=0|1] [batch=<B>]
+//!                                                             VarianceReduction rounds
 //!   dme runtime [graph=<name>]                                PJRT artifact smoke check
 //!   dme info                                                  artifact + config summary
 //!
 //! `topology=` takes `star`, `tree`, `tree:<m>` or `both` (default) and
 //! routes through the session API (`DmeBuilder` → `DmeSession`).
+//! `batch=` runs B rounds as slots of one `round_batch` call — one
+//! worker channel crossing per batch, per-slot results bit-identical to
+//! sequential rounds.
 
 use dme::config::RunConfig;
 use dme::coordinator::{CodecSpec, DmeBuilder, DmeSession, RoundOutcome, Topology};
@@ -28,13 +33,18 @@ fn usage() -> ! {
         "usage: dme <command>\n\
          \n\
          commands:\n\
-         \x20 exp <1..8|tradeoff|all> [scale=1.0] [seeds=5]   regenerate paper figures/tables\n\
-         \x20 me  [n=8] [d=64] [q=16] [seed=0] [topology=both]\n\
+         \x20 exp <1..8|tradeoff|all> [scale=1.0] [seeds=5] [batch=1]\n\
+         \x20                                                 regenerate paper figures/tables\n\
+         \x20 me  [n=8] [d=64] [q=16] [seed=0] [topology=both] [batch=1]\n\
          \x20                                                 MeanEstimation rounds (star|tree|tree:<m>|both)\n\
-         \x20 vr  [n=8] [d=64] [q=16] [seed=0] [topology=star] [robust=1]\n\
-         \x20                                                 VarianceReduction round\n\
+         \x20 vr  [n=8] [d=64] [q=16] [seed=0] [topology=star] [robust=1] [batch=1]\n\
+         \x20                                                 VarianceReduction rounds\n\
          \x20 runtime [graph=lattice_encode_d128_q8]          PJRT artifact smoke check\n\
-         \x20 info                                            artifact + config summary"
+         \x20 info                                            artifact + config summary\n\
+         \n\
+         batch=B runs B rounds as one batched round_batch call (one\n\
+         worker crossing per batch; per-slot results bit-identical to\n\
+         sequential rounds)"
     );
     std::process::exit(2);
 }
@@ -59,6 +69,14 @@ fn cmd_exp(args: &[String]) {
         match k.as_str() {
             "scale" => opts.scale = v.parse().unwrap_or(1.0),
             "seeds" => opts.seeds = v.parse().unwrap_or(5),
+            "batch" => match v.parse::<usize>() {
+                // Same validation as the me/vr path (RunConfig::apply).
+                Ok(b) if b >= 1 => opts.batch = b,
+                _ => {
+                    eprintln!("bad value '{v}' for batch (must be >= 1)");
+                    usage();
+                }
+            },
             "out" => opts.out_dir = Some(v),
             _ => {}
         }
@@ -152,8 +170,17 @@ fn cmd_me(args: &[String]) {
 
     for topology in topologies(&cfg) {
         let mut sess = me_session(&cfg, topology);
-        let out = sess.round_with_y(&inputs, y);
-        print_round(&topology.label(), &out, &mu);
+        if cfg.batch > 1 {
+            // One batched call: B rounds, one worker crossing per machine.
+            let slots = vec![inputs.clone(); cfg.batch];
+            let ys = vec![y; cfg.batch];
+            for out in sess.round_batch_with_y(&slots, &ys) {
+                print_round(&format!("{}[{}]", topology.label(), out.round), &out, &mu);
+            }
+        } else {
+            let out = sess.round_with_y(&inputs, y);
+            print_round(&topology.label(), &out, &mu);
+        }
     }
 }
 
@@ -185,30 +212,43 @@ fn cmd_vr(args: &[String]) {
         builder = builder.robust(cfg.q);
     }
     let mut sess = builder.build();
-    let out = sess.round_vr(&inputs, sigma);
-    let s = summarize(&out.round_traffic);
-    let in_var = dme::linalg::dist2(&inputs[0], &nabla).powi(2);
-    let out_var = dme::linalg::dist2(&out.estimate, &nabla).powi(2);
-    let label = if cfg.robust {
-        "robust-vr".to_string()
+    // batch=B ships B VR rounds through one round_vr_batch call (the
+    // Chebyshev reduction batches onto the cluster; robust VR falls back
+    // to sequential escalation rounds).
+    let outs = if cfg.batch > 1 {
+        let slots = vec![inputs.clone(); cfg.batch];
+        sess.round_vr_batch(&slots, sigma)
     } else {
-        format!("vr/{}", topology.label())
+        vec![sess.round_vr(&inputs, sigma)]
     };
-    // Tree rounds have no leader; they report the effective tree-codec
-    // color count instead (the tree ignores `q=` — it uses the paper's
-    // own ε=y/m², q=m³ parameterization).
-    let stats = match out.leader {
-        Some(l) => format!("leader={l}"),
-        None => format!("q_used={}", out.q_used.unwrap_or(0)),
-    };
-    println!(
-        "{label}: {stats} input_err2={in_var:.3e} output_err2={out_var:.3e} (reduction {:.1}x)",
-        in_var / out_var.max(1e-300)
-    );
-    println!(
-        "traffic  : max_sent={}b max_recv={}b mean_sent={:.0}b stage1_rounds={:?}",
-        s.max_sent, s.max_recv, s.mean_sent, out.rounds_stage1
-    );
+    let in_var = dme::linalg::dist2(&inputs[0], &nabla).powi(2);
+    for out in &outs {
+        let s = summarize(&out.round_traffic);
+        let out_var = dme::linalg::dist2(&out.estimate, &nabla).powi(2);
+        let mut label = if cfg.robust {
+            "robust-vr".to_string()
+        } else {
+            format!("vr/{}", topology.label())
+        };
+        if cfg.batch > 1 {
+            label = format!("{label}[{}]", out.round);
+        }
+        // Tree rounds have no leader; they report the effective tree-codec
+        // color count instead (the tree ignores `q=` — it uses the paper's
+        // own ε=y/m², q=m³ parameterization).
+        let stats = match out.leader {
+            Some(l) => format!("leader={l}"),
+            None => format!("q_used={}", out.q_used.unwrap_or(0)),
+        };
+        println!(
+            "{label}: {stats} input_err2={in_var:.3e} output_err2={out_var:.3e} (reduction {:.1}x)",
+            in_var / out_var.max(1e-300)
+        );
+        println!(
+            "traffic  : max_sent={}b max_recv={}b mean_sent={:.0}b stage1_rounds={:?}",
+            s.max_sent, s.max_recv, s.mean_sent, out.rounds_stage1
+        );
+    }
 }
 
 fn cmd_runtime(args: &[String]) {

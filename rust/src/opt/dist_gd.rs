@@ -10,7 +10,8 @@
 //! and exact bits.
 
 use super::allreduce::Aggregator;
-use crate::coordinator::{CodecSpec, DmeBuilder, YPolicy};
+use super::{chunk_count, chunk_slots, concat_chunk_outcomes, BatchYDriver};
+use crate::coordinator::{CodecSpec, DmeBuilder, RoundOutcome, YPolicy};
 use crate::data::Regression;
 use crate::linalg::{coord_range, dist2, dist_inf, norm2};
 use crate::rng::{hash2, Rng};
@@ -37,6 +38,13 @@ pub struct GdConfig {
     pub y_policy: YPolicy,
     /// Initial weights (defaults to zeros).
     pub w0: Option<Vec<f64>>,
+    /// Batched-round knob (star aggregation only): cut each iteration's
+    /// gradient into this many coordinate chunks and ship them as slots
+    /// of one `round_batch_with_y` call — one worker crossing per
+    /// iteration however many chunks. 1 (default) keeps the historical
+    /// sequential round; > 1 maintains `y` per chunk at the driver
+    /// (`BatchYDriver`, raw-gradient spread, the policy's slack).
+    pub batch_slots: usize,
 }
 
 impl Default for GdConfig {
@@ -49,6 +57,7 @@ impl Default for GdConfig {
             y0: 1.0,
             y_policy: YPolicy::FromQuantized { slack: 1.5 },
             w0: None,
+            batch_slots: 1,
         }
     }
 }
@@ -110,11 +119,31 @@ pub fn run_distributed_gd(ds: &Regression, agg: &GdAggregation, cfg: &GdConfig) 
                 .codec(*spec)
                 .seed(cfg.seed)
                 .y0(cfg.y0)
-                .y_policy(cfg.y_policy)
+                .y_policy(if cfg.batch_slots > 1 {
+                    // Batched rounds carry explicit per-slot bounds; the
+                    // session's own estimator stays out of the loop.
+                    YPolicy::Fixed
+                } else {
+                    cfg.y_policy
+                })
                 .build(),
         ),
         _ => None,
     };
+    // Batched star path (batch_slots > 1): per-chunk y maintained at the
+    // driver, outcomes and bounds recycled across iterations.
+    let mut star_y = match agg {
+        GdAggregation::Star(spec) if cfg.batch_slots > 1 => Some(BatchYDriver::new(
+            chunk_count(d, cfg.batch_slots),
+            cfg.y_policy,
+            cfg.y0,
+            *spec,
+            cfg.seed,
+        )),
+        _ => None,
+    };
+    let mut ys: Vec<f64> = Vec::new();
+    let mut outcomes: Vec<RoundOutcome> = Vec::new();
 
     for _ in 0..cfg.iters {
         let parts = ds.partition(n, &mut part_rng);
@@ -135,6 +164,20 @@ pub fn run_distributed_gd(ds: &Regression, agg: &GdAggregation, cfg: &GdConfig) 
                 trace.decode_mismatches += rep.decode_mismatches;
                 let mb = rep.bits_sent.iter().copied().max().unwrap_or(0);
                 (rep.estimate, mb, rep.y_used)
+            }
+            GdAggregation::Star(_) if cfg.batch_slots > 1 => {
+                // One batched round: the gradient's coordinate chunks are
+                // the slots, so the whole exchange is one worker crossing.
+                let sess = star_sess.as_mut().unwrap();
+                let ydrv = star_y.as_mut().unwrap();
+                let slots = chunk_slots(&grads, cfg.batch_slots);
+                let first_round = sess.rounds_run();
+                ydrv.fill_ys(&mut ys);
+                sess.round_batch_into(&slots, &ys, &mut outcomes);
+                ydrv.observe(&slots, first_round);
+                let (est, mb) = concat_chunk_outcomes(&outcomes);
+                let y_used = ys.iter().cloned().fold(0.0f64, f64::max);
+                (est, mb, y_used)
             }
             GdAggregation::Star(_) => {
                 let sess = star_sess.as_mut().unwrap();
@@ -171,6 +214,7 @@ mod tests {
             y0: 2.0,
             y_policy: YPolicy::FromQuantized { slack: 1.5 },
             w0: None,
+            batch_slots: 1,
         }
     }
 
@@ -234,6 +278,26 @@ mod tests {
         );
         // Star bits: leader pays O(n d log q); others O(d log q).
         assert!(t.max_bits_sent.iter().all(|&b| b > 0));
+    }
+
+    #[test]
+    fn batched_star_aggregation_converges() {
+        // batch_slots > 1: the gradient ships as chunk slots of one
+        // batched round per iteration; convergence must match the
+        // sequential star path's quality.
+        let ds = gen_lsq(512, 8, 4);
+        let mut cfg = small_cfg(40);
+        cfg.n_machines = 4;
+        cfg.batch_slots = 4;
+        cfg.y_policy = YPolicy::FromQuantized { slack: 3.0 };
+        let t = run_distributed_gd(&ds, &GdAggregation::Star(CodecSpec::Lq { q: 16 }), &cfg);
+        assert!(
+            t.loss.last().unwrap() < &0.05,
+            "batched star loss {:?}",
+            t.loss.last()
+        );
+        assert!(t.max_bits_sent.iter().all(|&b| b > 0));
+        assert!(t.y_used.iter().all(|&y| y > 0.0));
     }
 
     #[test]

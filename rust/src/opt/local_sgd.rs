@@ -7,7 +7,8 @@
 //! which is why RLQSGD is the natural fit).
 
 use super::allreduce::Aggregator;
-use crate::coordinator::{CodecSpec, Topology, YPolicy};
+use super::{chunk_count, chunk_slots, concat_chunk_outcomes, BatchYDriver};
+use crate::coordinator::{CodecSpec, RoundOutcome, Topology, YPolicy};
 use crate::data::Regression;
 use crate::linalg::dist2;
 use crate::rng::{hash2, Rng};
@@ -31,6 +32,12 @@ pub struct LocalSgdConfig {
     /// fold: the leader (star) and every inner node (tree) fold incoming
     /// bitstreams straight into an O(d) accumulator.
     pub topology: Option<Topology>,
+    /// Batched-round knob (session aggregation only): ship each
+    /// averaging round's delta as this many coordinate-chunk slots of
+    /// one `round_batch_with_y` call — one worker crossing per round.
+    /// 1 (default) keeps the sequential round; > 1 maintains `y` per
+    /// chunk at the driver (star: the configured policy; tree: fixed).
+    pub batch_slots: usize,
 }
 
 impl Default for LocalSgdConfig {
@@ -45,6 +52,7 @@ impl Default for LocalSgdConfig {
             y0: 1.0,
             y_policy: YPolicy::FromQuantized { slack: 2.0 },
             topology: None,
+            batch_slots: 1,
         }
     }
 }
@@ -60,7 +68,11 @@ pub struct LocalSgdTrace {
 }
 
 /// Run Local SGD; `spec = None` is the uncompressed baseline.
-pub fn run_local_sgd(ds: &Regression, spec: Option<CodecSpec>, cfg: &LocalSgdConfig) -> LocalSgdTrace {
+pub fn run_local_sgd(
+    ds: &Regression,
+    spec: Option<CodecSpec>,
+    cfg: &LocalSgdConfig,
+) -> LocalSgdTrace {
     let d = ds.dim();
     let n = cfg.n_machines;
     let mut w_global = vec![0.0; d];
@@ -87,6 +99,23 @@ pub fn run_local_sgd(ds: &Regression, spec: Option<CodecSpec>, cfg: &LocalSgdCon
         (None, Some(s)) => Some(Aggregator::new(s, n, d, cfg.y0, cfg.y_policy, cfg.seed)),
         _ => None,
     };
+    // Batched session rounds (batch_slots > 1): per-chunk y at the
+    // driver — tree sessions pin y (no leader to measure it).
+    let mut batch_y = match (cfg.topology, spec) {
+        (Some(topology), Some(s)) if cfg.batch_slots > 1 => Some(BatchYDriver::new(
+            chunk_count(d, cfg.batch_slots),
+            match topology {
+                Topology::Star => cfg.y_policy,
+                Topology::Tree { .. } => YPolicy::Fixed,
+            },
+            cfg.y0,
+            s,
+            cfg.seed,
+        )),
+        _ => None,
+    };
+    let mut ys: Vec<f64> = Vec::new();
+    let mut outcomes: Vec<RoundOutcome> = Vec::new();
     let mut rng = Rng::new(hash2(cfg.seed, 0x10CA1));
 
     // Static shard per worker (Local SGD's data-local regime).
@@ -109,9 +138,20 @@ pub fn run_local_sgd(ds: &Regression, spec: Option<CodecSpec>, cfg: &LocalSgdCon
         let true_mean = crate::linalg::mean_vecs(&deltas);
 
         let (applied, bits) = if let Some(s) = sess.as_mut() {
-            let out = s.round(&deltas);
-            let mb = out.max_sent_bits();
-            (out.estimate, mb)
+            if let Some(ydrv) = batch_y.as_mut() {
+                // One batched round: the delta's coordinate chunks ride
+                // as slots, one worker crossing for the whole exchange.
+                let slots = chunk_slots(&deltas, cfg.batch_slots);
+                let first_round = s.rounds_run();
+                ydrv.fill_ys(&mut ys);
+                s.round_batch_into(&slots, &ys, &mut outcomes);
+                ydrv.observe(&slots, first_round);
+                concat_chunk_outcomes(&outcomes)
+            } else {
+                let out = s.round(&deltas);
+                let mb = out.max_sent_bits();
+                (out.estimate, mb)
+            }
         } else if let Some(a) = agg.as_mut() {
             let rep = a.step(&deltas);
             let mb = rep.bits_sent.iter().copied().max().unwrap_or(0);
@@ -179,6 +219,40 @@ mod tests {
         let ls = star.loss.last().unwrap();
         assert!(ls < &(lb * 5.0 + 0.1), "star {ls} vs base {lb}");
         assert!(star.max_bits_sent.iter().any(|&b| b > 0));
+    }
+
+    #[test]
+    fn batched_session_rounds_track_baseline() {
+        // batch_slots > 1 over both topologies: chunked batched rounds
+        // must converge like the sequential session path.
+        let ds = gen_lsq(1024, 16, 4);
+        let base = run_local_sgd(
+            &ds,
+            None,
+            &LocalSgdConfig {
+                rounds: 30,
+                y0: 0.5,
+                ..Default::default()
+            },
+        );
+        let lb = base.loss.last().unwrap();
+        for topology in [Topology::Star, Topology::Tree { m: 2 }] {
+            let cfg = LocalSgdConfig {
+                rounds: 30,
+                y0: 0.5,
+                topology: Some(topology),
+                batch_slots: 4,
+                ..Default::default()
+            };
+            let t = run_local_sgd(&ds, Some(CodecSpec::Lq { q: 64 }), &cfg);
+            let lt = t.loss.last().unwrap();
+            assert!(
+                lt < &(lb * 5.0 + 0.1),
+                "{} batched {lt} vs base {lb}",
+                topology.label()
+            );
+            assert!(t.max_bits_sent.iter().any(|&b| b > 0));
+        }
     }
 
     #[test]

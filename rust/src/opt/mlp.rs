@@ -7,9 +7,19 @@
 //! cross-checkable). Compression is applied *per layer* exactly as the
 //! paper does for ResNet20/CIFAR-100 ("quantization is applied at the
 //! level of each layer").
+//!
+//! Aggregation (§Perf): the four per-layer gradients ship as **batch
+//! slots** of one persistent [`crate::coordinator::DmeSession`] —
+//! `round_batch_with_y` exchanges all layers in a single worker crossing
+//! per step, with per-layer `y` bounds maintained driver-side
+//! (`super::BatchYDriver`, slack 3.0, the §9.2 zero-communication
+//! rule). Stateful codecs (EF-SignSGD, PowerSGD, Top-K) need one error
+//! memory *per layer per machine*, which a single session cannot hold,
+//! so they keep the historical per-layer all-to-all [`Aggregator`]s.
 
 use super::allreduce::Aggregator;
-use crate::coordinator::{CodecSpec, YPolicy};
+use super::BatchYDriver;
+use crate::coordinator::{CodecSpec, DmeBuilder, RoundOutcome, YPolicy};
 use crate::data::Classification;
 use crate::rng::{hash2, Rng};
 
@@ -193,11 +203,16 @@ pub struct MlpTrainReport {
     pub train_acc: f64,
     pub val_acc: f64,
     pub train_loss: Vec<f64>,
+    /// Sessions (stateless codecs): steps × layers whose round lost the
+    /// agreement invariant. Aggregators (stateful codecs): total decode
+    /// mismatches observed. Both mirror the paper's ~3% Exp-7 rate.
     pub decode_mismatches: usize,
 }
 
 /// Distributed training with per-layer compression; `spec = None` is the
-/// uncompressed baseline row of Figures 12–13.
+/// uncompressed baseline row of Figures 12–13. Stateless codecs ride a
+/// batched session (all four layer slots in one worker crossing per
+/// step); stateful codecs keep per-layer aggregators (see module docs).
 pub fn train_distributed(
     train: &Classification,
     val: &Classification,
@@ -207,17 +222,39 @@ pub fn train_distributed(
     let mut rng = Rng::new(hash2(cfg.seed, 0x311D));
     let mut model = Mlp::new(train.x.cols, cfg.hidden, train.classes, &mut rng);
     let n = cfg.n_machines;
-    // One aggregator per layer (per-layer quantization).
     let layer_dims = [
         model.w1.len(),
         model.b1.len(),
         model.w2.len(),
         model.b2.len(),
     ];
+    // Batched-session path for stateless codecs: one session whose
+    // nominal dimension is the widest layer; each step ships the four
+    // layer gradients as variable-width batch slots.
+    let session_spec = spec.filter(|s| !s.is_stateful());
+    let mut sess = session_spec.map(|s| {
+        DmeBuilder::new(n, *layer_dims.iter().max().expect("four layers"))
+            .codec(s)
+            .seed(cfg.seed)
+            .build()
+    });
+    let mut ydrv = session_spec.map(|s| {
+        BatchYDriver::new(
+            layer_dims.len(),
+            YPolicy::FromQuantized { slack: 3.0 },
+            cfg.y0,
+            s,
+            cfg.seed,
+        )
+    });
+    let mut ys: Vec<f64> = Vec::new();
+    let mut outcomes: Vec<RoundOutcome> = Vec::new();
+    // Legacy per-layer aggregators for stateful codecs (per-layer error
+    // memory).
     let mut aggs: Vec<Option<Aggregator>> = layer_dims
         .iter()
         .map(|&d| {
-            spec.map(|s| {
+            spec.filter(|s| s.is_stateful()).map(|s| {
                 Aggregator::new(
                     s,
                     n,
@@ -257,14 +294,34 @@ pub fn train_distributed(
                 |g| &g.b2,
             ];
             let mut agg_out: Vec<Vec<f64>> = Vec::with_capacity(4);
-            for (li, get) in layers.iter().enumerate() {
-                let vecs: Vec<Vec<f64>> = grads.iter().map(|(_, g)| get(g).clone()).collect();
-                match aggs[li].as_mut() {
-                    None => agg_out.push(crate::linalg::mean_vecs(&vecs)),
-                    Some(a) => {
-                        let rep = a.step(&vecs);
-                        mismatches += rep.decode_mismatches;
-                        agg_out.push(rep.estimate);
+            if let Some(sess) = sess.as_mut() {
+                // One batched round: layer li is slot li, per-layer y
+                // bounds from the driver-side estimators.
+                let slots: Vec<Vec<Vec<f64>>> = layers
+                    .iter()
+                    .map(|get| grads.iter().map(|(_, g)| get(g).clone()).collect())
+                    .collect();
+                let ydrv = ydrv.as_mut().expect("session path has a y driver");
+                let first_round = sess.rounds_run();
+                ydrv.fill_ys(&mut ys);
+                sess.round_batch_into(&slots, &ys, &mut outcomes);
+                ydrv.observe(&slots, first_round);
+                for o in &outcomes {
+                    if !o.agreement {
+                        mismatches += 1;
+                    }
+                }
+                agg_out.extend(outcomes.iter().map(|o| o.estimate.clone()));
+            } else {
+                for (li, get) in layers.iter().enumerate() {
+                    let vecs: Vec<Vec<f64>> = grads.iter().map(|(_, g)| get(g).clone()).collect();
+                    match aggs[li].as_mut() {
+                        None => agg_out.push(crate::linalg::mean_vecs(&vecs)),
+                        Some(a) => {
+                            let rep = a.step(&vecs);
+                            mismatches += rep.decode_mismatches;
+                            agg_out.push(rep.estimate);
+                        }
                     }
                 }
             }
@@ -332,6 +389,20 @@ mod tests {
         let rep = train_distributed(&train, &val, None, &cfg);
         assert!(rep.val_acc > 0.9, "val acc {}", rep.val_acc);
         assert!(rep.train_loss.first().unwrap() > rep.train_loss.last().unwrap());
+    }
+
+    #[test]
+    fn stateful_codec_keeps_per_layer_aggregators() {
+        // EF-SignSGD cannot ride the batched session (per-layer error
+        // memory); the legacy per-layer aggregator path must still train.
+        let (train, val) = gen_classification(400, 6, 3, 0.3, 9).split(320);
+        let cfg = MlpTrainConfig {
+            epochs: 3,
+            ..Default::default()
+        };
+        let rep = train_distributed(&train, &val, Some(CodecSpec::EfSign), &cfg);
+        assert!(rep.val_acc.is_finite());
+        assert!(!rep.train_loss.is_empty());
     }
 
     #[test]

@@ -15,7 +15,11 @@ pub mod local_sgd;
 pub mod mlp;
 pub mod power_iteration;
 
-use crate::coordinator::{CodecSpec, DmeBuilder, DmeSession, Topology, YPolicy};
+use crate::coordinator::{
+    CodecSpec, DmeBuilder, DmeSession, RoundOutcome, Topology, YEstimator, YPolicy,
+};
+use crate::quant::hadamard::Rotation;
+use crate::rng::{hash2, Rng};
 
 /// The persistent aggregation session the optimizer drivers share when
 /// configured with an explicit topology: star keeps the caller's `y`
@@ -41,6 +45,109 @@ pub(crate) fn topology_session(
         .y0(y0)
         .y_policy(policy)
         .build()
+}
+
+/// Effective slot count a `batch_slots` knob yields at dimension `d`
+/// (chunks are `⌈d / B⌉` coordinates, so very large knobs degrade to one
+/// coordinate per slot).
+pub(crate) fn chunk_count(d: usize, batch_slots: usize) -> usize {
+    let b = batch_slots.clamp(1, d.max(1));
+    let chunk = d.div_ceil(b).max(1);
+    d.div_ceil(chunk).max(1)
+}
+
+/// Split one round's per-machine vectors into `batch_slots` contiguous
+/// coordinate chunks, slot-major — the optimizer drivers' `batch` knob:
+/// the chunks ride [`DmeSession::round_batch_with_y`] as independent
+/// slots, so the whole d-dimensional exchange costs one worker crossing
+/// however many chunks it is cut into. Chunking is aggregation-exact
+/// (the concatenated slot means equal the full-vector mean estimate in
+/// distribution; each chunk's ℓ∞ spread is ≤ the full vector's, so a
+/// full-vector `y` stays decode-safe for every chunk).
+pub(crate) fn chunk_slots(vectors: &[Vec<f64>], batch_slots: usize) -> Vec<Vec<Vec<f64>>> {
+    let d = vectors[0].len();
+    let chunk = d.div_ceil(chunk_count(d, batch_slots)).max(1);
+    (0..d)
+        .step_by(chunk)
+        .map(|lo| {
+            let hi = (lo + chunk).min(d);
+            vectors.iter().map(|v| v[lo..hi].to_vec()).collect()
+        })
+        .collect()
+}
+
+/// Stitch a chunked batch's outcomes back together: the concatenated
+/// estimate plus the max-over-machines total sent bits (each machine's
+/// round cost is the sum of its per-slot costs).
+pub(crate) fn concat_chunk_outcomes(outs: &[RoundOutcome]) -> (Vec<f64>, u64) {
+    let mut est = Vec::new();
+    let n = outs.first().map_or(0, |o| o.round_traffic.len());
+    let mut sent = vec![0u64; n];
+    for o in outs {
+        est.extend_from_slice(&o.estimate);
+        for (s, t) in sent.iter_mut().zip(&o.round_traffic) {
+            *s += t.sent_bits;
+        }
+    }
+    (est, sent.into_iter().max().unwrap_or(0))
+}
+
+/// Max pairwise ℓ∞ spread of one slot's raw inputs, measured in the
+/// space the codec's `y` lives in — rotated for RLQSGD (mirroring the
+/// rotated-space tracking in [`allreduce::Aggregator`]), plain ℓ∞
+/// otherwise. `round` selects RLQ's per-round rotation.
+pub(crate) fn slot_spread(spec: CodecSpec, vectors: &[Vec<f64>], seed: u64, round: u64) -> f64 {
+    match spec {
+        CodecSpec::Rlq { .. } => {
+            let rot = Rotation::new(vectors[0].len(), &mut Rng::new(hash2(seed, round)));
+            let rotated: Vec<Vec<f64>> = vectors.iter().map(|v| rot.forward(v)).collect();
+            YEstimator::max_pairwise_inf(&rotated)
+        }
+        _ => YEstimator::max_pairwise_inf(vectors),
+    }
+}
+
+/// Driver-side per-slot `y` maintenance for batched session rounds: one
+/// [`YEstimator`] per slot, fed the raw-input spread the driver measures
+/// itself (these in-process drivers own every machine's vector) — the
+/// zero-communication rule of §9.2, applied before quantization. The
+/// batch plane amortizes the leader's between-round measurement away
+/// (see [`DmeSession::round_batch`]), so the estimator state lives here
+/// and the bounds travel as the `ys` argument of
+/// [`DmeSession::round_batch_with_y`].
+pub(crate) struct BatchYDriver {
+    spec: CodecSpec,
+    seed: u64,
+    ests: Vec<YEstimator>,
+}
+
+impl BatchYDriver {
+    pub(crate) fn new(slots: usize, policy: YPolicy, y0: f64, spec: CodecSpec, seed: u64) -> Self {
+        BatchYDriver {
+            spec,
+            seed,
+            ests: (0..slots).map(|_| YEstimator::new(policy, y0)).collect(),
+        }
+    }
+
+    /// Current per-slot bounds, into a recycled buffer.
+    pub(crate) fn fill_ys(&self, ys: &mut Vec<f64>) {
+        ys.clear();
+        ys.extend(self.ests.iter().map(|e| e.y));
+    }
+
+    /// Feed one batch's raw slot inputs to the per-slot estimators
+    /// (`first_round` anchors RLQ's per-round rotation; measurement only
+    /// happens on rounds the policy asks for, per `needs_spread`).
+    pub(crate) fn observe(&mut self, slots: &[Vec<Vec<f64>>], first_round: u64) {
+        let (spec, seed) = (self.spec, self.seed);
+        for (b, (est, slot)) in self.ests.iter_mut().zip(slots).enumerate() {
+            let spread = est
+                .needs_spread()
+                .then(|| slot_spread(spec, slot, seed, first_round + b as u64));
+            est.update_spread(spread, slot.len());
+        }
+    }
 }
 
 pub use allreduce::{Aggregator, StepReport};

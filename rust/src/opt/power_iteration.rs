@@ -8,7 +8,8 @@
 //! error.
 
 use super::allreduce::Aggregator;
-use crate::coordinator::{CodecSpec, Topology, YPolicy};
+use super::{chunk_count, chunk_slots, concat_chunk_outcomes, BatchYDriver};
+use crate::coordinator::{CodecSpec, RoundOutcome, Topology, YPolicy};
 use crate::linalg::{coord_range, dist2, dist_inf, normalize, Matrix};
 use crate::rng::{hash2, Rng};
 
@@ -23,6 +24,11 @@ pub struct PowerConfig {
     /// exchange the partial updates through a persistent
     /// [`crate::coordinator::DmeBuilder`] session over topology `t` (tree sessions pin `y` at `y0`).
     pub topology: Option<Topology>,
+    /// Batched-round knob (session exchange only): ship each iteration's
+    /// partial update as this many coordinate-chunk slots of one
+    /// `round_batch_with_y` call — one worker crossing per iteration.
+    /// 1 (default) keeps the sequential round.
+    pub batch_slots: usize,
 }
 
 impl Default for PowerConfig {
@@ -34,6 +40,7 @@ impl Default for PowerConfig {
             y0: 1.0,
             y_policy: YPolicy::FromQuantized { slack: 2.0 },
             topology: None,
+            batch_slots: 1,
         }
     }
 }
@@ -91,6 +98,23 @@ pub fn run_power_iteration(
         (None, Some(s)) => Some(Aggregator::new(s, n, d, cfg.y0, cfg.y_policy, cfg.seed)),
         _ => None,
     };
+    // Batched session rounds (batch_slots > 1): per-chunk y at the
+    // driver — tree sessions pin y (no leader to measure it).
+    let mut batch_y = match (cfg.topology, spec) {
+        (Some(topology), Some(s)) if cfg.batch_slots > 1 => Some(BatchYDriver::new(
+            chunk_count(d, cfg.batch_slots),
+            match topology {
+                Topology::Star => cfg.y_policy,
+                Topology::Tree { .. } => YPolicy::Fixed,
+            },
+            cfg.y0,
+            s,
+            cfg.seed,
+        )),
+        _ => None,
+    };
+    let mut ys: Vec<f64> = Vec::new();
+    let mut outcomes: Vec<RoundOutcome> = Vec::new();
     let mut trace = PowerTrace::default();
 
     for _ in 0..cfg.iters {
@@ -103,9 +127,20 @@ pub fn run_power_iteration(
         trace.u_range.push(coord_range(&us[0]));
 
         let (applied, bits) = if let Some(s) = sess.as_mut() {
-            let out = s.round(&us);
-            let mb = out.max_sent_bits();
-            (crate::linalg::scale(&out.estimate, n as f64), mb)
+            if let Some(ydrv) = batch_y.as_mut() {
+                // One batched round over the update's coordinate chunks.
+                let slots = chunk_slots(&us, cfg.batch_slots);
+                let first_round = s.rounds_run();
+                ydrv.fill_ys(&mut ys);
+                s.round_batch_into(&slots, &ys, &mut outcomes);
+                ydrv.observe(&slots, first_round);
+                let (est, mb) = concat_chunk_outcomes(&outcomes);
+                (crate::linalg::scale(&est, n as f64), mb)
+            } else {
+                let out = s.round(&us);
+                let mb = out.max_sent_bits();
+                (crate::linalg::scale(&out.estimate, n as f64), mb)
+            }
         } else if let Some(a) = agg.as_mut() {
             let rep = a.step(&us);
             let mb = rep.bits_sent.iter().copied().max().unwrap_or(0);
@@ -190,6 +225,26 @@ mod tests {
         assert!(
             t.angle_err.last().unwrap() < &0.1,
             "angle {:?}",
+            t.angle_err.last()
+        );
+        assert!(t.max_bits_sent.iter().all(|&b| b > 0));
+    }
+
+    #[test]
+    fn batched_star_session_converges() {
+        let (m, v1) = gen_power_matrix(1024, 32, &[10.0, 8.0, 1.0], false, 5);
+        let cfg = PowerConfig {
+            n_machines: 4,
+            iters: 60,
+            y0: 50.0,
+            topology: Some(Topology::Star),
+            batch_slots: 8,
+            ..Default::default()
+        };
+        let t = run_power_iteration(&m, &v1, Some(CodecSpec::Lq { q: 64 }), &cfg);
+        assert!(
+            t.angle_err.last().unwrap() < &0.1,
+            "batched angle {:?}",
             t.angle_err.last()
         );
         assert!(t.max_bits_sent.iter().all(|&b| b > 0));

@@ -1,0 +1,158 @@
+//! Pooled wire-packet arena — the staging buffer of the batched round
+//! control plane (§Perf).
+//!
+//! A batched round ([`crate::coordinator::DmeSession::round_batch`])
+//! encodes all `B` of a machine's slots back-to-back through the fused
+//! block kernels before any exchange happens. The packets land here: one
+//! recycled `Vec<u8>` holding `B` length-prefixed packets, so the encode
+//! phase of a whole batch performs zero steady-state allocation where
+//! the sequential round loop staged (and for workers, cloned) a
+//! [`Message`] per round.
+//!
+//! Framing: each packet is `[bits: u64 LE][len: u32 LE][len bytes]`. The
+//! byte length is stored explicitly rather than derived from `bits` so
+//! the framing works for any codec, including ones whose side floats
+//! make `bytes.len()` exceed `ceil(bits / 8)`. Packets may end at any
+//! bit/byte offset (misaligned tails are the common case for bit-packed
+//! lattice streams); the prefix is what delimits them. Roundtrip and
+//! reuse-across-batches behavior is pinned by `rust/tests/prop.rs`.
+
+use super::Message;
+
+const PREFIX: usize = 8 + 4; // bits (u64) + byte length (u32)
+
+/// A recycled buffer of length-prefixed wire packets.
+#[derive(Clone, Debug, Default)]
+pub struct PacketArena {
+    buf: Vec<u8>,
+    packets: usize,
+}
+
+impl PacketArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop all packets, keeping the allocation for the next batch.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.packets = 0;
+    }
+
+    /// Number of packets currently framed.
+    pub fn len(&self) -> usize {
+        self.packets
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.packets == 0
+    }
+
+    /// Total staged bytes (frames included).
+    pub fn byte_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Append one packet (a message's wire bytes plus its exact metered
+    /// bit count).
+    pub fn push(&mut self, msg: &Message) {
+        let len = u32::try_from(msg.bytes.len()).expect("packet under 4 GiB");
+        self.buf.reserve(PREFIX + msg.bytes.len());
+        self.buf.extend_from_slice(&msg.bits.to_le_bytes());
+        self.buf.extend_from_slice(&len.to_le_bytes());
+        self.buf.extend_from_slice(&msg.bytes);
+        self.packets += 1;
+    }
+
+    /// Sequential reader over the framed packets.
+    pub fn reader(&self) -> PacketReader<'_> {
+        PacketReader {
+            buf: &self.buf,
+            pos: 0,
+            remaining: self.packets,
+        }
+    }
+}
+
+/// Borrowing cursor over a [`PacketArena`]'s packets, in push order.
+pub struct PacketReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    remaining: usize,
+}
+
+impl<'a> PacketReader<'a> {
+    /// Next packet as `(bits, bytes)`, or `None` past the last one.
+    pub fn next_packet(&mut self) -> Option<(u64, &'a [u8])> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let bits = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        let len =
+            u32::from_le_bytes(self.buf[self.pos + 8..self.pos + 12].try_into().unwrap()) as usize;
+        let start = self.pos + PREFIX;
+        self.pos = start + len;
+        self.remaining -= 1;
+        Some((bits, &self.buf[start..start + len]))
+    }
+
+    /// Next packet materialized as an owned [`Message`] (the wire copy a
+    /// send requires — the arena itself is never consumed).
+    pub fn next_message(&mut self) -> Option<Message> {
+        self.next_packet().map(|(bits, bytes)| Message {
+            bytes: bytes.to_vec(),
+            bits,
+        })
+    }
+
+    /// Packets not yet read.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(bytes: Vec<u8>, bits: u64) -> Message {
+        Message { bytes, bits }
+    }
+
+    #[test]
+    fn roundtrip_preserves_bytes_and_bits() {
+        let mut a = PacketArena::new();
+        let msgs = [
+            msg(vec![0xAB, 0xCD, 0xEF], 23), // misaligned tail
+            msg(Vec::new(), 0),              // empty packet
+            msg((0..67).collect(), 67 * 8),  // odd byte length
+        ];
+        for m in &msgs {
+            a.push(m);
+        }
+        assert_eq!(a.len(), 3);
+        let mut r = a.reader();
+        for m in &msgs {
+            let got = r.next_message().expect("packet present");
+            assert_eq!(&got, m);
+        }
+        assert!(r.next_packet().is_none());
+    }
+
+    #[test]
+    fn clear_recycles_capacity_across_batches() {
+        let mut a = PacketArena::new();
+        a.push(&msg(vec![1; 128], 1024));
+        let cap = a.buf.capacity();
+        a.clear();
+        assert!(a.is_empty());
+        assert_eq!(a.byte_len(), 0);
+        assert_eq!(a.buf.capacity(), cap, "clear must keep the allocation");
+        a.push(&msg(vec![2; 64], 511));
+        let mut r = a.reader();
+        let (bits, bytes) = r.next_packet().unwrap();
+        assert_eq!(bits, 511);
+        assert_eq!(bytes, &[2u8; 64][..]);
+        assert_eq!(r.remaining(), 0);
+    }
+}

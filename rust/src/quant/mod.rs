@@ -56,6 +56,7 @@
 //! | `SublinearCodec` | §7 (Alg 7–9) | [`sublinear`] | — |
 //! | QSGD L2/L∞, Suresh–Hadamard, vQSGD, EF-SignSGD, PowerSGD, TernGrad, Top-K | §9 comparators | [`baselines`] | default (`full32`: fused + range) |
 
+pub mod arena;
 pub mod baselines;
 pub mod bits;
 pub mod convex_hull;
@@ -66,6 +67,7 @@ pub mod lq;
 pub mod robust;
 pub mod sublinear;
 
+pub use arena::{PacketArena, PacketReader};
 pub use d4::D4Quantizer;
 pub use hadamard::RotatedLatticeQuantizer;
 pub use lattice::CubicLattice;

@@ -29,10 +29,26 @@ pub fn hash2(a: u64, b: u64) -> u64 {
     splitmix64(&mut s2)
 }
 
+/// Per-round shared-randomness seeds for a batched round window
+/// `[first_round, first_round + count)` — the one-fan-out-per-batch form
+/// of the per-round `hash2(seed, round)` reseeding the sequential round
+/// loop performs. Each element equals the sequential derivation exactly,
+/// so batching the derivation is a pure scheduling change: codecs,
+/// dither offsets and rotation signs built from these seeds are
+/// bit-identical to the per-round path.
+pub fn fork_round_seeds(seed: u64, first_round: u64, count: usize) -> Vec<u64> {
+    (0..count as u64)
+        .map(|b| hash2(seed, first_round + b))
+        .collect()
+}
+
 /// xoshiro256++ PRNG.
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
+    /// Cached second half of the last Box–Muller draw (see
+    /// [`Self::next_gaussian`]).
+    spare_gauss: Option<f64>,
 }
 
 impl Rng {
@@ -45,7 +61,10 @@ impl Rng {
             splitmix64(&mut sm),
             splitmix64(&mut sm),
         ];
-        Rng { s }
+        Rng {
+            s,
+            spare_gauss: None,
+        }
     }
 
     /// Derive an independent stream for a sub-component (e.g. machine id).
@@ -104,9 +123,16 @@ impl Rng {
         }
     }
 
-    /// Standard normal via Box–Muller (one value per call; simple and
-    /// adequate for workload generation).
+    /// Standard normal via Box–Muller. Each uniform pair yields *two*
+    /// independent normals (the cosine and sine projections of one
+    /// Rayleigh-radius draw); the sine half is cached and returned by the
+    /// next call, so a run of draws consumes one uniform per normal
+    /// instead of two. The stream is fully deterministic in the seed
+    /// (pinned by `gaussian_pairs_come_from_one_box_muller_draw`).
     pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(z) = self.spare_gauss.take() {
+            return z;
+        }
         // Avoid log(0).
         let u1 = loop {
             let u = self.next_f64();
@@ -115,7 +141,10 @@ impl Rng {
             }
         };
         let u2 = self.next_f64();
-        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_gauss = Some(r * theta.sin());
+        r * theta.cos()
     }
 
     /// Vector of standard normals.
@@ -196,6 +225,46 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.02, "mean {mean}");
         assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gaussian_pairs_come_from_one_box_muller_draw() {
+        // The spare cache must pin the stream exactly: draws 2k and 2k+1
+        // are the cosine and sine halves of one (u1, u2) uniform pair.
+        let mut g = Rng::new(123);
+        let gs: Vec<f64> = (0..6).map(|_| g.next_gaussian()).collect();
+        let mut u = Rng::new(123);
+        for pair in gs.chunks(2) {
+            let u1 = u.next_f64();
+            let u2 = u.next_f64();
+            assert!(u1 > 1e-300);
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            assert_eq!(pair[0], r * theta.cos());
+            assert_eq!(pair[1], r * theta.sin());
+        }
+        // Determinism across instances survives the cache.
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_gaussian(), b.next_gaussian());
+        }
+        // gaussian_vec rides the same cached stream.
+        let mut c = Rng::new(7);
+        let v = c.gaussian_vec(100);
+        let mut d = Rng::new(7);
+        for vi in &v {
+            assert_eq!(*vi, d.next_gaussian());
+        }
+    }
+
+    #[test]
+    fn fork_round_seeds_matches_per_round_reseeding() {
+        let seeds = fork_round_seeds(42, 1000, 5);
+        assert_eq!(seeds.len(), 5);
+        for (b, s) in seeds.iter().enumerate() {
+            assert_eq!(*s, hash2(42, 1000 + b as u64));
+        }
     }
 
     #[test]

@@ -47,6 +47,15 @@ impl Traffic {
     pub fn total_bits(&self) -> u64 {
         self.sent_bits + self.recv_bits
     }
+
+    /// Add another snapshot's counts into this one (the batch round
+    /// plane prefix-sums per-slot tallies into cumulative snapshots).
+    pub fn accumulate(&mut self, other: &Traffic) {
+        self.sent_bits += other.sent_bits;
+        self.recv_bits += other.recv_bits;
+        self.sent_msgs += other.sent_msgs;
+        self.recv_msgs += other.recv_msgs;
+    }
 }
 
 /// One machine's handle onto the cluster network.
@@ -203,7 +212,7 @@ impl Cluster {
 
 /// Summary statistics over per-machine traffic (the paper reports the
 /// worst machine and the mean).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct TrafficSummary {
     pub max_sent: u64,
     pub max_recv: u64,

@@ -6,10 +6,10 @@
 //! printed, making reproduction one `CASE_SEED=… cargo test` away.
 
 use dme::coordinator::{
-    mean_estimation_star, mean_estimation_tree, robust_variance_reduction, CodecSpec,
+    mean_estimation_star, mean_estimation_tree, robust_variance_reduction, CodecSpec, DmeBuilder,
 };
 use dme::linalg::{axpy, dist_inf, mean_vecs};
-use dme::quant::{LatticeQuantizer, RotatedLatticeQuantizer, VectorCodec};
+use dme::quant::{LatticeQuantizer, Message, PacketArena, RotatedLatticeQuantizer, VectorCodec};
 use dme::rng::{hash2, Rng};
 
 /// Run `prop` over `cases` generated cases; panics with the case seed.
@@ -576,5 +576,78 @@ fn prop_bitpack_roundtrip() {
         let (bytes, bits) = dme::quant::bits::pack(&vals, width);
         assert_eq!(bits, n as u64 * width as u64);
         assert_eq!(dme::quant::bits::unpack(&bytes, width, n), vals);
+    });
+}
+
+/// Message-arena packet framing (the batch round plane's staging buffer,
+/// `quant::PacketArena`): length-prefixed packets round-trip exactly —
+/// arbitrary byte lengths (misaligned bit tails included), empty
+/// packets, and arena reuse across batches with stale capacity.
+#[test]
+fn prop_packet_arena_framing_roundtrip() {
+    check("packet_arena", 200, |rng| {
+        let mut arena = PacketArena::new();
+        // Several batches through one arena: clear() must drop every
+        // stale packet while keeping the allocation.
+        for _batch in 0..3 {
+            let count = rng.next_below(6) as usize;
+            let msgs: Vec<Message> = (0..count)
+                .map(|_| {
+                    let len = rng.next_below(67) as usize;
+                    let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+                    // Bit count anywhere in the last byte (misaligned
+                    // packet tails are the common lattice-stream case).
+                    let bits = if len == 0 {
+                        0
+                    } else {
+                        len as u64 * 8 - rng.next_below(8)
+                    };
+                    Message { bytes, bits }
+                })
+                .collect();
+            arena.clear();
+            assert!(arena.is_empty());
+            for m in &msgs {
+                arena.push(m);
+            }
+            assert_eq!(arena.len(), msgs.len());
+            let mut r = arena.reader();
+            assert_eq!(r.remaining(), msgs.len());
+            for (i, m) in msgs.iter().enumerate() {
+                let got = r.next_message().expect("framed packet");
+                assert_eq!(&got, m, "packet {i}");
+            }
+            assert!(r.next_packet().is_none(), "no trailing packet");
+        }
+    });
+}
+
+/// Batch plane vs sequential rounds at random shapes: estimates, leaders
+/// and per-machine traffic must be bit-identical slot for slot (the
+/// deep per-field pin lives in `session_parity`; this sweeps shapes).
+#[test]
+fn prop_round_batch_matches_sequential_rounds() {
+    check("round_batch_parity", 25, |rng| {
+        let n = 2 + rng.next_below(5) as usize;
+        let d = 1 + rng.next_below(40) as usize;
+        let b_total = 1 + rng.next_below(5) as usize;
+        let seed = rng.next_u64();
+        let q = [4u32, 8, 16][rng.next_below(3) as usize];
+        let slots: Vec<Vec<Vec<f64>>> = (0..b_total)
+            .map(|_| (0..n).map(|_| rand_vec(rng, d, 30.0, 0.5)).collect())
+            .collect();
+        let ys: Vec<f64> = (0..b_total).map(|_| rng.uniform(0.8, 2.0)).collect();
+        let mk = || DmeBuilder::new(n, d).codec(CodecSpec::Lq { q }).seed(seed).build();
+        let mut batched = mk();
+        let mut seq = mk();
+        let outs = batched.round_batch_with_y(&slots, &ys);
+        for (s, o) in outs.iter().enumerate() {
+            let r = seq.round_with_y(&slots[s], ys[s]);
+            assert_eq!(o.round, r.round, "slot {s}");
+            assert_eq!(o.estimate, r.estimate, "slot {s}");
+            assert_eq!(o.leader, r.leader, "slot {s}");
+            assert_eq!(o.agreement, r.agreement, "slot {s}");
+            assert_eq!(o.round_traffic, r.round_traffic, "slot {s}");
+        }
     });
 }

@@ -174,6 +174,7 @@ fn star_sgd_cpusmall_like_converges() {
             period: 1,
         },
         w0: Some(vec![-1000.0; ds.dim()]),
+        batch_slots: 1,
     };
     let t = run_distributed_gd(
         &ds,

@@ -564,6 +564,147 @@ fn robust_vr_session_matches_reference() {
     assert_eq!(s.round_traffic, r.traffic);
 }
 
+// ----------------------------------------------------------------------
+// Batch-plane parity: `round_batch` is a pure scheduling change — slot b
+// of a batch starting at round r must be bit-identical (estimate,
+// outputs, diagnostics, per-machine traffic, cumulative summary) to a
+// sequential round at index r + b.
+// ----------------------------------------------------------------------
+
+fn assert_slot_eq(
+    o: &dme::coordinator::RoundOutcome,
+    r: &dme::coordinator::RoundOutcome,
+    ctx: &str,
+) {
+    assert_eq!(o.round, r.round, "{ctx} round");
+    assert_eq!(o.estimate, r.estimate, "{ctx} estimate");
+    assert_eq!(o.agreement, r.agreement, "{ctx} agreement");
+    assert_eq!(o.y_used, r.y_used, "{ctx} y_used");
+    assert_eq!(o.leader, r.leader, "{ctx} leader");
+    assert_eq!(o.leaves, r.leaves, "{ctx} leaves");
+    assert_eq!(o.q_used, r.q_used, "{ctx} q_used");
+    assert_eq!(o.outputs, r.outputs, "{ctx} outputs");
+    assert_eq!(o.decoded_at_leader, r.decoded_at_leader, "{ctx} decoded");
+    assert_eq!(o.round_traffic, r.round_traffic, "{ctx} round_traffic");
+    assert_eq!(o.traffic, r.traffic, "{ctx} cumulative traffic");
+}
+
+#[test]
+fn round_batch_slot_by_slot_bit_identical_to_sequential_rounds_star() {
+    let n = 6;
+    let d = 24;
+    for b_total in [1usize, 2, 7] {
+        let seed = 7000 + b_total as u64;
+        // Distinct inputs and a distinct explicit y per slot.
+        let slots: Vec<Vec<Vec<f64>>> = (0..b_total)
+            .map(|s| gen_inputs(n, d, 50.0, 0.4, seed * 10 + s as u64))
+            .collect();
+        let ys: Vec<f64> = (0..b_total).map(|s| 1.0 + 0.1 * s as f64).collect();
+        for diagnostics in [false, true] {
+            let mk = || {
+                DmeBuilder::new(n, d)
+                    .codec(CodecSpec::Lq { q: 16 })
+                    .seed(seed)
+                    .diagnostics(diagnostics)
+                    .build()
+            };
+            let mut batched = mk();
+            let mut seq = mk();
+            let outs = batched.round_batch_with_y(&slots, &ys);
+            assert_eq!(outs.len(), b_total);
+            for (s, o) in outs.iter().enumerate() {
+                let r = seq.round_with_y(&slots[s], ys[s]);
+                assert_slot_eq(o, &r, &format!("B={b_total} diag={diagnostics} slot={s}"));
+            }
+            // The sessions stay interchangeable after the batch: the next
+            // sequential round continues the same window on both.
+            let o = batched.round_with_y(&slots[0], 1.0);
+            let r = seq.round_with_y(&slots[0], 1.0);
+            assert_slot_eq(&o, &r, &format!("B={b_total} diag={diagnostics} post-batch"));
+        }
+    }
+}
+
+#[test]
+fn round_batch_slot_by_slot_bit_identical_to_sequential_rounds_tree() {
+    for (n, m) in [(8usize, 8usize), (7, 4)] {
+        for b_total in [1usize, 2, 7] {
+            let seed = 8000 + n as u64 + b_total as u64;
+            let slots: Vec<Vec<Vec<f64>>> = (0..b_total)
+                .map(|s| gen_inputs(n, 12, 20.0, 0.5, seed * 10 + s as u64))
+                .collect();
+            let ys: Vec<f64> = (0..b_total).map(|s| 1.5 + 0.2 * s as f64).collect();
+            let mk = || {
+                DmeBuilder::new(n, 12)
+                    .topology(Topology::Tree { m })
+                    .seed(seed)
+                    .build()
+            };
+            let mut batched = mk();
+            let mut seq = mk();
+            let outs = batched.round_batch_with_y(&slots, &ys);
+            for (s, o) in outs.iter().enumerate() {
+                let r = seq.round_with_y(&slots[s], ys[s]);
+                assert_slot_eq(o, &r, &format!("tree n={n} m={m} B={b_total} slot={s}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn round_batch_parity_for_fused_codecs() {
+    // The RLQ / D4 / full-precision fused paths ride the batch plane
+    // identically.
+    let n = 5;
+    let d = 32;
+    let slots: Vec<Vec<Vec<f64>>> = (0..2).map(|s| gen_inputs(n, d, 10.0, 0.4, 9000 + s)).collect();
+    let ys = [1.0, 1.1];
+    for spec in [
+        CodecSpec::Rlq { q: 16 },
+        CodecSpec::D4 { q: 16 },
+        CodecSpec::Full,
+    ] {
+        let mut batched = DmeBuilder::new(n, d).codec(spec).seed(19).build();
+        let mut seq = DmeBuilder::new(n, d).codec(spec).seed(19).build();
+        let outs = batched.round_batch_with_y(&slots, &ys);
+        for (s, o) in outs.iter().enumerate() {
+            let r = seq.round_with_y(&slots[s], ys[s]);
+            assert_slot_eq(o, &r, &format!("{} slot={s}", spec.label()));
+        }
+    }
+}
+
+#[test]
+fn round_batch_mixed_dim_slots_match_per_dimension_sessions() {
+    // Variable-width slots (the per-layer use): slot s of the batch must
+    // equal round s of a session built at that slot's dimension.
+    let n = 4;
+    let dims = [16usize, 5, 33];
+    let seed = 555;
+    let spec = CodecSpec::Lq { q: 16 };
+    let slots: Vec<Vec<Vec<f64>>> = dims
+        .iter()
+        .enumerate()
+        .map(|(s, &d_s)| gen_inputs(n, d_s, 100.0, 0.45, seed + s as u64))
+        .collect();
+    let ys = [1.0, 0.7, 1.3];
+    let mut batched = DmeBuilder::new(n, 33).codec(spec).seed(seed).build();
+    let outs = batched.round_batch_with_y(&slots, &ys);
+    for (s, o) in outs.iter().enumerate() {
+        let mut seq = DmeBuilder::new(n, dims[s]).codec(spec).seed(seed).build();
+        seq.set_round(s as u64);
+        let r = seq.round_with_y(&slots[s], ys[s]);
+        // Everything per-slot must match; the cumulative summary is the
+        // one field that cannot (the per-dim reference session never ran
+        // the batch's earlier slots).
+        assert_eq!(o.round, r.round, "mixed-dim slot={s} round");
+        assert_eq!(o.estimate, r.estimate, "mixed-dim slot={s} estimate");
+        assert_eq!(o.agreement, r.agreement, "mixed-dim slot={s} agreement");
+        assert_eq!(o.leader, r.leader, "mixed-dim slot={s} leader");
+        assert_eq!(o.round_traffic, r.round_traffic, "mixed-dim slot={s} traffic");
+    }
+}
+
 #[test]
 fn session_round_counter_reproduces_any_round() {
     // set_round pins the shared randomness: round r of a fresh session
