@@ -152,7 +152,7 @@ fn encode_plane_bench(b: &mut Bencher) {
             msg.bits
         });
         b.bench(&format!("encode lq d={d} chunk-parallel"), Some(d as u64), || {
-            encode_chunked(&lq, &x, &mut msg, 8192);
+            encode_chunked(&mut lq, &x, &mut rng, &mut msg, 8192);
             msg.bits
         });
         b.bench(&format!("encode d4 d={d} sequential"), Some(d as u64), || {
@@ -160,7 +160,7 @@ fn encode_plane_bench(b: &mut Bencher) {
             msg.bits
         });
         b.bench(&format!("encode d4 d={d} chunk-parallel"), Some(d as u64), || {
-            encode_chunked(&d4, &x, &mut msg, 8192);
+            encode_chunked(&mut d4, &x, &mut rng, &mut msg, 8192);
             msg.bits
         });
         println!();

@@ -11,6 +11,12 @@
 //! the seed's two-pass radix-2 FWHT (`fwht_reference`) vs the fused
 //! blocked multi-radix rotation, and sequential `encode_into` vs the
 //! chunk-parallel `encode_chunked`, at d ∈ {128, 4096, 65536}.
+//!
+//! The `baseline_bench` section does the same for the comparator suite
+//! (QSGD both norms, Suresh–Hadamard, TernGrad, EF-Sign, Top-K): seed
+//! scalar encode vs fused `encode_into` vs chunk-parallel
+//! `encode_chunked`, and decode+axpy vs the fused (sparse, for Top-K)
+//! `decode_accumulate_into`, at the same dimensions.
 
 use dme::bench::Bencher;
 use dme::coordinator::CodecSpec;
@@ -97,7 +103,7 @@ fn encode_bench(b: &mut Bencher) {
             msg.bits
         });
         b.bench(&format!("lq q=16 encode_chunked d={d}"), Some(d as u64), || {
-            encode_chunked(&lq, &x, &mut msg, 4096);
+            encode_chunked(&mut lq, &x, &mut rng, &mut msg, 4096);
             msg.bits
         });
         let mut d4 = D4Quantizer::from_y(d, 16, 1.0, &mut shared);
@@ -106,8 +112,352 @@ fn encode_bench(b: &mut Bencher) {
             msg.bits
         });
         b.bench(&format!("d4 q=16 encode_chunked d={d}"), Some(d as u64), || {
-            encode_chunked(&d4, &x, &mut msg, 4096);
+            encode_chunked(&mut d4, &x, &mut rng, &mut msg, 4096);
             msg.bits
+        });
+        println!();
+    }
+}
+
+/// The seed's scalar per-coordinate baseline encodes (one `next_f64` +
+/// one `push` per coordinate) — the references `baseline_bench` measures
+/// the fused kernels against. `baseline_bench` asserts these copies are
+/// still bit-identical to the fused library paths before timing a single
+/// row (the `baseline_*` prop tests pin the library against the test
+/// file's own copies), so the rows compare wall-clock only.
+mod baseline_scalar {
+    use dme::quant::bits::{width_for, BitWriter};
+    use dme::quant::baselines::{Qsgd, QsgdNorm, SureshHadamard};
+    use dme::quant::Message;
+    use dme::rng::Rng;
+
+    pub fn qsgd(c: &Qsgd, x: &[f64], rng: &mut Rng, out: &mut Message) {
+        let levels = c.levels;
+        let w_lvl = width_for(levels as u64 + 1);
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        match c.norm {
+            QsgdNorm::L2 => {
+                let norm = dme::linalg::norm2(x);
+                w.push_f64(norm);
+                for &v in x {
+                    let sign = if v < 0.0 { 1u64 } else { 0u64 };
+                    let scaled = if norm > 0.0 {
+                        v.abs() / norm * levels as f64
+                    } else {
+                        0.0
+                    };
+                    let low = scaled.floor();
+                    let lvl = low as u64 + u64::from(rng.next_f64() < scaled - low);
+                    w.push(sign, 1);
+                    w.push(lvl.min(levels as u64), w_lvl);
+                }
+            }
+            QsgdNorm::Linf => {
+                let mn = x.iter().cloned().fold(f64::INFINITY, f64::min);
+                let mx = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let range = (mx - mn).max(0.0);
+                w.push_f64(mn);
+                w.push_f64(mx);
+                for &v in x {
+                    let scaled = if range > 0.0 {
+                        (v - mn) / range * levels as f64
+                    } else {
+                        0.0
+                    };
+                    let low = scaled.floor();
+                    let lvl =
+                        (low as u64 + u64::from(rng.next_f64() < scaled - low)).min(levels as u64);
+                    w.push(lvl, w_lvl);
+                }
+            }
+        }
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+
+    pub fn suresh(c: &SureshHadamard, x: &[f64], rng: &mut Rng, out: &mut Message) {
+        let levels = c.levels;
+        let w_lvl = width_for(levels as u64 + 1);
+        let rx = c.rotation.forward(x); // allocating two-pass seed shape
+        let mn = rx.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mx = rx.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let range = (mx - mn).max(0.0);
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        w.push_f64(mn);
+        w.push_f64(mx);
+        for &v in &rx {
+            let scaled = if range > 0.0 {
+                (v - mn) / range * levels as f64
+            } else {
+                0.0
+            };
+            let low = scaled.floor();
+            let lvl = (low as u64 + u64::from(rng.next_f64() < scaled - low)).min(levels as u64);
+            w.push(lvl, w_lvl);
+        }
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+
+    pub fn terngrad(x: &[f64], rng: &mut Rng, out: &mut Message) {
+        let m = dme::linalg::norm_inf(x);
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        w.push_f64(m);
+        for &v in x {
+            let t = if m > 0.0 && rng.next_f64() < v.abs() / m {
+                if v < 0.0 { 2u64 } else { 1u64 }
+            } else {
+                0u64
+            };
+            w.push(t, 2);
+        }
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+
+    pub fn efsign(error: &mut [f64], x: &[f64], out: &mut Message) {
+        let d = x.len();
+        let p: Vec<f64> = x.iter().zip(error.iter()).map(|(a, e)| a + e).collect();
+        let scale = dme::linalg::norm1(&p) / d as f64;
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        w.push_f64(scale);
+        for &v in &p {
+            w.push(u64::from(v < 0.0), 1);
+        }
+        for (e, &v) in error.iter_mut().zip(&p) {
+            let dec = if v < 0.0 { -scale } else { scale };
+            *e = v - dec;
+        }
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+
+    /// Seed Top-K ranking: full stable sort (the fused path uses an O(d)
+    /// partition instead).
+    pub fn topk_sort(d: usize, k: usize, error: &mut [f64], x: &[f64], out: &mut Message) {
+        let iw = width_for(d as u64).max(1);
+        let p: Vec<f64> = x.iter().zip(error.iter()).map(|(a, e)| a + e).collect();
+        let mut idx: Vec<usize> = (0..d).collect();
+        idx.sort_by(|&a, &b| p[b].abs().partial_cmp(&p[a].abs()).unwrap());
+        idx.truncate(k);
+        idx.sort_unstable();
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        for &i in &idx {
+            w.push(i as u64, iw);
+            w.push_f32(p[i] as f32);
+        }
+        let mut kept = vec![false; d];
+        for &i in &idx {
+            kept[i] = true;
+        }
+        for i in 0..d {
+            error[i] = if kept[i] {
+                p[i] - p[i] as f32 as f64
+            } else {
+                p[i]
+            };
+        }
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+}
+
+/// Comparator codecs on the blocked data plane: per codec at d ∈
+/// {128, 4096, 65536}, the seed scalar encode vs the fused block-kernel
+/// `encode_into` vs the chunk-parallel `encode_chunked`, and the
+/// decode-then-axpy fold vs the fused `decode_accumulate_into` (sparse
+/// for Top-K). Every pair is bit-identical; the rows measure wall-clock
+/// only — this is the experiment harness's comparator cost, which
+/// `experiments_bench` picks up end to end.
+fn baseline_bench(b: &mut Bencher) {
+    use dme::quant::baselines::{EfSignSgd, Qsgd, QsgdNorm, SureshHadamard, TernGrad, TopK};
+
+    println!("# baseline_bench — comparator suite: scalar vs fused vs chunk-parallel\n");
+
+    // One-time parity gate before any timing: the scalar references
+    // above must still be bit-identical to the fused library paths (the
+    // prop tests pin the library against *their own* scalar copies; this
+    // pins the bench's copies, so a drifted reference can't silently
+    // turn the scalar-vs-fused rows into fiction).
+    {
+        let d = 257; // awkward non-power-of-two, pads for Suresh
+        let mut prng = Rng::new(91);
+        let x: Vec<f64> = (0..d).map(|_| prng.uniform(-3.0, 3.0)).collect();
+        let mut msg = Message::empty();
+        for norm in [QsgdNorm::L2, QsgdNorm::Linf] {
+            let mut c = Qsgd::new(d, 16, norm);
+            let mut ra = prng.clone();
+            baseline_scalar::qsgd(&c, &x, &mut prng, &mut msg);
+            assert_eq!(c.encode(&x, &mut ra), msg, "qsgd scalar reference drifted");
+        }
+        let mut shared = Rng::new(92);
+        let mut c = SureshHadamard::new(d, 16, &mut shared);
+        let mut ra = prng.clone();
+        baseline_scalar::suresh(&c, &x, &mut prng, &mut msg);
+        assert_eq!(c.encode(&x, &mut ra), msg, "suresh scalar reference drifted");
+        let mut c = TernGrad::new(d);
+        let mut ra = prng.clone();
+        baseline_scalar::terngrad(&x, &mut prng, &mut msg);
+        assert_eq!(c.encode(&x, &mut ra), msg, "terngrad scalar reference drifted");
+        let mut c = EfSignSgd::new(d);
+        let mut err = vec![0.0; d];
+        for step in 0..2 {
+            baseline_scalar::efsign(&mut err, &x, &mut msg);
+            let got = c.encode(&x, &mut prng);
+            assert_eq!(got, msg, "ef-sign scalar reference drifted (step {step})");
+        }
+        let k = 9;
+        let mut c = TopK::new(d, k);
+        let mut err = vec![0.0; d];
+        for step in 0..2 {
+            baseline_scalar::topk_sort(d, k, &mut err, &x, &mut msg);
+            let got = c.encode(&x, &mut prng);
+            assert_eq!(got, msg, "topk scalar reference drifted (step {step})");
+        }
+    }
+    for d in [128usize, 4096, 65536] {
+        let mut rng = Rng::new(31);
+        let x: Vec<f64> = (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let mut msg = Message::empty();
+        let weight = 1.0 / 16.0;
+
+        // QSGD (both norms).
+        for norm in [QsgdNorm::L2, QsgdNorm::Linf] {
+            let tag = if norm == QsgdNorm::L2 { "l2 " } else { "linf" };
+            let mut c = Qsgd::new(d, 16, norm);
+            b.bench(&format!("qsgd-{tag} encode scalar  d={d}"), Some(d as u64), || {
+                baseline_scalar::qsgd(&c, &x, &mut rng, &mut msg);
+                msg.bits
+            });
+            b.bench(&format!("qsgd-{tag} encode fused   d={d}"), Some(d as u64), || {
+                c.encode_into(&x, &mut rng, &mut msg);
+                msg.bits
+            });
+            b.bench(&format!("qsgd-{tag} encode chunked d={d}"), Some(d as u64), || {
+                encode_chunked(&mut c, &x, &mut rng, &mut msg, 4096);
+                msg.bits
+            });
+            let m = c.encode(&x, &mut rng);
+            let mut acc = vec![0.0; d];
+            b.bench(&format!("qsgd-{tag} fold decode+axpy d={d}"), Some(d as u64), || {
+                let z = c.decode(&m, &x);
+                dme::linalg::axpy(&mut acc, weight, &z);
+                acc[0]
+            });
+            b.bench(&format!("qsgd-{tag} fold fused       d={d}"), Some(d as u64), || {
+                c.decode_accumulate_into(&m, &x, weight, &mut acc);
+                acc[0]
+            });
+        }
+
+        // Suresh–Hadamard.
+        let mut shared = Rng::new(32);
+        let mut c = SureshHadamard::new(d, 16, &mut shared);
+        b.bench(&format!("hadamard encode scalar  d={d}"), Some(d as u64), || {
+            baseline_scalar::suresh(&c, &x, &mut rng, &mut msg);
+            msg.bits
+        });
+        b.bench(&format!("hadamard encode fused   d={d}"), Some(d as u64), || {
+            c.encode_into(&x, &mut rng, &mut msg);
+            msg.bits
+        });
+        b.bench(&format!("hadamard encode chunked d={d}"), Some(d as u64), || {
+            encode_chunked(&mut c, &x, &mut rng, &mut msg, 4096);
+            msg.bits
+        });
+        let m = c.encode(&x, &mut rng);
+        let mut acc = vec![0.0; d];
+        b.bench(&format!("hadamard fold decode+axpy d={d}"), Some(d as u64), || {
+            let z = c.decode(&m, &x);
+            dme::linalg::axpy(&mut acc, weight, &z);
+            acc[0]
+        });
+        b.bench(&format!("hadamard fold fused       d={d}"), Some(d as u64), || {
+            c.decode_accumulate_into(&m, &x, weight, &mut acc);
+            acc[0]
+        });
+
+        // TernGrad.
+        let mut c = TernGrad::new(d);
+        b.bench(&format!("terngrad encode scalar  d={d}"), Some(d as u64), || {
+            baseline_scalar::terngrad(&x, &mut rng, &mut msg);
+            msg.bits
+        });
+        b.bench(&format!("terngrad encode fused   d={d}"), Some(d as u64), || {
+            c.encode_into(&x, &mut rng, &mut msg);
+            msg.bits
+        });
+        b.bench(&format!("terngrad encode chunked d={d}"), Some(d as u64), || {
+            encode_chunked(&mut c, &x, &mut rng, &mut msg, 4096);
+            msg.bits
+        });
+        let m = c.encode(&x, &mut rng);
+        let mut acc = vec![0.0; d];
+        b.bench(&format!("terngrad fold decode+axpy d={d}"), Some(d as u64), || {
+            let z = c.decode(&m, &x);
+            dme::linalg::axpy(&mut acc, weight, &z);
+            acc[0]
+        });
+        b.bench(&format!("terngrad fold fused       d={d}"), Some(d as u64), || {
+            c.decode_accumulate_into(&m, &x, weight, &mut acc);
+            acc[0]
+        });
+
+        // EF-SignSGD (stateful: scalar and fused keep separate memories).
+        let mut err = vec![0.0; d];
+        let mut c = EfSignSgd::new(d);
+        b.bench(&format!("ef-sign encode scalar  d={d}"), Some(d as u64), || {
+            baseline_scalar::efsign(&mut err, &x, &mut msg);
+            msg.bits
+        });
+        b.bench(&format!("ef-sign encode fused   d={d}"), Some(d as u64), || {
+            c.encode_into(&x, &mut rng, &mut msg);
+            msg.bits
+        });
+        b.bench(&format!("ef-sign encode chunked d={d}"), Some(d as u64), || {
+            encode_chunked(&mut c, &x, &mut rng, &mut msg, 4096);
+            msg.bits
+        });
+        let m = c.encode(&x, &mut rng);
+        let mut acc = vec![0.0; d];
+        b.bench(&format!("ef-sign fold decode+axpy d={d}"), Some(d as u64), || {
+            let z = c.decode(&m, &x);
+            dme::linalg::axpy(&mut acc, weight, &z);
+            acc[0]
+        });
+        b.bench(&format!("ef-sign fold fused       d={d}"), Some(d as u64), || {
+            c.decode_accumulate_into(&m, &x, weight, &mut acc);
+            acc[0]
+        });
+
+        // Top-K: O(d log d) sort vs O(d) partition ranking, dense vs
+        // sparse fold.
+        let k = (d / 64).max(1);
+        let mut err = vec![0.0; d];
+        let mut c = TopK::new(d, k);
+        b.bench(&format!("topk(k={k}) encode sort   d={d}"), Some(d as u64), || {
+            baseline_scalar::topk_sort(d, k, &mut err, &x, &mut msg);
+            msg.bits
+        });
+        b.bench(&format!("topk(k={k}) encode select d={d}"), Some(d as u64), || {
+            c.encode_into(&x, &mut rng, &mut msg);
+            msg.bits
+        });
+        let m = c.encode(&x, &mut rng);
+        let mut acc = vec![0.0; d];
+        b.bench(&format!("topk(k={k}) fold dense    d={d}"), Some(d as u64), || {
+            let z = c.decode(&m, &x);
+            dme::linalg::axpy(&mut acc, weight, &z);
+            acc[0]
+        });
+        b.bench(&format!("topk(k={k}) fold sparse   d={d}"), Some(d as u64), || {
+            c.decode_accumulate_into(&m, &x, weight, &mut acc);
+            acc[0]
         });
         println!();
     }
@@ -164,6 +514,7 @@ fn main() {
     }
 
     encode_bench(&mut b);
+    baseline_bench(&mut b);
 
     b.write_json("quant_bench").expect("write bench json");
 }

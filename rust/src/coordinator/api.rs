@@ -39,10 +39,15 @@
 //! with RLQSGD's rotation a single-pass cache-blocked multi-radix FWHT —
 //! so sessions pick the whole vectorized encode plane up automatically,
 //! bit-identically to the scalar per-coordinate encode (pinned by
-//! `rust/tests/session_parity.rs`). A machine encoding one huge gradient
-//! can additionally shard the pack across cores with
-//! [`crate::quant::encode_chunked`], the write-side twin of the chunked
-//! fold.
+//! `rust/tests/session_parity.rs`). The baseline comparators ride the
+//! same surface (fused block encode fed by bulk uniforms, fused fold
+//! kernels — see [`crate::quant::baselines`] §Perf), so head-to-head
+//! experiment sessions are fast on *both* sides of the comparison. A
+//! machine encoding one huge gradient can additionally shard the pack
+//! across cores with [`crate::quant::encode_chunked`] (codecs gated by
+//! [`crate::quant::VectorCodec::supports_encode_range`]: the lattice
+//! family minus RLQSGD, full precision, and the fixed-width baselines),
+//! the write-side twin of the chunked fold.
 //!
 //! With the data plane vectorized, the per-round *control plane* — one
 //! command/response channel crossing per worker (~20 µs/machine), one

@@ -12,9 +12,12 @@
 //! fixed-width bitstream is random-access, so each thread seeks straight
 //! to its chunk's bit offset in every message. The chunked fold pays off
 //! only for codecs that *override* `decode_accumulate_range` with a real
-//! seek (the lattice family, full precision); codecs on the allocating
-//! default would decode the full vector once per chunk, so stick with
-//! [`fold_mean`] for those.
+//! seek: the lattice family, full precision, and the fixed-width
+//! baselines (QSGD both norms, TernGrad, EF-Sign — their byte-aligned
+//! headers don't disturb the seek; Top-K's range fold is sparse and
+//! O(k)). Codecs on the allocating default — and Suresh–Hadamard, whose
+//! global rotation forces a full dequant per chunk — would decode the
+//! full vector once per chunk, so stick with [`fold_mean`] for those.
 //!
 //! Both folds add per coordinate in the same pinned order (part 0 first),
 //! so `fold_mean`, `fold_mean_chunked`, and the session leader's
@@ -71,13 +74,15 @@ pub fn fold_mean(
 /// [`fold_mean`], so the result is bit-identical — sharding changes
 /// wall-clock, never the estimate.
 ///
-/// Requires a `Sync` codec (the lattice family minus RLQSGD, whose
-/// decode scratch is interior-mutable — and whose global rotation rules
-/// out range decoding anyway). Only worth calling for codecs that
-/// override [`VectorCodec::decode_accumulate_range`] with a seek-based
-/// kernel (`LatticeQuantizer`, `D4Quantizer`, `FullPrecision`): on the
-/// default implementation every chunk re-decodes the full vector, which
-/// is strictly more work than [`fold_mean`].
+/// Requires a `Sync` codec (everything but RLQSGD, whose decode scratch
+/// is interior-mutable — and whose global rotation rules out range
+/// decoding anyway). Only worth calling for codecs that override
+/// [`VectorCodec::decode_accumulate_range`] with a seek-based kernel
+/// (`LatticeQuantizer`, `D4Quantizer`, `FullPrecision`, and the
+/// fixed-width baselines QSGD / TernGrad / EF-Sign; Top-K's override is
+/// sparse): on the default implementation — and on Suresh–Hadamard's
+/// rotation-bound override — every chunk re-decodes the full vector,
+/// which is strictly more work than [`fold_mean`].
 pub fn fold_mean_chunked<C: VectorCodec + Sync + ?Sized>(
     codec: &C,
     parts: &[FoldPart],

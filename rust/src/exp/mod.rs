@@ -6,6 +6,16 @@
 //! `results/eN.txt`. Absolute values differ from the paper's testbed; the
 //! *shape* (who wins, by what factor, where crossovers fall) is the
 //! reproduction target.
+//!
+//! §Perf: these sweeps spend most of their codec time in the *comparator*
+//! codecs (QSGD, Suresh–Hadamard, EF-Sign, …), not the paper's own — every
+//! experiment pits them head to head. Since the baseline suite rides the
+//! blocked data plane (`quant::baselines` §Perf: fused block encode fed by
+//! bulk uniforms, fused fold kernels, all bit-identical to the seed scalar
+//! loops), the harness picks the win up automatically through the session's
+//! `encode_into`/`decode_accumulate_into` calls — reports are unchanged
+//! byte for byte, only wall-clock moves (`baseline_bench` quantifies it;
+//! `experiments_bench` shows it end to end).
 
 pub mod ablation;
 pub mod e1_norms;

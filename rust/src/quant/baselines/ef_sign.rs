@@ -4,8 +4,19 @@
 //! Encoder state: the error memory `e`. Each step compresses `p = x + e`
 //! to `sign(p)·‖p‖₁/d` (1 bit/coordinate + one float) and stores the
 //! residual back into `e`. The decode side is stateless.
+//!
+//! §Perf: a 64-bit scale header plus 1-bit sign fields — the full
+//! fast-path surface (see [`super`] §Perf). [`VectorCodec::encode_prepare`]
+//! is where the statefulness lives: it forms `p = x + e` into scratch,
+//! computes the scale, and applies the error-feedback update, leaving
+//! `encode_range` a pure `&self` sign-pack over the scratch
+//! ([`BitWriter::push_block`], 64 signs per word store) that threads can
+//! shard ([`crate::quant::encode_chunked`]). Every decode entry point is
+//! one `decode_fold` block loop; `decode_accumulate_range` seeks straight
+//! to its chunk. All bit-identical to the seed scalar path (pinned in
+//! `rust/tests/prop.rs`).
 
-use crate::quant::bits::{BitReader, BitWriter};
+use crate::quant::bits::{byte_align_fields, BitReader, BitWriter};
 use crate::quant::{Message, VectorCodec};
 use crate::rng::Rng;
 
@@ -14,6 +25,11 @@ pub struct EfSignSgd {
     pub d: usize,
     /// Error-feedback memory (encoder side).
     pub error: Vec<f64>,
+    /// `x + e` scratch formed by `encode_prepare` (what the sign fields
+    /// are read from).
+    p: Vec<f64>,
+    /// `‖p‖₁/d` header captured by `encode_prepare`.
+    scale: f64,
 }
 
 impl EfSignSgd {
@@ -21,11 +37,33 @@ impl EfSignSgd {
         EfSignSgd {
             d,
             error: vec![0.0; d],
+            p: Vec::new(),
+            scale: 0.0,
         }
     }
 
     pub fn reset(&mut self) {
         self.error.iter_mut().for_each(|e| *e = 0.0);
+    }
+
+    /// The shared fused decode loop (scale header, then 1-bit signs
+    /// through the block kernel); every decode entry point is this loop
+    /// with a different sink.
+    fn decode_fold(&self, msg: &Message, lo: usize, len: usize, mut emit: impl FnMut(usize, f64)) {
+        const BLOCK: usize = 128;
+        let mut r = BitReader::new(&msg.bytes);
+        let scale = r.read_f64();
+        r.seek(64 + lo as u64);
+        let mut fields = [0u64; BLOCK];
+        let mut done = 0;
+        while done < len {
+            let take = (len - done).min(BLOCK);
+            r.read_block(1, &mut fields[..take]);
+            for (j, &f) in fields[..take].iter().enumerate() {
+                emit(lo + done + j, if f == 1 { -scale } else { scale });
+            }
+            done += take;
+        }
     }
 }
 
@@ -38,30 +76,105 @@ impl VectorCodec for EfSignSgd {
         self.d
     }
 
-    fn encode(&mut self, x: &[f64], _rng: &mut Rng) -> Message {
+    /// Sequential pre-pass — and the codec's one stateful step: form
+    /// `p = x + e`, compute the scale, update the error memory
+    /// `e ← p − decode(msg)`. Call it exactly once per logical encode
+    /// (`encode`/`encode_into` do; so does `encode_chunked`).
+    fn encode_prepare(&mut self, x: &[f64], _rng: &mut Rng) {
         assert_eq!(x.len(), self.d);
-        let p: Vec<f64> = x.iter().zip(&self.error).map(|(a, e)| a + e).collect();
-        let scale = crate::linalg::norm1(&p) / self.d as f64;
-        let mut w = BitWriter::with_capacity(self.d + 64);
-        w.push_f64(scale);
-        for &v in &p {
-            w.push(if v < 0.0 { 1 } else { 0 }, 1);
-        }
-        // Update error memory: e ← p − decode(msg).
-        for (e, &v) in self.error.iter_mut().zip(&p) {
+        self.p.clear();
+        self.p.extend(x.iter().zip(&self.error).map(|(a, e)| a + e));
+        self.scale = crate::linalg::norm1(&self.p) / self.d as f64;
+        let scale = self.scale;
+        for (e, &v) in self.error.iter_mut().zip(&self.p) {
             let dec = if v < 0.0 { -scale } else { scale };
             *e = v - dec;
         }
+    }
+
+    fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message {
+        self.encode_prepare(x, rng);
+        let mut w = BitWriter::with_capacity(self.d + 64);
+        self.encode_range(x, 0, self.d, &mut w);
         let (bytes, bits) = w.finish();
         Message { bytes, bits }
     }
 
-    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
-        let mut r = BitReader::new(&msg.bytes);
-        let scale = r.read_f64();
-        (0..self.d)
-            .map(|_| if r.read(1) == 1 { -scale } else { scale })
-            .collect()
+    /// Zero-realloc encode: same kernel, recycled scratch bytes.
+    fn encode_into(&mut self, x: &[f64], rng: &mut Rng, out: &mut Message) {
+        self.encode_prepare(x, rng);
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        self.encode_range(x, 0, self.d, &mut w);
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+
+    /// Fused block sign-pack for coordinates `lo..lo + len` over the
+    /// prepared `p = x + e` (header emitted by the `lo == 0` chunk).
+    /// Requires a preceding [`Self::encode_prepare`] for the same `x`.
+    fn encode_range(&self, x: &[f64], lo: usize, len: usize, w: &mut BitWriter) {
+        const BLOCK: usize = 128;
+        assert_eq!(x.len(), self.d);
+        assert!(lo + len <= self.d);
+        assert_eq!(
+            self.p.len(),
+            self.d,
+            "encode_prepare must precede encode_range"
+        );
+        if lo == 0 {
+            w.push_f64(self.scale);
+        }
+        let mut fields = [0u64; BLOCK];
+        let mut done = 0;
+        while done < len {
+            let take = (len - done).min(BLOCK);
+            let base = lo + done;
+            for (j, f) in fields[..take].iter_mut().enumerate() {
+                *f = u64::from(self.p[base + j] < 0.0);
+            }
+            w.push_block(&fields[..take], 1);
+            done += take;
+        }
+    }
+
+    fn supports_encode_range(&self) -> bool {
+        true
+    }
+
+    fn encode_chunk_align(&self) -> usize {
+        byte_align_fields(1)
+    }
+
+    fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.d];
+        self.decode_into(msg, reference, &mut out);
+        out
+    }
+
+    fn decode_into(&self, msg: &Message, _reference: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.d);
+        self.decode_fold(msg, 0, self.d, |idx, v| out[idx] = v);
+    }
+
+    /// Fused streaming-fold kernel: one pass bitstream → accumulator.
+    fn decode_accumulate_into(&self, msg: &Message, _reference: &[f64], weight: f64, acc: &mut [f64]) {
+        assert_eq!(acc.len(), self.d);
+        self.decode_fold(msg, 0, self.d, |idx, v| acc[idx] += weight * v);
+    }
+
+    /// Chunk-sharded fold kernel: seeks past the header to the chunk's
+    /// 1-bit field offset.
+    fn decode_accumulate_range(
+        &self,
+        msg: &Message,
+        _reference: &[f64],
+        weight: f64,
+        lo: usize,
+        acc: &mut [f64],
+    ) {
+        assert!(lo + acc.len() <= self.d);
+        self.decode_fold(msg, lo, acc.len(), |idx, v| acc[idx - lo] += weight * v);
     }
 }
 

@@ -27,11 +27,8 @@ impl VectorCodec for FullPrecision {
     }
 
     fn encode(&mut self, x: &[f64], _rng: &mut Rng) -> Message {
-        assert_eq!(x.len(), self.d);
         let mut w = BitWriter::with_capacity(self.d * 32);
-        for &v in x {
-            w.push_f32(v as f32);
-        }
+        self.encode_range(x, 0, self.d, &mut w);
         let (bytes, bits) = w.finish();
         Message { bytes, bits }
     }
@@ -42,11 +39,8 @@ impl VectorCodec for FullPrecision {
     }
 
     fn encode_into(&mut self, x: &[f64], _rng: &mut Rng, out: &mut Message) {
-        assert_eq!(x.len(), self.d);
         let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
-        for &v in x {
-            w.push_f32(v as f32);
-        }
+        self.encode_range(x, 0, self.d, &mut w);
         let (bytes, bits) = w.finish();
         out.bytes = bytes;
         out.bits = bits;

@@ -10,6 +10,46 @@
 //! | [`PowerSgd`] | Vogels et al. 2019 | E7 |
 //! | [`TernGrad`] | Wen et al. 2017 | extension |
 //! | [`TopK`] | sparsification baseline | extension |
+//!
+//! # §Perf — the comparator suite on the blocked data plane
+//!
+//! The paper's experiments (E1–E8 + ablation) measure the lattice codecs
+//! *against* these baselines, so comparator throughput bounds every
+//! sweep's wall-clock. All eight ride the same fast-path surface as the
+//! lattice family (see [`crate::quant`] §Perf):
+//!
+//! * **Fixed-width baselines** — [`Qsgd`] (both norms),
+//!   [`SureshHadamard`], [`TernGrad`], [`EfSignSgd`], plus
+//!   [`FullPrecision`] — have a byte-aligned float header followed by
+//!   one fixed-width field per (padded, for Suresh) coordinate. They
+//!   implement the *full* surface and advertise
+//!   `supports_encode_range() == true`: zero-realloc
+//!   `encode_into`/`decode_into`; fused block encode through
+//!   [`crate::quant::bits::BitWriter::push_block`] with stochastic
+//!   rounding fed by one bulk [`crate::rng::Rng::fill_uniform`] in
+//!   `encode_prepare` (stream-identical to the seed's per-coordinate
+//!   draws); a shared `decode_fold` block loop
+//!   ([`crate::quant::bits::BitReader::read_block`]) behind
+//!   `decode_accumulate_into`; and seekable `decode_accumulate_range` /
+//!   `encode_range` so they ride
+//!   [`crate::coordinator::fold_mean_chunked`],
+//!   [`crate::quant::encode_chunked`], and the batched session arenas
+//!   end to end. Suresh–Hadamard additionally uses the one-pass scratch
+//!   rotation (`Rotation::forward_into`/`inverse_in_place`); its global
+//!   rotation makes the *range* fold correct but not sublinear, and its
+//!   `wire_fields()` is the padded rotated dimension.
+//! * **Structured baselines** — [`TopK`] ranks in O(d)
+//!   (`select_nth_unstable_by` over `total_cmp`) and folds *sparsely*
+//!   (k entries touched, never a d-length temporary); [`PowerSgd`] and
+//!   [`VqsgdCrossPolytope`] get zero-realloc `encode_into`/`decode_into`
+//!   but no range kernels (matrix factors / repetition fields have no
+//!   coordinate sub-stream).
+//!
+//! Every fused path is bit-identical to the seed scalar path — same RNG
+//! draw order, same IEEE expression order — pinned per codec by the
+//! `baseline_*` prop tests in `rust/tests/prop.rs` and measured in
+//! `quant_bench`'s `baseline_bench` section (scalar vs fused vs
+//! chunk-parallel at d ∈ {128, 4096, 65536}).
 
 mod ef_sign;
 mod full;

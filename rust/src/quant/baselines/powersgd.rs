@@ -80,16 +80,11 @@ impl PowerSgd {
     }
 }
 
-impl VectorCodec for PowerSgd {
-    fn name(&self) -> String {
-        format!("PowerSGD(r={})", self.rank)
-    }
-
-    fn dim(&self) -> usize {
-        self.rows * self.cols
-    }
-
-    fn encode(&mut self, x: &[f64], _rng: &mut Rng) -> Message {
+impl PowerSgd {
+    /// One warm-started power iteration with error feedback — the shared
+    /// body of `encode`/`encode_into` (they differ only in writer
+    /// scratch). Returns the (P, Q') factor pair to serialize.
+    fn factors(&mut self, x: &[f64]) -> (Matrix, Matrix) {
         assert_eq!(x.len(), self.dim());
         let m = Matrix {
             rows: self.rows,
@@ -107,6 +102,21 @@ impl VectorCodec for PowerSgd {
             *e = mi - mh;
         }
         self.q = q_new.clone();
+        (p, q_new)
+    }
+}
+
+impl VectorCodec for PowerSgd {
+    fn name(&self) -> String {
+        format!("PowerSGD(r={})", self.rank)
+    }
+
+    fn dim(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    fn encode(&mut self, x: &[f64], _rng: &mut Rng) -> Message {
+        let (p, q_new) = self.factors(x);
         // Serialize P then Q' as f32.
         let mut w = BitWriter::with_capacity((p.data.len() + q_new.data.len()) * 32);
         for &v in p.data.iter().chain(&q_new.data) {
@@ -116,23 +126,51 @@ impl VectorCodec for PowerSgd {
         Message { bytes, bits }
     }
 
-    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
+    /// Zero-realloc (message-side) encode: same iteration, recycled
+    /// scratch bytes.
+    fn encode_into(&mut self, x: &[f64], _rng: &mut Rng, out: &mut Message) {
+        let (p, q_new) = self.factors(x);
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        for &v in p.data.iter().chain(&q_new.data) {
+            w.push_f32(v as f32);
+        }
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+
+    fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.decode_into(msg, reference, &mut out);
+        out
+    }
+
+    /// Reconstruct `P Q'ᵀ` straight into the caller's buffer — the same
+    /// skip-zero ikj accumulation [`Matrix::matmul`] performs (the seed's
+    /// `p.matmul(&q.transpose())` decode, bit for bit), minus the result
+    /// matrix; `decode` is this plus an allocation.
+    fn decode_into(&self, msg: &Message, _reference: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.dim());
         let mut r = BitReader::new(&msg.bytes);
-        let p = Matrix {
-            rows: self.rows,
-            cols: self.rank,
-            data: (0..self.rows * self.rank)
-                .map(|_| r.read_f32() as f64)
-                .collect(),
-        };
-        let q = Matrix {
-            rows: self.cols,
-            cols: self.rank,
-            data: (0..self.cols * self.rank)
-                .map(|_| r.read_f32() as f64)
-                .collect(),
-        };
-        p.matmul(&q.transpose()).data
+        let p: Vec<f64> = (0..self.rows * self.rank)
+            .map(|_| r.read_f32() as f64)
+            .collect();
+        let q: Vec<f64> = (0..self.cols * self.rank)
+            .map(|_| r.read_f32() as f64)
+            .collect();
+        out.fill(0.0);
+        for i in 0..self.rows {
+            for k in 0..self.rank {
+                let aik = p[i * self.rank + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * self.cols..(i + 1) * self.cols];
+                for (j, oj) in orow.iter_mut().enumerate() {
+                    *oj += aik * q[j * self.rank + k];
+                }
+            }
+        }
     }
 }
 

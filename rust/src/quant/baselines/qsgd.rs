@@ -9,8 +9,23 @@
 //!
 //! Wire cost: `d·(⌈log₂(L+1)⌉ [+1 sign])` bits plus one or two 64-bit
 //! floats of side information — exactly the overhead the paper notes.
+//!
+//! §Perf: both normalizations ride the full fast-path surface (see
+//! [`super`] §Perf) — the wire format is a byte-aligned float header
+//! followed by `d` fixed-width fields (L2 packs sign and level into one
+//! `1 + ⌈log₂(L+1)⌉`-bit field, LSB = sign, exactly the seed's
+//! push(sign, 1) + push(level, w) stream), so encode is a
+//! [`BitWriter::push_block`] kernel fed by bulk pre-drawn uniforms
+//! ([`crate::rng::Rng::fill_uniform`] in [`VectorCodec::encode_prepare`],
+//! stream-identical to the seed's per-coordinate draws) and every decode
+//! entry point is one `decode_fold` block loop over
+//! [`BitReader::read_block`]. Fixed-width fields make the stream
+//! random-access: `decode_accumulate_range` seeks straight to a chunk and
+//! `encode_range` shards across cores ([`crate::quant::encode_chunked`]),
+//! all bit-identical to the seed scalar path (pinned in
+//! `rust/tests/prop.rs`).
 
-use crate::quant::bits::{width_for, BitReader, BitWriter};
+use crate::quant::bits::{byte_align_fields, width_for, BitReader, BitWriter};
 use crate::quant::{Message, VectorCodec};
 use crate::rng::Rng;
 
@@ -27,6 +42,13 @@ pub struct Qsgd {
     /// q=8 ⇒ levels 0..=7 ⇒ 3 bits).
     pub levels: u32,
     pub norm: QsgdNorm,
+    /// Header floats captured by `encode_prepare` (L2: `[‖x‖₂, 0]`;
+    /// L∞: `[min, max]`).
+    hdr: [f64; 2],
+    /// Pre-drawn stochastic-rounding uniforms, one per coordinate in
+    /// coordinate order — the same stream the seed drew with one
+    /// `next_f64` per coordinate.
+    unis: Vec<f64>,
 }
 
 impl Qsgd {
@@ -36,11 +58,78 @@ impl Qsgd {
             d,
             levels: q - 1,
             norm,
+            hdr: [0.0; 2],
+            unis: Vec::new(),
         }
     }
 
     fn level_width(&self) -> u32 {
         width_for(self.levels as u64 + 1)
+    }
+
+    /// Per-coordinate field width: L2 carries the sign in the field's
+    /// LSB (`sign | level << 1` ≡ the seed's push(sign, 1) +
+    /// push(level, w) in the LSB-first stream), L∞ the bare level.
+    fn field_width(&self) -> u32 {
+        match self.norm {
+            QsgdNorm::L2 => self.level_width() + 1,
+            QsgdNorm::Linf => self.level_width(),
+        }
+    }
+
+    /// Header length in bits (whole bytes, so range chunks stay
+    /// byte-alignable).
+    fn header_bits(&self) -> u64 {
+        match self.norm {
+            QsgdNorm::L2 => 64,
+            QsgdNorm::Linf => 128,
+        }
+    }
+
+    /// The shared fused decode loop: the header is read, then fields for
+    /// coordinates `lo..lo + len` are pulled through the word-granular
+    /// block kernel and each reconstructed value handed to
+    /// `emit(index, value)`. Every decode entry point is this loop with a
+    /// different sink, so they are value-identical by construction (and
+    /// expression-identical to the seed's scalar decode).
+    fn decode_fold(&self, msg: &Message, lo: usize, len: usize, mut emit: impl FnMut(usize, f64)) {
+        const BLOCK: usize = 128;
+        let mut r = BitReader::new(&msg.bytes);
+        let width = self.field_width();
+        let levels = self.levels as f64;
+        let mut fields = [0u64; BLOCK];
+        match self.norm {
+            QsgdNorm::L2 => {
+                let norm = r.read_f64();
+                r.seek(64 + lo as u64 * width as u64);
+                let mut done = 0;
+                while done < len {
+                    let take = (len - done).min(BLOCK);
+                    r.read_block(width, &mut fields[..take]);
+                    for (j, &f) in fields[..take].iter().enumerate() {
+                        let sign = if f & 1 == 1 { -1.0 } else { 1.0 };
+                        let lvl = (f >> 1) as f64;
+                        emit(lo + done + j, sign * norm * lvl / levels);
+                    }
+                    done += take;
+                }
+            }
+            QsgdNorm::Linf => {
+                let mn = r.read_f64();
+                let mx = r.read_f64();
+                let range = mx - mn;
+                r.seek(128 + lo as u64 * width as u64);
+                let mut done = 0;
+                while done < len {
+                    let take = (len - done).min(BLOCK);
+                    r.read_block(width, &mut fields[..take]);
+                    for (j, &f) in fields[..take].iter().enumerate() {
+                        emit(lo + done + j, mn + f as f64 / levels * range);
+                    }
+                    done += take;
+                }
+            }
+        }
     }
 }
 
@@ -56,78 +145,152 @@ impl VectorCodec for Qsgd {
         self.d
     }
 
-    fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message {
+    /// Sequential pre-pass: the normalization header over the whole
+    /// input, plus one bulk uniform per coordinate (stream-identical to
+    /// the seed's unconditional per-coordinate draw — including for the
+    /// zero vector, which still consumed `d` draws).
+    fn encode_prepare(&mut self, x: &[f64], rng: &mut Rng) {
         assert_eq!(x.len(), self.d);
-        let w_lvl = self.level_width();
         match self.norm {
-            QsgdNorm::L2 => {
-                let norm = crate::linalg::norm2(x);
-                let mut w = BitWriter::with_capacity(self.d * (w_lvl as usize + 1) + 64);
-                w.push_f64(norm);
-                for &v in x {
-                    let sign = if v < 0.0 { 1u64 } else { 0u64 };
-                    let scaled = if norm > 0.0 {
-                        v.abs() / norm * self.levels as f64
-                    } else {
-                        0.0
-                    };
-                    let low = scaled.floor();
-                    let lvl = low as u64
-                        + if rng.next_f64() < scaled - low { 1 } else { 0 };
-                    w.push(sign, 1);
-                    w.push(lvl.min(self.levels as u64), w_lvl);
-                }
-                let (bytes, bits) = w.finish();
-                Message { bytes, bits }
-            }
+            QsgdNorm::L2 => self.hdr = [crate::linalg::norm2(x), 0.0],
             QsgdNorm::Linf => {
                 let mn = x.iter().cloned().fold(f64::INFINITY, f64::min);
                 let mx = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-                let range = (mx - mn).max(0.0);
-                let mut w = BitWriter::with_capacity(self.d * w_lvl as usize + 128);
-                w.push_f64(mn);
-                w.push_f64(mx);
-                for &v in x {
-                    let scaled = if range > 0.0 {
-                        (v - mn) / range * self.levels as f64
-                    } else {
-                        0.0
-                    };
-                    let low = scaled.floor();
-                    let lvl = (low as u64
-                        + if rng.next_f64() < scaled - low { 1 } else { 0 })
-                    .min(self.levels as u64);
-                    w.push(lvl, w_lvl);
+                self.hdr = [mn, mx];
+            }
+        }
+        self.unis.resize(self.d, 0.0);
+        rng.fill_uniform(&mut self.unis);
+    }
+
+    fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message {
+        let mut w = BitWriter::with_capacity(
+            self.d * self.field_width() as usize + self.header_bits() as usize,
+        );
+        self.encode_prepare(x, rng);
+        self.encode_range(x, 0, self.d, &mut w);
+        let (bytes, bits) = w.finish();
+        Message { bytes, bits }
+    }
+
+    /// Zero-realloc encode: same kernel, recycled scratch bytes.
+    fn encode_into(&mut self, x: &[f64], rng: &mut Rng, out: &mut Message) {
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        self.encode_prepare(x, rng);
+        self.encode_range(x, 0, self.d, &mut w);
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+
+    /// Fused block encode kernel for coordinates `lo..lo + len`
+    /// (header emitted by the `lo == 0` chunk). Requires a preceding
+    /// [`Self::encode_prepare`] for the same `x`.
+    fn encode_range(&self, x: &[f64], lo: usize, len: usize, w: &mut BitWriter) {
+        const BLOCK: usize = 128;
+        assert_eq!(x.len(), self.d);
+        assert!(lo + len <= self.d);
+        assert_eq!(
+            self.unis.len(),
+            self.d,
+            "encode_prepare must precede encode_range"
+        );
+        let width = self.field_width();
+        let levels = self.levels as f64;
+        let lmax = self.levels as u64;
+        let mut fields = [0u64; BLOCK];
+        if lo == 0 {
+            w.push_f64(self.hdr[0]);
+            if self.norm == QsgdNorm::Linf {
+                w.push_f64(self.hdr[1]);
+            }
+        }
+        match self.norm {
+            QsgdNorm::L2 => {
+                let norm = self.hdr[0];
+                let mut done = 0;
+                while done < len {
+                    let take = (len - done).min(BLOCK);
+                    let base = lo + done;
+                    for (j, f) in fields[..take].iter_mut().enumerate() {
+                        let v = x[base + j];
+                        let sign = if v < 0.0 { 1u64 } else { 0u64 };
+                        let scaled = if norm > 0.0 {
+                            v.abs() / norm * levels
+                        } else {
+                            0.0
+                        };
+                        let low = scaled.floor();
+                        let lvl =
+                            low as u64 + u64::from(self.unis[base + j] < scaled - low);
+                        *f = sign | (lvl.min(lmax) << 1);
+                    }
+                    w.push_block(&fields[..take], width);
+                    done += take;
                 }
-                let (bytes, bits) = w.finish();
-                Message { bytes, bits }
+            }
+            QsgdNorm::Linf => {
+                let (mn, mx) = (self.hdr[0], self.hdr[1]);
+                let range = (mx - mn).max(0.0);
+                let mut done = 0;
+                while done < len {
+                    let take = (len - done).min(BLOCK);
+                    let base = lo + done;
+                    for (j, f) in fields[..take].iter_mut().enumerate() {
+                        let v = x[base + j];
+                        let scaled = if range > 0.0 {
+                            (v - mn) / range * levels
+                        } else {
+                            0.0
+                        };
+                        let low = scaled.floor();
+                        *f = (low as u64 + u64::from(self.unis[base + j] < scaled - low))
+                            .min(lmax);
+                    }
+                    w.push_block(&fields[..take], width);
+                    done += take;
+                }
             }
         }
     }
 
-    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
-        let mut r = BitReader::new(&msg.bytes);
-        let w_lvl = self.level_width();
-        match self.norm {
-            QsgdNorm::L2 => {
-                let norm = r.read_f64();
-                (0..self.d)
-                    .map(|_| {
-                        let sign = if r.read(1) == 1 { -1.0 } else { 1.0 };
-                        let lvl = r.read(w_lvl) as f64;
-                        sign * norm * lvl / self.levels as f64
-                    })
-                    .collect()
-            }
-            QsgdNorm::Linf => {
-                let mn = r.read_f64();
-                let mx = r.read_f64();
-                let range = mx - mn;
-                (0..self.d)
-                    .map(|_| mn + r.read(w_lvl) as f64 / self.levels as f64 * range)
-                    .collect()
-            }
-        }
+    fn supports_encode_range(&self) -> bool {
+        true
+    }
+
+    fn encode_chunk_align(&self) -> usize {
+        byte_align_fields(self.field_width())
+    }
+
+    fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.d];
+        self.decode_into(msg, reference, &mut out);
+        out
+    }
+
+    fn decode_into(&self, msg: &Message, _reference: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.d);
+        self.decode_fold(msg, 0, self.d, |idx, v| out[idx] = v);
+    }
+
+    /// Fused streaming-fold kernel: one pass bitstream → accumulator.
+    fn decode_accumulate_into(&self, msg: &Message, _reference: &[f64], weight: f64, acc: &mut [f64]) {
+        assert_eq!(acc.len(), self.d);
+        self.decode_fold(msg, 0, self.d, |idx, v| acc[idx] += weight * v);
+    }
+
+    /// Chunk-sharded fold kernel: seeks past the header straight to
+    /// coordinate `lo`'s bit offset (fixed-width fields ⇒ random access).
+    fn decode_accumulate_range(
+        &self,
+        msg: &Message,
+        _reference: &[f64],
+        weight: f64,
+        lo: usize,
+        acc: &mut [f64],
+    ) {
+        assert!(lo + acc.len() <= self.d);
+        self.decode_fold(msg, lo, acc.len(), |idx, v| acc[idx - lo] += weight * v);
     }
 }
 
@@ -199,6 +362,24 @@ mod tests {
             let msg = c.encode(&[0.0; 4], &mut rng);
             let z = c.decode(&msg, &[]);
             assert!(dist2(&z, &[0.0; 4]) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_vector_still_consumes_one_draw_per_coordinate() {
+        // The seed's scalar loop evaluated `rng.next_f64()` even when the
+        // norm was zero; the bulk prepare must keep that draw count so
+        // downstream shared-randomness consumers see the same stream.
+        for norm in [QsgdNorm::L2, QsgdNorm::Linf] {
+            let d = 7;
+            let mut c = Qsgd::new(d, 8, norm);
+            let mut rng = Rng::new(3);
+            let _ = c.encode(&vec![0.0; d], &mut rng);
+            let mut expect = Rng::new(3);
+            for _ in 0..d {
+                expect.next_f64();
+            }
+            assert_eq!(rng.next_u64(), expect.next_u64());
         }
     }
 }

@@ -6,8 +6,24 @@
 //! and max with `L` levels. Cost: `d·⌈log₂ L⌉` bits + two floats. Like
 //! QSGD (and unlike the lattice scheme) the error scales with the input
 //! *norm*, which is exactly the gap the paper exposes.
+//!
+//! §Perf: the encode rides the one-pass scratch rotation
+//! ([`Rotation::forward_into`] — sign diagonal and 1/√d fused into the
+//! butterflies, zero allocations after the first round) and the fused
+//! block kernels (bulk uniforms in [`VectorCodec::encode_prepare`],
+//! [`BitWriter::push_block`] packing). The wire format is a 128-bit
+//! min/max header plus one fixed-width field per *padded rotated*
+//! coordinate, so [`VectorCodec::wire_fields`] is the padded dimension
+//! and [`VectorCodec::encode_range`] shards the rotated field stream
+//! across cores. Decode dequantizes through
+//! [`BitReader::read_block`] into one padded buffer and inverse-rotates
+//! in place ([`Rotation::inverse_in_place`]); the global rotation means
+//! `decode_accumulate_range` still pays a full dequant+rotate per chunk
+//! (it exists for correctness under `fold_mean_chunked`, not speed —
+//! prefer `fold_mean` for this codec). All paths are bit-identical to
+//! the seed scalar pipeline (pinned in `rust/tests/prop.rs`).
 
-use crate::quant::bits::{width_for, BitReader, BitWriter};
+use crate::quant::bits::{byte_align_fields, width_for, BitReader, BitWriter};
 use crate::quant::hadamard::Rotation;
 use crate::quant::{Message, VectorCodec};
 use crate::rng::Rng;
@@ -16,6 +32,14 @@ use crate::rng::Rng;
 pub struct SureshHadamard {
     pub rotation: Rotation,
     pub levels: u32,
+    /// Rotated input (padded length), filled by `encode_prepare`.
+    rx: Vec<f64>,
+    /// Pre-drawn stochastic-rounding uniforms, one per padded rotated
+    /// coordinate (the seed's per-coordinate draw order).
+    unis: Vec<f64>,
+    /// Min/max of the rotated input (the wire header).
+    mn: f64,
+    mx: f64,
 }
 
 impl SureshHadamard {
@@ -25,11 +49,43 @@ impl SureshHadamard {
         SureshHadamard {
             rotation: Rotation::new(d, shared),
             levels: q - 1,
+            rx: Vec::new(),
+            unis: Vec::new(),
+            mn: 0.0,
+            mx: 0.0,
         }
     }
 
     fn width(&self) -> u32 {
         width_for(self.levels as u64 + 1)
+    }
+
+    /// Dequantize all padded fields into `rz` (recycled to padded length)
+    /// and inverse-rotate in place — the shared first stage of every
+    /// decode entry point, expression-identical to the seed's scalar
+    /// decode loop followed by [`Rotation::inverse`].
+    fn dequant_rotate(&self, msg: &Message, rz: &mut Vec<f64>) {
+        const BLOCK: usize = 128;
+        let dp = self.rotation.padded_dim();
+        let mut r = BitReader::new(&msg.bytes);
+        let mn = r.read_f64();
+        let mx = r.read_f64();
+        let range = mx - mn;
+        let w_lvl = self.width();
+        let levels = self.levels as f64;
+        rz.clear();
+        rz.resize(dp, 0.0);
+        let mut fields = [0u64; BLOCK];
+        let mut done = 0;
+        while done < dp {
+            let take = (dp - done).min(BLOCK);
+            r.read_block(w_lvl, &mut fields[..take]);
+            for (j, &f) in fields[..take].iter().enumerate() {
+                rz[done + j] = mn + f as f64 / levels * range;
+            }
+            done += take;
+        }
+        self.rotation.inverse_in_place(rz);
     }
 }
 
@@ -42,42 +98,138 @@ impl VectorCodec for SureshHadamard {
         self.rotation.d
     }
 
+    /// Sequential pre-pass: one-pass rotation into scratch, min/max
+    /// header, and one bulk uniform per padded coordinate (the seed's
+    /// draw order and count).
+    fn encode_prepare(&mut self, x: &[f64], rng: &mut Rng) {
+        self.rotation.forward_into(x, &mut self.rx);
+        self.mn = self.rx.iter().cloned().fold(f64::INFINITY, f64::min);
+        self.mx = self.rx.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        self.unis.resize(self.rx.len(), 0.0);
+        rng.fill_uniform(&mut self.unis);
+    }
+
     fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message {
-        let rx = self.rotation.forward(x);
-        let mn = rx.iter().cloned().fold(f64::INFINITY, f64::min);
-        let mx = rx.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let range = (mx - mn).max(0.0);
-        let w_lvl = self.width();
-        let mut w = BitWriter::with_capacity(rx.len() * w_lvl as usize + 128);
-        w.push_f64(mn);
-        w.push_f64(mx);
-        for &v in &rx {
-            let scaled = if range > 0.0 {
-                (v - mn) / range * self.levels as f64
-            } else {
-                0.0
-            };
-            let low = scaled.floor();
-            let lvl =
-                (low as u64 + if rng.next_f64() < scaled - low { 1 } else { 0 })
-                    .min(self.levels as u64);
-            w.push(lvl, w_lvl);
-        }
+        self.encode_prepare(x, rng);
+        let dp = self.rotation.padded_dim();
+        let mut w = BitWriter::with_capacity(dp * self.width() as usize + 128);
+        self.encode_range(x, 0, dp, &mut w);
         let (bytes, bits) = w.finish();
         Message { bytes, bits }
     }
 
-    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
+    /// Zero-realloc encode: same kernel, recycled scratch bytes.
+    fn encode_into(&mut self, x: &[f64], rng: &mut Rng, out: &mut Message) {
+        self.encode_prepare(x, rng);
         let dp = self.rotation.padded_dim();
-        let mut r = BitReader::new(&msg.bytes);
-        let mn = r.read_f64();
-        let mx = r.read_f64();
-        let range = mx - mn;
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        self.encode_range(x, 0, dp, &mut w);
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+
+    /// The sharding domain is the padded rotated field count, not `d`.
+    fn wire_fields(&self) -> usize {
+        self.rotation.padded_dim()
+    }
+
+    /// Fused block encode kernel for *rotated field* indices
+    /// `lo..lo + len` (of [`Self::wire_fields`]); the min/max header is
+    /// emitted by the `lo == 0` chunk. Reads the rotated input and
+    /// uniforms prepared by [`Self::encode_prepare`]; `x` is only
+    /// shape-checked.
+    fn encode_range(&self, x: &[f64], lo: usize, len: usize, w: &mut BitWriter) {
+        const BLOCK: usize = 128;
+        assert_eq!(x.len(), self.rotation.d);
+        assert!(lo + len <= self.rotation.padded_dim());
+        assert_eq!(
+            self.rx.len(),
+            self.rotation.padded_dim(),
+            "encode_prepare must precede encode_range"
+        );
+        let (mn, mx) = (self.mn, self.mx);
+        let range = (mx - mn).max(0.0);
         let w_lvl = self.width();
-        let rz: Vec<f64> = (0..dp)
-            .map(|_| mn + r.read(w_lvl) as f64 / self.levels as f64 * range)
-            .collect();
-        self.rotation.inverse(&rz)
+        let levels = self.levels as f64;
+        let lmax = self.levels as u64;
+        if lo == 0 {
+            w.push_f64(mn);
+            w.push_f64(mx);
+        }
+        let mut fields = [0u64; BLOCK];
+        let mut done = 0;
+        while done < len {
+            let take = (len - done).min(BLOCK);
+            let base = lo + done;
+            for (j, f) in fields[..take].iter_mut().enumerate() {
+                let v = self.rx[base + j];
+                let scaled = if range > 0.0 {
+                    (v - mn) / range * levels
+                } else {
+                    0.0
+                };
+                let low = scaled.floor();
+                *f = (low as u64 + u64::from(self.unis[base + j] < scaled - low)).min(lmax);
+            }
+            w.push_block(&fields[..take], w_lvl);
+            done += take;
+        }
+    }
+
+    fn supports_encode_range(&self) -> bool {
+        true
+    }
+
+    fn encode_chunk_align(&self) -> usize {
+        byte_align_fields(self.width())
+    }
+
+    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
+        let mut rz = Vec::new();
+        self.dequant_rotate(msg, &mut rz);
+        rz.truncate(self.rotation.d);
+        rz
+    }
+
+    fn decode_into(&self, msg: &Message, _reference: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.rotation.d);
+        let mut rz = Vec::new();
+        self.dequant_rotate(msg, &mut rz);
+        out.copy_from_slice(&rz[..self.rotation.d]);
+    }
+
+    /// Fused fold: dequantize + inverse-rotate once, accumulate the
+    /// unpadded prefix (no decoded vector is handed to the caller; the
+    /// padded scratch is a local allocation because the codec stays
+    /// `Sync` for the chunk-sharded folds).
+    fn decode_accumulate_into(&self, msg: &Message, _reference: &[f64], weight: f64, acc: &mut [f64]) {
+        assert_eq!(acc.len(), self.rotation.d);
+        let mut rz = Vec::new();
+        self.dequant_rotate(msg, &mut rz);
+        for (a, zi) in acc.iter_mut().zip(&rz[..self.rotation.d]) {
+            *a += weight * zi;
+        }
+    }
+
+    /// Range fold: the global rotation forces a full dequant + inverse
+    /// per call, so this only trims the final accumulate to the chunk —
+    /// correct under `fold_mean_chunked`, but no faster than the
+    /// sequential fold. Bit-identical to decode + slice-accumulate.
+    fn decode_accumulate_range(
+        &self,
+        msg: &Message,
+        _reference: &[f64],
+        weight: f64,
+        lo: usize,
+        acc: &mut [f64],
+    ) {
+        assert!(lo + acc.len() <= self.rotation.d);
+        let mut rz = Vec::new();
+        self.dequant_rotate(msg, &mut rz);
+        for (a, zi) in acc.iter_mut().zip(&rz[lo..lo + acc.len()]) {
+            *a += weight * zi;
+        }
     }
 }
 
@@ -114,5 +266,6 @@ mod tests {
         let mut rng = Rng::new(17);
         let msg = c.encode(&vec![1.0; 100], &mut rng);
         assert_eq!(msg.bits, 128 + 128 * 3);
+        assert_eq!(c.wire_fields(), 128);
     }
 }

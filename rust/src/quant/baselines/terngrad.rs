@@ -4,19 +4,64 @@
 //!
 //! Each coordinate is quantized to `{−1, 0, +1}·‖x‖∞` with stochastic
 //! rounding on `|x_i|/‖x‖∞`. Cost: 2 bits/coordinate + one float.
+//!
+//! §Perf: a 64-bit header plus 2-bit fields — the full fast-path surface
+//! (see [`super`] §Perf): bulk-uniform [`VectorCodec::encode_prepare`]
+//! (the seed drew *no* uniforms for the zero vector, and neither does
+//! the prepare), [`BitWriter::push_block`] packing (32 trits per word
+//! store), one `decode_fold` block loop behind every decode entry point,
+//! seekable `decode_accumulate_range`, and chunk-parallel
+//! `encode_range` — all bit-identical to the seed scalar path (pinned in
+//! `rust/tests/prop.rs`).
 
-use crate::quant::bits::{BitReader, BitWriter};
+use crate::quant::bits::{byte_align_fields, BitReader, BitWriter};
 use crate::quant::{Message, VectorCodec};
 use crate::rng::Rng;
 
 #[derive(Clone, Debug)]
 pub struct TernGrad {
     pub d: usize,
+    /// ‖x‖∞ header captured by `encode_prepare`.
+    m: f64,
+    /// Pre-drawn stochastic-rounding uniforms (empty when `m == 0`: the
+    /// seed's short-circuit drew nothing for the zero vector).
+    unis: Vec<f64>,
 }
 
 impl TernGrad {
     pub fn new(d: usize) -> Self {
-        TernGrad { d }
+        TernGrad {
+            d,
+            m: 0.0,
+            unis: Vec::new(),
+        }
+    }
+
+    /// The shared fused decode loop (header, then 2-bit trits through the
+    /// block kernel); every decode entry point is this loop with a
+    /// different sink.
+    fn decode_fold(&self, msg: &Message, lo: usize, len: usize, mut emit: impl FnMut(usize, f64)) {
+        const BLOCK: usize = 128;
+        let mut r = BitReader::new(&msg.bytes);
+        let m = r.read_f64();
+        r.seek(64 + 2 * lo as u64);
+        let mut fields = [0u64; BLOCK];
+        let mut done = 0;
+        while done < len {
+            let take = (len - done).min(BLOCK);
+            r.read_block(2, &mut fields[..take]);
+            for (j, &f) in fields[..take].iter().enumerate() {
+                emit(
+                    lo + done + j,
+                    match f {
+                        1 => m,
+                        2 => -m,
+                        _ => 0.0,
+                    },
+                );
+            }
+            done += take;
+        }
     }
 }
 
@@ -29,37 +74,111 @@ impl VectorCodec for TernGrad {
         self.d
     }
 
-    fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message {
+    /// Sequential pre-pass: the ℓ∞ header and one bulk uniform per
+    /// coordinate — except for the zero vector, where the seed's
+    /// `m > 0.0 &&` short-circuit consumed no draws, so neither do we.
+    fn encode_prepare(&mut self, x: &[f64], rng: &mut Rng) {
         assert_eq!(x.len(), self.d);
-        let m = crate::linalg::norm_inf(x);
-        let mut w = BitWriter::with_capacity(self.d * 2 + 64);
-        w.push_f64(m);
-        for &v in x {
-            let t = if m > 0.0 && rng.next_f64() < v.abs() / m {
-                if v < 0.0 {
-                    2u64 // -1
-                } else {
-                    1u64 // +1
-                }
-            } else {
-                0u64
-            };
-            w.push(t, 2);
+        self.m = crate::linalg::norm_inf(x);
+        self.unis.resize(self.d, 0.0);
+        if self.m > 0.0 {
+            rng.fill_uniform(&mut self.unis);
         }
+    }
+
+    fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message {
+        self.encode_prepare(x, rng);
+        let mut w = BitWriter::with_capacity(self.d * 2 + 64);
+        self.encode_range(x, 0, self.d, &mut w);
         let (bytes, bits) = w.finish();
         Message { bytes, bits }
     }
 
-    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
-        let mut r = BitReader::new(&msg.bytes);
-        let m = r.read_f64();
-        (0..self.d)
-            .map(|_| match r.read(2) {
-                1 => m,
-                2 => -m,
-                _ => 0.0,
-            })
-            .collect()
+    /// Zero-realloc encode: same kernel, recycled scratch bytes.
+    fn encode_into(&mut self, x: &[f64], rng: &mut Rng, out: &mut Message) {
+        self.encode_prepare(x, rng);
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        self.encode_range(x, 0, self.d, &mut w);
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+
+    /// Fused block encode kernel for coordinates `lo..lo + len` (header
+    /// emitted by the `lo == 0` chunk). Requires a preceding
+    /// [`Self::encode_prepare`] for the same `x`.
+    fn encode_range(&self, x: &[f64], lo: usize, len: usize, w: &mut BitWriter) {
+        const BLOCK: usize = 128;
+        assert_eq!(x.len(), self.d);
+        assert!(lo + len <= self.d);
+        assert_eq!(
+            self.unis.len(),
+            self.d,
+            "encode_prepare must precede encode_range"
+        );
+        let m = self.m;
+        if lo == 0 {
+            w.push_f64(m);
+        }
+        let mut fields = [0u64; BLOCK];
+        let mut done = 0;
+        while done < len {
+            let take = (len - done).min(BLOCK);
+            let base = lo + done;
+            for (j, f) in fields[..take].iter_mut().enumerate() {
+                let v = x[base + j];
+                *f = if m > 0.0 && self.unis[base + j] < v.abs() / m {
+                    if v < 0.0 {
+                        2 // -1
+                    } else {
+                        1 // +1
+                    }
+                } else {
+                    0
+                };
+            }
+            w.push_block(&fields[..take], 2);
+            done += take;
+        }
+    }
+
+    fn supports_encode_range(&self) -> bool {
+        true
+    }
+
+    fn encode_chunk_align(&self) -> usize {
+        byte_align_fields(2)
+    }
+
+    fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.d];
+        self.decode_into(msg, reference, &mut out);
+        out
+    }
+
+    fn decode_into(&self, msg: &Message, _reference: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.d);
+        self.decode_fold(msg, 0, self.d, |idx, v| out[idx] = v);
+    }
+
+    /// Fused streaming-fold kernel: one pass bitstream → accumulator.
+    fn decode_accumulate_into(&self, msg: &Message, _reference: &[f64], weight: f64, acc: &mut [f64]) {
+        assert_eq!(acc.len(), self.d);
+        self.decode_fold(msg, 0, self.d, |idx, v| acc[idx] += weight * v);
+    }
+
+    /// Chunk-sharded fold kernel: seeks past the header to the chunk's
+    /// 2-bit field offset.
+    fn decode_accumulate_range(
+        &self,
+        msg: &Message,
+        _reference: &[f64],
+        weight: f64,
+        lo: usize,
+        acc: &mut [f64],
+    ) {
+        assert!(lo + acc.len() <= self.d);
+        self.decode_fold(msg, lo, acc.len(), |idx, v| acc[idx - lo] += weight * v);
     }
 }
 
@@ -94,5 +213,17 @@ mod tests {
         let mut rng = Rng::new(51);
         let msg = c.encode(&vec![0.3; 64], &mut rng);
         assert_eq!(msg.bits, 64 + 128);
+    }
+
+    #[test]
+    fn zero_vector_consumes_no_draws() {
+        // The seed's `m > 0.0 &&` short-circuit never touched the RNG for
+        // an all-zero input; the bulk prepare must preserve that.
+        let d = 9;
+        let mut c = TernGrad::new(d);
+        let mut rng = Rng::new(52);
+        let msg = c.encode(&vec![0.0; d], &mut rng);
+        assert_eq!(rng.next_u64(), Rng::new(52).next_u64());
+        assert!(c.decode(&msg, &[]).iter().all(|v| *v == 0.0));
     }
 }

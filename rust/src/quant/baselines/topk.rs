@@ -3,6 +3,18 @@
 //!
 //! Sends the k largest-magnitude coordinates as (index, f32) pairs;
 //! the residual is kept in error memory. Biased but EF-corrected.
+//!
+//! §Perf: ranking is O(d) (`select_nth_unstable_by` over
+//! [`f64::total_cmp`] with an index tie-break — same selected set as the
+//! seed's stable descending sort, minus the O(d log d) sort and its
+//! NaN-`unwrap` panic path), encode recycles the `p`/index scratch and
+//! the message bytes, and the decode-side fold kernels are *sparse*:
+//! `decode_accumulate_into`/`_range` touch the k shipped entries instead
+//! of materializing a d-length vector. (Sparse accumulate skips the
+//! `acc[i] += weight·0.0` no-ops a dense decode+axpy would execute; for
+//! finite accumulators that add is the identity, so the folds only
+//! differ on `-0.0`/non-finite accumulator entries, which the dense path
+//! would rewrite.)
 
 use crate::quant::bits::{width_for, BitReader, BitWriter};
 use crate::quant::{Message, VectorCodec};
@@ -13,6 +25,10 @@ pub struct TopK {
     pub d: usize,
     pub k: usize,
     error: Vec<f64>,
+    /// `x + e` scratch (recycled across rounds).
+    p: Vec<f64>,
+    /// Selection scratch (recycled across rounds).
+    idx: Vec<usize>,
 }
 
 impl TopK {
@@ -22,11 +38,62 @@ impl TopK {
             d,
             k,
             error: vec![0.0; d],
+            p: Vec::new(),
+            idx: Vec::new(),
         }
     }
 
     fn idx_width(&self) -> u32 {
         width_for(self.d as u64).max(1)
+    }
+
+    /// Rank, serialize, and apply error feedback — the shared body of
+    /// `encode`/`encode_into` (they differ only in writer scratch).
+    fn encode_core(&mut self, x: &[f64], w: &mut BitWriter) {
+        assert_eq!(x.len(), self.d);
+        self.p.clear();
+        self.p
+            .extend(x.iter().zip(&self.error).map(|(a, e)| a + e));
+        self.idx.clear();
+        self.idx.extend(0..self.d);
+        // O(d) partition: the k top-magnitude indices land in the first k
+        // slots. Descending |p| with ascending-index tie-break — the same
+        // set (and tie winners) the seed's stable descending sort picked,
+        // but total_cmp keeps NaN inputs deterministic instead of
+        // panicking. (k ≥ 1 by construction; k == d keeps everything, no
+        // partition needed.)
+        if self.k < self.d {
+            let p = &self.p;
+            self.idx.select_nth_unstable_by(self.k - 1, |&a, &b| {
+                p[b].abs().total_cmp(&p[a].abs()).then(a.cmp(&b))
+            });
+        }
+        self.idx.truncate(self.k);
+        self.idx.sort_unstable();
+        let iw = self.idx_width();
+        for &i in &self.idx {
+            w.push(i as u64, iw);
+            w.push_f32(self.p[i] as f32);
+        }
+        // Error feedback: unsent coordinates keep their whole value, sent
+        // ones keep only the f64→f32 serialization residue.
+        self.error.copy_from_slice(&self.p);
+        for &i in &self.idx {
+            self.error[i] = self.p[i] - (self.p[i] as f32 as f64);
+        }
+    }
+
+    /// The shared sparse decode loop: the k (index, value) pairs are read
+    /// and handed to `emit`; every decode entry point is this loop with a
+    /// different sink.
+    fn decode_fold(&self, msg: &Message, mut emit: impl FnMut(usize, f64)) {
+        let mut r = BitReader::new(&msg.bytes);
+        let iw = self.idx_width();
+        for _ in 0..self.k {
+            let i = r.read(iw) as usize;
+            let v = r.read_f32() as f64;
+            emit(i, v);
+        }
     }
 }
 
@@ -40,37 +107,59 @@ impl VectorCodec for TopK {
     }
 
     fn encode(&mut self, x: &[f64], _rng: &mut Rng) -> Message {
-        assert_eq!(x.len(), self.d);
-        let p: Vec<f64> = x.iter().zip(&self.error).map(|(a, e)| a + e).collect();
-        let mut idx: Vec<usize> = (0..self.d).collect();
-        idx.sort_by(|&a, &b| p[b].abs().partial_cmp(&p[a].abs()).unwrap());
-        idx.truncate(self.k);
-        idx.sort_unstable();
         let mut w = BitWriter::with_capacity(self.k * (self.idx_width() as usize + 32));
-        for &i in &idx {
-            w.push(i as u64, self.idx_width());
-            w.push_f32(p[i] as f32);
-        }
-        // error feedback
-        let mut kept = vec![false; self.d];
-        for &i in &idx {
-            kept[i] = true;
-        }
-        for i in 0..self.d {
-            self.error[i] = if kept[i] { p[i] - p[i] as f32 as f64 } else { p[i] };
-        }
+        self.encode_core(x, &mut w);
         let (bytes, bits) = w.finish();
         Message { bytes, bits }
     }
 
-    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
-        let mut r = BitReader::new(&msg.bytes);
+    /// Zero-realloc encode: same ranking + serialization, recycled
+    /// message bytes and selection scratch.
+    fn encode_into(&mut self, x: &[f64], _rng: &mut Rng, out: &mut Message) {
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        self.encode_core(x, &mut w);
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+
+    fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
         let mut out = vec![0.0; self.d];
-        for _ in 0..self.k {
-            let i = r.read(self.idx_width()) as usize;
-            out[i] = r.read_f32() as f64;
-        }
+        self.decode_into(msg, reference, &mut out);
         out
+    }
+
+    fn decode_into(&self, msg: &Message, _reference: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.d);
+        out.fill(0.0);
+        self.decode_fold(msg, |i, v| out[i] = v);
+    }
+
+    /// Sparse fold: touches the k shipped entries, not d. Identical to
+    /// dense decode+axpy on every finite accumulator entry (see module
+    /// §Perf for the `-0.0` caveat).
+    fn decode_accumulate_into(&self, msg: &Message, _reference: &[f64], weight: f64, acc: &mut [f64]) {
+        assert_eq!(acc.len(), self.d);
+        self.decode_fold(msg, |i, v| acc[i] += weight * v);
+    }
+
+    /// Sparse range fold: reads the k pairs once and accumulates those
+    /// that fall in `lo..lo + acc.len()` — O(k) regardless of chunk size.
+    fn decode_accumulate_range(
+        &self,
+        msg: &Message,
+        _reference: &[f64],
+        weight: f64,
+        lo: usize,
+        acc: &mut [f64],
+    ) {
+        assert!(lo + acc.len() <= self.d);
+        let hi = lo + acc.len();
+        self.decode_fold(msg, |i, v| {
+            if i >= lo && i < hi {
+                acc[i - lo] += weight * v;
+            }
+        });
     }
 }
 
@@ -100,5 +189,54 @@ mod tests {
         let msg = c.encode(&x, &mut rng); // now idx 1 has error 0.9 + 0.9
         let z = c.decode(&msg, &[]);
         assert!(z[1] > 1.5, "EF must promote the starved coordinate");
+    }
+
+    #[test]
+    fn selection_breaks_ties_by_lowest_index() {
+        // Four equal magnitudes, k = 2: the stable-sort seed kept the two
+        // lowest indices; the O(d) partition must pick the same pair.
+        let mut c = TopK::new(5, 2);
+        let mut rng = Rng::new(62);
+        let x = vec![2.0, -2.0, 2.0, 2.0, 0.5];
+        let msg = c.encode(&x, &mut rng);
+        let z = c.decode(&msg, &[]);
+        assert!((z[0] - 2.0).abs() < 1e-6);
+        assert!((z[1] - -2.0).abs() < 1e-6);
+        assert_eq!(z[2], 0.0);
+        assert_eq!(z[3], 0.0);
+    }
+
+    #[test]
+    fn nan_input_does_not_panic_and_is_deterministic() {
+        // The seed's partial_cmp().unwrap() panicked on NaN; total_cmp
+        // ranks NaN above every finite magnitude, deterministically.
+        let x = vec![1.0, f64::NAN, 0.5, -3.0];
+        let mut a = TopK::new(4, 2);
+        let mut b = TopK::new(4, 2);
+        let mut rng = Rng::new(63);
+        let ma = a.encode(&x, &mut rng);
+        let mb = b.encode(&x, &mut rng);
+        assert_eq!(ma, mb);
+    }
+
+    #[test]
+    fn sparse_folds_touch_only_shipped_entries() {
+        let d = 8;
+        let mut c = TopK::new(d, 3);
+        let mut rng = Rng::new(64);
+        let x = vec![5.0, 0.1, -4.0, 0.2, 3.0, 0.0, 0.3, -0.2];
+        let msg = c.encode(&x, &mut rng);
+        let z = c.decode(&msg, &[]);
+        // Dense reference.
+        let stale: Vec<f64> = (0..d).map(|i| 0.25 * i as f64 - 1.0).collect();
+        let mut expect = stale.clone();
+        crate::linalg::axpy(&mut expect, -1.5, &z);
+        let mut acc = stale.clone();
+        c.decode_accumulate_into(&msg, &[], -1.5, &mut acc);
+        assert_eq!(acc, expect);
+        // Range over an interior chunk.
+        let mut acc_r = stale[2..6].to_vec();
+        c.decode_accumulate_range(&msg, &[], -1.5, 2, &mut acc_r);
+        assert_eq!(acc_r, expect[2..6]);
     }
 }

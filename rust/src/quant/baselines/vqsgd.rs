@@ -34,29 +34,20 @@ impl VqsgdCrossPolytope {
     fn idx_width(&self) -> u32 {
         width_for(2 * self.d as u64)
     }
-}
 
-impl VectorCodec for VqsgdCrossPolytope {
-    fn name(&self) -> String {
-        format!("vQSGD-cp(R={})", self.reps)
-    }
-
-    fn dim(&self) -> usize {
-        self.d
-    }
-
-    fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message {
+    /// CDF-sample the R repetitions and write the wire fields — the
+    /// shared body of `encode`/`encode_into` (they differ only in writer
+    /// scratch).
+    fn encode_with(&mut self, x: &[f64], rng: &mut Rng, w: &mut BitWriter) {
         assert_eq!(x.len(), self.d);
         let norm2 = crate::linalg::norm2(x);
-        let mut w = BitWriter::with_capacity(self.reps as usize * self.idx_width() as usize + 128);
         if norm2 == 0.0 {
             w.push_f64(0.0);
             w.push_f64(0.0);
             for _ in 0..self.reps {
                 w.push(0, self.idx_width());
             }
-            let (bytes, bits) = w.finish();
-            return Message { bytes, bits };
+            return;
         }
         let v: Vec<f64> = x.iter().map(|a| a / norm2).collect();
         let norm1 = crate::linalg::norm1(&v);
@@ -73,20 +64,54 @@ impl VectorCodec for VqsgdCrossPolytope {
                     break;
                 }
             }
-            let signed_idx = (pick as u64) << 1 | if v[pick] < 0.0 { 1 } else { 0 };
+            let signed_idx = (pick as u64) << 1 | u64::from(v[pick] < 0.0);
             w.push(signed_idx, self.idx_width());
         }
+    }
+}
+
+impl VectorCodec for VqsgdCrossPolytope {
+    fn name(&self) -> String {
+        format!("vQSGD-cp(R={})", self.reps)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn encode(&mut self, x: &[f64], rng: &mut Rng) -> Message {
+        let mut w = BitWriter::with_capacity(self.reps as usize * self.idx_width() as usize + 128);
+        self.encode_with(x, rng, &mut w);
         let (bytes, bits) = w.finish();
         Message { bytes, bits }
     }
 
-    fn decode(&self, msg: &Message, _reference: &[f64]) -> Vec<f64> {
+    /// Zero-realloc (message-side) encode: same sampling, recycled
+    /// scratch bytes.
+    fn encode_into(&mut self, x: &[f64], rng: &mut Rng, out: &mut Message) {
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        self.encode_with(x, rng, &mut w);
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+    }
+
+    fn decode(&self, msg: &Message, reference: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.d];
+        self.decode_into(msg, reference, &mut out);
+        out
+    }
+
+    /// Zero-alloc decode into a caller buffer: replay the R vertex adds
+    /// (identical add order, so identical values to `decode`).
+    fn decode_into(&self, msg: &Message, _reference: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.d);
         let mut r = BitReader::new(&msg.bytes);
         let norm2 = r.read_f64();
         let norm1 = r.read_f64();
-        let mut out = vec![0.0; self.d];
+        out.fill(0.0);
         if norm2 == 0.0 {
-            return out;
+            return;
         }
         let scale = norm2 * norm1 / self.reps as f64;
         for _ in 0..self.reps {
@@ -95,8 +120,12 @@ impl VectorCodec for VqsgdCrossPolytope {
             let sgn = if signed_idx & 1 == 1 { -1.0 } else { 1.0 };
             out[i] += sgn * scale;
         }
-        out
     }
+
+    // decode_accumulate_into stays on the allocating default: a vertex
+    // index can repeat across repetitions, and bit-identity to
+    // decode+axpy requires `weight · (a + b)`, not `weight·a + weight·b`
+    // — the materialized decode is the only exact order.
 }
 
 #[cfg(test)]

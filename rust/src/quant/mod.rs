@@ -54,7 +54,8 @@
 //! | `ConvexHullEncoder` | Alg 1 theoretical unbiased rounding | [`convex_hull`] | default |
 //! | `RobustAgreement` | §5 error detection (Alg 5) | [`robust`] | — |
 //! | `SublinearCodec` | §7 (Alg 7–9) | [`sublinear`] | — |
-//! | QSGD L2/L∞, Suresh–Hadamard, vQSGD, EF-SignSGD, PowerSGD, TernGrad, Top-K | §9 comparators | [`baselines`] | default (`full32`: fused + range) |
+//! | QSGD L2/L∞, Suresh–Hadamard, TernGrad, EF-SignSGD, `full32` | §9 comparators | [`baselines`] | block kernel + range (see [`baselines`] §Perf) |
+//! | vQSGD, PowerSGD, Top-K | §9 comparators | [`baselines`] | fused accumulate (Top-K: sparse O(k)) |
 
 pub mod arena;
 pub mod baselines;
@@ -180,32 +181,70 @@ pub trait VectorCodec: Send {
         1
     }
 
-    /// Append the wire fields for coordinates `lo..lo + len` of `x` to
-    /// `w` — the encode twin of [`Self::decode_accumulate_range`]. Only
-    /// meaningful for codecs whose message is a pure fixed-width
-    /// coordinate stream (no header, no cross-chunk state): those
-    /// override it (`LatticeQuantizer`, `D4Quantizer`, `FullPrecision`)
-    /// and advertise it through [`Self::supports_encode_range`], which
-    /// is what lets the chunk-parallel [`encode_chunked`] shard a huge
-    /// gradient's encode across cores. The only alignment the call
-    /// itself needs is the codec's field coupling (D4 buckets: `lo` and
-    /// `len` multiples of 4); byte alignment matters *between* streams —
-    /// when independently written streams are concatenated, every
-    /// interior boundary must be a multiple of
-    /// [`Self::encode_chunk_align`] (the final, tail run may be ragged),
-    /// which is exactly how [`encode_chunked`] cuts its runs.
+    /// Sequential pre-pass of a chunkable encode. Codecs whose wire
+    /// stream depends on *global* per-encode state — a norm / min-max
+    /// header over the whole input, pre-drawn stochastic-rounding
+    /// uniforms (via [`crate::rng::Rng::fill_uniform`], stream-identical
+    /// to the scalar per-coordinate draws), the rotated input
+    /// (Suresh–Hadamard), or error-feedback memory (EF-Sign) — compute
+    /// and stash it here, once, before any [`Self::encode_range`] call:
+    /// `encode_range` takes `&self` and runs concurrently on shards, so
+    /// it can touch neither `&mut self` nor the round RNG.
+    /// `encode`/`encode_into` call this internally; [`encode_chunked`]
+    /// calls it exactly once before sharding. Calling `encode_range`
+    /// without a preceding prepare for the same `x` is a contract
+    /// violation (the stochastic codecs assert what they can). Default:
+    /// no-op — the lattice family's streams have no global state.
+    fn encode_prepare(&mut self, x: &[f64], rng: &mut Rng) {
+        let _ = (x, rng);
+    }
+
+    /// Number of fixed-width wire fields an [`Self::encode_range`]
+    /// stream covers — the sharding domain of [`encode_chunked`]. Equal
+    /// to [`Self::dim`] for every codec except those that quantize a
+    /// *padded transform* of the input (Suresh–Hadamard quantizes the
+    /// power-of-two-padded rotated vector, so its field count is the
+    /// padded dimension).
+    fn wire_fields(&self) -> usize {
+        self.dim()
+    }
+
+    /// Append the wire fields for field indices `lo..lo + len` (of
+    /// [`Self::wire_fields`]; = coordinates for unpadded codecs) of the
+    /// prepared input `x` to `w` — the encode twin of
+    /// [`Self::decode_accumulate_range`]. Implemented by codecs whose
+    /// message is a fixed-width field stream, optionally preceded by a
+    /// byte-aligned header: the lattice family (`LatticeQuantizer`,
+    /// `D4Quantizer`), `FullPrecision`, and the fixed-width baselines
+    /// (QSGD, Suresh–Hadamard, TernGrad, EF-Sign — whose headers are
+    /// emitted by the `lo == 0` chunk and whose global state comes from
+    /// [`Self::encode_prepare`]). They advertise it through
+    /// [`Self::supports_encode_range`], which is what lets the
+    /// chunk-parallel [`encode_chunked`] shard a huge gradient's encode
+    /// across cores. The only alignment the call itself needs is the
+    /// codec's field coupling (D4 buckets: `lo` and `len` multiples of
+    /// 4); byte alignment matters *between* streams — when independently
+    /// written streams are concatenated, every interior boundary must be
+    /// a multiple of [`Self::encode_chunk_align`] (the final, tail run
+    /// may be ragged), which is exactly how [`encode_chunked`] cuts its
+    /// runs (headers are whole bytes, so they never disturb the
+    /// arithmetic).
     ///
-    /// There is no generic fallback — a codec with a message header or
-    /// global state (RLQSGD's rotation, PowerSGD's factors) has no
-    /// meaningful coordinate sub-stream — so the default panics; gate
-    /// calls on `supports_encode_range`.
+    /// There is no generic fallback — a codec with global cross-field
+    /// coupling in the stream itself (RLQSGD's rotation happens *before*
+    /// quantization of every field, PowerSGD ships matrix factors,
+    /// vQSGD's fields are repetitions rather than coordinates) has no
+    /// meaningful field sub-stream — so the default panics; gate calls
+    /// on `supports_encode_range`.
     fn encode_range(&self, x: &[f64], lo: usize, len: usize, w: &mut bits::BitWriter) {
         let _ = (x, lo, len, w);
         panic!("{} does not support range encoding", self.name());
     }
 
-    /// True if [`Self::encode_range`] is implemented (fixed-width,
-    /// headerless wire format).
+    /// True if [`Self::encode_range`] is implemented: the message is a
+    /// fixed-width field stream, optionally preceded by a whole-byte
+    /// header that the `lo == 0` chunk emits (QSGD's norm, Suresh's
+    /// min/max, TernGrad's ℓ∞, EF-Sign's scale).
     fn supports_encode_range(&self) -> bool {
         false
     }
@@ -244,12 +283,19 @@ pub trait VectorCodec: Send {
 /// tests).
 ///
 /// `out` is recycled like `encode_into`'s scratch: cleared, capacity
-/// kept. Requires [`VectorCodec::supports_encode_range`] (the lattice
-/// family minus RLQSGD — whose global rotation has no coordinate
-/// sub-stream — plus full precision); panics otherwise.
+/// kept. The sequential [`VectorCodec::encode_prepare`] pre-pass runs
+/// exactly once before sharding (headers, bulk stochastic-rounding
+/// uniforms, rotations, error feedback — whatever global state the
+/// codec's `encode_range` shards read), which is why this takes
+/// `&mut C` and the round `rng`. Requires
+/// [`VectorCodec::supports_encode_range`] (the lattice family minus
+/// RLQSGD — whose global rotation has no field sub-stream — plus full
+/// precision and the fixed-width baselines QSGD / Suresh–Hadamard /
+/// TernGrad / EF-Sign); panics otherwise.
 pub fn encode_chunked<C: VectorCodec + Sync + ?Sized>(
-    codec: &C,
+    codec: &mut C,
     x: &[f64],
+    rng: &mut Rng,
     out: &mut Message,
     chunk: usize,
 ) {
@@ -258,8 +304,12 @@ pub fn encode_chunked<C: VectorCodec + Sync + ?Sized>(
         "{} does not support range encoding",
         codec.name()
     );
-    let d = codec.dim();
-    assert_eq!(x.len(), d);
+    assert_eq!(x.len(), codec.dim());
+    codec.encode_prepare(x, rng);
+    let codec: &C = codec;
+    // Shard the wire-field domain (= d except for padded-transform
+    // codecs, where it is the padded field count).
+    let d = codec.wire_fields();
     let align = codec.encode_chunk_align().max(1);
     let chunk = chunk.max(1).div_ceil(align) * align;
     let threads = std::thread::available_parallelism()
@@ -339,10 +389,11 @@ mod tests {
     #[test]
     fn default_into_methods_match_allocating_paths() {
         // A codec without overrides exercises the trait's fallback
-        // implementations of encode_into/decode_into.
+        // implementations of encode_into/decode_into (the baselines all
+        // override them now, so use the convex-hull encoder).
         let d = 16;
-        let mut codec = crate::quant::baselines::Qsgd::new(d, 16, crate::quant::baselines::QsgdNorm::L2);
-        let x: Vec<f64> = (0..d).map(|i| i as f64 * 0.37 - 2.0).collect();
+        let mut codec = crate::quant::convex_hull::ConvexHullEncoder::from_y(d, 8, 1.0);
+        let x: Vec<f64> = (0..d).map(|i| i as f64 * 0.037 - 0.2).collect();
         let mut rng_a = Rng::new(5);
         let mut rng_b = Rng::new(5);
         let fresh = codec.encode(&x, &mut rng_a);
@@ -357,16 +408,22 @@ mod tests {
 
     /// Sharded encode at several chunk sizes (including chunks smaller
     /// than the alignment quantum and larger than d) must reproduce the
-    /// sequential wire message bit for bit, stale scratch included.
-    fn check_chunked<C: VectorCodec + Sync>(codec: &mut C, x: &[f64], rng: &mut Rng) {
+    /// sequential wire message bit for bit, stale scratch included. The
+    /// chunked calls replay the encode's RNG stream and pre-encode codec
+    /// state from clones, so stochastic and stateful (EF) codecs see the
+    /// identical draws and error memory.
+    fn check_chunked<C: VectorCodec + Sync + Clone>(codec: &mut C, x: &[f64], rng: &mut Rng) {
         assert!(codec.supports_encode_range(), "{}", codec.name());
+        let rng0 = rng.clone();
+        let pristine = codec.clone();
         let expect = codec.encode(x, rng);
         for chunk in [1usize, 97, 1024, 100_000] {
             let mut msg = Message {
                 bytes: vec![0xEE; 7],
                 bits: 56,
             };
-            encode_chunked(codec, x, &mut msg, chunk);
+            let mut c = pristine.clone();
+            encode_chunked(&mut c, x, &mut rng0.clone(), &mut msg, chunk);
             assert_eq!(msg, expect, "{} chunk={chunk}", codec.name());
         }
     }
@@ -376,8 +433,9 @@ mod tests {
         let mut shared = Rng::new(61);
         let mut rng = Rng::new(62);
         // LQ at an awkward width (q=8 → 3 bits: byte alignment needs 8
-        // coords), D4 (32-coord quantum), and full precision, at a
-        // dimension that leaves ragged tail chunks.
+        // coords), D4 (32-coord quantum), full precision, and the
+        // header-carrying stochastic baselines, at a dimension that
+        // leaves ragged tail chunks (and pads for Suresh–Hadamard).
         let d = 4096 + 32;
         let x: Vec<f64> = (0..d).map(|_| rng.uniform(-40.0, 40.0)).collect();
         check_chunked(
@@ -391,25 +449,39 @@ mod tests {
             &x,
             &mut rng,
         );
+        check_chunked(
+            &mut crate::quant::baselines::Qsgd::new(d, 8, crate::quant::baselines::QsgdNorm::L2),
+            &x,
+            &mut rng,
+        );
+        check_chunked(
+            &mut crate::quant::baselines::SureshHadamard::new(d, 8, &mut shared),
+            &x,
+            &mut rng,
+        );
+        check_chunked(&mut crate::quant::baselines::TernGrad::new(d), &x, &mut rng);
+        check_chunked(&mut crate::quant::baselines::EfSignSgd::new(d), &x, &mut rng);
     }
 
     #[test]
     #[should_panic(expected = "does not support range encoding")]
     fn encode_chunked_rejects_codecs_without_range_encoding() {
-        // QSGD ships a norm header, so it has no coordinate sub-stream
-        // (RLQSGD is ruled out the same way, by its global rotation —
-        // and also by `Sync`, which its decode scratch forgoes).
-        let codec =
-            crate::quant::baselines::Qsgd::new(16, 16, crate::quant::baselines::QsgdNorm::L2);
+        // vQSGD's fields are repetition samples, not coordinates, so it
+        // has no field sub-stream (RLQSGD is ruled out the same way, by
+        // its global pre-quantization rotation — and also by `Sync`,
+        // which its decode scratch forgoes).
+        let mut codec = crate::quant::baselines::VqsgdCrossPolytope::new(16, 4);
         let x = vec![0.0; 16];
         let mut msg = Message::empty();
-        encode_chunked(&codec, &x, &mut msg, 8);
+        encode_chunked(&mut codec, &x, &mut Rng::new(1), &mut msg, 8);
     }
 
     #[test]
     fn default_decode_accumulate_matches_decode_plus_axpy() {
+        // ConvexHullEncoder rides the trait defaults (the baselines all
+        // override the fold kernels now).
         let d = 16;
-        let mut codec = crate::quant::baselines::Qsgd::new(d, 16, crate::quant::baselines::QsgdNorm::L2);
+        let mut codec = crate::quant::convex_hull::ConvexHullEncoder::from_y(d, 8, 4.0);
         let x: Vec<f64> = (0..d).map(|i| (i as f64).sin() * 3.0).collect();
         let mut rng = Rng::new(8);
         let msg = codec.encode(&x, &mut rng);

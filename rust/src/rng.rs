@@ -42,6 +42,23 @@ pub fn fork_round_seeds(seed: u64, first_round: u64, count: usize) -> Vec<u64> {
         .collect()
 }
 
+/// One xoshiro256++ state step — the single copy of the generator
+/// algorithm. [`Rng::next_u64`] runs it on `self.s` directly; the bulk
+/// fills ([`Rng::fill_u64`], [`Rng::fill_uniform`]) run it on a local
+/// copy of the state (registers for the whole fill) and store back once.
+#[inline(always)]
+fn xoshiro_step(s: &mut [u64; 4]) -> u64 {
+    let result = s[0].wrapping_add(s[3]).rotate_left(23).wrapping_add(s[0]);
+    let t = s[1] << 17;
+    s[2] ^= s[0];
+    s[3] ^= s[1];
+    s[1] ^= s[2];
+    s[0] ^= s[3];
+    s[2] ^= t;
+    s[3] = s[3].rotate_left(45);
+    result
+}
+
 /// xoshiro256++ PRNG.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -75,23 +92,40 @@ impl Rng {
     /// Next raw 64 bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
-        let result = (self.s[0].wrapping_add(self.s[3]))
-            .rotate_left(23)
-            .wrapping_add(self.s[0]);
-        let t = self.s[1] << 17;
-        self.s[2] ^= self.s[0];
-        self.s[3] ^= self.s[1];
-        self.s[1] ^= self.s[2];
-        self.s[0] ^= self.s[3];
-        self.s[2] ^= t;
-        self.s[3] = self.s[3].rotate_left(45);
-        result
+        xoshiro_step(&mut self.s)
     }
 
     /// Uniform in `[0, 1)` with 53-bit resolution.
     #[inline]
     pub fn next_f64(&mut self) -> f64 {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fill `out` with raw 64-bit draws — the bulk twin of
+    /// [`Self::next_u64`], producing the *identical* stream (one
+    /// [`xoshiro_step`] per word, in order). The generator state lives
+    /// in a local for the whole fill instead of round-tripping through
+    /// `self` per draw, which is what the fused stochastic-rounding
+    /// encode kernels feed on (§Perf). Pinned by
+    /// `bulk_fills_match_scalar_draws`.
+    pub fn fill_u64(&mut self, out: &mut [u64]) {
+        let mut s = self.s;
+        for o in out.iter_mut() {
+            *o = xoshiro_step(&mut s);
+        }
+        self.s = s;
+    }
+
+    /// Fill `out` with uniforms in `[0, 1)` — the bulk twin of
+    /// [`Self::next_f64`], stream-identical to calling it `out.len()`
+    /// times (same draws, same 53-bit conversion, same final state).
+    pub fn fill_uniform(&mut self, out: &mut [f64]) {
+        const SCALE: f64 = 1.0 / (1u64 << 53) as f64;
+        let mut s = self.s;
+        for o in out.iter_mut() {
+            *o = (xoshiro_step(&mut s) >> 11) as f64 * SCALE;
+        }
+        self.s = s;
     }
 
     /// Uniform in `[lo, hi)`.
@@ -256,6 +290,33 @@ mod tests {
         for vi in &v {
             assert_eq!(*vi, d.next_gaussian());
         }
+    }
+
+    #[test]
+    fn bulk_fills_match_scalar_draws() {
+        // fill_u64 / fill_uniform must be stream-identical to repeated
+        // next_u64 / next_f64 — same values AND same final state, so
+        // scalar and bulk consumption can interleave freely. This is the
+        // contract the fused baseline encode kernels rely on to stay
+        // bit-identical to the seed's one-draw-per-coordinate loops.
+        let mut scalar = Rng::new(77);
+        let mut bulk = Rng::new(77);
+        for &n in &[1usize, 2, 7, 64, 257] {
+            let expect_u: Vec<u64> = (0..n).map(|_| scalar.next_u64()).collect();
+            let mut got_u = vec![0u64; n];
+            bulk.fill_u64(&mut got_u);
+            assert_eq!(got_u, expect_u, "fill_u64 n={n}");
+            let expect_f: Vec<f64> = (0..n).map(|_| scalar.next_f64()).collect();
+            let mut got_f = vec![0.0f64; n];
+            bulk.fill_uniform(&mut got_f);
+            assert_eq!(got_f, expect_f, "fill_uniform n={n}");
+            // Interleave a scalar draw between fills: state must agree.
+            assert_eq!(scalar.next_u64(), bulk.next_u64(), "state after fills n={n}");
+        }
+        // Empty fill is a no-op on the state.
+        bulk.fill_uniform(&mut []);
+        bulk.fill_u64(&mut []);
+        assert_eq!(scalar.next_u64(), bulk.next_u64());
     }
 
     #[test]

@@ -9,6 +9,7 @@ use dme::coordinator::{
     mean_estimation_star, mean_estimation_tree, robust_variance_reduction, CodecSpec, DmeBuilder,
 };
 use dme::linalg::{axpy, dist_inf, mean_vecs};
+use dme::quant::baselines::{EfSignSgd, Qsgd, QsgdNorm, SureshHadamard, TernGrad, TopK};
 use dme::quant::{LatticeQuantizer, Message, PacketArena, RotatedLatticeQuantizer, VectorCodec};
 use dme::rng::{hash2, Rng};
 
@@ -532,16 +533,18 @@ fn prop_encode_chunked_matches_sequential() {
         let center = rng.uniform(-50.0, 50.0);
         let x = rand_vec(rng, d, center, y);
         let mut enc_rng = rng.fork(22);
+        let chunk_rng = enc_rng.clone();
         let expect = dme::quant::VectorCodec::encode(&mut lq, &x, &mut enc_rng);
-        dme::quant::encode_chunked(&lq, &x, &mut stale, chunk);
+        dme::quant::encode_chunked(&mut lq, &x, &mut chunk_rng.clone(), &mut stale, chunk);
         assert_eq!(stale, expect, "LQ d={d} q={q} chunk={chunk}");
 
         let d = 4 * (1 + rng.next_below(64) as usize);
         let x = rand_vec(rng, d, 0.0, y);
         let mut shared = rng.fork(23);
         let mut d4 = dme::quant::D4Quantizer::from_y(d, 16, y, &mut shared);
+        let chunk_rng = enc_rng.clone();
         let expect = dme::quant::VectorCodec::encode(&mut d4, &x, &mut enc_rng);
-        dme::quant::encode_chunked(&d4, &x, &mut stale, chunk);
+        dme::quant::encode_chunked(&mut d4, &x, &mut chunk_rng.clone(), &mut stale, chunk);
         assert_eq!(stale, expect, "D4 d={d} chunk={chunk}");
     });
 }
@@ -649,5 +652,393 @@ fn prop_round_batch_matches_sequential_rounds() {
             assert_eq!(o.agreement, r.agreement, "slot {s}");
             assert_eq!(o.round_traffic, r.round_traffic, "slot {s}");
         }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Baseline comparators on the blocked data plane: every fused path must
+// reproduce the seed's scalar loops bit for bit — same RNG draw order,
+// same IEEE expression order. The scalar references below are verbatim
+// copies of the seed implementations (per-coordinate `rng.next_f64()`
+// draws, per-field `BitWriter::push`).
+// ---------------------------------------------------------------------
+
+/// Seed QSGD-L2: one f64 header, then per coordinate a sign bit and a
+/// stochastically rounded level, one RNG draw per coordinate (drawn even
+/// for the zero vector).
+fn qsgd_l2_encode_scalar(levels: u32, x: &[f64], rng: &mut Rng) -> Message {
+    let w_lvl = dme::quant::bits::width_for(levels as u64 + 1);
+    let norm = dme::linalg::norm2(x);
+    let mut w = dme::quant::bits::BitWriter::new();
+    w.push_f64(norm);
+    for &v in x {
+        let sign = if v < 0.0 { 1u64 } else { 0u64 };
+        let scaled = if norm > 0.0 {
+            v.abs() / norm * levels as f64
+        } else {
+            0.0
+        };
+        let low = scaled.floor();
+        let lvl = low as u64 + if rng.next_f64() < scaled - low { 1 } else { 0 };
+        w.push(sign, 1);
+        w.push(lvl.min(levels as u64), w_lvl);
+    }
+    let (bytes, bits) = w.finish();
+    Message { bytes, bits }
+}
+
+/// Seed QSGD-L∞: min/max header, per-coordinate stochastic level.
+fn qsgd_linf_encode_scalar(levels: u32, x: &[f64], rng: &mut Rng) -> Message {
+    let w_lvl = dme::quant::bits::width_for(levels as u64 + 1);
+    let mn = x.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mx = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let range = (mx - mn).max(0.0);
+    let mut w = dme::quant::bits::BitWriter::new();
+    w.push_f64(mn);
+    w.push_f64(mx);
+    for &v in x {
+        let scaled = if range > 0.0 {
+            (v - mn) / range * levels as f64
+        } else {
+            0.0
+        };
+        let low = scaled.floor();
+        let lvl = (low as u64 + if rng.next_f64() < scaled - low { 1 } else { 0 })
+            .min(levels as u64);
+        w.push(lvl, w_lvl);
+    }
+    let (bytes, bits) = w.finish();
+    Message { bytes, bits }
+}
+
+/// Seed Suresh–Hadamard: rotate, min/max header over the rotated vector,
+/// per-padded-coordinate stochastic level.
+fn suresh_encode_scalar(c: &SureshHadamard, x: &[f64], rng: &mut Rng) -> Message {
+    let levels = c.levels;
+    let w_lvl = dme::quant::bits::width_for(levels as u64 + 1);
+    let rx = c.rotation.forward(x);
+    let mn = rx.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mx = rx.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let range = (mx - mn).max(0.0);
+    let mut w = dme::quant::bits::BitWriter::new();
+    w.push_f64(mn);
+    w.push_f64(mx);
+    for &v in &rx {
+        let scaled = if range > 0.0 {
+            (v - mn) / range * levels as f64
+        } else {
+            0.0
+        };
+        let low = scaled.floor();
+        let lvl = (low as u64 + if rng.next_f64() < scaled - low { 1 } else { 0 })
+            .min(levels as u64);
+        w.push(lvl, w_lvl);
+    }
+    let (bytes, bits) = w.finish();
+    Message { bytes, bits }
+}
+
+/// Seed TernGrad: ℓ∞ header, per-coordinate trit — note the seed's
+/// `m > 0.0 &&` short-circuit, which drew *nothing* for the zero vector.
+fn terngrad_encode_scalar(x: &[f64], rng: &mut Rng) -> Message {
+    let m = dme::linalg::norm_inf(x);
+    let mut w = dme::quant::bits::BitWriter::new();
+    w.push_f64(m);
+    for &v in x {
+        let t = if m > 0.0 && rng.next_f64() < v.abs() / m {
+            if v < 0.0 {
+                2u64
+            } else {
+                1u64
+            }
+        } else {
+            0u64
+        };
+        w.push(t, 2);
+    }
+    let (bytes, bits) = w.finish();
+    Message { bytes, bits }
+}
+
+/// Seed EF-SignSGD: scale header + sign bits over `p = x + e`, with the
+/// caller-held error memory updated exactly like the seed.
+fn efsign_encode_scalar(error: &mut [f64], x: &[f64]) -> Message {
+    let d = x.len();
+    let p: Vec<f64> = x.iter().zip(error.iter()).map(|(a, e)| a + e).collect();
+    let scale = dme::linalg::norm1(&p) / d as f64;
+    let mut w = dme::quant::bits::BitWriter::new();
+    w.push_f64(scale);
+    for &v in &p {
+        w.push(u64::from(v < 0.0), 1);
+    }
+    for (e, &v) in error.iter_mut().zip(&p) {
+        let dec = if v < 0.0 { -scale } else { scale };
+        *e = v - dec;
+    }
+    let (bytes, bits) = w.finish();
+    Message { bytes, bits }
+}
+
+/// Seed Top-K: stable descending sort by |p| (panics on NaN — the
+/// reference is only used on finite inputs), truncate to k, ascending
+/// index serialization, error feedback.
+fn topk_encode_scalar(k: usize, error: &mut [f64], x: &[f64]) -> Message {
+    let d = x.len();
+    let iw = dme::quant::bits::width_for(d as u64).max(1);
+    let p: Vec<f64> = x.iter().zip(error.iter()).map(|(a, e)| a + e).collect();
+    let mut idx: Vec<usize> = (0..d).collect();
+    idx.sort_by(|&a, &b| p[b].abs().partial_cmp(&p[a].abs()).unwrap());
+    idx.truncate(k);
+    idx.sort_unstable();
+    let mut w = dme::quant::bits::BitWriter::new();
+    for &i in &idx {
+        w.push(i as u64, iw);
+        w.push_f32(p[i] as f32);
+    }
+    let mut kept = vec![false; d];
+    for &i in &idx {
+        kept[i] = true;
+    }
+    for i in 0..d {
+        error[i] = if kept[i] {
+            p[i] - p[i] as f32 as f64
+        } else {
+            p[i]
+        };
+    }
+    let (bytes, bits) = w.finish();
+    Message { bytes, bits }
+}
+
+/// Fused baseline encodes vs the seed scalar references: bit-identical
+/// messages AND identical RNG stream positions afterwards, across two
+/// successive rounds (exercising EF/Top-K state evolution), at edge dims
+/// (d = 1 included in `rand_dim`) and for the all-zero vector (where
+/// QSGD still draws d uniforms but TernGrad draws none).
+#[test]
+fn prop_baseline_fused_encode_matches_seed_scalar() {
+    check("baseline_encode_scalar", 30, |rng| {
+        let d = rand_dim(rng);
+        let q = [2u32, 8, 16, 255][rng.next_below(4) as usize];
+        let zero = rng.next_below(5) == 0;
+        let center = rng.uniform(-20.0, 20.0);
+        // Draw from a coarse grid half the time so Top-K sees magnitude
+        // ties (the tie-break parity matters).
+        let coarse = rng.next_below(2) == 0;
+        let draw = |rng: &mut Rng| -> Vec<f64> {
+            if zero {
+                vec![0.0; d]
+            } else if coarse {
+                (0..d).map(|_| (rng.next_below(7) as f64 - 3.0) * 0.5).collect()
+            } else {
+                rand_vec(rng, d, center, 3.0)
+            }
+        };
+
+        for norm in [QsgdNorm::L2, QsgdNorm::Linf] {
+            let mut c = Qsgd::new(d, q, norm);
+            let mut r_ref = rng.fork(1);
+            let mut r_fused = r_ref.clone();
+            for step in 0..2 {
+                let x = draw(rng);
+                let expect = match norm {
+                    QsgdNorm::L2 => qsgd_l2_encode_scalar(q - 1, &x, &mut r_ref),
+                    QsgdNorm::Linf => qsgd_linf_encode_scalar(q - 1, &x, &mut r_ref),
+                };
+                let got = c.encode(&x, &mut r_fused);
+                assert_eq!(got, expect, "QSGD {norm:?} d={d} q={q} step={step}");
+            }
+            assert_eq!(r_ref.next_u64(), r_fused.next_u64(), "QSGD rng stream");
+        }
+
+        let mut shared = rng.fork(2);
+        let mut c = SureshHadamard::new(d, q, &mut shared);
+        let mut r_ref = rng.fork(3);
+        let mut r_fused = r_ref.clone();
+        for step in 0..2 {
+            let x = draw(rng);
+            let expect = suresh_encode_scalar(&c, &x, &mut r_ref);
+            let got = c.encode(&x, &mut r_fused);
+            assert_eq!(got, expect, "Suresh d={d} q={q} step={step}");
+        }
+        assert_eq!(r_ref.next_u64(), r_fused.next_u64(), "Suresh rng stream");
+
+        let mut c = TernGrad::new(d);
+        let mut r_ref = rng.fork(4);
+        let mut r_fused = r_ref.clone();
+        for step in 0..2 {
+            let x = draw(rng);
+            let expect = terngrad_encode_scalar(&x, &mut r_ref);
+            let got = c.encode(&x, &mut r_fused);
+            assert_eq!(got, expect, "TernGrad d={d} step={step}");
+        }
+        assert_eq!(r_ref.next_u64(), r_fused.next_u64(), "TernGrad rng stream");
+
+        let mut c = EfSignSgd::new(d);
+        let mut err_ref = vec![0.0; d];
+        let mut r_fused = rng.fork(5);
+        for step in 0..2 {
+            let x = draw(rng);
+            let expect = efsign_encode_scalar(&mut err_ref, &x);
+            let got = c.encode(&x, &mut r_fused);
+            assert_eq!(got, expect, "EF-Sign d={d} step={step}");
+            assert_eq!(c.error, err_ref, "EF-Sign error memory step={step}");
+        }
+
+        let k = 1 + rng.next_below(d as u64) as usize;
+        let mut c = TopK::new(d, k);
+        let mut err_ref = vec![0.0; d];
+        let mut r_fused = rng.fork(6);
+        for step in 0..2 {
+            let x = draw(rng);
+            let expect = topk_encode_scalar(k, &mut err_ref, &x);
+            let got = c.encode(&x, &mut r_fused);
+            assert_eq!(got, expect, "TopK d={d} k={k} step={step} coarse={coarse}");
+        }
+    });
+}
+
+/// `encode_into` ≡ `encode` (stale scratch included) and `decode_into` ≡
+/// `decode`, bit for bit, for every baseline comparator — stateful ones
+/// run two rounds on twin instances so error memory evolves identically.
+#[test]
+fn prop_baseline_encode_into_matches_encode() {
+    check("baseline_encode_into", 30, |rng| {
+        let d = rand_dim(rng);
+        let seed = rng.next_u64();
+        let k = 1 + rng.next_below(d as u64) as usize;
+        let specs = [
+            CodecSpec::QsgdL2 { q: 16 },
+            CodecSpec::QsgdLinf { q: 16 },
+            CodecSpec::Hadamard { q: 16 },
+            CodecSpec::Vqsgd { reps: 3 },
+            CodecSpec::EfSign,
+            CodecSpec::PowerSgd { rank: 1 },
+            CodecSpec::TernGrad,
+            CodecSpec::TopK { k },
+            CodecSpec::Full,
+        ];
+        for spec in specs {
+            let mut a = spec.build(d, 1.0, seed, 0);
+            let mut b = spec.build(d, 1.0, seed, 0);
+            let mut ra = rng.fork(41);
+            let mut rb = ra.clone();
+            let mut scratch = Message {
+                bytes: vec![0x5A; 9],
+                bits: 72,
+            };
+            for step in 0..2 {
+                let x = rand_vec(rng, d, 5.0, 2.0);
+                let m = a.encode(&x, &mut ra);
+                b.encode_into(&x, &mut rb, &mut scratch);
+                assert_eq!(scratch, m, "{} step={step} d={d}", spec.label());
+                let z = a.decode(&m, &x);
+                let mut z2 = vec![-9.0; d];
+                a.decode_into(&m, &x, &mut z2);
+                assert_eq!(z, z2, "{} decode_into step={step}", spec.label());
+            }
+        }
+    });
+}
+
+/// Baseline fold kernels at arbitrary dims: `decode_accumulate_into` ≡
+/// decode + axpy and `decode_accumulate_range` ≡ the slice of it, bit
+/// for bit, with *misaligned* chunk boundaries (every baseline has
+/// fold_chunk_align = 1), stale accumulators, the all-zero vector, and
+/// d = 1.
+#[test]
+fn prop_baseline_fold_kernels_bitwise_any_dim() {
+    check("baseline_fold", 30, |rng| {
+        let d = rand_dim(rng);
+        let zero = rng.next_below(6) == 0;
+        let seed = rng.next_u64();
+        let k = 1 + rng.next_below(d as u64) as usize;
+        let specs = [
+            CodecSpec::QsgdL2 { q: 16 },
+            CodecSpec::QsgdLinf { q: 8 },
+            CodecSpec::Hadamard { q: 16 },
+            CodecSpec::Vqsgd { reps: 4 },
+            CodecSpec::EfSign,
+            CodecSpec::PowerSgd { rank: 2 },
+            CodecSpec::TernGrad,
+            CodecSpec::TopK { k },
+            CodecSpec::Full,
+        ];
+        for spec in specs {
+            let mut codec = spec.build(d, 1.0, seed, 1);
+            let x = if zero {
+                vec![0.0; d]
+            } else {
+                rand_vec(rng, d, -3.0, 8.0)
+            };
+            let mut er = rng.fork(7);
+            let msg = codec.encode(&x, &mut er);
+            let weight = rng.uniform(-2.0, 2.0);
+            let stale = rand_vec(rng, d, 0.0, 4.0);
+            let mut z = vec![0.0; d];
+            codec.decode_into(&msg, &x, &mut z);
+            let mut expect = stale.clone();
+            axpy(&mut expect, weight, &z);
+            let mut acc = stale.clone();
+            codec.decode_accumulate_into(&msg, &x, weight, &mut acc);
+            assert_eq!(acc, expect, "{} fused d={d} zero={zero}", spec.label());
+            let lo = rng.next_below(d as u64) as usize;
+            let len = 1 + rng.next_below((d - lo) as u64) as usize;
+            let mut acc_r = stale[lo..lo + len].to_vec();
+            codec.decode_accumulate_range(&msg, &x, weight, lo, &mut acc_r);
+            assert_eq!(
+                acc_r,
+                expect[lo..lo + len],
+                "{} range lo={lo} len={len} d={d}",
+                spec.label()
+            );
+        }
+    });
+}
+
+/// Chunk-parallel encode for the fixed-width baselines: any chunk size,
+/// ragged dims (Suresh pads to a power of two), headers riding the first
+/// chunk — bit-identical to the sequential encode, with the RNG stream
+/// and (for EF-Sign) error memory replayed from clones.
+#[test]
+fn prop_baseline_encode_chunked_matches_sequential() {
+    fn check_one<C: VectorCodec + Sync + Clone>(
+        codec: &mut C,
+        x: &[f64],
+        rng: &mut Rng,
+        chunk: usize,
+    ) {
+        let pristine = codec.clone();
+        let r0 = rng.clone();
+        let expect = codec.encode(x, rng);
+        let mut c = pristine;
+        let mut msg = Message {
+            bytes: vec![0xEE; 3],
+            bits: 24,
+        };
+        dme::quant::encode_chunked(&mut c, x, &mut r0.clone(), &mut msg, chunk);
+        assert_eq!(msg, expect, "{} chunk={chunk} d={}", c.name(), x.len());
+    }
+
+    check("baseline_chunked", 30, |rng| {
+        let d = rand_dim(rng);
+        let q = [2u32, 8, 16][rng.next_below(3) as usize];
+        let chunk = 1 + rng.next_below(100) as usize;
+        let x = rand_vec(rng, d, 4.0, 6.0);
+        let mut enc_rng = rng.fork(51);
+        check_one(&mut Qsgd::new(d, q, QsgdNorm::L2), &x, &mut enc_rng, chunk);
+        check_one(&mut Qsgd::new(d, q, QsgdNorm::Linf), &x, &mut enc_rng, chunk);
+        let mut shared = rng.fork(52);
+        check_one(
+            &mut SureshHadamard::new(d, q, &mut shared),
+            &x,
+            &mut enc_rng,
+            chunk,
+        );
+        check_one(&mut TernGrad::new(d), &x, &mut enc_rng, chunk);
+        let mut ef = EfSignSgd::new(d);
+        // Warm the error memory so the chunked replay carries state.
+        let _ = ef.encode(&x, &mut enc_rng);
+        check_one(&mut ef, &x, &mut enc_rng, chunk);
     });
 }

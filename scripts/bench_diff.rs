@@ -1,0 +1,130 @@
+//! Diff two `BENCH_<name>.json` summaries (schema v1, emitted by every
+//! bench target via `dme::bench::Bencher::write_json` — see
+//! `rust/benches/README.md`): per-case old vs new median ns/op and the
+//! relative delta, plus cases added or removed between the runs. This is
+//! how the perf trajectory across PRs gets populated — CI uploads the
+//! smoke-run JSONs as artifacts, so any two runs are one command apart:
+//!
+//! ```text
+//! cargo bench-diff old/BENCH_quant_bench.json BENCH_quant_bench.json
+//! cargo bench-diff --fail-above 10 old.json new.json   # CI gate form
+//! ```
+//!
+//! `--fail-above <pct>` exits non-zero if any case regressed by more
+//! than `<pct>` percent (median ns/op). Without it the diff is purely
+//! informational. Smoke-run JSONs (`iters = 1`) carry meaningless
+//! timings — diff them only to check the case inventory.
+
+use dme::config::Json;
+use std::collections::BTreeMap;
+use std::process::exit;
+
+/// name → median ns/op for every case of one summary file.
+fn load(path: &str) -> BTreeMap<String, f64> {
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bench_diff: cannot read {path}: {e}");
+            exit(2);
+        }
+    };
+    let json = match Json::parse(&src) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bench_diff: {path} is not valid JSON: {e:?}");
+            exit(2);
+        }
+    };
+    let Some(cases) = json.get("cases").and_then(|c| c.as_arr()) else {
+        eprintln!("bench_diff: {path} has no `cases` array (schema v1 expected)");
+        exit(2);
+    };
+    let mut out = BTreeMap::new();
+    for case in cases {
+        let (Some(name), Some(median)) = (
+            case.get("name").and_then(|n| n.as_str()),
+            case.get("median_ns").and_then(|m| m.as_f64()),
+        ) else {
+            eprintln!("bench_diff: {path}: case without name/median_ns");
+            exit(2);
+        };
+        out.insert(name.to_string(), median);
+    }
+    out
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let mut fail_above: Option<f64> = None;
+    if let Some(pos) = args.iter().position(|a| a == "--fail-above") {
+        if pos + 1 >= args.len() {
+            eprintln!("bench_diff: --fail-above needs a percentage");
+            exit(2);
+        }
+        fail_above = args[pos + 1].parse().ok();
+        if fail_above.is_none() {
+            eprintln!("bench_diff: bad --fail-above value {:?}", args[pos + 1]);
+            exit(2);
+        }
+        args.drain(pos..=pos + 1);
+    }
+    let [old_path, new_path] = args.as_slice() else {
+        eprintln!("usage: bench_diff [--fail-above <pct>] <old.json> <new.json>");
+        exit(2);
+    };
+    let old = load(old_path);
+    let new = load(new_path);
+
+    println!("# bench diff: {old_path} → {new_path}\n");
+    println!("{:<46} {:>12} {:>12} {:>9}", "case", "old", "new", "delta");
+    let mut worst: f64 = f64::NEG_INFINITY;
+    for (name, new_ns) in &new {
+        match old.get(name) {
+            Some(old_ns) => {
+                let pct = (new_ns - old_ns) / old_ns * 100.0;
+                worst = worst.max(pct);
+                println!(
+                    "{:<46} {:>12} {:>12} {:>+8.1}%",
+                    name,
+                    fmt_ns(*old_ns),
+                    fmt_ns(*new_ns),
+                    pct
+                );
+            }
+            None => println!("{:<46} {:>12} {:>12}    (new)", name, "-", fmt_ns(*new_ns)),
+        }
+    }
+    for name in old.keys().filter(|n| !new.contains_key(*n)) {
+        println!("{name:<46} (removed)");
+    }
+    let matched = new.keys().filter(|n| old.contains_key(*n)).count();
+    println!(
+        "\n{} matched, {} new, {} removed{}",
+        matched,
+        new.len() - matched,
+        old.len() - matched,
+        if matched > 0 && worst.is_finite() {
+            format!("; worst regression {worst:+.1}%")
+        } else {
+            String::new()
+        }
+    );
+    if let Some(limit) = fail_above {
+        if worst.is_finite() && worst > limit {
+            eprintln!("bench_diff: regression {worst:+.1}% exceeds --fail-above {limit}%");
+            exit(1);
+        }
+    }
+}
