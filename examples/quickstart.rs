@@ -26,6 +26,13 @@
 //!    streaming and chunk-sharded folds — so head-to-head sweeps cost
 //!    comparator wall-clock proportional to the wire bits, not the
 //!    seed's scalar loops.
+//! 9. Serving cohorts over TCP (`net::service`): a leader-side loop
+//!    multiplexing many independent client groups over real sockets —
+//!    each report is folded straight into the cohort's O(d) accumulator,
+//!    a full round answers every client with the identical estimate, and
+//!    a deadline closes a short round over the k ≤ n arrived reports
+//!    with the mean renormalized by 1/k. The `dme serve` / `dme report`
+//!    subcommands wrap exactly this API.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -266,4 +273,78 @@ fn main() {
         "chunk-sharded fold of 4 peers done : ‖fold − x‖∞ = {:.4}",
         dist_inf(&folded, &grad)
     );
+    println!();
+
+    // ---------------------------------------------------------------
+    // 9. Serving cohorts over TCP. One `serve` loop owns the leader
+    //    role for every cohort: clients connect, report their encoded
+    //    vector for a (cohort, round), and block until the round closes
+    //    — either all n reports arrived (full) or the deadline passed
+    //    and the k ≤ n arrivals are renormalized by 1/k (partial).
+    //    `max_rounds: Some(2)` makes the service exit after our two
+    //    rounds, so the example terminates cleanly.
+    // ---------------------------------------------------------------
+    use dme::net::cohort::CohortSpec;
+    use dme::net::service::{report_round, serve, ServeOpts};
+    let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).expect("bind loopback");
+    let addr = listener.local_addr().expect("bound address").to_string();
+    let server = std::thread::spawn(move || {
+        serve(
+            listener,
+            ServeOpts {
+                default_deadline_ms: 10_000,
+                max_rounds: Some(2),
+                ..ServeOpts::default()
+            },
+        )
+    });
+    // Every client of a cohort shares the spec: it pins the codec and
+    // the shared randomness, and y must bound the clients' vectors in
+    // ℓ∞ (the decode reference is the zero vector).
+    let cs = CohortSpec {
+        n: 3,
+        d: 32,
+        spec: CodecSpec::Lq { q: 64 },
+        y: 8.0,
+        seed: 42,
+    };
+    // Round 0: all three clients report concurrently (each call blocks
+    // until the round closes, so they must overlap).
+    let timeout = std::time::Duration::from_secs(10);
+    let clients: Vec<_> = (0..cs.n)
+        .map(|client| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let input = vec![client as f64; cs.d];
+                report_round(&addr, 7, 0, client, &cs, &input, 0, timeout)
+                    .expect("round 0 estimate")
+            })
+        })
+        .collect();
+    let outs: Vec<_> = clients.into_iter().map(|h| h.join().expect("client thread")).collect();
+    println!("== serving cohorts over TCP (net::service) ==");
+    println!(
+        "round 0 (full)   : received={}/{} partial={} mean0={:.3} (true mean 1.0 ± quantization)",
+        outs[0].received, outs[0].expected, outs[0].partial, outs[0].estimate[0]
+    );
+    println!("all clients saw the identical estimate: {}", outs.iter().all(|o| *o == outs[0]));
+    // Round 1: only client 0 shows up; its 200 ms deadline closes the
+    // round over k=1 of n=3 — the fold renormalizes by 1/k, so the
+    // estimate tracks the arrived report, not a third of it.
+    let input = vec![5.0; cs.d];
+    let out = report_round(&addr, 7, 1, 0, &cs, &input, 200, timeout).expect("round 1 estimate");
+    println!(
+        "round 1 (dropout): received={}/{} partial={} mean0={:.3} (tracks 5.0 — renormalized)",
+        out.received, out.expected, out.partial, out.estimate[0]
+    );
+    let summary = server.join().expect("server thread").expect("serve exits cleanly");
+    println!(
+        "service summary  : rounds={} partial={} cohorts={} bits_in={} bits_out={}",
+        summary.rounds_completed,
+        summary.rounds_partial,
+        summary.cohorts,
+        summary.traffic.recv_bits,
+        summary.traffic.sent_bits
+    );
+    println!("(`dme serve` / `dme report` drive the same loop from the CLI)");
 }

@@ -26,14 +26,28 @@
 //! slots (bit-identical per slot — pinned by `session_parity`), at
 //! B ∈ {1, 8, 64}, d ∈ {128, 4096}, star and tree. The gap is the
 //! per-round crossing + staging cost the batch amortizes.
+//!
+//! The `transport_bench` section prices the pluggable transport layer:
+//! the same star round over the in-process channel cluster vs the
+//! loopback-TCP mesh (bit-identical estimates and meters — pinned by
+//! `tests/transport.rs`; the gap is the OS socket hop), and the
+//! multi-cohort service front-end driven end-to-end over TCP at
+//! cohorts ∈ {1, 16, 256}, n ∈ {4, 16}, d ∈ {128, 4096}.
 
 use dme::bench::Bencher;
 use dme::coordinator::{
     fold_mean, fold_mean_chunked, mean_estimation_star, mean_estimation_tree,
-    robust_variance_reduction, CodecSpec, DmeBuilder, FoldPart,
+    robust_variance_reduction, star_round_over, CodecSpec, DmeBuilder, FoldPart,
 };
+use dme::net::cohort::CohortSpec;
+use dme::net::service::{report_round, request_shutdown, serve, ServeOpts};
+use dme::net::tcp::{LoopbackMesh, TcpOpts};
 use dme::quant::{encode_chunked, D4Quantizer, LatticeQuantizer, Message, VectorCodec};
 use dme::rng::Rng;
+use dme::sim::Cluster;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
 
 fn inputs(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
     let mut rng = Rng::new(seed);
@@ -89,8 +103,192 @@ fn main() {
     fold_bench(&mut b);
     encode_plane_bench(&mut b);
     batch_bench(&mut b);
+    transport_bench(&mut b);
 
     b.write_json("coordinator_bench").expect("write bench json");
+}
+
+/// A persistent cluster of worker threads, one per endpoint of a
+/// [`Transport`](dme::net::Transport), each running one
+/// [`star_round_over`] per command. The same driver runs the channel
+/// cluster and the TCP mesh, so the two rows differ only in the wire.
+struct MeshDriver {
+    cmd: Vec<mpsc::Sender<u64>>,
+    res: mpsc::Receiver<f64>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl MeshDriver {
+    /// Run one full round across all machines; returns the sum of every
+    /// machine's first output coordinate (black-box fodder).
+    fn round(&mut self, round: u64) -> f64 {
+        for tx in &self.cmd {
+            tx.send(round).expect("mesh worker alive");
+        }
+        let mut acc = 0.0;
+        for _ in 0..self.cmd.len() {
+            acc += self.res.recv().expect("mesh round result");
+        }
+        acc
+    }
+
+    fn finish(self) {
+        drop(self.cmd);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn mesh_driver<T>(
+    transport: &mut T,
+    spec: CodecSpec,
+    seed: u64,
+    y: f64,
+    xs: &[Vec<f64>],
+) -> MeshDriver
+where
+    T: dme::net::Transport,
+    T::Endpoint: 'static,
+{
+    let (res_tx, res) = mpsc::channel();
+    let mut cmd = Vec::new();
+    let mut handles = Vec::new();
+    for (i, mut ep) in transport.open().expect("open transport").into_iter().enumerate() {
+        let (tx, rx) = mpsc::channel::<u64>();
+        cmd.push(tx);
+        let input = xs[i].clone();
+        let res_tx = res_tx.clone();
+        handles.push(thread::spawn(move || {
+            for round in rx {
+                let r = star_round_over(&mut ep, spec, seed, round, y, &input, false)
+                    .expect("bench round");
+                let _ = res_tx.send(r.output[0]);
+            }
+        }));
+    }
+    MeshDriver { cmd, res, handles }
+}
+
+/// In-process channels vs loopback TCP for the identical star round,
+/// then the cohort service driven end-to-end (connect + report + fold +
+/// estimate broadcast) at increasing multiplexing width.
+fn transport_bench(b: &mut Bencher) {
+    println!("# transport_bench — in-process vs loopback-TCP vs cohort service\n");
+    let spec = CodecSpec::Lq { q: 16 };
+    let seed = 23;
+    let y = 64.0; // must bound the 50.0 ± 0.5 inputs in ℓ∞
+    for (n, d) in [(4usize, 128usize), (4, 4096), (16, 128), (16, 4096)] {
+        let xs = inputs(n, d, 29);
+        let mut chan = mesh_driver(&mut Cluster::new(n), spec, seed, y, &xs);
+        let mut round = 0u64;
+        b.bench(
+            &format!("star n={n} d={d} in-process"),
+            Some((n * d) as u64),
+            || {
+                round += 1;
+                chan.round(round)
+            },
+        );
+        chan.finish();
+
+        let mut mesh = LoopbackMesh::new(n, &TcpOpts::default()).expect("loopback mesh");
+        let mut tcp = mesh_driver(&mut mesh, spec, seed, y, &xs);
+        let mut round = 0u64;
+        b.bench(
+            &format!("star n={n} d={d} loopback-tcp"),
+            Some((n * d) as u64),
+            || {
+                round += 1;
+                tcp.round(round)
+            },
+        );
+        tcp.finish();
+        println!();
+    }
+    service_throughput_bench(b);
+}
+
+/// Service throughput: one `dme serve` loop multiplexing `cohorts`
+/// independent client groups per measured iteration. n lock-step
+/// reporter threads each play client j for every cohort in order, so
+/// every round sees all n reports and closes full — the measured unit
+/// is `cohorts` complete TCP rounds (connect, report, fold, estimate).
+fn service_throughput_bench(b: &mut Bencher) {
+    println!("# transport_bench — service throughput (full rounds over TCP)\n");
+    for (cohorts, n, d) in [
+        (1usize, 4usize, 128usize),
+        (16, 4, 128),
+        (256, 4, 128),
+        (256, 16, 128),
+        (1, 16, 4096),
+        (16, 16, 4096),
+    ] {
+        let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).expect("bind service");
+        let addr = listener.local_addr().expect("service addr").to_string();
+        let server = thread::spawn(move || {
+            serve(
+                listener,
+                ServeOpts {
+                    // Generous deadline: lock-step reporters skew by at
+                    // most one round-trip, and a partial close would
+                    // corrupt the throughput measurement.
+                    default_deadline_ms: 120_000,
+                    max_rounds: None,
+                    read_timeout: Duration::from_secs(60),
+                },
+            )
+        });
+        let cs = CohortSpec {
+            n,
+            d,
+            spec: CodecSpec::Lq { q: 16 },
+            y: 64.0,
+            seed: 31,
+        };
+        let xs = inputs(n, d, 37);
+        let (done_tx, done_rx) = mpsc::channel();
+        let mut gos = Vec::new();
+        let mut workers = Vec::new();
+        for (j, input) in xs.iter().enumerate() {
+            let (go_tx, go_rx) = mpsc::channel::<u64>();
+            gos.push(go_tx);
+            let addr = addr.clone();
+            let input = input.clone();
+            let done_tx = done_tx.clone();
+            workers.push(thread::spawn(move || {
+                for round in go_rx {
+                    for c in 0..cohorts as u64 {
+                        report_round(&addr, c, round, j, &cs, &input, 0, Duration::from_secs(120))
+                            .expect("service round");
+                    }
+                    let _ = done_tx.send(());
+                }
+            }));
+        }
+        let mut round = 0u64;
+        b.bench(
+            &format!("service cohorts={cohorts} n={n} d={d}"),
+            Some((cohorts * n * d) as u64),
+            || {
+                round += 1;
+                for go in &gos {
+                    go.send(round).expect("reporter alive");
+                }
+                for _ in 0..n {
+                    done_rx.recv().expect("reporter done");
+                }
+                round
+            },
+        );
+        drop(gos);
+        for w in workers {
+            let _ = w.join();
+        }
+        request_shutdown(&addr, Duration::from_secs(5)).expect("service shutdown");
+        server.join().expect("server thread").expect("serve exits cleanly");
+    }
+    println!();
 }
 
 /// Control-plane amortization: B sequential rounds vs one batched call

@@ -80,14 +80,49 @@
 //! `robust_variance_reduction`) for the same `(seed, round)` — those now
 //! wrap a one-round session, and `rust/tests/session_parity.rs` pins the
 //! equivalence against independent reference implementations.
+//!
+//! # Transport
+//!
+//! The protocol bodies are generic over
+//! [`crate::net::TransportEndpoint`], so the *same code* that the
+//! session workers run over in-process channels also runs over TCP (or
+//! any other transport) — parity is by construction, not by a parallel
+//! implementation. The contract the bodies rely on:
+//!
+//! - **Trait surface**: `send`/`recv`/`recv_from`/`broadcast`, all
+//!   returning [`crate::net::TransportError`]; `recv_from` maintains
+//!   per-peer FIFO delivery (out-of-order packets from other peers are
+//!   stashed, never dropped), which is what lets the leader stream-fold
+//!   in pinned machine order and lets batch slots interleave across
+//!   machines.
+//! - **Framing**: wire messages are [`Message`]s; over byte streams
+//!   they travel as `[bits: u64 LE][len: u32 LE][bytes]` frames — the
+//!   [`PacketArena`] format verbatim (`crate::net::frame`), so the
+//!   staged in-process batch arena and a TCP upload stream are
+//!   byte-identical.
+//! - **Metering**: senders charge `msg.bits` (the codec's exact metered
+//!   bits, not padded wire bytes) before delivery is attempted;
+//!   receivers are charged at delivery. After any completed round the
+//!   per-machine [`Traffic`] totals are transport-independent — the
+//!   loopback-TCP parity suite (`rust/tests/transport.rs`) asserts
+//!   estimates, diagnostics *and* metered bit counts match the
+//!   in-process reference exactly.
+//!
+//! [`star_round_over`] / [`vr_round_over`] expose one machine's side of
+//! a star ME / VR round over any endpoint; inside the session the same
+//! core runs behind the worker loops. A worker hitting a transport
+//! error reports a fatal message to the driver instead of panicking the
+//! process ([`crate::sim::Cluster::try_run`] is the graceful variant
+//! for ad-hoc cluster closures).
 
 use super::topology::Topology;
 use super::tree::tree_round_schedule;
 use super::variance_reduction::{robust_vr_core, vr_y_bound};
 use super::{CodecSpec, YEstimator, YPolicy};
+use crate::net::{TransportEndpoint, TransportError};
 use crate::quant::{CubicLattice, LatticeQuantizer, Message, PacketArena, VectorCodec};
 use crate::rng::{fork_round_seeds, hash2, Rng};
-use crate::sim::{summarize, Cluster, Endpoint, Packet, Traffic, TrafficSummary};
+use crate::sim::{summarize, Cluster, Endpoint, Traffic, TrafficSummary};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
@@ -390,6 +425,9 @@ struct BatchCmd {
 enum WorkerMsg {
     Round(WorkerOut),
     Batch(BatchOut),
+    /// The worker hit a transport failure and is exiting; the driver
+    /// surfaces it instead of the old poison-the-process panic cascade.
+    Fatal(TransportError),
 }
 
 struct WorkerOut {
@@ -895,6 +933,7 @@ impl DmeSession {
             match rx.recv().expect("machine thread alive") {
                 WorkerMsg::Batch(bo) => outs.push(bo),
                 WorkerMsg::Round(_) => unreachable!("single-round reply to a batch command"),
+                WorkerMsg::Fatal(e) => panic!("machine transport failure mid-batch: {e}"),
             }
         }
 
@@ -1009,6 +1048,7 @@ impl DmeSession {
             let wo = match rx.recv().expect("machine thread alive") {
                 WorkerMsg::Round(wo) => wo,
                 WorkerMsg::Batch(_) => unreachable!("batch reply to a single-round command"),
+                WorkerMsg::Fatal(e) => panic!("machine {i} transport failure: {e}"),
             };
             if i == 0 {
                 estimate = wo.output.clone();
@@ -1051,18 +1091,185 @@ impl Drop for DmeSession {
     }
 }
 
-/// Star machine loop — Algorithm 3 with persistent scratch space. The
-/// protocol (leader schedule, codec construction, encoder randomness,
-/// summation order) matches the legacy one-shot implementation exactly.
+/// One machine's side of one star MeanEstimation round (Algorithm 3),
+/// generic over the transport — the exact body the session workers run
+/// in-process, shared with every other [`TransportEndpoint`] so
+/// transport parity holds by construction (see the module §Transport).
 ///
 /// The leader's aggregation is a streaming fold: each packet is decoded
 /// and accumulated into the O(d) `mu` buffer in one fused pass
 /// ([`VectorCodec::decode_accumulate_into`]), in pinned machine order —
 /// machine 0 first, the leader's own input folded at index `id` — which
-/// is bit-for-bit the legacy decode-all-then-sum order. Only diagnostics
-/// and `y`-policy measurement rounds still materialize the O(n·d)
-/// decoded set, into buffers recycled across rounds.
+/// is bit-for-bit the legacy decode-all-then-sum order. Only the
+/// collecting path (`diagnostics`/`measure`) still materializes the
+/// O(n·d) decoded set, into caller-recycled buffers.
 #[allow(clippy::too_many_arguments)]
+fn star_round_core<E: TransportEndpoint>(
+    ep: &mut E,
+    codec: &mut dyn VectorCodec,
+    seed: u64,
+    round: u64,
+    diagnostics: bool,
+    measure: bool,
+    input: &[f64],
+    out: &mut [f64],
+    mu: &mut [f64],
+    msg: &mut Message,
+    decoded: &mut Vec<Vec<f64>>,
+) -> Result<(Option<f64>, Vec<Vec<f64>>), TransportError> {
+    let id = ep.id();
+    let n = ep.n();
+    let d = input.len();
+    let leader = star_leader(seed, round, n);
+    // Per-machine encoder randomness must differ across machines
+    // (stochastic rounding draws), while codec-internal *shared*
+    // randomness comes from (seed, round) inside build().
+    let mut enc_rng = Rng::new(hash2(hash2(seed, round), id as u64 + 1));
+    let mut decoded_out = Vec::new();
+    let mut spread = None;
+    if id == leader {
+        for m in mu.iter_mut() {
+            *m = 0.0;
+        }
+        if diagnostics || measure {
+            // Collecting path (diagnostics / §9.2 spread measurement):
+            // decode every worker's message against our input as it
+            // arrives, stored by sender in recycled buffers, then sum
+            // in machine order (bit-for-bit the legacy order).
+            if decoded.is_empty() {
+                *decoded = vec![vec![0.0; d]; n];
+            }
+            decoded[id].copy_from_slice(input);
+            for _ in 0..n - 1 {
+                let p = ep.recv()?;
+                codec.decode_into(&p.msg, input, &mut decoded[p.from]);
+            }
+            for z in decoded.iter() {
+                crate::linalg::axpy(mu, 1.0, z);
+            }
+            if measure {
+                spread = Some(YEstimator::max_pairwise_inf(decoded));
+            }
+            if diagnostics {
+                decoded_out = decoded.clone();
+            }
+        } else {
+            // Streaming fold (the hot path): gather in machine order
+            // via recv_from (out-of-order arrivals wait in the stash)
+            // and fold each bitstream straight into `mu` — O(d)
+            // leader memory however large the cluster.
+            for v in 0..n {
+                if v == id {
+                    crate::linalg::axpy(mu, 1.0, input);
+                } else {
+                    let p = ep.recv_from(v)?;
+                    codec.decode_accumulate_into(&p.msg, input, 1.0, mu);
+                }
+            }
+        }
+        let inv_n = 1.0 / n as f64;
+        for m in mu.iter_mut() {
+            *m = inv_n * *m;
+        }
+        // Broadcast the quantized average.
+        codec.encode_into(mu, &mut enc_rng, msg);
+        ep.broadcast(msg)?;
+        codec.decode_into(msg, input, out);
+    } else {
+        codec.encode_into(input, &mut enc_rng, msg);
+        ep.send(leader, msg.clone())?;
+        let p = ep.recv_from(leader)?;
+        codec.decode_into(&p.msg, input, out);
+    }
+    Ok((spread, decoded_out))
+}
+
+/// What [`star_round_over`] produced on this machine.
+#[derive(Clone, Debug)]
+pub struct StarRoundReport {
+    /// The round's shared-randomness leader.
+    pub leader: usize,
+    /// This machine's decoded output (the common estimate).
+    pub output: Vec<f64>,
+    /// Leader only, with `collect`: the decoded per-machine points.
+    pub decoded_at_leader: Vec<Vec<f64>>,
+    /// Leader only, with `collect`: max pairwise ℓ∞ of the decoded set.
+    pub spread: Option<f64>,
+}
+
+/// Run one machine's side of a star MeanEstimation round over any
+/// [`TransportEndpoint`] — the identical protocol the in-process
+/// session executes, so estimates, diagnostics and metered bits match
+/// the reference transport exactly (pinned by `rust/tests/transport.rs`).
+/// All `n` machines must call this with the same `(spec, seed, round,
+/// y)`; `collect` enables the leader's decoded-set collection (same
+/// wire traffic, different leader-side bookkeeping).
+///
+/// The codec is built fresh per call; stateful codecs (EF-SignSGD,
+/// PowerSGD, Top-K) therefore start each call with empty error memory —
+/// drive a [`DmeSession`] when cross-round memory matters.
+pub fn star_round_over<E: TransportEndpoint>(
+    ep: &mut E,
+    spec: CodecSpec,
+    seed: u64,
+    round: u64,
+    y: f64,
+    input: &[f64],
+    collect: bool,
+) -> Result<StarRoundReport, TransportError> {
+    let d = input.len();
+    let n = ep.n();
+    let leader = star_leader(seed, round, n);
+    let mut codec = spec.build(d, y, seed, round);
+    let mut out = vec![0.0; d];
+    let mut mu = vec![0.0; d];
+    let mut msg = Message::empty();
+    let mut decoded = Vec::new();
+    let (spread, decoded_out) = star_round_core(
+        ep,
+        &mut *codec,
+        seed,
+        round,
+        collect,
+        collect,
+        input,
+        &mut out,
+        &mut mu,
+        &mut msg,
+        &mut decoded,
+    )?;
+    Ok(StarRoundReport {
+        leader,
+        output: out,
+        decoded_at_leader: decoded_out,
+        spread,
+    })
+}
+
+/// Chebyshev VarianceReduction over any transport (Theorem 17): maps
+/// the VR instance onto [`star_round_over`] at `y = 2σ√(αn)` — exactly
+/// what a [`Robustness::Chebyshev`] session round does in-process.
+#[allow(clippy::too_many_arguments)]
+pub fn vr_round_over<E: TransportEndpoint>(
+    ep: &mut E,
+    spec: CodecSpec,
+    seed: u64,
+    round: u64,
+    sigma: f64,
+    alpha: f64,
+    input: &[f64],
+    collect: bool,
+) -> Result<StarRoundReport, TransportError> {
+    let y = vr_y_bound(sigma, ep.n(), alpha);
+    star_round_over(ep, spec, seed, round, y, input, collect)
+}
+
+/// Star machine loop — Algorithm 3 with persistent scratch space. The
+/// protocol (leader schedule, codec construction, encoder randomness,
+/// summation order) matches the legacy one-shot implementation exactly;
+/// the round body itself is the transport-generic [`star_round_core`].
+/// A transport failure reports [`WorkerMsg::Fatal`] and exits the loop
+/// instead of panicking the process.
 fn star_worker(
     mut ep: Endpoint,
     spec: CodecSpec,
@@ -1072,9 +1279,6 @@ fn star_worker(
     crx: Receiver<Cmd>,
     otx: Sender<WorkerMsg>,
 ) {
-    let id = ep.id;
-    let n = ep.n;
-    let mut stash: Vec<Packet> = Vec::new();
     let mut msg = Message::empty();
     // Leader-role scratch, sized lazily on first collecting leadership.
     let mut decoded: Vec<Vec<f64>> = Vec::new();
@@ -1099,18 +1303,23 @@ fn star_worker(
         } = match cmd {
             Cmd::Round(rc) => rc,
             Cmd::Batch(mut bc) => {
-                let slot_decoded = star_batch_slots(
+                let slot_decoded = match star_batch_slots(
                     &mut ep,
                     spec,
                     seed,
                     diagnostics,
                     &mut bc,
-                    &mut stash,
                     &mut msg,
                     &mut batch_mu,
                     &mut arena,
                     &mut held_codec,
-                );
+                ) {
+                    Ok(sd) => sd,
+                    Err(e) => {
+                        let _ = otx.send(WorkerMsg::Fatal(e));
+                        break;
+                    }
+                };
                 if otx
                     .send(WorkerMsg::Batch(BatchOut {
                         ys: bc.ys,
@@ -1127,71 +1336,29 @@ fn star_worker(
                 continue;
             }
         };
-        let leader = star_leader(seed, round, n);
         if held_codec.is_none() || !spec.is_stateful() {
             held_codec = Some(spec.build(d, y, seed, round));
         }
         let codec = held_codec.as_mut().expect("codec built");
-        // Per-machine encoder randomness must differ across machines
-        // (stochastic rounding draws), while codec-internal *shared*
-        // randomness comes from (seed, round) inside build().
-        let mut enc_rng = Rng::new(hash2(hash2(seed, round), id as u64 + 1));
-        let mut decoded_out = Vec::new();
-        let mut spread = None;
-        if id == leader {
-            for m in mu.iter_mut() {
-                *m = 0.0;
+        let (spread, decoded_out) = match star_round_core(
+            &mut ep,
+            &mut **codec,
+            seed,
+            round,
+            diagnostics,
+            measure,
+            &input,
+            &mut out,
+            &mut mu,
+            &mut msg,
+            &mut decoded,
+        ) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ = otx.send(WorkerMsg::Fatal(e));
+                break;
             }
-            if diagnostics || measure {
-                // Collecting path (diagnostics / §9.2 spread measurement):
-                // decode every worker's message against our input as it
-                // arrives, stored by sender in recycled buffers, then sum
-                // in machine order (bit-for-bit the legacy order).
-                if decoded.is_empty() {
-                    decoded = vec![vec![0.0; d]; n];
-                }
-                decoded[id].copy_from_slice(&input);
-                for _ in 0..n - 1 {
-                    let p = ep.recv();
-                    codec.decode_into(&p.msg, &input, &mut decoded[p.from]);
-                }
-                for z in &decoded {
-                    crate::linalg::axpy(&mut mu, 1.0, z);
-                }
-                if measure {
-                    spread = Some(YEstimator::max_pairwise_inf(&decoded));
-                }
-                if diagnostics {
-                    decoded_out = decoded.clone();
-                }
-            } else {
-                // Streaming fold (the hot path): gather in machine order
-                // via recv_from (out-of-order arrivals wait in the stash)
-                // and fold each bitstream straight into `mu` — O(d)
-                // leader memory however large the cluster.
-                for v in 0..n {
-                    if v == id {
-                        crate::linalg::axpy(&mut mu, 1.0, &input);
-                    } else {
-                        let p = ep.recv_from(v, &mut stash);
-                        codec.decode_accumulate_into(&p.msg, &input, 1.0, &mut mu);
-                    }
-                }
-            }
-            let inv_n = 1.0 / n as f64;
-            for m in mu.iter_mut() {
-                *m = inv_n * *m;
-            }
-            // Broadcast the quantized average.
-            codec.encode_into(&mu, &mut enc_rng, &mut msg);
-            ep.broadcast(&msg);
-            codec.decode_into(&msg, &input, &mut out);
-        } else {
-            codec.encode_into(&input, &mut enc_rng, &mut msg);
-            ep.send(leader, msg.clone());
-            let p = ep.recv_from(leader, &mut stash);
-            codec.decode_into(&p.msg, &input, &mut out);
-        }
+        };
         if otx
             .send(WorkerMsg::Round(WorkerOut {
                 input,
@@ -1223,20 +1390,19 @@ fn star_worker(
 /// `first_round + b`: same leader, same codec stream, same encoder
 /// randomness (`hash2(hash2(seed, round), id + 1)`), same fold order.
 #[allow(clippy::too_many_arguments)]
-fn star_batch_slots(
-    ep: &mut Endpoint,
+fn star_batch_slots<E: TransportEndpoint>(
+    ep: &mut E,
     spec: CodecSpec,
     seed: u64,
     diagnostics: bool,
     cmd: &mut BatchCmd,
-    stash: &mut Vec<Packet>,
     msg: &mut Message,
     mu: &mut Vec<f64>,
     arena: &mut PacketArena,
     held_codec: &mut Option<Box<dyn VectorCodec>>,
-) -> Vec<Vec<Vec<f64>>> {
-    let id = ep.id;
-    let n = ep.n;
+) -> Result<Vec<Vec<Vec<f64>>>, TransportError> {
+    let id = ep.id();
+    let n = ep.n();
     let b_total = cmd.dims.len();
     let stateful = spec.is_stateful();
     let seeds = fork_round_seeds(seed, cmd.first_round, b_total);
@@ -1308,7 +1474,7 @@ fn star_batch_slots(
                     if v == id {
                         continue;
                     }
-                    let p = ep.recv_from(v, stash);
+                    let p = ep.recv_from(v)?;
                     t.recv_bits += p.msg.bits;
                     t.recv_msgs += 1;
                     codec.decode_into(&p.msg, input, &mut dec[v]);
@@ -1323,7 +1489,7 @@ fn star_batch_slots(
                     if v == id {
                         crate::linalg::axpy(acc, 1.0, input);
                     } else {
-                        let p = ep.recv_from(v, stash);
+                        let p = ep.recv_from(v)?;
                         t.recv_bits += p.msg.bits;
                         t.recv_msgs += 1;
                         codec.decode_accumulate_into(&p.msg, input, 1.0, acc);
@@ -1337,7 +1503,7 @@ fn star_batch_slots(
             codec.encode_into(acc, &mut enc_rng, msg);
             t.sent_bits += msg.bits * (n as u64 - 1);
             t.sent_msgs += n as u64 - 1;
-            ep.broadcast(msg);
+            ep.broadcast(msg)?;
             codec.decode_into(msg, input, out);
         } else {
             let up = if stateful {
@@ -1348,15 +1514,15 @@ fn star_batch_slots(
             };
             t.sent_bits += up.bits;
             t.sent_msgs += 1;
-            ep.send(leader, up);
-            let p = ep.recv_from(leader, stash);
+            ep.send(leader, up)?;
+            let p = ep.recv_from(leader)?;
             t.recv_bits += p.msg.bits;
             t.recv_msgs += 1;
             codec.decode_into(&p.msg, input, out);
         }
         lo += d_b;
     }
-    slot_decoded
+    Ok(slot_decoded)
 }
 
 /// Tree machine loop — Algorithm 4. Every machine derives the full
@@ -1367,7 +1533,6 @@ fn star_batch_slots(
 /// receive's matching send is already issued — no deadlock. Messages and
 /// metering are bit-identical to the legacy sequential driver.
 fn tree_worker(mut ep: Endpoint, m: usize, seed: u64, crx: Receiver<Cmd>, otx: Sender<WorkerMsg>) {
-    let mut stash: Vec<Packet> = Vec::new();
     while let Ok(cmd) = crx.recv() {
         match cmd {
             Cmd::Round(RoundCmd {
@@ -1379,10 +1544,12 @@ fn tree_worker(mut ep: Endpoint, m: usize, seed: u64, crx: Receiver<Cmd>, otx: S
             }) => {
                 let shared_seed = hash2(seed, round);
                 let mut tally = Traffic::default();
-                tree_slot_round(
-                    &mut ep, m, seed, shared_seed, round, y, &input, &mut out, &mut stash,
-                    &mut tally,
-                );
+                if let Err(e) = tree_slot_round(
+                    &mut ep, m, seed, shared_seed, round, y, &input, &mut out, &mut tally,
+                ) {
+                    let _ = otx.send(WorkerMsg::Fatal(e));
+                    break;
+                }
                 if otx
                     .send(WorkerMsg::Round(WorkerOut {
                         input,
@@ -1404,10 +1571,11 @@ fn tree_worker(mut ep: Endpoint, m: usize, seed: u64, crx: Receiver<Cmd>, otx: S
                 let b_total = bc.dims.len();
                 let seeds = fork_round_seeds(seed, bc.first_round, b_total);
                 let mut lo = 0usize;
+                let mut fatal = None;
                 for b in 0..b_total {
                     let d_b = bc.dims[b];
                     let r = bc.first_round + b as u64;
-                    tree_slot_round(
+                    if let Err(e) = tree_slot_round(
                         &mut ep,
                         m,
                         seed,
@@ -1416,10 +1584,16 @@ fn tree_worker(mut ep: Endpoint, m: usize, seed: u64, crx: Receiver<Cmd>, otx: S
                         bc.ys[b],
                         &bc.input[lo..lo + d_b],
                         &mut bc.out[lo..lo + d_b],
-                        &mut stash,
                         &mut bc.traffic[b],
-                    );
+                    ) {
+                        fatal = Some(e);
+                        break;
+                    }
                     lo += d_b;
+                }
+                if let Some(e) = fatal {
+                    let _ = otx.send(WorkerMsg::Fatal(e));
+                    break;
                 }
                 if otx
                     .send(WorkerMsg::Batch(BatchOut {
@@ -1447,8 +1621,8 @@ fn tree_worker(mut ep: Endpoint, m: usize, seed: u64, crx: Receiver<Cmd>, otx: S
 /// `shared_seed` must equal `hash2(seed, round)` (the batch plane
 /// derives it once per batch via [`fork_round_seeds`]).
 #[allow(clippy::too_many_arguments)]
-fn tree_slot_round(
-    ep: &mut Endpoint,
+fn tree_slot_round<E: TransportEndpoint>(
+    ep: &mut E,
     m: usize,
     seed: u64,
     shared_seed: u64,
@@ -1456,11 +1630,10 @@ fn tree_slot_round(
     y: f64,
     input: &[f64],
     out: &mut [f64],
-    stash: &mut Vec<Packet>,
     t: &mut Traffic,
-) {
-    let id = ep.id;
-    let n = ep.n;
+) -> Result<(), TransportError> {
+    let id = ep.id();
+    let n = ep.n();
     let d = input.len();
     let (leaves, side, q) = tree_round_schedule(n, m, y, seed, round);
     // One shared-lattice codec per round (the legacy driver rebuilds
@@ -1503,14 +1676,14 @@ fn tree_slot_round(
                     if child != parent {
                         t.sent_bits += msg.bits;
                         t.sent_msgs += 1;
-                        ep.send(parent, msg);
+                        ep.send(parent, msg)?;
                     } else {
                         // Same machine plays both roles: no wire cost.
                         let a = acc.as_mut().expect("parent holds accumulator");
                         codec.decode_accumulate_into(&msg, input, 1.0, a);
                     }
                 } else if parent == id {
-                    let p = ep.recv_from(child, stash);
+                    let p = ep.recv_from(child)?;
                     t.recv_bits += p.msg.bits;
                     t.recv_msgs += 1;
                     let a = acc.as_mut().expect("parent holds accumulator");
@@ -1542,7 +1715,7 @@ fn tree_slot_round(
             .0
     } else {
         let parent = (root + (mypos - 1) / 2) % n;
-        let p = ep.recv_from(parent, stash);
+        let p = ep.recv_from(parent)?;
         t.recv_bits += p.msg.bits;
         t.recv_msgs += 1;
         p.msg
@@ -1551,10 +1724,11 @@ fn tree_slot_round(
         if cpos < n {
             t.sent_bits += bmsg.bits;
             t.sent_msgs += 1;
-            ep.send((root + cpos) % n, bmsg.clone());
+            ep.send((root + cpos) % n, bmsg.clone())?;
         }
     }
     codec.decode_into(&bmsg, input, out);
+    Ok(())
 }
 
 #[cfg(test)]

@@ -51,7 +51,10 @@ pub mod tree;
 pub mod variance_reduction;
 pub mod y_estimator;
 
-pub use api::{DmeBuilder, DmeSession, Robustness, RoundOutcome};
+pub use api::{
+    star_round_over, vr_round_over, DmeBuilder, DmeSession, Robustness, RoundOutcome,
+    StarRoundReport,
+};
 pub use fold::{fold_mean, fold_mean_chunked, FoldPart};
 pub use session::{SessionRound, StarSession};
 pub use star::{mean_estimation_star, StarOutcome};

@@ -59,6 +59,11 @@
 //!   algorithms 3–6 over a simulated message-passing cluster.
 //! * [`sim`] — the in-process distributed substrate (threads + channels with
 //!   exact per-machine bit metering).
+//! * [`net`] — the pluggable transport layer: the `Transport` /
+//!   `TransportEndpoint` traits both [`sim`] and the TCP mesh implement,
+//!   length-prefixed wire framing (the `PacketArena` format verbatim),
+//!   and the multi-cohort DME service front-end (`dme serve` /
+//!   `dme report`).
 //! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`
 //!   (feature `pjrt`; a stub otherwise).
 //! * [`data`], [`opt`] — workload substrates (datasets, SGD/local-SGD/power
@@ -82,6 +87,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod linalg;
+pub mod net;
 pub mod opt;
 pub mod quant;
 pub mod rng;

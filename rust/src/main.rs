@@ -9,6 +9,12 @@
 //!                                                             VarianceReduction rounds
 //!   dme runtime [graph=<name>]                                PJRT artifact smoke check
 //!   dme info                                                  artifact + config summary
+//!   dme serve  [addr=127.0.0.1:0] [deadline_ms=2000] [rounds=<N>]
+//!                                                             multi-cohort DME service
+//!   dme report addr=<host:port> [cohort=..] [round=..] [client=..] [n=..] [d=..]
+//!              [q=..] [y=..] [seed=..] [deadline_ms=..] [value=<f>]
+//!                                                             report one vector, await estimate
+//!   dme health addr=<host:port>                               per-cohort service stats
 //!
 //! `topology=` takes `star`, `tree`, `tree:<m>` or `both` (default) and
 //! routes through the session API (`DmeBuilder` → `DmeSession`).
@@ -19,8 +25,11 @@
 use dme::config::RunConfig;
 use dme::coordinator::{CodecSpec, DmeBuilder, DmeSession, RoundOutcome, Topology};
 use dme::exp::{self, ExpOpts};
+use dme::net::cohort::CohortSpec;
+use dme::net::service::{fetch_stats, report_round, serve, ServeOpts};
 use dme::rng::Rng;
 use dme::sim::summarize;
+use std::time::Duration;
 
 fn parse_kv(args: &[String]) -> Vec<(String, String)> {
     args.iter()
@@ -41,6 +50,11 @@ fn usage() -> ! {
          \x20                                                 VarianceReduction rounds\n\
          \x20 runtime [graph=lattice_encode_d128_q8]          PJRT artifact smoke check\n\
          \x20 info                                            artifact + config summary\n\
+         \x20 serve  [addr=127.0.0.1:0] [deadline_ms=2000] [rounds=N]\n\
+         \x20                                                 multi-cohort DME service (prints 'listening on ADDR')\n\
+         \x20 report addr=H:P [cohort=0] [round=0] [client=0] [n=2] [d=16] [q=64] [y=8]\n\
+         \x20        [seed=0] [deadline_ms=0] [value=f]       report one vector, await the round estimate\n\
+         \x20 health addr=H:P                                 per-cohort service stats\n\
          \n\
          batch=B runs B rounds as one batched round_batch call (one\n\
          worker crossing per batch; per-slot results bit-identical to\n\
@@ -58,7 +72,142 @@ fn main() {
         "vr" => cmd_vr(&args[1..]),
         "runtime" => cmd_runtime(&args[1..]),
         "info" => cmd_info(),
+        "serve" => cmd_serve(&args[1..]),
+        "report" => cmd_report(&args[1..]),
+        "health" => cmd_health(&args[1..]),
         _ => usage(),
+    }
+}
+
+fn kv_get<'a>(kv: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    kv.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn kv_parse<T: std::str::FromStr>(kv: &[(String, String)], key: &str, default: T) -> T {
+    match kv_get(kv, key) {
+        Some(v) => v.parse().unwrap_or_else(|_| {
+            eprintln!("bad value '{v}' for {key}");
+            usage();
+        }),
+        None => default,
+    }
+}
+
+fn cmd_serve(args: &[String]) {
+    let kv = parse_kv(args);
+    let addr = kv_get(&kv, "addr").unwrap_or("127.0.0.1:0");
+    let opts = ServeOpts {
+        default_deadline_ms: kv_parse(&kv, "deadline_ms", 2_000u64),
+        max_rounds: kv_get(&kv, "rounds").map(|v| {
+            v.parse().unwrap_or_else(|_| {
+                eprintln!("bad value '{v}' for rounds");
+                usage();
+            })
+        }),
+        ..ServeOpts::default()
+    };
+    let listener = std::net::TcpListener::bind(addr).unwrap_or_else(|e| {
+        eprintln!("cannot bind {addr}: {e}");
+        std::process::exit(1);
+    });
+    let local = listener.local_addr().expect("bound listener has an address");
+    // The smoke harness scrapes this line for the ephemeral port.
+    println!("listening on {local}");
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    match serve(listener, opts) {
+        Ok(s) => println!(
+            "served: rounds={} partial={} cohorts={} bits_in={} bits_out={}",
+            s.rounds_completed,
+            s.rounds_partial,
+            s.cohorts,
+            s.traffic.recv_bits,
+            s.traffic.sent_bits
+        ),
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// The report CLI's cohort-spec arguments (shared-randomness convention:
+/// every client of a cohort must pass identical n/d/q/y/seed).
+fn report_spec(kv: &[(String, String)]) -> CohortSpec {
+    CohortSpec {
+        n: kv_parse(kv, "n", 2usize),
+        d: kv_parse(kv, "d", 16usize),
+        spec: CodecSpec::Lq {
+            q: kv_parse(kv, "q", 64u32),
+        },
+        y: kv_parse(kv, "y", 8.0f64),
+        seed: kv_parse(kv, "seed", 0u64),
+    }
+}
+
+fn cmd_report(args: &[String]) {
+    let kv = parse_kv(args);
+    let Some(addr) = kv_get(&kv, "addr") else {
+        eprintln!("report needs addr=<host:port>");
+        usage();
+    };
+    let spec = report_spec(&kv);
+    let cohort = kv_parse(&kv, "cohort", 0u64);
+    let round = kv_parse(&kv, "round", 0u64);
+    let client = kv_parse(&kv, "client", 0usize);
+    let deadline_ms = kv_parse(&kv, "deadline_ms", 0u32);
+    let value = kv_parse(&kv, "value", client as f64);
+    let input = vec![value; spec.d];
+    match report_round(
+        addr,
+        cohort,
+        round,
+        client,
+        &spec,
+        &input,
+        deadline_ms,
+        Duration::from_secs(30),
+    ) {
+        Ok(out) => {
+            let mean0 = out.estimate.first().copied().unwrap_or(0.0);
+            println!(
+                "estimate_ok received={} expected={} partial={} mean0={mean0:.6}",
+                out.received, out.expected, out.partial
+            );
+        }
+        Err(e) => {
+            eprintln!("report failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_health(args: &[String]) {
+    let kv = parse_kv(args);
+    let Some(addr) = kv_get(&kv, "addr") else {
+        eprintln!("health needs addr=<host:port>");
+        usage();
+    };
+    match fetch_stats(addr, Duration::from_secs(10)) {
+        Ok(stats) => {
+            println!("cohorts={}", stats.len());
+            for s in stats {
+                println!(
+                    "cohort={} rounds={} partial={} reports={} bits_in={} bits_out={} open={}",
+                    s.cohort,
+                    s.rounds_completed,
+                    s.rounds_partial,
+                    s.reports,
+                    s.bits_in,
+                    s.bits_out,
+                    s.open_rounds
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("health failed: {e}");
+            std::process::exit(1);
+        }
     }
 }
 

@@ -1,0 +1,506 @@
+//! Multi-cohort round state — the leader-side bookkeeping of the DME
+//! service, as a pure state machine (no sockets, no threads, no clock of
+//! its own; the caller feeds submissions and millisecond timestamps).
+//!
+//! A **cohort** is an independent group of `n` clients that agreed
+//! out-of-band on a [`CohortSpec`] — dimension, codec, distance bound
+//! `y` and shared-randomness seed. Each round, every client encodes its
+//! own vector and reports `(cohort_id, round_id, client_id, message)`;
+//! the table folds arriving reports straight into an O(d) accumulator
+//! per open round (the star leader's streaming fold,
+//! [`crate::quant::VectorCodec::decode_accumulate_into`]) and closes the
+//! round when all `n` reports are in — or when the caller expires it at
+//! its deadline, in which case the partial sum over the `k ≤ n` arrived
+//! reports is renormalized by `1/k`.
+//!
+//! # The codec convention
+//!
+//! Server and clients must decode/encode identically without the server
+//! ever seeing a client's raw vector, so the convention is fixed here
+//! and shared by both sides ([`cohort_codec`], [`client_encoder_rng`]):
+//!
+//! - the codec is `spec.build(d, y, seed, round)` — shared randomness
+//!   (lattice offset, rotation) is derived from `(seed, round)` exactly
+//!   as in-cluster protocols do (Section 9.1's shared-randomness
+//!   assumption);
+//! - client `c`'s stochastic-rounding stream is
+//!   `Rng::new(hash2(hash2(seed, round), c + 1))` — the per-machine
+//!   encoder stream of the in-process star round, verbatim;
+//! - the decode **reference is the zero vector**: unlike a cluster
+//!   machine, the server holds no input of its own, so `y` must be an
+//!   ℓ∞ bound on the client vectors *themselves* (distance to 0), not
+//!   merely on their pairwise spread.
+//!
+//! Stateful codecs (EF-SignSGD, PowerSGD, Top-K) carry cross-round error
+//! memory that a stateless report protocol cannot reproduce; the table
+//! rejects them.
+
+use super::Traffic;
+use crate::coordinator::CodecSpec;
+use crate::quant::{Message, VectorCodec};
+use crate::rng::{hash2, Rng};
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+/// Identity of one cohort round.
+#[derive(Clone, Copy, Debug, Hash, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CohortKey {
+    pub cohort: u64,
+    pub round: u64,
+}
+
+/// What a cohort's clients agreed on out-of-band. Every report for one
+/// `(cohort, round)` must carry the identical spec.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CohortSpec {
+    /// Expected number of reporting clients.
+    pub n: usize,
+    /// Vector dimension.
+    pub d: usize,
+    /// Compressor; stateful specs are rejected (see module docs).
+    pub spec: CodecSpec,
+    /// The codec's distance bound — an ℓ∞ bound on the client vectors
+    /// themselves (the decode reference is the zero vector).
+    pub y: f64,
+    /// Shared-randomness seed.
+    pub seed: u64,
+}
+
+/// The shared codec for one cohort round — both the server's decoder and
+/// every client's encoder (the shared-randomness convention).
+pub fn cohort_codec(spec: &CohortSpec, round: u64) -> Box<dyn VectorCodec> {
+    spec.spec.build(spec.d, spec.y, spec.seed, round)
+}
+
+/// Client `client`'s private stochastic-rounding stream for `round` —
+/// the per-machine encoder stream of the in-process star round.
+pub fn client_encoder_rng(seed: u64, round: u64, client: usize) -> Rng {
+    Rng::new(hash2(hash2(seed, round), client as u64 + 1))
+}
+
+/// A closed round's result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundResult {
+    /// Mean over the reports that arrived: `(Σ decoded) / received`.
+    pub estimate: Vec<f64>,
+    /// How many of the expected reports arrived.
+    pub received: usize,
+    pub expected: usize,
+    /// `received < expected` — the round closed at its deadline.
+    pub partial: bool,
+}
+
+/// Outcome of one [`CohortTable::submit`].
+#[derive(Debug)]
+pub enum Submit {
+    /// Folded in; the round is still waiting for more reports.
+    Pending { received: usize, expected: usize },
+    /// This report completed the round.
+    Complete(RoundResult),
+    /// The round already closed (at its deadline or with `n` reports);
+    /// the cached result is returned so late clients still converge.
+    Late(RoundResult),
+    /// The report was refused and not folded.
+    Rejected(String),
+}
+
+/// Live per-cohort accounting for the health endpoint, in the paper's
+/// per-machine bit-cost units (framing excluded — see `net` docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CohortStats {
+    pub cohort: u64,
+    pub rounds_completed: u64,
+    pub rounds_partial: u64,
+    pub reports: u64,
+    /// Client→leader bits: the sum of accepted reports' `msg.bits`.
+    pub bits_in: u64,
+    /// Leader→client bits: `64·d` per estimate recipient.
+    pub bits_out: u64,
+    pub open_rounds: u32,
+}
+
+/// One open round's fold state.
+struct OpenRound {
+    spec: CohortSpec,
+    codec: Box<dyn VectorCodec>,
+    /// Zero reference vector for decoding (see module docs).
+    zeros: Vec<f64>,
+    /// Streaming sum of decoded reports.
+    acc: Vec<f64>,
+    got: Vec<bool>,
+    received: usize,
+    /// Absolute deadline, caller's millisecond clock.
+    deadline_ms: u64,
+}
+
+impl OpenRound {
+    fn close(&mut self) -> RoundResult {
+        let k = self.received.max(1) as f64;
+        let inv_k = 1.0 / k;
+        let estimate = self.acc.iter().map(|&a| inv_k * a).collect();
+        RoundResult {
+            estimate,
+            received: self.received,
+            expected: self.spec.n,
+            partial: self.received < self.spec.n,
+        }
+    }
+}
+
+/// How many closed-round results to keep for late clients before the
+/// oldest are evicted.
+const FINISHED_CACHE_CAP: usize = 4096;
+
+/// The leader-side table of all cohorts' open and recently-closed
+/// rounds.
+#[derive(Default)]
+pub struct CohortTable {
+    open: HashMap<CohortKey, OpenRound>,
+    finished: HashMap<CohortKey, RoundResult>,
+    /// FIFO of `finished` keys for bounded-memory eviction.
+    finished_order: std::collections::VecDeque<CohortKey>,
+    stats: HashMap<u64, CohortStats>,
+}
+
+impl CohortTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of rounds currently accumulating reports.
+    pub fn open_rounds(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Fold one client report into its round. `now_ms` is the caller's
+    /// monotonic millisecond clock; a *new* round's deadline is set to
+    /// `now_ms + deadline_ms` (the first report opens the round).
+    pub fn submit(
+        &mut self,
+        key: CohortKey,
+        spec: &CohortSpec,
+        client: usize,
+        msg: &Message,
+        now_ms: u64,
+        deadline_ms: u64,
+    ) -> Submit {
+        if let Some(done) = self.finished.get(&key) {
+            return Submit::Late(done.clone());
+        }
+        if spec.n == 0 || spec.d == 0 {
+            return Submit::Rejected("cohort spec must have n >= 1 and d >= 1".into());
+        }
+        if spec.spec.is_stateful() {
+            return Submit::Rejected(format!(
+                "stateful codec {} cannot serve stateless cohort reports",
+                spec.spec.label()
+            ));
+        }
+        if client >= spec.n {
+            return Submit::Rejected(format!(
+                "client id {client} out of range for cohort of n={}",
+                spec.n
+            ));
+        }
+        let round = match self.open.entry(key) {
+            Entry::Occupied(e) => {
+                let r = e.into_mut();
+                if r.spec != *spec {
+                    return Submit::Rejected(format!(
+                        "spec mismatch: round opened with n={} d={} {}, report carries n={} d={} {}",
+                        r.spec.n,
+                        r.spec.d,
+                        r.spec.spec.label(),
+                        spec.n,
+                        spec.d,
+                        spec.spec.label()
+                    ));
+                }
+                r
+            }
+            Entry::Vacant(e) => {
+                let d = spec.d;
+                let s = self.stats.entry(key.cohort).or_insert_with(|| CohortStats {
+                    cohort: key.cohort,
+                    ..CohortStats::default()
+                });
+                s.open_rounds += 1;
+                e.insert(OpenRound {
+                    spec: *spec,
+                    codec: cohort_codec(spec, key.round),
+                    zeros: vec![0.0; d],
+                    acc: vec![0.0; d],
+                    got: vec![false; spec.n],
+                    received: 0,
+                    deadline_ms: now_ms.saturating_add(deadline_ms),
+                })
+            }
+        };
+        if round.got[client] {
+            return Submit::Rejected(format!("duplicate report from client {client}"));
+        }
+        round.codec.decode_accumulate_into(msg, &round.zeros, 1.0, &mut round.acc);
+        round.got[client] = true;
+        round.received += 1;
+        let stats = self.stats.get_mut(&key.cohort).expect("stats entry exists");
+        stats.reports += 1;
+        stats.bits_in += msg.bits;
+        if round.received == round.spec.n {
+            let result = self.close_round(key, false);
+            Submit::Complete(result)
+        } else {
+            Submit::Pending {
+                received: round.received,
+                expected: round.spec.n,
+            }
+        }
+    }
+
+    /// Close every open round whose deadline has passed, renormalizing
+    /// its partial sum over the reports that arrived. Returns the closed
+    /// rounds (every open round holds ≥ 1 report — the first report is
+    /// what opens it).
+    pub fn expire(&mut self, now_ms: u64) -> Vec<(CohortKey, RoundResult)> {
+        let mut due: Vec<CohortKey> = self
+            .open
+            .iter()
+            .filter(|(_, r)| r.deadline_ms <= now_ms)
+            .map(|(k, _)| *k)
+            .collect();
+        due.sort_unstable();
+        due.into_iter()
+            .map(|k| {
+                let r = self.close_round(k, true);
+                (k, r)
+            })
+            .collect()
+    }
+
+    /// Charge `recipients` estimate deliveries (64·d bits each — the
+    /// leader→client leg) to a cohort's ledger. The service calls this
+    /// as it actually writes responses, so the meters record what was
+    /// transferred, not what was hoped for.
+    pub fn note_estimates_sent(&mut self, cohort: u64, d: usize, recipients: usize) {
+        if let Some(s) = self.stats.get_mut(&cohort) {
+            s.bits_out += 64 * d as u64 * recipients as u64;
+        }
+    }
+
+    /// Per-cohort accounting, sorted by cohort id.
+    pub fn stats(&self) -> Vec<CohortStats> {
+        let mut v: Vec<CohortStats> = self.stats.values().copied().collect();
+        v.sort_unstable_by_key(|s| s.cohort);
+        v
+    }
+
+    /// Aggregate traffic over all cohorts, from the server's seat (in =
+    /// received, out = sent).
+    pub fn total_traffic(&self) -> Traffic {
+        let mut t = Traffic::default();
+        for s in self.stats.values() {
+            t.recv_bits += s.bits_in;
+            t.recv_msgs += s.reports;
+            t.sent_bits += s.bits_out;
+        }
+        t
+    }
+
+    fn close_round(&mut self, key: CohortKey, partial_close: bool) -> RoundResult {
+        let mut round = self.open.remove(&key).expect("closing an open round");
+        let result = round.close();
+        let s = self.stats.get_mut(&key.cohort).expect("stats entry exists");
+        s.open_rounds -= 1;
+        s.rounds_completed += 1;
+        if partial_close && result.partial {
+            s.rounds_partial += 1;
+        }
+        if self.finished.len() >= FINISHED_CACHE_CAP {
+            if let Some(old) = self.finished_order.pop_front() {
+                self.finished.remove(&old);
+            }
+        }
+        self.finished.insert(key, result.clone());
+        self.finished_order.push_back(key);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(n: usize, d: usize) -> CohortSpec {
+        CohortSpec {
+            n,
+            d,
+            spec: CodecSpec::Lq { q: 64 },
+            y: 8.0,
+            seed: 42,
+        }
+    }
+
+    fn encode(cs: &CohortSpec, round: u64, client: usize, x: &[f64]) -> Message {
+        let mut codec = cohort_codec(cs, round);
+        let mut rng = client_encoder_rng(cs.seed, round, client);
+        codec.encode(x, &mut rng)
+    }
+
+    /// Reference mean: decode each report against zeros with the shared
+    /// codec, sum in submission order, divide by k.
+    fn reference_mean(cs: &CohortSpec, round: u64, reports: &[(usize, Message)]) -> Vec<f64> {
+        let codec = cohort_codec(cs, round);
+        let zeros = vec![0.0; cs.d];
+        let mut acc = vec![0.0; cs.d];
+        for (_, m) in reports {
+            codec.decode_accumulate_into(m, &zeros, 1.0, &mut acc);
+        }
+        let inv = 1.0 / reports.len() as f64;
+        acc.iter().map(|&a| inv * a).collect()
+    }
+
+    #[test]
+    fn full_round_completes_with_renormalized_mean() {
+        let cs = spec(3, 8);
+        let key = CohortKey { cohort: 5, round: 0 };
+        let inputs: Vec<Vec<f64>> = (0..3).map(|i| vec![1.0 + i as f64; 8]).collect();
+        let reports: Vec<(usize, Message)> = inputs
+            .iter()
+            .enumerate()
+            .map(|(c, x)| (c, encode(&cs, 0, c, x)))
+            .collect();
+        let mut table = CohortTable::new();
+        for (c, m) in &reports[..2] {
+            match table.submit(key, &cs, *c, m, 0, 1000) {
+                Submit::Pending { received, expected } => {
+                    assert_eq!((received, expected), (c + 1, 3));
+                }
+                other => panic!("expected Pending, got {other:?}"),
+            }
+        }
+        let result = match table.submit(key, &cs, 2, &reports[2].1, 0, 1000) {
+            Submit::Complete(r) => r,
+            other => panic!("expected Complete, got {other:?}"),
+        };
+        assert_eq!(result.received, 3);
+        assert!(!result.partial);
+        assert_eq!(result.estimate, reference_mean(&cs, 0, &reports));
+        // True mean is 2.0 per coordinate; q=64 at y=8 keeps error small.
+        for &v in &result.estimate {
+            assert!((v - 2.0).abs() < 0.3, "estimate {v} far from 2.0");
+        }
+        // Late duplicate gets the cached result back.
+        match table.submit(key, &cs, 0, &reports[0].1, 5, 1000) {
+            Submit::Late(r) => assert_eq!(r, result),
+            other => panic!("expected Late, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_expiry_renormalizes_partial_mean_k_of_n() {
+        let cs = spec(4, 6);
+        let key = CohortKey { cohort: 9, round: 3 };
+        // Only clients 0 and 2 of 4 report.
+        let xs = [vec![4.0; 6], vec![-2.0; 6]];
+        let reports: Vec<(usize, Message)> = [(0usize, &xs[0]), (2usize, &xs[1])]
+            .iter()
+            .map(|&(c, x)| (c, encode(&cs, 3, c, x)))
+            .collect();
+        let mut table = CohortTable::new();
+        for (c, m) in &reports {
+            match table.submit(key, &cs, *c, m, 100, 50) {
+                Submit::Pending { .. } => {}
+                other => panic!("expected Pending, got {other:?}"),
+            }
+        }
+        assert!(table.expire(149).is_empty(), "deadline not yet reached");
+        let closed = table.expire(150);
+        assert_eq!(closed.len(), 1);
+        let (k, result) = &closed[0];
+        assert_eq!(*k, key);
+        assert_eq!(result.received, 2);
+        assert_eq!(result.expected, 4);
+        assert!(result.partial);
+        // Renormalized over k=2 arrived reports, not n=4.
+        assert_eq!(result.estimate, reference_mean(&cs, 3, &reports));
+        for &v in &result.estimate {
+            assert!((v - 1.0).abs() < 0.3, "partial mean {v} far from 1.0");
+        }
+        let stats = table.stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].rounds_partial, 1);
+        assert_eq!(stats[0].open_rounds, 0);
+    }
+
+    #[test]
+    fn rejects_bad_reports_without_corrupting_state() {
+        let cs = spec(2, 4);
+        let key = CohortKey { cohort: 1, round: 0 };
+        let m = encode(&cs, 0, 0, &[1.0; 4]);
+        let mut table = CohortTable::new();
+        // Stateful codec refused.
+        let bad = CohortSpec {
+            spec: CodecSpec::EfSign,
+            ..cs
+        };
+        assert!(matches!(
+            table.submit(key, &bad, 0, &m, 0, 100),
+            Submit::Rejected(_)
+        ));
+        // Client out of range refused.
+        assert!(matches!(
+            table.submit(key, &cs, 2, &m, 0, 100),
+            Submit::Rejected(_)
+        ));
+        assert!(matches!(
+            table.submit(key, &cs, 0, &m, 0, 100),
+            Submit::Pending { .. }
+        ));
+        // Duplicate client refused, round still open with 1 report.
+        assert!(matches!(
+            table.submit(key, &cs, 0, &m, 0, 100),
+            Submit::Rejected(_)
+        ));
+        // Spec mismatch against the opened round refused.
+        let other = CohortSpec { y: 2.0, ..cs };
+        assert!(matches!(
+            table.submit(key, &other, 1, &m, 0, 100),
+            Submit::Rejected(_)
+        ));
+        assert_eq!(table.open_rounds(), 1);
+        let stats = table.stats();
+        assert_eq!(stats[0].reports, 1);
+    }
+
+    #[test]
+    fn many_cohorts_multiplex_independently() {
+        let cs = spec(2, 4);
+        let mut table = CohortTable::new();
+        let mut results = Vec::new();
+        for cohort in 0..32u64 {
+            let key = CohortKey { cohort, round: 7 };
+            let x0 = vec![cohort as f64 * 0.1; 4];
+            let x1 = vec![cohort as f64 * 0.3; 4];
+            let m0 = encode(&cs, 7, 0, &x0);
+            let m1 = encode(&cs, 7, 1, &x1);
+            assert!(matches!(
+                table.submit(key, &cs, 0, &m0, 0, 100),
+                Submit::Pending { .. }
+            ));
+            match table.submit(key, &cs, 1, &m1, 0, 100) {
+                Submit::Complete(r) => results.push((cohort, r)),
+                other => panic!("expected Complete, got {other:?}"),
+            }
+        }
+        for (cohort, r) in results {
+            let want = cohort as f64 * 0.2;
+            for &v in &r.estimate {
+                assert!((v - want).abs() < 0.2, "cohort {cohort}: {v} vs {want}");
+            }
+        }
+        assert_eq!(table.open_rounds(), 0);
+        assert_eq!(table.stats().len(), 32);
+        let t = table.total_traffic();
+        assert_eq!(t.recv_msgs, 64);
+        assert!(t.recv_bits > 0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Typed transport failures.
+//!
+//! Every fallible operation in the transport layer returns
+//! [`TransportError`] instead of panicking (the `expect("peer hung up")`
+//! / `expect("cluster shut down")` panics of the pre-transport
+//! substrate). The variants partition failures the way a caller has to
+//! react to them: a single peer going away (`PeerClosed`) can be
+//! survived by a service folding k ≤ n reports, a whole-cluster
+//! `Shutdown` cannot; `Timeout` is retryable, `BadFrame` is not (the
+//! stream is desynchronized and must be dropped).
+
+use std::fmt;
+use std::io;
+
+/// Why a frame could not be decoded off a byte stream.
+///
+/// A frame error means the stream can no longer be trusted to be
+/// aligned on a packet boundary: the connection must be closed, not
+/// resynchronized.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// The stream ended in the middle of a frame (a clean close *between*
+    /// frames is end-of-stream, not an error).
+    ShortRead { needed: usize, got: usize },
+    /// The length prefix exceeds the configured maximum frame size
+    /// (defends the receiver against allocating attacker-chosen sizes).
+    TooLarge { len: u32, max: u32 },
+    /// The metered bit count exceeds the payload's byte capacity —
+    /// impossible for a well-formed [`crate::quant::Message`], whose
+    /// contract is `bits <= 8 * bytes.len()`.
+    BitsExceedBytes { bits: u64, len: u32 },
+    /// A service-protocol frame did not start with the expected magic.
+    BadMagic { got: u32, want: u32 },
+    /// A service-protocol frame had an unknown kind tag or a malformed
+    /// fixed-size header.
+    BadHeader(&'static str),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::ShortRead { needed, got } => {
+                write!(f, "short read: needed {needed} bytes, stream ended after {got}")
+            }
+            FrameError::TooLarge { len, max } => {
+                write!(f, "frame length {len} exceeds maximum {max}")
+            }
+            FrameError::BitsExceedBytes { bits, len } => {
+                write!(f, "metered bits {bits} exceed payload capacity of {len} bytes")
+            }
+            FrameError::BadMagic { got, want } => {
+                write!(f, "bad magic {got:#010x} (expected {want:#010x})")
+            }
+            FrameError::BadHeader(what) => write!(f, "malformed header: {what}"),
+        }
+    }
+}
+
+/// A transport-layer failure, replacing the panicking channel paths.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TransportError {
+    /// The peer's endpoint is gone: its channel receiver or socket closed
+    /// while we still had traffic for it.
+    PeerClosed { peer: usize },
+    /// The whole cluster is gone: every possible sender to this endpoint
+    /// has been dropped, so no further packet can ever arrive.
+    Shutdown,
+    /// A machine thread panicked ([`crate::sim::Cluster::try_run`]'s
+    /// graceful-shutdown path reports the panic instead of poisoning the
+    /// process).
+    WorkerPanicked { machine: usize },
+    /// A receive deadline elapsed with no packet.
+    Timeout { peer: Option<usize> },
+    /// Could not establish a connection after bounded retries.
+    Connect {
+        addr: String,
+        attempts: u32,
+        last: String,
+    },
+    /// The mesh handshake was violated (wrong magic, duplicate or
+    /// out-of-range machine id, mismatched cluster size).
+    Handshake(String),
+    /// A frame-level decode failure (see [`FrameError`]).
+    BadFrame(FrameError),
+    /// The DME service refused the request (spec mismatch, duplicate
+    /// report, stateful codec, …) — a protocol-level rejection carried
+    /// back over a healthy connection.
+    Rejected(String),
+    /// An underlying I/O failure on an established stream.
+    Io { kind: io::ErrorKind, detail: String },
+}
+
+impl TransportError {
+    /// Wrap an `io::Error` (which is neither `Clone` nor `PartialEq`)
+    /// into the comparable form tests can assert on.
+    pub fn from_io(e: &io::Error) -> Self {
+        TransportError::Io {
+            kind: e.kind(),
+            detail: e.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::PeerClosed { peer } => write!(f, "peer {peer} closed its endpoint"),
+            TransportError::Shutdown => write!(f, "cluster shut down (all senders dropped)"),
+            TransportError::WorkerPanicked { machine } => {
+                write!(f, "machine {machine} panicked")
+            }
+            TransportError::Timeout { peer: Some(p) } => {
+                write!(f, "timed out waiting for a packet from peer {p}")
+            }
+            TransportError::Timeout { peer: None } => write!(f, "timed out waiting for a packet"),
+            TransportError::Connect { addr, attempts, last } => {
+                write!(f, "could not connect to {addr} after {attempts} attempts: {last}")
+            }
+            TransportError::Handshake(why) => write!(f, "mesh handshake failed: {why}"),
+            TransportError::BadFrame(fe) => write!(f, "bad frame: {fe}"),
+            TransportError::Rejected(why) => write!(f, "service rejected the request: {why}"),
+            TransportError::Io { kind, detail } => write!(f, "i/o error ({kind:?}): {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<FrameError> for TransportError {
+    fn from(fe: FrameError) -> Self {
+        TransportError::BadFrame(fe)
+    }
+}

@@ -1,0 +1,203 @@
+//! Length-prefixed message framing over byte streams.
+//!
+//! The frame encoding is the [`crate::quant::PacketArena`] wire format,
+//! reused *verbatim*: `[bits: u64 LE][len: u32 LE][len bytes]`. A TCP
+//! stream carrying a batch of messages is byte-for-byte the arena a
+//! batched round stages in memory (pinned by
+//! `frame_bytes_match_packet_arena` below), so the in-process batch
+//! plane and the socket plane share one wire format.
+//!
+//! The byte length is stored explicitly rather than derived from `bits`
+//! because side-float codecs can have `bytes.len() > ceil(bits / 8)`;
+//! the well-formedness invariant the reader *does* enforce is the
+//! [`crate::quant::Message`] contract `bits <= 8 * len`. Violations —
+//! along with oversized length prefixes and streams that end mid-frame —
+//! are rejected with a typed [`FrameError`] rather than trusted, since a
+//! desynchronized stream would otherwise misparse payload bytes as
+//! prefixes indefinitely.
+
+use super::error::{FrameError, TransportError};
+use crate::quant::Message;
+use std::io::{self, Read, Write};
+
+/// Bytes of frame prefix: bits (u64 LE) + byte length (u32 LE).
+pub const PREFIX_BYTES: usize = 8 + 4;
+
+/// Default cap on a single frame's payload length (64 MiB). A `d = 10⁶`
+/// full-precision vector is 8 MB, so this clears every realistic round
+/// while still refusing attacker-chosen multi-GiB allocations.
+pub const MAX_FRAME_BYTES: u32 = 64 << 20;
+
+/// Write one message as a frame. The frame bytes are exactly what
+/// [`crate::quant::PacketArena::push`] appends for the same message.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Message) -> io::Result<()> {
+    let len = u32::try_from(msg.bytes.len()).expect("packet under 4 GiB");
+    let mut buf = Vec::with_capacity(PREFIX_BYTES + msg.bytes.len());
+    buf.extend_from_slice(&msg.bits.to_le_bytes());
+    buf.extend_from_slice(&len.to_le_bytes());
+    buf.extend_from_slice(&msg.bytes);
+    w.write_all(&buf)
+}
+
+/// Read one frame. Returns `Ok(None)` on a clean end-of-stream (the
+/// peer closed *between* frames); a stream that ends inside a frame is
+/// a [`FrameError::ShortRead`].
+pub fn read_frame<R: Read>(r: &mut R, max_len: u32) -> Result<Option<Message>, TransportError> {
+    let mut prefix = [0u8; PREFIX_BYTES];
+    if !read_exact_or_eof(r, &mut prefix)? {
+        return Ok(None);
+    }
+    let bits = u64::from_le_bytes(prefix[0..8].try_into().unwrap());
+    let len = u32::from_le_bytes(prefix[8..12].try_into().unwrap());
+    if len > max_len {
+        return Err(FrameError::TooLarge { len, max: max_len }.into());
+    }
+    if bits > 8 * u64::from(len) {
+        return Err(FrameError::BitsExceedBytes { bits, len }.into());
+    }
+    let mut bytes = vec![0u8; len as usize];
+    read_exact_all(r, &mut bytes)?;
+    Ok(Some(Message { bytes, bits }))
+}
+
+/// Fill `buf` from the reader. `Ok(false)` if the stream was already at
+/// EOF (zero bytes available); `ShortRead` if it ends partway through.
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<bool, TransportError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(false);
+                }
+                return Err(FrameError::ShortRead {
+                    needed: buf.len(),
+                    got,
+                }
+                .into());
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(TransportError::from_io(&e)),
+        }
+    }
+    Ok(true)
+}
+
+/// Fill `buf`, treating EOF anywhere as a `ShortRead`.
+fn read_exact_all<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<(), TransportError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(FrameError::ShortRead {
+                    needed: buf.len(),
+                    got,
+                }
+                .into())
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(TransportError::from_io(&e)),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::PacketArena;
+    use std::io::Cursor;
+
+    fn msg(bytes: Vec<u8>, bits: u64) -> Message {
+        Message { bytes, bits }
+    }
+
+    #[test]
+    fn roundtrip_including_misaligned_and_empty() {
+        let msgs = [
+            msg(vec![0xAB, 0xCD, 0xEF], 23),
+            msg(Vec::new(), 0),
+            msg((0..67).collect(), 67 * 8),
+        ];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            write_frame(&mut wire, m).unwrap();
+        }
+        let mut r = Cursor::new(wire);
+        for m in &msgs {
+            let got = read_frame(&mut r, MAX_FRAME_BYTES).unwrap().unwrap();
+            assert_eq!(&got, m);
+        }
+        assert!(read_frame(&mut r, MAX_FRAME_BYTES).unwrap().is_none());
+    }
+
+    /// The stream format IS the arena format: framing the same messages
+    /// yields byte-identical buffers, and the frame reader parses an
+    /// arena's raw bytes.
+    #[test]
+    fn frame_bytes_match_packet_arena() {
+        let msgs = [msg(vec![9, 8, 7, 6, 5], 33), msg(vec![0xFF], 3)];
+        let mut arena = PacketArena::new();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            arena.push(m);
+            write_frame(&mut wire, m).unwrap();
+        }
+        assert_eq!(arena.as_bytes(), &wire[..]);
+        let mut r = Cursor::new(arena.as_bytes().to_vec());
+        for m in &msgs {
+            assert_eq!(&read_frame(&mut r, MAX_FRAME_BYTES).unwrap().unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn short_read_mid_prefix_and_mid_payload_rejected() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &msg(vec![1, 2, 3, 4], 32)).unwrap();
+        // Truncate inside the prefix.
+        let mut r = Cursor::new(wire[..5].to_vec());
+        match read_frame(&mut r, MAX_FRAME_BYTES) {
+            Err(TransportError::BadFrame(FrameError::ShortRead { needed, got })) => {
+                assert_eq!(needed, PREFIX_BYTES);
+                assert_eq!(got, 5);
+            }
+            other => panic!("expected ShortRead, got {other:?}"),
+        }
+        // Truncate inside the payload.
+        let mut r = Cursor::new(wire[..PREFIX_BYTES + 2].to_vec());
+        match read_frame(&mut r, MAX_FRAME_BYTES) {
+            Err(TransportError::BadFrame(FrameError::ShortRead { needed, got })) => {
+                assert_eq!(needed, 4);
+                assert_eq!(got, 2);
+            }
+            other => panic!("expected ShortRead, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_and_inconsistent_prefixes_rejected() {
+        // len > max
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&0u64.to_le_bytes());
+        wire.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        match read_frame(&mut Cursor::new(wire), MAX_FRAME_BYTES) {
+            Err(TransportError::BadFrame(FrameError::TooLarge { len, .. })) => {
+                assert_eq!(len, MAX_FRAME_BYTES + 1)
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // bits > 8·len (violates the Message contract)
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&25u64.to_le_bytes());
+        wire.extend_from_slice(&3u32.to_le_bytes());
+        wire.extend_from_slice(&[0, 0, 0]);
+        match read_frame(&mut Cursor::new(wire), MAX_FRAME_BYTES) {
+            Err(TransportError::BadFrame(FrameError::BitsExceedBytes { bits, len })) => {
+                assert_eq!((bits, len), (25, 3));
+            }
+            other => panic!("expected BitsExceedBytes, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,497 @@
+//! The multi-cohort DME service: one leader process folding the
+//! quantized reports of many independent client cohorts.
+//!
+//! Server side, [`serve`] runs an accept loop over a caller-bound
+//! `TcpListener`: every connection carries one [`super::wire::Request`]
+//! and gets one [`super::wire::Response`] (the one-round-trip shape of a
+//! star round — the client *is* a star worker, the service *is* the
+//! leader). Reports are folded through the [`super::cohort::CohortTable`]
+//! streaming accumulator; a report that completes its round answers
+//! everyone still parked on that round, and the accept loop doubles as
+//! the deadline sweeper — each idle tick it expires overdue rounds and
+//! answers their waiters with the `1/k`-renormalized partial mean.
+//!
+//! Client side, [`report_round`] encodes one vector under the cohort
+//! codec convention (see [`super::cohort`]) and blocks for the round's
+//! estimate; [`fetch_stats`] and [`request_shutdown`] drive the health
+//! and shutdown endpoints. The `dme serve` / `dme report` CLI
+//! subcommands are thin wrappers over these.
+//!
+//! Bit accounting follows the paper's per-machine model (see the `net`
+//! module docs): each accepted report charges its metered `msg.bits`
+//! inbound, each estimate delivery charges `64·d` outbound, framing is
+//! excluded.
+
+use super::cohort::{
+    client_encoder_rng, cohort_codec, CohortKey, CohortSpec, CohortStats, RoundResult, Submit,
+};
+use super::error::TransportError;
+use super::wire::{read_request, read_response, write_request, write_response, Request, Response};
+use super::Traffic;
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Server knobs. `Default` is sized for tests and the CI smoke run;
+/// long-running deployments mostly raise `max_rounds` to `None`.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Round deadline applied when a report carries `deadline_ms == 0`.
+    pub default_deadline_ms: u64,
+    /// Exit the accept loop after this many completed rounds
+    /// (`None` = run until a shutdown request).
+    pub max_rounds: Option<u64>,
+    /// Per-connection read timeout — a silent client cannot park a
+    /// handler thread forever.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            default_deadline_ms: 2_000,
+            max_rounds: None,
+            read_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// What one [`serve`] run did, for logs and tests.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeSummary {
+    /// Rounds closed (full and partial).
+    pub rounds_completed: u64,
+    /// Rounds closed at their deadline with k < n reports.
+    pub rounds_partial: u64,
+    /// Distinct cohorts seen.
+    pub cohorts: usize,
+    /// Aggregate traffic from the server's seat (recv = reports in,
+    /// sent = estimates out), paper units.
+    pub traffic: Traffic,
+}
+
+struct State {
+    table: super::cohort::CohortTable,
+    /// Connections parked until their `(cohort, round)` closes.
+    waiters: HashMap<CohortKey, Vec<TcpStream>>,
+    rounds_completed: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    start: Instant,
+    opts: ServeOpts,
+}
+
+impl Shared {
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+}
+
+/// Write a round's estimate to one stream, best-effort (a waiter that
+/// hung up is simply skipped; the round result is unaffected).
+fn send_estimate(stream: &mut TcpStream, r: &RoundResult) -> bool {
+    let resp = Response::Estimate {
+        received: r.received as u32,
+        expected: r.expected as u32,
+        partial: r.partial,
+        estimate: r.estimate.clone(),
+    };
+    write_response(stream, &resp).and_then(|()| stream.flush()).is_ok()
+}
+
+/// Answer everyone parked on `key` (plus `also`, the report that closed
+/// the round, if any) and charge the outbound estimate bits for the
+/// deliveries that succeeded. Returns delivered-count.
+fn deliver_round(
+    state: &mut State,
+    key: CohortKey,
+    r: &RoundResult,
+    also: Option<&mut TcpStream>,
+) -> usize {
+    let d = r.estimate.len();
+    let mut delivered = 0;
+    if let Some(stream) = also {
+        if send_estimate(stream, r) {
+            delivered += 1;
+        }
+    }
+    if let Some(parked) = state.waiters.remove(&key) {
+        for mut s in parked {
+            if send_estimate(&mut s, r) {
+                delivered += 1;
+            }
+        }
+    }
+    state.table.note_estimates_sent(key.cohort, d, delivered);
+    delivered
+}
+
+/// Close every overdue round (all of them, at shutdown) and answer the
+/// parked waiters with the renormalized partial means.
+fn sweep(shared: &Shared, state: &mut State, force_all: bool) {
+    let now = if force_all { u64::MAX } else { shared.now_ms() };
+    for (key, r) in state.table.expire(now) {
+        state.rounds_completed += 1;
+        deliver_round(state, key, &r, None);
+    }
+    if let Some(cap) = shared.opts.max_rounds {
+        if state.rounds_completed >= cap {
+            state.shutdown = true;
+        }
+    }
+}
+
+/// Handle one connection: one request, at most one response. A report
+/// whose round is still pending parks the stream in the waiter table
+/// and returns — the closing report or the deadline sweeper answers it.
+fn handle_connection(shared: &Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(shared.opts.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let req = match read_request(&mut stream) {
+        Ok(req) => req,
+        Err(e) => {
+            let _ = write_response(&mut stream, &Response::Error(e.to_string()));
+            return;
+        }
+    };
+    let mut state = shared.state.lock().expect("service state lock");
+    match req {
+        Request::Report {
+            cohort,
+            round,
+            client,
+            spec,
+            deadline_ms,
+            msg,
+        } => {
+            if state.shutdown {
+                drop(state);
+                let reason = "service shutting down".to_string();
+                let _ = write_response(&mut stream, &Response::Error(reason));
+                return;
+            }
+            let key = CohortKey { cohort, round };
+            let deadline = if deadline_ms == 0 {
+                shared.opts.default_deadline_ms
+            } else {
+                u64::from(deadline_ms)
+            };
+            let now = shared.now_ms();
+            match state.table.submit(key, &spec, client as usize, &msg, now, deadline) {
+                Submit::Pending { .. } => {
+                    // Park; the stream is answered when the round closes.
+                    state.waiters.entry(key).or_default().push(stream);
+                }
+                Submit::Complete(r) => {
+                    state.rounds_completed += 1;
+                    deliver_round(&mut state, key, &r, Some(&mut stream));
+                    if let Some(cap) = shared.opts.max_rounds {
+                        if state.rounds_completed >= cap {
+                            state.shutdown = true;
+                        }
+                    }
+                }
+                Submit::Late(r) => {
+                    if send_estimate(&mut stream, &r) {
+                        state.table.note_estimates_sent(key.cohort, r.estimate.len(), 1);
+                    }
+                }
+                Submit::Rejected(reason) => {
+                    drop(state);
+                    let _ = write_response(&mut stream, &Response::Error(reason));
+                }
+            }
+        }
+        Request::Health => {
+            let stats = state.table.stats();
+            drop(state);
+            let _ = write_response(&mut stream, &Response::Stats(stats));
+        }
+        Request::Shutdown => {
+            state.shutdown = true;
+            drop(state);
+            let _ = write_response(&mut stream, &Response::Ok);
+        }
+    }
+}
+
+/// Run the service over a caller-bound listener until `max_rounds`
+/// rounds complete or a shutdown request arrives. The accept loop polls
+/// (nonblocking accept + short sleep) so it doubles as the deadline
+/// sweeper without a dedicated timer thread; at exit every still-open
+/// round is force-closed and its waiters receive their partial means.
+pub fn serve(listener: TcpListener, opts: ServeOpts) -> Result<ServeSummary, TransportError> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| TransportError::from_io(&e))?;
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            table: super::cohort::CohortTable::new(),
+            waiters: HashMap::new(),
+            rounds_completed: 0,
+            shutdown: false,
+        }),
+        start: Instant::now(),
+        opts,
+    });
+    let mut handles = Vec::new();
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nonblocking(false);
+                let sh = Arc::clone(&shared);
+                handles.push(
+                    thread::Builder::new()
+                        .name("dme-serve-conn".into())
+                        .spawn(move || handle_connection(&sh, stream))
+                        .expect("spawn connection handler"),
+                );
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(TransportError::from_io(&e)),
+        }
+        let mut state = shared.state.lock().expect("service state lock");
+        sweep(&shared, &mut state, false);
+        if state.shutdown {
+            // Answer every still-open round with its partial mean
+            // before tearing the process down.
+            sweep(&shared, &mut state, true);
+            break;
+        }
+        drop(state);
+    }
+    drop(listener);
+    for h in handles {
+        let _ = h.join();
+    }
+    let state = shared.state.lock().expect("service state lock");
+    let stats = state.table.stats();
+    Ok(ServeSummary {
+        rounds_completed: state.rounds_completed,
+        rounds_partial: stats.iter().map(|s| s.rounds_partial).sum(),
+        cohorts: stats.len(),
+        traffic: state.table.total_traffic(),
+    })
+}
+
+/// A client's view of a closed round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EstimateOut {
+    pub estimate: Vec<f64>,
+    pub received: usize,
+    pub expected: usize,
+    pub partial: bool,
+}
+
+fn connect(addr: &str, timeout: Duration) -> Result<TcpStream, TransportError> {
+    let stream = TcpStream::connect(addr).map_err(|e| TransportError::Connect {
+        addr: addr.to_string(),
+        attempts: 1,
+        last: e.to_string(),
+    })?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(|e| TransportError::from_io(&e))?;
+    let _ = stream.set_nodelay(true);
+    Ok(stream)
+}
+
+/// Encode `input` under the cohort codec convention and report it for
+/// `(cohort, round)`, blocking until the round closes (all `n` reports
+/// in, or the deadline with `k ≤ n`) and returning the round's
+/// estimate. `deadline_ms == 0` defers to the server's default.
+#[allow(clippy::too_many_arguments)]
+pub fn report_round(
+    addr: &str,
+    cohort: u64,
+    round: u64,
+    client: usize,
+    spec: &CohortSpec,
+    input: &[f64],
+    deadline_ms: u32,
+    timeout: Duration,
+) -> Result<EstimateOut, TransportError> {
+    assert_eq!(input.len(), spec.d, "input dimension must match the cohort spec");
+    let mut codec = cohort_codec(spec, round);
+    let mut rng = client_encoder_rng(spec.seed, round, client);
+    let msg = codec.encode(input, &mut rng);
+    let mut stream = connect(addr, timeout)?;
+    write_request(
+        &mut stream,
+        &Request::Report {
+            cohort,
+            round,
+            client: client as u32,
+            spec: *spec,
+            deadline_ms,
+            msg,
+        },
+    )
+    .map_err(|e| TransportError::from_io(&e))?;
+    match read_response(&mut stream)? {
+        Response::Estimate {
+            received,
+            expected,
+            partial,
+            estimate,
+        } => Ok(EstimateOut {
+            estimate,
+            received: received as usize,
+            expected: expected as usize,
+            partial,
+        }),
+        Response::Error(reason) => Err(TransportError::Rejected(reason)),
+        other => Err(TransportError::Rejected(format!(
+            "unexpected response to a report: {other:?}"
+        ))),
+    }
+}
+
+/// Fetch the per-cohort traffic/round statistics.
+pub fn fetch_stats(addr: &str, timeout: Duration) -> Result<Vec<CohortStats>, TransportError> {
+    let mut stream = connect(addr, timeout)?;
+    write_request(&mut stream, &Request::Health).map_err(|e| TransportError::from_io(&e))?;
+    match read_response(&mut stream)? {
+        Response::Stats(stats) => Ok(stats),
+        Response::Error(reason) => Err(TransportError::Rejected(reason)),
+        other => Err(TransportError::Rejected(format!(
+            "unexpected response to a health request: {other:?}"
+        ))),
+    }
+}
+
+/// Ask a service to exit its accept loop (open rounds close partial).
+pub fn request_shutdown(addr: &str, timeout: Duration) -> Result<(), TransportError> {
+    let mut stream = connect(addr, timeout)?;
+    write_request(&mut stream, &Request::Shutdown).map_err(|e| TransportError::from_io(&e))?;
+    match read_response(&mut stream)? {
+        Response::Ok => Ok(()),
+        Response::Error(reason) => Err(TransportError::Rejected(reason)),
+        other => Err(TransportError::Rejected(format!(
+            "unexpected response to a shutdown request: {other:?}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CodecSpec;
+
+    fn spec(n: usize, d: usize) -> CohortSpec {
+        CohortSpec {
+            n,
+            d,
+            spec: CodecSpec::Lq { q: 64 },
+            y: 8.0,
+            seed: 11,
+        }
+    }
+
+    fn spawn_server(opts: ServeOpts) -> (String, thread::JoinHandle<ServeSummary>) {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+        let addr = listener.local_addr().expect("local addr").to_string();
+        let h = thread::Builder::new()
+            .name("dme-serve".into())
+            .spawn(move || serve(listener, opts).expect("serve"))
+            .expect("spawn server");
+        (addr, h)
+    }
+
+    #[test]
+    fn one_cohort_round_over_loopback() {
+        let (addr, server) = spawn_server(ServeOpts {
+            max_rounds: Some(1),
+            ..ServeOpts::default()
+        });
+        let cs = spec(3, 8);
+        let clients: Vec<_> = (0..3)
+            .map(|c| {
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    let x = vec![c as f64; 8];
+                    report_round(&addr, 1, 0, c, &spec(3, 8), &x, 0, Duration::from_secs(10))
+                        .expect("report")
+                })
+            })
+            .collect();
+        let outs: Vec<EstimateOut> = clients.into_iter().map(|h| h.join().unwrap()).collect();
+        let summary = server.join().unwrap();
+        // All three clients see the identical full-participation mean.
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[1], outs[2]);
+        assert_eq!(outs[0].received, 3);
+        assert!(!outs[0].partial);
+        for &v in &outs[0].estimate {
+            assert!((v - 1.0).abs() < 0.3, "mean {v} far from 1.0");
+        }
+        assert_eq!(summary.rounds_completed, 1);
+        assert_eq!(summary.cohorts, 1);
+        // Paper accounting: 3 reports in, 3 × 64·d bits out.
+        assert_eq!(summary.traffic.recv_msgs, 3);
+        assert_eq!(summary.traffic.sent_bits, 3 * 64 * cs.d as u64);
+    }
+
+    #[test]
+    fn deadline_closes_round_partial_and_answers_waiter() {
+        let (addr, server) = spawn_server(ServeOpts {
+            max_rounds: Some(1),
+            ..ServeOpts::default()
+        });
+        // Only 1 of 2 expected clients reports; a 150 ms deadline closes
+        // the round with the k=1 renormalized mean.
+        let cs = spec(2, 4);
+        let out = report_round(
+            &addr,
+            9,
+            5,
+            0,
+            &cs,
+            &[2.0, 2.0, 2.0, 2.0],
+            150,
+            Duration::from_secs(10),
+        )
+        .expect("report");
+        assert_eq!(out.received, 1);
+        assert_eq!(out.expected, 2);
+        assert!(out.partial);
+        for &v in &out.estimate {
+            assert!((v - 2.0).abs() < 0.3, "k=1 mean {v} far from 2.0");
+        }
+        let summary = server.join().unwrap();
+        assert_eq!(summary.rounds_partial, 1);
+    }
+
+    #[test]
+    fn health_and_shutdown_endpoints() {
+        let (addr, server) = spawn_server(ServeOpts::default());
+        let stats = fetch_stats(&addr, Duration::from_secs(5)).expect("health");
+        assert!(stats.is_empty(), "no cohorts seen yet");
+        request_shutdown(&addr, Duration::from_secs(5)).expect("shutdown");
+        let summary = server.join().unwrap();
+        assert_eq!(summary.rounds_completed, 0);
+    }
+
+    #[test]
+    fn rejected_report_surfaces_reason() {
+        let (addr, server) = spawn_server(ServeOpts::default());
+        let cs = CohortSpec {
+            spec: CodecSpec::EfSign,
+            ..spec(2, 4)
+        };
+        let err = report_round(&addr, 1, 0, 0, &cs, &[0.0; 4], 0, Duration::from_secs(5))
+            .expect_err("stateful codec must be refused");
+        assert!(matches!(err, TransportError::Rejected(_)), "got {err:?}");
+        request_shutdown(&addr, Duration::from_secs(5)).expect("shutdown");
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,524 @@
+//! TCP transport: the in-process cluster's wire contract over real
+//! sockets.
+//!
+//! Frames are the [`crate::quant::PacketArena`] format verbatim
+//! ([`super::frame`]), so a machine's upload stream is byte-identical to
+//! the arena the batched in-process plane stages. Each pair of machines
+//! shares one full-duplex `TcpStream`; a per-peer reader thread decodes
+//! frames into the endpoint's receive channel, metering received bits on
+//! arrival (the sender meters its own sent bits — each side counts its
+//! own ledger, which after a completed round agrees exactly with the
+//! both-sides-at-send accounting of [`crate::sim::Endpoint`]).
+//!
+//! Mesh bring-up is deadlock-free by construction: all listeners are
+//! bound before any connect, machine `i` dials every `j < i` (retried
+//! with exponential backoff + deterministic jitter) and accepts from
+//! every `j > i`; the OS listen backlog absorbs dials that land before
+//! the peer reaches its accept phase.
+
+use super::error::TransportError;
+use super::frame;
+use super::{Meter, Packet, Stash, Traffic, Transport, TransportEndpoint};
+use crate::quant::Message;
+use crate::rng::{hash2, Rng};
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Handshake magic: "DMEm" (mesh).
+const MESH_MAGIC: u32 = u32::from_le_bytes(*b"DMEm");
+
+/// Connection and framing knobs for the TCP transport.
+#[derive(Clone, Debug)]
+pub struct TcpOpts {
+    /// Per-attempt connect timeout.
+    pub connect_timeout: Duration,
+    /// Overall budget for accepting all higher-id peers during mesh
+    /// bring-up.
+    pub accept_timeout: Duration,
+    /// Socket read timeout once the mesh is up; `None` blocks
+    /// indefinitely (receive-side deadlines then come from
+    /// [`TransportEndpoint::recv_timeout`], which works regardless).
+    pub read_timeout: Option<Duration>,
+    /// Retries after the first failed connect attempt.
+    pub max_retries: u32,
+    /// First backoff delay; doubles per retry up to `backoff_cap`.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Seed for the deterministic backoff jitter (the in-tree [`Rng`];
+    /// no ambient entropy, so bring-up schedules are reproducible).
+    pub jitter_seed: u64,
+    /// Largest acceptable frame payload (see [`frame::MAX_FRAME_BYTES`]).
+    pub max_frame: u32,
+}
+
+impl Default for TcpOpts {
+    fn default() -> Self {
+        TcpOpts {
+            connect_timeout: Duration::from_secs(5),
+            accept_timeout: Duration::from_secs(30),
+            read_timeout: None,
+            max_retries: 5,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(640),
+            jitter_seed: 0x7C9_D11E,
+            max_frame: frame::MAX_FRAME_BYTES,
+        }
+    }
+}
+
+fn io_err(e: io::Error) -> TransportError {
+    TransportError::from_io(&e)
+}
+
+/// Dial `addr` with bounded retries, exponential backoff and full
+/// jitter (each sleep is uniform in [delay/2, delay], then the delay
+/// doubles toward the cap).
+fn connect_with_retry(
+    addr: &SocketAddr,
+    opts: &TcpOpts,
+    rng: &mut Rng,
+) -> Result<TcpStream, TransportError> {
+    let mut delay = opts.backoff_base;
+    let mut last = String::from("no attempt made");
+    for attempt in 0..=opts.max_retries {
+        match TcpStream::connect_timeout(addr, opts.connect_timeout) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = e.to_string(),
+        }
+        if attempt == opts.max_retries {
+            break;
+        }
+        let jittered = delay.mul_f64(0.5 + 0.5 * rng.uniform(0.0, 1.0));
+        thread::sleep(jittered);
+        delay = (delay * 2).min(opts.backoff_cap);
+    }
+    Err(TransportError::Connect {
+        addr: addr.to_string(),
+        attempts: opts.max_retries + 1,
+        last,
+    })
+}
+
+fn map_send_err(e: io::Error, to: usize) -> TransportError {
+    match e.kind() {
+        io::ErrorKind::BrokenPipe
+        | io::ErrorKind::ConnectionReset
+        | io::ErrorKind::ConnectionAborted
+        | io::ErrorKind::NotConnected => TransportError::PeerClosed { peer: to },
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+            TransportError::Timeout { peer: Some(to) }
+        }
+        _ => io_err(e),
+    }
+}
+
+/// Frame-decode loop for one peer's stream; meters received bits at
+/// arrival and forwards packets (or one terminal error) to the
+/// endpoint's channel.
+fn reader_loop(
+    mut stream: TcpStream,
+    from: usize,
+    tx: Sender<Result<Packet, TransportError>>,
+    meter: Arc<Meter>,
+    max_frame: u32,
+) {
+    loop {
+        match frame::read_frame(&mut stream, max_frame) {
+            Ok(Some(msg)) => {
+                meter.note_recv(msg.bits);
+                if tx.send(Ok(Packet { from, msg })).is_err() {
+                    return; // endpoint dropped
+                }
+            }
+            Ok(None) => return, // peer closed cleanly between frames
+            Err(e) => {
+                let e = match e {
+                    TransportError::Io { kind, .. }
+                        if kind == io::ErrorKind::WouldBlock
+                            || kind == io::ErrorKind::TimedOut =>
+                    {
+                        TransportError::Timeout { peer: Some(from) }
+                    }
+                    TransportError::Io { kind, .. }
+                        if kind == io::ErrorKind::ConnectionReset
+                            || kind == io::ErrorKind::ConnectionAborted =>
+                    {
+                        TransportError::PeerClosed { peer: from }
+                    }
+                    other => other,
+                };
+                let _ = tx.send(Err(e));
+                return;
+            }
+        }
+    }
+}
+
+/// One machine's endpoint of a TCP mesh.
+///
+/// Satisfies the full [`TransportEndpoint`] contract: per-peer FIFO
+/// delivery (TCP ordering + one reader per stream + the shared
+/// [`Stash`]), metered bits identical to the in-process reference after
+/// any completed exchange, and typed errors for every failure mode.
+pub struct TcpEndpoint {
+    id: usize,
+    n: usize,
+    writers: Vec<Option<TcpStream>>,
+    rx: Receiver<Result<Packet, TransportError>>,
+    readers: Vec<JoinHandle<()>>,
+    stash: Stash,
+    meter: Arc<Meter>,
+    scratch: Vec<u8>,
+}
+
+impl TcpEndpoint {
+    /// Join an `n`-machine mesh as machine `id`. `addrs[j]` is machine
+    /// `j`'s listen address; `listener` is this machine's already-bound
+    /// listener (bind *all* listeners before calling this anywhere, or
+    /// dial-order retries will be doing real work).
+    pub fn mesh(
+        id: usize,
+        addrs: &[SocketAddr],
+        listener: TcpListener,
+        opts: &TcpOpts,
+    ) -> Result<Self, TransportError> {
+        let n = addrs.len();
+        assert!(id < n, "machine id out of range");
+        let mut streams: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        let mut rng = Rng::new(hash2(opts.jitter_seed, id as u64));
+
+        // Dial every lower-id peer and introduce ourselves.
+        for (j, addr) in addrs.iter().enumerate().take(id) {
+            let mut s = connect_with_retry(addr, opts, &mut rng)?;
+            let mut hello = [0u8; 12];
+            hello[0..4].copy_from_slice(&MESH_MAGIC.to_le_bytes());
+            hello[4..8].copy_from_slice(&(id as u32).to_le_bytes());
+            hello[8..12].copy_from_slice(&(n as u32).to_le_bytes());
+            s.write_all(&hello).map_err(|e| map_send_err(e, j))?;
+            streams[j] = Some(s);
+        }
+
+        // Accept every higher-id peer, with an overall deadline so a
+        // dead peer surfaces as Timeout instead of a hang.
+        listener.set_nonblocking(true).map_err(io_err)?;
+        let deadline = Instant::now() + opts.accept_timeout;
+        let mut pending = n - 1 - id;
+        while pending > 0 {
+            match listener.accept() {
+                Ok((mut s, _)) => {
+                    s.set_nonblocking(false).map_err(io_err)?;
+                    s.set_read_timeout(Some(opts.connect_timeout)).map_err(io_err)?;
+                    let mut hs = [0u8; 12];
+                    s.read_exact(&mut hs)
+                        .map_err(|e| TransportError::Handshake(format!("hello read: {e}")))?;
+                    let magic = u32::from_le_bytes(hs[0..4].try_into().unwrap());
+                    let peer = u32::from_le_bytes(hs[4..8].try_into().unwrap()) as usize;
+                    let peer_n = u32::from_le_bytes(hs[8..12].try_into().unwrap()) as usize;
+                    if magic != MESH_MAGIC {
+                        return Err(TransportError::Handshake(format!(
+                            "bad magic {magic:#010x}"
+                        )));
+                    }
+                    if peer_n != n {
+                        return Err(TransportError::Handshake(format!(
+                            "peer believes n = {peer_n}, we have n = {n}"
+                        )));
+                    }
+                    if peer <= id || peer >= n {
+                        return Err(TransportError::Handshake(format!(
+                            "unexpected dial from machine {peer} (we are {id})"
+                        )));
+                    }
+                    if streams[peer].is_some() {
+                        return Err(TransportError::Handshake(format!(
+                            "duplicate connection from machine {peer}"
+                        )));
+                    }
+                    streams[peer] = Some(s);
+                    pending -= 1;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(TransportError::Timeout { peer: None });
+                    }
+                    thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => return Err(io_err(e)),
+            }
+        }
+
+        // Uniform socket options, then one reader thread per peer.
+        let (tx, rx) = channel();
+        let meter = Arc::new(Meter::default());
+        let mut readers = Vec::with_capacity(n.saturating_sub(1));
+        for (j, slot) in streams.iter().enumerate() {
+            if let Some(s) = slot {
+                s.set_nodelay(true).map_err(io_err)?;
+                s.set_read_timeout(opts.read_timeout).map_err(io_err)?;
+                let clone = s.try_clone().map_err(io_err)?;
+                let tx = tx.clone();
+                let meter = meter.clone();
+                let max_frame = opts.max_frame;
+                readers.push(
+                    thread::Builder::new()
+                        .name(format!("tcp-rd-{id}-{j}"))
+                        .spawn(move || reader_loop(clone, j, tx, meter, max_frame))
+                        .expect("spawn reader"),
+                );
+            }
+        }
+        drop(tx);
+
+        Ok(TcpEndpoint {
+            id,
+            n,
+            writers: streams,
+            rx,
+            readers,
+            stash: Stash::new(n),
+            meter,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Shared handle to this machine's traffic meter.
+    pub fn meter_handle(&self) -> Arc<Meter> {
+        self.meter.clone()
+    }
+
+    fn recv_channel(&mut self) -> Result<Packet, TransportError> {
+        match self.rx.recv() {
+            Ok(item) => item,
+            Err(_) => Err(TransportError::Shutdown),
+        }
+    }
+}
+
+impl TransportEndpoint for TcpEndpoint {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn send(&mut self, to: usize, msg: Message) -> Result<(), TransportError> {
+        assert_ne!(to, self.id, "no self-sends");
+        // Meter before attempting delivery (same discipline as the
+        // in-process reference: a send to a dying peer is still a send).
+        self.meter.note_sent(msg.bits);
+        let len = u32::try_from(msg.bytes.len()).expect("packet under 4 GiB");
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&msg.bits.to_le_bytes());
+        self.scratch.extend_from_slice(&len.to_le_bytes());
+        self.scratch.extend_from_slice(&msg.bytes);
+        let w = self.writers[to].as_mut().expect("self slot is the only None");
+        w.write_all(&self.scratch).map_err(|e| map_send_err(e, to))
+    }
+
+    fn recv(&mut self) -> Result<Packet, TransportError> {
+        if let Some(p) = self.stash.pop_earliest() {
+            return Ok(p);
+        }
+        self.recv_channel()
+    }
+
+    fn recv_from(&mut self, from: usize) -> Result<Packet, TransportError> {
+        if let Some(p) = self.stash.pop_from(from) {
+            return Ok(p);
+        }
+        loop {
+            let p = self.recv_channel()?;
+            if p.from == from {
+                return Ok(p);
+            }
+            self.stash.push(p);
+        }
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Packet, TransportError> {
+        if let Some(p) = self.stash.pop_earliest() {
+            return Ok(p);
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(item) => item,
+            Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout { peer: None }),
+            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Shutdown),
+        }
+    }
+
+    fn traffic(&self) -> Traffic {
+        self.meter.snapshot()
+    }
+}
+
+impl Drop for TcpEndpoint {
+    fn drop(&mut self) {
+        for w in self.writers.iter().flatten() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Build a full `n`-machine mesh over `127.0.0.1` ephemeral ports:
+/// binds all listeners first, then brings up every endpoint
+/// concurrently. Returns the endpoints in machine order.
+pub fn loopback_mesh(n: usize, opts: &TcpOpts) -> Result<Vec<TcpEndpoint>, TransportError> {
+    let mut listeners = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let l = TcpListener::bind(("127.0.0.1", 0)).map_err(io_err)?;
+        addrs.push(l.local_addr().map_err(io_err)?);
+        listeners.push(l);
+    }
+    let handles: Vec<_> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let addrs = addrs.clone();
+            let opts = opts.clone();
+            thread::Builder::new()
+                .name(format!("mesh-up-{i}"))
+                .spawn(move || TcpEndpoint::mesh(i, &addrs, l, &opts))
+                .expect("spawn mesh bring-up")
+        })
+        .collect();
+    let mut eps = Vec::with_capacity(n);
+    for (i, h) in handles.into_iter().enumerate() {
+        eps.push(
+            h.join()
+                .map_err(|_| TransportError::WorkerPanicked { machine: i })??,
+        );
+    }
+    Ok(eps)
+}
+
+/// A loopback-TCP cluster as a [`Transport`]: the factory counterpart
+/// of [`crate::sim::Cluster`] for socket-backed tests and benches.
+pub struct LoopbackMesh {
+    n: usize,
+    endpoints: Option<Vec<TcpEndpoint>>,
+    meters: Vec<Arc<Meter>>,
+}
+
+impl LoopbackMesh {
+    pub fn new(n: usize, opts: &TcpOpts) -> Result<Self, TransportError> {
+        let endpoints = loopback_mesh(n, opts)?;
+        let meters = endpoints.iter().map(|e| e.meter_handle()).collect();
+        Ok(LoopbackMesh {
+            n,
+            endpoints: Some(endpoints),
+            meters,
+        })
+    }
+}
+
+impl Transport for LoopbackMesh {
+    type Endpoint = TcpEndpoint;
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn open(&mut self) -> Result<Vec<TcpEndpoint>, TransportError> {
+        self.endpoints.take().ok_or_else(|| {
+            TransportError::Handshake("loopback mesh endpoints already taken".into())
+        })
+    }
+
+    fn traffic(&self) -> Vec<Traffic> {
+        self.meters.iter().map(|m| m.snapshot()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(bits: u64) -> Message {
+        Message {
+            bytes: vec![0xA5u8; (bits as usize + 7) / 8],
+            bits,
+        }
+    }
+
+    #[test]
+    fn loopback_pair_ping_pong_and_meters() {
+        let eps = loopback_mesh(2, &TcpOpts::default()).expect("mesh up");
+        let mut it = eps.into_iter();
+        let mut a = it.next().unwrap();
+        let mut b = it.next().unwrap();
+        let h = thread::spawn(move || {
+            let p = b.recv_from(0).expect("packet from 0");
+            assert_eq!(p.msg.bits, 100);
+            b.send(0, msg(200)).expect("reply");
+            b.traffic()
+        });
+        a.send(1, msg(100)).expect("send");
+        let p = a.recv_from(1).expect("reply from 1");
+        assert_eq!(p.msg.bits, 200);
+        let tb = h.join().unwrap();
+        let ta = a.traffic();
+        assert_eq!(ta.sent_bits, 100);
+        assert_eq!(ta.recv_bits, 200);
+        assert_eq!(tb.sent_bits, 200);
+        assert_eq!(tb.recv_bits, 100);
+        assert_eq!((ta.sent_msgs, ta.recv_msgs), (1, 1));
+    }
+
+    #[test]
+    fn connect_to_dead_port_fails_with_bounded_retries() {
+        // Bind then drop: the port is very likely refused immediately.
+        let addr = {
+            let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            l.local_addr().unwrap()
+        };
+        let opts = TcpOpts {
+            connect_timeout: Duration::from_millis(200),
+            max_retries: 2,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(4),
+            ..TcpOpts::default()
+        };
+        let mut rng = Rng::new(1);
+        match connect_with_retry(&addr, &opts, &mut rng) {
+            Err(TransportError::Connect { attempts, .. }) => assert_eq!(attempts, 3),
+            other => panic!("expected Connect error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mesh_broadcast_reaches_everyone() {
+        let eps = loopback_mesh(4, &TcpOpts::default()).expect("mesh up");
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                thread::spawn(move || {
+                    if ep.id() == 2 {
+                        ep.broadcast(&msg(64)).expect("broadcast");
+                    } else {
+                        let p = ep.recv().expect("packet");
+                        assert_eq!(p.from, 2);
+                        assert_eq!(p.msg.bits, 64);
+                    }
+                    ep.traffic()
+                })
+            })
+            .collect();
+        let traffic: Vec<Traffic> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(traffic[2].sent_bits, 3 * 64);
+        for (i, t) in traffic.iter().enumerate() {
+            if i != 2 {
+                assert_eq!(t.recv_bits, 64);
+            }
+        }
+    }
+}

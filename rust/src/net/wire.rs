@@ -1,0 +1,460 @@
+//! Wire encoding of the DME service protocol — the request/response
+//! records `dme serve` and `dme report` exchange over a TCP stream.
+//!
+//! One connection carries one request and one response (the client
+//! connects, reports, blocks for its estimate, disconnects — matching
+//! the one-round-trip shape of a star round). Records are fixed-layout
+//! little-endian headers; the quantized payload inside a report travels
+//! as a [`crate::net::frame`] frame, i.e. the `PacketArena` format
+//! verbatim, so the client→leader leg is byte-compatible with every
+//! other transport in the crate. Malformed records are rejected with
+//! typed [`TransportError`]s — a service must never panic on attacker-
+//! controlled bytes.
+
+use super::cohort::{CohortSpec, CohortStats};
+use super::error::{FrameError, TransportError};
+use super::frame;
+use crate::coordinator::CodecSpec;
+use crate::quant::Message;
+use std::io::{self, Read, Write};
+
+/// Request record magic: `"DMEq"`.
+pub const REQ_MAGIC: u32 = u32::from_le_bytes(*b"DMEq");
+/// Response record magic: `"DMEr"`.
+pub const RESP_MAGIC: u32 = u32::from_le_bytes(*b"DMEr");
+
+const KIND_REPORT: u8 = 0;
+const KIND_HEALTH: u8 = 1;
+const KIND_SHUTDOWN: u8 = 2;
+
+const KIND_ESTIMATE: u8 = 0;
+const KIND_ERROR: u8 = 1;
+const KIND_STATS: u8 = 2;
+const KIND_OK: u8 = 3;
+
+/// Hard cap on `d` accepted over the wire (an estimate response of this
+/// size is 64 MB — aligned with [`frame::MAX_FRAME_BYTES`]).
+pub const MAX_WIRE_DIM: u32 = 8 << 20;
+
+/// A client→service request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// One client's quantized report for one cohort round.
+    Report {
+        cohort: u64,
+        round: u64,
+        client: u32,
+        spec: CohortSpec,
+        /// Round deadline in ms, measured from when the first report
+        /// opens the round on the server.
+        deadline_ms: u32,
+        msg: Message,
+    },
+    /// Per-cohort traffic/round statistics.
+    Health,
+    /// Ask the service to finish up and exit its accept loop.
+    Shutdown,
+}
+
+/// A service→client response.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// The round's (possibly renormalized-partial) mean estimate.
+    Estimate {
+        received: u32,
+        expected: u32,
+        partial: bool,
+        estimate: Vec<f64>,
+    },
+    /// The request was refused; the reason is human-readable.
+    Error(String),
+    /// Health answer: one entry per cohort ever seen.
+    Stats(Vec<CohortStats>),
+    /// Shutdown acknowledged.
+    Ok,
+}
+
+/// `CodecSpec` wire form: tag byte + one u32 parameter (unused
+/// parameters are 0). Tags are append-only.
+fn spec_to_wire(s: CodecSpec) -> (u8, u32) {
+    match s {
+        CodecSpec::Lq { q } => (0, q),
+        CodecSpec::Rlq { q } => (1, q),
+        CodecSpec::LqHull { q } => (2, q),
+        CodecSpec::D4 { q } => (3, q),
+        CodecSpec::QsgdL2 { q } => (4, q),
+        CodecSpec::QsgdLinf { q } => (5, q),
+        CodecSpec::Hadamard { q } => (6, q),
+        CodecSpec::Vqsgd { reps } => (7, reps),
+        CodecSpec::EfSign => (8, 0),
+        CodecSpec::PowerSgd { rank } => (9, rank as u32),
+        CodecSpec::TernGrad => (10, 0),
+        CodecSpec::TopK { k } => (11, k as u32),
+        CodecSpec::Full => (12, 0),
+    }
+}
+
+fn spec_from_wire(tag: u8, param: u32) -> Result<CodecSpec, TransportError> {
+    Ok(match tag {
+        0 => CodecSpec::Lq { q: param },
+        1 => CodecSpec::Rlq { q: param },
+        2 => CodecSpec::LqHull { q: param },
+        3 => CodecSpec::D4 { q: param },
+        4 => CodecSpec::QsgdL2 { q: param },
+        5 => CodecSpec::QsgdLinf { q: param },
+        6 => CodecSpec::Hadamard { q: param },
+        7 => CodecSpec::Vqsgd { reps: param },
+        8 => CodecSpec::EfSign,
+        9 => CodecSpec::PowerSgd {
+            rank: param as usize,
+        },
+        10 => CodecSpec::TernGrad,
+        11 => CodecSpec::TopK { k: param as usize },
+        12 => CodecSpec::Full,
+        _ => return Err(FrameError::BadHeader("unknown codec tag").into()),
+    })
+}
+
+// --- little-endian primitives over a growing buffer / a Read ---------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn io_err(e: &io::Error) -> TransportError {
+    if e.kind() == io::ErrorKind::UnexpectedEof {
+        FrameError::BadHeader("record truncated").into()
+    } else {
+        TransportError::from_io(e)
+    }
+}
+
+fn get_u8<R: Read>(r: &mut R) -> Result<u8, TransportError> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b).map_err(|e| io_err(&e))?;
+    Ok(b[0])
+}
+
+fn get_u32<R: Read>(r: &mut R) -> Result<u32, TransportError> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).map_err(|e| io_err(&e))?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn get_u64<R: Read>(r: &mut R) -> Result<u64, TransportError> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).map_err(|e| io_err(&e))?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn get_f64<R: Read>(r: &mut R) -> Result<f64, TransportError> {
+    Ok(f64::from_bits(get_u64(r)?))
+}
+
+fn check_magic<R: Read>(r: &mut R, want: u32) -> Result<(), TransportError> {
+    let got = get_u32(r)?;
+    if got != want {
+        return Err(FrameError::BadMagic { got, want }.into());
+    }
+    Ok(())
+}
+
+// --- requests --------------------------------------------------------
+
+pub fn write_request<W: Write>(w: &mut W, req: &Request) -> io::Result<()> {
+    let mut buf = Vec::new();
+    put_u32(&mut buf, REQ_MAGIC);
+    match req {
+        Request::Report {
+            cohort,
+            round,
+            client,
+            spec,
+            deadline_ms,
+            msg,
+        } => {
+            buf.push(KIND_REPORT);
+            put_u64(&mut buf, *cohort);
+            put_u64(&mut buf, *round);
+            put_u32(&mut buf, *client);
+            put_u32(&mut buf, spec.n as u32);
+            put_u32(&mut buf, spec.d as u32);
+            let (tag, param) = spec_to_wire(spec.spec);
+            buf.push(tag);
+            put_u32(&mut buf, param);
+            put_f64(&mut buf, spec.y);
+            put_u64(&mut buf, spec.seed);
+            put_u32(&mut buf, *deadline_ms);
+            w.write_all(&buf)?;
+            return frame::write_frame(w, msg);
+        }
+        Request::Health => buf.push(KIND_HEALTH),
+        Request::Shutdown => buf.push(KIND_SHUTDOWN),
+    }
+    w.write_all(&buf)
+}
+
+pub fn read_request<R: Read>(r: &mut R) -> Result<Request, TransportError> {
+    check_magic(r, REQ_MAGIC)?;
+    match get_u8(r)? {
+        KIND_REPORT => {
+            let cohort = get_u64(r)?;
+            let round = get_u64(r)?;
+            let client = get_u32(r)?;
+            let n = get_u32(r)?;
+            let d = get_u32(r)?;
+            if d > MAX_WIRE_DIM {
+                return Err(FrameError::BadHeader("dimension over wire cap").into());
+            }
+            let tag = get_u8(r)?;
+            let param = get_u32(r)?;
+            let y = get_f64(r)?;
+            let seed = get_u64(r)?;
+            let deadline_ms = get_u32(r)?;
+            let msg = frame::read_frame(r, frame::MAX_FRAME_BYTES)?
+                .ok_or(FrameError::BadHeader("report missing payload frame"))?;
+            Ok(Request::Report {
+                cohort,
+                round,
+                client,
+                spec: CohortSpec {
+                    n: n as usize,
+                    d: d as usize,
+                    spec: spec_from_wire(tag, param)?,
+                    y,
+                    seed,
+                },
+                deadline_ms,
+                msg,
+            })
+        }
+        KIND_HEALTH => Ok(Request::Health),
+        KIND_SHUTDOWN => Ok(Request::Shutdown),
+        _ => Err(FrameError::BadHeader("unknown request kind").into()),
+    }
+}
+
+// --- responses -------------------------------------------------------
+
+pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> io::Result<()> {
+    let mut buf = Vec::new();
+    put_u32(&mut buf, RESP_MAGIC);
+    match resp {
+        Response::Estimate {
+            received,
+            expected,
+            partial,
+            estimate,
+        } => {
+            buf.push(KIND_ESTIMATE);
+            put_u32(&mut buf, *received);
+            put_u32(&mut buf, *expected);
+            buf.push(u8::from(*partial));
+            put_u32(&mut buf, estimate.len() as u32);
+            for &v in estimate {
+                put_f64(&mut buf, v);
+            }
+        }
+        Response::Error(reason) => {
+            buf.push(KIND_ERROR);
+            let bytes = reason.as_bytes();
+            put_u32(&mut buf, bytes.len() as u32);
+            buf.extend_from_slice(bytes);
+        }
+        Response::Stats(stats) => {
+            buf.push(KIND_STATS);
+            put_u32(&mut buf, stats.len() as u32);
+            for s in stats {
+                put_u64(&mut buf, s.cohort);
+                put_u64(&mut buf, s.rounds_completed);
+                put_u64(&mut buf, s.rounds_partial);
+                put_u64(&mut buf, s.reports);
+                put_u64(&mut buf, s.bits_in);
+                put_u64(&mut buf, s.bits_out);
+                put_u32(&mut buf, s.open_rounds);
+            }
+        }
+        Response::Ok => buf.push(KIND_OK),
+    }
+    w.write_all(&buf)
+}
+
+pub fn read_response<R: Read>(r: &mut R) -> Result<Response, TransportError> {
+    check_magic(r, RESP_MAGIC)?;
+    match get_u8(r)? {
+        KIND_ESTIMATE => {
+            let received = get_u32(r)?;
+            let expected = get_u32(r)?;
+            let partial = get_u8(r)? != 0;
+            let d = get_u32(r)?;
+            if d > MAX_WIRE_DIM {
+                return Err(FrameError::BadHeader("dimension over wire cap").into());
+            }
+            let mut estimate = Vec::with_capacity(d as usize);
+            for _ in 0..d {
+                estimate.push(get_f64(r)?);
+            }
+            Ok(Response::Estimate {
+                received,
+                expected,
+                partial,
+                estimate,
+            })
+        }
+        KIND_ERROR => {
+            let len = get_u32(r)?;
+            if len > 1 << 20 {
+                return Err(FrameError::BadHeader("error string over wire cap").into());
+            }
+            let mut bytes = vec![0u8; len as usize];
+            r.read_exact(&mut bytes).map_err(|e| io_err(&e))?;
+            Ok(Response::Error(String::from_utf8_lossy(&bytes).into_owned()))
+        }
+        KIND_STATS => {
+            let count = get_u32(r)?;
+            if count > 1 << 20 {
+                return Err(FrameError::BadHeader("stats count over wire cap").into());
+            }
+            let mut stats = Vec::with_capacity(count as usize);
+            for _ in 0..count {
+                stats.push(CohortStats {
+                    cohort: get_u64(r)?,
+                    rounds_completed: get_u64(r)?,
+                    rounds_partial: get_u64(r)?,
+                    reports: get_u64(r)?,
+                    bits_in: get_u64(r)?,
+                    bits_out: get_u64(r)?,
+                    open_rounds: get_u32(r)?,
+                });
+            }
+            Ok(Response::Stats(stats))
+        }
+        KIND_OK => Ok(Response::Ok),
+        _ => Err(FrameError::BadHeader("unknown response kind").into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn report() -> Request {
+        Request::Report {
+            cohort: 77,
+            round: 3,
+            client: 2,
+            spec: CohortSpec {
+                n: 8,
+                d: 16,
+                spec: CodecSpec::Rlq { q: 32 },
+                y: 4.5,
+                seed: 0xABCD,
+            },
+            deadline_ms: 250,
+            msg: Message {
+                bytes: vec![1, 2, 3, 4, 5],
+                bits: 37,
+            },
+        }
+    }
+
+    #[test]
+    fn request_roundtrip_all_kinds() {
+        for req in [report(), Request::Health, Request::Shutdown] {
+            let mut wire = Vec::new();
+            write_request(&mut wire, &req).unwrap();
+            let got = read_request(&mut Cursor::new(wire)).unwrap();
+            assert_eq!(got, req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_all_kinds() {
+        let responses = [
+            Response::Estimate {
+                received: 3,
+                expected: 8,
+                partial: true,
+                estimate: vec![1.5, -2.25, 0.0, f64::MIN_POSITIVE],
+            },
+            Response::Error("spec mismatch".into()),
+            Response::Stats(vec![CohortStats {
+                cohort: 4,
+                rounds_completed: 10,
+                rounds_partial: 2,
+                reports: 71,
+                bits_in: 12345,
+                bits_out: 64 * 16 * 10,
+                open_rounds: 1,
+            }]),
+            Response::Ok,
+        ];
+        for resp in responses {
+            let mut wire = Vec::new();
+            write_response(&mut wire, &resp).unwrap();
+            let got = read_response(&mut Cursor::new(wire)).unwrap();
+            assert_eq!(got, resp);
+        }
+    }
+
+    #[test]
+    fn all_codec_specs_survive_the_wire() {
+        let specs = [
+            CodecSpec::Lq { q: 7 },
+            CodecSpec::Rlq { q: 9 },
+            CodecSpec::LqHull { q: 3 },
+            CodecSpec::D4 { q: 5 },
+            CodecSpec::QsgdL2 { q: 15 },
+            CodecSpec::QsgdLinf { q: 31 },
+            CodecSpec::Hadamard { q: 63 },
+            CodecSpec::Vqsgd { reps: 11 },
+            CodecSpec::EfSign,
+            CodecSpec::PowerSgd { rank: 4 },
+            CodecSpec::TernGrad,
+            CodecSpec::TopK { k: 100 },
+            CodecSpec::Full,
+        ];
+        for s in specs {
+            let (tag, param) = spec_to_wire(s);
+            assert_eq!(spec_from_wire(tag, param).unwrap(), s);
+        }
+        assert!(spec_from_wire(200, 0).is_err());
+    }
+
+    #[test]
+    fn corrupt_records_rejected_not_panicked() {
+        // Wrong magic.
+        let mut wire = Vec::new();
+        write_request(&mut wire, &Request::Health).unwrap();
+        wire[0] ^= 0xFF;
+        match read_request(&mut Cursor::new(wire)) {
+            Err(TransportError::BadFrame(FrameError::BadMagic { want, .. })) => {
+                assert_eq!(want, REQ_MAGIC)
+            }
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+        // Truncated mid-header.
+        let mut wire = Vec::new();
+        write_request(&mut wire, &report()).unwrap();
+        wire.truncate(17);
+        assert!(read_request(&mut Cursor::new(wire)).is_err());
+        // Unknown kinds.
+        let mut wire = Vec::new();
+        put_u32(&mut wire, REQ_MAGIC);
+        wire.push(99);
+        assert!(read_request(&mut Cursor::new(wire)).is_err());
+        let mut wire = Vec::new();
+        put_u32(&mut wire, RESP_MAGIC);
+        wire.push(99);
+        assert!(read_response(&mut Cursor::new(wire)).is_err());
+    }
+}

@@ -64,6 +64,14 @@ impl PacketArena {
         self.packets += 1;
     }
 
+    /// The raw framed bytes — exactly the byte stream a TCP transport
+    /// carries for the same packets ([`crate::net::frame`] reuses this
+    /// format verbatim; the equivalence is pinned by
+    /// `frame_bytes_match_packet_arena`).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
     /// Sequential reader over the framed packets.
     pub fn reader(&self) -> PacketReader<'_> {
         PacketReader {

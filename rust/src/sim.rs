@@ -12,83 +12,130 @@
 //! Machines run as real OS threads (`Cluster::run`), so protocol code is
 //! written exactly as it would be against a network stack; there is no
 //! global scheduler to accidentally serialize a protocol bug away.
+//!
+//! This cluster is also the *reference implementation* of the
+//! [`crate::net`] transport layer: [`Endpoint`] implements
+//! [`TransportEndpoint`] and [`Cluster`] implements
+//! [`crate::net::Transport`], and protocol code generic over those
+//! traits is bit-identical here to the hardwired legacy methods (the
+//! parity suite runs both). Two API surfaces coexist on [`Endpoint`]:
+//!
+//! - the **legacy infallible surface** (`send`/`recv`/`recv_from` with a
+//!   caller-owned stash) kept verbatim for the sequential reference
+//!   drivers in `tests/session_parity.rs` — it panics on a dead cluster;
+//! - the **fallible surface** (`try_send`/`try_recv`/`try_recv_from`
+//!   plus the trait impl) which returns [`TransportError`] and manages
+//!   an internal per-peer FIFO [`Stash`].
+//!
+//! Don't interleave the two receive disciplines on one endpoint: each
+//! tracks its own stash. All production paths use the fallible surface.
 
-use crate::quant::Message;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use crate::net::{Stash, TransportError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::Duration;
 
-/// A routed packet.
-#[derive(Debug)]
-pub struct Packet {
-    pub from: usize,
-    pub msg: Message,
-}
-
-/// Shared per-machine traffic counters.
-#[derive(Debug, Default)]
-pub struct Meter {
-    pub sent_bits: AtomicU64,
-    pub recv_bits: AtomicU64,
-    pub sent_msgs: AtomicU64,
-    pub recv_msgs: AtomicU64,
-}
-
-/// Traffic snapshot for reporting.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub struct Traffic {
-    pub sent_bits: u64,
-    pub recv_bits: u64,
-    pub sent_msgs: u64,
-    pub recv_msgs: u64,
-}
-
-impl Traffic {
-    pub fn total_bits(&self) -> u64 {
-        self.sent_bits + self.recv_bits
-    }
-
-    /// Add another snapshot's counts into this one (the batch round
-    /// plane prefix-sums per-slot tallies into cumulative snapshots).
-    pub fn accumulate(&mut self, other: &Traffic) {
-        self.sent_bits += other.sent_bits;
-        self.recv_bits += other.recv_bits;
-        self.sent_msgs += other.sent_msgs;
-        self.recv_msgs += other.recv_msgs;
-    }
-}
+pub use crate::net::{summarize, Meter, Packet, Traffic, TrafficSummary};
+use crate::net::{Transport, TransportEndpoint};
+use crate::quant::Message;
 
 /// One machine's handle onto the cluster network.
 pub struct Endpoint {
     pub id: usize,
     pub n: usize,
     rx: Receiver<Packet>,
-    txs: Vec<Sender<Packet>>,
+    /// Senders to every peer; the self slot is `None` so an endpoint
+    /// never keeps its own receiver alive (a machine blocked in `recv`
+    /// sees `Shutdown` once every *peer* is gone, instead of deadlocking
+    /// on its own sender clone).
+    txs: Vec<Option<Sender<Packet>>>,
     meters: Arc<Vec<Meter>>,
+    stash: Stash,
 }
 
 impl Endpoint {
-    /// Send `msg` to machine `to`, metering both sides.
-    pub fn send(&self, to: usize, msg: Message) {
+    // ---- fallible surface (the transport contract) -------------------
+
+    /// Send `msg` to machine `to`, metering both sides. The meters are
+    /// charged before delivery is attempted — a send to a dead peer is
+    /// still a send, matching what a socket transport can observe.
+    pub fn try_send(&self, to: usize, msg: Message) -> Result<(), TransportError> {
         assert_ne!(to, self.id, "no self-sends");
         let bits = msg.bits;
-        self.meters[self.id].sent_bits.fetch_add(bits, Ordering::Relaxed);
-        self.meters[self.id].sent_msgs.fetch_add(1, Ordering::Relaxed);
-        self.meters[to].recv_bits.fetch_add(bits, Ordering::Relaxed);
-        self.meters[to].recv_msgs.fetch_add(1, Ordering::Relaxed);
+        self.meters[self.id].note_sent(bits);
+        self.meters[to].note_recv(bits);
         self.txs[to]
+            .as_ref()
+            .expect("self slot is the only None")
             .send(Packet { from: self.id, msg })
-            .expect("peer hung up");
+            .map_err(|_| TransportError::PeerClosed { peer: to })
+    }
+
+    /// Blocking receive of the next packet: oldest internally-stashed
+    /// packet first, then the channel. `Shutdown` once every peer's
+    /// endpoint has been dropped.
+    pub fn try_recv(&mut self) -> Result<Packet, TransportError> {
+        if let Some(p) = self.stash.pop_earliest() {
+            return Ok(p);
+        }
+        self.rx.recv().map_err(|_| TransportError::Shutdown)
+    }
+
+    /// Blocking receive from the specific peer `from`; packets from
+    /// other peers are stashed (per-peer FIFO, O(1) per packet).
+    pub fn try_recv_from(&mut self, from: usize) -> Result<Packet, TransportError> {
+        if let Some(p) = self.stash.pop_from(from) {
+            return Ok(p);
+        }
+        loop {
+            let p = self.rx.recv().map_err(|_| TransportError::Shutdown)?;
+            if p.from == from {
+                return Ok(p);
+            }
+            self.stash.push(p);
+        }
+    }
+
+    /// Like [`Endpoint::try_recv`], but gives up after `timeout`.
+    pub fn try_recv_timeout(&mut self, timeout: Duration) -> Result<Packet, TransportError> {
+        if let Some(p) = self.stash.pop_earliest() {
+            return Ok(p);
+        }
+        self.rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => TransportError::Timeout { peer: None },
+            RecvTimeoutError::Disconnected => TransportError::Shutdown,
+        })
+    }
+
+    // ---- legacy infallible surface (reference drivers) ---------------
+
+    /// Send `msg` to machine `to`, metering both sides.
+    ///
+    /// Legacy surface: panics if the peer is gone. Production paths use
+    /// [`Endpoint::try_send`].
+    pub fn send(&self, to: usize, msg: Message) {
+        self.try_send(to, msg)
+            .unwrap_or_else(|e| panic!("in-process transport: {e}"));
     }
 
     /// Blocking receive of the next packet from anyone.
+    ///
+    /// Legacy surface: reads the channel only (ignores the internal
+    /// stash) and panics once the cluster is gone.
     pub fn recv(&self) -> Packet {
-        self.rx.recv().expect("cluster shut down")
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| panic!("in-process transport: {}", TransportError::Shutdown))
     }
 
     /// Blocking receive of the next packet from a specific peer
-    /// (out-of-order packets from other peers are queued and re-delivered
-    /// in arrival order by subsequent calls).
+    /// (out-of-order packets from other peers are queued in the
+    /// caller-owned `stash` and re-delivered in arrival order by
+    /// subsequent calls).
+    ///
+    /// Legacy surface for the sequential reference drivers, which share
+    /// one stash across endpoints; the trait surface keeps an internal
+    /// per-peer FIFO instead.
     pub fn recv_from(&mut self, from: usize, stash: &mut Vec<Packet>) -> Packet {
         if let Some(pos) = stash.iter().position(|p| p.from == from) {
             return stash.remove(pos);
@@ -109,6 +156,36 @@ impl Endpoint {
                 self.send(to, msg.clone());
             }
         }
+    }
+}
+
+impl TransportEndpoint for Endpoint {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn send(&mut self, to: usize, msg: Message) -> Result<(), TransportError> {
+        self.try_send(to, msg)
+    }
+
+    fn recv(&mut self) -> Result<Packet, TransportError> {
+        self.try_recv()
+    }
+
+    fn recv_from(&mut self, from: usize) -> Result<Packet, TransportError> {
+        self.try_recv_from(from)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Packet, TransportError> {
+        self.try_recv_timeout(timeout)
+    }
+
+    fn traffic(&self) -> Traffic {
+        self.meters[self.id].snapshot()
     }
 }
 
@@ -142,8 +219,13 @@ impl Cluster {
                 id,
                 n,
                 rx,
-                txs: txs.clone(),
+                txs: txs
+                    .iter()
+                    .enumerate()
+                    .map(|(to, tx)| (to != id).then(|| tx.clone()))
+                    .collect(),
                 meters: self.meters.clone(),
+                stash: Stash::new(n),
             })
             .collect()
     }
@@ -173,17 +255,42 @@ impl Cluster {
             .collect()
     }
 
-    /// Traffic snapshot per machine.
-    pub fn traffic(&self) -> Vec<Traffic> {
-        self.meters
-            .iter()
-            .map(|m| Traffic {
-                sent_bits: m.sent_bits.load(Ordering::Relaxed),
-                recv_bits: m.recv_bits.load(Ordering::Relaxed),
-                sent_msgs: m.sent_msgs.load(Ordering::Relaxed),
-                recv_msgs: m.recv_msgs.load(Ordering::Relaxed),
+    /// Graceful-shutdown variant of [`Cluster::run`]: each machine
+    /// returns a `Result`, and a machine that panics yields
+    /// `Err(WorkerPanicked)` in its slot instead of poisoning the whole
+    /// process. Surviving machines observe a dead peer as
+    /// `Err(PeerClosed)` from `try_send` (or `Timeout`/`Shutdown` from
+    /// the receive side) and can unwind cleanly.
+    pub fn try_run<T, F>(&self, f: F) -> Vec<Result<T, TransportError>>
+    where
+        T: Send + 'static,
+        F: Fn(Endpoint) -> Result<T, TransportError> + Send + Sync + 'static,
+    {
+        let endpoints = self.endpoints();
+        let f = Arc::new(f);
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                let f = f.clone();
+                std::thread::Builder::new()
+                    .name(format!("machine-{}", ep.id))
+                    .spawn(move || f(ep))
+                    .expect("spawn")
+            })
+            .collect();
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(machine, h)| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(TransportError::WorkerPanicked { machine }),
             })
             .collect()
+    }
+
+    /// Traffic snapshot per machine.
+    pub fn traffic(&self) -> Vec<Traffic> {
+        self.meters.iter().map(|m| m.snapshot()).collect()
     }
 
     /// Fold externally-metered traffic into the per-machine counters —
@@ -192,6 +299,7 @@ impl Cluster {
     pub fn add_traffic(&self, extra: &[Traffic]) {
         assert_eq!(extra.len(), self.n);
         for (m, t) in self.meters.iter().zip(extra) {
+            use std::sync::atomic::Ordering;
             m.sent_bits.fetch_add(t.sent_bits, Ordering::Relaxed);
             m.recv_bits.fetch_add(t.recv_bits, Ordering::Relaxed);
             m.sent_msgs.fetch_add(t.sent_msgs, Ordering::Relaxed);
@@ -201,6 +309,7 @@ impl Cluster {
 
     /// Reset counters between rounds.
     pub fn reset_traffic(&self) {
+        use std::sync::atomic::Ordering;
         for m in self.meters.iter() {
             m.sent_bits.store(0, Ordering::Relaxed);
             m.recv_bits.store(0, Ordering::Relaxed);
@@ -210,25 +319,19 @@ impl Cluster {
     }
 }
 
-/// Summary statistics over per-machine traffic (the paper reports the
-/// worst machine and the mean).
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub struct TrafficSummary {
-    pub max_sent: u64,
-    pub max_recv: u64,
-    pub mean_sent: f64,
-    pub mean_recv: f64,
-    pub max_total: u64,
-}
+impl Transport for Cluster {
+    type Endpoint = Endpoint;
 
-pub fn summarize(traffic: &[Traffic]) -> TrafficSummary {
-    let n = traffic.len().max(1) as f64;
-    TrafficSummary {
-        max_sent: traffic.iter().map(|t| t.sent_bits).max().unwrap_or(0),
-        max_recv: traffic.iter().map(|t| t.recv_bits).max().unwrap_or(0),
-        mean_sent: traffic.iter().map(|t| t.sent_bits).sum::<u64>() as f64 / n,
-        mean_recv: traffic.iter().map(|t| t.recv_bits).sum::<u64>() as f64 / n,
-        max_total: traffic.iter().map(|t| t.total_bits()).max().unwrap_or(0),
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn open(&mut self) -> Result<Vec<Endpoint>, TransportError> {
+        Ok(self.endpoints())
+    }
+
+    fn traffic(&self) -> Vec<Traffic> {
+        Cluster::traffic(self)
     }
 }
 
@@ -312,6 +415,47 @@ mod tests {
         assert_eq!(results[0], (22, 11));
     }
 
+    /// Delivery-order pin for the trait surface's internal per-peer
+    /// stash: packets from one sender are delivered strictly in send
+    /// order even when receives interleave peers, and `recv()` drains
+    /// stashed packets in global arrival order before the channel.
+    #[test]
+    fn trait_recv_from_preserves_per_peer_fifo() {
+        let cluster = Cluster::new(3);
+        let results = cluster.try_run(|mut ep| {
+            match ep.id {
+                0 => {
+                    // Wait on peer 2 first, forcing 1's burst to stash;
+                    // then drain 1 and assert its FIFO order survived.
+                    let first = ep.try_recv_from(2)?.msg.bits;
+                    let mut order = vec![first];
+                    for _ in 0..3 {
+                        order.push(ep.try_recv_from(1)?.msg.bits);
+                    }
+                    // 2's second packet is still stashed; plain recv
+                    // must surface it (arrival order) without blocking.
+                    order.push(ep.try_recv()?.msg.bits);
+                    Ok(order)
+                }
+                1 => {
+                    for bits in [10, 11, 12] {
+                        ep.try_send(0, msg(bits))?;
+                    }
+                    Ok(vec![])
+                }
+                _ => {
+                    ep.try_send(0, msg(20))?;
+                    ep.try_send(0, msg(21))?;
+                    Ok(vec![])
+                }
+            }
+        });
+        let order = results[0].as_ref().expect("machine 0 clean");
+        assert_eq!(order[0], 20);
+        assert_eq!(&order[1..4], &[10, 11, 12], "per-peer FIFO violated");
+        assert_eq!(order[4], 21);
+    }
+
     #[test]
     fn reset_traffic_clears() {
         let cluster = Cluster::new(2);
@@ -324,5 +468,61 @@ mod tests {
         });
         cluster.reset_traffic();
         assert_eq!(cluster.traffic()[0].sent_bits, 0);
+    }
+
+    /// Graceful shutdown: a peer dropping its endpoint surfaces as a
+    /// typed error on the survivors, and a panicking machine yields
+    /// `WorkerPanicked` in its slot without poisoning the process.
+    #[test]
+    fn try_run_survives_dead_and_panicking_peers() {
+        let cluster = Cluster::new(3);
+        let results = cluster.try_run(|mut ep| match ep.id {
+            0 => {
+                // Machine 1 announces itself, then drops. Sends to it
+                // must eventually fail PeerClosed rather than panic.
+                ep.try_recv_from(1)?;
+                for _ in 0..10_000 {
+                    if let Err(e) = ep.try_send(1, msg(8)) {
+                        assert_eq!(e, TransportError::PeerClosed { peer: 1 });
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                panic!("send to dead peer never failed");
+            }
+            1 => {
+                ep.try_send(0, msg(8))?;
+                Ok(()) // returns early; endpoint drops
+            }
+            _ => panic!("injected machine panic"),
+        });
+        assert_eq!(results[0], Err(TransportError::PeerClosed { peer: 1 }));
+        assert_eq!(results[1], Ok(()));
+        assert_eq!(results[2], Err(TransportError::WorkerPanicked { machine: 2 }));
+    }
+
+    /// A receive deadline elapses as `Timeout`, not a hang, when the
+    /// awaited peer never sends.
+    #[test]
+    fn recv_timeout_elapses_cleanly() {
+        let cluster = Cluster::new(2);
+        let results = cluster.try_run(|mut ep| {
+            if ep.id == 0 {
+                let r = match ep.try_recv_timeout(Duration::from_millis(20)) {
+                    Err(TransportError::Timeout { .. }) => Ok(true),
+                    other => panic!("expected Timeout, got {other:?}"),
+                };
+                // Unblock the peer so it can exit.
+                ep.try_send(1, msg(1))?;
+                r
+            } else {
+                // Stay alive (blocked on a packet that arrives only
+                // after the deadline fired) so machine 0 observes a
+                // Timeout rather than a whole-cluster Shutdown.
+                ep.try_recv()?;
+                Ok(false)
+            }
+        });
+        assert_eq!(results[0], Ok(true));
     }
 }

@@ -3,11 +3,13 @@
 //! path) or *boundedly* (plain lattice path) — never silently corrupt
 //! beyond its documented envelopes.
 
-use dme::coordinator::{variance_reduction_star, CodecSpec};
+use dme::coordinator::{star_round_over, variance_reduction_star, CodecSpec};
 use dme::linalg::{dist2, dist_inf, mean_vecs};
+use dme::net::TransportError;
 use dme::quant::robust::{RobustAgreement, RobustOutcome};
 use dme::quant::{LatticeQuantizer, VectorCodec};
 use dme::rng::Rng;
+use dme::sim::Cluster;
 
 /// Corrupting color bits moves the decode to a *different lattice point*
 /// of the same lattice — the error is quantized (a multiple of s), never
@@ -120,6 +122,69 @@ fn vr_star_reduction_works() {
     assert!(out_err < in_err / 4.0, "in {in_err} out {out_err}");
     let out = variance_reduction_star(&inputs, &CodecSpec::Lq { q: 1024 }, sigma, 4.0, 7, 99);
     assert!(dist2(out.estimate(), &mu) < 0.05);
+}
+
+/// A machine dying mid-protocol surfaces as a typed [`TransportError`]
+/// on the survivors — the graceful-shutdown path — instead of poisoning
+/// the process the way the legacy `expect("peer hung up")` panics did.
+#[test]
+fn dead_leader_degrades_to_transport_error_not_panic() {
+    let n = 4;
+    let d = 16;
+    let seed = 21;
+    let spec = CodecSpec::Lq { q: 16 };
+    // Learn round 0's shared-randomness leader from a clean run.
+    let probe = vec![1.0f64; d];
+    let leader = {
+        let p = probe.clone();
+        let results = Cluster::new(n).try_run(move |mut ep| {
+            star_round_over(&mut ep, spec, seed, 0, 1.0, &p, false)
+        });
+        results[0].as_ref().expect("clean round").leader
+    };
+    // Fresh cluster, same round — but the leader's machine drops its
+    // endpoint before the round starts (a barrier makes the death
+    // happen-before every survivor's first send, so the failure mode is
+    // deterministic: try_send to a closed channel).
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(n));
+    let results = Cluster::new(n).try_run(move |mut ep| {
+        if ep.id == leader {
+            drop(ep);
+            barrier.wait();
+            return Ok(Vec::new());
+        }
+        barrier.wait();
+        star_round_over(&mut ep, spec, seed, 0, 1.0, &probe, false).map(|r| r.output)
+    });
+    // The dead machine exited cleanly; every survivor observed exactly
+    // PeerClosed{leader} — and the process is still alive to assert it.
+    for (m, r) in results.iter().enumerate() {
+        if m == leader {
+            assert_eq!(r.as_ref().unwrap().len(), 0);
+        } else {
+            assert_eq!(
+                r.as_ref().unwrap_err(),
+                &TransportError::PeerClosed { peer: leader },
+                "machine {m}"
+            );
+        }
+    }
+}
+
+/// A panicking machine is reported as `WorkerPanicked` by `try_run`,
+/// with every other machine's result still delivered.
+#[test]
+fn panicking_machine_is_reported_not_propagated() {
+    let cluster = Cluster::new(3);
+    let results = cluster.try_run(|ep| {
+        if ep.id == 1 {
+            panic!("injected fault");
+        }
+        Ok(ep.id)
+    });
+    assert_eq!(results[0], Ok(0));
+    assert_eq!(results[1], Err(TransportError::WorkerPanicked { machine: 1 }));
+    assert_eq!(results[2], Ok(2));
 }
 
 /// Zero and constant vectors round-trip through every lattice codec.

@@ -1,0 +1,439 @@
+//! Transport-layer integration suite.
+//!
+//! The load-bearing claims pinned here:
+//!
+//! 1. **Loopback-TCP parity** — `star_round_over` / `vr_round_over` run
+//!    over a real `127.0.0.1` mesh produce bit-identical estimates,
+//!    leader diagnostics *and per-machine metered traffic* to the same
+//!    code over the in-process channel reference, and to the
+//!    `DmeSession` in-process round at the same `(seed, round, y)`.
+//! 2. **Service correctness** — a partial k-of-n round renormalizes by
+//!    `1/k` and matches a hand-computed decode-and-average reference
+//!    exactly; malformed bytes get a typed error response, never a
+//!    panic or a desynchronized accept loop.
+//! 3. **Scale** — one service process multiplexes 256 concurrent open
+//!    cohort rounds, closing dropout cohorts at their deadline with the
+//!    renormalized partial mean and full cohorts with the k = n mean.
+
+use dme::coordinator::{star_round_over, vr_round_over, CodecSpec, DmeBuilder, StarRoundReport};
+use dme::net::cohort::{client_encoder_rng, cohort_codec, CohortSpec};
+use dme::net::service::{fetch_stats, report_round, serve, EstimateOut, ServeOpts};
+use dme::net::tcp::{LoopbackMesh, TcpOpts};
+use dme::net::wire::{read_response, write_request, Request, Response};
+use dme::net::{Traffic, Transport};
+use dme::rng::Rng;
+use dme::sim::Cluster;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+fn gen_inputs(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| 5.0 + rng.uniform(-0.4, 0.4)).collect())
+        .collect()
+}
+
+/// Drive `rounds` star (or VR, when `sigma_alpha` is set) rounds over
+/// every endpoint of a transport, one thread per machine — the exact
+/// same protocol code regardless of transport. Returns per-machine
+/// round reports and final traffic snapshots, in machine order.
+#[allow(clippy::too_many_arguments)]
+fn run_rounds<T>(
+    transport: &mut T,
+    spec: CodecSpec,
+    seed: u64,
+    y: f64,
+    rounds: u64,
+    inputs: &[Vec<f64>],
+    collect: bool,
+    sigma_alpha: Option<(f64, f64)>,
+) -> (Vec<Vec<StarRoundReport>>, Vec<Traffic>)
+where
+    T: Transport,
+    T::Endpoint: 'static,
+{
+    let eps = transport.open().expect("open transport");
+    let handles: Vec<_> = eps
+        .into_iter()
+        .zip(inputs.to_vec())
+        .map(|(mut ep, x)| {
+            thread::spawn(move || {
+                let reports: Vec<StarRoundReport> = (0..rounds)
+                    .map(|r| match sigma_alpha {
+                        None => star_round_over(&mut ep, spec, seed, r, y, &x, collect)
+                            .expect("star round"),
+                        Some((sigma, alpha)) => {
+                            vr_round_over(&mut ep, spec, seed, r, sigma, alpha, &x, collect)
+                                .expect("vr round")
+                        }
+                    })
+                    .collect();
+                let t = ep.traffic();
+                (reports, t)
+            })
+        })
+        .collect();
+    let mut reports = Vec::new();
+    let mut traffic = Vec::new();
+    for h in handles {
+        let (r, t) = h.join().expect("machine thread");
+        reports.push(r);
+        traffic.push(t);
+    }
+    (reports, traffic)
+}
+
+fn assert_reports_identical(a: &[Vec<StarRoundReport>], b: &[Vec<StarRoundReport>]) {
+    assert_eq!(a.len(), b.len());
+    for (m, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.len(), rb.len());
+        for (r, (x, y)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(x.leader, y.leader, "machine {m} round {r}: leader");
+            assert_eq!(x.output, y.output, "machine {m} round {r}: estimate");
+            assert_eq!(x.spread, y.spread, "machine {m} round {r}: spread");
+            assert_eq!(
+                x.decoded_at_leader, y.decoded_at_leader,
+                "machine {m} round {r}: leader diagnostics"
+            );
+        }
+    }
+}
+
+/// Tentpole parity: the identical protocol body over in-process channels
+/// and over a loopback TCP mesh — estimates, diagnostics and metered
+/// bits all bit-identical, and both equal to the in-process session.
+#[test]
+fn loopback_tcp_star_round_matches_in_process_bit_for_bit() {
+    let (n, d, seed, y) = (5, 48, 41, 1.0);
+    let spec = CodecSpec::Lq { q: 32 };
+    let inputs = gen_inputs(n, d, 7);
+
+    let mut cluster = Cluster::new(n);
+    let (sim_reports, sim_traffic) =
+        run_rounds(&mut cluster, spec, seed, y, 3, &inputs, true, None);
+
+    let mut mesh = LoopbackMesh::new(n, &TcpOpts::default()).expect("mesh up");
+    let (tcp_reports, tcp_traffic) = run_rounds(&mut mesh, spec, seed, y, 3, &inputs, true, None);
+
+    assert_reports_identical(&sim_reports, &tcp_reports);
+    assert_eq!(sim_traffic, tcp_traffic, "metered per-machine traffic");
+    // Transport::traffic agrees with what the endpoints reported.
+    assert_eq!(cluster.traffic(), sim_traffic);
+    assert_eq!(mesh.traffic(), tcp_traffic);
+    // All machines agree within a round, and the leader collected n
+    // decoded vectors (collect=true).
+    for round in 0..3 {
+        let est = &sim_reports[0][round].output;
+        for m in 1..n {
+            assert_eq!(&sim_reports[m][round].output, est);
+        }
+        let leader = sim_reports[0][round].leader;
+        assert_eq!(sim_reports[leader][round].decoded_at_leader.len(), n);
+        assert!(sim_reports[leader][round].spread.is_some());
+    }
+
+    // The extracted public round equals the session's in-process round.
+    let mut sess = DmeBuilder::new(n, d).codec(spec).seed(seed).build();
+    let out = sess.round_with_y(&inputs, y);
+    assert_eq!(
+        out.estimate, sim_reports[0][0].output,
+        "star_round_over must reproduce the session round"
+    );
+}
+
+#[test]
+fn loopback_tcp_vr_round_matches_in_process_bit_for_bit() {
+    let (n, d, seed) = (4, 32, 99);
+    let spec = CodecSpec::Lq { q: 64 };
+    let (sigma, alpha) = (0.5, 4.0);
+    let inputs = gen_inputs(n, d, 13);
+
+    let mut cluster = Cluster::new(n);
+    let (sim_reports, sim_traffic) =
+        run_rounds(&mut cluster, spec, seed, 0.0, 2, &inputs, false, Some((sigma, alpha)));
+
+    let mut mesh = LoopbackMesh::new(n, &TcpOpts::default()).expect("mesh up");
+    let (tcp_reports, tcp_traffic) =
+        run_rounds(&mut mesh, spec, seed, 0.0, 2, &inputs, false, Some((sigma, alpha)));
+
+    assert_reports_identical(&sim_reports, &tcp_reports);
+    assert_eq!(sim_traffic, tcp_traffic, "metered per-machine traffic");
+}
+
+fn spawn_server(opts: ServeOpts) -> (String, thread::JoinHandle<dme::net::service::ServeSummary>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let h = thread::spawn(move || serve(listener, opts).expect("serve"));
+    (addr, h)
+}
+
+/// Decode-and-average reference for a cohort round, built from the same
+/// shared convention the clients and server use. Fold order is the
+/// submission order; for k = 2 the sum is order-independent exactly
+/// (two-term IEEE addition is commutative).
+fn reference_mean(cs: &CohortSpec, round: u64, reports: &[(usize, &[f64])]) -> Vec<f64> {
+    let codec = cohort_codec(cs, round);
+    let zeros = vec![0.0; cs.d];
+    let mut acc = vec![0.0; cs.d];
+    for &(client, x) in reports {
+        let mut rng = client_encoder_rng(cs.seed, round, client);
+        let mut enc = cohort_codec(cs, round);
+        let msg = enc.encode(x, &mut rng);
+        codec.decode_accumulate_into(&msg, &zeros, 1.0, &mut acc);
+    }
+    let inv_k = 1.0 / reports.len() as f64;
+    acc.iter().map(|&a| inv_k * a).collect()
+}
+
+/// Satellite: k-of-n partial participation over real TCP — 2 of 4
+/// clients report, the deadline closes the round, and the delivered
+/// estimate equals the hand-computed renormalized reference exactly.
+#[test]
+fn service_partial_round_matches_hand_computed_reference() {
+    let (addr, server) = spawn_server(ServeOpts {
+        max_rounds: Some(1),
+        ..ServeOpts::default()
+    });
+    let cs = CohortSpec {
+        n: 4,
+        d: 12,
+        spec: CodecSpec::Lq { q: 64 },
+        y: 8.0,
+        seed: 3,
+    };
+    let x0 = vec![3.5; 12];
+    let x2 = vec![-1.5; 12];
+    let reporters: Vec<_> = [(0usize, x0.clone()), (2usize, x2.clone())]
+        .into_iter()
+        .map(|(client, x)| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                report_round(
+                    &addr,
+                    8,
+                    1,
+                    client,
+                    &CohortSpec {
+                        n: 4,
+                        d: 12,
+                        spec: CodecSpec::Lq { q: 64 },
+                        y: 8.0,
+                        seed: 3,
+                    },
+                    &x,
+                    300,
+                    Duration::from_secs(20),
+                )
+                .expect("report")
+            })
+        })
+        .collect();
+    let outs: Vec<EstimateOut> = reporters.into_iter().map(|h| h.join().unwrap()).collect();
+    let summary = server.join().unwrap();
+
+    let want = reference_mean(&cs, 1, &[(0, &x0), (2, &x2)]);
+    for out in &outs {
+        assert_eq!(out.received, 2);
+        assert_eq!(out.expected, 4);
+        assert!(out.partial);
+        assert_eq!(out.estimate, want, "renormalized k-of-n mean, exactly");
+    }
+    // The k=2 mean of 3.5 and -1.5 per coordinate is 1.0.
+    for &v in &outs[0].estimate {
+        assert!((v - 1.0).abs() < 0.3, "partial mean {v} far from 1.0");
+    }
+    assert_eq!(summary.rounds_partial, 1);
+    // Paper accounting: 2 reports in, 2 estimate deliveries of 64·d out.
+    assert_eq!(summary.traffic.recv_msgs, 2);
+    assert_eq!(summary.traffic.sent_bits, 2u64 * 64 * 12);
+}
+
+/// Satellite: corrupt/truncated bytes are answered with a typed error
+/// (or dropped), never a panic — and the service keeps serving after.
+#[test]
+fn service_rejects_garbage_and_truncated_requests() {
+    let (addr, server) = spawn_server(ServeOpts {
+        max_rounds: Some(1),
+        ..ServeOpts::default()
+    });
+    // Garbage magic.
+    {
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(&[0xFF; 32]).unwrap();
+        match read_response(&mut s).expect("error response") {
+            Response::Error(reason) => assert!(reason.contains("magic"), "got: {reason}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+    }
+    // A report truncated mid-payload (short read after write-side close).
+    {
+        let mut wire = Vec::new();
+        write_request(
+            &mut wire,
+            &Request::Report {
+                cohort: 1,
+                round: 0,
+                client: 0,
+                spec: CohortSpec {
+                    n: 2,
+                    d: 8,
+                    spec: CodecSpec::Lq { q: 16 },
+                    y: 4.0,
+                    seed: 0,
+                },
+                deadline_ms: 0,
+                msg: dme::quant::Message {
+                    bytes: vec![7; 40],
+                    bits: 320,
+                },
+            },
+        )
+        .unwrap();
+        wire.truncate(wire.len() - 10);
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(&wire).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        match read_response(&mut s).expect("error response") {
+            Response::Error(reason) => {
+                assert!(reason.contains("short read"), "got: {reason}")
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+    }
+    // The service is still healthy: a real round completes.
+    let cs = CohortSpec {
+        n: 1,
+        d: 4,
+        spec: CodecSpec::Lq { q: 16 },
+        y: 4.0,
+        seed: 0,
+    };
+    let out = report_round(&addr, 2, 0, 0, &cs, &[1.0; 4], 0, Duration::from_secs(10))
+        .expect("round after garbage");
+    assert_eq!(out.received, 1);
+    assert!(!out.partial);
+    server.join().unwrap();
+}
+
+/// Acceptance: ≥ 256 concurrent cohorts multiplexed by one process.
+/// Phase 1 opens all 256 rounds (client 0 of every cohort reports and
+/// parks); a health probe confirms 256 rounds are simultaneously open;
+/// phase 2 completes 224 cohorts (client 1 reports) while the other 32
+/// are dropout cohorts whose deadline closes them with the k=1
+/// renormalized partial mean.
+#[test]
+fn service_multiplexes_256_cohorts_with_deadline_dropout() {
+    const COHORTS: u64 = 256;
+    const DROPOUT_EVERY: u64 = 8; // cohorts 0, 8, 16, … lose client 1
+    let (addr, server) = spawn_server(ServeOpts {
+        max_rounds: Some(COHORTS),
+        default_deadline_ms: 60_000,
+        ..ServeOpts::default()
+    });
+    let cs = |seed: u64| CohortSpec {
+        n: 2,
+        d: 8,
+        spec: CodecSpec::Lq { q: 64 },
+        y: 8.0,
+        seed,
+    };
+    let spawn_reporter = |cohort: u64, client: usize, deadline_ms: u32| {
+        let addr = addr.clone();
+        thread::Builder::new()
+            .stack_size(128 * 1024)
+            .spawn(move || {
+                let x = vec![cohort as f64 * 0.01 + client as f64; 8];
+                report_round(
+                    &addr,
+                    cohort,
+                    0,
+                    client,
+                    &cs(cohort),
+                    &x,
+                    deadline_ms,
+                    Duration::from_secs(60),
+                )
+                .expect("report")
+            })
+            .expect("spawn reporter")
+    };
+
+    // Phase 1: every cohort's client 0 reports. Dropout cohorts carry a
+    // short deadline; the rest effectively never expire on their own.
+    let phase1: Vec<_> = (0..COHORTS)
+        .map(|c| {
+            let deadline = if c % DROPOUT_EVERY == 0 { 3_000 } else { 0 };
+            spawn_reporter(c, 0, deadline)
+        })
+        .collect();
+
+    // All 256 rounds must be open *concurrently* before anything closes
+    // (if a dropout deadline fired early, `open` could never reach 256
+    // and the loop would time out).
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let stats = fetch_stats(&addr, Duration::from_secs(5)).expect("health");
+        let open: u64 = stats.iter().map(|s| u64::from(s.open_rounds)).sum();
+        if open == COHORTS {
+            assert_eq!(stats.len() as u64, COHORTS);
+            break;
+        }
+        assert!(Instant::now() < deadline, "only {open}/{COHORTS} rounds open");
+        thread::sleep(Duration::from_millis(10));
+    }
+
+    // Phase 2: client 1 reports everywhere except the dropout cohorts.
+    let phase2: Vec<_> = (0..COHORTS)
+        .filter(|c| c % DROPOUT_EVERY != 0)
+        .map(|c| spawn_reporter(c, 1, 0))
+        .collect();
+
+    let outs1: Vec<EstimateOut> = phase1.into_iter().map(|h| h.join().unwrap()).collect();
+    let outs2: Vec<EstimateOut> = phase2.into_iter().map(|h| h.join().unwrap()).collect();
+    let summary = server.join().unwrap();
+
+    let mut full = 0u64;
+    let mut partial = 0u64;
+    for (c, out) in (0..COHORTS).zip(&outs1) {
+        if c % DROPOUT_EVERY == 0 {
+            // Dropout: deadline-closed, renormalized over k=1 — exactly
+            // the decode of client 0's lone report.
+            assert!(out.partial, "cohort {c} should be partial");
+            assert_eq!(out.received, 1);
+            let x = vec![c as f64 * 0.01; 8];
+            let want = reference_mean(&cs(c), 0, &[(0, &x)]);
+            assert_eq!(out.estimate, want, "cohort {c} k=1 partial mean");
+            partial += 1;
+        } else {
+            // Full: both reports in, mean over k = n = 2 — exact against
+            // the ordered (client 0 first, it opened the round) fold.
+            assert!(!out.partial, "cohort {c} should be full");
+            assert_eq!(out.received, 2);
+            let x0 = vec![c as f64 * 0.01; 8];
+            let x1 = vec![c as f64 * 0.01 + 1.0; 8];
+            let want = reference_mean(&cs(c), 0, &[(0, &x0), (1, &x1)]);
+            assert_eq!(out.estimate, want, "cohort {c} full mean");
+            full += 1;
+        }
+    }
+    assert_eq!((full, partial), (COHORTS - COHORTS / DROPOUT_EVERY, COHORTS / DROPOUT_EVERY));
+    // Phase-2 reporters see the same estimates their cohort's phase-1
+    // reporter saw.
+    for out in &outs2 {
+        assert_eq!(out.received, 2);
+        assert!(!out.partial);
+    }
+    assert_eq!(summary.rounds_completed, COHORTS);
+    assert_eq!(summary.cohorts, COHORTS as usize);
+    assert_eq!(summary.rounds_partial, COHORTS / DROPOUT_EVERY);
+    // Every accepted report was metered inbound; every delivered
+    // estimate charged 64·d outbound (2 recipients for full cohorts, 1
+    // for dropouts).
+    let reports = COHORTS + (COHORTS - COHORTS / DROPOUT_EVERY);
+    assert_eq!(summary.traffic.recv_msgs, reports);
+    assert_eq!(summary.traffic.sent_bits, reports * 64 * 8);
+}
