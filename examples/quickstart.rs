@@ -26,7 +26,15 @@
 //!    streaming and chunk-sharded folds — so head-to-head sweeps cost
 //!    comparator wall-clock proportional to the wire bits, not the
 //!    seed's scalar loops.
-//! 9. Serving cohorts over TCP (`net::service`): a leader-side loop
+//! 9. SIMD lanes and the persistent worker pool (`simd`, `pool`): the
+//!    explicit-lane kernels behind the blocked data plane. Compile with
+//!    `--features simd` to dispatch the FWHT butterflies, stochastic
+//!    rounding, bulk RNG fill, and bit packing to AVX2 at runtime —
+//!    every kernel keeps an always-compiled scalar twin and the outputs
+//!    are bit-identical either way, so the feature changes wall-clock,
+//!    never a wire bit. The chunk kernels of (5)/(6) run on one
+//!    process-wide pool of parked worker threads, spawned once.
+//! 10. Serving cohorts over TCP (`net::service`): a leader-side loop
 //!    multiplexing many independent client groups over real sockets —
 //!    each report is folded straight into the cohort's O(d) accumulator,
 //!    a full round answers every client with the identical estimate, and
@@ -276,7 +284,45 @@ fn main() {
     println!();
 
     // ---------------------------------------------------------------
-    // 9. Serving cohorts over TCP. One `serve` loop owns the leader
+    // 9. SIMD lanes + the persistent worker pool. Everything above
+    //    already ran on them: the FWHT butterflies, stochastic rounding,
+    //    bulk uniform fills, and 64-bit field packing dispatch to
+    //    explicit AVX2 lanes when built with `--features simd` (runtime-
+    //    detected, scalar twin otherwise), and the chunk-parallel
+    //    encode/fold kernels of (5)/(6) ran on one process-wide pool of
+    //    parked workers instead of spawning threads per call. Both are
+    //    pure wall-clock: rebuild with/without `simd`, or resize the
+    //    pool, and every wire bit and estimate above is unchanged
+    //    (pinned by rust/tests/prop.rs).
+    //
+    //    Build variants:
+    //      cargo run --release --example quickstart                  # scalar
+    //      cargo run --release --features simd --example quickstart  # AVX2
+    // ---------------------------------------------------------------
+    println!("== simd lanes + worker pool (quant::simd / pool) ==");
+    println!(
+        "simd feature compiled: {} | active this run: {} | lanes: {}",
+        dme::simd::compiled(),
+        dme::simd::active(),
+        dme::simd::lanes()
+    );
+    // The dispatched kernel and its scalar twin are bit-identical:
+    let xs: Vec<f64> = (0..33).map(|i| (i as f64 * 0.7).sin() * 1e3).collect();
+    let off: Vec<f64> = (0..33).map(|i| (i as f64 * 0.3).cos()).collect();
+    let mut a = vec![0.0; 33];
+    let mut b = vec![0.0; 33];
+    dme::simd::quantize_scaled(&xs, &off, 0.25, &mut a);
+    dme::simd::quantize_scaled_scalar(&xs, &off, 0.25, &mut b);
+    let same = a.iter().zip(&b).all(|(u, v)| u.to_bits() == v.to_bits());
+    println!("dispatched == scalar twin, bit for bit: {same}");
+    println!(
+        "worker pool: {} chunk workers (spawned once, parked between jobs), {} machine leases live\n",
+        dme::pool::ChunkPool::global().size(),
+        dme::pool::spawned_workers()
+    );
+
+    // ---------------------------------------------------------------
+    // 10. Serving cohorts over TCP. One `serve` loop owns the leader
     //    role for every cohort: clients connect, report their encoded
     //    vector for a (cohort, round), and block until the round closes
     //    — either all n reports arrived (full) or the deadline passed

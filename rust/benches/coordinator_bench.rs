@@ -12,8 +12,10 @@
 //! The `fold_bench` section isolates the streaming-fold data plane:
 //! decode-then-sum (legacy leader, O(n·d) buffers + two passes) vs the
 //! fused block-kernel streaming fold (`decode_accumulate_into`, one pass,
-//! O(d)) vs the chunk-sharded parallel fold, at n ∈ {16, 256} and
-//! d ∈ {128, 4096}.
+//! O(d)) vs the chunk-sharded parallel fold — on the persistent
+//! `ChunkPool` and against a per-call scoped-spawn copy of the same
+//! sharding (the pre-pool shape, bit-identical output) — at
+//! n ∈ {16, 256} and d ∈ {128, 4096}.
 //!
 //! The `encode_plane_bench` section is the fold section's write-side
 //! twin: per-machine round encode through the fused block kernels
@@ -365,13 +367,60 @@ fn encode_plane_bench(b: &mut Bencher) {
     }
 }
 
+/// The pre-pool shape of the chunk-sharded fold: scoped threads spawned,
+/// joined and torn down on every call, identical sharding math — the
+/// baseline the persistent-`ChunkPool` row is measured against.
+/// Bit-identical output (each shard depends only on its coordinate
+/// range); only the thread lifecycle differs.
+fn fold_mean_chunked_spawning<C: VectorCodec + Sync>(
+    codec: &C,
+    parts: &[FoldPart],
+    reference: &[f64],
+    out: &mut [f64],
+    chunk: usize,
+) {
+    let align = codec.fold_chunk_align().max(1);
+    let chunk = chunk.max(1).div_ceil(align) * align;
+    let threads = dme::pool::threads();
+    let n_chunks = out.len().div_ceil(chunk).max(1);
+    let group = n_chunks.div_ceil(threads) * chunk;
+    let inv_n = 1.0 / parts.len() as f64;
+    thread::scope(|s| {
+        for (gi, run) in out.chunks_mut(group).enumerate() {
+            s.spawn(move || {
+                for (ci, shard) in run.chunks_mut(chunk).enumerate() {
+                    let lo = gi * group + ci * chunk;
+                    for o in shard.iter_mut() {
+                        *o = 0.0;
+                    }
+                    for part in parts {
+                        match part {
+                            FoldPart::Own(x) => {
+                                dme::linalg::axpy(shard, 1.0, &x[lo..lo + shard.len()])
+                            }
+                            FoldPart::Encoded(msg) => {
+                                codec.decode_accumulate_range(msg, reference, 1.0, lo, shard)
+                            }
+                        }
+                    }
+                    for o in shard.iter_mut() {
+                        *o = inv_n * *o;
+                    }
+                }
+            });
+        }
+    });
+}
+
 /// Leader aggregation data plane: legacy decode-then-sum vs the fused
-/// streaming fold vs the chunk-sharded parallel fold. All three produce
-/// bit-identical estimates (pinned by `coordinator::fold` tests); the
-/// rows measure the cost of materializing n decoded vectors vs folding
-/// the bitstreams directly.
+/// streaming fold vs the chunk-sharded parallel fold. All variants
+/// produce bit-identical estimates (pinned by `coordinator::fold` tests
+/// and the pool-determinism prop tests); the rows measure the cost of
+/// materializing n decoded vectors vs folding the bitstreams directly,
+/// and — between the last two rows — spawn-per-call threads vs the
+/// parked workers of the persistent pool.
 fn fold_bench(b: &mut Bencher) {
-    println!("# fold_bench — decode-then-sum vs streaming fold vs chunk-sharded fold\n");
+    println!("# fold_bench — decode-then-sum vs streaming fold vs chunk-sharded fold (spawn vs pool)\n");
     for n in [16usize, 256] {
         for d in [128usize, 4096] {
             let xs = inputs(n, d, 13);
@@ -420,9 +469,20 @@ fn fold_bench(b: &mut Bencher) {
                 },
             );
 
-            // (c) Chunk-sharded parallel fold (1024-coordinate shards).
+            // (c) Chunk-sharded fold, scoped threads spawned per call
+            // (the pre-pool shape — 1024-coordinate shards).
             b.bench(
-                &format!("fold n={n} d={d} chunk-sharded"),
+                &format!("fold n={n} d={d} chunk spawn-per-call"),
+                Some((n * d) as u64),
+                || {
+                    fold_mean_chunked_spawning(&lq, &parts, &reference, &mut mu, 1024);
+                    mu[0]
+                },
+            );
+
+            // (d) Same shards on the persistent worker pool.
+            b.bench(
+                &format!("fold n={n} d={d} chunk parked pool"),
                 Some((n * d) as u64),
                 || {
                     fold_mean_chunked(&lq, &parts, &reference, &mut mu, 1024);

@@ -17,6 +17,15 @@
 //! scalar encode vs fused `encode_into` vs chunk-parallel
 //! `encode_chunked`, and decode+axpy vs the fused (sparse, for Top-K)
 //! `decode_accumulate_into`, at the same dimensions.
+//!
+//! The `simd_pool_bench` section isolates this PR's two wall-clock
+//! levers, again with every pair bit-identical: the explicit-lane
+//! kernels of `dme::simd` against their always-compiled scalar twins
+//! (run with and without `--features simd` to see the lanes move — the
+//! section header prints which dispatch is live), and the persistent
+//! `ChunkPool` chunk-parallel encode against a per-call scoped-spawn
+//! copy of the same sharding (the pre-pool shape), at d ∈
+//! {128, 4096, 65536}.
 
 use dme::bench::Bencher;
 use dme::coordinator::CodecSpec;
@@ -463,6 +472,153 @@ fn baseline_bench(b: &mut Bencher) {
     }
 }
 
+/// The pre-pool shape of the chunk-parallel encode: scoped threads
+/// spawned, joined and torn down on every call, with the identical
+/// sharding math — the baseline the persistent-pool rows are measured
+/// against. Output is bit-identical to `encode_chunked` (same shards,
+/// same task-order concatenation); only the thread lifecycle differs.
+fn encode_chunked_spawning<C: VectorCodec + Sync>(
+    codec: &mut C,
+    x: &[f64],
+    rng: &mut Rng,
+    out: &mut Message,
+    chunk: usize,
+) {
+    codec.encode_prepare(x, rng);
+    let codec: &C = codec;
+    let d = codec.wire_fields();
+    let align = codec.encode_chunk_align().max(1);
+    let chunk = chunk.max(1).div_ceil(align) * align;
+    let threads = dme::pool::threads();
+    let n_chunks = d.div_ceil(chunk).max(1);
+    let group = n_chunks.div_ceil(threads) * chunk;
+    out.bytes.clear();
+    out.bits = 0;
+    if d <= group {
+        let mut w = BitWriter::reusing(std::mem::take(&mut out.bytes));
+        codec.encode_range(x, 0, d, &mut w);
+        let (bytes, bits) = w.finish();
+        out.bytes = bytes;
+        out.bits = bits;
+        return;
+    }
+    let runs: Vec<(usize, usize)> = (0..d.div_ceil(group))
+        .map(|gi| (gi * group, group.min(d - gi * group)))
+        .collect();
+    let parts: Vec<(Vec<u8>, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = runs
+            .iter()
+            .map(|&(lo, len)| {
+                s.spawn(move || {
+                    let mut w = BitWriter::new();
+                    codec.encode_range(x, lo, len, &mut w);
+                    w.finish()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("encode shard"))
+            .collect()
+    });
+    for (pb, pbits) in &parts {
+        out.bytes.extend_from_slice(pb);
+        out.bits += pbits;
+    }
+}
+
+/// Explicit SIMD lanes vs scalar twins (bit-identical by
+/// `prop_simd_*`), and the persistent worker pool vs per-call scoped
+/// spawns. Without `--features simd` (or off x86_64/AVX2) the two rows
+/// of each lane pair time the same scalar kernel — the header says
+/// which dispatch is live, so a diff across feature builds is honest.
+fn simd_pool_bench(b: &mut Bencher) {
+    use dme::simd;
+    println!(
+        "# simd_pool_bench — scalar twins vs dispatched lanes (live: {}), pool vs spawn\n",
+        simd::lanes()
+    );
+    for d in [128usize, 4096, 65536] {
+        let mut rng = Rng::new(41);
+        let a: Vec<f64> = (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let off: Vec<f64> = (0..d).map(|_| rng.uniform(-0.5, 0.5)).collect();
+
+        // (a) FWHT butterfly layer over d/2-length halves.
+        let (mut lo, mut hi) = (a.clone(), off.clone());
+        b.bench(&format!("butterfly2 scalar       d={d}"), Some(d as u64), || {
+            simd::butterfly2_scalar(&mut lo, &mut hi);
+            lo[0]
+        });
+        b.bench(&format!("butterfly2 dispatched   d={d}"), Some(d as u64), || {
+            simd::butterfly2(&mut lo, &mut hi);
+            lo[0]
+        });
+
+        // (b) Stochastic-rounding quantize: offset, scale, round-even.
+        let mut qout = vec![0.0; d];
+        b.bench(&format!("quantize scalar         d={d}"), Some(d as u64), || {
+            simd::quantize_scaled_scalar(&a, &off, 4.0, &mut qout);
+            qout[0]
+        });
+        b.bench(&format!("quantize dispatched     d={d}"), Some(d as u64), || {
+            simd::quantize_scaled(&a, &off, 4.0, &mut qout);
+            qout[0]
+        });
+
+        // (c) Bulk uniform conversion (the vector stage of fill_uniform).
+        let words: Vec<u64> = (0..d).map(|_| rng.next_u64()).collect();
+        let mut uout = vec![0.0; d];
+        b.bench(&format!("u64→uniform scalar      d={d}"), Some(d as u64), || {
+            simd::uniform_from_bits_scalar(&words, &mut uout);
+            uout[0]
+        });
+        b.bench(&format!("u64→uniform dispatched  d={d}"), Some(d as u64), || {
+            simd::uniform_from_bits(&words, &mut uout);
+            uout[0]
+        });
+
+        // (d) Field packing at width 5 (⌊64/5⌋ = 12 fields per word —
+        // the push_block inner kernel).
+        let vals: Vec<u64> = (0..d).map(|_| rng.next_u64() & 31).collect();
+        b.bench(&format!("pack w=5 scalar fields  d={d}"), Some(d as u64), || {
+            let mut acc = 0u64;
+            for c in vals.chunks(12) {
+                acc ^= simd::pack_fields_scalar(c, 5, 0);
+            }
+            acc
+        });
+        b.bench(&format!("pack w=5 lane fields    d={d}"), Some(d as u64), || {
+            let mut acc = 0u64;
+            for c in vals.chunks(12) {
+                acc ^= simd::pack_fields(c, 5, 0);
+            }
+            acc
+        });
+        println!();
+    }
+
+    // (e) Persistent pool vs per-call scoped spawns for the chunk-
+    // parallel encode. d=128 inlines on both paths (one run — no thread
+    // to amortize), so its rows pin the small-d overhead floor; the
+    // larger dims measure spawn/join+teardown vs parked-worker handoff.
+    for d in [128usize, 4096, 65536] {
+        let mut rng = Rng::new(42);
+        let x: Vec<f64> = (0..d).map(|_| 100.0 + rng.uniform(-0.5, 0.5)).collect();
+        let mut shared = Rng::new(43);
+        let mut lq = LatticeQuantizer::from_y(d, 16, 1.0, &mut shared);
+        let mut msg = Message::empty();
+        b.bench(&format!("lq encode spawn-per-call d={d}"), Some(d as u64), || {
+            encode_chunked_spawning(&mut lq, &x, &mut rng, &mut msg, 1024);
+            msg.bits
+        });
+        b.bench(&format!("lq encode parked pool    d={d}"), Some(d as u64), || {
+            encode_chunked(&mut lq, &x, &mut rng, &mut msg, 1024);
+            msg.bits
+        });
+    }
+    println!();
+}
+
 fn main() {
     let mut b = Bencher::from_env();
     println!("# quant_bench — codec encode/decode throughput\n");
@@ -515,6 +671,7 @@ fn main() {
 
     encode_bench(&mut b);
     baseline_bench(&mut b);
+    simd_pool_bench(&mut b);
 
     b.write_json("quant_bench").expect("write bench json");
 }

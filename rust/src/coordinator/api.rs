@@ -12,8 +12,16 @@
 //!
 //! Performance (§Perf): spawning one thread per machine per round costs
 //! ~20 µs/thread, an order of magnitude more than the quantization work
-//! itself at small `d`. The session keeps the cluster threads alive and
-//! recycles every per-machine buffer through the round loop (input and
+//! itself at small `d`. The session keeps the cluster threads alive for
+//! its whole lifetime — and those threads are **leases from the
+//! process-wide persistent pool** ([`crate::pool::lease`]): the first
+//! session pays the OS spawns, every later session (and every ad-hoc
+//! [`crate::sim::Cluster::run`]) reuses the parked threads, so
+//! build-session-per-experiment loops stop paying n spawns each. The
+//! pool's fixed-size chunk tier similarly backs the sharded
+//! [`crate::quant::encode_chunked`] / [`super::fold_mean_chunked`] data
+//! plane — see [`crate::pool`] §Perf for the two-tier lifecycle. The
+//! session also recycles every per-machine buffer through the round loop (input and
 //! output vectors ping-pong between driver and workers; encode/decode go
 //! through [`VectorCodec::encode_into`] / `decode_into` scratch space),
 //! so the steady-state round allocates O(1) rather than O(n·d) vectors.
@@ -124,7 +132,6 @@ use crate::quant::{CubicLattice, LatticeQuantizer, Message, PacketArena, VectorC
 use crate::rng::{fork_round_seeds, hash2, Rng};
 use crate::sim::{summarize, Cluster, Endpoint, Traffic, TrafficSummary};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread::JoinHandle;
 
 /// How [`DmeSession::round_vr`] turns a variance bound into a protocol.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -382,7 +389,10 @@ pub struct DmeSession {
 struct Workers {
     cmd_tx: Vec<Sender<Cmd>>,
     out_rx: Vec<Receiver<WorkerMsg>>,
-    handles: Vec<JoinHandle<()>>,
+    /// Leased pool threads (§Perf): the session borrows parked workers
+    /// from [`crate::pool`] for its lifetime instead of spawning; on drop
+    /// the threads return to the pool for the next session to reuse.
+    handles: Vec<crate::pool::Lease<()>>,
 }
 
 /// One driver→worker channel crossing: a single round or a whole batch.
@@ -802,15 +812,11 @@ impl DmeSession {
             let diagnostics = self.diagnostics;
             let topology = self.topology;
             handles.push(
-                std::thread::Builder::new()
-                    .name(format!("dme-machine-{}", ep.id))
-                    .spawn(move || match topology {
-                        Topology::Star => {
-                            star_worker(ep, spec, d, seed, diagnostics, crx, otx)
-                        }
-                        Topology::Tree { m } => tree_worker(ep, m, seed, crx, otx),
-                    })
-                    .expect("spawn machine thread"),
+                crate::pool::lease(move || match topology {
+                    Topology::Star => star_worker(ep, spec, d, seed, diagnostics, crx, otx),
+                    Topology::Tree { m } => tree_worker(ep, m, seed, crx, otx),
+                })
+                .expect("lease machine worker thread"),
             );
         }
         self.workers = Some(Workers {

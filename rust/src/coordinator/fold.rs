@@ -7,8 +7,10 @@
 //! leader memory (a batch of RPCs, a replay log, a parameter-server
 //! shard) and the only question is how fast `d` coordinates can be
 //! folded. [`fold_mean`] is the sequential fused fold;
-//! [`fold_mean_chunked`] shards `d` into cache-sized chunks folded by
-//! parallel threads via [`VectorCodec::decode_accumulate_range`] — a
+//! [`fold_mean_chunked`] shards `d` into cache-sized chunks folded in
+//! parallel on the process-wide persistent worker pool
+//! ([`crate::pool::ChunkPool`] — spawned once, parked between folds) via
+//! [`VectorCodec::decode_accumulate_range`] — a
 //! fixed-width bitstream is random-access, so each thread seeks straight
 //! to its chunk's bit offset in every message. The chunked fold pays off
 //! only for codecs that *override* `decode_accumulate_range` with a real
@@ -67,9 +69,11 @@ pub fn fold_mean(
 /// Chunk-sharded parallel fold: splits `d` into chunks of ~`chunk`
 /// coordinates (rounded up to the codec's
 /// [`VectorCodec::fold_chunk_align`]) and folds each chunk across *all*
-/// parts, chunks distributed over at most `available_parallelism`
-/// threads (each thread walks its run of cache-sized chunks in order, so
-/// tiny chunks or huge `d` never explode the thread count). Per
+/// parts, chunks distributed over the parked workers of the process-wide
+/// [`crate::pool::ChunkPool`] (sized to `available_parallelism`, queried
+/// once at pool construction; each worker walks its run of cache-sized
+/// chunks in order, so tiny chunks or huge `d` never explode the
+/// fan-out). Per
 /// coordinate the additions happen in the identical part order as
 /// [`fold_mean`], so the result is bit-identical — sharding changes
 /// wall-clock, never the estimate.
@@ -90,19 +94,39 @@ pub fn fold_mean_chunked<C: VectorCodec + Sync + ?Sized>(
     out: &mut [f64],
     chunk: usize,
 ) {
+    fold_mean_chunked_on(crate::pool::ChunkPool::global(), codec, parts, reference, out, chunk)
+}
+
+/// [`fold_mean_chunked`] on an explicit [`crate::pool::ChunkPool`] — the
+/// plain entry point is this function on the process-wide
+/// [`crate::pool::ChunkPool::global`] (§Perf: workers spawned once and
+/// parked between folds, instead of a scoped spawn per call; shard i
+/// runs on worker i mod pool-size, no stealing). Public so the prop
+/// tests can pin the bit-identity guarantee across pool sizes: each
+/// run's output depends only on its coordinate range, never on which
+/// worker folds it or how many there are.
+pub fn fold_mean_chunked_on<C: VectorCodec + Sync + ?Sized>(
+    pool: &crate::pool::ChunkPool,
+    codec: &C,
+    parts: &[FoldPart],
+    reference: &[f64],
+    out: &mut [f64],
+    chunk: usize,
+) {
     assert!(!parts.is_empty(), "fold needs at least one part");
     let align = codec.fold_chunk_align().max(1);
     let chunk = chunk.max(1).div_ceil(align) * align;
-    // Contiguous runs of chunks per thread, capped at the core count.
-    let threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
+    // Contiguous runs of chunks per worker, capped at the pool size
+    // (which caches `available_parallelism()` from construction time).
+    let threads = pool.size();
     let n_chunks = out.len().div_ceil(chunk).max(1);
     let group = n_chunks.div_ceil(threads) * chunk;
     let inv_n = 1.0 / parts.len() as f64;
-    std::thread::scope(|scope| {
-        for (gi, run) in out.chunks_mut(group).enumerate() {
-            scope.spawn(move || {
+    let tasks: Vec<_> = out
+        .chunks_mut(group)
+        .enumerate()
+        .map(|(gi, run)| {
+            move || {
                 for (ci, shard) in run.chunks_mut(chunk).enumerate() {
                     let lo = gi * group + ci * chunk;
                     for o in shard.iter_mut() {
@@ -122,9 +146,10 @@ pub fn fold_mean_chunked<C: VectorCodec + Sync + ?Sized>(
                         *o = inv_n * *o;
                     }
                 }
-            });
-        }
-    });
+            }
+        })
+        .collect();
+    pool.run_sharded(tasks);
 }
 
 #[cfg(test)]

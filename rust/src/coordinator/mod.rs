@@ -55,7 +55,7 @@ pub use api::{
     star_round_over, vr_round_over, DmeBuilder, DmeSession, Robustness, RoundOutcome,
     StarRoundReport,
 };
-pub use fold::{fold_mean, fold_mean_chunked, FoldPart};
+pub use fold::{fold_mean, fold_mean_chunked, fold_mean_chunked_on, FoldPart};
 pub use session::{SessionRound, StarSession};
 pub use star::{mean_estimation_star, StarOutcome};
 pub use sublinear_me::{sublinear_mean_estimation, SublinearOutcome};

@@ -89,7 +89,9 @@ pub mod exp;
 pub mod linalg;
 pub mod net;
 pub mod opt;
+pub mod pool;
 pub mod quant;
 pub mod rng;
 pub mod runtime;
 pub mod sim;
+pub mod simd;

@@ -1,0 +1,420 @@
+//! Shared persistent worker pool — threads spawned once, parked between
+//! jobs, reused by every parallel entry point in the crate.
+//!
+//! # §Perf — why a pool
+//!
+//! Before this module, all three parallel call sites paid a full thread
+//! spawn + join per call: [`crate::quant::encode_chunked`] and
+//! [`crate::coordinator::fold_mean_chunked`] spawned scoped threads per
+//! invocation, and [`crate::sim::Cluster::run`] / the
+//! `DmeSession` workers spawned one OS thread per machine per cluster
+//! construction. A spawn costs ~20 µs — an order of magnitude more than
+//! the quantization work itself at small `d`, which erased the
+//! chunk-parallel win exactly where the paper's comparison lives
+//! (Suresh et al.'s Hadamard baseline, per-layer gradients). The pool
+//! spawns threads once at first use and parks them between jobs, so the
+//! steady-state cost of a parallel call is a channel send + a condvar
+//! wait.
+//!
+//! Two layers, matching the two call-site shapes:
+//!
+//! * [`ChunkPool`] — a **fixed-size** pool for short, CPU-bound shard
+//!   jobs (encode/fold chunks). Handoff is a fixed per-worker queue:
+//!   task `i` of a call always goes to worker `i mod size` — no work
+//!   stealing, so the shard→worker assignment is deterministic. (Shards
+//!   write disjoint output slots, so results are bit-identical to the
+//!   sequential reference *regardless* of scheduling; determinism here
+//!   removes even scheduling jitter from the equation and is pinned by
+//!   the pool prop tests.) Shard jobs must never block on each other:
+//!   workers run jobs to completion in queue order. A job that itself
+//!   calls [`ChunkPool::run_sharded`] runs its tasks inline (detected
+//!   via a thread-local), so nesting cannot deadlock the pool.
+//! * [`lease`] — a **growable** thread cache for long-lived,
+//!   possibly-blocking jobs (the per-machine protocol workers in
+//!   [`crate::sim`] and `coordinator::api`, which block on each other's
+//!   messages and therefore must each own a thread). A lease pops an
+//!   idle parked thread or spawns a new one; when the job finishes the
+//!   thread parks itself back on the idle stack. Spawn failure surfaces
+//!   as `io::Error` (not a panic) so [`crate::sim::Cluster::try_run`]
+//!   can report it as a typed `TransportError`.
+//!
+//! [`threads`] caches `available_parallelism()` once — callers that used
+//! to query it per call now read a `OnceLock`.
+//!
+//! Everything here is scheduling only: no pool path touches the wire
+//! arithmetic, and the chunked entry points stay bit-identical to their
+//! sequential references (pinned by `rust/tests/prop.rs`).
+
+use std::cell::Cell;
+use std::io;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, SendError};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Cached `available_parallelism()` — queried from the OS exactly once
+/// per process (the chunked entry points used to ask on every call).
+pub fn threads() -> usize {
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// A pool job: erased to `'static` at the dispatch boundary. Jobs built
+/// from borrowing closures are transmuted to this type; soundness is the
+/// caller's latch (see [`ChunkPool::run_sharded`]).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// Set on chunk-pool worker threads: a nested `run_sharded` from a
+    /// worker runs inline instead of re-dispatching (a worker waiting on
+    /// its own pool could deadlock it).
+    static IN_CHUNK_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Count-up completion latch: each finished job arrives, the dispatcher
+/// waits for the number it actually managed to dispatch.
+struct Latch {
+    done: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new() -> Self {
+        Latch {
+            done: Mutex::new(0),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn arrive(&self) {
+        let mut done = self.done.lock().unwrap_or_else(|e| e.into_inner());
+        *done += 1;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self, target: usize) {
+        let mut done = self.done.lock().unwrap_or_else(|e| e.into_inner());
+        while *done < target {
+            done = self.cv.wait(done).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Fixed-size persistent pool for short CPU-bound shard jobs.
+///
+/// Workers are spawned in the constructor and park in `recv` between
+/// jobs. Dispatch is a fixed chunk-queue handoff — task `i` always goes
+/// to worker `i mod size`, no stealing — so assignment is deterministic
+/// across calls. See the module docs for the blocking contract (shard
+/// jobs must not wait on each other; nested dispatch runs inline).
+pub struct ChunkPool {
+    queues: Vec<Sender<Job>>,
+}
+
+impl ChunkPool {
+    /// Spawn a pool of `size.max(1)` parked workers. The process-wide
+    /// instance most callers want is [`ChunkPool::global`]; private
+    /// pools exist for tests (pool-size determinism) and benches.
+    pub fn new(size: usize) -> Self {
+        let queues = (0..size.max(1))
+            .map(|i| {
+                let (tx, rx) = channel::<Job>();
+                std::thread::Builder::new()
+                    .name(format!("dme-chunk-{i}"))
+                    .spawn(move || {
+                        IN_CHUNK_WORKER.with(|c| c.set(true));
+                        while let Ok(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn chunk-pool worker");
+                tx
+            })
+            .collect();
+        ChunkPool { queues }
+    }
+
+    /// The shared process-wide pool, sized [`threads()`], spawned on
+    /// first use and kept for the life of the process.
+    pub fn global() -> &'static ChunkPool {
+        static POOL: OnceLock<ChunkPool> = OnceLock::new();
+        POOL.get_or_init(|| ChunkPool::new(threads()))
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Run every task to completion and return their results in task
+    /// order. Task `i` runs on worker `i mod size`; a single task (or a
+    /// call from inside a pool worker) runs inline on the caller. Panics
+    /// in a task are caught on the worker (which survives) and resumed
+    /// on the caller, first panicking task first.
+    pub fn run_sharded<T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        if tasks.len() <= 1 || IN_CHUNK_WORKER.with(|c| c.get()) {
+            return tasks.into_iter().map(|t| t()).collect();
+        }
+        let n = tasks.len();
+        let k = self.queues.len();
+        let latch = Latch::new();
+        let mut slots: Vec<Option<std::thread::Result<T>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let mut dispatched = 0usize;
+        let mut queue_gone = false;
+        for (i, (task, slot)) in tasks.into_iter().zip(slots.iter_mut()).enumerate() {
+            let latch = &latch;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                *slot = Some(catch_unwind(AssertUnwindSafe(task)));
+                latch.arrive();
+            });
+            // SAFETY: the job borrows `slots` and `latch`, both of which
+            // outlive every dispatched job: `latch.wait(dispatched)`
+            // below blocks until each dispatched job has run to
+            // completion (`arrive` is the job's final action), and
+            // workers run every job they receive exactly once — they
+            // only exit when the pool (holding the senders) is dropped.
+            // A job that fails to send is dropped here without running
+            // (its borrows die immediately; its slot stays `None`).
+            let job: Job = unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job) };
+            if self.queues[i % k].send(job).is_err() {
+                queue_gone = true;
+                break;
+            }
+            dispatched += 1;
+        }
+        latch.wait(dispatched);
+        assert!(
+            !queue_gone,
+            "chunk-pool worker exited while the pool was alive"
+        );
+        slots
+            .into_iter()
+            .map(|slot| match slot.expect("dispatched shard completed") {
+                Ok(v) => v,
+                Err(panic) => resume_unwind(panic),
+            })
+            .collect()
+    }
+}
+
+/// Idle parked machine threads, most-recently-parked first. Each entry
+/// is the sender side of a parked worker's job queue.
+static IDLE: Mutex<Vec<Sender<Job>>> = Mutex::new(Vec::new());
+/// Total machine threads ever spawned by [`lease`] (never shrinks —
+/// threads park rather than exit).
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Machine threads ever spawned by the lease layer (stats/tests; the
+/// pool never shrinks, so `spawned - idle` threads are on lease).
+pub fn spawned_workers() -> usize {
+    SPAWNED.load(Ordering::Relaxed)
+}
+
+/// Machine threads currently parked and reusable by [`lease`].
+pub fn idle_workers() -> usize {
+    IDLE.lock().unwrap_or_else(|e| e.into_inner()).len()
+}
+
+/// A handle to a job running on a leased pool thread — the pool
+/// counterpart of `std::thread::JoinHandle`.
+pub struct Lease<T> {
+    rx: Receiver<std::thread::Result<T>>,
+}
+
+impl<T> Lease<T> {
+    /// Wait for the job to finish. `Err` carries the job's panic payload
+    /// (the leased thread itself survives and returns to the pool).
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            // Unreachable in practice: the worker always sends a result
+            // (panics are caught inside the job wrapper) — but a
+            // defensive arm beats a poisoned unwrap.
+            Err(gone) => Err(Box::new(gone)),
+        }
+    }
+}
+
+/// Run `f` on a pooled thread: pops an idle parked worker or, when none
+/// is available, spawns a new one (the pool grows on demand — machine
+/// jobs may block on each other, so a fixed-size pool could deadlock a
+/// cluster larger than the pool). The thread parks itself back on the
+/// idle stack when `f` returns.
+///
+/// Spawn failure (thread exhaustion) is returned as `io::Error` rather
+/// than panicking — [`crate::sim::Cluster::try_run`] maps it to a typed
+/// `TransportError`, and the never-run job's captured endpoint is
+/// dropped, so surviving machines observe the dead peer as `PeerClosed`
+/// instead of hanging.
+pub fn lease<T, F>(f: F) -> io::Result<Lease<T>>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let (rtx, rrx) = channel();
+    let mut job: Job = Box::new(move || {
+        let _ = rtx.send(catch_unwind(AssertUnwindSafe(f)));
+    });
+    // Reuse a parked worker if any. A worker whose channel has closed
+    // (impossible today — workers never drop their own sender — but
+    // cheap to tolerate) is discarded and the next one tried.
+    loop {
+        let idle = IDLE.lock().unwrap_or_else(|e| e.into_inner()).pop();
+        let Some(tx) = idle else { break };
+        match tx.send(job) {
+            Ok(()) => return Ok(Lease { rx: rrx }),
+            Err(SendError(j)) => job = j,
+        }
+    }
+    let (wtx, wrx) = channel::<Job>();
+    let idx = SPAWNED.fetch_add(1, Ordering::Relaxed);
+    let self_tx = wtx.clone();
+    std::thread::Builder::new()
+        .name(format!("dme-pool-{idx}"))
+        .spawn(move || {
+            while let Ok(job) = wrx.recv() {
+                job();
+                // Park: re-register only after the job fully finished,
+                // so a leased thread is never handed a second job while
+                // the first could still block (machine jobs wait on each
+                // other; queuing behind one would deadlock the cluster).
+                IDLE.lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .push(self_tx.clone());
+            }
+        })?;
+    wtx.send(job).expect("freshly spawned pool worker receives");
+    Ok(Lease { rx: rrx })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn run_sharded_returns_results_in_task_order() {
+        let pool = ChunkPool::new(3);
+        for _ in 0..4 {
+            let tasks: Vec<_> = (0..17).map(|i| move || i * 10).collect();
+            let got = pool.run_sharded(tasks);
+            assert_eq!(got, (0..17).map(|i| i * 10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn run_sharded_is_deterministic_across_pool_sizes() {
+        let expect: Vec<u64> = (0..40u64).map(|i| i.wrapping_mul(0x9E3779B9)).collect();
+        for size in [1, 2, 5, 16] {
+            let pool = ChunkPool::new(size);
+            let tasks: Vec<_> = (0..40u64)
+                .map(|i| move || i.wrapping_mul(0x9E3779B9))
+                .collect();
+            assert_eq!(pool.run_sharded(tasks), expect, "size={size}");
+        }
+    }
+
+    #[test]
+    fn nested_run_sharded_runs_inline_without_deadlock() {
+        let pool = ChunkPool::global();
+        let tasks: Vec<_> = (0..8)
+            .map(|i| {
+                move || {
+                    let inner: Vec<_> = (0..4).map(|j| move || i * 100 + j).collect();
+                    pool.run_sharded(inner).iter().sum::<i32>()
+                }
+            })
+            .collect();
+        let got = pool.run_sharded(tasks);
+        let expect: Vec<i32> = (0..8).map(|i| 4 * i * 100 + 6).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn run_sharded_propagates_first_task_panic() {
+        let pool = ChunkPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+                Box::new(|| 1),
+                Box::new(|| panic!("shard boom")),
+                Box::new(|| 3),
+            ];
+            pool.run_sharded(tasks)
+        }));
+        let payload = result.expect_err("panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "shard boom");
+        // The pool survives a panicking shard.
+        let again: Vec<fn() -> i32> = vec![|| 7, || 8];
+        assert_eq!(pool.run_sharded(again), vec![7, 8]);
+    }
+
+    #[test]
+    fn lease_runs_jobs_and_reuses_parked_threads() {
+        use std::collections::HashSet;
+        let l = lease(|| 41 + 1).expect("lease");
+        assert_eq!(l.join().expect("job ok"), 42);
+        // Reuse is observed via thread identity, not the global counters
+        // — other tests in this binary lease concurrently, so exact
+        // counter assertions would race. LIFO parking means sequential
+        // cycles overwhelmingly land on the same thread; requiring *any*
+        // repeat across the cycles keeps the pin interference-tolerant.
+        let cycles = 10;
+        let mut ids = HashSet::new();
+        for _ in 0..cycles {
+            let l = lease(|| std::thread::current().id()).expect("lease");
+            ids.insert(l.join().expect("job ok"));
+            let deadline = Instant::now() + Duration::from_secs(5);
+            while idle_workers() == 0 && Instant::now() < deadline {
+                std::thread::yield_now();
+            }
+        }
+        assert!(spawned_workers() >= 1);
+        assert!(
+            ids.len() < cycles,
+            "no lease cycle ever reused a parked thread"
+        );
+    }
+
+    #[test]
+    fn lease_join_reports_job_panic_and_thread_survives() {
+        let l = lease(|| -> u32 { panic!("machine boom") }).expect("lease");
+        let err = l.join().expect_err("panic surfaces in join");
+        assert_eq!(err.downcast_ref::<&str>(), Some(&"machine boom"));
+        // The pool thread caught the panic and is leasable again.
+        let l = lease(|| 5u32).expect("lease");
+        assert_eq!(l.join().expect("job ok"), 5);
+    }
+
+    #[test]
+    fn concurrent_leases_get_dedicated_threads() {
+        // n mutually-blocking jobs (a barrier) must each own a thread —
+        // the growable layer's reason to exist. With queued handoff this
+        // test would deadlock rather than fail.
+        use std::sync::{Arc, Barrier};
+        let n = 6;
+        let barrier = Arc::new(Barrier::new(n));
+        let leases: Vec<_> = (0..n)
+            .map(|i| {
+                let b = barrier.clone();
+                lease(move || {
+                    b.wait();
+                    i
+                })
+                .expect("lease")
+            })
+            .collect();
+        let mut got: Vec<usize> = leases.into_iter().map(|l| l.join().expect("ok")).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..n).collect::<Vec<_>>());
+    }
+}

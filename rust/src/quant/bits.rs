@@ -112,15 +112,17 @@ impl BitWriter {
         while i < n {
             let room = 64 - self.acc_bits;
             if room >= width {
-                // Pack every field that fully fits before the next store.
+                // Pack every field that fully fits before the next store,
+                // OR-folded in lanes ([`crate::simd::pack_fields`] —
+                // shift/or only, so the word is identical to the scalar
+                // fold regardless of dispatch).
                 let fit = ((room / width) as usize).min(n - i);
-                let mut acc = self.acc;
-                let mut bits = self.acc_bits;
-                for &v in &vals[i..i + fit] {
-                    debug_assert!(width == 64 || v < (1u64 << width));
-                    acc |= v << bits;
-                    bits += width;
-                }
+                debug_assert!(
+                    width == 64 || vals[i..i + fit].iter().all(|&v| v < (1u64 << width))
+                );
+                let acc =
+                    self.acc | crate::simd::pack_fields(&vals[i..i + fit], width, self.acc_bits);
+                let bits = self.acc_bits + fit as u32 * width;
                 self.acc = acc;
                 self.acc_bits = bits;
                 i += fit;
@@ -249,9 +251,9 @@ impl<'a> BitReader<'a> {
             }
             let w = u64::from_le_bytes(self.buf[byte..byte + 8].try_into().unwrap()) >> shift;
             let fit = ((avail / width) as usize).min(out.len() - i);
-            for (j, o) in out[i..i + fit].iter_mut().enumerate() {
-                *o = (w >> (j as u32 * width)) & mask;
-            }
+            // Field extraction in lanes ([`crate::simd::unpack_fields`] —
+            // shift/mask only, value-identical to the scalar loop).
+            crate::simd::unpack_fields(w, width, mask, &mut out[i..i + fit]);
             self.pos += fit as u64 * width as u64;
             i += fit;
         }

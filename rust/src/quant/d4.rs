@@ -224,38 +224,56 @@ impl D4Quantizer {
         let wd = self.width;
         let mask = (self.q - 1) as i64;
         let inv = 1.0 / self.s;
-        let mut quantize_bucket = |b: usize| -> [u64; 4] {
-            let mut t = [0.0f64; 4];
-            for (i, ti) in t.iter_mut().enumerate() {
-                let j = 4 * b + i;
-                *ti = (x[j] - self.offset[j]) * inv;
-            }
-            let k = nearest_d4(&t);
-            let mut c = [0u64; 4];
-            for (i, ci) in c.iter_mut().enumerate() {
-                *ci = (k[i] & mask) as u64;
-                emit(4 * b + i, k[i]);
-            }
-            debug_assert_eq!((c[0] + c[1] + c[2] + c[3]) % 2, 0);
-            c
-        };
         let bucket_bits = 4 * wd - 1;
         if bucket_bits <= 64 {
             const BLOCK: usize = 64;
             let mut packed = [0u64; BLOCK];
+            let mut tbuf = [0.0f64; 4 * BLOCK];
             let mut done = 0;
             while done < buckets {
                 let take = (buckets - done).min(BLOCK);
+                let base = 4 * (bucket_lo + done);
+                // Vector stage (§Perf): all 4·take bucket coordinates are
+                // offset-scaled in one pass through
+                // [`crate::simd::scale_offset`]; `nearest_d4` and the
+                // color/pack stage below consume those exact f64s, so the
+                // staging changes no bit.
+                crate::simd::scale_offset(
+                    &x[base..base + 4 * take],
+                    &self.offset[base..base + 4 * take],
+                    inv,
+                    &mut tbuf[..4 * take],
+                );
                 for (slot, p) in packed[..take].iter_mut().enumerate() {
-                    let c = quantize_bucket(bucket_lo + done + slot);
+                    let t: [f64; 4] = tbuf[4 * slot..4 * slot + 4].try_into().unwrap();
+                    let k = nearest_d4(&t);
+                    let mut c = [0u64; 4];
+                    for (i, ci) in c.iter_mut().enumerate() {
+                        *ci = (k[i] & mask) as u64;
+                        emit(base + 4 * slot + i, k[i]);
+                    }
+                    debug_assert_eq!((c[0] + c[1] + c[2] + c[3]) % 2, 0);
                     *p = c[0] | (c[1] << wd) | (c[2] << (2 * wd)) | ((c[3] >> 1) << (3 * wd));
                 }
                 w.push_block(&packed[..take], bucket_bits);
                 done += take;
             }
         } else {
+            // Wide-q fallback: per-bucket scalar staging (mirrors the
+            // decode fallback; the block path above never runs here).
             for b in bucket_lo..bucket_lo + buckets {
-                let c = quantize_bucket(b);
+                let mut t = [0.0f64; 4];
+                for (i, ti) in t.iter_mut().enumerate() {
+                    let j = 4 * b + i;
+                    *ti = (x[j] - self.offset[j]) * inv;
+                }
+                let k = nearest_d4(&t);
+                let mut c = [0u64; 4];
+                for (i, ci) in c.iter_mut().enumerate() {
+                    *ci = (k[i] & mask) as u64;
+                    emit(4 * b + i, k[i]);
+                }
+                debug_assert_eq!((c[0] + c[1] + c[2] + c[3]) % 2, 0);
                 w.push(c[0], wd);
                 w.push(c[1], wd);
                 w.push(c[2], wd);

@@ -20,14 +20,16 @@ use crate::rng::Rng;
 const FWHT_BLOCK: usize = 1 << 12;
 
 /// One radix-2 butterfly layer at stride `h` (`x.len()` a multiple of 2h).
+///
+/// The per-group butterfly is [`crate::simd::butterfly2`]: AVX2 lanes
+/// when dispatched, the seed's scalar loop otherwise — bit-identical
+/// either way (lane-wise IEEE add/sub). Groups with `h < 4` fall into
+/// the kernel's scalar tail; those low-stride layers are cache-resident
+/// and cheap, so the lanes matter exactly where there is work.
 fn radix2_layer(x: &mut [f64], h: usize) {
     for group in x.chunks_mut(2 * h) {
         let (lo, hi) = group.split_at_mut(h);
-        for (a, b) in lo.iter_mut().zip(hi) {
-            let (u, v) = (*a, *b);
-            *a = u + v;
-            *b = u - v;
-        }
+        crate::simd::butterfly2(lo, hi);
     }
 }
 
@@ -40,19 +42,7 @@ fn radix4_layer(x: &mut [f64], h: usize) {
         let (g01, g23) = group.split_at_mut(2 * h);
         let (g0, g1) = g01.split_at_mut(h);
         let (g2, g3) = g23.split_at_mut(h);
-        for j in 0..h {
-            let (y0, y1, y2, y3) = (g0[j], g1[j], g2[j], g3[j]);
-            // Stage h:
-            let u0 = y0 + y1;
-            let u1 = y0 - y1;
-            let u2 = y2 + y3;
-            let u3 = y2 - y3;
-            // Stage 2h:
-            g0[j] = u0 + u2;
-            g1[j] = u1 + u3;
-            g2[j] = u0 - u2;
-            g3[j] = u1 - u3;
-        }
+        crate::simd::butterfly4(g0, g1, g2, g3);
     }
 }
 
@@ -101,11 +91,7 @@ fn fwht_span(x: &mut [f64], mut h0: usize, h1: usize) {
 fn final_layer_scaled(x: &mut [f64], scale: f64) {
     let h = x.len() / 2;
     let (lo, hi) = x.split_at_mut(h);
-    for (a, b) in lo.iter_mut().zip(hi) {
-        let (u, v) = (*a, *b);
-        *a = (u + v) * scale;
-        *b = (u - v) * scale;
-    }
+    crate::simd::butterfly2_scaled(lo, hi, scale);
 }
 
 /// The final butterfly layer with a per-element diagonal fused into its
@@ -117,11 +103,7 @@ fn final_layer_diag(x: &mut [f64], diag: &[f64]) {
     let h = x.len() / 2;
     let (lo, hi) = x.split_at_mut(h);
     let (dlo, dhi) = diag.split_at(h);
-    for j in 0..h {
-        let (u, v) = (lo[j], hi[j]);
-        lo[j] = (u + v) * dlo[j];
-        hi[j] = (u - v) * dhi[j];
-    }
+    crate::simd::butterfly2_diag(lo, hi, dlo, dhi);
 }
 
 /// In-place normalized fast Walsh–Hadamard transform.

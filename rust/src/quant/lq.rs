@@ -72,17 +72,31 @@ impl LatticeQuantizer {
         let mut r = super::bits::BitReader::new(&msg.bytes);
         r.seek(lo as u64 * width as u64);
         let mut colors = [0u64; BLOCK];
+        let mut cf = [0.0f64; BLOCK];
+        let mut mf = [0.0f64; BLOCK];
         let mut done = 0;
         while done < len {
             let take = (len - done).min(BLOCK);
+            let base = lo + done;
             r.read_block(width, &mut colors[..take]);
-            for (i, &cu) in colors[..take].iter().enumerate() {
-                let idx = lo + done + i;
-                let c = cu as i64;
-                let m = ((reference[idx] - self.lattice.offset[idx]) * inv_sq
-                    - c as f64 * inv_q)
-                    .round_ties_even() as i64;
-                let k = c + qi * m;
+            // Vector stage (§Perf): the congruence solve runs through
+            // [`crate::simd::fold_decode_indices`] on an f64 staging of
+            // the colors — exact, since every color is < q ≤ 2³² < 2⁵³ —
+            // leaving only the integer cast and the emit scalar.
+            for (c, &cu) in cf[..take].iter_mut().zip(&colors[..take]) {
+                *c = cu as f64;
+            }
+            crate::simd::fold_decode_indices(
+                &reference[base..base + take],
+                &self.lattice.offset[base..base + take],
+                &cf[..take],
+                inv_sq,
+                inv_q,
+                &mut mf[..take],
+            );
+            for (i, (&cu, &m)) in colors[..take].iter().zip(&mf[..take]).enumerate() {
+                let idx = base + i;
+                let k = cu as i64 + qi * m as i64;
                 emit(idx, self.lattice.offset[idx] + s * k as f64);
             }
             done += take;
@@ -112,6 +126,7 @@ impl LatticeQuantizer {
         let inv = self.lattice.inv_s();
         let width = self.width;
         let mut colors = [0u64; BLOCK];
+        let mut kf = [0.0f64; BLOCK];
         let pow2 = (self.q & (self.q - 1)) == 0;
         let mask = (self.q - 1) as i64;
         let q = self.q as i64;
@@ -120,21 +135,29 @@ impl LatticeQuantizer {
         while done < len {
             let take = (len - done).min(BLOCK);
             let base = lo + done;
+            // Vector stage (§Perf): the stochastic-rounding arithmetic —
+            // offset, scale, round-ties-even — runs through
+            // [`crate::simd::quantize_scaled`]; the scalar stage below
+            // consumes those exact f64 indices, so staging changes no bit.
+            crate::simd::quantize_scaled(
+                &x[base..base + take],
+                &offset[base..base + take],
+                inv,
+                &mut kf[..take],
+            );
             if pow2 {
                 // Two's-complement arithmetic makes the mask correct for
                 // negative indices.
                 for (j, c) in colors[..take].iter_mut().enumerate() {
-                    let idx = base + j;
-                    let k = ((x[idx] - offset[idx]) * inv).round_ties_even() as i64;
+                    let k = kf[j] as i64;
                     *c = (k & mask) as u64;
-                    emit(idx, k);
+                    emit(base + j, k);
                 }
             } else {
                 for (j, c) in colors[..take].iter_mut().enumerate() {
-                    let idx = base + j;
-                    let k = ((x[idx] - offset[idx]) * inv).round_ties_even() as i64;
+                    let k = kf[j] as i64;
                     *c = k.rem_euclid(q) as u64;
-                    emit(idx, k);
+                    emit(base + j, k);
                 }
             }
             w.push_block(&colors[..take], width);

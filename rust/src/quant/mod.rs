@@ -37,6 +37,26 @@
 //!   FWHT with the sign diagonal fused into the first butterfly layer
 //!   and the 1/√d normalization into the last (see [`hadamard`]).
 //!
+//! * **Worker pool** (this PR): [`encode_chunked`] (and the decode
+//!   plane's `fold_mean_chunked`) no longer spawn scoped threads per
+//!   call — shards are dispatched to the process-wide
+//!   [`crate::pool::ChunkPool`], whose workers are spawned once at first
+//!   use and parked between jobs, with `available_parallelism()` queried
+//!   once at pool construction. Shard→worker assignment is fixed
+//!   (`i mod pool-size`, no stealing) and results return in task order,
+//!   so pooling changes wall-clock, never a wire bit — see
+//!   [`crate::pool`] §Perf for the lifecycle and
+//!   [`encode_chunked_on`] for the across-pool-sizes pin.
+//! * **SIMD lanes** (this PR): the innermost block kernels — FWHT
+//!   butterflies, the lattice rounding/decode arithmetic, the
+//!   `push_block`/`read_block` field loops, and the bulk uniform
+//!   conversion — route through [`crate::simd`], which dispatches to
+//!   AVX2 `f64x4` lanes when built with `--features simd` on a capable
+//!   CPU and is the scalar reference loop otherwise. Dispatch is decided
+//!   by a cached runtime probe; every lane op is IEEE-identical to its
+//!   scalar twin (see [`crate::simd`] §Perf), so the feature changes
+//!   throughput, never a bit.
+//!
 //! Every fused/blocked/parallel path is **bit-identical** to its scalar
 //! ancestor — block kernels repack the same LSB-first stream, the FWHT
 //! fusions commute exactly with IEEE rounding, and chunk boundaries land
@@ -274,9 +294,11 @@ pub trait VectorCodec: Send {
 /// huge gradient saturates cores: `d` is split into chunks of ~`chunk`
 /// coordinates (rounded up to the codec's byte-boundary
 /// [`VectorCodec::encode_chunk_align`]), contiguous runs of chunks are
-/// handed to at most `available_parallelism` scoped threads, and each
-/// thread streams its run through [`VectorCodec::encode_range`] into its
-/// own writer. Because every run boundary is a byte boundary of the wire
+/// dispatched to the parked workers of the process-wide
+/// [`crate::pool::ChunkPool`] (sized to `available_parallelism`, queried
+/// once at pool construction — no spawn and no OS query per call), and
+/// each worker streams its run through [`VectorCodec::encode_range`]
+/// into its own writer. Because every run boundary is a byte boundary of the wire
 /// format, concatenating the per-thread buffers reproduces the
 /// sequential [`VectorCodec::encode_into`] stream **bit-identically** —
 /// sharding changes wall-clock, never a wire bit (pinned by the prop
@@ -299,6 +321,23 @@ pub fn encode_chunked<C: VectorCodec + Sync + ?Sized>(
     out: &mut Message,
     chunk: usize,
 ) {
+    encode_chunked_on(crate::pool::ChunkPool::global(), codec, x, rng, out, chunk)
+}
+
+/// [`encode_chunked`] on an explicit [`crate::pool::ChunkPool`] — the
+/// plain entry point is this function on the process-wide
+/// [`crate::pool::ChunkPool::global`]. Public so the prop tests can pin
+/// the guarantee directly: the stitched stream is bit-identical for
+/// *every* pool size (sharding is a function of `pool.size()`, and each
+/// shard's bytes depend only on its coordinate range).
+pub fn encode_chunked_on<C: VectorCodec + Sync + ?Sized>(
+    pool: &crate::pool::ChunkPool,
+    codec: &mut C,
+    x: &[f64],
+    rng: &mut Rng,
+    out: &mut Message,
+    chunk: usize,
+) {
     assert!(
         codec.supports_encode_range(),
         "{} does not support range encoding",
@@ -312,9 +351,7 @@ pub fn encode_chunked<C: VectorCodec + Sync + ?Sized>(
     let d = codec.wire_fields();
     let align = codec.encode_chunk_align().max(1);
     let chunk = chunk.max(1).div_ceil(align) * align;
-    let threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
+    let threads = pool.size();
     let n_chunks = d.div_ceil(chunk).max(1);
     let group = n_chunks.div_ceil(threads) * chunk;
     let bytes = &mut out.bytes;
@@ -332,22 +369,20 @@ pub fn encode_chunked<C: VectorCodec + Sync + ?Sized>(
     let runs: Vec<(usize, usize)> = (0..d.div_ceil(group))
         .map(|gi| (gi * group, group.min(d - gi * group)))
         .collect();
-    let parts: Vec<(Vec<u8>, u64)> = std::thread::scope(|scope| {
-        let handles: Vec<_> = runs
-            .iter()
-            .map(|&(lo, len)| {
-                scope.spawn(move || {
-                    let mut w = bits::BitWriter::new();
-                    codec.encode_range(x, lo, len, &mut w);
-                    w.finish()
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("encode shard panicked"))
-            .collect()
-    });
+    // Shard i goes to parked worker i mod pool-size — fixed assignment,
+    // no stealing — and results come back in task order, so the
+    // concatenation below is deterministic.
+    let tasks: Vec<_> = runs
+        .iter()
+        .map(|&(lo, len)| {
+            move || {
+                let mut w = bits::BitWriter::new();
+                codec.encode_range(x, lo, len, &mut w);
+                w.finish()
+            }
+        })
+        .collect();
+    let parts: Vec<(Vec<u8>, u64)> = pool.run_sharded(tasks);
     for (i, (pb, pbits)) in parts.iter().enumerate() {
         debug_assert!(
             i + 1 == parts.len() || pbits % 8 == 0,

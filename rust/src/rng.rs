@@ -119,11 +119,23 @@ impl Rng {
     /// Fill `out` with uniforms in `[0, 1)` — the bulk twin of
     /// [`Self::next_f64`], stream-identical to calling it `out.len()`
     /// times (same draws, same 53-bit conversion, same final state).
+    ///
+    /// §Perf: the xoshiro recurrence is inherently serial, so the raw
+    /// words are drawn scalar into a stack staging block; the 53-bit
+    /// shift-and-scale conversion then runs through
+    /// [`crate::simd::uniform_from_bits`], whose AVX2 path is exact (see
+    /// its docs) — bit-identical output either way, pinned by
+    /// `bulk_fills_match_scalar_draws` and
+    /// `prop_bulk_uniform_fill_stream_identical_across_chunk_boundary`.
     pub fn fill_uniform(&mut self, out: &mut [f64]) {
-        const SCALE: f64 = 1.0 / (1u64 << 53) as f64;
+        const CHUNK: usize = 256;
+        let mut words = [0u64; CHUNK];
         let mut s = self.s;
-        for o in out.iter_mut() {
-            *o = (xoshiro_step(&mut s) >> 11) as f64 * SCALE;
+        for block in out.chunks_mut(CHUNK) {
+            for w in words[..block.len()].iter_mut() {
+                *w = xoshiro_step(&mut s);
+            }
+            crate::simd::uniform_from_bits(&words[..block.len()], block);
         }
         self.s = s;
     }

@@ -230,8 +230,13 @@ impl Cluster {
             .collect()
     }
 
-    /// Run `f(endpoint)` on `n` threads; returns each machine's result in
-    /// machine order. Panics in any machine propagate.
+    /// Run `f(endpoint)` on `n` parallel machines; returns each machine's
+    /// result in machine order. Panics in any machine propagate.
+    ///
+    /// §Perf: machines run on leased threads from the process-wide pool
+    /// ([`crate::pool::lease`]) — parked threads are reused across
+    /// clusters/rounds instead of spawned per call, so repeated-round
+    /// drivers stop paying n thread spawns per round.
     pub fn run<T, F>(&self, f: F) -> Vec<T>
     where
         T: Send + 'static,
@@ -239,28 +244,28 @@ impl Cluster {
     {
         let endpoints = self.endpoints();
         let f = Arc::new(f);
-        let handles: Vec<_> = endpoints
+        let leases: Vec<_> = endpoints
             .into_iter()
             .map(|ep| {
                 let f = f.clone();
-                std::thread::Builder::new()
-                    .name(format!("machine-{}", ep.id))
-                    .spawn(move || f(ep))
-                    .expect("spawn")
+                crate::pool::lease(move || f(ep)).expect("lease machine worker thread")
             })
             .collect();
-        handles
+        leases
             .into_iter()
-            .map(|h| h.join().expect("machine panicked"))
+            .map(|l| l.join().expect("machine panicked"))
             .collect()
     }
 
     /// Graceful-shutdown variant of [`Cluster::run`]: each machine
     /// returns a `Result`, and a machine that panics yields
     /// `Err(WorkerPanicked)` in its slot instead of poisoning the whole
-    /// process. Surviving machines observe a dead peer as
-    /// `Err(PeerClosed)` from `try_send` (or `Timeout`/`Shutdown` from
-    /// the receive side) and can unwind cleanly.
+    /// process. A machine whose worker thread cannot even be obtained
+    /// (pool exhausted and OS spawn failed) yields `Err(Io)` in its slot
+    /// — its endpoint is dropped unstarted, so surviving machines observe
+    /// it as a dead peer (`Err(PeerClosed)` from `try_send`, or
+    /// `Timeout`/`Shutdown` from the receive side) and unwind cleanly,
+    /// consistent with the no-panic transport policy.
     pub fn try_run<T, F>(&self, f: F) -> Vec<Result<T, TransportError>>
     where
         T: Send + 'static,
@@ -268,22 +273,22 @@ impl Cluster {
     {
         let endpoints = self.endpoints();
         let f = Arc::new(f);
-        let handles: Vec<_> = endpoints
+        let leases: Vec<_> = endpoints
             .into_iter()
             .map(|ep| {
                 let f = f.clone();
-                std::thread::Builder::new()
-                    .name(format!("machine-{}", ep.id))
-                    .spawn(move || f(ep))
-                    .expect("spawn")
+                crate::pool::lease(move || f(ep))
             })
             .collect();
-        handles
+        leases
             .into_iter()
             .enumerate()
-            .map(|(machine, h)| match h.join() {
-                Ok(r) => r,
-                Err(_) => Err(TransportError::WorkerPanicked { machine }),
+            .map(|(machine, lease)| match lease {
+                Ok(l) => match l.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(TransportError::WorkerPanicked { machine }),
+                },
+                Err(e) => Err(TransportError::from_io(&e)),
             })
             .collect()
     }

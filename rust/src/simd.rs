@@ -1,0 +1,790 @@
+//! Explicit SIMD lanes for the fused block kernels, behind the `simd`
+//! cargo feature — with the scalar twins always compiled as the
+//! bit-parity reference.
+//!
+//! # §Perf — dispatch design
+//!
+//! Every kernel here is a *pair*: a public `…_scalar` loop (the exact
+//! arithmetic the seed paths performed, op for op) and a dispatching
+//! wrapper of the same name that routes to an AVX2 `f64x4`/`u64x4` body
+//! when three gates all pass:
+//!
+//! 1. the crate was built with `--features simd`,
+//! 2. the target is `x86_64`,
+//! 3. the CPU reports AVX2 at runtime (checked once, cached in an
+//!    atomic — the shim costs one relaxed load per call thereafter).
+//!
+//! Otherwise the wrapper *is* the scalar twin. `std::simd` is still
+//! nightly-only, so the lanes are written against stable
+//! `core::arch::x86_64` intrinsics; on non-x86_64 targets the feature
+//! compiles but stays inert (scalar everywhere).
+//!
+//! # Bit parity
+//!
+//! The vector bodies are chosen so every lane performs the *identical*
+//! IEEE-754 operation sequence as the scalar twin on its element:
+//! `vaddpd`/`vsubpd`/`vmulpd` are the same correctly-rounded f64
+//! add/sub/mul per lane (no FMA contraction is ever introduced), and
+//! `vroundpd` with `_MM_FROUND_TO_NEAREST_INT` is exactly
+//! `f64::round_ties_even`. The one non-obvious kernel is
+//! [`uniform_from_bits`], where AVX2 has no u64→f64 convert: the
+//! magic-constant split (high 21 bits through 2⁸⁴, low 32 through 2⁵²)
+//! reassembles any `x < 2⁵³` *exactly*, because every intermediate value
+//! is representable — so it equals the scalar `as f64` cast bit for
+//! bit. Integer kernels ([`pack_fields`], [`unpack_fields`]) are
+//! shift/or/and, which have no rounding at all. Dispatched ≡ scalar is
+//! pinned across widths, misaligned tails, `d = 1`, subnormals and
+//! negative zero by `rust/tests/prop.rs` (`prop_simd_*`), and the
+//! sessions that ride these kernels stay pinned to their scalar
+//! references by the existing parity suites.
+//!
+//! Consumers: the FWHT butterfly layers ([`crate::quant::hadamard`]),
+//! the lattice stochastic-rounding encode/decode stages
+//! ([`crate::quant::lq`], [`crate::quant::d4`]), the bulk uniform
+//! converter ([`crate::rng::Rng::fill_uniform`]) and the field
+//! pack/unpack loops ([`crate::quant::bits`]).
+
+/// True when the crate was compiled with SIMD lanes available for this
+/// target (`--features simd` on x86_64).
+pub fn compiled() -> bool {
+    cfg!(all(feature = "simd", target_arch = "x86_64"))
+}
+
+/// True when calls are currently dispatching to the AVX2 lanes (feature
+/// compiled in *and* the CPU supports AVX2).
+pub fn active() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        avx2()
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// Human-readable lane description for logs and bench headers.
+pub fn lanes() -> &'static str {
+    if active() {
+        "avx2 f64x4"
+    } else {
+        "scalar"
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn avx2() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    // 0 = unknown, 1 = unavailable, 2 = available.
+    static STATE: AtomicU8 = AtomicU8::new(0);
+    match STATE.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let yes = std::arch::is_x86_feature_detected!("avx2");
+            STATE.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+/// Routes `name(args…)` to the AVX2 body under the three dispatch gates,
+/// else to `name_scalar`. Keeps the wrapper pairs honest and identical.
+macro_rules! dispatch {
+    ($avx:path, $scalar:ident, ($($arg:expr),*)) => {{
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if avx2() {
+            // SAFETY: the dispatch gate just verified AVX2 support.
+            return unsafe { $avx($($arg),*) };
+        }
+        $scalar($($arg),*)
+    }};
+}
+
+// ---------------------------------------------------------------------
+// FWHT butterflies (hadamard.rs)
+// ---------------------------------------------------------------------
+
+/// One radix-2 butterfly half-layer: `(lo[j], hi[j]) ← (lo[j] + hi[j],
+/// lo[j] − hi[j])`.
+#[inline]
+pub fn butterfly2(lo: &mut [f64], hi: &mut [f64]) {
+    dispatch!(avx2_impl::butterfly2, butterfly2_scalar, (lo, hi))
+}
+
+/// Scalar reference for [`butterfly2`] (the seed's loop, verbatim).
+pub fn butterfly2_scalar(lo: &mut [f64], hi: &mut [f64]) {
+    debug_assert_eq!(lo.len(), hi.len());
+    for (a, b) in lo.iter_mut().zip(hi) {
+        let (u, v) = (*a, *b);
+        *a = u + v;
+        *b = u - v;
+    }
+}
+
+/// Fused radix-4 butterfly over four equal-length stride slices — both
+/// radix-2 stages in registers, identical add/sub associativity.
+#[inline]
+pub fn butterfly4(g0: &mut [f64], g1: &mut [f64], g2: &mut [f64], g3: &mut [f64]) {
+    dispatch!(avx2_impl::butterfly4, butterfly4_scalar, (g0, g1, g2, g3))
+}
+
+/// Scalar reference for [`butterfly4`].
+pub fn butterfly4_scalar(g0: &mut [f64], g1: &mut [f64], g2: &mut [f64], g3: &mut [f64]) {
+    debug_assert!(g0.len() == g1.len() && g1.len() == g2.len() && g2.len() == g3.len());
+    for j in 0..g0.len() {
+        let (y0, y1, y2, y3) = (g0[j], g1[j], g2[j], g3[j]);
+        // Stage h:
+        let u0 = y0 + y1;
+        let u1 = y0 - y1;
+        let u2 = y2 + y3;
+        let u3 = y2 - y3;
+        // Stage 2h:
+        g0[j] = u0 + u2;
+        g1[j] = u1 + u3;
+        g2[j] = u0 - u2;
+        g3[j] = u1 - u3;
+    }
+}
+
+/// Radix-2 butterfly with a constant scale fused into the stores (the
+/// FWHT's final 1/√d layer).
+#[inline]
+pub fn butterfly2_scaled(lo: &mut [f64], hi: &mut [f64], scale: f64) {
+    dispatch!(
+        avx2_impl::butterfly2_scaled,
+        butterfly2_scaled_scalar,
+        (lo, hi, scale)
+    )
+}
+
+/// Scalar reference for [`butterfly2_scaled`].
+pub fn butterfly2_scaled_scalar(lo: &mut [f64], hi: &mut [f64], scale: f64) {
+    debug_assert_eq!(lo.len(), hi.len());
+    for (a, b) in lo.iter_mut().zip(hi) {
+        let (u, v) = (*a, *b);
+        *a = (u + v) * scale;
+        *b = (u - v) * scale;
+    }
+}
+
+/// Radix-2 butterfly with a per-element diagonal fused into the stores
+/// (the inverse rotation's `sign[i]·norm` layer).
+#[inline]
+pub fn butterfly2_diag(lo: &mut [f64], hi: &mut [f64], dlo: &[f64], dhi: &[f64]) {
+    dispatch!(
+        avx2_impl::butterfly2_diag,
+        butterfly2_diag_scalar,
+        (lo, hi, dlo, dhi)
+    )
+}
+
+/// Scalar reference for [`butterfly2_diag`].
+pub fn butterfly2_diag_scalar(lo: &mut [f64], hi: &mut [f64], dlo: &[f64], dhi: &[f64]) {
+    debug_assert!(lo.len() == hi.len() && lo.len() == dlo.len() && lo.len() == dhi.len());
+    for j in 0..lo.len() {
+        let (u, v) = (lo[j], hi[j]);
+        lo[j] = (u + v) * dlo[j];
+        hi[j] = (u - v) * dhi[j];
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lattice quantize/decode stages (lq.rs, d4.rs)
+// ---------------------------------------------------------------------
+
+/// Offset-and-scale stage: `out[j] = (x[j] − off[j]) * inv` (the D4
+/// bucket kernel's pre-quantization staging).
+#[inline]
+pub fn scale_offset(x: &[f64], off: &[f64], inv: f64, out: &mut [f64]) {
+    dispatch!(avx2_impl::scale_offset, scale_offset_scalar, (x, off, inv, out))
+}
+
+/// Scalar reference for [`scale_offset`].
+pub fn scale_offset_scalar(x: &[f64], off: &[f64], inv: f64, out: &mut [f64]) {
+    debug_assert!(x.len() == off.len() && x.len() == out.len());
+    for j in 0..out.len() {
+        out[j] = (x[j] - off[j]) * inv;
+    }
+}
+
+/// Rounded quantize stage: `out[j] = ((x[j] − off[j]) * inv)
+/// .round_ties_even()` — the cubic-lattice nearest-index computation
+/// (the `as i64` cast and color reduction stay scalar in the caller and
+/// consume these exact f64s, so staging changes no bit).
+#[inline]
+pub fn quantize_scaled(x: &[f64], off: &[f64], inv: f64, out: &mut [f64]) {
+    dispatch!(
+        avx2_impl::quantize_scaled,
+        quantize_scaled_scalar,
+        (x, off, inv, out)
+    )
+}
+
+/// Scalar reference for [`quantize_scaled`].
+pub fn quantize_scaled_scalar(x: &[f64], off: &[f64], inv: f64, out: &mut [f64]) {
+    debug_assert!(x.len() == off.len() && x.len() == out.len());
+    for j in 0..out.len() {
+        out[j] = ((x[j] - off[j]) * inv).round_ties_even();
+    }
+}
+
+/// Lattice decode stage: `out[j] = ((reference[j] − off[j]) * inv_sq −
+/// cf[j] * inv_q).round_ties_even()` — the per-coordinate congruence
+/// solve of the lattice `decode_fold`, with `cf` the received colors
+/// pre-converted to f64.
+#[inline]
+pub fn fold_decode_indices(
+    reference: &[f64],
+    off: &[f64],
+    cf: &[f64],
+    inv_sq: f64,
+    inv_q: f64,
+    out: &mut [f64],
+) {
+    dispatch!(
+        avx2_impl::fold_decode_indices,
+        fold_decode_indices_scalar,
+        (reference, off, cf, inv_sq, inv_q, out)
+    )
+}
+
+/// Scalar reference for [`fold_decode_indices`].
+pub fn fold_decode_indices_scalar(
+    reference: &[f64],
+    off: &[f64],
+    cf: &[f64],
+    inv_sq: f64,
+    inv_q: f64,
+    out: &mut [f64],
+) {
+    debug_assert!(
+        reference.len() == off.len() && reference.len() == cf.len() && reference.len() == out.len()
+    );
+    for j in 0..out.len() {
+        out[j] = ((reference[j] - off[j]) * inv_sq - cf[j] * inv_q).round_ties_even();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bulk uniform conversion (rng.rs)
+// ---------------------------------------------------------------------
+
+/// The 53-bit uniform conversion: `out[j] = (words[j] >> 11) as f64 *
+/// 2⁻⁵³` — [`crate::rng::Rng::fill_uniform`]'s conversion stage (the
+/// xoshiro state recurrence itself is serial and stays in the caller).
+#[inline]
+pub fn uniform_from_bits(words: &[u64], out: &mut [f64]) {
+    dispatch!(
+        avx2_impl::uniform_from_bits,
+        uniform_from_bits_scalar,
+        (words, out)
+    )
+}
+
+/// Scalar reference for [`uniform_from_bits`].
+pub fn uniform_from_bits_scalar(words: &[u64], out: &mut [f64]) {
+    const SCALE: f64 = 1.0 / (1u64 << 53) as f64;
+    debug_assert_eq!(words.len(), out.len());
+    for (o, &w) in out.iter_mut().zip(words) {
+        *o = (w >> 11) as f64 * SCALE;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bit-field pack/unpack (bits.rs)
+// ---------------------------------------------------------------------
+
+/// OR-pack `vals` as consecutive `width`-bit fields starting at bit
+/// `base` of a fresh accumulator word: returns `⊕ⱼ vals[j] << (base +
+/// j·width)`. Caller contract (the `push_block` fast path): `width ≥ 1`
+/// and `base + vals.len()·width ≤ 64`, so every shift is `< 64`.
+#[inline]
+pub fn pack_fields(vals: &[u64], width: u32, base: u32) -> u64 {
+    dispatch!(avx2_impl::pack_fields, pack_fields_scalar, (vals, width, base))
+}
+
+/// Scalar reference for [`pack_fields`].
+pub fn pack_fields_scalar(vals: &[u64], width: u32, base: u32) -> u64 {
+    debug_assert!(width >= 1 && base as u64 + vals.len() as u64 * width as u64 <= 64);
+    let mut acc = 0u64;
+    let mut bits = base;
+    for &v in vals {
+        acc |= v << bits;
+        bits += width;
+    }
+    acc
+}
+
+/// Unpack consecutive `width`-bit fields of `w` into `out`: `out[j] =
+/// (w >> (j·width)) & mask`. Caller contract (the `read_block` fast
+/// path): `width ≥ 1`, `mask` the `width`-bit mask, and
+/// `(out.len() − 1)·width < 64`.
+#[inline]
+pub fn unpack_fields(w: u64, width: u32, mask: u64, out: &mut [u64]) {
+    dispatch!(
+        avx2_impl::unpack_fields,
+        unpack_fields_scalar,
+        (w, width, mask, out)
+    )
+}
+
+/// Scalar reference for [`unpack_fields`].
+pub fn unpack_fields_scalar(w: u64, width: u32, mask: u64, out: &mut [u64]) {
+    debug_assert!(width >= 1 && (out.is_empty() || (out.len() as u64 - 1) * width as u64 <= 63));
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = (w >> (j as u32 * width)) & mask;
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 bodies (x86_64, `simd` feature). Every loop: 4-lane main body +
+// the scalar twin's loop on the ragged tail.
+// ---------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2_impl {
+    use std::arch::x86_64::*;
+
+    /// `vroundpd` immediate for round-to-nearest-even, exceptions
+    /// suppressed — exactly `f64::round_ties_even` per lane.
+    const ROUND_EVEN: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn butterfly2(lo: &mut [f64], hi: &mut [f64]) {
+        debug_assert_eq!(lo.len(), hi.len());
+        let n = lo.len();
+        let lp = lo.as_mut_ptr();
+        let hp = hi.as_mut_ptr();
+        let mut j = 0;
+        while j + 4 <= n {
+            let u = _mm256_loadu_pd(lp.add(j));
+            let v = _mm256_loadu_pd(hp.add(j));
+            _mm256_storeu_pd(lp.add(j), _mm256_add_pd(u, v));
+            _mm256_storeu_pd(hp.add(j), _mm256_sub_pd(u, v));
+            j += 4;
+        }
+        while j < n {
+            let (u, v) = (*lp.add(j), *hp.add(j));
+            *lp.add(j) = u + v;
+            *hp.add(j) = u - v;
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn butterfly4(g0: &mut [f64], g1: &mut [f64], g2: &mut [f64], g3: &mut [f64]) {
+        debug_assert!(g0.len() == g1.len() && g1.len() == g2.len() && g2.len() == g3.len());
+        let n = g0.len();
+        let (p0, p1, p2, p3) = (
+            g0.as_mut_ptr(),
+            g1.as_mut_ptr(),
+            g2.as_mut_ptr(),
+            g3.as_mut_ptr(),
+        );
+        let mut j = 0;
+        while j + 4 <= n {
+            let y0 = _mm256_loadu_pd(p0.add(j));
+            let y1 = _mm256_loadu_pd(p1.add(j));
+            let y2 = _mm256_loadu_pd(p2.add(j));
+            let y3 = _mm256_loadu_pd(p3.add(j));
+            let u0 = _mm256_add_pd(y0, y1);
+            let u1 = _mm256_sub_pd(y0, y1);
+            let u2 = _mm256_add_pd(y2, y3);
+            let u3 = _mm256_sub_pd(y2, y3);
+            _mm256_storeu_pd(p0.add(j), _mm256_add_pd(u0, u2));
+            _mm256_storeu_pd(p1.add(j), _mm256_add_pd(u1, u3));
+            _mm256_storeu_pd(p2.add(j), _mm256_sub_pd(u0, u2));
+            _mm256_storeu_pd(p3.add(j), _mm256_sub_pd(u1, u3));
+            j += 4;
+        }
+        while j < n {
+            let (y0, y1, y2, y3) = (*p0.add(j), *p1.add(j), *p2.add(j), *p3.add(j));
+            let u0 = y0 + y1;
+            let u1 = y0 - y1;
+            let u2 = y2 + y3;
+            let u3 = y2 - y3;
+            *p0.add(j) = u0 + u2;
+            *p1.add(j) = u1 + u3;
+            *p2.add(j) = u0 - u2;
+            *p3.add(j) = u1 - u3;
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn butterfly2_scaled(lo: &mut [f64], hi: &mut [f64], scale: f64) {
+        debug_assert_eq!(lo.len(), hi.len());
+        let n = lo.len();
+        let lp = lo.as_mut_ptr();
+        let hp = hi.as_mut_ptr();
+        let sv = _mm256_set1_pd(scale);
+        let mut j = 0;
+        while j + 4 <= n {
+            let u = _mm256_loadu_pd(lp.add(j));
+            let v = _mm256_loadu_pd(hp.add(j));
+            _mm256_storeu_pd(lp.add(j), _mm256_mul_pd(_mm256_add_pd(u, v), sv));
+            _mm256_storeu_pd(hp.add(j), _mm256_mul_pd(_mm256_sub_pd(u, v), sv));
+            j += 4;
+        }
+        while j < n {
+            let (u, v) = (*lp.add(j), *hp.add(j));
+            *lp.add(j) = (u + v) * scale;
+            *hp.add(j) = (u - v) * scale;
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn butterfly2_diag(lo: &mut [f64], hi: &mut [f64], dlo: &[f64], dhi: &[f64]) {
+        debug_assert!(lo.len() == hi.len() && lo.len() == dlo.len() && lo.len() == dhi.len());
+        let n = lo.len();
+        let lp = lo.as_mut_ptr();
+        let hp = hi.as_mut_ptr();
+        let dl = dlo.as_ptr();
+        let dh = dhi.as_ptr();
+        let mut j = 0;
+        while j + 4 <= n {
+            let u = _mm256_loadu_pd(lp.add(j));
+            let v = _mm256_loadu_pd(hp.add(j));
+            let a = _mm256_mul_pd(_mm256_add_pd(u, v), _mm256_loadu_pd(dl.add(j)));
+            let b = _mm256_mul_pd(_mm256_sub_pd(u, v), _mm256_loadu_pd(dh.add(j)));
+            _mm256_storeu_pd(lp.add(j), a);
+            _mm256_storeu_pd(hp.add(j), b);
+            j += 4;
+        }
+        while j < n {
+            let (u, v) = (*lp.add(j), *hp.add(j));
+            *lp.add(j) = (u + v) * *dl.add(j);
+            *hp.add(j) = (u - v) * *dh.add(j);
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_offset(x: &[f64], off: &[f64], inv: f64, out: &mut [f64]) {
+        debug_assert!(x.len() == off.len() && x.len() == out.len());
+        let n = out.len();
+        let xp = x.as_ptr();
+        let op = off.as_ptr();
+        let rp = out.as_mut_ptr();
+        let iv = _mm256_set1_pd(inv);
+        let mut j = 0;
+        while j + 4 <= n {
+            let t = _mm256_mul_pd(
+                _mm256_sub_pd(_mm256_loadu_pd(xp.add(j)), _mm256_loadu_pd(op.add(j))),
+                iv,
+            );
+            _mm256_storeu_pd(rp.add(j), t);
+            j += 4;
+        }
+        while j < n {
+            *rp.add(j) = (*xp.add(j) - *op.add(j)) * inv;
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_scaled(x: &[f64], off: &[f64], inv: f64, out: &mut [f64]) {
+        debug_assert!(x.len() == off.len() && x.len() == out.len());
+        let n = out.len();
+        let xp = x.as_ptr();
+        let op = off.as_ptr();
+        let rp = out.as_mut_ptr();
+        let iv = _mm256_set1_pd(inv);
+        let mut j = 0;
+        while j + 4 <= n {
+            let t = _mm256_mul_pd(
+                _mm256_sub_pd(_mm256_loadu_pd(xp.add(j)), _mm256_loadu_pd(op.add(j))),
+                iv,
+            );
+            _mm256_storeu_pd(rp.add(j), _mm256_round_pd::<ROUND_EVEN>(t));
+            j += 4;
+        }
+        while j < n {
+            *rp.add(j) = ((*xp.add(j) - *op.add(j)) * inv).round_ties_even();
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fold_decode_indices(
+        reference: &[f64],
+        off: &[f64],
+        cf: &[f64],
+        inv_sq: f64,
+        inv_q: f64,
+        out: &mut [f64],
+    ) {
+        debug_assert!(
+            reference.len() == off.len()
+                && reference.len() == cf.len()
+                && reference.len() == out.len()
+        );
+        let n = out.len();
+        let rp = reference.as_ptr();
+        let op = off.as_ptr();
+        let cp = cf.as_ptr();
+        let mp = out.as_mut_ptr();
+        let isq = _mm256_set1_pd(inv_sq);
+        let iq = _mm256_set1_pd(inv_q);
+        let mut j = 0;
+        while j + 4 <= n {
+            let t = _mm256_mul_pd(
+                _mm256_sub_pd(_mm256_loadu_pd(rp.add(j)), _mm256_loadu_pd(op.add(j))),
+                isq,
+            );
+            let u = _mm256_mul_pd(_mm256_loadu_pd(cp.add(j)), iq);
+            _mm256_storeu_pd(mp.add(j), _mm256_round_pd::<ROUND_EVEN>(_mm256_sub_pd(t, u)));
+            j += 4;
+        }
+        while j < n {
+            *mp.add(j) =
+                ((*rp.add(j) - *op.add(j)) * inv_sq - *cp.add(j) * inv_q).round_ties_even();
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    ///
+    /// AVX2 has no packed u64→f64 convert, so the conversion splits the
+    /// 53-bit value `x = words[j] >> 11` into high 21 and low 32 bits,
+    /// ORs them into the mantissas of 2⁸⁴ and 2⁵² respectively
+    /// (`(x>>32) | bits(2⁸⁴)` *is* `2⁸⁴ + (x>>32)·2³²` as an f64), and
+    /// reassembles `x = (hi_d − (2⁸⁴ + 2⁵²)) + lo_d`. Every step is
+    /// exact for `x < 2⁵³` (all intermediates are representable), so the
+    /// result equals the scalar `as f64` cast bit for bit.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn uniform_from_bits(words: &[u64], out: &mut [f64]) {
+        const SCALE: f64 = 1.0 / (1u64 << 53) as f64;
+        const HI_MAGIC: f64 = f64::from_bits(0x4530_0000_0000_0000); // 2^84
+        const LO_MAGIC: f64 = f64::from_bits(0x4330_0000_0000_0000); // 2^52
+        debug_assert_eq!(words.len(), out.len());
+        let n = words.len();
+        let wp = words.as_ptr();
+        let op = out.as_mut_ptr();
+        let hi_bits = _mm256_castpd_si256(_mm256_set1_pd(HI_MAGIC));
+        let lo_bits = _mm256_castpd_si256(_mm256_set1_pd(LO_MAGIC));
+        let corr = _mm256_set1_pd(HI_MAGIC + LO_MAGIC); // exact: 2^84 + 2^52
+        let lo_mask = _mm256_set1_epi64x(0xFFFF_FFFF);
+        let scale = _mm256_set1_pd(SCALE);
+        let mut j = 0;
+        while j + 4 <= n {
+            let x = _mm256_srli_epi64::<11>(_mm256_loadu_si256(wp.add(j) as *const __m256i));
+            let xh = _mm256_or_si256(_mm256_srli_epi64::<32>(x), hi_bits);
+            let xl = _mm256_or_si256(_mm256_and_si256(x, lo_mask), lo_bits);
+            let f = _mm256_add_pd(
+                _mm256_sub_pd(_mm256_castsi256_pd(xh), corr),
+                _mm256_castsi256_pd(xl),
+            );
+            _mm256_storeu_pd(op.add(j), _mm256_mul_pd(f, scale));
+            j += 4;
+        }
+        while j < n {
+            *op.add(j) = (*wp.add(j) >> 11) as f64 * SCALE;
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available. Same shift contract as the
+    /// scalar twin: `base + vals.len()·width ≤ 64` (every `vpsllvq`
+    /// shift count stays below 64).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn pack_fields(vals: &[u64], width: u32, base: u32) -> u64 {
+        debug_assert!(width >= 1 && base as u64 + vals.len() as u64 * width as u64 <= 64);
+        let n = vals.len();
+        let vp = vals.as_ptr();
+        let step = _mm256_set1_epi64x(4 * width as i64);
+        let mut sh = _mm256_setr_epi64x(
+            base as i64,
+            (base + width) as i64,
+            (base + 2 * width) as i64,
+            (base + 3 * width) as i64,
+        );
+        let mut accv = _mm256_setzero_si256();
+        let mut j = 0;
+        while j + 4 <= n {
+            let v = _mm256_loadu_si256(vp.add(j) as *const __m256i);
+            accv = _mm256_or_si256(accv, _mm256_sllv_epi64(v, sh));
+            sh = _mm256_add_epi64(sh, step);
+            j += 4;
+        }
+        let halves = _mm_or_si128(
+            _mm256_castsi256_si128(accv),
+            _mm256_extracti128_si256::<1>(accv),
+        );
+        let mut acc =
+            (_mm_cvtsi128_si64(halves) as u64) | (_mm_extract_epi64::<1>(halves) as u64);
+        let mut bits = base + j as u32 * width;
+        while j < n {
+            acc |= *vp.add(j) << bits;
+            bits += width;
+            j += 1;
+        }
+        acc
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available. Same shift contract as the
+    /// scalar twin: `(out.len() − 1)·width < 64`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_fields(w: u64, width: u32, mask: u64, out: &mut [u64]) {
+        debug_assert!(width >= 1 && (out.is_empty() || (out.len() as u64 - 1) * width as u64 <= 63));
+        let n = out.len();
+        let op = out.as_mut_ptr();
+        let wv = _mm256_set1_epi64x(w as i64);
+        let mv = _mm256_set1_epi64x(mask as i64);
+        let step = _mm256_set1_epi64x(4 * width as i64);
+        let mut sh = _mm256_setr_epi64x(0, width as i64, 2 * width as i64, 3 * width as i64);
+        let mut j = 0;
+        while j + 4 <= n {
+            let v = _mm256_and_si256(_mm256_srlv_epi64(wv, sh), mv);
+            _mm256_storeu_si256(op.add(j) as *mut __m256i, v);
+            sh = _mm256_add_epi64(sh, step);
+            j += 4;
+        }
+        let mut shift = j as u32 * width;
+        while j < n {
+            *op.add(j) = (w >> shift) & mask;
+            shift += width;
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Values exercising every rounding/edge class: ties, subnormals,
+    /// negative zero, large magnitudes, ragged lengths.
+    fn edge_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|i| match i % 7 {
+                0 => -0.0,
+                1 => f64::from_bits(rng.next_u64() & 0xF_FFFF_FFFF_FFFF), // subnormal
+                2 => (rng.next_below(41) as f64 - 20.0) * 0.5,            // exact ties
+                3 => rng.uniform(-1e12, 1e12),
+                _ => rng.uniform(-8.0, 8.0),
+            })
+            .collect()
+    }
+
+    fn bits_of(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn dispatched_kernels_match_scalar_twins_bitwise() {
+        let mut rng = Rng::new(0xD15);
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 33, 64, 127] {
+            let a = edge_vec(&mut rng, n);
+            let b = edge_vec(&mut rng, n);
+            let d1 = edge_vec(&mut rng, n);
+            let d2 = edge_vec(&mut rng, n);
+
+            let (mut l1, mut h1) = (a.clone(), b.clone());
+            let (mut l2, mut h2) = (a.clone(), b.clone());
+            butterfly2(&mut l1, &mut h1);
+            butterfly2_scalar(&mut l2, &mut h2);
+            assert_eq!(bits_of(&l1), bits_of(&l2), "butterfly2 lo n={n}");
+            assert_eq!(bits_of(&h1), bits_of(&h2), "butterfly2 hi n={n}");
+
+            let (mut l1, mut h1) = (a.clone(), b.clone());
+            let (mut l2, mut h2) = (a.clone(), b.clone());
+            butterfly2_scaled(&mut l1, &mut h1, 0.1234);
+            butterfly2_scaled_scalar(&mut l2, &mut h2, 0.1234);
+            assert_eq!(bits_of(&l1), bits_of(&l2), "butterfly2_scaled n={n}");
+            assert_eq!(bits_of(&h1), bits_of(&h2), "butterfly2_scaled n={n}");
+
+            let (mut l1, mut h1) = (a.clone(), b.clone());
+            let (mut l2, mut h2) = (a.clone(), b.clone());
+            butterfly2_diag(&mut l1, &mut h1, &d1, &d2);
+            butterfly2_diag_scalar(&mut l2, &mut h2, &d1, &d2);
+            assert_eq!(bits_of(&l1), bits_of(&l2), "butterfly2_diag n={n}");
+            assert_eq!(bits_of(&h1), bits_of(&h2), "butterfly2_diag n={n}");
+
+            let (mut q0, mut q1) = (a.clone(), b.clone());
+            let (mut q2, mut q3) = (d1.clone(), d2.clone());
+            let (mut r0, mut r1) = (a.clone(), b.clone());
+            let (mut r2, mut r3) = (d1.clone(), d2.clone());
+            butterfly4(&mut q0, &mut q1, &mut q2, &mut q3);
+            butterfly4_scalar(&mut r0, &mut r1, &mut r2, &mut r3);
+            for (g, r) in [(&q0, &r0), (&q1, &r1), (&q2, &r2), (&q3, &r3)] {
+                assert_eq!(bits_of(g), bits_of(r), "butterfly4 n={n}");
+            }
+
+            let mut o1 = vec![0.0; n];
+            let mut o2 = vec![0.0; n];
+            quantize_scaled(&a, &b, 1.75, &mut o1);
+            quantize_scaled_scalar(&a, &b, 1.75, &mut o2);
+            assert_eq!(bits_of(&o1), bits_of(&o2), "quantize_scaled n={n}");
+            scale_offset(&a, &b, -0.37, &mut o1);
+            scale_offset_scalar(&a, &b, -0.37, &mut o2);
+            assert_eq!(bits_of(&o1), bits_of(&o2), "scale_offset n={n}");
+            fold_decode_indices(&a, &b, &d1, 0.81, 0.0625, &mut o1);
+            fold_decode_indices_scalar(&a, &b, &d1, 0.81, 0.0625, &mut o2);
+            assert_eq!(bits_of(&o1), bits_of(&o2), "fold_decode_indices n={n}");
+
+            let words: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            uniform_from_bits(&words, &mut o1);
+            uniform_from_bits_scalar(&words, &mut o2);
+            assert_eq!(bits_of(&o1), bits_of(&o2), "uniform_from_bits n={n}");
+        }
+    }
+
+    #[test]
+    fn field_kernels_match_scalar_twins_every_width() {
+        let mut rng = Rng::new(0xB17);
+        for width in 1..=64u32 {
+            let mask = if width == 64 {
+                u64::MAX
+            } else {
+                (1u64 << width) - 1
+            };
+            let max_fields = (64 / width) as usize;
+            for count in 0..=max_fields {
+                let base_room = 64 - count as u32 * width;
+                for base in [0, base_room / 2, base_room] {
+                    let vals: Vec<u64> = (0..count).map(|_| rng.next_u64() & mask).collect();
+                    assert_eq!(
+                        pack_fields(&vals, width, base),
+                        pack_fields_scalar(&vals, width, base),
+                        "pack width={width} count={count} base={base}"
+                    );
+                }
+                let w = rng.next_u64();
+                let mut o1 = vec![0u64; count];
+                let mut o2 = vec![0u64; count];
+                unpack_fields(w, width, mask, &mut o1);
+                unpack_fields_scalar(w, width, mask, &mut o2);
+                assert_eq!(o1, o2, "unpack width={width} count={count}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_report_is_consistent() {
+        // `active()` implies `compiled()`; the label matches.
+        assert!(!active() || compiled());
+        assert_eq!(lanes() == "scalar", !active());
+    }
+}

@@ -1042,3 +1042,222 @@ fn prop_baseline_encode_chunked_matches_sequential() {
         check_one(&mut ef, &x, &mut enc_rng, chunk);
     });
 }
+
+/// SIMD lanes ≡ scalar twins, bit for bit: every dispatched f64 kernel
+/// in `dme::simd` against its always-compiled scalar reference, across
+/// ragged lengths (0, 1, and tails around the 4-lane width), subnormal
+/// inputs, negative zero (compared via `to_bits` — `-0.0 == 0.0` under
+/// `PartialEq`, which would mask a sign flip), exact ties, and large
+/// magnitudes. Without `--features simd` this pins the trivial identity;
+/// with it, it pins the AVX2 lanes against the same references.
+#[test]
+fn prop_simd_float_kernels_bitwise_match_scalar() {
+    use dme::simd;
+    fn edge(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|_| match rng.next_below(8) {
+                0 => -0.0,
+                1 => 0.0,
+                2 => f64::from_bits(rng.next_u64() & 0xF_FFFF_FFFF_FFFF), // subnormal
+                3 => (rng.next_below(81) as f64 - 40.0) * 0.25,           // exact ties
+                4 => rng.uniform(-1e15, 1e15),
+                _ => rng.uniform(-10.0, 10.0),
+            })
+            .collect()
+    }
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+    check("simd_float_kernels", 60, |rng| {
+        let n = [0usize, 1, 2, 3, 4, 5, 7, 8, 15, 33, 64, 65][rng.next_below(12) as usize];
+        let a = edge(rng, n);
+        let b = edge(rng, n);
+        let c = edge(rng, n);
+        let e = edge(rng, n);
+        let scale = rng.uniform(-3.0, 3.0);
+
+        let (mut l1, mut h1) = (a.clone(), b.clone());
+        let (mut l2, mut h2) = (a.clone(), b.clone());
+        simd::butterfly2(&mut l1, &mut h1);
+        simd::butterfly2_scalar(&mut l2, &mut h2);
+        assert_eq!((bits(&l1), bits(&h1)), (bits(&l2), bits(&h2)), "butterfly2 n={n}");
+
+        let (mut l1, mut h1) = (a.clone(), b.clone());
+        let (mut l2, mut h2) = (a.clone(), b.clone());
+        simd::butterfly2_scaled(&mut l1, &mut h1, scale);
+        simd::butterfly2_scaled_scalar(&mut l2, &mut h2, scale);
+        assert_eq!((bits(&l1), bits(&h1)), (bits(&l2), bits(&h2)), "scaled n={n}");
+
+        let (mut l1, mut h1) = (a.clone(), b.clone());
+        let (mut l2, mut h2) = (a.clone(), b.clone());
+        simd::butterfly2_diag(&mut l1, &mut h1, &c, &e);
+        simd::butterfly2_diag_scalar(&mut l2, &mut h2, &c, &e);
+        assert_eq!((bits(&l1), bits(&h1)), (bits(&l2), bits(&h2)), "diag n={n}");
+
+        let mut q = [a.clone(), b.clone(), c.clone(), e.clone()];
+        let mut r = q.clone();
+        {
+            let [q0, q1, q2, q3] = &mut q;
+            simd::butterfly4(q0, q1, q2, q3);
+            let [r0, r1, r2, r3] = &mut r;
+            simd::butterfly4_scalar(r0, r1, r2, r3);
+        }
+        for (g, s) in q.iter().zip(&r) {
+            assert_eq!(bits(g), bits(s), "butterfly4 n={n}");
+        }
+
+        let mut o1 = vec![0.0; n];
+        let mut o2 = vec![0.0; n];
+        simd::quantize_scaled(&a, &b, scale, &mut o1);
+        simd::quantize_scaled_scalar(&a, &b, scale, &mut o2);
+        assert_eq!(bits(&o1), bits(&o2), "quantize_scaled n={n}");
+        simd::scale_offset(&a, &b, scale, &mut o1);
+        simd::scale_offset_scalar(&a, &b, scale, &mut o2);
+        assert_eq!(bits(&o1), bits(&o2), "scale_offset n={n}");
+        let (isq, iq) = (rng.uniform(0.01, 4.0), rng.uniform(0.01, 1.0));
+        simd::fold_decode_indices(&a, &b, &c, isq, iq, &mut o1);
+        simd::fold_decode_indices_scalar(&a, &b, &c, isq, iq, &mut o2);
+        assert_eq!(bits(&o1), bits(&o2), "fold_decode_indices n={n}");
+
+        let words: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        simd::uniform_from_bits(&words, &mut o1);
+        simd::uniform_from_bits_scalar(&words, &mut o2);
+        assert_eq!(bits(&o1), bits(&o2), "uniform_from_bits n={n}");
+    });
+}
+
+/// SIMD field pack/unpack ≡ scalar twins for every width 1–64, every
+/// field count that fits a word, and arbitrary base offsets — the exact
+/// contracts `BitWriter::push_block` / `BitReader::read_block` dispatch
+/// under. (Width 0 never reaches these kernels: both block entry points
+/// early-return on it, which `prop_push_block`/`prop_read_block` pin.)
+#[test]
+fn prop_simd_field_pack_unpack_bitwise_all_widths() {
+    use dme::simd;
+    check("simd_fields", 120, |rng| {
+        let width = 1 + rng.next_below(64) as u32;
+        let mask = if width == 64 {
+            u64::MAX
+        } else {
+            (1u64 << width) - 1
+        };
+        let max_fields = (64 / width) as u64;
+        let count = rng.next_below(max_fields + 1) as usize;
+        let base_room = 64 - count as u32 * width;
+        let base = rng.next_below(base_room as u64 + 1) as u32;
+        let vals: Vec<u64> = (0..count).map(|_| rng.next_u64() & mask).collect();
+        assert_eq!(
+            simd::pack_fields(&vals, width, base),
+            simd::pack_fields_scalar(&vals, width, base),
+            "pack width={width} count={count} base={base}"
+        );
+        let w = rng.next_u64();
+        let mut o1 = vec![0u64; count];
+        let mut o2 = vec![0u64; count];
+        simd::unpack_fields(w, width, mask, &mut o1);
+        simd::unpack_fields_scalar(w, width, mask, &mut o2);
+        assert_eq!(o1, o2, "unpack width={width} count={count}");
+    });
+}
+
+/// The bulk uniform fill stays stream-identical to repeated `next_f64`
+/// across the SIMD staging-block boundary (256 words): same bits, same
+/// final generator state, for lengths straddling 0, 1, the block edge,
+/// and multiple blocks.
+#[test]
+fn prop_bulk_uniform_fill_stream_identical_across_chunk_boundary() {
+    check("bulk_uniform_chunks", 30, |rng| {
+        let n = [0usize, 1, 5, 255, 256, 257, 700, 1024][rng.next_below(8) as usize];
+        let seed = rng.next_u64();
+        let mut bulk = Rng::new(seed);
+        let mut scalar = Rng::new(seed);
+        let mut out = vec![0.0; n];
+        bulk.fill_uniform(&mut out);
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o.to_bits(), scalar.next_f64().to_bits(), "i={i} n={n}");
+        }
+        assert_eq!(bulk.next_u64(), scalar.next_u64(), "state after fill n={n}");
+    });
+}
+
+/// Pool determinism, write side: the chunk-sharded encode is
+/// bit-identical to the sequential encode for pool sizes 1, 2 and 5, for
+/// repeated calls on the same pool, and on the shared global pool — the
+/// fixed shard→worker assignment and task-order stitching mean
+/// scheduling can never reach the wire.
+#[test]
+fn prop_pool_sharded_encode_bit_identical_across_pool_sizes() {
+    use dme::pool::ChunkPool;
+    check("pool_encode_determinism", 12, |rng| {
+        let d = [64usize, 257, 1024][rng.next_below(3) as usize];
+        let q = rand_q(rng);
+        let chunk = 1 + rng.next_below(64) as usize;
+        let mut shared = rng.fork(3);
+        let mut codec = LatticeQuantizer::from_y(d, q, 1.0, &mut shared);
+        let x = rand_vec(rng, d, 2.0, 5.0);
+        let enc_rng = rng.fork(4);
+        let expect = codec.encode(&x, &mut enc_rng.clone());
+        for size in [1usize, 2, 5] {
+            let pool = ChunkPool::new(size);
+            for repeat in 0..2 {
+                let mut msg = Message {
+                    bytes: vec![0xC3; 5],
+                    bits: 40,
+                };
+                dme::quant::encode_chunked_on(
+                    &pool,
+                    &mut codec,
+                    &x,
+                    &mut enc_rng.clone(),
+                    &mut msg,
+                    chunk,
+                );
+                assert_eq!(msg, expect, "pool size {size} repeat {repeat}");
+            }
+        }
+        let mut msg = Message {
+            bytes: Vec::new(),
+            bits: 0,
+        };
+        dme::quant::encode_chunked(&mut codec, &x, &mut enc_rng.clone(), &mut msg, chunk);
+        assert_eq!(msg, expect, "global pool");
+    });
+}
+
+/// Pool determinism, read side: the chunk-sharded fold is bit-identical
+/// to the sequential streaming fold for pool sizes 1, 2 and 5 and on the
+/// shared global pool — per coordinate the additions happen in the same
+/// pinned part order on every worker layout.
+#[test]
+fn prop_pool_sharded_fold_bit_identical_across_pool_sizes() {
+    use dme::coordinator::{fold_mean, fold_mean_chunked, fold_mean_chunked_on, FoldPart};
+    use dme::pool::ChunkPool;
+    check("pool_fold_determinism", 12, |rng| {
+        let d = [33usize, 257, 600][rng.next_below(3) as usize];
+        let n = 2 + rng.next_below(6) as usize;
+        let q = rand_q(rng);
+        let chunk = 1 + rng.next_below(64) as usize;
+        let mut shared = rng.fork(5);
+        let mut codec = LatticeQuantizer::from_y(d, q, 1.0, &mut shared);
+        let inputs: Vec<Vec<f64>> = (0..n).map(|_| rand_vec(rng, d, 10.0, 0.45)).collect();
+        let reference = inputs[0].clone();
+        let mut er = rng.fork(6);
+        let msgs: Vec<Message> = inputs[1..]
+            .iter()
+            .map(|x| codec.encode(x, &mut er))
+            .collect();
+        let mut parts = vec![FoldPart::Own(&inputs[0])];
+        parts.extend(msgs.iter().map(FoldPart::Encoded));
+        let mut expect = vec![0.0; d];
+        fold_mean(&codec, &parts, &reference, &mut expect);
+        for size in [1usize, 2, 5] {
+            let pool = ChunkPool::new(size);
+            let mut out = vec![-7.0; d];
+            fold_mean_chunked_on(&pool, &codec, &parts, &reference, &mut out, chunk);
+            assert_eq!(out, expect, "pool size {size}");
+        }
+        let mut out = vec![9.0; d];
+        fold_mean_chunked(&codec, &parts, &reference, &mut out, chunk);
+        assert_eq!(out, expect, "global pool");
+    });
+}
