@@ -41,6 +41,13 @@
 //!    a deadline closes a short round over the k ≤ n arrived reports
 //!    with the mean renormalized by 1/k. The `dme serve` / `dme report`
 //!    subcommands wrap exactly this API.
+//! 11. In-round fault tolerance (`net::faulty` + `DmeSession::round_partial`):
+//!    wrap the session's transport in a seeded fault-injection layer and
+//!    run k-of-n partial rounds under a `StragglerPolicy` — dropped
+//!    machines cost accuracy (the 1/k-renormalized partial mean), never
+//!    a hang or a panic; an under-quorum round fails with a *typed*
+//!    `QuorumFailed` and the session keeps serving. One `FaultPlan` seed
+//!    reproduces the whole fault schedule.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -393,4 +400,61 @@ fn main() {
         summary.traffic.sent_bits
     );
     println!("(`dme serve` / `dme report` drive the same loop from the CLI)");
+    println!();
+
+    // ---------------------------------------------------------------
+    // 11. In-round fault tolerance. The same session API, but the
+    //    transport is wrapped in a seeded fault-injection layer
+    //    (`DmeBuilder::fault_plan`): here every machine's sends vanish
+    //    in 30% of its rounds, reproducibly from one seed. Partial
+    //    rounds (`round_partial`) close at a deadline over the k ≤ n
+    //    reports that made it, renormalized by 1/k — exactly the
+    //    semantics of §10's short rounds — and report who was dropped.
+    //    A round that cannot reach `k_min` fails with a typed error
+    //    instead of panicking, and the session stays usable.
+    // ---------------------------------------------------------------
+    use dme::coordinator::StragglerPolicy;
+    use dme::net::faulty::FaultPlan;
+    use dme::net::TransportError;
+    let mut faulted = DmeBuilder::new(n, d)
+        .codec(CodecSpec::Lq { q })
+        .seed(42)
+        .fault_plan(FaultPlan::dropout(0xFA017, 0.3))
+        .build();
+    let policy = StragglerPolicy::deterministic(std::time::Duration::from_millis(100), 1, 5);
+    println!("== in-round fault tolerance (net::faulty + round_partial) ==");
+    for _ in 0..3 {
+        let out = faulted.round_partial_with_y(&inputs, y, &policy).expect("quorum of 1");
+        println!(
+            "round {}: k={}/{} dropped={:?} retries={} ‖EST − μ‖²={:.3e}",
+            out.round,
+            out.participants,
+            n,
+            out.dropped,
+            out.retries_used,
+            dist2(&out.estimate, &mu).powi(2),
+        );
+    }
+    // Demand a quorum the fault schedule cannot deliver: the round
+    // fails *detectably* — got/need in the error — and the next round
+    // on the same session succeeds.
+    let mut doomed = DmeBuilder::new(n, d)
+        .codec(CodecSpec::Lq { q })
+        .seed(42)
+        .fault_plan(FaultPlan::dropout(0xFA017,1.0))
+        .build();
+    let strict = StragglerPolicy::deterministic(std::time::Duration::from_millis(60), n, 5);
+    match doomed.round_partial_with_y(&inputs, y, &strict) {
+        Err(TransportError::QuorumFailed { got, need }) => {
+            println!("all-dropped round: QuorumFailed {{ got: {got}, need: {need} }} (typed, no panic)")
+        }
+        other => println!("unexpected: {other:?}"),
+    }
+    let lax = StragglerPolicy::deterministic(std::time::Duration::from_millis(60), 1, 5);
+    let out = doomed.round_partial_with_y(&inputs, y, &lax).expect("leader's own report");
+    println!(
+        "same session, k_min=1: k={} (the coordinator's own report) — still serving",
+        out.participants
+    );
+    println!("(`dme exp dropout` sweeps dropout rate × codec with this machinery)");
 }

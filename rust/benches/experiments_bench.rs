@@ -1,5 +1,6 @@
 //! Experiment-harness benchmark: times a reduced-scale regeneration of
-//! every paper figure/table (E1–E8 + tradeoff) to prove the full harness
+//! every paper figure/table (E1–E8, tradeoff, ablation, dropout) to
+//! prove the full harness
 //! runs end to end under `cargo bench` and to track its cost.
 //!
 //! For the full-scale reports use `dme exp all` (see EXPERIMENTS.md).

@@ -122,16 +122,64 @@
 //! error reports a fatal message to the driver instead of panicking the
 //! process ([`crate::sim::Cluster::try_run`] is the graceful variant
 //! for ad-hoc cluster closures).
+//!
+//! # Straggler policy (k-of-n partial rounds)
+//!
+//! Full rounds are all-or-nothing: every receive blocks until its
+//! packet arrives, so one lost upload wedges the round. A
+//! [`StragglerPolicy`] — a per-round deadline, a minimum quorum
+//! `k_min`, and a [`RetrySchedule`] whose jittered backoff windows pace
+//! the receive attempts — turns the same protocols into k-of-n rounds:
+//! [`DmeSession::round_partial`], [`star_round_partial_over`] /
+//! [`vr_round_partial_over`], and the tree's partial fold.
+//!
+//! The semantics deliberately mirror the PR 6 service layer
+//! ([`crate::net::service`]) — see the mapping in the [`crate::net`]
+//! module docs. In a star round the leader gathers whatever uploads
+//! beat the deadline (first copy per sender; duplicates are discarded),
+//! folds the `k ≤ n` reports **in pinned machine order** — so the
+//! partial estimate is a deterministic function of the arrived *set*,
+//! not of arrival timing — and renormalizes by `1/k` with the identical
+//! `inv_k * acc` arithmetic as the cohort table's `OpenRound::close`.
+//! In a tree round a parent that times out on a child folds only the
+//! arrived side: with both children present it halves exactly like the
+//! full fold (so a zero-fault partial round is bit-identical to the
+//! full path), with one present the surviving child passes through
+//! unhalved — the pairwise analogue of the star's renormalization —
+//! and arrived-leaf counts ride the upward messages so the root knows
+//! its exact participation `k`. If `k < k_min` the coordinator answers
+//! nobody and the round surfaces as the typed
+//! [`TransportError::QuorumFailed`]; the session stays usable.
+//!
+//! Partial-mode wire messages carry a 17-byte
+//! `[round: u64][weight: u64][dir: u8]` trailer (honestly metered): the
+//! round tag lets deadline-crossing packets from earlier rounds be
+//! recognized and discarded — the in-round form of the service
+//! protocol's explicit `(cohort, round)` keys — the weight carries the
+//! arrived-leaf counts, and the direction bit disambiguates an upward
+//! report from a downward relay when drops reorder who hears what.
+//! Every receive wait is paced by the policy's retry windows;
+//! [`RoundOutcome::retries_used`] totals the windows that expired,
+//! [`RoundOutcome::participants`] and [`RoundOutcome::dropped`] report
+//! who made it. Faults to exercise all of this come from a seeded
+//! [`crate::net::faulty::FaultPlan`] attached via
+//! [`DmeBuilder::fault_plan`]; a session holding a plan must drive
+//! `round_partial` (full rounds would block forever on a dropped
+//! packet, so they assert the plan is absent).
 
 use super::topology::Topology;
 use super::tree::tree_round_schedule;
 use super::variance_reduction::{robust_vr_core, vr_y_bound};
 use super::{CodecSpec, YEstimator, YPolicy};
+use crate::net::faulty::{FaultPlan, FaultyEndpoint};
+use crate::net::retry::{BackoffWindows, RetrySchedule};
 use crate::net::{TransportEndpoint, TransportError};
 use crate::quant::{CubicLattice, LatticeQuantizer, Message, PacketArena, VectorCodec};
 use crate::rng::{fork_round_seeds, hash2, Rng};
 use crate::sim::{summarize, Cluster, Endpoint, Traffic, TrafficSummary};
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
 
 /// How [`DmeSession::round_vr`] turns a variance bound into a protocol.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -145,6 +193,55 @@ pub enum Robustness {
     /// instead of corrupting the mean. `q0` is the starting quantization
     /// parameter.
     ErrorDetecting { q0: u32 },
+}
+
+/// Per-round straggler policy for k-of-n partial rounds (see the module
+/// §Straggler policy): how long the coordinator gathers, how many
+/// reports it must fold, and how the receive attempts are paced.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerPolicy {
+    /// Gather budget per wait. The coordinator's gather runs at most
+    /// this long; machines waiting for the coordinator's answer wait up
+    /// to `2 × deadline` (a healthy coordinator always answers within
+    /// its own gather deadline, so its broadcast lands in that window).
+    pub deadline: Duration,
+    /// Minimum quorum, counting the coordinator's own input. A round
+    /// whose deadline passes with fewer than `k_min` reports fails with
+    /// [`TransportError::QuorumFailed`] instead of producing an
+    /// estimate.
+    pub k_min: usize,
+    /// Backoff windows pacing the receive attempts (seed it for
+    /// reproducible retry counts — the same schedule the TCP transport
+    /// dials with, see [`crate::net::tcp::TcpOpts::retry_schedule`]).
+    pub retry: RetrySchedule,
+}
+
+impl Default for StragglerPolicy {
+    fn default() -> Self {
+        StragglerPolicy {
+            deadline: Duration::from_millis(1_000),
+            k_min: 1,
+            retry: RetrySchedule::default(),
+        }
+    }
+}
+
+impl StragglerPolicy {
+    /// A deterministic policy sized for in-process tests: backoff
+    /// windows that exhaust well before `deadline` (so retry counts are
+    /// timing-independent) and seeded jitter.
+    pub fn deterministic(deadline: Duration, k_min: usize, seed: u64) -> Self {
+        StragglerPolicy {
+            deadline,
+            k_min,
+            retry: RetrySchedule::deterministic(
+                3,
+                Duration::from_millis(10),
+                Duration::from_millis(40),
+                seed,
+            ),
+        }
+    }
 }
 
 /// One round's result — the single outcome type for every protocol the
@@ -183,6 +280,16 @@ pub struct RoundOutcome {
     pub round_traffic: Vec<Traffic>,
     /// Cumulative traffic summary since session start.
     pub traffic: TrafficSummary,
+    /// How many machines' reports the coordinator folded — `n` for full
+    /// rounds, the quorum `k ≤ n` for k-of-n partial rounds.
+    pub participants: usize,
+    /// k-of-n rounds: machines whose reports missed the deadline (star:
+    /// the leader's exact arrival record; tree: the machines whose
+    /// endpoints were send-silenced this round). Empty for full rounds.
+    pub dropped: Vec<usize>,
+    /// k-of-n rounds: total backoff windows that expired across all
+    /// machines' receive waits this round. 0 for full rounds.
+    pub retries_used: u32,
 }
 
 impl RoundOutcome {
@@ -216,6 +323,9 @@ impl RoundOutcome {
             decoded_at_leader,
             round_traffic,
             traffic,
+            participants,
+            dropped,
+            retries_used,
         } = self;
         *round = 0;
         estimate.clear();
@@ -230,6 +340,9 @@ impl RoundOutcome {
         decoded_at_leader.clear();
         round_traffic.clear();
         *traffic = TrafficSummary::default();
+        *participants = 0;
+        dropped.clear();
+        *retries_used = 0;
     }
 }
 
@@ -246,6 +359,7 @@ pub struct DmeBuilder {
     alpha: f64,
     seed: u64,
     diagnostics: bool,
+    fault_plan: Option<FaultPlan>,
 }
 
 impl DmeBuilder {
@@ -266,6 +380,7 @@ impl DmeBuilder {
             alpha: 4.0,
             seed: 0,
             diagnostics: false,
+            fault_plan: None,
         }
     }
 
@@ -330,6 +445,16 @@ impl DmeBuilder {
         self
     }
 
+    /// Inject deterministic per-machine per-round faults into the
+    /// session's transport (see [`FaultPlan`]). A faulted session must
+    /// be driven through [`DmeSession::round_partial`] — the
+    /// full-participation planes block on every machine's report and
+    /// assert the plan is absent (see the module §Straggler policy).
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
     /// Build the session. Machine threads spawn lazily on the first
     /// MeanEstimation round and live until the session drops.
     pub fn build(self) -> DmeSession {
@@ -350,6 +475,7 @@ impl DmeBuilder {
             robustness: self.robustness,
             alpha: self.alpha,
             diagnostics: self.diagnostics,
+            fault_plan: self.fault_plan,
             y_est: YEstimator::new(self.y_policy, self.y0),
             cluster: Cluster::new(self.n),
             workers: None,
@@ -372,6 +498,7 @@ pub struct DmeSession {
     robustness: Robustness,
     alpha: f64,
     diagnostics: bool,
+    fault_plan: Option<FaultPlan>,
     y_est: YEstimator,
     cluster: Cluster,
     workers: Option<Workers>,
@@ -395,10 +522,12 @@ struct Workers {
     handles: Vec<crate::pool::Lease<()>>,
 }
 
-/// One driver→worker channel crossing: a single round or a whole batch.
+/// One driver→worker channel crossing: a single round, a whole batch,
+/// or a k-of-n partial round under a straggler policy.
 enum Cmd {
     Round(RoundCmd),
     Batch(BatchCmd),
+    Partial(PartialCmd),
 }
 
 /// One round's instruction to a machine thread. The vectors are recycled
@@ -432,9 +561,21 @@ struct BatchCmd {
     traffic: Vec<Traffic>,
 }
 
+/// One partial round's instruction to a machine thread (the k-of-n
+/// plane; see the module §Straggler policy). Buffers recycle exactly
+/// like [`RoundCmd`]'s.
+struct PartialCmd {
+    round: u64,
+    y: f64,
+    policy: StragglerPolicy,
+    input: Vec<f64>,
+    out: Vec<f64>,
+}
+
 enum WorkerMsg {
     Round(WorkerOut),
     Batch(BatchOut),
+    Partial(PartialOut),
     /// The worker hit a transport failure and is exiting; the driver
     /// surfaces it instead of the old poison-the-process panic cascade.
     Fatal(TransportError),
@@ -463,6 +604,27 @@ struct BatchOut {
     /// `decoded[b]` is non-empty only for slots this machine led while
     /// diagnostics were on.
     decoded: Vec<Vec<Vec<f64>>>,
+}
+
+/// A partial round's response. `k`/`arrived`/`quorum_failed` are
+/// authoritative only on the machine whose `is_coordinator` is set (the
+/// star leader / tree root); everyone reports its own `out`, whether it
+/// received one, its retry tally and whether the fault plan silenced
+/// its sends this round.
+struct PartialOut {
+    input: Vec<f64>,
+    out: Vec<f64>,
+    /// This machine decoded an estimate (coordinator always; others
+    /// only if the downward broadcast reached them before the cutoff).
+    got_output: bool,
+    k: usize,
+    /// Star coordinator only: exact per-machine arrival record.
+    arrived: Vec<bool>,
+    retries: u32,
+    quorum_failed: bool,
+    /// The fault plan silenced this machine's sends this round.
+    silenced: bool,
+    is_coordinator: bool,
 }
 
 /// What a cluster round produced before traffic accounting.
@@ -504,6 +666,9 @@ fn recycle_outcome(pool: &mut Vec<RoundOutcome>) -> RoundOutcome {
             decoded_at_leader: Vec::new(),
             round_traffic: Vec::new(),
             traffic: TrafficSummary::default(),
+            participants: 0,
+            dropped: Vec::new(),
+            retries_used: 0,
         },
     }
 }
@@ -666,6 +831,9 @@ impl DmeSession {
                     estimate: r.estimate,
                     round_traffic,
                     traffic,
+                    participants: self.n,
+                    dropped: Vec::new(),
+                    retries_used: 0,
                 }
             }
         }
@@ -699,7 +867,174 @@ impl DmeSession {
             estimate: out.estimate,
             round_traffic,
             traffic,
+            participants: self.n,
+            dropped: Vec::new(),
+            retries_used: 0,
         }
+    }
+
+    /// Run one k-of-n MeanEstimation round under `policy` at the
+    /// session's current distance bound (see the module §Straggler
+    /// policy). This is the only round plane a session built with
+    /// [`DmeBuilder::fault_plan`] may drive: every receive carries a
+    /// deadline, dropped reports are renormalized away (the `1/k`
+    /// partial mean of [`crate::net::cohort`]'s service), and a round
+    /// that closes below `policy.k_min` reports
+    /// [`TransportError::QuorumFailed`] instead of panicking — the
+    /// session stays usable and the next round may succeed.
+    pub fn round_partial(
+        &mut self,
+        inputs: &[Vec<f64>],
+        policy: &StragglerPolicy,
+    ) -> Result<RoundOutcome, TransportError> {
+        let y = self.y_est.y;
+        self.round_partial_with_y(inputs, y, policy)
+    }
+
+    /// [`round_partial`](Self::round_partial) with an explicit distance
+    /// bound (required for tree sessions, whose `y` is a per-round
+    /// argument). Partial rounds never measure spread: `y` policies do
+    /// not advance.
+    pub fn round_partial_with_y(
+        &mut self,
+        inputs: &[Vec<f64>],
+        y: f64,
+        policy: &StragglerPolicy,
+    ) -> Result<RoundOutcome, TransportError> {
+        assert!(y > 0.0, "y must be positive");
+        assert!(
+            policy.k_min <= self.n,
+            "k_min = {} exceeds the cluster size {}",
+            policy.k_min,
+            self.n
+        );
+        self.check_inputs(inputs);
+        let round = self.next_round();
+        let (leader, leaves, q_used) = self.slot_schedule(round, y);
+
+        if self.n == 1 {
+            // Degenerate cluster: the machine reports to itself, k = 1.
+            let x = inputs[0].clone();
+            let parts = Collected {
+                agreement: true,
+                outputs: if self.diagnostics { vec![x.clone()] } else { Vec::new() },
+                decoded_at_leader: Vec::new(),
+                spread: None,
+                estimate: x,
+                leader,
+                leaves,
+                q_used,
+            };
+            let mut oc = self.outcome(round, y, parts);
+            oc.participants = 1;
+            return Ok(oc);
+        }
+
+        self.ensure_workers();
+        let d = self.d;
+        let workers = self.workers.as_ref().expect("workers spawned");
+        for (i, input) in inputs.iter().enumerate() {
+            let (mut inbuf, outbuf) = self.bufs[i]
+                .take()
+                .unwrap_or_else(|| (vec![0.0; d], vec![0.0; d]));
+            inbuf.copy_from_slice(input);
+            workers.cmd_tx[i]
+                .send(Cmd::Partial(PartialCmd {
+                    round,
+                    y,
+                    policy: *policy,
+                    input: inbuf,
+                    out: outbuf,
+                }))
+                .expect("machine thread alive");
+        }
+        // Collect every machine's reply even past a failure (the workers
+        // must drain before the next command), then surface the first
+        // fatal.
+        let mut replies: Vec<Option<PartialOut>> = (0..self.n).map(|_| None).collect();
+        let mut fatal: Option<TransportError> = None;
+        for (i, rx) in workers.out_rx.iter().enumerate() {
+            match rx.recv() {
+                Ok(WorkerMsg::Partial(po)) => replies[i] = Some(po),
+                Ok(WorkerMsg::Fatal(e)) => {
+                    fatal.get_or_insert(e);
+                }
+                Ok(_) => unreachable!("non-partial reply to a partial command"),
+                Err(_) => {
+                    fatal.get_or_insert(TransportError::Shutdown);
+                }
+            }
+        }
+        if let Some(e) = fatal {
+            for (i, po) in replies.into_iter().enumerate() {
+                if let Some(po) = po {
+                    self.bufs[i] = Some((po.input, po.out));
+                }
+            }
+            let _ = self.take_round_traffic();
+            return Err(e);
+        }
+        let outs: Vec<PartialOut> = replies
+            .into_iter()
+            .map(|po| po.expect("reply per machine"))
+            .collect();
+        let coord = outs
+            .iter()
+            .position(|po| po.is_coordinator)
+            .expect("one coordinator per round");
+        let k = outs[coord].k;
+        if outs[coord].quorum_failed {
+            for (i, po) in outs.into_iter().enumerate() {
+                self.bufs[i] = Some((po.input, po.out));
+            }
+            // The uploads still cost wire traffic: advance the snapshot
+            // so the next round's deltas stay exact.
+            let _ = self.take_round_traffic();
+            return Err(TransportError::QuorumFailed {
+                got: k,
+                need: policy.k_min,
+            });
+        }
+        // Participation: the star coordinator holds the exact arrival
+        // record; the tree's is derived from which machines the plan
+        // silenced this round (its k counts folded *leaf* reports).
+        let dropped: Vec<usize> = if outs[coord].arrived.is_empty() {
+            (0..self.n).filter(|&v| outs[v].silenced).collect()
+        } else {
+            (0..self.n).filter(|&v| !outs[coord].arrived[v]).collect()
+        };
+        let retries_used: u32 = outs.iter().map(|po| po.retries).sum();
+        let estimate = outs[coord].out.clone();
+        // Agreement is meaningful only over the machines the broadcast
+        // reached; diagnostics report an empty vector for the others.
+        let mut agreement = true;
+        let mut outputs = Vec::new();
+        for po in &outs {
+            if po.got_output && po.out != estimate {
+                agreement = false;
+            }
+            if self.diagnostics {
+                outputs.push(if po.got_output { po.out.clone() } else { Vec::new() });
+            }
+        }
+        for (i, po) in outs.into_iter().enumerate() {
+            self.bufs[i] = Some((po.input, po.out));
+        }
+        let parts = Collected {
+            estimate,
+            agreement,
+            outputs,
+            decoded_at_leader: Vec::new(),
+            spread: None,
+            leader,
+            leaves,
+            q_used,
+        };
+        let mut oc = self.outcome(round, y, parts);
+        oc.participants = k;
+        oc.dropped = dropped;
+        oc.retries_used = retries_used;
+        Ok(oc)
     }
 
     /// Jump the round counter (reproduce a specific legacy round: the
@@ -790,6 +1125,9 @@ impl DmeSession {
             decoded_at_leader: parts.decoded_at_leader,
             round_traffic,
             traffic,
+            participants: self.n,
+            dropped: Vec::new(),
+            retries_used: 0,
         }
     }
 
@@ -802,6 +1140,12 @@ impl DmeSession {
         let mut out_rx = Vec::with_capacity(self.n);
         let mut handles = Vec::with_capacity(self.n);
         for ep in endpoints {
+            // Every worker drives its endpoint through the fault wrapper;
+            // with no plan it is a transparent pass-through.
+            let fep = match &self.fault_plan {
+                Some(plan) => FaultyEndpoint::with_plan(ep, plan.clone()),
+                None => FaultyEndpoint::new(ep),
+            };
             let (ctx, crx) = channel::<Cmd>();
             let (otx, orx) = channel::<WorkerMsg>();
             cmd_tx.push(ctx);
@@ -813,8 +1157,8 @@ impl DmeSession {
             let topology = self.topology;
             handles.push(
                 crate::pool::lease(move || match topology {
-                    Topology::Star => star_worker(ep, spec, d, seed, diagnostics, crx, otx),
-                    Topology::Tree { m } => tree_worker(ep, m, seed, crx, otx),
+                    Topology::Star => star_worker(fep, spec, d, seed, diagnostics, crx, otx),
+                    Topology::Tree { m } => tree_worker(fep, m, seed, crx, otx),
                 })
                 .expect("lease machine worker thread"),
             );
@@ -852,6 +1196,11 @@ impl DmeSession {
         ys: &[f64],
         outcomes: &mut Vec<RoundOutcome>,
     ) {
+        assert!(
+            self.fault_plan.is_none(),
+            "the batch plane blocks on every machine's report: drive faulted \
+             sessions through round_partial"
+        );
         let b_total = inputs.len();
         assert_eq!(ys.len(), b_total, "one distance bound per slot");
         let mut pool = std::mem::take(outcomes);
@@ -908,6 +1257,7 @@ impl DmeSession {
                 let (rt, summary) = self.take_round_traffic();
                 oc.round_traffic = rt;
                 oc.traffic = summary;
+                oc.participants = 1;
                 outcomes.push(oc);
             }
             return;
@@ -938,7 +1288,9 @@ impl DmeSession {
         for rx in workers.out_rx.iter() {
             match rx.recv().expect("machine thread alive") {
                 WorkerMsg::Batch(bo) => outs.push(bo),
-                WorkerMsg::Round(_) => unreachable!("single-round reply to a batch command"),
+                WorkerMsg::Round(_) | WorkerMsg::Partial(_) => {
+                    unreachable!("single-round reply to a batch command")
+                }
                 WorkerMsg::Fatal(e) => panic!("machine transport failure mid-batch: {e}"),
             }
         }
@@ -974,6 +1326,7 @@ impl DmeSession {
                 cum[v].accumulate(&t);
             }
             oc.traffic = summarize(&cum);
+            oc.participants = n;
             outcomes.push(oc);
             lo = hi;
         }
@@ -1001,6 +1354,11 @@ impl DmeSession {
         round: u64,
         measure: bool,
     ) -> Collected {
+        assert!(
+            self.fault_plan.is_none(),
+            "full-participation rounds block on every machine's report: drive \
+             faulted sessions through round_partial"
+        );
         // Protocol stats every machine derives from shared randomness —
         // derived once more here so the driver can report them.
         let (leader, leaves, q_used) = self.slot_schedule(round, y);
@@ -1053,7 +1411,9 @@ impl DmeSession {
         for (i, rx) in workers.out_rx.iter().enumerate() {
             let wo = match rx.recv().expect("machine thread alive") {
                 WorkerMsg::Round(wo) => wo,
-                WorkerMsg::Batch(_) => unreachable!("batch reply to a single-round command"),
+                WorkerMsg::Batch(_) | WorkerMsg::Partial(_) => {
+                    unreachable!("batch reply to a single-round command")
+                }
                 WorkerMsg::Fatal(e) => panic!("machine {i} transport failure: {e}"),
             };
             if i == 0 {
@@ -1190,6 +1550,304 @@ fn star_round_core<E: TransportEndpoint>(
     Ok((spread, decoded_out))
 }
 
+/// An upward report (machine → coordinator).
+const DIR_UP: u8 = 0;
+/// A downward broadcast or relay (coordinator → machines).
+const DIR_DOWN: u8 = 1;
+/// Trailer appended to every partial-round packet:
+/// `[round: u64 LE][weight: u64 LE][dir: u8]`.
+const ENVELOPE_BYTES: usize = 17;
+const ENVELOPE_BITS: u64 = 8 * ENVELOPE_BYTES as u64;
+
+/// Tag a partial-round packet. The round index lets receivers discard
+/// stale packets from an earlier round a sender's fault delayed past
+/// its deadline; the weight carries the subtree's arrived-report count
+/// (so the coordinator's `k` rides the broadcast); the direction
+/// disambiguates a machine's dropped report from a relay it forwards
+/// downward. The 17 bytes / 136 bits are metered like any payload —
+/// the price of fault tolerance on the wire.
+fn wrap_partial(msg: &mut Message, round: u64, weight: u64, dir: u8) {
+    msg.bytes.extend_from_slice(&round.to_le_bytes());
+    msg.bytes.extend_from_slice(&weight.to_le_bytes());
+    msg.bytes.push(dir);
+    msg.bits += ENVELOPE_BITS;
+}
+
+/// Strip the partial-round trailer, returning `(round, weight, dir)`.
+/// `None` means the packet cannot carry one — treated as corruption and
+/// discarded by the receive loop.
+fn unwrap_partial(msg: &mut Message) -> Option<(u64, u64, u8)> {
+    let len = msg.bytes.len();
+    if len < ENVELOPE_BYTES || msg.bits < ENVELOPE_BITS {
+        return None;
+    }
+    let dir = msg.bytes[len - 1];
+    let weight = u64::from_le_bytes(msg.bytes[len - 9..len - 1].try_into().expect("8 bytes"));
+    let round = u64::from_le_bytes(msg.bytes[len - 17..len - 9].try_into().expect("8 bytes"));
+    msg.bytes.truncate(len - ENVELOPE_BYTES);
+    msg.bits -= ENVELOPE_BITS;
+    Some((round, weight, dir))
+}
+
+/// Send, treating a closed peer like a dropped packet. In a faulted
+/// round a peer may already have given up on its deadline and exited;
+/// its absence must not kill this machine's round.
+fn send_lossy<E: TransportEndpoint>(
+    ep: &mut E,
+    to: usize,
+    msg: Message,
+) -> Result<(), TransportError> {
+    match ep.send(to, msg) {
+        Ok(()) | Err(TransportError::PeerClosed { .. }) => Ok(()),
+        Err(e) => Err(e),
+    }
+}
+
+/// Envelope-aware receive loop for one machine's side of one partial
+/// round: pulls packets until one matching `(sender, direction)` for
+/// this round arrives (`Ok(Some(_))`), the cutoff passes (`Ok(None)` —
+/// the straggler verdict), or the transport genuinely fails. Waiting is
+/// paced by the policy's bounded-retry backoff windows; once the
+/// schedule is exhausted, a final window runs to the cutoff, so
+/// `retries` counts expired windows and — windows being deterministic
+/// under a seeded [`RetrySchedule`] — is reproducible run to run.
+/// Packets for this round that were not the awaited `(sender,
+/// direction)` wait in per-sender queues; malformed, stale-round,
+/// impossible-weight and unknown-direction packets are discarded (a
+/// corrupted trailer degrades to a drop, deterministically).
+struct PartialGather {
+    round: u64,
+    n: usize,
+    deadline: Instant,
+    windows: BackoffWindows,
+    retries: u32,
+    pending: Vec<VecDeque<(u8, u64, Message)>>,
+}
+
+impl PartialGather {
+    fn new(round: u64, n: usize, policy: &StragglerPolicy, salt: u64) -> Self {
+        PartialGather {
+            round,
+            n,
+            deadline: Instant::now() + policy.deadline,
+            windows: policy.retry.windows(salt),
+            retries: 0,
+            pending: (0..n).map(|_| VecDeque::new()).collect(),
+        }
+    }
+
+    /// Move the cutoff to an absolute instant (the tree's per-level
+    /// budget: a parent at level `l` waits until `start + l·deadline`,
+    /// so a child that itself waited out a straggler still lands well
+    /// inside its parent's window).
+    fn set_deadline(&mut self, at: Instant) {
+        self.deadline = at;
+    }
+
+    /// Push the cutoff out by `extra` (the star non-leader's return
+    /// leg: one deadline for the gather, one for the broadcast).
+    fn extend_deadline(&mut self, extra: Duration) {
+        self.deadline += extra;
+    }
+
+    fn take_pending(&mut self, from: Option<usize>, dir: u8) -> Option<(usize, u64, Message)> {
+        let senders: Box<dyn Iterator<Item = usize>> = match from {
+            Some(v) => Box::new(std::iter::once(v)),
+            None => Box::new(0..self.n),
+        };
+        for v in senders {
+            let q = &mut self.pending[v];
+            for i in 0..q.len() {
+                if q[i].0 == dir {
+                    let (_, w, m) = q.remove(i).expect("index in bounds");
+                    return Some((v, w, m));
+                }
+            }
+        }
+        None
+    }
+
+    /// Wait for a `dir` packet from `from` (any sender when `None`).
+    fn recv_dir<E: TransportEndpoint>(
+        &mut self,
+        ep: &mut E,
+        from: Option<usize>,
+        dir: u8,
+    ) -> Result<Option<(usize, u64, Message)>, TransportError> {
+        if let Some(hit) = self.take_pending(from, dir) {
+            return Ok(Some(hit));
+        }
+        loop {
+            let now = Instant::now();
+            if now >= self.deadline {
+                return Ok(None);
+            }
+            let remaining = self.deadline - now;
+            let wait = match self.windows.next() {
+                Some(w) => w.min(remaining),
+                None => remaining,
+            };
+            match ep.recv_timeout(wait) {
+                Ok(p) => {
+                    let mut msg = p.msg;
+                    let Some((round, weight, pdir)) = unwrap_partial(&mut msg) else {
+                        continue;
+                    };
+                    if round != self.round
+                        || weight > self.n as u64
+                        || (pdir != DIR_UP && pdir != DIR_DOWN)
+                        || p.from >= self.n
+                    {
+                        continue;
+                    }
+                    let sender_ok = match from {
+                        Some(v) => v == p.from,
+                        None => true,
+                    };
+                    if pdir == dir && sender_ok {
+                        return Ok(Some((p.from, weight, msg)));
+                    }
+                    self.pending[p.from].push_back((pdir, weight, msg));
+                }
+                Err(TransportError::Timeout { .. }) => {
+                    self.retries += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// What [`star_partial_core`] produced on this machine.
+struct StarPartial {
+    leader: usize,
+    k: usize,
+    /// Leader only: exact arrival record (own slot always true).
+    arrived: Vec<bool>,
+    retries: u32,
+    got_output: bool,
+    quorum_failed: bool,
+}
+
+/// One machine's side of one **k-of-n** star round (the module
+/// §Straggler policy), generic over the transport like
+/// [`star_round_core`]. With every report arrived it is arithmetically
+/// the full round: same leader schedule, same encoder randomness, same
+/// pinned machine-order fold, and `1/k = 1/n`. With reports missing at
+/// the deadline the leader folds the k that arrived and renormalizes by
+/// `1/k` — bit-for-bit the service's partial mean
+/// ([`crate::net::cohort::OpenRound`]). Below `policy.k_min` the leader
+/// reports a failed quorum and broadcasts nothing.
+#[allow(clippy::too_many_arguments)]
+fn star_partial_core<E: TransportEndpoint>(
+    ep: &mut E,
+    codec: &mut dyn VectorCodec,
+    seed: u64,
+    round: u64,
+    policy: &StragglerPolicy,
+    input: &[f64],
+    out: &mut [f64],
+    mu: &mut [f64],
+    msg: &mut Message,
+) -> Result<StarPartial, TransportError> {
+    let id = ep.id();
+    let n = ep.n();
+    let leader = star_leader(seed, round, n);
+    let mut enc_rng = Rng::new(hash2(hash2(seed, round), id as u64 + 1));
+    let mut gather = PartialGather::new(round, n, policy, hash2(round, id as u64));
+    if id == leader {
+        // Gather first-copy-per-sender until the deadline (duplicates
+        // from a duplicating fault are identical packets; the first
+        // wins).
+        let mut arrived = vec![false; n];
+        arrived[id] = true;
+        let mut held: Vec<Option<Message>> = (0..n).map(|_| None).collect();
+        let mut k = 1usize;
+        while k < n {
+            match gather.recv_dir(ep, None, DIR_UP)? {
+                Some((from, _w, m)) => {
+                    if !arrived[from] {
+                        arrived[from] = true;
+                        held[from] = Some(m);
+                        k += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        if k < policy.k_min {
+            return Ok(StarPartial {
+                leader,
+                k,
+                arrived,
+                retries: gather.retries,
+                got_output: false,
+                quorum_failed: true,
+            });
+        }
+        // Fold the arrived reports in pinned machine order — the full
+        // round's order, restricted to the k that made it.
+        for m in mu.iter_mut() {
+            *m = 0.0;
+        }
+        for v in 0..n {
+            if v == id {
+                crate::linalg::axpy(mu, 1.0, input);
+            } else if let Some(m) = held[v].as_ref() {
+                codec.decode_accumulate_into(m, input, 1.0, mu);
+            }
+        }
+        // Mirror of `OpenRound::close`: renormalize by the k reports
+        // that arrived, not the cohort size.
+        let inv_k = 1.0 / (k.max(1) as f64);
+        for m in mu.iter_mut() {
+            *m = inv_k * *m;
+        }
+        codec.encode_into(mu, &mut enc_rng, msg);
+        codec.decode_into(msg, input, out);
+        wrap_partial(msg, round, k as u64, DIR_DOWN);
+        for v in 0..n {
+            if v != id {
+                send_lossy(ep, v, msg.clone())?;
+            }
+        }
+        Ok(StarPartial {
+            leader,
+            k,
+            arrived,
+            retries: gather.retries,
+            got_output: true,
+            quorum_failed: false,
+        })
+    } else {
+        codec.encode_into(input, &mut enc_rng, msg);
+        wrap_partial(msg, round, 1, DIR_UP);
+        send_lossy(ep, leader, msg.clone())?;
+        gather.extend_deadline(policy.deadline);
+        match gather.recv_dir(ep, Some(leader), DIR_DOWN)? {
+            Some((_from, weight, m)) => {
+                codec.decode_into(&m, input, out);
+                Ok(StarPartial {
+                    leader,
+                    k: weight as usize,
+                    arrived: Vec::new(),
+                    retries: gather.retries,
+                    got_output: true,
+                    quorum_failed: false,
+                })
+            }
+            None => Ok(StarPartial {
+                leader,
+                k: 0,
+                arrived: Vec::new(),
+                retries: gather.retries,
+                got_output: false,
+                quorum_failed: false,
+            }),
+        }
+    }
+}
+
 /// What [`star_round_over`] produced on this machine.
 #[derive(Clone, Debug)]
 pub struct StarRoundReport {
@@ -1270,6 +1928,86 @@ pub fn vr_round_over<E: TransportEndpoint>(
     star_round_over(ep, spec, seed, round, y, input, collect)
 }
 
+/// What [`star_round_partial_over`] produced on this machine.
+#[derive(Clone, Debug)]
+pub struct PartialRoundReport {
+    /// The round's shared-randomness leader.
+    pub leader: usize,
+    /// This machine's decoded estimate — `None` when the downward
+    /// broadcast never reached it before its cutoff.
+    pub output: Option<Vec<f64>>,
+    /// Reports folded into the estimate. On the leader this is exact;
+    /// elsewhere it is the count the broadcast's envelope carried
+    /// (0 when no broadcast arrived).
+    pub k: usize,
+    /// Leader only: exact per-machine arrival record.
+    pub arrived: Vec<bool>,
+    /// Receive windows that expired on this machine this round.
+    pub retries: u32,
+}
+
+/// Run one machine's side of a **k-of-n** star round over any
+/// [`TransportEndpoint`] — the identical protocol
+/// [`DmeSession::round_partial`] executes in-process (see the module
+/// §Straggler policy). All `n` machines must call this with the same
+/// `(spec, seed, round, y, policy)`. The leader raises
+/// [`TransportError::QuorumFailed`] when fewer than `policy.k_min`
+/// reports arrive by the deadline (it broadcasts nothing, so the other
+/// machines report `output: None`). To inject faults, wrap the endpoint
+/// in a [`FaultyEndpoint`] and [`FaultyEndpoint::set_round`] before
+/// each call.
+pub fn star_round_partial_over<E: TransportEndpoint>(
+    ep: &mut E,
+    spec: CodecSpec,
+    seed: u64,
+    round: u64,
+    y: f64,
+    policy: &StragglerPolicy,
+    input: &[f64],
+) -> Result<PartialRoundReport, TransportError> {
+    let d = input.len();
+    let mut codec = spec.build(d, y, seed, round);
+    let mut out = vec![0.0; d];
+    let mut mu = vec![0.0; d];
+    let mut msg = Message::empty();
+    let sp = star_partial_core(
+        ep, &mut *codec, seed, round, policy, input, &mut out, &mut mu, &mut msg,
+    )?;
+    if sp.quorum_failed {
+        return Err(TransportError::QuorumFailed {
+            got: sp.k,
+            need: policy.k_min,
+        });
+    }
+    Ok(PartialRoundReport {
+        leader: sp.leader,
+        output: if sp.got_output { Some(out) } else { None },
+        k: sp.k,
+        arrived: sp.arrived,
+        retries: sp.retries,
+    })
+}
+
+/// Chebyshev VarianceReduction as a k-of-n partial round: maps the VR
+/// instance onto [`star_round_partial_over`] at `y = 2σ√(αn)` — the
+/// fault-tolerant analogue of [`vr_round_over`]. Note the bound still
+/// uses the full cluster size `n`: the distance bound is a property of
+/// the inputs, not of which reports survive the round.
+#[allow(clippy::too_many_arguments)]
+pub fn vr_round_partial_over<E: TransportEndpoint>(
+    ep: &mut E,
+    spec: CodecSpec,
+    seed: u64,
+    round: u64,
+    sigma: f64,
+    alpha: f64,
+    policy: &StragglerPolicy,
+    input: &[f64],
+) -> Result<PartialRoundReport, TransportError> {
+    let y = vr_y_bound(sigma, ep.n(), alpha);
+    star_round_partial_over(ep, spec, seed, round, y, policy, input)
+}
+
 /// Star machine loop — Algorithm 3 with persistent scratch space. The
 /// protocol (leader schedule, codec construction, encoder randomness,
 /// summation order) matches the legacy one-shot implementation exactly;
@@ -1277,7 +2015,7 @@ pub fn vr_round_over<E: TransportEndpoint>(
 /// A transport failure reports [`WorkerMsg::Fatal`] and exits the loop
 /// instead of panicking the process.
 fn star_worker(
-    mut ep: Endpoint,
+    mut ep: FaultyEndpoint<Endpoint>,
     spec: CodecSpec,
     d: usize,
     seed: u64,
@@ -1308,6 +2046,53 @@ fn star_worker(
             mut out,
         } = match cmd {
             Cmd::Round(rc) => rc,
+            Cmd::Partial(pc) => {
+                // The fault wrapper's behavior is a pure function of
+                // (plan seed, machine, round): pin the round first.
+                ep.set_round(pc.round);
+                if held_codec.is_none() || !spec.is_stateful() {
+                    held_codec = Some(spec.build(d, pc.y, seed, pc.round));
+                }
+                let codec = held_codec.as_mut().expect("codec built");
+                let input = pc.input;
+                let mut out = pc.out;
+                let sp = match star_partial_core(
+                    &mut ep,
+                    &mut **codec,
+                    seed,
+                    pc.round,
+                    &pc.policy,
+                    &input,
+                    &mut out,
+                    &mut mu,
+                    &mut msg,
+                ) {
+                    Ok(sp) => sp,
+                    Err(e) => {
+                        let _ = otx.send(WorkerMsg::Fatal(e));
+                        break;
+                    }
+                };
+                let silenced = ep.fault().silences();
+                let is_coordinator = sp.leader == ep.id();
+                if otx
+                    .send(WorkerMsg::Partial(PartialOut {
+                        input,
+                        out,
+                        got_output: sp.got_output,
+                        k: sp.k,
+                        arrived: sp.arrived,
+                        retries: sp.retries,
+                        quorum_failed: sp.quorum_failed,
+                        silenced,
+                        is_coordinator,
+                    }))
+                    .is_err()
+                {
+                    break;
+                }
+                continue;
+            }
             Cmd::Batch(mut bc) => {
                 let slot_decoded = match star_batch_slots(
                     &mut ep,
@@ -1538,9 +2323,47 @@ fn star_batch_slots<E: TransportEndpoint>(
 /// the schedule in the same global (level, node, child) order, every
 /// receive's matching send is already issued — no deadlock. Messages and
 /// metering are bit-identical to the legacy sequential driver.
-fn tree_worker(mut ep: Endpoint, m: usize, seed: u64, crx: Receiver<Cmd>, otx: Sender<WorkerMsg>) {
+fn tree_worker(
+    mut ep: FaultyEndpoint<Endpoint>,
+    m: usize,
+    seed: u64,
+    crx: Receiver<Cmd>,
+    otx: Sender<WorkerMsg>,
+) {
     while let Ok(cmd) = crx.recv() {
         match cmd {
+            Cmd::Partial(pc) => {
+                ep.set_round(pc.round);
+                let input = pc.input;
+                let mut out = pc.out;
+                let tp = match tree_partial_round(
+                    &mut ep, m, seed, pc.round, pc.y, &pc.policy, &input, &mut out,
+                ) {
+                    Ok(tp) => tp,
+                    Err(e) => {
+                        let _ = otx.send(WorkerMsg::Fatal(e));
+                        break;
+                    }
+                };
+                let silenced = ep.fault().silences();
+                let is_coordinator = tp.root == ep.id();
+                if otx
+                    .send(WorkerMsg::Partial(PartialOut {
+                        input,
+                        out,
+                        got_output: tp.got_output,
+                        k: tp.k,
+                        arrived: Vec::new(),
+                        retries: tp.retries,
+                        quorum_failed: tp.quorum_failed,
+                        silenced,
+                        is_coordinator,
+                    }))
+                    .is_err()
+                {
+                    break;
+                }
+            }
             Cmd::Round(RoundCmd {
                 round,
                 y,
@@ -1735,6 +2558,296 @@ fn tree_slot_round<E: TransportEndpoint>(
     }
     codec.decode_into(&bmsg, input, out);
     Ok(())
+}
+
+/// What [`tree_partial_round`] produced on this machine.
+struct TreePartial {
+    root: usize,
+    /// Root only: arrived-leaf reports folded into its estimate.
+    k: usize,
+    retries: u32,
+    got_output: bool,
+    quorum_failed: bool,
+}
+
+/// One machine's side of one **k-of-n** tree round (the module
+/// §Straggler policy). The schedule and codec are exactly
+/// [`tree_slot_round`]'s; the fold differs only where reports are
+/// missing:
+///
+/// - both children arrived → decode both, average (`× 0.5`) — with
+///   every report present this is arithmetically the full round;
+/// - one child arrived → its estimate passes through *unhalved* (the
+///   pairwise analogue of the star's `1/k` renormalization), its
+///   arrived-leaf weight riding the wire envelope so the root learns
+///   the exact `k`;
+/// - neither arrived → the node is empty; a healthy owner sends a
+///   weight-0 marker so its parent skips the child instead of burning a
+///   timeout window (a silenced owner always costs its parent one).
+///
+/// Waiting is budgeted per level — a parent at level `l` waits until
+/// `start + l·deadline` — so a machine that itself waited out a
+/// straggler still lands inside its parent's window, keeping the
+/// outcome deterministic. The downward broadcast gets one more
+/// deadline on top of the upward budget.
+#[allow(clippy::too_many_arguments)]
+fn tree_partial_round<E: TransportEndpoint>(
+    ep: &mut E,
+    m: usize,
+    seed: u64,
+    round: u64,
+    y: f64,
+    policy: &StragglerPolicy,
+    input: &[f64],
+    out: &mut [f64],
+) -> Result<TreePartial, TransportError> {
+    let id = ep.id();
+    let n = ep.n();
+    let d = input.len();
+    let shared_seed = hash2(seed, round);
+    let (leaves, side, q) = tree_round_schedule(n, m, y, seed, round);
+    let codec = {
+        let mut sr = Rng::new(shared_seed);
+        LatticeQuantizer::new(CubicLattice::random_offset(d, side, &mut sr), q)
+    };
+    let start = Instant::now();
+    let mut gather = PartialGather::new(round, n, policy, hash2(round, id as u64));
+
+    // Upward: (owner, Some((estimate, arrived-leaf weight)) iff this
+    // machine owns the node; weight 0 = empty subtree).
+    let mut ests: Vec<(usize, Option<(Vec<f64>, u64)>)> = leaves
+        .iter()
+        .map(|&v| (v, if v == id { Some((input.to_vec(), 1)) } else { None }))
+        .collect();
+    let mut level = 0usize;
+    while ests.len() > 1 {
+        level += 1;
+        gather.set_deadline(start + policy.deadline * level as u32);
+        let pairs = ests.len() / 2;
+        let mut next: Vec<(usize, Option<(Vec<f64>, u64)>)> = Vec::with_capacity(pairs + 1);
+        for j in 0..pairs {
+            let parent = (j * 2 + level * 3) % n;
+            // Decoded child estimates present at the parent, child order.
+            let mut got: Vec<(Vec<f64>, u64)> = Vec::new();
+            for c in 0..2 {
+                let idx = 2 * j + c;
+                let child = ests[idx].0;
+                if child == id {
+                    let (est, w) = ests[idx].1.take().expect("owner holds node state");
+                    if child == parent {
+                        // Same machine plays both roles: no wire.
+                        if w > 0 {
+                            let (msg, _pt) = codec.encode_with_point(&est);
+                            let mut dec = vec![0.0; d];
+                            codec.decode_into(&msg, input, &mut dec);
+                            got.push((dec, w));
+                        }
+                    } else if w == 0 {
+                        let mut marker = Message::empty();
+                        wrap_partial(&mut marker, round, 0, DIR_UP);
+                        send_lossy(ep, parent, marker)?;
+                    } else {
+                        let (mut msg, _pt) = codec.encode_with_point(&est);
+                        wrap_partial(&mut msg, round, w, DIR_UP);
+                        send_lossy(ep, parent, msg)?;
+                    }
+                } else if parent == id {
+                    match gather.recv_dir(ep, Some(child), DIR_UP)? {
+                        Some((_from, w, msg)) if w > 0 => {
+                            let mut dec = vec![0.0; d];
+                            codec.decode_into(&msg, input, &mut dec);
+                            got.push((dec, w));
+                        }
+                        // Weight-0 marker or deadline: no contribution.
+                        _ => {}
+                    }
+                }
+            }
+            let state = if parent == id {
+                Some(match got.len() {
+                    2 => {
+                        let (c1, w1) = got.pop().expect("second child");
+                        let (mut acc, w0) = got.pop().expect("first child");
+                        for (a, z) in acc.iter_mut().zip(&c1) {
+                            *a = (*a + *z) * 0.5;
+                        }
+                        (acc, w0 + w1)
+                    }
+                    1 => got.pop().expect("only child"),
+                    _ => (Vec::new(), 0),
+                })
+            } else {
+                None
+            };
+            next.push((parent, state));
+        }
+        if ests.len() % 2 == 1 {
+            next.push(ests.pop().expect("odd tail node"));
+        }
+        ests = next;
+    }
+    let (root, root_state) = ests.pop().expect("tree root");
+
+    if id == root {
+        let (est, w) = root_state.expect("root owns its state");
+        let k = w as usize;
+        if k < policy.k_min.max(1) {
+            // No broadcast: the other machines wait out their downward
+            // cutoff and report no output; the driver raises the typed
+            // quorum error.
+            return Ok(TreePartial {
+                root,
+                k,
+                retries: gather.retries,
+                got_output: false,
+                quorum_failed: true,
+            });
+        }
+        let (mut bmsg, _pt) = codec.encode_with_point(&est);
+        codec.decode_into(&bmsg, input, out);
+        wrap_partial(&mut bmsg, round, w, DIR_DOWN);
+        for cpos in [1usize, 2] {
+            if cpos < n {
+                send_lossy(ep, (root + cpos) % n, bmsg.clone())?;
+            }
+        }
+        Ok(TreePartial {
+            root,
+            k,
+            retries: gather.retries,
+            got_output: true,
+            quorum_failed: false,
+        })
+    } else {
+        let mypos = (id + n - root) % n;
+        let parent = (root + (mypos - 1) / 2) % n;
+        gather.set_deadline(start + policy.deadline * (level as u32 + 1));
+        match gather.recv_dir(ep, Some(parent), DIR_DOWN)? {
+            Some((_from, w, msg)) => {
+                codec.decode_into(&msg, input, out);
+                let mut relay = msg;
+                wrap_partial(&mut relay, round, w, DIR_DOWN);
+                for cpos in [2 * mypos + 1, 2 * mypos + 2] {
+                    if cpos < n {
+                        send_lossy(ep, (root + cpos) % n, relay.clone())?;
+                    }
+                }
+                Ok(TreePartial {
+                    root,
+                    k: w as usize,
+                    retries: gather.retries,
+                    got_output: true,
+                    quorum_failed: false,
+                })
+            }
+            None => Ok(TreePartial {
+                root,
+                k: 0,
+                retries: gather.retries,
+                got_output: false,
+                quorum_failed: false,
+            }),
+        }
+    }
+}
+
+/// What [`tree_partial_reference`] predicts for one faulted tree round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TreePartialReference {
+    /// The upward fold's root (the round's coordinator).
+    pub root: usize,
+    /// The estimate the root decodes — `None` when every leaf report
+    /// was lost (`k = 0`).
+    pub estimate: Option<Vec<f64>>,
+    /// Arrived-leaf reports folded into the estimate.
+    pub k: usize,
+}
+
+/// Transport-free oracle for the k-of-n tree round: replays
+/// [`tree_partial_round`]'s exact fold — same schedule, same shared
+/// codec, decode-at-parent, halve-when-both / pass-through-when-one —
+/// for a given set of send-`silenced` machines, without spawning a
+/// cluster. A node's report reaches its parent iff the node is
+/// non-empty and its owner either *is* the parent (no wire) or is not
+/// silenced. Integration tests assert a faulted session's estimate
+/// equals this value exactly (the round schedule is crate-private, so
+/// the replay lives here).
+pub fn tree_partial_reference(
+    n: usize,
+    m: usize,
+    y: f64,
+    seed: u64,
+    round: u64,
+    inputs: &[Vec<f64>],
+    silenced: &[usize],
+) -> TreePartialReference {
+    assert_eq!(inputs.len(), n, "one input vector per machine");
+    assert!(n >= 1, "need at least one machine");
+    let d = inputs[0].len();
+    let shared_seed = hash2(seed, round);
+    let (leaves, side, q) = tree_round_schedule(n, m, y, seed, round);
+    let codec = {
+        let mut sr = Rng::new(shared_seed);
+        LatticeQuantizer::new(CubicLattice::random_offset(d, side, &mut sr), q)
+    };
+    // (owner, estimate, arrived-leaf weight); weight 0 = empty subtree.
+    let mut ests: Vec<(usize, Vec<f64>, u64)> = leaves
+        .iter()
+        .map(|&v| (v, inputs[v].clone(), 1))
+        .collect();
+    let mut level = 0usize;
+    while ests.len() > 1 {
+        level += 1;
+        let pairs = ests.len() / 2;
+        let mut next: Vec<(usize, Vec<f64>, u64)> = Vec::with_capacity(pairs + 1);
+        for j in 0..pairs {
+            let parent = (j * 2 + level * 3) % n;
+            let mut got: Vec<(Vec<f64>, u64)> = Vec::new();
+            for c in 0..2 {
+                let (owner, est, w) = &ests[2 * j + c];
+                if *w > 0 && (*owner == parent || !silenced.contains(owner)) {
+                    let (msg, _pt) = codec.encode_with_point(est);
+                    let mut dec = vec![0.0; d];
+                    codec.decode_into(&msg, &inputs[parent], &mut dec);
+                    got.push((dec, *w));
+                }
+            }
+            let (est, w) = match got.len() {
+                2 => {
+                    let (c1, w1) = got.pop().expect("second child");
+                    let (mut acc, w0) = got.pop().expect("first child");
+                    for (a, z) in acc.iter_mut().zip(&c1) {
+                        *a = (*a + *z) * 0.5;
+                    }
+                    (acc, w0 + w1)
+                }
+                1 => got.pop().expect("only child"),
+                _ => (Vec::new(), 0),
+            };
+            next.push((parent, est, w));
+        }
+        if ests.len() % 2 == 1 {
+            next.push(ests.pop().expect("odd tail node"));
+        }
+        ests = next;
+    }
+    let (root, est, w) = ests.pop().expect("tree root");
+    let k = w as usize;
+    if k == 0 {
+        return TreePartialReference {
+            root,
+            estimate: None,
+            k: 0,
+        };
+    }
+    let (msg, _pt) = codec.encode_with_point(&est);
+    let mut out = vec![0.0; d];
+    codec.decode_into(&msg, &inputs[root], &mut out);
+    TreePartialReference {
+        root,
+        estimate: Some(out),
+        k,
+    }
 }
 
 #[cfg(test)]

@@ -16,7 +16,10 @@
 //!   accumulated in one fused pass per packet
 //!   (`VectorCodec::decode_accumulate_into`) at O(d) leader memory, with
 //!   the O(n·d) decoded collection surviving only behind diagnostics /
-//!   `y`-policy measurement rounds.
+//!   `y`-policy measurement rounds. Sessions built with
+//!   [`DmeBuilder::fault_plan`] run k-of-n partial rounds under a
+//!   [`StragglerPolicy`] (`DmeSession::round_partial` — see api's
+//!   §Straggler policy).
 //! * [`fold`] — the fold kernels as free functions: sequential
 //!   [`fold_mean`] plus the chunk-sharded parallel [`fold_mean_chunked`]
 //!   for batch aggregation of very wide vectors.
@@ -52,8 +55,9 @@ pub mod variance_reduction;
 pub mod y_estimator;
 
 pub use api::{
-    star_round_over, vr_round_over, DmeBuilder, DmeSession, Robustness, RoundOutcome,
-    StarRoundReport,
+    star_round_over, star_round_partial_over, tree_partial_reference, vr_round_over,
+    vr_round_partial_over, DmeBuilder, DmeSession, PartialRoundReport, Robustness, RoundOutcome,
+    StarRoundReport, StragglerPolicy, TreePartialReference,
 };
 pub use fold::{fold_mean, fold_mean_chunked, fold_mean_chunked_on, FoldPart};
 pub use session::{SessionRound, StarSession};

@@ -1,0 +1,192 @@
+//! Dropout vs estimation error — the robustness face of the k-of-n
+//! partial-round plane (see `coordinator::api` §Straggler policy).
+//!
+//! Sweeps a seeded dropout rate over the star session for the paper's
+//! codecs (LQSGD, RLQSGD, D4) against baselines, measuring
+//! `E‖EST − μ‖²` where `μ` is the mean over **all** `n` inputs — so the
+//! reported error combines quantization noise with the bias of the
+//! `1/k`-renormalized partial mean over the surviving reports. Every
+//! codec sees the *same* fault schedule (one [`FaultPlan`] seed per
+//! rate, shared session seed ⇒ identical leaders, identical drop sets
+//! per round), so columns are comparable head to head. Expected shape:
+//! at rate 0 the error is pure quantization noise; as the rate grows the
+//! partial-mean bias dominates and every codec degrades toward the same
+//! floor — compression choice stops mattering once dropout does.
+//!
+//! Alongside the text report the sweep emits `BENCH_dropout.json`
+//! (schema 1: one case per codec × rate with `err2` and the mean
+//! surviving-report count `k_mean`), the same machine-readable plumbing
+//! the bench targets use, so CI can assert the grid parses.
+
+use super::{render_table, ExpOpts};
+use crate::config::Json;
+use crate::coordinator::{CodecSpec, DmeBuilder, StragglerPolicy};
+use crate::linalg::{dist2, mean_vecs};
+use crate::net::faulty::FaultPlan;
+use crate::rng::{hash2, Rng};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Dropout rates swept (fraction of machine-rounds whose sends are
+/// silenced).
+const RATES: &[f64] = &[0.0, 0.1, 0.3, 0.5];
+
+/// Per-round receive deadline. Healthy in-process reports arrive in
+/// microseconds, so this only prices rounds that actually lose reports;
+/// it must merely dwarf scheduler jitter for the outcome to be
+/// deterministic.
+const DEADLINE: Duration = Duration::from_millis(40);
+
+fn codecs() -> Vec<CodecSpec> {
+    vec![
+        CodecSpec::Lq { q: 64 },
+        CodecSpec::Rlq { q: 64 },
+        CodecSpec::D4 { q: 64 },
+        CodecSpec::QsgdLinf { q: 64 },
+        CodecSpec::Hadamard { q: 64 },
+        CodecSpec::Full,
+    ]
+}
+
+/// One cell of the sweep: mean squared error vs the full mean, and the
+/// mean number of surviving reports, over `trials` rounds.
+fn run_cell(
+    spec: CodecSpec,
+    rate: f64,
+    rate_idx: usize,
+    inputs: &[Vec<f64>],
+    mu: &[f64],
+    y: f64,
+    trials: usize,
+) -> (f64, f64) {
+    let n = inputs.len();
+    let d = inputs[0].len();
+    // One plan seed per rate: every codec replays the same drop sets.
+    let plan = FaultPlan::dropout(hash2(0xD20, rate_idx as u64), rate);
+    let policy = StragglerPolicy::deterministic(DEADLINE, 1, 0xD20);
+    let mut sess = DmeBuilder::new(n, d)
+        .codec(spec)
+        .seed(7)
+        .fault_plan(plan)
+        .build();
+    let mut err2 = 0.0;
+    let mut k_sum = 0usize;
+    let mut done = 0usize;
+    for _ in 0..trials {
+        // k_min = 1 and the leader always holds its own report, so the
+        // quorum cannot fail; skip defensively if it ever does.
+        let Ok(out) = sess.round_partial_with_y(inputs, y, &policy) else {
+            continue;
+        };
+        err2 += dist2(&out.estimate, mu).powi(2);
+        k_sum += out.participants;
+        done += 1;
+    }
+    let done = done.max(1);
+    (err2 / done as f64, k_sum as f64 / done as f64)
+}
+
+pub fn run(opts: &ExpOpts) -> String {
+    let n = 10;
+    let d = 64;
+    let y = 1.0;
+    let trials = ((8.0 * opts.scale).ceil() as usize).clamp(2, 16);
+
+    // Fixed well-spread inputs; μ is the mean over all n machines, so
+    // dropped reports show up as error, not as a moved target.
+    let mut rng = Rng::new(42);
+    let inputs: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..d).map(|_| 120.0 + rng.uniform(-y / 2.0, y / 2.0)).collect())
+        .collect();
+    let mu = mean_vecs(&inputs);
+
+    let mut out = String::from(
+        "# Dropout — estimation error vs seeded dropout rate (k-of-n partial rounds)\n\n",
+    );
+    let mut rows = Vec::new();
+    let mut cases: Vec<Json> = Vec::new();
+    let mut k_means: Vec<f64> = vec![0.0; RATES.len()];
+    for spec in codecs() {
+        let mut row = vec![spec.label()];
+        for (ri, &rate) in RATES.iter().enumerate() {
+            let (err2, k_mean) = run_cell(spec, rate, ri, &inputs, &mu, y, trials);
+            row.push(format!("{err2:.3e}"));
+            // The drop schedule is codec-independent: every codec sees
+            // the same k per round, so remembering the last is enough.
+            k_means[ri] = k_mean;
+            let mut case = BTreeMap::new();
+            case.insert("name".to_string(), Json::Str(format!("{}@{rate}", spec.label())));
+            case.insert("codec".to_string(), Json::Str(spec.label()));
+            case.insert("rate".to_string(), Json::Num(rate));
+            case.insert("err2".to_string(), Json::Num(err2));
+            case.insert("k_mean".to_string(), Json::Num(k_mean));
+            cases.push(Json::Obj(case));
+        }
+        rows.push(row);
+    }
+
+    let mut headers: Vec<String> = vec!["codec".to_string()];
+    for (ri, rate) in RATES.iter().enumerate() {
+        headers.push(format!("err2@{rate} (k̄={:.1})", k_means[ri]));
+    }
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    out += &render_table(
+        &format!(
+            "n={n}, d={d}, y={y}, {trials} rounds per cell; one fault seed per rate \
+             (identical drop sets across codecs); 1/k partial mean vs full-n mean"
+        ),
+        &header_refs,
+        &rows,
+    );
+    out += "expected: rate 0 is pure quantization noise; as dropout grows the partial-mean \
+            bias dominates and all codecs converge to the same error floor.\n";
+
+    // Machine-readable grid, bench-plumbing style (`BENCH_dropout.json`
+    // in the working directory, like every bench target's summary).
+    // Gated on an out dir so `cargo test` never litters the tree.
+    if opts.out_dir.is_some() {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("dropout".to_string()));
+        root.insert("schema".to_string(), Json::Num(1.0));
+        root.insert("cases".to_string(), Json::Arr(cases));
+        let path = "BENCH_dropout.json";
+        if std::fs::write(path, format!("{}\n", Json::Obj(root))).is_ok() {
+            eprintln!("[saved {path}: {} cases]", codecs().len() * RATES.len());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dropout_grid_runs_and_degrades_with_rate() {
+        let opts = ExpOpts {
+            scale: 0.25,
+            seeds: 1,
+            out_dir: None,
+            batch: 1,
+        };
+        let r = run(&opts);
+        // One row per codec, one error column per rate.
+        for spec in codecs() {
+            assert!(r.contains(&spec.label()), "missing row for {}", spec.label());
+        }
+        let lq_row: Vec<f64> = r
+            .lines()
+            .find(|l| l.contains("LQSGD(q=64)") && !l.contains("RLQSGD"))
+            .expect("LQ row")
+            .split_whitespace()
+            .filter_map(|tok| tok.parse::<f64>().ok())
+            .collect();
+        assert_eq!(lq_row.len(), RATES.len(), "{r}");
+        // Dropping half the reports must cost orders of magnitude more
+        // than quantization noise alone (the partial-mean bias).
+        assert!(
+            lq_row[RATES.len() - 1] > lq_row[0],
+            "error should grow with dropout: {lq_row:?}\n{r}"
+        );
+    }
+}

@@ -18,6 +18,7 @@
 //! `experiments_bench` shows it end to end).
 
 pub mod ablation;
+pub mod dropout;
 pub mod e1_norms;
 pub mod e2_variance;
 pub mod e3_convergence;
@@ -174,7 +175,8 @@ pub fn save_report(opts: &ExpOpts, name: &str, report: &str) {
     }
 }
 
-/// Run an experiment by id ("1".."8", "tradeoff"); returns the report.
+/// Run an experiment by id ("1".."8", "tradeoff", "ablation",
+/// "dropout"); returns the report.
 pub fn run(id: &str, opts: &ExpOpts) -> Option<String> {
     let report = match id {
         "1" => e1_norms::run(opts),
@@ -187,11 +189,13 @@ pub fn run(id: &str, opts: &ExpOpts) -> Option<String> {
         "8" => e8_power::run(opts),
         "tradeoff" | "9" => tradeoff::run(opts),
         "ablation" => ablation::run(opts),
+        "dropout" => dropout::run(opts),
         _ => return None,
     };
     let name = match id {
         "tradeoff" | "9" => "tradeoff".to_string(),
         "ablation" => "ablation".to_string(),
+        "dropout" => "dropout".to_string(),
         _ => format!("e{id}"),
     };
     save_report(opts, &name, &report);
@@ -199,7 +203,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Option<String> {
 }
 
 pub const ALL_IDS: &[&str] = &[
-    "1", "2", "3", "4", "5", "6", "7", "8", "tradeoff", "ablation",
+    "1", "2", "3", "4", "5", "6", "7", "8", "tradeoff", "ablation", "dropout",
 ];
 
 #[cfg(test)]

@@ -1,7 +1,7 @@
 //! `dme` — CLI for the lattice-DME reproduction.
 //!
 //! Subcommands:
-//!   dme exp <1..8|tradeoff|all> [scale=<f>] [seeds=<n>] [batch=<B>]
+//!   dme exp <1..8|tradeoff|dropout|all> [scale=<f>] [seeds=<n>] [batch=<B>]
 //!                                                             regenerate figures/tables
 //!   dme me  [n=..] [d=..] [q=..] [seed=..] [topology=..] [batch=<B>]
 //!                                                             MeanEstimation rounds
@@ -42,7 +42,7 @@ fn usage() -> ! {
         "usage: dme <command>\n\
          \n\
          commands:\n\
-         \x20 exp <1..8|tradeoff|all> [scale=1.0] [seeds=5] [batch=1]\n\
+         \x20 exp <1..8|tradeoff|dropout|all> [scale=1.0] [seeds=5] [batch=1]\n\
          \x20                                                 regenerate paper figures/tables\n\
          \x20 me  [n=8] [d=64] [q=16] [seed=0] [topology=both] [batch=1]\n\
          \x20                                                 MeanEstimation rounds (star|tree|tree:<m>|both)\n\
@@ -445,5 +445,5 @@ fn cmd_info() {
         Some(d) => println!("artifact dir: {}", d.display()),
         None => println!("artifact dir: NOT FOUND (run `make artifacts`)"),
     }
-    println!("experiments : dme exp <1..8|tradeoff|all>");
+    println!("experiments : dme exp <1..8|tradeoff|dropout|all>");
 }

@@ -86,6 +86,10 @@ pub enum TransportError {
     /// report, stateful codec, …) — a protocol-level rejection carried
     /// back over a healthy connection.
     Rejected(String),
+    /// A k-of-n round closed at its deadline with fewer reports than
+    /// the straggler policy's minimum quorum. Recoverable: the session
+    /// stays usable and the next round may succeed.
+    QuorumFailed { got: usize, need: usize },
     /// An underlying I/O failure on an established stream.
     Io { kind: io::ErrorKind, detail: String },
 }
@@ -119,6 +123,9 @@ impl fmt::Display for TransportError {
             TransportError::Handshake(why) => write!(f, "mesh handshake failed: {why}"),
             TransportError::BadFrame(fe) => write!(f, "bad frame: {fe}"),
             TransportError::Rejected(why) => write!(f, "service rejected the request: {why}"),
+            TransportError::QuorumFailed { got, need } => {
+                write!(f, "round closed with {got} of the {need} reports its quorum requires")
+            }
             TransportError::Io { kind, detail } => write!(f, "i/o error ({kind:?}): {detail}"),
         }
     }

@@ -1,0 +1,548 @@
+//! Deterministic, seeded fault injection over any transport.
+//!
+//! [`FaultyEndpoint`] wraps any [`TransportEndpoint`] — the in-process
+//! [`crate::sim::Endpoint`] or a TCP mesh endpoint alike — and injects
+//! per-machine, per-round faults drawn from a [`FaultPlan`]. Every fault
+//! decision is a pure function of `(plan.seed, machine id, round)`:
+//! re-running the same plan over the same protocol reproduces the exact
+//! same fault pattern, independently of thread scheduling, wall-clock,
+//! or the size of the worker pool. That determinism is what makes the
+//! failure-injection suite (`rust/tests/failure_injection.rs`) and the
+//! dropout experiment (`crate::exp::dropout`) reproducible.
+//!
+//! # Fault model: send-side silence
+//!
+//! Faults act at the **send boundary**. A machine faulted in a round has
+//! its outgoing messages dropped, withheld past any deadline, duplicated
+//! or corrupted — its receive side is untouched. This models the failure
+//! the k-of-n straggler policy must survive: to the rest of the cluster,
+//! a machine whose uploads never arrive is indistinguishable from one
+//! that crashed, so send-side silence exercises every partial-round code
+//! path while keeping the wrapper trivially deterministic. Within a
+//! deadline-bounded round, a message delayed past the deadline is
+//! indistinguishable from a dropped one on the wire; the wrapper
+//! distinguishes the two only in its [`FaultStats`] log.
+//!
+//! Metering follows what actually crossed the wire: a dropped or
+//! withheld message charges neither side (it never reached the
+//! transport), a duplicated message charges both sides twice, a
+//! corrupted message charges its normal bits.
+//!
+//! # Round counter
+//!
+//! [`TransportEndpoint`] has no notion of protocol rounds, so the
+//! wrapper keeps an explicit counter: the driver (the session worker
+//! loops) calls [`FaultyEndpoint::set_round`] before each round or batch
+//! slot, and the wrapper caches the fault decision for `(id, round)`.
+//! With no plan attached the wrapper is a transparent pass-through — the
+//! session workers always run behind one, and full-participation rounds
+//! stay bit-identical to the unwrapped transport (pinned by
+//! `rust/tests/session_parity.rs`).
+
+use crate::net::{Packet, Traffic, Transport, TransportEndpoint, TransportError};
+use crate::quant::Message;
+use crate::rng::{hash2, Rng};
+use std::time::Duration;
+
+/// Salt mixed into the plan seed for the per-machine slow-start draw
+/// (stable across rounds: a machine that starts slow stays slow until
+/// the recovery round).
+const SLOW_SALT: u64 = 0x51_0E_57_A7;
+/// Salt for the corrupt-payload byte/mask derivation.
+const CORRUPT_SALT: u64 = 0xC0_22_4B_7D;
+
+/// The fault injected for one `(machine, round)` cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Deliver normally.
+    None,
+    /// Outgoing messages vanish this round.
+    Drop,
+    /// Outgoing messages are withheld past any round deadline — on the
+    /// wire of a deadline-bounded round this equals [`Fault::Drop`]; the
+    /// two are distinguished in [`FaultStats`] only.
+    Delay,
+    /// Every outgoing message is delivered twice (receivers must dedup).
+    Duplicate,
+    /// A deterministic byte of each outgoing payload is flipped.
+    Corrupt,
+    /// The machine crashed at an earlier round: silent from then on.
+    Crash,
+    /// Slow-start: the machine is delay-faulted in every round before
+    /// its recovery round, then runs clean.
+    SlowStart,
+}
+
+impl Fault {
+    /// Does this fault silence the machine's sends entirely? (Its
+    /// reports never arrive; the straggler policy sees it as dropped.)
+    pub fn silences(self) -> bool {
+        matches!(
+            self,
+            Fault::Drop | Fault::Delay | Fault::Crash | Fault::SlowStart
+        )
+    }
+}
+
+/// Slow-start shape: a seeded subset of machines is delay-faulted in
+/// every round `< recover_round`, then recovers for good.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SlowStart {
+    /// Probability a given machine is a slow starter (one draw per
+    /// machine from the plan seed, stable across rounds).
+    pub rate: f64,
+    /// First round in which slow starters run clean again.
+    pub recover_round: u64,
+}
+
+/// A reproducible fault schedule: one seed plus per-kind rates.
+///
+/// [`FaultPlan::fault_for`] maps every `(machine, round)` cell to a
+/// [`Fault`] deterministically; the rates partition a single uniform
+/// draw per cell, so raising one rate never reshuffles the cells chosen
+/// by another. Crash entries and the slow-start window override the
+/// rate draw.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Root seed for every fault decision.
+    pub seed: u64,
+    /// Per-round probability a machine's sends are dropped.
+    pub drop_rate: f64,
+    /// Per-round probability a machine's sends are delayed past the
+    /// deadline.
+    pub delay_rate: f64,
+    /// Per-round probability a machine's sends are duplicated.
+    pub duplicate_rate: f64,
+    /// Per-round probability a machine's payloads are corrupted.
+    pub corrupt_rate: f64,
+    /// `(machine, round)` entries: the machine is silent from `round` on.
+    pub crash_at: Vec<(usize, u64)>,
+    /// Optional slow-start window (see [`SlowStart`]).
+    pub slow_start: Option<SlowStart>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (useful as an explicit baseline).
+    pub fn none(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Pure-dropout plan: each machine independently drops each round
+    /// with probability `rate` — the dropout-vs-error experiment's knob.
+    pub fn dropout(seed: u64, rate: f64) -> Self {
+        assert!((0.0..=1.0).contains(&rate), "dropout rate in [0, 1]");
+        FaultPlan {
+            seed,
+            drop_rate: rate,
+            ..FaultPlan::default()
+        }
+    }
+
+    /// The fault for one `(machine, round)` cell — a pure function of
+    /// the plan, so every holder of the plan computes the same schedule.
+    pub fn fault_for(&self, machine: usize, round: u64) -> Fault {
+        for &(m, r) in &self.crash_at {
+            if machine == m && round >= r {
+                return Fault::Crash;
+            }
+        }
+        if let Some(ss) = self.slow_start {
+            if round < ss.recover_round {
+                let draw = Rng::new(hash2(self.seed ^ SLOW_SALT, machine as u64)).next_f64();
+                if draw < ss.rate {
+                    return Fault::SlowStart;
+                }
+            }
+        }
+        let draw = Rng::new(hash2(hash2(self.seed, machine as u64), round)).next_f64();
+        let mut lo = 0.0;
+        for (rate, fault) in [
+            (self.drop_rate, Fault::Drop),
+            (self.delay_rate, Fault::Delay),
+            (self.duplicate_rate, Fault::Duplicate),
+            (self.corrupt_rate, Fault::Corrupt),
+        ] {
+            if draw < lo + rate {
+                return fault;
+            }
+            lo += rate;
+        }
+        Fault::None
+    }
+
+    /// Is `machine` send-silent in `round`? (Convenience for tests and
+    /// experiments computing the expected arrived set of a round.)
+    pub fn silences(&self, machine: usize, round: u64) -> bool {
+        self.fault_for(machine, round).silences()
+    }
+
+    /// The machines of `0..n` whose sends survive `round` — the expected
+    /// participant set a k-of-n round should fold (assuming the
+    /// coordinator itself is reachable).
+    pub fn survivors(&self, n: usize, round: u64) -> Vec<usize> {
+        (0..n).filter(|&m| !self.silences(m, round)).collect()
+    }
+}
+
+/// Per-endpoint tally of injected faults (observability for tests and
+/// experiment reports; not part of the wire cost model).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Messages delivered untouched.
+    pub clean: u64,
+    /// Messages swallowed by a drop fault.
+    pub dropped: u64,
+    /// Messages withheld by a delay or slow-start fault.
+    pub delayed: u64,
+    /// Messages delivered twice.
+    pub duplicated: u64,
+    /// Messages delivered with a flipped payload byte.
+    pub corrupted: u64,
+    /// Messages swallowed after the machine's crash round.
+    pub crashed: u64,
+}
+
+impl FaultStats {
+    /// Total messages the protocol asked the endpoint to send.
+    pub fn attempted(&self) -> u64 {
+        self.clean + self.dropped + self.delayed + self.duplicated + self.corrupted + self.crashed
+    }
+}
+
+/// A [`TransportEndpoint`] wrapper injecting [`FaultPlan`] faults at the
+/// send boundary (see the module docs for the model).
+pub struct FaultyEndpoint<E: TransportEndpoint> {
+    inner: E,
+    plan: Option<FaultPlan>,
+    round: u64,
+    fault: Fault,
+    stats: FaultStats,
+}
+
+impl<E: TransportEndpoint> FaultyEndpoint<E> {
+    /// Transparent wrapper: no plan, every operation delegates untouched.
+    pub fn new(inner: E) -> Self {
+        FaultyEndpoint {
+            inner,
+            plan: None,
+            round: 0,
+            fault: Fault::None,
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// Wrap with a fault plan, starting at round 0.
+    pub fn with_plan(inner: E, plan: FaultPlan) -> Self {
+        let mut ep = FaultyEndpoint::new(inner);
+        ep.plan = Some(plan);
+        ep.recompute();
+        ep
+    }
+
+    /// Advance (or rewind) the wrapper's round counter; the fault for
+    /// `(id, round)` is recomputed and applied to every send until the
+    /// next call. The session workers call this before each round and
+    /// each batch slot.
+    pub fn set_round(&mut self, round: u64) {
+        self.round = round;
+        self.recompute();
+    }
+
+    fn recompute(&mut self) {
+        let id = self.inner.id();
+        self.fault = match &self.plan {
+            Some(plan) => plan.fault_for(id, self.round),
+            None => Fault::None,
+        };
+    }
+
+    /// The wrapper's current round counter.
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// The fault in effect for this machine at the current round.
+    pub fn fault(&self) -> Fault {
+        self.fault
+    }
+
+    /// The attached plan, if any.
+    pub fn plan(&self) -> Option<&FaultPlan> {
+        self.plan.as_ref()
+    }
+
+    /// Injection tally since construction.
+    pub fn stats(&self) -> FaultStats {
+        self.stats
+    }
+
+    /// Unwrap the inner endpoint.
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+
+    /// Flip one deterministic payload byte — the byte index and the
+    /// mask derive from `(plan seed, id, round)`, so the corruption is
+    /// reproducible and always changes at least one bit inside the
+    /// metered payload span.
+    fn corrupt(&self, mut msg: Message) -> Message {
+        let span = msg.bytes.len().min(msg.bits.div_ceil(8) as usize);
+        if span == 0 {
+            return msg;
+        }
+        let plan_seed = self.plan.as_ref().map(|p| p.seed).unwrap_or(0);
+        let h = hash2(
+            hash2(plan_seed ^ CORRUPT_SALT, self.inner.id() as u64),
+            self.round,
+        );
+        let idx = (h % span as u64) as usize;
+        let mask = ((h >> 32) as u8) | 0x01;
+        msg.bytes[idx] ^= mask;
+        msg
+    }
+}
+
+impl<E: TransportEndpoint> TransportEndpoint for FaultyEndpoint<E> {
+    fn id(&self) -> usize {
+        self.inner.id()
+    }
+
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn send(&mut self, to: usize, msg: Message) -> Result<(), TransportError> {
+        match self.fault {
+            Fault::None => {
+                self.stats.clean += 1;
+                self.inner.send(to, msg)
+            }
+            Fault::Drop => {
+                self.stats.dropped += 1;
+                Ok(())
+            }
+            Fault::Delay | Fault::SlowStart => {
+                self.stats.delayed += 1;
+                Ok(())
+            }
+            Fault::Crash => {
+                self.stats.crashed += 1;
+                Ok(())
+            }
+            Fault::Duplicate => {
+                self.stats.duplicated += 1;
+                self.inner.send(to, msg.clone())?;
+                self.inner.send(to, msg)
+            }
+            Fault::Corrupt => {
+                self.stats.corrupted += 1;
+                let corrupted = self.corrupt(msg);
+                self.inner.send(to, corrupted)
+            }
+        }
+    }
+
+    fn recv(&mut self) -> Result<Packet, TransportError> {
+        self.inner.recv()
+    }
+
+    fn recv_from(&mut self, from: usize) -> Result<Packet, TransportError> {
+        self.inner.recv_from(from)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Packet, TransportError> {
+        self.inner.recv_timeout(timeout)
+    }
+
+    fn traffic(&self) -> Traffic {
+        self.inner.traffic()
+    }
+}
+
+/// A [`Transport`] factory whose endpoints are all wrapped with the same
+/// [`FaultPlan`] — drop-in for [`crate::sim::Cluster`] or the TCP mesh
+/// in any transport-generic driver.
+pub struct FaultyTransport<T: Transport> {
+    inner: T,
+    plan: FaultPlan,
+}
+
+impl<T: Transport> FaultyTransport<T> {
+    pub fn new(inner: T, plan: FaultPlan) -> Self {
+        FaultyTransport { inner, plan }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+impl<T: Transport> Transport for FaultyTransport<T> {
+    type Endpoint = FaultyEndpoint<T::Endpoint>;
+
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn open(&mut self) -> Result<Vec<Self::Endpoint>, TransportError> {
+        Ok(self
+            .inner
+            .open()?
+            .into_iter()
+            .map(|ep| FaultyEndpoint::with_plan(ep, self.plan.clone()))
+            .collect())
+    }
+
+    fn traffic(&self) -> Vec<Traffic> {
+        self.inner.traffic()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Cluster;
+
+    fn msg(bits: u64) -> Message {
+        Message {
+            bytes: vec![0xAAu8; bits.div_ceil(8) as usize],
+            bits,
+        }
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_and_seed_sensitive() {
+        let plan = FaultPlan {
+            seed: 7,
+            drop_rate: 0.3,
+            delay_rate: 0.1,
+            duplicate_rate: 0.1,
+            corrupt_rate: 0.1,
+            ..FaultPlan::default()
+        };
+        let grid: Vec<Fault> = (0..8)
+            .flat_map(|m| (0..16).map(move |r| (m, r)))
+            .map(|(m, r)| plan.fault_for(m, r))
+            .collect();
+        let again: Vec<Fault> = (0..8)
+            .flat_map(|m| (0..16).map(move |r| (m, r)))
+            .map(|(m, r)| plan.fault_for(m, r))
+            .collect();
+        assert_eq!(grid, again, "same plan must yield the same schedule");
+        let other = FaultPlan { seed: 8, ..plan.clone() };
+        let other_grid: Vec<Fault> = (0..8)
+            .flat_map(|m| (0..16).map(move |r| (m, r)))
+            .map(|(m, r)| other.fault_for(m, r))
+            .collect();
+        assert_ne!(grid, other_grid, "a different seed must reshuffle faults");
+        // With these rates every kind must actually appear somewhere.
+        for want in [Fault::None, Fault::Drop, Fault::Delay, Fault::Duplicate, Fault::Corrupt] {
+            assert!(grid.contains(&want), "{want:?} never drawn");
+        }
+    }
+
+    #[test]
+    fn crash_is_permanent_and_slow_start_recovers() {
+        let plan = FaultPlan {
+            seed: 3,
+            crash_at: vec![(2, 5)],
+            slow_start: Some(SlowStart { rate: 1.0, recover_round: 4 }),
+            ..FaultPlan::default()
+        };
+        assert_eq!(plan.fault_for(2, 4), Fault::SlowStart);
+        for r in 5..40 {
+            assert_eq!(plan.fault_for(2, r), Fault::Crash, "round {r}");
+        }
+        // Every machine is a slow starter at rate 1.0, then recovers.
+        for m in 0..4 {
+            assert_eq!(plan.fault_for(m, 3), Fault::SlowStart, "machine {m}");
+            if m != 2 {
+                assert_eq!(plan.fault_for(m, 9), Fault::None, "machine {m}");
+            }
+        }
+        assert_eq!(plan.survivors(4, 3), Vec::<usize>::new());
+        assert_eq!(plan.survivors(4, 9), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn dropped_sends_never_arrive_and_charge_no_meter() {
+        let cluster = Cluster::new(2);
+        let mut eps = cluster.endpoints();
+        let receiver = eps.pop().expect("endpoint 1");
+        let plan = FaultPlan {
+            seed: 1,
+            drop_rate: 1.0,
+            ..FaultPlan::default()
+        };
+        let mut sender = FaultyEndpoint::with_plan(eps.pop().expect("endpoint 0"), plan);
+        assert_eq!(sender.fault(), Fault::Drop);
+        sender.send(1, msg(64)).expect("drop swallows the send");
+        assert_eq!(sender.stats().dropped, 1);
+        assert_eq!(sender.traffic(), Traffic::default(), "nothing crossed the wire");
+        assert_eq!(receiver.traffic(), Traffic::default());
+        drop(receiver);
+    }
+
+    #[test]
+    fn duplicate_and_corrupt_deliver_observably() {
+        let cluster = Cluster::new(2);
+        let mut eps = cluster.endpoints();
+        let mut receiver = eps.pop().expect("endpoint 1");
+        let plan = FaultPlan {
+            seed: 2,
+            duplicate_rate: 1.0,
+            ..FaultPlan::default()
+        };
+        let mut sender = FaultyEndpoint::with_plan(eps.pop().expect("endpoint 0"), plan);
+        sender.send(1, msg(64)).expect("duplicate sends twice");
+        use crate::net::TransportEndpoint as _;
+        let a = receiver.recv().expect("first copy");
+        let b = receiver.recv().expect("second copy");
+        assert_eq!(a.msg, b.msg, "duplicates are identical");
+
+        // Same wire, corrupt fault: payload differs from the original in
+        // exactly one byte, deterministically.
+        let plan = FaultPlan {
+            seed: 2,
+            corrupt_rate: 1.0,
+            ..FaultPlan::default()
+        };
+        let mut sender = FaultyEndpoint::with_plan(sender.into_inner(), plan);
+        let original = msg(64);
+        sender.send(1, original.clone()).expect("corrupt still delivers");
+        let got = receiver.recv().expect("corrupted copy");
+        assert_eq!(got.msg.bits, original.bits);
+        let diff: Vec<usize> = original
+            .bytes
+            .iter()
+            .zip(&got.msg.bytes)
+            .enumerate()
+            .filter(|(_, (x, y))| x != y)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(diff.len(), 1, "exactly one byte flipped");
+        // And the corruption is reproducible.
+        sender.send(1, original.clone()).expect("send again");
+        let again = receiver.recv().expect("same corruption");
+        assert_eq!(again.msg, got.msg);
+    }
+
+    #[test]
+    fn transparent_wrapper_passes_everything_through() {
+        let cluster = Cluster::new(2);
+        let mut eps = cluster.endpoints();
+        let mut receiver = FaultyEndpoint::new(eps.pop().expect("endpoint 1"));
+        let mut sender = FaultyEndpoint::new(eps.pop().expect("endpoint 0"));
+        sender.set_round(17);
+        assert_eq!(sender.fault(), Fault::None);
+        sender.send(1, msg(40)).expect("clean send");
+        let p = receiver.recv().expect("clean recv");
+        assert_eq!(p.from, 0);
+        assert_eq!(p.msg.bits, 40);
+        assert_eq!(sender.traffic().sent_bits, 40);
+        assert_eq!(receiver.traffic().recv_bits, 40);
+    }
+}

@@ -51,6 +51,33 @@
 //! this accounting live, so "bits per machine per round" — the quantity
 //! every theorem in the paper bounds — is observable in the serving
 //! path, not only in benchmarks.
+//!
+//! # Straggler policy: in-round k-of-n mirrors the service semantics
+//!
+//! The service's partial-participation rule above also runs *inside*
+//! session rounds (see the "Straggler policy" section of
+//! [`crate::coordinator`]): a [`crate::coordinator::StragglerPolicy`]
+//! gives every round a deadline, a minimum quorum `k_min`, and a
+//! [`retry::RetrySchedule`] whose jittered backoff windows pace the
+//! leader's receive attempts. The two layers are the same semantics at
+//! different granularity:
+//!
+//! - the cohort table's deadline ↔ the policy's per-round `deadline`;
+//! - `OpenRound::close`'s `1/k` renormalization over the `k` reports
+//!   that arrived ↔ the in-round partial mean over the machines whose
+//!   uploads beat the deadline (the identical `inv_k * acc` fold, so a
+//!   k-of-n session round and a k-of-n cohort round produce bit-equal
+//!   estimates from equal report sets);
+//! - the service answering waiters with `partial = true` ↔ the session's
+//!   `RoundOutcome` reporting `participants`, `dropped` and
+//!   `retries_used`, with `k < k_min` surfacing as the typed
+//!   [`TransportError::QuorumFailed`] instead of a panic.
+//!
+//! Faults to exercise that policy come from [`faulty`]: a seeded
+//! [`faulty::FaultPlan`] wraps any endpoint in a
+//! [`faulty::FaultyEndpoint`] and injects per-machine per-round drops,
+//! delays, duplicates, corruption, crashes and slow starts,
+//! reproducibly from one seed.
 
 use crate::quant::Message;
 use std::collections::VecDeque;
@@ -59,7 +86,9 @@ use std::time::Duration;
 
 pub mod cohort;
 pub mod error;
+pub mod faulty;
 pub mod frame;
+pub mod retry;
 pub mod service;
 pub mod tcp;
 pub mod wire;

@@ -1,0 +1,177 @@
+//! Bounded retry/backoff schedules with optional deterministic jitter.
+//!
+//! [`RetrySchedule`] is the one description of "try, back off, try
+//! again" shared by every retry path in the crate: TCP mesh dialing
+//! ([`super::tcp`]) sleeps its windows between connect attempts, and the
+//! k-of-n partial rounds ([`crate::coordinator`]) use them as the
+//! per-attempt *receive* windows of a gather — wait one window, count a
+//! retry, wait the next, until the reports arrive or the round deadline
+//! eats the remaining budget.
+//!
+//! Jitter is full-jitter over the top half of the current delay (each
+//! window is uniform in `[delay/2, delay]`, then the delay doubles
+//! toward the cap — the exact pattern the TCP transport has always
+//! used). With `jitter_seed: Some(seed)` the whole schedule is a pure
+//! function of `(seed, salt)` — reproducible retry timing for tests and
+//! fault-injection runs. With `None` (the production default) the jitter
+//! is drawn from ambient clock entropy, so independent processes
+//! retrying against one endpoint spread out instead of stampeding in
+//! lockstep.
+
+use crate::rng::{hash2, Rng};
+use std::time::Duration;
+
+/// A bounded exponential-backoff schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetrySchedule {
+    /// Retries after the first attempt ([`RetrySchedule::attempts`] is
+    /// `max_retries + 1`).
+    pub max_retries: u32,
+    /// First backoff delay; doubles per window up to `backoff_cap`.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// `Some(seed)`: windows are a pure function of `(seed, salt)`.
+    /// `None`: jitter from ambient clock entropy (production default).
+    pub jitter_seed: Option<u64>,
+}
+
+impl Default for RetrySchedule {
+    fn default() -> Self {
+        RetrySchedule {
+            max_retries: 5,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(640),
+            jitter_seed: None,
+        }
+    }
+}
+
+impl RetrySchedule {
+    /// A fully deterministic schedule (tests, fault-injection runs).
+    pub fn deterministic(
+        max_retries: u32,
+        backoff_base: Duration,
+        backoff_cap: Duration,
+        seed: u64,
+    ) -> Self {
+        RetrySchedule {
+            max_retries,
+            backoff_base,
+            backoff_cap,
+            jitter_seed: Some(seed),
+        }
+    }
+
+    /// Total attempts the schedule allows.
+    pub fn attempts(&self) -> u32 {
+        self.max_retries + 1
+    }
+
+    /// The jittered backoff windows for one retried operation. `salt`
+    /// distinguishes concurrent operations under one seed (dials to
+    /// different peers, gathers in different rounds) so their schedules
+    /// are independent but individually reproducible.
+    ///
+    /// Yields exactly [`RetrySchedule::attempts`] windows: dial-style
+    /// users sleep a window *between* attempts (consuming
+    /// `max_retries` of them), gather-style users wait out up to all
+    /// `attempts()` windows as receive timeouts.
+    pub fn windows(&self, salt: u64) -> BackoffWindows {
+        let seed = match self.jitter_seed {
+            Some(seed) => hash2(seed, salt),
+            None => hash2(entropy_seed(), salt),
+        };
+        BackoffWindows {
+            delay: self.backoff_base,
+            cap: self.backoff_cap,
+            left: self.attempts(),
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+/// Ambient-entropy seed for unseeded schedules: the sub-second clock
+/// phase is plenty to decorrelate independent retry loops, and it keeps
+/// the crate free of OS randomness dependencies.
+fn entropy_seed() -> u64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos() as u64 ^ (d.as_secs() << 32))
+        .unwrap_or(0x5EED_F411);
+    hash2(nanos, 0x7E7_2A11)
+}
+
+/// Iterator of jittered, capped, doubling backoff windows (see
+/// [`RetrySchedule::windows`]).
+pub struct BackoffWindows {
+    delay: Duration,
+    cap: Duration,
+    left: u32,
+    rng: Rng,
+}
+
+impl Iterator for BackoffWindows {
+    type Item = Duration;
+
+    fn next(&mut self) -> Option<Duration> {
+        if self.left == 0 {
+            return None;
+        }
+        self.left -= 1;
+        let jittered = self.delay.mul_f64(0.5 + 0.5 * self.rng.uniform(0.0, 1.0));
+        self.delay = (self.delay * 2).min(self.cap);
+        Some(jittered)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.left as usize, Some(self.left as usize))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_windows_are_reproducible_and_salt_sensitive() {
+        let sched =
+            RetrySchedule::deterministic(4, Duration::from_millis(10), Duration::from_millis(80), 9);
+        let a: Vec<Duration> = sched.windows(1).collect();
+        let b: Vec<Duration> = sched.windows(1).collect();
+        assert_eq!(a, b, "same (seed, salt) must replay the same windows");
+        assert_eq!(a.len(), 5, "attempts() windows");
+        let c: Vec<Duration> = sched.windows(2).collect();
+        assert_ne!(a, c, "different salts must decorrelate");
+    }
+
+    #[test]
+    fn windows_stay_within_jitter_envelope_and_cap() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(40);
+        let sched = RetrySchedule::deterministic(7, base, cap, 123);
+        let mut delay = base;
+        for w in sched.windows(0) {
+            assert!(w >= delay.mul_f64(0.5) && w <= delay, "window {w:?} outside [{:?}/2, {:?}]", delay, delay);
+            delay = (delay * 2).min(cap);
+        }
+        // Far past the doubling horizon every window is capped.
+        let tail: Vec<Duration> = sched.windows(0).skip(5).collect();
+        for w in tail {
+            assert!(w <= cap && w >= cap.mul_f64(0.5));
+        }
+    }
+
+    #[test]
+    fn unseeded_windows_still_respect_the_envelope() {
+        let base = Duration::from_millis(2);
+        let sched = RetrySchedule {
+            max_retries: 3,
+            backoff_base: base,
+            backoff_cap: Duration::from_millis(8),
+            jitter_seed: None,
+        };
+        let ws: Vec<Duration> = sched.windows(7).collect();
+        assert_eq!(ws.len(), 4);
+        assert!(ws[0] >= base.mul_f64(0.5) && ws[0] <= base);
+    }
+}

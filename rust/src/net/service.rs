@@ -7,9 +7,14 @@
 //! star round — the client *is* a star worker, the service *is* the
 //! leader). Reports are folded through the [`super::cohort::CohortTable`]
 //! streaming accumulator; a report that completes its round answers
-//! everyone still parked on that round, and the accept loop doubles as
-//! the deadline sweeper — each idle tick it expires overdue rounds and
-//! answers their waiters with the `1/k`-renormalized partial mean.
+//! everyone still parked on that round. Deadline sweeping runs on
+//! *every* path that takes the state lock: the accept loop sweeps each
+//! iteration (idle ticks included), and every connection handler sweeps
+//! before dispatching its request — so under sustained accept traffic,
+//! where handler threads dominate the lock, overdue rounds are still
+//! expired and their waiters answered with the `1/k`-renormalized
+//! partial mean instead of waiting for the accept thread to win the
+//! lock.
 //!
 //! Client side, [`report_round`] encodes one vector under the cohort
 //! codec convention (see [`super::cohort`]) and blocks for the round's
@@ -161,6 +166,13 @@ fn handle_connection(shared: &Arc<Shared>, mut stream: TcpStream) {
         }
     };
     let mut state = shared.state.lock().expect("service state lock");
+    // Sweep overdue rounds on the handling path too: with many handler
+    // threads contending for the lock, the accept loop's sweep can be
+    // starved indefinitely, and a parked waiter must not outlive its
+    // round's deadline just because the service is busy. This also
+    // guarantees a report racing its own deadline observes the expiry
+    // (and is answered `Late`) rather than reopening a closed round.
+    sweep(shared, &mut state, false);
     match req {
         Request::Report {
             cohort,
@@ -466,6 +478,40 @@ mod tests {
         assert!(out.partial);
         for &v in &out.estimate {
             assert!((v - 2.0).abs() < 0.3, "k=1 mean {v} far from 2.0");
+        }
+        let summary = server.join().unwrap();
+        assert_eq!(summary.rounds_partial, 1);
+    }
+
+    #[test]
+    fn deadline_fires_under_sustained_accept_traffic() {
+        let (addr, server) = spawn_server(ServeOpts {
+            max_rounds: Some(1),
+            ..ServeOpts::default()
+        });
+        // 1 of 2 expected clients reports with a 120 ms deadline, then
+        // parks as a waiter.
+        let cs = spec(2, 4);
+        let reporter = {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                report_round(&addr, 4, 0, 0, &cs, &[3.0; 4], 120, Duration::from_secs(10))
+            })
+        };
+        // Sustained traffic: hammer the service with health requests
+        // while the round ages past its deadline. The connection
+        // handlers themselves must sweep the expiry — the waiter cannot
+        // depend on the accept thread winning the contended state lock.
+        let until = Instant::now() + Duration::from_millis(500);
+        while Instant::now() < until {
+            let _ = fetch_stats(&addr, Duration::from_millis(500));
+        }
+        let out = reporter.join().unwrap().expect("waiter answered at the deadline");
+        assert!(out.partial);
+        assert_eq!(out.received, 1);
+        assert_eq!(out.expected, 2);
+        for &v in &out.estimate {
+            assert!((v - 3.0).abs() < 0.3, "k=1 mean {v} far from 3.0");
         }
         let summary = server.join().unwrap();
         assert_eq!(summary.rounds_partial, 1);

@@ -12,15 +12,16 @@
 //!
 //! Mesh bring-up is deadlock-free by construction: all listeners are
 //! bound before any connect, machine `i` dials every `j < i` (retried
-//! with exponential backoff + deterministic jitter) and accepts from
-//! every `j > i`; the OS listen backlog absorbs dials that land before
-//! the peer reaches its accept phase.
+//! on a [`RetrySchedule`] with exponential backoff + jitter) and accepts
+//! from every `j > i`; the OS listen backlog absorbs dials that land
+//! before the peer reaches its accept phase.
 
 use super::error::TransportError;
 use super::frame;
+use super::retry::RetrySchedule;
 use super::{Meter, Packet, Stash, Traffic, Transport, TransportEndpoint};
 use crate::quant::Message;
-use crate::rng::{hash2, Rng};
+use crate::rng::hash2;
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -48,9 +49,12 @@ pub struct TcpOpts {
     /// First backoff delay; doubles per retry up to `backoff_cap`.
     pub backoff_base: Duration,
     pub backoff_cap: Duration,
-    /// Seed for the deterministic backoff jitter (the in-tree [`Rng`];
-    /// no ambient entropy, so bring-up schedules are reproducible).
-    pub jitter_seed: u64,
+    /// `Some(seed)`: backoff jitter is a pure function of
+    /// `(seed, machine, peer)` — reproducible bring-up schedules for
+    /// tests and fault-injection runs. `None` (the production default):
+    /// jitter from ambient clock entropy, so independent processes
+    /// dialing one address spread out instead of stampeding in lockstep.
+    pub jitter_seed: Option<u64>,
     /// Largest acceptable frame payload (see [`frame::MAX_FRAME_BYTES`]).
     pub max_frame: u32,
 }
@@ -64,8 +68,22 @@ impl Default for TcpOpts {
             max_retries: 5,
             backoff_base: Duration::from_millis(10),
             backoff_cap: Duration::from_millis(640),
-            jitter_seed: 0x7C9_D11E,
+            jitter_seed: None,
             max_frame: frame::MAX_FRAME_BYTES,
+        }
+    }
+}
+
+impl TcpOpts {
+    /// The connect retry/backoff knobs as a [`RetrySchedule`] — the
+    /// same schedule the coordinator's straggler policy reuses for its
+    /// per-round gather windows.
+    pub fn retry_schedule(&self) -> RetrySchedule {
+        RetrySchedule {
+            max_retries: self.max_retries,
+            backoff_base: self.backoff_base,
+            backoff_cap: self.backoff_cap,
+            jitter_seed: self.jitter_seed,
         }
     }
 }
@@ -74,31 +92,31 @@ fn io_err(e: io::Error) -> TransportError {
     TransportError::from_io(&e)
 }
 
-/// Dial `addr` with bounded retries, exponential backoff and full
-/// jitter (each sleep is uniform in [delay/2, delay], then the delay
-/// doubles toward the cap).
+/// Dial `addr` on the options' [`RetrySchedule`], sleeping one jittered
+/// backoff window between attempts. `salt` keys the jitter stream (the
+/// mesh uses `hash2(id, peer)` so every dial edge is independently
+/// reproducible under a seeded schedule).
 fn connect_with_retry(
     addr: &SocketAddr,
     opts: &TcpOpts,
-    rng: &mut Rng,
+    salt: u64,
 ) -> Result<TcpStream, TransportError> {
-    let mut delay = opts.backoff_base;
+    let sched = opts.retry_schedule();
+    let mut windows = sched.windows(salt);
     let mut last = String::from("no attempt made");
-    for attempt in 0..=opts.max_retries {
+    for attempt in 0..sched.attempts() {
         match TcpStream::connect_timeout(addr, opts.connect_timeout) {
             Ok(s) => return Ok(s),
             Err(e) => last = e.to_string(),
         }
-        if attempt == opts.max_retries {
+        if attempt + 1 == sched.attempts() {
             break;
         }
-        let jittered = delay.mul_f64(0.5 + 0.5 * rng.uniform(0.0, 1.0));
-        thread::sleep(jittered);
-        delay = (delay * 2).min(opts.backoff_cap);
+        thread::sleep(windows.next().expect("one window per retry"));
     }
     Err(TransportError::Connect {
         addr: addr.to_string(),
-        attempts: opts.max_retries + 1,
+        attempts: sched.attempts(),
         last,
     })
 }
@@ -189,11 +207,10 @@ impl TcpEndpoint {
         let n = addrs.len();
         assert!(id < n, "machine id out of range");
         let mut streams: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
-        let mut rng = Rng::new(hash2(opts.jitter_seed, id as u64));
 
         // Dial every lower-id peer and introduce ourselves.
         for (j, addr) in addrs.iter().enumerate().take(id) {
-            let mut s = connect_with_retry(addr, opts, &mut rng)?;
+            let mut s = connect_with_retry(addr, opts, hash2(id as u64, j as u64))?;
             let mut hello = [0u8; 12];
             hello[0..4].copy_from_slice(&MESH_MAGIC.to_le_bytes());
             hello[4..8].copy_from_slice(&(id as u32).to_le_bytes());
@@ -486,10 +503,10 @@ mod tests {
             max_retries: 2,
             backoff_base: Duration::from_millis(1),
             backoff_cap: Duration::from_millis(4),
+            jitter_seed: Some(1),
             ..TcpOpts::default()
         };
-        let mut rng = Rng::new(1);
-        match connect_with_retry(&addr, &opts, &mut rng) {
+        match connect_with_retry(&addr, &opts, 1) {
             Err(TransportError::Connect { attempts, .. }) => assert_eq!(attempts, 3),
             other => panic!("expected Connect error, got {other:?}"),
         }

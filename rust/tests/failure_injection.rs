@@ -3,13 +3,19 @@
 //! path) or *boundedly* (plain lattice path) — never silently corrupt
 //! beyond its documented envelopes.
 
-use dme::coordinator::{star_round_over, variance_reduction_star, CodecSpec};
+use dme::coordinator::{
+    star_round_over, tree_partial_reference, variance_reduction_star, CodecSpec, DmeBuilder,
+    RoundOutcome, StragglerPolicy, Topology,
+};
 use dme::linalg::{dist2, dist_inf, mean_vecs};
+use dme::net::faulty::FaultPlan;
+use dme::net::retry::RetrySchedule;
 use dme::net::TransportError;
 use dme::quant::robust::{RobustAgreement, RobustOutcome};
 use dme::quant::{LatticeQuantizer, VectorCodec};
-use dme::rng::Rng;
+use dme::rng::{hash2, Rng};
 use dme::sim::Cluster;
+use std::time::Duration;
 
 /// Corrupting color bits moves the decode to a *different lattice point*
 /// of the same lattice — the error is quantized (a multiple of s), never
@@ -215,4 +221,290 @@ fn degenerate_inputs_roundtrip() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// k-of-n partial rounds under seeded fault injection.
+// ---------------------------------------------------------------------------
+
+/// Fault seeds matching the CI fault matrix (`DME_FAULT_SEED`): the suite
+/// must pass for any seed, so the env var lets CI pin three fixed ones.
+fn fault_seed() -> u64 {
+    std::env::var("DME_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xFA017)
+}
+
+/// Deadline for in-process partial rounds: healthy sends arrive in
+/// microseconds, so this only needs to dwarf scheduler jitter.
+const DEADLINE: Duration = Duration::from_millis(250);
+
+/// A policy whose *first* backoff window is already wide (≥ 20 ms): a
+/// healthy in-process report lands in microseconds, so no window can
+/// expire on a loaded CI box before it arrives — `retries_used` counts
+/// only genuinely dropped reports, timing-independently.
+fn wide_window_policy(k_min: usize) -> StragglerPolicy {
+    StragglerPolicy {
+        deadline: DEADLINE,
+        k_min,
+        retry: RetrySchedule::deterministic(
+            2,
+            Duration::from_millis(40),
+            Duration::from_millis(40),
+            5,
+        ),
+    }
+}
+
+fn spread_inputs(n: usize, d: usize, y: f64, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| 80.0 + rng.uniform(-y / 2.0, y / 2.0)).collect())
+        .collect()
+}
+
+/// Hand-computed star k-of-n reference, replayed from public APIs only:
+/// fold the leader's raw input plus the decode of every *surviving*
+/// machine's encode (pinned machine order, leader's input as the decode
+/// reference), renormalize by `1/k`, re-encode at the leader, decode.
+/// Mirrors `OpenRound::close` in `net::service` — the PR-6 semantics the
+/// in-session partial round must match bit for bit.
+fn star_partial_reference(
+    spec: CodecSpec,
+    seed: u64,
+    round: u64,
+    y: f64,
+    inputs: &[Vec<f64>],
+    plan: &FaultPlan,
+    leader: usize,
+) -> (Vec<f64>, usize, Vec<usize>) {
+    let n = inputs.len();
+    let d = inputs[0].len();
+    let shared = hash2(seed, round);
+    let mut mu = vec![0.0; d];
+    let mut k = 0usize;
+    let mut dropped = Vec::new();
+    for v in 0..n {
+        if v == leader {
+            // The coordinator always holds its own report.
+            for (m, x) in mu.iter_mut().zip(&inputs[leader]) {
+                *m += x;
+            }
+            k += 1;
+        } else if plan.silences(v, round) {
+            dropped.push(v);
+        } else {
+            let mut codec = spec.build(d, y, seed, round);
+            let mut enc_rng = Rng::new(hash2(shared, v as u64 + 1));
+            let msg = codec.encode(&inputs[v], &mut enc_rng);
+            let z = codec.decode(&msg, &inputs[leader]);
+            for (m, zi) in mu.iter_mut().zip(&z) {
+                *m += zi;
+            }
+            k += 1;
+        }
+    }
+    let inv_k = 1.0 / (k.max(1) as f64);
+    for m in mu.iter_mut() {
+        *m *= inv_k;
+    }
+    let mut codec = spec.build(d, y, seed, round);
+    let mut enc_rng = Rng::new(hash2(shared, leader as u64 + 1));
+    let msg = codec.encode(&mu, &mut enc_rng);
+    (codec.decode(&msg, &inputs[leader]), k, dropped)
+}
+
+/// Star k-of-n rounds under injected dropout equal the hand-computed
+/// `1/k`-renormalized reference *exactly* — estimate, quorum size, and
+/// dropped set — across several rounds (so leaders and drop sets vary).
+#[test]
+fn star_partial_rounds_match_renormalized_reference() {
+    let n = 8;
+    let d = 32;
+    let y = 1.0;
+    let seed = 31;
+    let spec = CodecSpec::Lq { q: 32 };
+    let plan = FaultPlan::dropout(fault_seed(), 0.4);
+    let policy = StragglerPolicy::deterministic(DEADLINE, 1, 5);
+    let inputs = spread_inputs(n, d, y, 77);
+    let mut sess = DmeBuilder::new(n, d)
+        .codec(spec)
+        .seed(seed)
+        .fault_plan(plan.clone())
+        .build();
+    let mut saw_partial = false;
+    for round in 0..4u64 {
+        let out = sess.round_partial_with_y(&inputs, y, &policy).expect("quorum of 1");
+        let leader = out.leader.expect("star rounds have a leader");
+        let (want, k, dropped) =
+            star_partial_reference(spec, seed, round, y, &inputs, &plan, leader);
+        assert_eq!(out.estimate, want, "round {round}: estimate diverged from reference");
+        assert_eq!(out.participants, k, "round {round}");
+        assert_eq!(out.dropped, dropped, "round {round}");
+        saw_partial |= k < n;
+    }
+    assert!(saw_partial, "rate 0.4 over 4 rounds should drop someone; weak fault seed?");
+}
+
+/// At dropout rate 0 the partial round *is* the full round: same
+/// estimate, full participation, zero retries — the k-of-n plane rides
+/// the identical codec/leader randomness as `round_with_y`.
+#[test]
+fn partial_round_without_faults_equals_full_round() {
+    let n = 6;
+    let d = 24;
+    let y = 1.0;
+    let seed = 13;
+    let spec = CodecSpec::Rlq { q: 16 };
+    let inputs = spread_inputs(n, d, y, 33);
+    let mut full = DmeBuilder::new(n, d).codec(spec).seed(seed).build();
+    let mut partial = DmeBuilder::new(n, d)
+        .codec(spec)
+        .seed(seed)
+        .fault_plan(FaultPlan::dropout(fault_seed(), 0.0))
+        .build();
+    let policy = wide_window_policy(n);
+    for round in 0..3u64 {
+        let want = full.round_with_y(&inputs, y);
+        let got = partial.round_partial_with_y(&inputs, y, &policy).expect("no faults");
+        assert_eq!(got.estimate, want.estimate, "round {round}");
+        assert_eq!(got.participants, n);
+        assert!(got.dropped.is_empty());
+        assert_eq!(got.retries_used, 0, "healthy reports arrive before any window expires");
+        assert!(got.agreement);
+    }
+}
+
+/// Tree k-of-n rounds under injected dropout equal the transport-free
+/// [`tree_partial_reference`] oracle exactly: the root's estimate folds
+/// only the surviving subtrees, pass-through-unhalved for lone children.
+#[test]
+fn tree_partial_rounds_match_reference_oracle() {
+    let n = 8;
+    let d = 16;
+    let y = 1.0;
+    let seed = 47;
+    let plan = FaultPlan::dropout(fault_seed(), 0.3);
+    let policy = StragglerPolicy::deterministic(DEADLINE, 1, 5);
+    let inputs = spread_inputs(n, d, y, 55);
+    let mut sess = DmeBuilder::new(n, d)
+        .topology(Topology::Tree { m: n })
+        .seed(seed)
+        .fault_plan(plan.clone())
+        .build();
+    for round in 0..3u64 {
+        let silenced: Vec<usize> = (0..n).filter(|&v| plan.silences(v, round)).collect();
+        let want = tree_partial_reference(n, n, y, seed, round, &inputs, &silenced);
+        match sess.round_partial_with_y(&inputs, y, &policy) {
+            Ok(out) => {
+                assert_eq!(out.participants, want.k, "round {round} ({silenced:?} silenced)");
+                assert_eq!(
+                    out.estimate,
+                    want.estimate.expect("k >= 1 on an Ok round"),
+                    "round {round}: tree estimate diverged from oracle"
+                );
+                assert_eq!(out.dropped, silenced, "round {round}");
+            }
+            // Silencing can sever the root from *every* leaf report
+            // (both of its last-level children lost): the round fails
+            // detectably, and the oracle must agree it was empty.
+            Err(TransportError::QuorumFailed { got, need }) => {
+                assert_eq!(need, 1, "round {round}");
+                assert_eq!(got, want.k, "round {round}");
+                assert_eq!(want.k, 0, "quorum of 1 only fails when all reports are lost");
+            }
+            Err(e) => panic!("round {round}: unexpected transport error {e:?}"),
+        }
+    }
+}
+
+/// An under-quorum round fails with the *typed* error — got/need filled
+/// in, no panic — and the session stays usable: relaxing `k_min` the
+/// next round succeeds on the same (still fully faulted) cluster.
+#[test]
+fn quorum_failure_is_typed_and_session_survives() {
+    let n = 4;
+    let d = 16;
+    let y = 1.0;
+    let inputs = spread_inputs(n, d, y, 11);
+    let mut sess = DmeBuilder::new(n, d)
+        .codec(CodecSpec::Lq { q: 16 })
+        .seed(3)
+        .fault_plan(FaultPlan::dropout(fault_seed(), 1.0))
+        .build();
+    // Every machine's sends are silenced: only the leader's own report
+    // exists, so a quorum of 3 cannot form.
+    let strict = StragglerPolicy::deterministic(DEADLINE, 3, 5);
+    match sess.round_partial_with_y(&inputs, y, &strict) {
+        Err(TransportError::QuorumFailed { got, need }) => {
+            assert_eq!(got, 1);
+            assert_eq!(need, 3);
+        }
+        other => panic!("expected QuorumFailed, got {other:?}"),
+    }
+    // Same session, next round, k_min = 1: the leader's own report makes
+    // quorum and the round completes.
+    let lax = StragglerPolicy::deterministic(DEADLINE, 1, 5);
+    let out = sess.round_partial_with_y(&inputs, y, &lax).expect("quorum of 1");
+    assert_eq!(out.participants, 1);
+    assert_eq!(out.dropped.len(), n - 1);
+}
+
+/// One `FaultPlan` seed reproduces byte-identical `RoundOutcome`s across
+/// independent runs: the fault schedule is a pure function of
+/// `(seed, machine, round)` and the seeded retry windows exhaust well
+/// inside the deadline, so even `retries_used` is timing-independent.
+#[test]
+fn same_fault_seed_reproduces_round_outcomes() {
+    let n = 8;
+    let d = 16;
+    let y = 1.0;
+    let inputs = spread_inputs(n, d, y, 21);
+    let run = |_tag: u64| -> Vec<RoundOutcome> {
+        let mut sess = DmeBuilder::new(n, d)
+            .codec(CodecSpec::D4 { q: 16 })
+            .seed(9)
+            .fault_plan(FaultPlan::dropout(fault_seed(), 0.35))
+            .build();
+        let policy = wide_window_policy(1);
+        (0..3)
+            .map(|_| sess.round_partial_with_y(&inputs, y, &policy).expect("quorum of 1"))
+            .collect()
+    };
+    let a = run(0);
+    let b = run(1);
+    for (oa, ob) in a.iter().zip(&b) {
+        assert_eq!(oa.estimate, ob.estimate, "round {}", oa.round);
+        assert_eq!(oa.participants, ob.participants, "round {}", oa.round);
+        assert_eq!(oa.dropped, ob.dropped, "round {}", oa.round);
+        assert_eq!(oa.retries_used, ob.retries_used, "round {}", oa.round);
+        assert_eq!(oa.leader, ob.leader, "round {}", oa.round);
+    }
+}
+
+/// The premise behind timing-independent `retries_used`: the policy's
+/// seeded backoff windows replay identically and their total is a small
+/// fraction of the deadline, so every wait pattern exhausts the same
+/// number of windows no matter how the scheduler jitters.
+#[test]
+fn straggler_policy_windows_exhaust_inside_the_deadline() {
+    let policy = StragglerPolicy::deterministic(DEADLINE, 1, 5);
+    let a: Vec<Duration> = policy.retry.windows(42).collect();
+    let b: Vec<Duration> = policy.retry.windows(42).collect();
+    assert_eq!(a, b, "seeded windows must replay");
+    assert_eq!(a.len() as u32, policy.retry.attempts());
+    let total: Duration = a.iter().sum();
+    assert!(
+        total * 2 < DEADLINE,
+        "windows ({total:?}) must exhaust well inside the deadline ({DEADLINE:?})"
+    );
+    // An unseeded schedule with the same shape still respects the bounds
+    // (production default: ambient jitter, same envelope).
+    let prod = RetrySchedule {
+        jitter_seed: None,
+        ..policy.retry
+    };
+    let total: Duration = prod.windows(42).sum();
+    assert!(total * 2 < DEADLINE);
 }
