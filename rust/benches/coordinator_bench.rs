@@ -34,7 +34,11 @@
 //! loopback-TCP mesh (bit-identical estimates and meters — pinned by
 //! `tests/transport.rs`; the gap is the OS socket hop), and the
 //! multi-cohort service front-end driven end-to-end over TCP at
-//! cohorts ∈ {1, 16, 256}, n ∈ {4, 16}, d ∈ {128, 4096}.
+//! cohorts ∈ {1, 16, 256}, n ∈ {4, 16}, d ∈ {128, 4096}. Its
+//! durability rows re-run one service config with the write-ahead log
+//! off / fsync-on-close / fsync-always and with a zero memory budget
+//! (every accumulator folded through an on-disk spill run), pricing
+//! crash durability against the in-RAM round.
 
 use dme::bench::Bencher;
 use dme::coordinator::{
@@ -47,6 +51,7 @@ use dme::net::tcp::{LoopbackMesh, TcpOpts};
 use dme::quant::{encode_chunked, D4Quantizer, LatticeQuantizer, Message, VectorCodec};
 use dme::rng::Rng;
 use dme::sim::Cluster;
+use dme::store::{DurabilityOpts, SyncPolicy};
 use std::sync::mpsc;
 use std::thread;
 use std::time::Duration;
@@ -226,71 +231,114 @@ fn service_throughput_bench(b: &mut Bencher) {
         (1, 16, 4096),
         (16, 16, 4096),
     ] {
-        let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).expect("bind service");
-        let addr = listener.local_addr().expect("service addr").to_string();
-        let server = thread::spawn(move || {
-            serve(
-                listener,
-                ServeOpts {
-                    // Generous deadline: lock-step reporters skew by at
-                    // most one round-trip, and a partial close would
-                    // corrupt the throughput measurement.
-                    default_deadline_ms: 120_000,
-                    max_rounds: None,
-                    read_timeout: Duration::from_secs(60),
-                },
-            )
-        });
-        let cs = CohortSpec {
-            n,
-            d,
-            spec: CodecSpec::Lq { q: 16 },
-            y: 64.0,
-            seed: 31,
-        };
-        let xs = inputs(n, d, 37);
-        let (done_tx, done_rx) = mpsc::channel();
-        let mut gos = Vec::new();
-        let mut workers = Vec::new();
-        for (j, input) in xs.iter().enumerate() {
-            let (go_tx, go_rx) = mpsc::channel::<u64>();
-            gos.push(go_tx);
-            let addr = addr.clone();
-            let input = input.clone();
-            let done_tx = done_tx.clone();
-            workers.push(thread::spawn(move || {
-                for round in go_rx {
-                    for c in 0..cohorts as u64 {
-                        report_round(&addr, c, round, j, &cs, &input, 0, Duration::from_secs(120))
-                            .expect("service round");
-                    }
-                    let _ = done_tx.send(());
-                }
-            }));
-        }
-        let mut round = 0u64;
-        b.bench(
-            &format!("service cohorts={cohorts} n={n} d={d}"),
-            Some((cohorts * n * d) as u64),
-            || {
-                round += 1;
-                for go in &gos {
-                    go.send(round).expect("reporter alive");
-                }
-                for _ in 0..n {
-                    done_rx.recv().expect("reporter done");
-                }
-                round
-            },
-        );
-        drop(gos);
-        for w in workers {
-            let _ = w.join();
-        }
-        request_shutdown(&addr, Duration::from_secs(5)).expect("service shutdown");
-        server.join().expect("server thread").expect("serve exits cleanly");
+        let label = format!("service cohorts={cohorts} n={n} d={d}");
+        service_round_rows(b, &label, cohorts, n, d, None);
     }
     println!();
+    durability_overhead_bench(b);
+}
+
+/// Durability overhead on the identical service round: WAL off, WAL
+/// fsync'd once per round close, WAL fsync'd on every append, and a
+/// zero memory budget so every accumulator folds through an on-disk
+/// spill run. Same driver, same wire, bit-identical estimates (pinned
+/// by `tests/durability.rs`) — the row gaps price the write-ahead log
+/// and the spill path.
+fn durability_overhead_bench(b: &mut Bencher) {
+    println!("# transport_bench — durability overhead (WAL + spill on the service round)\n");
+    let (cohorts, n, d) = (16usize, 4usize, 128usize);
+    let dir = std::env::temp_dir().join(format!("dme-bench-dur-{}", std::process::id()));
+    let always = DurabilityOpts {
+        sync: SyncPolicy::Always,
+        ..DurabilityOpts::new(&dir)
+    };
+    let spill = DurabilityOpts {
+        mem_budget: 0,
+        ..DurabilityOpts::new(&dir)
+    };
+    let modes = [
+        ("wal=off", None),
+        ("wal=close", Some(DurabilityOpts::new(&dir))),
+        ("wal=always", Some(always)),
+        ("wal=close mem=0 (spill)", Some(spill)),
+    ];
+    for (tag, durability) in modes {
+        // Fresh data dir per mode: no replay of the previous mode's log.
+        let _ = std::fs::remove_dir_all(&dir);
+        let label = format!("service cohorts={cohorts} n={n} d={d} {tag}");
+        service_round_rows(b, &label, cohorts, n, d, durability);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    println!();
+}
+
+/// One service row: spawn a `serve` loop with the given durability
+/// mode and drive `cohorts` complete rounds per measured iteration
+/// with n lock-step reporter threads.
+fn service_round_rows(
+    b: &mut Bencher,
+    label: &str,
+    cohorts: usize,
+    n: usize,
+    d: usize,
+    durability: Option<DurabilityOpts>,
+) {
+    let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).expect("bind service");
+    let addr = listener.local_addr().expect("service addr").to_string();
+    let opts = ServeOpts {
+        // Generous deadline: lock-step reporters skew by at most one
+        // round-trip, and a partial close would corrupt the
+        // throughput measurement.
+        default_deadline_ms: 120_000,
+        max_rounds: None,
+        read_timeout: Duration::from_secs(60),
+        durability,
+    };
+    let server = thread::spawn(move || serve(listener, opts));
+    let cs = CohortSpec {
+        n,
+        d,
+        spec: CodecSpec::Lq { q: 16 },
+        y: 64.0,
+        seed: 31,
+    };
+    let xs = inputs(n, d, 37);
+    let (done_tx, done_rx) = mpsc::channel();
+    let mut gos = Vec::new();
+    let mut workers = Vec::new();
+    for (j, input) in xs.iter().enumerate() {
+        let (go_tx, go_rx) = mpsc::channel::<u64>();
+        gos.push(go_tx);
+        let addr = addr.clone();
+        let input = input.clone();
+        let done_tx = done_tx.clone();
+        workers.push(thread::spawn(move || {
+            for round in go_rx {
+                for c in 0..cohorts as u64 {
+                    report_round(&addr, c, round, j, &cs, &input, 0, Duration::from_secs(120))
+                        .expect("service round");
+                }
+                let _ = done_tx.send(());
+            }
+        }));
+    }
+    let mut round = 0u64;
+    b.bench(label, Some((cohorts * n * d) as u64), || {
+        round += 1;
+        for go in &gos {
+            go.send(round).expect("reporter alive");
+        }
+        for _ in 0..n {
+            done_rx.recv().expect("reporter done");
+        }
+        round
+    });
+    drop(gos);
+    for w in workers {
+        let _ = w.join();
+    }
+    request_shutdown(&addr, Duration::from_secs(5)).expect("service shutdown");
+    server.join().expect("server thread").expect("serve exits cleanly");
 }
 
 /// Control-plane amortization: B sequential rounds vs one batched call

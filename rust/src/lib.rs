@@ -64,6 +64,10 @@
 //!   length-prefixed wire framing (the `PacketArena` format verbatim),
 //!   and the multi-cohort DME service front-end (`dme serve` /
 //!   `dme report`).
+//! * [`store`] — the service's durability layer: checksummed write-ahead
+//!   log, spill-to-disk partial-aggregate runs, and crash recovery that
+//!   replays a killed leader back to bit-identical estimates
+//!   (`dme serve data_dir=…`).
 //! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`
 //!   (feature `pjrt`; a stub otherwise).
 //! * [`data`], [`opt`] — workload substrates (datasets, SGD/local-SGD/power
@@ -95,3 +99,4 @@ pub mod rng;
 pub mod runtime;
 pub mod sim;
 pub mod simd;
+pub mod store;

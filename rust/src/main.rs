@@ -9,7 +9,8 @@
 //!                                                             VarianceReduction rounds
 //!   dme runtime [graph=<name>]                                PJRT artifact smoke check
 //!   dme info                                                  artifact + config summary
-//!   dme serve  [addr=127.0.0.1:0] [deadline_ms=2000] [rounds=<N>]
+//!   dme serve  [addr=127.0.0.1:0] [deadline_ms=2000] [rounds=<N>] [data_dir=<DIR>]
+//!              [mem_budget=<BYTES>] [sync=always|close|never]
 //!                                                             multi-cohort DME service
 //!   dme report addr=<host:port> [cohort=..] [round=..] [client=..] [n=..] [d=..]
 //!              [q=..] [y=..] [seed=..] [deadline_ms=..] [value=<f>]
@@ -25,10 +26,11 @@
 use dme::config::RunConfig;
 use dme::coordinator::{CodecSpec, DmeBuilder, DmeSession, RoundOutcome, Topology};
 use dme::exp::{self, ExpOpts};
-use dme::net::cohort::CohortSpec;
-use dme::net::service::{fetch_stats, report_round, serve, ServeOpts};
+use dme::net::cohort::{CohortSpec, CohortTable};
+use dme::net::service::{fetch_stats, report_round, serve_with_table, ServeOpts};
 use dme::rng::Rng;
 use dme::sim::summarize;
+use dme::store::{DurabilityOpts, SyncPolicy};
 use std::time::Duration;
 
 fn parse_kv(args: &[String]) -> Vec<(String, String)> {
@@ -50,8 +52,11 @@ fn usage() -> ! {
          \x20                                                 VarianceReduction rounds\n\
          \x20 runtime [graph=lattice_encode_d128_q8]          PJRT artifact smoke check\n\
          \x20 info                                            artifact + config summary\n\
-         \x20 serve  [addr=127.0.0.1:0] [deadline_ms=2000] [rounds=N]\n\
-         \x20                                                 multi-cohort DME service (prints 'listening on ADDR')\n\
+         \x20 serve  [addr=127.0.0.1:0] [deadline_ms=2000] [rounds=N] [data_dir=DIR]\n\
+         \x20        [mem_budget=BYTES] [sync=always|close|never]\n\
+         \x20                                                 multi-cohort DME service (prints 'listening on ADDR');\n\
+         \x20                                                 data_dir= adds a WAL + crash recovery, mem_budget=\n\
+         \x20                                                 spills big rounds to disk, sync= picks fsync policy\n\
          \x20 report addr=H:P [cohort=0] [round=0] [client=0] [n=2] [d=16] [q=64] [y=8]\n\
          \x20        [seed=0] [deadline_ms=0] [value=f]       report one vector, await the round estimate\n\
          \x20 health addr=H:P                                 per-cohort service stats\n\
@@ -106,6 +111,36 @@ fn cmd_serve(args: &[String]) {
         }),
         ..ServeOpts::default()
     };
+    // Durability: `data_dir=` switches on the WAL'd store; `mem_budget=`
+    // caps resident accumulator bytes (rounds beyond it spill to on-disk
+    // runs); `sync=` picks the fsync policy. The table is built (and any
+    // crash recovered) before the listener binds, so clients never reach
+    // a half-replayed leader.
+    let durability = kv_get(&kv, "data_dir").map(|dir| DurabilityOpts {
+        mem_budget: kv_parse(&kv, "mem_budget", usize::MAX),
+        sync: kv_parse(&kv, "sync", SyncPolicy::OnClose),
+        ..DurabilityOpts::new(dir)
+    });
+    let table = match &durability {
+        Some(d) => {
+            let (table, rec) = CohortTable::durable(d).unwrap_or_else(|e| {
+                eprintln!("cannot open data_dir {}: {e}", d.data_dir.display());
+                std::process::exit(1);
+            });
+            // Printed before `listening on` so the crash-recovery smoke
+            // can scrape both lines in order.
+            println!(
+                "recovered: reports={} open_rounds={} closed={} wal_bytes={} truncated_tail={}",
+                rec.reports_replayed,
+                rec.rounds_reopened,
+                rec.rounds_closed,
+                rec.wal_bytes,
+                rec.tail.is_some()
+            );
+            table
+        }
+        None => CohortTable::new(),
+    };
     let listener = std::net::TcpListener::bind(addr).unwrap_or_else(|e| {
         eprintln!("cannot bind {addr}: {e}");
         std::process::exit(1);
@@ -115,7 +150,7 @@ fn cmd_serve(args: &[String]) {
     println!("listening on {local}");
     use std::io::Write as _;
     let _ = std::io::stdout().flush();
-    match serve(listener, opts) {
+    match serve_with_table(listener, opts, table) {
         Ok(s) => println!(
             "served: rounds={} partial={} cohorts={} bits_in={} bits_out={}",
             s.rounds_completed,

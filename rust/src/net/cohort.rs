@@ -34,11 +34,26 @@
 //! Stateful codecs (EF-SignSGD, PowerSGD, Top-K) carry cross-round error
 //! memory that a stateless report protocol cannot reproduce; the table
 //! rejects them.
+//!
+//! # Durability
+//!
+//! A table built with [`CohortTable::durable`] is backed by a
+//! [`crate::store::Store`]: every accepted report is appended to a
+//! checksummed write-ahead log *before* it is folded, and open rounds
+//! whose accumulators exceed the configured memory budget spill to
+//! on-disk runs (exact `f64` images; later reports queue as pending
+//! frames and fold in arrival order at compaction/close, so the result
+//! is bit-identical to the all-in-RAM fold). After a crash, `durable`
+//! replays the log and resumes every open round exactly where it
+//! stopped — the renormalized partial means match an uninterrupted
+//! leader bit for bit. See the [`crate::store`] docs for the formats
+//! and the fsync policy trade-off.
 
 use super::Traffic;
 use crate::coordinator::CodecSpec;
 use crate::quant::{Message, VectorCodec};
 use crate::rng::{hash2, Rng};
+use crate::store::{DurabilityOpts, RunImage, Store, StoreError, TailTruncation, WalRecord};
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
@@ -119,14 +134,33 @@ pub struct CohortStats {
     pub open_rounds: u32,
 }
 
+/// Where one open round's accumulator lives.
+enum AccState {
+    /// The streaming fold, in RAM — the only state a plain table uses.
+    Ram {
+        codec: Box<dyn VectorCodec>,
+        /// Zero reference vector for decoding (see module docs).
+        zeros: Vec<f64>,
+        /// Streaming sum of decoded reports.
+        acc: Vec<f64>,
+    },
+    /// The fold so far is sealed in on-disk run `seq`; reports that
+    /// arrived after the spill wait as pending frames. Compaction and
+    /// close load the image back and fold the pending frames in arrival
+    /// order — the identical left-to-right addition sequence as `Ram`,
+    /// hence bit-identical results.
+    Spilled {
+        seq: u64,
+        pending: Vec<Message>,
+        /// Approximate resident bytes of `pending`, against the budget.
+        pending_bytes: usize,
+    },
+}
+
 /// One open round's fold state.
 struct OpenRound {
     spec: CohortSpec,
-    codec: Box<dyn VectorCodec>,
-    /// Zero reference vector for decoding (see module docs).
-    zeros: Vec<f64>,
-    /// Streaming sum of decoded reports.
-    acc: Vec<f64>,
+    state: AccState,
     got: Vec<bool>,
     received: usize,
     /// Absolute deadline, caller's millisecond clock.
@@ -134,15 +168,11 @@ struct OpenRound {
 }
 
 impl OpenRound {
-    fn close(&mut self) -> RoundResult {
-        let k = self.received.max(1) as f64;
-        let inv_k = 1.0 / k;
-        let estimate = self.acc.iter().map(|&a| inv_k * a).collect();
-        RoundResult {
-            estimate,
-            received: self.received,
-            expected: self.spec.n,
-            partial: self.received < self.spec.n,
+    /// Resident bytes this round charges against the memory budget.
+    fn ram_bytes(&self) -> usize {
+        match &self.state {
+            AccState::Ram { .. } => 16 * self.spec.d,
+            AccState::Spilled { pending_bytes, .. } => *pending_bytes,
         }
     }
 }
@@ -151,15 +181,71 @@ impl OpenRound {
 /// oldest are evicted.
 const FINISHED_CACHE_CAP: usize = 4096;
 
+/// Compact a spilled round (fold its pending frames into the run) once
+/// this many frames queue up…
+const COMPACT_PENDING_MAX: usize = 8;
+/// …or once they hold this many resident bytes.
+const COMPACT_PENDING_BYTES: usize = 1 << 20;
+/// Per-pending-frame bookkeeping overhead charged to the budget.
+const PENDING_OVERHEAD: usize = 16;
+
+/// What [`CohortTable::durable`] found and replayed from a data dir.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// Valid report records folded back into open rounds.
+    pub reports_replayed: u64,
+    /// Rounds left open (resumed) after replay.
+    pub rounds_reopened: usize,
+    /// Close records re-applied (their results re-cached for late
+    /// clients).
+    pub rounds_closed: u64,
+    /// Valid WAL bytes after tail validation.
+    pub wal_bytes: u64,
+    /// Present iff a torn/corrupt WAL tail was truncated away.
+    pub tail: Option<TailTruncation>,
+    /// Stale run files deleted at open.
+    pub stale_runs_removed: usize,
+    /// The manifest failed validation and was rebuilt fresh.
+    pub manifest_rebuilt: bool,
+    /// Replay oddities that were skipped over (duplicate records, a
+    /// close for an unknown round) — nonzero is suspicious, not fatal.
+    pub warnings: u64,
+}
+
 /// The leader-side table of all cohorts' open and recently-closed
 /// rounds.
-#[derive(Default)]
 pub struct CohortTable {
     open: HashMap<CohortKey, OpenRound>,
     finished: HashMap<CohortKey, RoundResult>,
     /// FIFO of `finished` keys for bounded-memory eviction.
     finished_order: std::collections::VecDeque<CohortKey>,
     stats: HashMap<u64, CohortStats>,
+    /// Durability backend; `None` = plain in-RAM table.
+    store: Option<Store>,
+    /// Spill threshold over all open accumulators' resident bytes.
+    mem_budget: usize,
+    /// Suppresses WAL appends and checkpoints while replaying the WAL
+    /// (replaying a record must not re-log it).
+    replaying: bool,
+    /// Storage failures survived so far (each also degraded gracefully:
+    /// a rejected report, a kept-in-RAM round, or a lost close marker).
+    store_errors: u64,
+}
+
+impl Default for CohortTable {
+    fn default() -> Self {
+        CohortTable {
+            open: HashMap::new(),
+            finished: HashMap::new(),
+            finished_order: std::collections::VecDeque::new(),
+            stats: HashMap::new(),
+            store: None,
+            // A derived default would be 0 = spill everything.
+            mem_budget: usize::MAX,
+            replaying: false,
+            store_errors: 0,
+        }
+    }
 }
 
 impl CohortTable {
@@ -167,9 +253,94 @@ impl CohortTable {
         Self::default()
     }
 
+    /// A durable table over `opts.data_dir`: open (or create) the
+    /// store, truncate any torn/corrupt WAL tail, and replay the log —
+    /// re-folding every accepted report and re-closing every closed
+    /// round — so the table resumes exactly where the previous process
+    /// stopped. Bit-identical estimates are the contract: a leader
+    /// killed mid-round and recovered produces the same renormalized
+    /// partial mean as an uninterrupted one.
+    pub fn durable(opts: &DurabilityOpts) -> Result<(Self, RecoveryReport), StoreError> {
+        let (store, records, info) = Store::open(opts)?;
+        let mut table = CohortTable {
+            store: Some(store),
+            mem_budget: opts.mem_budget,
+            replaying: true,
+            ..CohortTable::default()
+        };
+        let mut report = RecoveryReport {
+            wal_bytes: info.wal_bytes,
+            tail: info.tail,
+            stale_runs_removed: info.stale_runs_removed,
+            manifest_rebuilt: info.manifest_rebuilt,
+            ..RecoveryReport::default()
+        };
+        for rec in records {
+            match rec {
+                WalRecord::Report {
+                    cohort,
+                    round,
+                    client,
+                    spec,
+                    deadline_ms,
+                    msg,
+                } => {
+                    let key = CohortKey { cohort, round };
+                    match table.submit(key, &spec, client as usize, &msg, 0, deadline_ms) {
+                        Submit::Pending { .. } | Submit::Complete(_) => {
+                            report.reports_replayed += 1;
+                        }
+                        Submit::Late(_) | Submit::Rejected(_) => report.warnings += 1,
+                    }
+                }
+                WalRecord::Close {
+                    cohort,
+                    round,
+                    received,
+                    partial,
+                    ..
+                } => {
+                    let key = CohortKey { cohort, round };
+                    if let Some(r) = table.open.get(&key) {
+                        if r.received as u32 != received {
+                            report.warnings += 1;
+                        }
+                        match table.close_round(key, partial) {
+                            Ok(_) => report.rounds_closed += 1,
+                            Err(_) => report.warnings += 1,
+                        }
+                    } else if !table.finished.contains_key(&key) {
+                        report.warnings += 1;
+                    }
+                }
+            }
+        }
+        table.replaying = false;
+        report.rounds_reopened = table.open.len();
+        Ok((table, report))
+    }
+
     /// Number of rounds currently accumulating reports.
     pub fn open_rounds(&self) -> usize {
         self.open.len()
+    }
+
+    /// Open rounds whose accumulator currently lives in an on-disk run.
+    pub fn spilled_rounds(&self) -> usize {
+        self.open
+            .values()
+            .filter(|r| matches!(r.state, AccState::Spilled { .. }))
+            .count()
+    }
+
+    /// Storage failures survived so far (0 for a plain table).
+    pub fn store_errors(&self) -> u64 {
+        self.store_errors
+    }
+
+    /// Current valid WAL bytes (`None` for a plain table).
+    pub fn wal_bytes(&self) -> Option<u64> {
+        self.store.as_ref().map(|s| s.wal_len())
     }
 
     /// Fold one client report into its round. `now_ms` is the caller's
@@ -227,9 +398,11 @@ impl CohortTable {
                 s.open_rounds += 1;
                 e.insert(OpenRound {
                     spec: *spec,
-                    codec: cohort_codec(spec, key.round),
-                    zeros: vec![0.0; d],
-                    acc: vec![0.0; d],
+                    state: AccState::Ram {
+                        codec: cohort_codec(spec, key.round),
+                        zeros: vec![0.0; d],
+                        acc: vec![0.0; d],
+                    },
                     got: vec![false; spec.n],
                     received: 0,
                     deadline_ms: now_ms.saturating_add(deadline_ms),
@@ -239,20 +412,56 @@ impl CohortTable {
         if round.got[client] {
             return Submit::Rejected(format!("duplicate report from client {client}"));
         }
-        round.codec.decode_accumulate_into(msg, &round.zeros, 1.0, &mut round.acc);
+        // WAL hook: an accepted report hits the log *before* it is
+        // folded, so a crash between here and delivery replays it.
+        // Replay itself must not re-log what it is reading back.
+        if !self.replaying {
+            if let Some(store) = self.store.as_mut() {
+                if let Err(e) = store.log_report(key, spec, client as u32, deadline_ms, msg) {
+                    self.store_errors += 1;
+                    return Submit::Rejected(format!("durability log append failed: {e}"));
+                }
+            }
+        }
+        match &mut round.state {
+            AccState::Ram { codec, zeros, acc } => {
+                codec.decode_accumulate_into(msg, zeros, 1.0, acc);
+            }
+            AccState::Spilled {
+                pending,
+                pending_bytes,
+                ..
+            } => {
+                *pending_bytes += msg.bytes.len() + PENDING_OVERHEAD;
+                pending.push(msg.clone());
+            }
+        }
         round.got[client] = true;
         round.received += 1;
+        let received = round.received;
+        let expected = round.spec.n;
+        let needs_compact = matches!(
+            &round.state,
+            AccState::Spilled { pending, pending_bytes, .. }
+                if pending.len() >= COMPACT_PENDING_MAX
+                    || *pending_bytes >= COMPACT_PENDING_BYTES
+        );
         let stats = self.stats.get_mut(&key.cohort).expect("stats entry exists");
         stats.reports += 1;
         stats.bits_in += msg.bits;
-        if round.received == round.spec.n {
-            let result = self.close_round(key, false);
-            Submit::Complete(result)
-        } else {
-            Submit::Pending {
-                received: round.received,
-                expected: round.spec.n,
+        if received == expected {
+            match self.close_round(key, false) {
+                Ok(result) => Submit::Complete(result),
+                // The round is gone (its run image was unreadable); the
+                // caller sees a typed refusal, not a panic.
+                Err(e) => Submit::Rejected(format!("round close failed: {e}")),
             }
+        } else {
+            if needs_compact {
+                self.compact_round(key);
+            }
+            self.maybe_spill();
+            Submit::Pending { received, expected }
         }
     }
 
@@ -269,10 +478,10 @@ impl CohortTable {
             .collect();
         due.sort_unstable();
         due.into_iter()
-            .map(|k| {
-                let r = self.close_round(k, true);
-                (k, r)
-            })
+            // A round whose run image failed to load is dropped (the
+            // failure is already counted in `store_errors`); every
+            // other due round still closes.
+            .filter_map(|k| self.close_round(k, true).ok().map(|r| (k, r)))
             .collect()
     }
 
@@ -305,9 +514,67 @@ impl CohortTable {
         t
     }
 
-    fn close_round(&mut self, key: CohortKey, partial_close: bool) -> RoundResult {
+    fn close_round(
+        &mut self,
+        key: CohortKey,
+        partial_close: bool,
+    ) -> Result<RoundResult, StoreError> {
         let mut round = self.open.remove(&key).expect("closing an open round");
-        let result = round.close();
+        let acc = match &mut round.state {
+            AccState::Ram { acc, .. } => std::mem::take(acc),
+            AccState::Spilled { seq, pending, .. } => {
+                let store = self.store.as_mut().expect("spilled round implies a store");
+                let image = match store.load_run(*seq) {
+                    Ok(img) => img,
+                    Err(e) => {
+                        // The fold state is unrecoverable: drop the
+                        // round (stats stay consistent) and surface the
+                        // typed error to the caller.
+                        self.store_errors += 1;
+                        let s = self.stats.get_mut(&key.cohort).expect("stats entry exists");
+                        s.open_rounds -= 1;
+                        return Err(e);
+                    }
+                };
+                let mut acc = image.acc;
+                if !pending.is_empty() {
+                    // Fold the post-spill arrivals in arrival order — the
+                    // same left-to-right addition sequence the RAM path
+                    // would have used, so the bits come out identical.
+                    let codec = cohort_codec(&round.spec, key.round);
+                    let zeros = vec![0.0; round.spec.d];
+                    for m in pending.iter() {
+                        codec.decode_accumulate_into(m, &zeros, 1.0, &mut acc);
+                    }
+                }
+                let seq = *seq;
+                if store.drop_run(seq).is_err() {
+                    self.store_errors += 1;
+                }
+                acc
+            }
+        };
+        let inv_k = 1.0 / round.received.max(1) as f64;
+        let result = RoundResult {
+            estimate: acc.iter().map(|&a| inv_k * a).collect(),
+            received: round.received,
+            expected: round.spec.n,
+            partial: round.received < round.spec.n,
+        };
+        // Mark the close in the WAL (best-effort: losing the marker
+        // only means replay re-closes the round) and hit the
+        // round-granularity fsync point.
+        if !self.replaying {
+            if let Some(store) = self.store.as_mut() {
+                let (r, x) = (result.received as u32, result.expected as u32);
+                if store.log_close(key, r, x, result.partial).is_err() {
+                    self.store_errors += 1;
+                }
+                if store.sync_on_close().is_err() {
+                    self.store_errors += 1;
+                }
+            }
+        }
         let s = self.stats.get_mut(&key.cohort).expect("stats entry exists");
         s.open_rounds -= 1;
         s.rounds_completed += 1;
@@ -321,7 +588,120 @@ impl CohortTable {
         }
         self.finished.insert(key, result.clone());
         self.finished_order.push_back(key);
-        result
+        // Quiescent point: with no round open, delivered results fully
+        // reflect the log — truncate it so restarts replay nothing.
+        // (The in-RAM late-client cache does not survive a restart; a
+        // late report after one reopens its round, which then closes
+        // partial at its deadline.)
+        if !self.replaying && self.open.is_empty() {
+            if let Some(store) = self.store.as_mut() {
+                if store.checkpoint().is_err() {
+                    self.store_errors += 1;
+                }
+            }
+        }
+        Ok(result)
+    }
+
+    /// Spill the largest RAM accumulators to on-disk runs until the
+    /// resident total fits the budget (no-op for a plain table).
+    fn maybe_spill(&mut self) {
+        if self.store.is_none() || self.mem_budget == usize::MAX {
+            return;
+        }
+        loop {
+            let total: usize = self.open.values().map(OpenRound::ram_bytes).sum();
+            if total <= self.mem_budget {
+                return;
+            }
+            // Largest RAM round first; ties broken toward the smallest
+            // key so the spill order is deterministic.
+            let candidate = self
+                .open
+                .iter()
+                .filter(|(_, r)| matches!(r.state, AccState::Ram { .. }))
+                .max_by(|(ka, ra), (kb, rb)| ra.ram_bytes().cmp(&rb.ram_bytes()).then(kb.cmp(ka)))
+                .map(|(k, _)| *k);
+            let Some(key) = candidate else { return };
+            if !self.spill_round(key) {
+                return;
+            }
+        }
+    }
+
+    /// Seal one round's exact accumulator image to a run. Returns false
+    /// (round stays in RAM) if the seal fails.
+    fn spill_round(&mut self, key: CohortKey) -> bool {
+        let round = self.open.get_mut(&key).expect("spilling an open round");
+        let AccState::Ram { acc, .. } = &round.state else {
+            return false;
+        };
+        let image = RunImage {
+            cohort: key.cohort,
+            round: key.round,
+            spec: round.spec,
+            deadline_ms: round.deadline_ms,
+            received: round.received as u32,
+            got: round.got.clone(),
+            acc: acc.clone(),
+        };
+        let store = self.store.as_mut().expect("spill requires a store");
+        match store.seal_run(&image) {
+            Ok(seq) => {
+                round.state = AccState::Spilled {
+                    seq,
+                    pending: Vec::new(),
+                    pending_bytes: 0,
+                };
+                true
+            }
+            Err(_) => {
+                self.store_errors += 1;
+                false
+            }
+        }
+    }
+
+    /// LSM-style compaction of one spilled round: load its run, fold
+    /// the pending frames in arrival order, seal the new image, drop
+    /// the old run. On any failure the pending frames are kept (the
+    /// next report retriggers compaction).
+    fn compact_round(&mut self, key: CohortKey) {
+        let round = self.open.get_mut(&key).expect("compacting an open round");
+        let AccState::Spilled { seq, pending, .. } = &mut round.state else {
+            return;
+        };
+        let old_seq = *seq;
+        let store = self.store.as_mut().expect("compaction requires a store");
+        let mut image = match store.load_run(old_seq) {
+            Ok(img) => img,
+            Err(_) => {
+                self.store_errors += 1;
+                return;
+            }
+        };
+        let codec = cohort_codec(&round.spec, key.round);
+        let zeros = vec![0.0; round.spec.d];
+        for m in pending.iter() {
+            codec.decode_accumulate_into(m, &zeros, 1.0, &mut image.acc);
+        }
+        image.received = round.received as u32;
+        image.got = round.got.clone();
+        match store.seal_run(&image) {
+            Ok(new_seq) => {
+                if store.drop_run(old_seq).is_err() {
+                    self.store_errors += 1;
+                }
+                round.state = AccState::Spilled {
+                    seq: new_seq,
+                    pending: Vec::new(),
+                    pending_bytes: 0,
+                };
+            }
+            Err(_) => {
+                self.store_errors += 1;
+            }
+        }
     }
 }
 

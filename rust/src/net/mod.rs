@@ -78,6 +78,27 @@
 //! [`faulty::FaultyEndpoint`] and injects per-machine per-round drops,
 //! delays, duplicates, corruption, crashes and slow starts,
 //! reproducibly from one seed.
+//!
+//! # Durability and the fsync trade-off
+//!
+//! The layers above survive *network* faults; [`crate::store`] extends
+//! the leader to survive its own crash. With
+//! [`cohort::CohortTable::durable`] every accepted report is appended to
+//! a checksummed write-ahead log (the report's [`frame`]-encoded wire
+//! bytes, verbatim, under a `(cohort, round, client)` envelope) before
+//! it is folded, accumulators past a memory budget spill to on-disk run
+//! files, and a restarted `dme serve --data-dir` replays the log into
+//! the exact fold the killed leader was building — same arrival order,
+//! same streaming `decode_accumulate_into` arithmetic, bit-identical
+//! renormalized partial means (pinned by `rust/tests/durability.rs` and
+//! the CI crash-recovery smoke).
+//!
+//! Durability is deliberately **off the wire**: WAL and run-file bytes
+//! move leader-local, so the paper's per-machine communication meters —
+//! the quantity its theorems bound — are unchanged by any
+//! [`crate::store::SyncPolicy`]. What the policy prices is crash-window
+//! risk against fsync stalls on the serving path; the bit-cost ledger
+//! next to the paper's model lives in the [`crate::store`] module docs.
 
 use crate::quant::Message;
 use std::collections::VecDeque;

@@ -28,9 +28,11 @@
 //! excluded.
 
 use super::cohort::{
-    client_encoder_rng, cohort_codec, CohortKey, CohortSpec, CohortStats, RoundResult, Submit,
+    client_encoder_rng, cohort_codec, CohortKey, CohortSpec, CohortStats, CohortTable, RoundResult,
+    Submit,
 };
 use super::error::TransportError;
+use crate::store::DurabilityOpts;
 use super::wire::{read_request, read_response, write_request, write_response, Request, Response};
 use super::Traffic;
 use std::collections::HashMap;
@@ -52,6 +54,11 @@ pub struct ServeOpts {
     /// Per-connection read timeout — a silent client cannot park a
     /// handler thread forever.
     pub read_timeout: Duration,
+    /// When set, the table is durable: reports are WAL'd before the
+    /// fold, accumulators spill past the memory budget, and [`serve`]
+    /// recovers open rounds from the data dir on startup (see
+    /// [`crate::store`]).
+    pub durability: Option<DurabilityOpts>,
 }
 
 impl Default for ServeOpts {
@@ -60,6 +67,7 @@ impl Default for ServeOpts {
             default_deadline_ms: 2_000,
             max_rounds: None,
             read_timeout: Duration::from_secs(10),
+            durability: None,
         }
     }
 }
@@ -239,12 +247,30 @@ fn handle_connection(shared: &Arc<Shared>, mut stream: TcpStream) {
 /// sweeper without a dedicated timer thread; at exit every still-open
 /// round is force-closed and its waiters receive their partial means.
 pub fn serve(listener: TcpListener, opts: ServeOpts) -> Result<ServeSummary, TransportError> {
+    let table = match &opts.durability {
+        // Recovery happens here, before the first accept: a killed
+        // leader restarted over the same data dir replays its WAL and
+        // resumes every open cohort round exactly where it stopped.
+        Some(d) => CohortTable::durable(d).map(|(t, _)| t)?,
+        None => CohortTable::new(),
+    };
+    serve_with_table(listener, opts, table)
+}
+
+/// [`serve`] over a caller-built table — the seam the CLI uses to print
+/// its recovery report before the accept loop starts, and tests use to
+/// pre-load state.
+pub fn serve_with_table(
+    listener: TcpListener,
+    opts: ServeOpts,
+    table: CohortTable,
+) -> Result<ServeSummary, TransportError> {
     listener
         .set_nonblocking(true)
         .map_err(|e| TransportError::from_io(&e))?;
     let shared = Arc::new(Shared {
         state: Mutex::new(State {
-            table: super::cohort::CohortTable::new(),
+            table,
             waiters: HashMap::new(),
             rounds_completed: 0,
             shutdown: false,
@@ -539,5 +565,76 @@ mod tests {
         assert!(matches!(err, TransportError::Rejected(_)), "got {err:?}");
         request_shutdown(&addr, Duration::from_secs(5)).expect("shutdown");
         server.join().unwrap();
+    }
+
+    /// A leader "killed" mid-round (its durable table dropped without
+    /// closing the round) restarts via `serve` over the same data dir,
+    /// recovers the WAL'd report, and finishes the round bit-identical
+    /// to an uninterrupted leader.
+    #[test]
+    fn serve_recovers_a_killed_leaders_round_from_its_data_dir() {
+        use crate::store::{DurabilityOpts, SyncPolicy};
+        static N: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "dme-serve-recover-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cs = spec(2, 8);
+        let key = CohortKey { cohort: 3, round: 1 };
+        let x0 = vec![1.25; 8];
+        let x1 = vec![-0.75; 8];
+        let encode = |client: usize, x: &[f64]| {
+            let mut codec = cohort_codec(&cs, key.round);
+            let mut rng = client_encoder_rng(cs.seed, key.round, client);
+            codec.encode(x, &mut rng)
+        };
+        let opts = DurabilityOpts {
+            sync: SyncPolicy::Always,
+            ..DurabilityOpts::new(&dir)
+        };
+        // "Crashed" leader: client 0's report hits the WAL, then the
+        // process dies before the round closes.
+        {
+            let (mut table, _) = CohortTable::durable(&opts).expect("open store");
+            match table.submit(key, &cs, 0, &encode(0, &x0), 0, 60_000) {
+                Submit::Pending { .. } => {}
+                other => panic!("expected Pending, got {other:?}"),
+            }
+        }
+        // Restarted leader: `serve` recovers the open round; client 1's
+        // TCP report completes it.
+        let (addr, server) = spawn_server(ServeOpts {
+            max_rounds: Some(1),
+            durability: Some(opts),
+            ..ServeOpts::default()
+        });
+        let out = report_round(
+            &addr,
+            key.cohort,
+            key.round,
+            1,
+            &cs,
+            &x1,
+            60_000,
+            Duration::from_secs(20),
+        )
+        .expect("report after recovery");
+        let summary = server.join().unwrap();
+        assert_eq!((out.received, out.expected, out.partial), (2, 2, false));
+        // Bit-identical to an uninterrupted leader folding both reports.
+        let mut plain = CohortTable::new();
+        match plain.submit(key, &cs, 0, &encode(0, &x0), 0, 60_000) {
+            Submit::Pending { .. } => {}
+            other => panic!("expected Pending, got {other:?}"),
+        }
+        let want = match plain.submit(key, &cs, 1, &encode(1, &x1), 0, 60_000) {
+            Submit::Complete(r) => r.estimate,
+            other => panic!("expected Complete, got {other:?}"),
+        };
+        assert_eq!(out.estimate, want, "recovered round must be bit-identical");
+        assert_eq!(summary.rounds_completed, 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -75,8 +75,9 @@ pub enum Response {
 }
 
 /// `CodecSpec` wire form: tag byte + one u32 parameter (unused
-/// parameters are 0). Tags are append-only.
-fn spec_to_wire(s: CodecSpec) -> (u8, u32) {
+/// parameters are 0). Tags are append-only. Shared with the WAL/run
+/// records in [`crate::store`], which persist specs in this encoding.
+pub(crate) fn spec_to_wire(s: CodecSpec) -> (u8, u32) {
     match s {
         CodecSpec::Lq { q } => (0, q),
         CodecSpec::Rlq { q } => (1, q),
@@ -94,7 +95,7 @@ fn spec_to_wire(s: CodecSpec) -> (u8, u32) {
     }
 }
 
-fn spec_from_wire(tag: u8, param: u32) -> Result<CodecSpec, TransportError> {
+pub(crate) fn spec_from_wire(tag: u8, param: u32) -> Result<CodecSpec, TransportError> {
     Ok(match tag {
         0 => CodecSpec::Lq { q: param },
         1 => CodecSpec::Rlq { q: param },

@@ -1,0 +1,156 @@
+//! The manifest: an atomically-replaced snapshot of the store's sealed
+//! runs, next run sequence number, and WAL length.
+//!
+//! Written via `MANIFEST.tmp` + rename so readers only ever observe a
+//! complete file. The manifest is *advisory*: recovery replays the
+//! self-validating WAL and garbage-collects every run file, so the only
+//! state that must survive a crash through the manifest is `next_seq`
+//! (keeping run paths monotone across restarts). A corrupt manifest is
+//! therefore rebuilt fresh by [`super::Store::open`], not fatal.
+
+use super::{crc32, io_err, put_u32, put_u64, SliceReader, StoreError};
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::Path;
+
+/// Manifest file magic: `"DMEm"`.
+pub const MANIFEST_MAGIC: u32 = u32::from_le_bytes(*b"DMEm");
+
+const MAX_MANIFEST_RUNS: u32 = 1 << 20;
+
+/// Snapshot of the store's on-disk layout at the last state change.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Manifest {
+    /// WAL length when this snapshot was written — diagnostic only (the
+    /// WAL is self-validating; recovery trusts its own scan).
+    pub wal_len: u64,
+    /// Next run sequence number to allocate.
+    pub next_seq: u64,
+    /// `(seq, cohort, round)` for every sealed run at write time.
+    pub runs: Vec<(u64, u64, u64)>,
+}
+
+impl Manifest {
+    /// Load the manifest; `Ok(None)` if none exists yet, a typed
+    /// [`StoreError::Corrupt`] (which the store treats as "rebuild") if
+    /// validation fails.
+    pub fn load(path: &Path) -> Result<Option<Manifest>, StoreError> {
+        let buf = match fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(io_err(path, &e)),
+        };
+        let corrupt = |offset: u64, what: &'static str| StoreError::Corrupt {
+            path: path.display().to_string(),
+            offset,
+            what,
+        };
+        if buf.len() < 8 {
+            return Err(corrupt(0, "manifest shorter than its header"));
+        }
+        let magic = u32::from_le_bytes(buf[0..4].try_into().expect("4 bytes"));
+        if magic != MANIFEST_MAGIC {
+            return Err(corrupt(0, "bad manifest magic"));
+        }
+        let crc = u32::from_le_bytes(buf[4..8].try_into().expect("4 bytes"));
+        let body = &buf[8..];
+        if crc32(body) != crc {
+            return Err(corrupt(8, "manifest crc mismatch"));
+        }
+        let bad = || corrupt(8, "undecodable manifest body");
+        let mut r = SliceReader::new(body);
+        let wal_len = r.u64().ok_or_else(bad)?;
+        let next_seq = r.u64().ok_or_else(bad)?;
+        let count = r.u32().ok_or_else(bad)?;
+        if count > MAX_MANIFEST_RUNS {
+            return Err(corrupt(8, "manifest run count out of range"));
+        }
+        let mut runs = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            let seq = r.u64().ok_or_else(bad)?;
+            let cohort = r.u64().ok_or_else(bad)?;
+            let round = r.u64().ok_or_else(bad)?;
+            runs.push((seq, cohort, round));
+        }
+        if !r.is_empty() {
+            return Err(corrupt(8, "trailing bytes after manifest body"));
+        }
+        Ok(Some(Manifest {
+            wal_len,
+            next_seq,
+            runs,
+        }))
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename over.
+    pub fn save(&self, path: &Path, do_sync: bool) -> Result<(), StoreError> {
+        let mut body = Vec::with_capacity(24 + 24 * self.runs.len());
+        put_u64(&mut body, self.wal_len);
+        put_u64(&mut body, self.next_seq);
+        put_u32(&mut body, self.runs.len() as u32);
+        for &(seq, cohort, round) in &self.runs {
+            put_u64(&mut body, seq);
+            put_u64(&mut body, cohort);
+            put_u64(&mut body, round);
+        }
+        let mut out = Vec::with_capacity(8 + body.len());
+        put_u32(&mut out, MANIFEST_MAGIC);
+        put_u32(&mut out, crc32(&body));
+        out.extend_from_slice(&body);
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = File::create(&tmp).map_err(|e| io_err(&tmp, &e))?;
+            f.write_all(&out).map_err(|e| io_err(&tmp, &e))?;
+            if do_sync {
+                f.sync_data().map_err(|e| io_err(&tmp, &e))?;
+            }
+        }
+        fs::rename(&tmp, path).map_err(|e| io_err(path, &e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("dme-manifest-{}-{tag}-{n}", std::process::id()))
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_missing_is_none() {
+        let path = temp_path("roundtrip");
+        assert_eq!(Manifest::load(&path).expect("missing is fine"), None);
+        let m = Manifest {
+            wal_len: 4096,
+            next_seq: 17,
+            runs: vec![(15, 8, 0), (16, 8, 1)],
+        };
+        m.save(&path, false).expect("save");
+        assert_eq!(Manifest::load(&path).expect("load"), Some(m));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_manifest_is_a_typed_error() {
+        let path = temp_path("corrupt");
+        let m = Manifest {
+            wal_len: 10,
+            next_seq: 1,
+            runs: vec![],
+        };
+        m.save(&path, false).expect("save");
+        let mut bytes = fs::read(&path).expect("read");
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x80;
+        fs::write(&path, &bytes).expect("rewrite");
+        match Manifest::load(&path) {
+            Err(StoreError::Corrupt { what, .. }) => assert_eq!(what, "manifest crc mismatch"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        let _ = fs::remove_file(&path);
+    }
+}

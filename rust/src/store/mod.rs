@@ -1,0 +1,474 @@
+//! Durable storage for the DME service — write-ahead log, spill-to-disk
+//! partial-aggregate runs, and a manifest, LSM-style.
+//!
+//! The paper's coordinator folds every client report into one in-RAM
+//! accumulator ([`crate::net::cohort::CohortTable`]): a crashed leader
+//! loses the whole round, and huge-`d` cohorts are capped by memory.
+//! This module fixes both without changing a single output bit of the
+//! streaming-fold semantics:
+//!
+//! - **Write-ahead log** ([`Wal`]): every accepted report is appended to
+//!   `wal.log` *before* it is folded, as a CRC-checksummed record whose
+//!   payload reuses the [`crate::net::frame`] wire format verbatim plus
+//!   a `(cohort, round, client)` envelope. Torn or bit-flipped tails are
+//!   detected on open and truncated back to the last valid record —
+//!   reported as a [`TailTruncation`], never a panic.
+//! - **Runs** ([`RunImage`]): when open accumulators exceed a memory
+//!   budget, a round's exact `f64` accumulator image is sealed to an
+//!   on-disk `run-<seq>.dat` and later reports queue as pending frames;
+//!   at compaction or round close the image is loaded back and the
+//!   pending frames fold in arrival order — the identical left-to-right
+//!   IEEE addition sequence as the all-in-RAM fold, so the result is
+//!   bit-identical (a naive merge of independent partial sums would not
+//!   be: `f64` addition is not associative).
+//! - **Manifest** (`MANIFEST`): an atomically-replaced snapshot of the
+//!   sealed runs, the next run sequence number and the WAL length.
+//!   Recovery replays the self-validating WAL from offset zero and
+//!   garbage-collects every run file, so the manifest is advisory — a
+//!   corrupt manifest is rebuilt, not fatal.
+//!
+//! # Durability vs the paper's bit-cost model
+//!
+//! The paper meters communication in quantized bits per machine
+//! (`msg.bits`); durability adds *disk* bytes on top, invisible to that
+//! model: each logged report costs its frame bytes plus a ~57-byte
+//! record envelope. The real trade-off is latency, set by
+//! [`SyncPolicy`]: `always` issues one fsync per accepted report —
+//! millisecond-scale, dominating the microsecond fold, but a kill -9
+//! never loses an acknowledged report; `close` (the default) amortizes
+//! one fsync per *round* — a crash can drop reports accepted since the
+//! last close, but replay still recovers every round closed before the
+//! crash; `never` leaves flushing to the OS. The `transport_bench`
+//! durability rows measure exactly this spread.
+
+mod manifest;
+mod runs;
+mod wal;
+
+pub use manifest::Manifest;
+pub use runs::RunImage;
+pub use wal::{TailTruncation, Wal, WalRecord, MAX_RECORD_BYTES};
+
+use crate::net::cohort::{CohortKey, CohortSpec};
+use crate::net::error::TransportError;
+use crate::quant::Message;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The write-ahead log's file name inside a data dir.
+pub const WAL_FILE: &str = "wal.log";
+/// The manifest's file name inside a data dir.
+pub const MANIFEST_FILE: &str = "MANIFEST";
+
+/// A storage failure, in a comparable form tests can assert on
+/// (`io::Error` is neither `Clone` nor `PartialEq`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum StoreError {
+    /// An I/O operation failed.
+    Io {
+        path: String,
+        kind: io::ErrorKind,
+        detail: String,
+    },
+    /// A file's contents failed validation (magic, CRC, or decode).
+    Corrupt {
+        path: String,
+        /// Byte offset of the first bad structure.
+        offset: u64,
+        what: &'static str,
+    },
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io { path, detail, .. } => {
+                write!(f, "store i/o error at {path}: {detail}")
+            }
+            StoreError::Corrupt { path, offset, what } => {
+                write!(f, "store corruption in {path} at byte {offset}: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<StoreError> for TransportError {
+    fn from(e: StoreError) -> Self {
+        match e {
+            StoreError::Io { path, kind, detail } => TransportError::Io {
+                kind,
+                detail: format!("{path}: {detail}"),
+            },
+            StoreError::Corrupt { path, offset, what } => TransportError::Io {
+                kind: io::ErrorKind::InvalidData,
+                detail: format!("{path} corrupt at byte {offset}: {what}"),
+            },
+        }
+    }
+}
+
+pub(crate) fn io_err(path: &Path, e: &io::Error) -> StoreError {
+    StoreError::Io {
+        path: path.display().to_string(),
+        kind: e.kind(),
+        detail: e.to_string(),
+    }
+}
+
+/// When the WAL is flushed to stable storage (see the module docs for
+/// the latency/durability trade-off each point buys).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SyncPolicy {
+    /// fsync after every appended report — no acknowledged report is
+    /// ever lost, at one disk flush per report.
+    Always,
+    /// fsync when a round closes (and at checkpoints) — one flush per
+    /// round; a crash can lose reports accepted since the last close.
+    #[default]
+    OnClose,
+    /// Never fsync explicitly; the OS flushes when it pleases.
+    Never,
+}
+
+impl std::str::FromStr for SyncPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "always" => Ok(SyncPolicy::Always),
+            "close" => Ok(SyncPolicy::OnClose),
+            "never" => Ok(SyncPolicy::Never),
+            other => Err(format!("unknown sync policy '{other}' (expected always|close|never)")),
+        }
+    }
+}
+
+/// Durability configuration for a [`crate::net::cohort::CohortTable`]
+/// or a `dme serve` process (`data_dir=` / `mem_budget=` / `sync=`).
+#[derive(Clone, Debug)]
+pub struct DurabilityOpts {
+    /// Directory holding `wal.log`, `MANIFEST` and `run-*.dat`.
+    pub data_dir: PathBuf,
+    /// Spill open accumulators to disk runs once their resident bytes
+    /// exceed this budget (`usize::MAX` = never spill, `0` = spill
+    /// everything).
+    pub mem_budget: usize,
+    pub sync: SyncPolicy,
+}
+
+impl DurabilityOpts {
+    /// Durability at `data_dir` with an unbounded memory budget and the
+    /// default [`SyncPolicy::OnClose`].
+    pub fn new(data_dir: impl Into<PathBuf>) -> Self {
+        DurabilityOpts {
+            data_dir: data_dir.into(),
+            mem_budget: usize::MAX,
+            sync: SyncPolicy::default(),
+        }
+    }
+}
+
+/// What [`Store::open`] found on disk.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryInfo {
+    /// Valid WAL bytes after tail validation.
+    pub wal_bytes: u64,
+    /// Present iff a torn/corrupt tail was truncated away.
+    pub tail: Option<TailTruncation>,
+    /// Run files deleted at open (recovery is WAL-replay-only, so every
+    /// run on disk is stale).
+    pub stale_runs_removed: usize,
+    /// The manifest failed validation and was rebuilt fresh.
+    pub manifest_rebuilt: bool,
+}
+
+/// One data dir's WAL + runs + manifest, owned by a single leader.
+pub struct Store {
+    dir: PathBuf,
+    wal: Wal,
+    sync: SyncPolicy,
+    /// Next run sequence number; monotone across restarts (seeded from
+    /// the manifest) so a live run path never collides with a stale one.
+    next_seq: u64,
+    /// Sealed runs: `seq -> (cohort, round)`.
+    runs: BTreeMap<u64, (u64, u64)>,
+}
+
+impl Store {
+    /// Open (or create) a data dir: validate the WAL — truncating any
+    /// torn/corrupt tail — delete stale run files, and return the valid
+    /// records for the caller to replay.
+    pub fn open(
+        opts: &DurabilityOpts,
+    ) -> Result<(Store, Vec<WalRecord>, RecoveryInfo), StoreError> {
+        let dir = opts.data_dir.clone();
+        fs::create_dir_all(&dir).map_err(|e| io_err(&dir, &e))?;
+        let manifest_path = dir.join(MANIFEST_FILE);
+        let (manifest, manifest_rebuilt) = match Manifest::load(&manifest_path) {
+            Ok(m) => (m, false),
+            Err(StoreError::Corrupt { .. }) => (None, true),
+            Err(e) => return Err(e),
+        };
+        // GC every run file, manifest-listed and stray alike: recovery
+        // replays the WAL from offset zero, which re-derives (and may
+        // re-spill) everything a run ever held.
+        let mut stale_runs_removed = 0usize;
+        for entry in fs::read_dir(&dir).map_err(|e| io_err(&dir, &e))? {
+            let entry = entry.map_err(|e| io_err(&dir, &e))?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with("run-") && name.ends_with(".dat") {
+                let p = entry.path();
+                fs::remove_file(&p).map_err(|e| io_err(&p, &e))?;
+                stale_runs_removed += 1;
+            }
+        }
+        let next_seq = manifest.as_ref().map_or(0, |m| m.next_seq);
+        let (wal, records, tail) = Wal::open(&dir.join(WAL_FILE), opts.sync)?;
+        let store = Store {
+            dir,
+            wal,
+            sync: opts.sync,
+            next_seq,
+            runs: BTreeMap::new(),
+        };
+        store.write_manifest()?;
+        let info = RecoveryInfo {
+            wal_bytes: store.wal.len(),
+            tail,
+            stale_runs_removed,
+            manifest_rebuilt,
+        };
+        Ok((store, records, info))
+    }
+
+    /// Append one accepted report to the WAL (fsynced under
+    /// [`SyncPolicy::Always`]). Must happen *before* the fold.
+    pub fn log_report(
+        &mut self,
+        key: CohortKey,
+        spec: &CohortSpec,
+        client: u32,
+        deadline_ms: u64,
+        msg: &Message,
+    ) -> Result<(), StoreError> {
+        let body = wal::report_body(key.cohort, key.round, client, spec, deadline_ms, msg);
+        self.wal.append(&body)
+    }
+
+    /// Append a round-close marker to the WAL.
+    pub fn log_close(
+        &mut self,
+        key: CohortKey,
+        received: u32,
+        expected: u32,
+        partial: bool,
+    ) -> Result<(), StoreError> {
+        let body = wal::close_body(key.cohort, key.round, received, expected, partial);
+        self.wal.append(&body)
+    }
+
+    /// The round-close flush point: fsync unless the policy is `never`.
+    pub fn sync_on_close(&mut self) -> Result<(), StoreError> {
+        if self.sync == SyncPolicy::Never {
+            return Ok(());
+        }
+        self.wal.sync()
+    }
+
+    /// Seal one accumulator image as an on-disk run; returns its seq.
+    pub fn seal_run(&mut self, image: &RunImage) -> Result<u64, StoreError> {
+        let seq = self.next_seq;
+        // Consumed even if the write fails: sequence numbers are never
+        // reused, so a half-written file can't shadow a later run.
+        self.next_seq += 1;
+        let path = self.run_path(seq);
+        runs::write_run(&path, image, self.sync == SyncPolicy::Always)?;
+        self.runs.insert(seq, (image.cohort, image.round));
+        self.write_manifest()?;
+        Ok(seq)
+    }
+
+    /// Load a sealed run's exact accumulator image back.
+    pub fn load_run(&self, seq: u64) -> Result<RunImage, StoreError> {
+        runs::read_run(&self.run_path(seq))
+    }
+
+    /// Delete a sealed run (missing file is fine — it was already GC'd).
+    pub fn drop_run(&mut self, seq: u64) -> Result<(), StoreError> {
+        self.runs.remove(&seq);
+        let path = self.run_path(seq);
+        match fs::remove_file(&path) {
+            Ok(()) => {}
+            Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+            Err(e) => return Err(io_err(&path, &e)),
+        }
+        self.write_manifest()
+    }
+
+    /// All rounds closed: truncate the WAL (its history is fully
+    /// reflected in delivered results) and snapshot a fresh manifest.
+    pub fn checkpoint(&mut self) -> Result<(), StoreError> {
+        self.wal.reset()?;
+        self.write_manifest()
+    }
+
+    /// Current valid WAL length in bytes.
+    pub fn wal_len(&self) -> u64 {
+        self.wal.len()
+    }
+
+    /// Sealed-run count (live spill state, not a recovery source).
+    pub fn run_count(&self) -> usize {
+        self.runs.len()
+    }
+
+    fn run_path(&self, seq: u64) -> PathBuf {
+        self.dir.join(format!("run-{seq}.dat"))
+    }
+
+    fn write_manifest(&self) -> Result<(), StoreError> {
+        let m = Manifest {
+            wal_len: self.wal.len(),
+            next_seq: self.next_seq,
+            runs: self.runs.iter().map(|(&s, &(c, r))| (s, c, r)).collect(),
+        };
+        m.save(&self.dir.join(MANIFEST_FILE), self.sync != SyncPolicy::Never)
+    }
+}
+
+// --- CRC32 (IEEE 802.3, poly 0xEDB88320) — hand-rolled, no deps ------
+
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC32 of `bytes` (IEEE polynomial, init/final xor `0xFFFF_FFFF`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// --- little-endian record primitives ---------------------------------
+
+pub(crate) fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian cursor over a record body. Every getter
+/// returns `None` past the end — corrupt bytes surface as a typed
+/// decode failure, never a panic.
+pub(crate) struct SliceReader<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> SliceReader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        SliceReader { buf }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.buf.len() < n {
+            return None;
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Some(head)
+    }
+
+    pub(crate) fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|b| b[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().expect("4 bytes")))
+    }
+
+    pub(crate) fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    pub(crate) fn f64(&mut self) -> Option<f64> {
+        self.take(8).map(|b| f64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    /// Everything not yet consumed.
+    pub(crate) fn rest(self) -> &'a [u8] {
+        self.buf
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_the_ieee_check_vector() {
+        // The canonical CRC-32/ISO-HDLC check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // One flipped bit changes the sum.
+        assert_ne!(crc32(b"123456788"), crc32(b"123456789"));
+    }
+
+    #[test]
+    fn slice_reader_is_bounds_checked() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, 42);
+        put_f64(&mut buf, -1.5);
+        let mut r = SliceReader::new(&buf);
+        assert_eq!(r.u8(), Some(7));
+        assert_eq!(r.u32(), Some(0xDEAD_BEEF));
+        assert_eq!(r.u64(), Some(42));
+        assert_eq!(r.f64(), Some(-1.5));
+        assert!(r.is_empty());
+        assert_eq!(r.u8(), None, "reads past the end are None, not panics");
+    }
+
+    #[test]
+    fn sync_policy_parses_its_cli_forms() {
+        assert_eq!("always".parse(), Ok(SyncPolicy::Always));
+        assert_eq!("close".parse(), Ok(SyncPolicy::OnClose));
+        assert_eq!("never".parse(), Ok(SyncPolicy::Never));
+        assert!("fsync".parse::<SyncPolicy>().is_err());
+        assert_eq!(SyncPolicy::default(), SyncPolicy::OnClose);
+    }
+}

@@ -1,0 +1,224 @@
+//! Sealed partial-aggregate runs: `run-<seq>.dat` files holding one
+//! open round's **exact** `f64` accumulator image.
+//!
+//! Bit-identity is the whole design: IEEE addition is not associative,
+//! so merging independently-folded partial sums would not reproduce the
+//! all-in-RAM fold. A run therefore seals the accumulator *as folded so
+//! far* (the raw `f64` bit patterns), and every report that arrives
+//! after the spill is kept as a pending frame; compaction and round
+//! close load the image back and fold the pending frames in arrival
+//! order — the identical left-to-right addition sequence, hence the
+//! identical bits ([`crate::quant::VectorCodec::decode_accumulate_into`]
+//! is a pure function of the codec, and cohort codecs rebuild
+//! deterministically from `(spec, round)`).
+//!
+//! Format: `"DMEa"` magic + CRC over the body, then the round envelope,
+//! the [`crate::net::cohort::CohortSpec`], the received/got bitmap
+//! snapshot and the accumulator. Runs are the *live* spill mechanism
+//! only — recovery replays the WAL and deletes every run file on open —
+//! so a failed validation here is a typed [`StoreError::Corrupt`], and
+//! the in-RAM received/got stay authoritative (close reads only `acc`).
+
+use super::{crc32, io_err, put_f64, put_u32, put_u64, put_u8, SliceReader, StoreError};
+use crate::net::cohort::CohortSpec;
+use crate::net::wire::{spec_from_wire, spec_to_wire, MAX_WIRE_DIM};
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::Path;
+
+/// Run file magic: `"DMEa"` (aggregate).
+pub const RUN_MAGIC: u32 = u32::from_le_bytes(*b"DMEa");
+
+const MAX_RUN_N: u32 = 1 << 20;
+
+/// One spilled round's exact fold state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunImage {
+    pub cohort: u64,
+    pub round: u64,
+    pub spec: CohortSpec,
+    /// Absolute-deadline snapshot (caller clock) — diagnostic only.
+    pub deadline_ms: u64,
+    /// Reports folded into `acc` at seal time (snapshot; the open
+    /// round's RAM copy stays authoritative).
+    pub received: u32,
+    pub got: Vec<bool>,
+    /// The accumulator's exact `f64` bit image.
+    pub acc: Vec<f64>,
+}
+
+pub(crate) fn write_run(path: &Path, image: &RunImage, do_sync: bool) -> Result<(), StoreError> {
+    let mut body = Vec::with_capacity(64 + image.got.len() + 8 * image.acc.len());
+    put_u64(&mut body, image.cohort);
+    put_u64(&mut body, image.round);
+    put_u32(&mut body, image.spec.n as u32);
+    put_u32(&mut body, image.spec.d as u32);
+    let (tag, param) = spec_to_wire(image.spec.spec);
+    put_u8(&mut body, tag);
+    put_u32(&mut body, param);
+    put_f64(&mut body, image.spec.y);
+    put_u64(&mut body, image.spec.seed);
+    put_u64(&mut body, image.deadline_ms);
+    put_u32(&mut body, image.received);
+    for &g in &image.got {
+        put_u8(&mut body, g as u8);
+    }
+    for &a in &image.acc {
+        put_f64(&mut body, a);
+    }
+    let mut out = Vec::with_capacity(8 + body.len());
+    put_u32(&mut out, RUN_MAGIC);
+    put_u32(&mut out, crc32(&body));
+    out.extend_from_slice(&body);
+    let mut f = File::create(path).map_err(|e| io_err(path, &e))?;
+    f.write_all(&out).map_err(|e| io_err(path, &e))?;
+    if do_sync {
+        f.sync_data().map_err(|e| io_err(path, &e))?;
+    }
+    Ok(())
+}
+
+pub(crate) fn read_run(path: &Path) -> Result<RunImage, StoreError> {
+    let buf = fs::read(path).map_err(|e| io_err(path, &e))?;
+    let corrupt = |offset: u64, what: &'static str| StoreError::Corrupt {
+        path: path.display().to_string(),
+        offset,
+        what,
+    };
+    if buf.len() < 8 {
+        return Err(corrupt(0, "run file shorter than its header"));
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().expect("4 bytes"));
+    if magic != RUN_MAGIC {
+        return Err(corrupt(0, "bad run magic"));
+    }
+    let crc = u32::from_le_bytes(buf[4..8].try_into().expect("4 bytes"));
+    let body = &buf[8..];
+    if crc32(body) != crc {
+        return Err(corrupt(8, "run crc mismatch"));
+    }
+    let bad = || corrupt(8, "undecodable run body");
+    let mut r = SliceReader::new(body);
+    let cohort = r.u64().ok_or_else(bad)?;
+    let round = r.u64().ok_or_else(bad)?;
+    let n = r.u32().ok_or_else(bad)?;
+    let d = r.u32().ok_or_else(bad)?;
+    if n == 0 || n > MAX_RUN_N || d == 0 || d > MAX_WIRE_DIM {
+        return Err(corrupt(8, "run dimensions out of range"));
+    }
+    let tag = r.u8().ok_or_else(bad)?;
+    let param = r.u32().ok_or_else(bad)?;
+    let spec = spec_from_wire(tag, param).map_err(|_| corrupt(8, "unknown codec tag in run"))?;
+    let y = r.f64().ok_or_else(bad)?;
+    let seed = r.u64().ok_or_else(bad)?;
+    let deadline_ms = r.u64().ok_or_else(bad)?;
+    let received = r.u32().ok_or_else(bad)?;
+    if received > n {
+        return Err(corrupt(8, "run received exceeds its cohort size"));
+    }
+    let mut got = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        match r.u8().ok_or_else(bad)? {
+            0 => got.push(false),
+            1 => got.push(true),
+            _ => return Err(corrupt(8, "run got-flag out of range")),
+        }
+    }
+    let mut acc = Vec::with_capacity(d as usize);
+    for _ in 0..d {
+        acc.push(r.f64().ok_or_else(bad)?);
+    }
+    if !r.is_empty() {
+        return Err(corrupt(8, "trailing bytes after run body"));
+    }
+    Ok(RunImage {
+        cohort,
+        round,
+        spec: CohortSpec {
+            n: n as usize,
+            d: d as usize,
+            spec,
+            y,
+            seed,
+        },
+        deadline_ms,
+        received,
+        got,
+        acc,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CodecSpec;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("dme-run-{}-{tag}-{n}.dat", std::process::id()))
+    }
+
+    fn image() -> RunImage {
+        RunImage {
+            cohort: 9,
+            round: 2,
+            spec: CohortSpec {
+                n: 4,
+                d: 6,
+                spec: CodecSpec::Lq { q: 64 },
+                y: 8.0,
+                seed: 42,
+            },
+            deadline_ms: 1234,
+            received: 2,
+            got: vec![true, false, true, false],
+            // Awkward bit patterns must survive exactly: negative zero,
+            // subnormals, and values with no short decimal form.
+            acc: vec![-0.0, 1.5e-310, 0.1 + 0.2, -7.25, f64::MAX, 3.0],
+        }
+    }
+
+    #[test]
+    fn run_image_roundtrips_bit_exactly() {
+        let path = temp_path("roundtrip");
+        let img = image();
+        write_run(&path, &img, false).expect("write run");
+        let back = read_run(&path).expect("read run");
+        // Compare accumulator *bits*, not float equality (-0.0 == 0.0).
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.acc), bits(&img.acc));
+        assert_eq!(back, img);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_run_files_are_typed_errors_not_panics() {
+        let path = temp_path("corrupt");
+        let img = image();
+        write_run(&path, &img, false).expect("write run");
+        let mut bytes = fs::read(&path).expect("read back");
+        // Flip one accumulator bit: CRC must catch it.
+        let last = bytes.len() - 4;
+        bytes[last] ^= 0x10;
+        fs::write(&path, &bytes).expect("rewrite");
+        match read_run(&path) {
+            Err(StoreError::Corrupt { what, .. }) => assert_eq!(what, "run crc mismatch"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // Truncated file.
+        fs::write(&path, &bytes[..5]).expect("truncate");
+        assert!(matches!(read_run(&path), Err(StoreError::Corrupt { .. })));
+        // Wrong magic.
+        let mut bytes = fs::read(&path).expect("read back");
+        bytes.clear();
+        bytes.extend_from_slice(b"NOPE\0\0\0\0");
+        fs::write(&path, &bytes).expect("rewrite");
+        match read_run(&path) {
+            Err(StoreError::Corrupt { what, .. }) => assert_eq!(what, "bad run magic"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        let _ = fs::remove_file(&path);
+    }
+}

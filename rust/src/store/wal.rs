@@ -1,0 +1,376 @@
+//! The write-ahead log: `[len: u32 LE][crc: u32 LE][body]` records
+//! appended to `wal.log`, where `crc` is [`super::crc32`] over `body`.
+//!
+//! A report record's body carries the `(cohort, round, client)`
+//! envelope, the full [`crate::net::cohort::CohortSpec`] (so replay can
+//! rebuild the round from nothing) and the quantized payload as a
+//! [`crate::net::frame`] frame — byte-identical to what traveled on the
+//! wire. A close record marks a round's result as delivered, letting
+//! replay re-close it (and re-serve late clients) without re-running the
+//! deadline clock.
+//!
+//! [`Wal::open`] scans the whole file front to back. The first record
+//! that fails validation — a header or body cut short by a crash, an
+//! impossible length, a CRC mismatch from bit rot, an undecodable body —
+//! ends the scan: everything after it is suspect (lengths no longer
+//! delimit records), so the file is truncated back to the last valid
+//! boundary and the damage reported as a [`TailTruncation`]. Suffix
+//! truncation preserves the prefix invariant replay depends on: a
+//! surviving close record's reports all survive too.
+
+use super::{crc32, io_err, put_f64, put_u32, put_u64, put_u8, SliceReader, StoreError, SyncPolicy};
+use crate::net::cohort::CohortSpec;
+use crate::net::frame;
+use crate::net::wire::{spec_from_wire, spec_to_wire, MAX_WIRE_DIM};
+use crate::quant::Message;
+use std::fs::OpenOptions;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+const KIND_REPORT: u8 = 0;
+const KIND_CLOSE: u8 = 1;
+
+/// Hard cap on one record body: a maximal frame plus envelope headroom.
+pub const MAX_RECORD_BYTES: usize = frame::MAX_FRAME_BYTES as usize + 256;
+
+/// Cohort sizes beyond this are rejected at decode (a report for a
+/// billion-client cohort is corruption, not a workload).
+const MAX_WAL_N: u32 = 1 << 20;
+
+/// One valid WAL record, as replayed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WalRecord {
+    /// An accepted (deduplicated, validated) client report.
+    Report {
+        cohort: u64,
+        round: u64,
+        client: u32,
+        spec: CohortSpec,
+        /// The *relative* deadline the report carried — a recovered
+        /// round's clock restarts at replay time.
+        deadline_ms: u64,
+        msg: Message,
+    },
+    /// A round closed and its result was delivered.
+    Close {
+        cohort: u64,
+        round: u64,
+        received: u32,
+        expected: u32,
+        partial: bool,
+    },
+}
+
+impl WalRecord {
+    /// Decode one record body; `None` means the body is corrupt.
+    pub(crate) fn decode(body: &[u8]) -> Option<WalRecord> {
+        let mut r = SliceReader::new(body);
+        match r.u8()? {
+            KIND_REPORT => {
+                let cohort = r.u64()?;
+                let round = r.u64()?;
+                let client = r.u32()?;
+                let n = r.u32()?;
+                let d = r.u32()?;
+                let tag = r.u8()?;
+                let param = r.u32()?;
+                let y = r.f64()?;
+                let seed = r.u64()?;
+                let deadline_ms = r.u64()?;
+                if n == 0 || n > MAX_WAL_N || d == 0 || d > MAX_WIRE_DIM || client >= n {
+                    return None;
+                }
+                let spec = CohortSpec {
+                    n: n as usize,
+                    d: d as usize,
+                    spec: spec_from_wire(tag, param).ok()?,
+                    y,
+                    seed,
+                };
+                let mut rest = r.rest();
+                let msg = frame::read_frame(&mut rest, frame::MAX_FRAME_BYTES).ok()??;
+                if !rest.is_empty() {
+                    return None;
+                }
+                Some(WalRecord::Report {
+                    cohort,
+                    round,
+                    client,
+                    spec,
+                    deadline_ms,
+                    msg,
+                })
+            }
+            KIND_CLOSE => {
+                let cohort = r.u64()?;
+                let round = r.u64()?;
+                let received = r.u32()?;
+                let expected = r.u32()?;
+                let partial = match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    _ => return None,
+                };
+                if !r.is_empty() {
+                    return None;
+                }
+                Some(WalRecord::Close {
+                    cohort,
+                    round,
+                    received,
+                    expected,
+                    partial,
+                })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Build a report record body (the inverse of [`WalRecord::decode`]).
+pub(crate) fn report_body(
+    cohort: u64,
+    round: u64,
+    client: u32,
+    spec: &CohortSpec,
+    deadline_ms: u64,
+    msg: &Message,
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + frame::PREFIX_BYTES + msg.bytes.len());
+    put_u8(&mut buf, KIND_REPORT);
+    put_u64(&mut buf, cohort);
+    put_u64(&mut buf, round);
+    put_u32(&mut buf, client);
+    put_u32(&mut buf, spec.n as u32);
+    put_u32(&mut buf, spec.d as u32);
+    let (tag, param) = spec_to_wire(spec.spec);
+    put_u8(&mut buf, tag);
+    put_u32(&mut buf, param);
+    put_f64(&mut buf, spec.y);
+    put_u64(&mut buf, spec.seed);
+    put_u64(&mut buf, deadline_ms);
+    frame::write_frame(&mut buf, msg).expect("writing a frame to a Vec cannot fail");
+    buf
+}
+
+/// Build a close record body.
+pub(crate) fn close_body(
+    cohort: u64,
+    round: u64,
+    received: u32,
+    expected: u32,
+    partial: bool,
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(32);
+    put_u8(&mut buf, KIND_CLOSE);
+    put_u64(&mut buf, cohort);
+    put_u64(&mut buf, round);
+    put_u32(&mut buf, received);
+    put_u32(&mut buf, expected);
+    put_u8(&mut buf, partial as u8);
+    buf
+}
+
+/// What [`Wal::open`] cut off the end of a damaged log.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TailTruncation {
+    /// Byte offset of the first bad record — the WAL's valid length
+    /// after truncation.
+    pub offset: u64,
+    /// How many trailing bytes were discarded.
+    pub dropped_bytes: u64,
+    /// Which validation failed first.
+    pub what: &'static str,
+}
+
+/// An append-only checksummed log file.
+pub struct Wal {
+    file: std::fs::File,
+    path: PathBuf,
+    len: u64,
+    sync: SyncPolicy,
+}
+
+impl Wal {
+    /// Open (or create) the log, validate every record, truncate any
+    /// torn/corrupt tail, and return the valid records in append order.
+    pub fn open(
+        path: &Path,
+        sync: SyncPolicy,
+    ) -> Result<(Wal, Vec<WalRecord>, Option<TailTruncation>), StoreError> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .map_err(|e| io_err(path, &e))?;
+        let mut buf = Vec::new();
+        file.read_to_end(&mut buf).map_err(|e| io_err(path, &e))?;
+        let file_len = buf.len() as u64;
+        let mut records = Vec::new();
+        let mut off = 0usize;
+        let mut bad: Option<&'static str> = None;
+        while off < buf.len() {
+            let rem = buf.len() - off;
+            if rem < 8 {
+                bad = Some("torn record header");
+                break;
+            }
+            let len = u32::from_le_bytes(buf[off..off + 4].try_into().expect("4 bytes")) as usize;
+            let crc = u32::from_le_bytes(buf[off + 4..off + 8].try_into().expect("4 bytes"));
+            if len == 0 || len > MAX_RECORD_BYTES {
+                bad = Some("impossible record length");
+                break;
+            }
+            if rem - 8 < len {
+                bad = Some("torn record body");
+                break;
+            }
+            let body = &buf[off + 8..off + 8 + len];
+            if crc32(body) != crc {
+                bad = Some("record crc mismatch");
+                break;
+            }
+            match WalRecord::decode(body) {
+                Some(r) => records.push(r),
+                None => {
+                    bad = Some("undecodable record body");
+                    break;
+                }
+            }
+            off += 8 + len;
+        }
+        let valid = off as u64;
+        let tail = bad.map(|what| TailTruncation {
+            offset: valid,
+            dropped_bytes: file_len - valid,
+            what,
+        });
+        if tail.is_some() {
+            file.set_len(valid).map_err(|e| io_err(path, &e))?;
+        }
+        file.seek(SeekFrom::Start(valid)).map_err(|e| io_err(path, &e))?;
+        let wal = Wal {
+            file,
+            path: path.to_path_buf(),
+            len: valid,
+            sync,
+        };
+        Ok((wal, records, tail))
+    }
+
+    /// Append one record body (length + CRC prepended here). Fsyncs
+    /// under [`SyncPolicy::Always`].
+    pub fn append(&mut self, body: &[u8]) -> Result<(), StoreError> {
+        debug_assert!(!body.is_empty() && body.len() <= MAX_RECORD_BYTES);
+        let mut rec = Vec::with_capacity(8 + body.len());
+        put_u32(&mut rec, body.len() as u32);
+        put_u32(&mut rec, crc32(body));
+        rec.extend_from_slice(body);
+        self.file.write_all(&rec).map_err(|e| io_err(&self.path, &e))?;
+        self.len += rec.len() as u64;
+        if self.sync == SyncPolicy::Always {
+            self.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Flush appended records to stable storage.
+    pub fn sync(&mut self) -> Result<(), StoreError> {
+        self.file.sync_data().map_err(|e| io_err(&self.path, &e))
+    }
+
+    /// Valid log length in bytes.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Checkpoint: drop the whole log (its history is fully reflected
+    /// in delivered results) and start appending from offset zero.
+    pub fn reset(&mut self) -> Result<(), StoreError> {
+        self.file.set_len(0).map_err(|e| io_err(&self.path, &e))?;
+        self.file.seek(SeekFrom::Start(0)).map_err(|e| io_err(&self.path, &e))?;
+        self.len = 0;
+        if self.sync != SyncPolicy::Never {
+            self.sync()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CodecSpec;
+
+    fn spec() -> CohortSpec {
+        CohortSpec {
+            n: 3,
+            d: 8,
+            spec: CodecSpec::Lq { q: 64 },
+            y: 8.0,
+            seed: 42,
+        }
+    }
+
+    fn msg() -> Message {
+        Message {
+            bytes: vec![0xA5; 11],
+            bits: 85,
+        }
+    }
+
+    #[test]
+    fn report_and_close_bodies_roundtrip() {
+        let body = report_body(7, 3, 2, &spec(), 1500, &msg());
+        match WalRecord::decode(&body) {
+            Some(WalRecord::Report {
+                cohort,
+                round,
+                client,
+                spec: s,
+                deadline_ms,
+                msg: m,
+            }) => {
+                assert_eq!((cohort, round, client, deadline_ms), (7, 3, 2, 1500));
+                assert_eq!(s, spec());
+                assert_eq!(m, msg());
+            }
+            other => panic!("expected Report, got {other:?}"),
+        }
+        let body = close_body(7, 3, 2, 3, true);
+        assert_eq!(
+            WalRecord::decode(&body),
+            Some(WalRecord::Close {
+                cohort: 7,
+                round: 3,
+                received: 2,
+                expected: 3,
+                partial: true,
+            })
+        );
+    }
+
+    #[test]
+    fn corrupt_bodies_decode_to_none_not_panic() {
+        // Unknown kind byte.
+        assert_eq!(WalRecord::decode(&[9]), None);
+        // Empty body.
+        assert_eq!(WalRecord::decode(&[]), None);
+        // Report cut short mid-envelope.
+        let body = report_body(1, 0, 0, &spec(), 0, &msg());
+        assert_eq!(WalRecord::decode(&body[..20]), None);
+        // Trailing junk after a close record.
+        let mut body = close_body(1, 0, 1, 2, false);
+        body.push(0);
+        assert_eq!(WalRecord::decode(&body), None);
+        // Client out of the cohort's range.
+        let body = report_body(1, 0, 99, &spec(), 0, &msg());
+        assert_eq!(WalRecord::decode(&body), None);
+    }
+}

@@ -1,0 +1,546 @@
+//! Durability integration tests — the crash-recovery contract of the
+//! WAL'd cohort table ([`dme::store`] + [`dme::net::cohort`]).
+//!
+//! The pinned guarantees:
+//!
+//! - a leader killed mid-round and restarted over the same data dir
+//!   produces **bit-identical** renormalized (partial) means to an
+//!   uninterrupted leader;
+//! - torn or bit-flipped WAL tails are truncated back to the last valid
+//!   record boundary — reported as a typed [`TailTruncation`], never a
+//!   panic, and never costing a record *before* the damage;
+//! - replay is idempotent (recover twice ≡ recover once) and the result
+//!   is invariant to the fold pool size and to spill-to-disk pressure.
+
+use dme::coordinator::{fold_mean_chunked_on, CodecSpec, FoldPart};
+use dme::net::cohort::{
+    client_encoder_rng, cohort_codec, CohortKey, CohortSpec, CohortTable, Submit,
+};
+use dme::pool::ChunkPool;
+use dme::quant::{LatticeQuantizer, Message};
+use dme::rng::{hash2, Rng};
+use dme::store::{DurabilityOpts, SyncPolicy, MANIFEST_FILE, WAL_FILE};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Fresh per-test scratch dir (no `Date::now` — counter + pid).
+fn temp_dir(tag: &str) -> PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!("dme-dur-{}-{tag}-{n}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn opts(dir: &Path, sync: SyncPolicy) -> DurabilityOpts {
+    DurabilityOpts {
+        sync,
+        ..DurabilityOpts::new(dir)
+    }
+}
+
+fn spec(n: usize, d: usize) -> CohortSpec {
+    CohortSpec {
+        n,
+        d,
+        spec: CodecSpec::Lq { q: 64 },
+        y: 8.0,
+        seed: 42,
+    }
+}
+
+fn encode(cs: &CohortSpec, round: u64, client: usize, x: &[f64]) -> Message {
+    let mut codec = cohort_codec(cs, round);
+    let mut rng = client_encoder_rng(cs.seed, round, client);
+    codec.encode(x, &mut rng)
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Client inputs with per-coordinate structure so wrong fold orders
+/// can't accidentally agree.
+fn inputs(cs: &CohortSpec, clients: &[usize]) -> Vec<(usize, Message)> {
+    clients
+        .iter()
+        .map(|&c| {
+            let x: Vec<f64> = (0..cs.d)
+                .map(|j| 3.0 + 0.7 * c as f64 - 0.05 * j as f64)
+                .collect();
+            (c, encode(cs, 0, c, &x))
+        })
+        .collect()
+}
+
+/// Feed `reports` to a table; all but the last must stay Pending.
+fn submit_all(
+    table: &mut CohortTable,
+    key: CohortKey,
+    cs: &CohortSpec,
+    reports: &[(usize, Message)],
+) {
+    for (c, m) in reports {
+        match table.submit(key, cs, *c, m, 0, 1_000) {
+            Submit::Pending { .. } | Submit::Complete(_) => {}
+            other => panic!("client {c}: unexpected {other:?}"),
+        }
+    }
+}
+
+/// The uninterrupted leader's result for `reports` (closing at the
+/// deadline when fewer than `n` report).
+fn plain_result(
+    key: CohortKey,
+    cs: &CohortSpec,
+    reports: &[(usize, Message)],
+) -> dme::net::cohort::RoundResult {
+    let mut table = CohortTable::new();
+    for (c, m) in reports {
+        if let Submit::Complete(r) = table.submit(key, cs, *c, m, 0, 1_000) {
+            return r;
+        }
+    }
+    let mut closed = table.expire(1_000);
+    assert_eq!(closed.len(), 1, "exactly one round closes");
+    closed.remove(0).1
+}
+
+// --- the acceptance pin ----------------------------------------------
+
+/// A leader killed mid-round (k=3 of n=5 reports WAL'd, table dropped
+/// without closing) restarts, replays the log, and its deadline-closed
+/// partial mean is bit-identical to an uninterrupted leader's.
+#[test]
+fn killed_leader_recovers_bit_identical_partial_mean() {
+    let dir = temp_dir("kill-partial");
+    let cs = spec(5, 24);
+    let key = CohortKey { cohort: 11, round: 0 };
+    let reports = inputs(&cs, &[0, 2, 3]);
+    let want = plain_result(key, &cs, &reports);
+    assert!(want.partial);
+    assert_eq!((want.received, want.expected), (3, 5));
+    // Killed leader: every accepted report hit the WAL first.
+    {
+        let (mut t, rec) = CohortTable::durable(&opts(&dir, SyncPolicy::Always)).expect("open");
+        assert_eq!(rec.reports_replayed, 0);
+        submit_all(&mut t, key, &cs, &reports);
+        // kill -9: dropped here without closing the round.
+    }
+    let (mut t, rec) = CohortTable::durable(&opts(&dir, SyncPolicy::Always)).expect("recover");
+    assert_eq!(rec.reports_replayed, 3);
+    assert_eq!(rec.rounds_reopened, 1);
+    assert_eq!(rec.warnings, 0);
+    assert!(rec.tail.is_none());
+    let closed = t.expire(1_000);
+    assert_eq!(closed.len(), 1);
+    let got = &closed[0].1;
+    assert_eq!((got.received, got.expected, got.partial), (3, 5, true));
+    assert_eq!(
+        bits(&got.estimate),
+        bits(&want.estimate),
+        "recovered partial mean must be bit-identical to the uninterrupted fold"
+    );
+    assert_eq!(t.store_errors(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Recovery resumes (not restarts) an open round: the missing client
+/// reports *after* the restart and completes it, bit-identical to a
+/// never-interrupted full round.
+#[test]
+fn recovery_resumes_open_round_and_finishes_it() {
+    let dir = temp_dir("resume");
+    let cs = spec(3, 16);
+    let key = CohortKey { cohort: 1, round: 0 };
+    let reports = inputs(&cs, &[0, 1, 2]);
+    let want = plain_result(key, &cs, &reports);
+    assert!(!want.partial);
+    {
+        let (mut t, _) = CohortTable::durable(&opts(&dir, SyncPolicy::OnClose)).expect("open");
+        submit_all(&mut t, key, &cs, &reports[..2]);
+    }
+    let (mut t, rec) = CohortTable::durable(&opts(&dir, SyncPolicy::OnClose)).expect("recover");
+    assert_eq!((rec.reports_replayed, rec.rounds_reopened), (2, 1));
+    let (c, m) = &reports[2];
+    let got = match t.submit(key, &cs, *c, m, 0, 1_000) {
+        Submit::Complete(r) => r,
+        other => panic!("expected Complete, got {other:?}"),
+    };
+    assert_eq!(bits(&got.estimate), bits(&want.estimate));
+    // All rounds closed: the checkpoint truncated the log.
+    assert_eq!(t.wal_bytes(), Some(0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- WAL edge cases --------------------------------------------------
+
+/// An empty (or missing) log recovers to an empty table, twice.
+#[test]
+fn empty_log_recovers_to_empty_table() {
+    let dir = temp_dir("empty");
+    for pass in 0..2 {
+        let (t, rec) = CohortTable::durable(&opts(&dir, SyncPolicy::Never)).expect("open");
+        assert_eq!(rec.reports_replayed, 0, "pass {pass}");
+        assert_eq!(rec.rounds_reopened, 0);
+        assert_eq!(rec.wal_bytes, 0);
+        assert!(rec.tail.is_none());
+        assert_eq!(t.open_rounds(), 0);
+        assert_eq!(t.wal_bytes(), Some(0));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A final record torn at *every* possible cut point is truncated back
+/// to the last valid boundary; the records before it all survive.
+#[test]
+fn torn_final_record_is_truncated_not_fatal() {
+    let dir = temp_dir("torn-src");
+    let cs = spec(3, 8);
+    let key = CohortKey { cohort: 7, round: 0 };
+    let reports = inputs(&cs, &[0, 1]);
+    {
+        let (mut t, _) = CohortTable::durable(&opts(&dir, SyncPolicy::Never)).expect("open");
+        submit_all(&mut t, key, &cs, &reports);
+    }
+    let wal = std::fs::read(dir.join(WAL_FILE)).expect("read wal");
+    let len1 = u32::from_le_bytes(wal[0..4].try_into().expect("4 bytes")) as usize;
+    let boundary = 8 + len1;
+    assert!(boundary < wal.len(), "two records on disk");
+    for cut in boundary + 1..wal.len() {
+        let d2 = temp_dir("torn-cut");
+        std::fs::create_dir_all(&d2).expect("mkdir");
+        std::fs::write(d2.join(WAL_FILE), &wal[..cut]).expect("write torn wal");
+        let (t, rec) = CohortTable::durable(&opts(&d2, SyncPolicy::Never)).expect("recover");
+        assert_eq!(rec.reports_replayed, 1, "cut at byte {cut}");
+        let tail = rec.tail.expect("torn tail reported");
+        assert_eq!(tail.offset, boundary as u64, "cut at byte {cut}");
+        assert_eq!(tail.dropped_bytes, (cut - boundary) as u64);
+        assert!(
+            tail.what == "torn record header" || tail.what == "torn record body",
+            "cut at byte {cut}: {}",
+            tail.what
+        );
+        // The file itself was truncated back to the valid prefix.
+        let disk = std::fs::metadata(d2.join(WAL_FILE)).expect("stat").len();
+        assert_eq!(disk, boundary as u64);
+        assert_eq!(t.wal_bytes(), Some(boundary as u64));
+        let _ = std::fs::remove_dir_all(&d2);
+    }
+    // One end-to-end check: recover a torn log, re-report the lost
+    // client plus the missing one, match the uninterrupted full round.
+    let d3 = temp_dir("torn-refill");
+    std::fs::create_dir_all(&d3).expect("mkdir");
+    std::fs::write(d3.join(WAL_FILE), &wal[..wal.len() - 1]).expect("write torn wal");
+    let (mut t, rec) = CohortTable::durable(&opts(&d3, SyncPolicy::Never)).expect("recover");
+    assert_eq!(rec.reports_replayed, 1);
+    let all = inputs(&cs, &[0, 1, 2]);
+    let want = plain_result(key, &cs, &all);
+    submit_all(&mut t, key, &cs, &all[1..2]);
+    let got = match t.submit(key, &cs, all[2].0, &all[2].1, 0, 1_000) {
+        Submit::Complete(r) => r,
+        other => panic!("expected Complete, got {other:?}"),
+    };
+    assert_eq!(bits(&got.estimate), bits(&want.estimate));
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&d3);
+}
+
+/// Bit rot anywhere in a record (its CRC field, its body, its length)
+/// truncates from that record's boundary — and only from there.
+#[test]
+fn bit_flipped_records_truncate_from_the_corruption_point() {
+    let dir = temp_dir("flip-src");
+    let cs = spec(3, 8);
+    let key = CohortKey { cohort: 7, round: 0 };
+    let reports = inputs(&cs, &[0, 1]);
+    {
+        let (mut t, _) = CohortTable::durable(&opts(&dir, SyncPolicy::Never)).expect("open");
+        submit_all(&mut t, key, &cs, &reports);
+    }
+    let wal = std::fs::read(dir.join(WAL_FILE)).expect("read wal");
+    let len1 = u32::from_le_bytes(wal[0..4].try_into().expect("4 bytes")) as usize;
+    let boundary = 8 + len1;
+    // (byte to damage, expected valid offset, expected replays, what)
+    let cases: [(usize, u64, u64, &str); 3] = [
+        // Record 2's first body byte: its CRC no longer matches.
+        (boundary + 8, boundary as u64, 1, "record crc mismatch"),
+        // Record 1's stored CRC itself: nothing survives.
+        (4, 0, 0, "record crc mismatch"),
+        // Record 2's length field forced huge (flip below).
+        (boundary, boundary as u64, 1, "impossible record length"),
+    ];
+    for (i, (pos, offset, replays, what)) in cases.iter().enumerate() {
+        let d2 = temp_dir("flip-case");
+        std::fs::create_dir_all(&d2).expect("mkdir");
+        let mut bytes = wal.clone();
+        if *what == "impossible record length" {
+            bytes[*pos..*pos + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        } else {
+            bytes[*pos] ^= 0x40;
+        }
+        std::fs::write(d2.join(WAL_FILE), &bytes).expect("write damaged wal");
+        let (t, rec) = CohortTable::durable(&opts(&d2, SyncPolicy::Never)).expect("recover");
+        assert_eq!(rec.reports_replayed, *replays, "case {i}");
+        let tail = rec.tail.expect("damage reported");
+        assert_eq!(tail.offset, *offset, "case {i}");
+        assert_eq!(tail.what, *what, "case {i}");
+        assert_eq!(t.wal_bytes(), Some(*offset), "case {i}");
+        let _ = std::fs::remove_dir_all(&d2);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Recovering twice produces the same replay and the same bits as
+/// recovering once — replay never appends to the log it is reading.
+#[test]
+fn replay_is_idempotent_recover_twice_equals_once() {
+    let dir = temp_dir("idempotent");
+    let cs = spec(5, 24);
+    let key = CohortKey { cohort: 11, round: 0 };
+    let reports = inputs(&cs, &[0, 2, 3]);
+    let want = plain_result(key, &cs, &reports);
+    {
+        let (mut t, _) = CohortTable::durable(&opts(&dir, SyncPolicy::OnClose)).expect("open");
+        submit_all(&mut t, key, &cs, &reports);
+    }
+    let (t1, r1) = CohortTable::durable(&opts(&dir, SyncPolicy::OnClose)).expect("recover 1");
+    let wal_after_first = t1.wal_bytes();
+    drop(t1);
+    let (mut t2, r2) = CohortTable::durable(&opts(&dir, SyncPolicy::OnClose)).expect("recover 2");
+    assert_eq!(r1.reports_replayed, r2.reports_replayed);
+    assert_eq!(r1.rounds_reopened, r2.rounds_reopened);
+    assert_eq!(r1.wal_bytes, r2.wal_bytes);
+    assert_eq!(wal_after_first, t2.wal_bytes());
+    let closed = t2.expire(1_000);
+    assert_eq!(closed.len(), 1);
+    assert_eq!(bits(&closed[0].1.estimate), bits(&want.estimate));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The recovered estimate equals the coordinator's pool-sharded fold at
+/// every pool size — recovery is invariant to how the service's fold
+/// pool happens to be sized after the restart.
+#[test]
+fn recovered_estimate_is_pool_size_invariant() {
+    let dir = temp_dir("pool");
+    let cs = spec(5, 33);
+    let key = CohortKey { cohort: 4, round: 0 };
+    let reports = inputs(&cs, &[0, 2, 3]);
+    {
+        let (mut t, _) = CohortTable::durable(&opts(&dir, SyncPolicy::OnClose)).expect("open");
+        submit_all(&mut t, key, &cs, &reports);
+    }
+    let (mut t, _) = CohortTable::durable(&opts(&dir, SyncPolicy::OnClose)).expect("recover");
+    let closed = t.expire(1_000);
+    assert_eq!(closed.len(), 1);
+    let got = &closed[0].1.estimate;
+    // The same codec the cohort convention builds, as a concrete Sync
+    // type the chunked fold can shard.
+    let mut shared = Rng::new(hash2(cs.seed, key.round));
+    let codec = LatticeQuantizer::from_y(cs.d, 64, cs.y, &mut shared);
+    let zeros = vec![0.0; cs.d];
+    let parts: Vec<FoldPart> = reports.iter().map(|(_, m)| FoldPart::Encoded(m)).collect();
+    for size in [1usize, 2, 5] {
+        let pool = ChunkPool::new(size);
+        let mut out = vec![0.0; cs.d];
+        fold_mean_chunked_on(&pool, &codec, &parts, &zeros, &mut out, 7);
+        assert_eq!(bits(&out), bits(got), "pool size {size}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- spill-to-disk runs ----------------------------------------------
+
+/// `mem_budget = 0` forces the round through a spill and several
+/// LSM-style compactions (32 reports at a compaction fan-in of 8); the
+/// completed estimate is bit-identical to the all-in-RAM fold.
+#[test]
+fn spilled_round_completes_bit_identical_to_all_in_ram() {
+    let dir = temp_dir("spill-full");
+    let cs = spec(32, 16);
+    let key = CohortKey { cohort: 6, round: 0 };
+    let reports = inputs(&cs, &(0..32).collect::<Vec<_>>());
+    let want = plain_result(key, &cs, &reports);
+    let o = DurabilityOpts {
+        mem_budget: 0,
+        sync: SyncPolicy::Never,
+        ..DurabilityOpts::new(&dir)
+    };
+    let (mut t, _) = CohortTable::durable(&o).expect("open");
+    submit_all(&mut t, key, &cs, &reports[..31]);
+    assert_eq!(t.spilled_rounds(), 1, "budget 0 must spill the round");
+    let (c, m) = &reports[31];
+    let got = match t.submit(key, &cs, *c, m, 0, 1_000) {
+        Submit::Complete(r) => r,
+        other => panic!("expected Complete, got {other:?}"),
+    };
+    assert_eq!(bits(&got.estimate), bits(&want.estimate));
+    assert_eq!(t.store_errors(), 0);
+    // The run was dropped at close and the checkpoint emptied the log.
+    assert_eq!(t.wal_bytes(), Some(0));
+    let leftover = std::fs::read_dir(&dir)
+        .expect("read dir")
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().starts_with("run-"))
+        .count();
+    assert_eq!(leftover, 0, "no run files survive a closed round");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A spilled *partial* round (13 of 32 report) expires bit-identical to
+/// RAM, and a crash while spilled recovers from the WAL alone — the
+/// stale run files are garbage-collected, not trusted.
+#[test]
+fn spilled_partial_round_expires_and_recovers_bit_identical() {
+    let dir = temp_dir("spill-partial");
+    let cs = spec(32, 16);
+    let key = CohortKey { cohort: 9, round: 0 };
+    let clients: Vec<usize> = (0..13).map(|i| i * 2).collect();
+    let reports = inputs(&cs, &clients);
+    let want = plain_result(key, &cs, &reports);
+    assert!(want.partial);
+    let o = DurabilityOpts {
+        mem_budget: 0,
+        sync: SyncPolicy::Never,
+        ..DurabilityOpts::new(&dir)
+    };
+    // Leg 1: expire while spilled.
+    {
+        let (mut t, _) = CohortTable::durable(&o).expect("open");
+        submit_all(&mut t, key, &cs, &reports);
+        assert_eq!(t.spilled_rounds(), 1);
+        let closed = t.expire(1_000);
+        assert_eq!(closed.len(), 1);
+        assert_eq!(bits(&closed[0].1.estimate), bits(&want.estimate));
+        assert_eq!(t.store_errors(), 0);
+    }
+    // Leg 2: crash while spilled (drop without closing), then recover.
+    let dir2 = temp_dir("spill-crash");
+    let o2 = DurabilityOpts {
+        mem_budget: 0,
+        sync: SyncPolicy::Never,
+        ..DurabilityOpts::new(&dir2)
+    };
+    {
+        let (mut t, _) = CohortTable::durable(&o2).expect("open");
+        submit_all(&mut t, key, &cs, &reports);
+        assert_eq!(t.spilled_rounds(), 1, "crashing with a live run on disk");
+    }
+    let (mut t, rec) = CohortTable::durable(&o2).expect("recover");
+    assert!(rec.stale_runs_removed >= 1, "the crashed run file is GC'd");
+    assert_eq!(rec.reports_replayed, 13);
+    let closed = t.expire(1_000);
+    assert_eq!(closed.len(), 1);
+    assert_eq!(bits(&closed[0].1.estimate), bits(&want.estimate));
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
+// --- manifest, checkpoint, and GC ------------------------------------
+
+/// A corrupt manifest is rebuilt (flagged in the recovery report), and
+/// the WAL replay still recovers the round in full.
+#[test]
+fn corrupt_manifest_is_rebuilt_not_fatal() {
+    let dir = temp_dir("manifest");
+    let cs = spec(3, 16);
+    let key = CohortKey { cohort: 2, round: 0 };
+    let reports = inputs(&cs, &[0, 1, 2]);
+    let want = plain_result(key, &cs, &reports);
+    {
+        let (mut t, _) = CohortTable::durable(&opts(&dir, SyncPolicy::Never)).expect("open");
+        submit_all(&mut t, key, &cs, &reports[..2]);
+    }
+    std::fs::write(dir.join(MANIFEST_FILE), b"not a manifest").expect("clobber manifest");
+    let (mut t, rec) = CohortTable::durable(&opts(&dir, SyncPolicy::Never)).expect("recover");
+    assert!(rec.manifest_rebuilt);
+    assert_eq!(rec.reports_replayed, 2);
+    let (c, m) = &reports[2];
+    let got = match t.submit(key, &cs, *c, m, 0, 1_000) {
+        Submit::Complete(r) => r,
+        other => panic!("expected Complete, got {other:?}"),
+    };
+    assert_eq!(bits(&got.estimate), bits(&want.estimate));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A round that closed gracefully before the crash replays into the
+/// finished cache: late clients still get the original bits back. An
+/// unrelated open round blocks the checkpoint so the history survives.
+#[test]
+fn graceful_close_replays_and_serves_late_clients() {
+    let dir = temp_dir("late");
+    let cs = spec(2, 12);
+    let key_a = CohortKey { cohort: 1, round: 0 };
+    let key_b = CohortKey { cohort: 2, round: 0 };
+    let a = inputs(&cs, &[0, 1]);
+    let b = inputs(&cs, &[0]);
+    let res_a;
+    {
+        let (mut t, _) = CohortTable::durable(&opts(&dir, SyncPolicy::OnClose)).expect("open");
+        // B opens first and stays open, so A's close cannot checkpoint
+        // the log away.
+        submit_all(&mut t, key_b, &cs, &b);
+        submit_all(&mut t, key_a, &cs, &a[..1]);
+        res_a = match t.submit(key_a, &cs, a[1].0, &a[1].1, 0, 1_000) {
+            Submit::Complete(r) => r,
+            other => panic!("expected Complete, got {other:?}"),
+        };
+        assert!(t.wal_bytes().unwrap() > 0, "open round B blocks the checkpoint");
+    }
+    let (mut t, rec) = CohortTable::durable(&opts(&dir, SyncPolicy::OnClose)).expect("recover");
+    assert_eq!(rec.reports_replayed, 3);
+    assert_eq!(rec.rounds_reopened, 1);
+    assert_eq!(rec.warnings, 0);
+    // A late duplicate for the closed round gets the original bits.
+    match t.submit(key_a, &cs, 0, &a[0].1, 5, 1_000) {
+        Submit::Late(r) => assert_eq!(bits(&r.estimate), bits(&res_a.estimate)),
+        other => panic!("expected Late, got {other:?}"),
+    }
+    // Finishing B empties the table and checkpoints the log.
+    let b1 = inputs(&cs, &[0, 1]);
+    match t.submit(key_b, &cs, b1[1].0, &b1[1].1, 0, 1_000) {
+        Submit::Complete(_) => {}
+        other => panic!("expected Complete, got {other:?}"),
+    }
+    assert_eq!(t.wal_bytes(), Some(0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Once every round has closed, the checkpoint truncates the WAL: the
+/// next recovery replays nothing.
+#[test]
+fn checkpoint_truncates_wal_after_all_rounds_close() {
+    let dir = temp_dir("checkpoint");
+    let cs = spec(2, 8);
+    let key = CohortKey { cohort: 3, round: 0 };
+    let reports = inputs(&cs, &[0, 1]);
+    {
+        let (mut t, _) = CohortTable::durable(&opts(&dir, SyncPolicy::OnClose)).expect("open");
+        submit_all(&mut t, key, &cs, &reports[..1]);
+        match t.submit(key, &cs, reports[1].0, &reports[1].1, 0, 1_000) {
+            Submit::Complete(_) => {}
+            other => panic!("expected Complete, got {other:?}"),
+        }
+        assert_eq!(t.wal_bytes(), Some(0));
+    }
+    assert_eq!(std::fs::metadata(dir.join(WAL_FILE)).expect("stat").len(), 0);
+    let (_, rec) = CohortTable::durable(&opts(&dir, SyncPolicy::OnClose)).expect("recover");
+    assert_eq!(rec.reports_replayed, 0);
+    assert_eq!(rec.rounds_reopened, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Stray `run-*.dat` files from a dead process are deleted at open —
+/// recovery only ever trusts the WAL.
+#[test]
+fn stray_run_files_are_garbage_collected_at_open() {
+    let dir = temp_dir("stray");
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    std::fs::write(dir.join("run-99.dat"), b"stale garbage from a dead process").expect("write");
+    let (_, rec) = CohortTable::durable(&opts(&dir, SyncPolicy::Never)).expect("open");
+    assert_eq!(rec.stale_runs_removed, 1);
+    assert!(!dir.join("run-99.dat").exists(), "stray run deleted");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -8,11 +8,11 @@ use dme::coordinator::{
     RoundOutcome, StragglerPolicy, Topology,
 };
 use dme::linalg::{dist2, dist_inf, mean_vecs};
-use dme::net::faulty::FaultPlan;
+use dme::net::faulty::{FaultPlan, FaultyEndpoint};
 use dme::net::retry::RetrySchedule;
-use dme::net::TransportError;
+use dme::net::{TransportEndpoint, TransportError};
 use dme::quant::robust::{RobustAgreement, RobustOutcome};
-use dme::quant::{LatticeQuantizer, VectorCodec};
+use dme::quant::{LatticeQuantizer, Message, VectorCodec};
 use dme::rng::{hash2, Rng};
 use dme::sim::Cluster;
 use std::time::Duration;
@@ -507,4 +507,229 @@ fn straggler_policy_windows_exhaust_inside_the_deadline() {
     };
     let total: Duration = prod.windows(42).sum();
     assert!(total * 2 < DEADLINE);
+}
+
+// ---------------------------------------------------------------------------
+// Duplicate and Corrupt faults, end to end through the 17-byte envelope.
+// ---------------------------------------------------------------------------
+
+/// Duplicate faults are invisible end to end: every upload and broadcast
+/// is delivered twice, the leader's first-copy-per-sender dedup folds
+/// each report exactly once, and the stale second copies of round `r`
+/// are discarded by round `r+1`'s envelope round-tag check — so the
+/// estimate equals the fault-free full round's, bit for bit.
+#[test]
+fn duplicate_faults_are_deduplicated_end_to_end() {
+    let n = 6;
+    let d = 24;
+    let y = 1.0;
+    let seed = 29;
+    let spec = CodecSpec::Lq { q: 16 };
+    let inputs = spread_inputs(n, d, y, 91);
+    let mut clean = DmeBuilder::new(n, d).codec(spec).seed(seed).build();
+    let mut dup = DmeBuilder::new(n, d)
+        .codec(spec)
+        .seed(seed)
+        .fault_plan(FaultPlan {
+            seed: fault_seed(),
+            duplicate_rate: 1.0,
+            ..FaultPlan::default()
+        })
+        .build();
+    // k_min = n: losing even one report to a dedup bug fails loudly.
+    let policy = wide_window_policy(n);
+    for round in 0..3u64 {
+        let want = clean.round_with_y(&inputs, y);
+        let got = dup.round_partial_with_y(&inputs, y, &policy).expect("full quorum");
+        assert_eq!(got.estimate, want.estimate, "round {round}");
+        assert_eq!(got.participants, n, "round {round}: duplicates deduped, none lost");
+        assert!(got.dropped.is_empty(), "round {round}");
+        assert_eq!(got.retries_used, 0, "round {round}: duplicates arrive instantly");
+        assert!(got.agreement, "round {round}");
+    }
+}
+
+/// Corrupt faults degrade deterministically, replayed by a wire-exact
+/// oracle: each upload's flipped byte either lands in the codec payload
+/// (the envelope passes, the leader folds a wrong-but-valid lattice
+/// point) or in the 17-byte `[round][weight][dir]` trailer (the
+/// envelope check rejects the packet and the sender is reported
+/// dropped). The oracle taps the *actual* `FaultyEndpoint` for each
+/// `(machine, round)` cell to observe the corrupted bytes, replays the
+/// leader's documented accept rule, and must match the session's
+/// estimate, quorum size and dropped set exactly.
+#[test]
+fn corrupt_faults_fold_bounded_or_reject_detectably() {
+    let n = 6;
+    let d = 16;
+    let y = 1.0;
+    let seed = 19;
+    // Power-of-two q: any corrupted color bit pattern is still a valid
+    // lattice color, so payload corruption can never panic the decoder.
+    let spec = CodecSpec::Lq { q: 32 };
+    let plan = FaultPlan {
+        seed: fault_seed(),
+        corrupt_rate: 1.0,
+        ..FaultPlan::default()
+    };
+    let policy = StragglerPolicy::deterministic(DEADLINE, 1, 5);
+    let inputs = spread_inputs(n, d, y, 63);
+    let mut sess = DmeBuilder::new(n, d)
+        .codec(spec)
+        .seed(seed)
+        .fault_plan(plan.clone())
+        .build();
+    // Tap cluster: the same plan wrapped around throwaway endpoints
+    // reproduces each cell's exact corruption (it is a pure function of
+    // `(plan seed, machine, round)` and the payload length).
+    let tap_cluster = Cluster::new(n);
+    let mut taps: Vec<_> = tap_cluster
+        .endpoints()
+        .into_iter()
+        .map(|ep| FaultyEndpoint::with_plan(ep, plan.clone()))
+        .collect();
+
+    let mut saw_folded_corruption = false;
+    let mut saw_rejection = false;
+    for round in 0..4u64 {
+        let out = sess.round_partial_with_y(&inputs, y, &policy).expect("quorum of 1");
+        let leader = out.leader.expect("star rounds have a leader");
+        let shared = hash2(seed, round);
+        let mut codec = spec.build(d, y, seed, round);
+        let mut mu = vec![0.0; d];
+        let mut k = 0usize;
+        let mut dropped = Vec::new();
+        for v in 0..n {
+            if v == leader {
+                // The coordinator always holds its own raw report.
+                for (m, x) in mu.iter_mut().zip(&inputs[leader]) {
+                    *m += x;
+                }
+                k += 1;
+                continue;
+            }
+            // v's honest upload: encoded payload plus the documented
+            // `[round: u64 LE][weight = 1: u64 LE][dir = up]` trailer.
+            let mut enc = spec.build(d, y, seed, round);
+            let mut enc_rng = Rng::new(hash2(shared, v as u64 + 1));
+            let mut wire = enc.encode(&inputs[v], &mut enc_rng);
+            wire.bytes.extend_from_slice(&round.to_le_bytes());
+            wire.bytes.extend_from_slice(&1u64.to_le_bytes());
+            wire.bytes.push(0);
+            wire.bits += 8 * 17;
+            let clean = wire.clone();
+            taps[v].set_round(round);
+            taps[v].send(leader, wire).expect("tap send");
+            let mut got = taps[leader].recv().expect("tap recv").msg;
+            assert_eq!(got.bytes.len(), clean.bytes.len(), "corruption preserves length");
+            let len = got.bytes.len();
+            // The leader's accept rule, byte for byte: round tag must
+            // match, weight must be plausible, direction must be upward.
+            let dir = got.bytes[len - 1];
+            let weight = u64::from_le_bytes(got.bytes[len - 9..len - 1].try_into().unwrap());
+            let tag = u64::from_le_bytes(got.bytes[len - 17..len - 9].try_into().unwrap());
+            if tag == round && weight <= n as u64 && dir == 0 {
+                saw_folded_corruption |= got.bytes[..len - 17] != clean.bytes[..len - 17];
+                got.bytes.truncate(len - 17);
+                got.bits -= 8 * 17;
+                codec.decode_accumulate_into(&got, &inputs[leader], 1.0, &mut mu);
+                k += 1;
+            } else {
+                saw_rejection = true;
+                dropped.push(v);
+            }
+        }
+        let inv_k = 1.0 / (k.max(1) as f64);
+        for m in mu.iter_mut() {
+            *m *= inv_k;
+        }
+        let mut lead_rng = Rng::new(hash2(shared, leader as u64 + 1));
+        let msg = codec.encode(&mu, &mut lead_rng);
+        let want = codec.decode(&msg, &inputs[leader]);
+        assert_eq!(out.estimate, want, "round {round}: estimate diverged from wire oracle");
+        assert_eq!(out.participants, k, "round {round}");
+        assert_eq!(out.dropped, dropped, "round {round}");
+    }
+    // With a ~10-byte payload under a 17-byte trailer, 20 corrupted
+    // cells over 4 rounds hit both regions for any reasonable seed.
+    assert!(saw_folded_corruption, "no flip landed in a payload; weak fault seed?");
+    assert!(saw_rejection, "no flip landed in the trailer; weak fault seed?");
+}
+
+/// A flip in the trailer's final byte turns the direction marker odd —
+/// never again `up` — so the envelope must reject that upload and the
+/// leader must report its sender dropped. The plan seed is found by a
+/// bounded behavioral search over the real `FaultyEndpoint` (no
+/// knowledge of the corruption formula), so the pin survives any
+/// reimplementation of the byte choice.
+#[test]
+fn corrupted_direction_byte_is_rejected_and_sender_dropped() {
+    let n = 5;
+    let d = 16;
+    let y = 1.0;
+    let seed = 37;
+    let spec = CodecSpec::Lq { q: 32 };
+    let policy = StragglerPolicy::deterministic(DEADLINE, 1, 5);
+    let inputs = spread_inputs(n, d, y, 41);
+    // Learn round 0's leader from a clean probe session.
+    let leader = DmeBuilder::new(n, d)
+        .codec(spec)
+        .seed(seed)
+        .build()
+        .round_partial_with_y(&inputs, y, &policy)
+        .expect("clean round")
+        .leader
+        .expect("star rounds have a leader");
+    // Wire shape of a round-0 upload: encoded payload + 17-byte trailer.
+    let mut enc = spec.build(d, y, seed, 0);
+    let mut enc_rng = Rng::new(hash2(hash2(seed, 0), 1));
+    let probe_shape = enc.encode(&inputs[0], &mut enc_rng);
+    let wire_len = probe_shape.bytes.len() + 17;
+    let wire_bits = probe_shape.bits + 8 * 17;
+    // Search plan seeds until some machine's round-0 flip lands on the
+    // last wire byte — observed through the endpoint, not predicted.
+    let mut found = None;
+    'search: for cand in 0..5000u64 {
+        let plan = FaultPlan {
+            seed: cand,
+            corrupt_rate: 1.0,
+            ..FaultPlan::default()
+        };
+        let tap_cluster = Cluster::new(n);
+        let mut taps: Vec<_> = tap_cluster
+            .endpoints()
+            .into_iter()
+            .map(|ep| FaultyEndpoint::with_plan(ep, plan.clone()))
+            .collect();
+        for v in (0..n).filter(|&v| v != leader) {
+            let probe = Message {
+                bytes: vec![0u8; wire_len],
+                bits: wire_bits,
+            };
+            taps[v].send(leader, probe).expect("probe send");
+            let got = taps[leader].recv().expect("probe recv").msg;
+            if got.bytes[wire_len - 1] != 0 {
+                found = Some((cand, v));
+                break 'search;
+            }
+        }
+    }
+    let (cand, victim) = found.expect("no dir-byte flip below seed 5000 — span changed?");
+    let mut sess = DmeBuilder::new(n, d)
+        .codec(spec)
+        .seed(seed)
+        .fault_plan(FaultPlan {
+            seed: cand,
+            corrupt_rate: 1.0,
+            ..FaultPlan::default()
+        })
+        .build();
+    let out = sess.round_partial_with_y(&inputs, y, &policy).expect("quorum of 1");
+    assert_eq!(out.leader, Some(leader), "leader schedule is plan-independent");
+    assert!(
+        out.dropped.contains(&victim),
+        "machine {victim}'s dir-corrupted upload must be rejected (dropped: {:?})",
+        out.dropped
+    );
+    assert!(out.participants < n, "at least the victim is missing from the fold");
 }

@@ -15,8 +15,12 @@
 //!    cohort rounds, closing dropout cohorts at their deadline with the
 //!    renormalized partial mean and full cohorts with the k = n mean.
 
-use dme::coordinator::{star_round_over, vr_round_over, CodecSpec, DmeBuilder, StarRoundReport};
+use dme::coordinator::{
+    star_round_over, star_round_partial_over, vr_round_over, CodecSpec, DmeBuilder,
+    PartialRoundReport, StarRoundReport, StragglerPolicy,
+};
 use dme::net::cohort::{client_encoder_rng, cohort_codec, CohortSpec};
+use dme::net::faulty::{FaultPlan, FaultyTransport};
 use dme::net::service::{fetch_stats, report_round, serve, EstimateOut, ServeOpts};
 use dme::net::tcp::{LoopbackMesh, TcpOpts};
 use dme::net::wire::{read_response, write_request, Request, Response};
@@ -436,4 +440,92 @@ fn service_multiplexes_256_cohorts_with_deadline_dropout() {
     let reports = COHORTS + (COHORTS - COHORTS / DROPOUT_EVERY);
     assert_eq!(summary.traffic.recv_msgs, reports);
     assert_eq!(summary.traffic.sent_bits, reports * 64 * 8);
+}
+
+/// Drive `rounds` k-of-n partial star rounds over every endpoint of a
+/// fault-wrapped transport, one thread per machine. The wrapper's round
+/// counter is advanced before each call — exactly like the session's
+/// worker loop — so the plan's deterministic fault schedule applies
+/// identically on any transport.
+fn run_partial_rounds<T>(
+    transport: &mut FaultyTransport<T>,
+    spec: CodecSpec,
+    seed: u64,
+    y: f64,
+    rounds: u64,
+    inputs: &[Vec<f64>],
+) -> Vec<Vec<PartialRoundReport>>
+where
+    T: Transport,
+    T::Endpoint: 'static,
+{
+    let eps = transport.open().expect("open transport");
+    let handles: Vec<_> = eps
+        .into_iter()
+        .zip(inputs.to_vec())
+        .map(|(mut ep, x)| {
+            thread::spawn(move || {
+                let policy = StragglerPolicy::deterministic(Duration::from_millis(800), 1, 5);
+                (0..rounds)
+                    .map(|r| {
+                        ep.set_round(r);
+                        star_round_partial_over(&mut ep, spec, seed, r, y, &policy, &x)
+                            .expect("partial round")
+                    })
+                    .collect::<Vec<PartialRoundReport>>()
+            })
+        })
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| h.join().expect("machine thread"))
+        .collect()
+}
+
+/// Satellite: the same seeded fault plan wrapped around the loopback-TCP
+/// mesh and the in-process channels — k-of-n partial rounds with dropped
+/// reports yield identical leaders, quorum sizes, arrival records and
+/// renormalized estimates on both transports, and the leader's arrival
+/// record is exactly the plan's survivor set. (Retry tallies are the one
+/// field deliberately not compared: backoff windows expire on wall-clock
+/// time, which real sockets do not reproduce.)
+#[test]
+fn faulty_tcp_partial_round_matches_sim() {
+    let (n, d, seed, y) = (5, 24, 23, 1.0);
+    let spec = CodecSpec::Lq { q: 32 };
+    let rounds = 3u64;
+    let inputs = gen_inputs(n, d, 17);
+    let plan = FaultPlan::dropout(0xD10_0F, 0.4);
+
+    let mut sim = FaultyTransport::new(Cluster::new(n), plan.clone());
+    let sim_reports = run_partial_rounds(&mut sim, spec, seed, y, rounds, &inputs);
+
+    let mesh = LoopbackMesh::new(n, &TcpOpts::default()).expect("mesh up");
+    let mut tcp = FaultyTransport::new(mesh, plan.clone());
+    let tcp_reports = run_partial_rounds(&mut tcp, spec, seed, y, rounds, &inputs);
+
+    let mut saw_partial = false;
+    for r in 0..rounds as usize {
+        for m in 0..n {
+            let (a, b) = (&sim_reports[m][r], &tcp_reports[m][r]);
+            assert_eq!(a.leader, b.leader, "machine {m} round {r}: leader");
+            assert_eq!(a.k, b.k, "machine {m} round {r}: quorum size");
+            assert_eq!(a.arrived, b.arrived, "machine {m} round {r}: arrival record");
+            assert_eq!(a.output, b.output, "machine {m} round {r}: estimate");
+        }
+        // The leader's arrival record is exactly the plan's survivor set
+        // (its own report never crosses the wire, so it always counts).
+        let leader = sim_reports[0][r].leader;
+        let survivors = plan.survivors(n, r as u64);
+        let arrived = &sim_reports[leader][r].arrived;
+        assert_eq!(arrived.len(), n, "round {r}: leader arrival record");
+        for v in 0..n {
+            let want = v == leader || survivors.contains(&v);
+            assert_eq!(arrived[v], want, "round {r} machine {v} arrival");
+        }
+        let k_want = 1 + survivors.iter().filter(|&&v| v != leader).count();
+        assert_eq!(sim_reports[leader][r].k, k_want, "round {r}: quorum size");
+        saw_partial |= sim_reports[leader][r].k < n;
+    }
+    assert!(saw_partial, "rate-0.4 dropout never dropped a report; pick a new plan seed");
 }
