@@ -55,6 +55,14 @@
 //!    leader produces — demonstrated by dropping the table with a round
 //!    open and finishing that round after recovery. `dme serve
 //!    data_dir=DIR sync=always` wraps the same store.
+//! 13. Overload hardening & report screening (`net::screen`): the same
+//!    cohort table with the service edge's defenses on — every report
+//!    is validated before it touches the WAL or the fold (frame-size
+//!    coherence, NaN/Inf hygiene, the distance filter), a screened-out
+//!    report is *bit-invisible* to the estimate, and honest rounds are
+//!    bit-identical to `screen=off`. `dme serve screen=distance …`
+//!    wires the same knobs to TCP; `dme exp chaos` replays a seeded
+//!    hostile workload against it.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -527,4 +535,81 @@ fn main() {
         result == want
     );
     let _ = std::fs::remove_dir_all(&data_dir);
+    println!();
+
+    // ---------------------------------------------------------------
+    // 13. Overload hardening & report screening. The table from (12),
+    //    with the service edge's defenses on: `set_screen` validates
+    //    every report *before* it touches the WAL or the accumulator —
+    //    frame sizes must match the round's zero-probe, decoded values
+    //    must be finite, and the distance filter quarantines reports
+    //    implausibly far outside the cohort's promised ‖x‖∞ ≤ y/2 box.
+    //    A screened-out report is bit-invisible: the round's estimate
+    //    equals, bit for bit, a round the poison never reached. `dme
+    //    serve screen=distance rate_burst=… max_resident=…` wires the
+    //    same screen (plus connection caps and per-client rate limits)
+    //    to TCP, and `dme exp chaos` replays a seeded hostile workload
+    //    — duplicates, NaN poison, slow-loris, floods — against a live
+    //    server, asserting exact honest estimates throughout.
+    // ---------------------------------------------------------------
+    use dme::net::screen::ScreenMode;
+    use dme::quant::Message;
+    let hcs = CohortSpec {
+        n: 2,
+        d: 8,
+        spec: CodecSpec::Full,
+        y: 8.0,
+        seed: 7,
+    };
+    let hkey = CohortKey { cohort: 9, round: 0 };
+    let honest = |client: usize| {
+        let x = vec![1.0 + client as f64; hcs.d];
+        let mut enc = cohort_codec(&hcs, hkey.round);
+        let mut enc_rng = client_encoder_rng(hcs.seed, hkey.round, client);
+        enc.encode(&x, &mut enc_rng)
+    };
+    println!("== overload hardening & screening (net::screen) ==");
+    let mut hardened = CohortTable::new();
+    hardened.set_screen(ScreenMode::Distance);
+    assert!(matches!(
+        hardened.submit(hkey, &hcs, 0, &honest(0), 0, 60_000),
+        Submit::Pending { .. }
+    ));
+    // A NaN payload at the exact probe size: quarantined after decode,
+    // never folded, never WAL'd.
+    let mut bytes = Vec::new();
+    for _ in 0..hcs.d {
+        bytes.extend_from_slice(&f32::NAN.to_le_bytes());
+    }
+    let poison = Message { bits: 32 * hcs.d as u64, bytes };
+    match hardened.submit(hkey, &hcs, 1, &poison, 0, 60_000) {
+        Submit::Quarantined(why) => println!("NaN payload      : {why}"),
+        other => println!("unexpected: {other:?}"),
+    }
+    // A truncated frame: shed before any decode, with a retry hint.
+    let mut short = honest(1);
+    short.bytes.pop();
+    short.bits = 8 * short.bytes.len() as u64;
+    match hardened.submit(hkey, &hcs, 1, &short, 0, 60_000) {
+        Submit::Shed { reason, retry_after_ms } => {
+            println!("truncated frame  : shed ({reason}), retry after {retry_after_ms}ms")
+        }
+        other => println!("unexpected: {other:?}"),
+    }
+    // The honest completion is bit-identical to a never-attacked round.
+    let Submit::Complete(got) = hardened.submit(hkey, &hcs, 1, &honest(1), 0, 60_000) else {
+        panic!("the second honest report completes the round");
+    };
+    let mut clean = CohortTable::new();
+    clean.submit(hkey, &hcs, 0, &honest(0), 0, 60_000);
+    let Submit::Complete(expect) = clean.submit(hkey, &hcs, 1, &honest(1), 0, 60_000) else {
+        panic!("the clean round completes");
+    };
+    println!("attacked estimate == clean estimate, bit for bit: {}", got == expect);
+    let ledger = hardened.stats()[0].screen_stats();
+    println!(
+        "screen ledger    : accepted={} shed={} quarantined={}",
+        ledger.accepted, ledger.shed, ledger.quarantined
+    );
+    println!("(`dme exp chaos` runs the full hostile-workload version against a live serve)");
 }

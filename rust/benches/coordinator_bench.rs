@@ -39,6 +39,12 @@
 //! off / fsync-on-close / fsync-always and with a zero memory budget
 //! (every accumulator folded through an on-disk spill run), pricing
 //! crash durability against the in-RAM round.
+//!
+//! The `screen_bench` section prices report screening on the leader's
+//! submit path: the identical pre-encoded round folded with the screen
+//! off / basic / distance — bit-identical estimates (pinned by
+//! `tests/screening.rs`), so the row gaps are the probe check plus the
+//! screened decode-then-axpy fold vs the fused unscreened fold.
 
 use dme::bench::Bencher;
 use dme::coordinator::{
@@ -111,8 +117,63 @@ fn main() {
     encode_plane_bench(&mut b);
     batch_bench(&mut b);
     transport_bench(&mut b);
+    screen_bench(&mut b);
 
     b.write_json("coordinator_bench").expect("write bench json");
+}
+
+/// Screening overhead on the leader's submit path: the identical n
+/// pre-encoded reports folded through a fresh `CohortTable` with the
+/// report screen off / basic (frame + NaN hygiene) / distance (adds the
+/// ℓ∞ plausibility filter). Estimates are bit-identical across modes
+/// (pinned by `tests/screening.rs` and the cohort unit tests); the row
+/// gaps price the probe check and the screen's decode-then-axpy fold
+/// against the fused unscreened fold.
+fn screen_bench(b: &mut Bencher) {
+    use dme::net::cohort::{client_encoder_rng, cohort_codec, CohortKey, CohortTable, Submit};
+    use dme::net::screen::ScreenMode;
+    println!("# screen_bench — report screening overhead on the submit path\n");
+    let n = 8;
+    for d in [128usize, 4096] {
+        let cs = CohortSpec {
+            n,
+            d,
+            spec: CodecSpec::Lq { q: 16 },
+            y: 64.0,
+            seed: 41,
+        };
+        let key = CohortKey { cohort: 1, round: 0 };
+        let xs = inputs(n, d, 43);
+        let msgs: Vec<Message> = xs
+            .iter()
+            .enumerate()
+            .map(|(c, x)| {
+                let mut codec = cohort_codec(&cs, key.round);
+                let mut rng = client_encoder_rng(cs.seed, key.round, c);
+                codec.encode(x, &mut rng)
+            })
+            .collect();
+        for mode in [ScreenMode::Off, ScreenMode::Basic, ScreenMode::Distance] {
+            let tag = mode.label();
+            b.bench(
+                &format!("submit n={n} d={d} screen={tag}"),
+                Some((n * d) as u64),
+                || {
+                    let mut table = CohortTable::new();
+                    table.set_screen(mode);
+                    for (c, m) in msgs.iter().enumerate() {
+                        match table.submit(key, &cs, c, m, 0, 60_000) {
+                            Submit::Pending { .. } => {}
+                            Submit::Complete(r) => return r.estimate[0],
+                            other => panic!("unexpected {other:?}"),
+                        }
+                    }
+                    unreachable!("n reports complete the round")
+                },
+            );
+        }
+        println!();
+    }
 }
 
 /// A persistent cluster of worker threads, one per endpoint of a
@@ -293,6 +354,7 @@ fn service_round_rows(
         max_rounds: None,
         read_timeout: Duration::from_secs(60),
         durability,
+        ..ServeOpts::default()
     };
     let server = thread::spawn(move || serve(listener, opts));
     let cs = CohortSpec {

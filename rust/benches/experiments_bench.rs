@@ -22,6 +22,7 @@ fn main() {
         seeds: 1,
         out_dir: None,
         batch: 1,
+        addr: None,
     };
     for id in exp::ALL_IDS {
         b.bench(&format!("exp {id} (scale=0.08)"), None, || {

@@ -224,6 +224,7 @@ mod tests {
             seeds: 1,
             out_dir: None,
             batch: 1,
+            addr: None,
         };
         let a = ablation_a(&opts);
         // hull variance factor must be > 1 (worse than shared offset).
@@ -255,6 +256,7 @@ mod tests {
             seeds: 1,
             out_dir: None,
             batch: 1,
+            addr: None,
         };
         let b = ablation_b(&opts);
         let rates: Vec<f64> = b

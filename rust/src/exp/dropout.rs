@@ -168,6 +168,7 @@ mod tests {
             seeds: 1,
             out_dir: None,
             batch: 1,
+            addr: None,
         };
         let r = run(&opts);
         // One row per codec, one error column per rate.

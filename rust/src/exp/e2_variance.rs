@@ -136,6 +136,7 @@ mod tests {
             seeds: 2,
             out_dir: None,
             batch: 1,
+            addr: None,
         };
         let r = run(&opts);
         for line in r.lines().filter(|l| l.starts_with("shape check")) {

@@ -127,6 +127,7 @@ mod tests {
             seeds: 1,
             out_dir: None,
             batch: 1,
+            addr: None,
         };
         let r = run(&opts);
         assert!(r.contains("sublinear-LQ"));

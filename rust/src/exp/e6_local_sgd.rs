@@ -91,6 +91,7 @@ mod tests {
             seeds: 1,
             out_dir: None,
             batch: 1,
+            addr: None,
         };
         let r = run(&opts);
         for line in r.lines().filter(|l| l.starts_with("shape check")) {

@@ -126,6 +126,7 @@ mod tests {
             seeds: 1,
             out_dir: None,
             batch: 1,
+            addr: None,
         };
         let r = panel(&opts, "t", 2, false);
         let line = r

@@ -28,6 +28,7 @@ pub mod e6_local_sgd;
 pub mod e7_nn;
 pub mod e8_power;
 pub mod tradeoff;
+pub mod workload;
 
 use std::fmt::Write as _;
 
@@ -44,6 +45,10 @@ pub struct ExpOpts {
     /// the sequential trials, one worker crossing per group. 1 keeps the
     /// sequential loop.
     pub batch: usize,
+    /// Address of an already-running `dme serve` for service-driven
+    /// experiments (CLI `addr=`); `None` = self-host an in-process
+    /// server (the chaos harness configures its own hardened one).
+    pub addr: Option<String>,
 }
 
 impl Default for ExpOpts {
@@ -53,6 +58,7 @@ impl Default for ExpOpts {
             seeds: 5,
             out_dir: Some("results".to_string()),
             batch: 1,
+            addr: None,
         }
     }
 }
@@ -64,6 +70,7 @@ impl ExpOpts {
             seeds: 2,
             out_dir: None,
             batch: 1,
+            addr: None,
         }
     }
 
@@ -190,12 +197,14 @@ pub fn run(id: &str, opts: &ExpOpts) -> Option<String> {
         "tradeoff" | "9" => tradeoff::run(opts),
         "ablation" => ablation::run(opts),
         "dropout" => dropout::run(opts),
+        "chaos" => workload::run(opts),
         _ => return None,
     };
     let name = match id {
         "tradeoff" | "9" => "tradeoff".to_string(),
         "ablation" => "ablation".to_string(),
         "dropout" => "dropout".to_string(),
+        "chaos" => "chaos".to_string(),
         _ => format!("e{id}"),
     };
     save_report(opts, &name, &report);
@@ -203,7 +212,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Option<String> {
 }
 
 pub const ALL_IDS: &[&str] = &[
-    "1", "2", "3", "4", "5", "6", "7", "8", "tradeoff", "ablation", "dropout",
+    "1", "2", "3", "4", "5", "6", "7", "8", "tradeoff", "ablation", "dropout", "chaos",
 ];
 
 #[cfg(test)]

@@ -146,12 +146,14 @@ mod tests {
             seeds: 1,
             out_dir: None,
             batch: 1,
+            addr: None,
         });
         let batched = run(&ExpOpts {
             scale: 0.1,
             seeds: 1,
             out_dir: None,
             batch: 7,
+            addr: None,
         });
         let strip = |r: &str| -> Vec<String> {
             r.lines()
@@ -169,6 +171,7 @@ mod tests {
             seeds: 1,
             out_dir: None,
             batch: 1,
+            addr: None,
         };
         let r = run(&opts);
         let vars: Vec<f64> = r

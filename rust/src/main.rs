@@ -1,8 +1,10 @@
 //! `dme` — CLI for the lattice-DME reproduction.
 //!
 //! Subcommands:
-//!   dme exp <1..8|tradeoff|dropout|all> [scale=<f>] [seeds=<n>] [batch=<B>]
+//!   dme exp <1..8|tradeoff|dropout|chaos|all> [scale=<f>] [seeds=<n>] [batch=<B>] [addr=<H:P>]
 //!                                                             regenerate figures/tables
+//!                                                             (`chaos` = hostile-workload harness;
+//!                                                             addr= targets an external serve)
 //!   dme me  [n=..] [d=..] [q=..] [seed=..] [topology=..] [batch=<B>]
 //!                                                             MeanEstimation rounds
 //!   dme vr  [n=..] [d=..] [q=..] [seed=..] [topology=..] [robust=0|1] [batch=<B>]
@@ -11,6 +13,9 @@
 //!   dme info                                                  artifact + config summary
 //!   dme serve  [addr=127.0.0.1:0] [deadline_ms=2000] [rounds=<N>] [data_dir=<DIR>]
 //!              [mem_budget=<BYTES>] [sync=always|close|never]
+//!              [screen=off|basic|distance] [conn_deadline_ms=30000] [max_conns=..]
+//!              [max_open_rounds=..] [max_open_cohorts=..] [max_resident=<BYTES>]
+//!              [rate_burst=<f>] [rate_per_sec=<f>] [retry_after_ms=50]
 //!                                                             multi-cohort DME service
 //!   dme report addr=<host:port> [cohort=..] [round=..] [client=..] [n=..] [d=..]
 //!              [q=..] [y=..] [seed=..] [deadline_ms=..] [value=<f>]
@@ -27,7 +32,8 @@ use dme::config::RunConfig;
 use dme::coordinator::{CodecSpec, DmeBuilder, DmeSession, RoundOutcome, Topology};
 use dme::exp::{self, ExpOpts};
 use dme::net::cohort::{CohortSpec, CohortTable};
-use dme::net::service::{fetch_stats, report_round, serve_with_table, ServeOpts};
+use dme::net::screen::ScreenMode;
+use dme::net::service::{fetch_stats, report_round, serve_with_table, RateLimit, ServeOpts};
 use dme::rng::Rng;
 use dme::sim::summarize;
 use dme::store::{DurabilityOpts, SyncPolicy};
@@ -44,8 +50,10 @@ fn usage() -> ! {
         "usage: dme <command>\n\
          \n\
          commands:\n\
-         \x20 exp <1..8|tradeoff|dropout|all> [scale=1.0] [seeds=5] [batch=1]\n\
-         \x20                                                 regenerate paper figures/tables\n\
+         \x20 exp <1..8|tradeoff|dropout|chaos|all> [scale=1.0] [seeds=5] [batch=1] [addr=H:P]\n\
+         \x20                                                 regenerate paper figures/tables; `chaos` runs\n\
+         \x20                                                 the hostile-workload harness (addr= targets an\n\
+         \x20                                                 external ephemeral serve, else self-hosted)\n\
          \x20 me  [n=8] [d=64] [q=16] [seed=0] [topology=both] [batch=1]\n\
          \x20                                                 MeanEstimation rounds (star|tree|tree:<m>|both)\n\
          \x20 vr  [n=8] [d=64] [q=16] [seed=0] [topology=star] [robust=1] [batch=1]\n\
@@ -54,9 +62,14 @@ fn usage() -> ! {
          \x20 info                                            artifact + config summary\n\
          \x20 serve  [addr=127.0.0.1:0] [deadline_ms=2000] [rounds=N] [data_dir=DIR]\n\
          \x20        [mem_budget=BYTES] [sync=always|close|never]\n\
+         \x20        [screen=off|basic|distance] [conn_deadline_ms=30000] [max_conns=..]\n\
+         \x20        [max_open_rounds=..] [max_open_cohorts=..] [max_resident=BYTES]\n\
+         \x20        [rate_burst=f] [rate_per_sec=f] [retry_after_ms=50]\n\
          \x20                                                 multi-cohort DME service (prints 'listening on ADDR');\n\
          \x20                                                 data_dir= adds a WAL + crash recovery, mem_budget=\n\
-         \x20                                                 spills big rounds to disk, sync= picks fsync policy\n\
+         \x20                                                 spills big rounds to disk, sync= picks fsync policy;\n\
+         \x20                                                 screen= + the caps + rate_burst/rate_per_sec harden\n\
+         \x20                                                 the edge (see `dme::net` \"Overload & screening\")\n\
          \x20 report addr=H:P [cohort=0] [round=0] [client=0] [n=2] [d=16] [q=64] [y=8]\n\
          \x20        [seed=0] [deadline_ms=0] [value=f]       report one vector, await the round estimate\n\
          \x20 health addr=H:P                                 per-cohort service stats\n\
@@ -101,6 +114,12 @@ fn kv_parse<T: std::str::FromStr>(kv: &[(String, String)], key: &str, default: T
 fn cmd_serve(args: &[String]) {
     let kv = parse_kv(args);
     let addr = kv_get(&kv, "addr").unwrap_or("127.0.0.1:0");
+    // Overload hardening: every knob defaults to "off", so a bare
+    // `dme serve` is bit-identical to the pre-hardening service.
+    let rate_limit = kv_get(&kv, "rate_burst").map(|_| RateLimit {
+        burst: kv_parse(&kv, "rate_burst", 1.0f64),
+        per_sec: kv_parse(&kv, "rate_per_sec", 0.0f64),
+    });
     let opts = ServeOpts {
         default_deadline_ms: kv_parse(&kv, "deadline_ms", 2_000u64),
         max_rounds: kv_get(&kv, "rounds").map(|v| {
@@ -109,6 +128,14 @@ fn cmd_serve(args: &[String]) {
                 usage();
             })
         }),
+        conn_deadline: Duration::from_millis(kv_parse(&kv, "conn_deadline_ms", 30_000u64)),
+        screen: kv_parse(&kv, "screen", ScreenMode::Off),
+        max_conns: kv_parse(&kv, "max_conns", usize::MAX),
+        max_open_rounds: kv_parse(&kv, "max_open_rounds", usize::MAX),
+        max_open_cohorts: kv_parse(&kv, "max_open_cohorts", usize::MAX),
+        max_resident_bytes: kv_parse(&kv, "max_resident", usize::MAX),
+        rate_limit,
+        retry_after_ms: kv_parse(&kv, "retry_after_ms", 50u64),
         ..ServeOpts::default()
     };
     // Durability: `data_dir=` switches on the WAL'd store; `mem_budget=`
@@ -152,12 +179,15 @@ fn cmd_serve(args: &[String]) {
     let _ = std::io::stdout().flush();
     match serve_with_table(listener, opts, table) {
         Ok(s) => println!(
-            "served: rounds={} partial={} cohorts={} bits_in={} bits_out={}",
+            "served: rounds={} partial={} cohorts={} bits_in={} bits_out={} shed={} quarantined={} peak_resident={}",
             s.rounds_completed,
             s.rounds_partial,
             s.cohorts,
             s.traffic.recv_bits,
-            s.traffic.sent_bits
+            s.traffic.sent_bits,
+            s.shed,
+            s.quarantined,
+            s.peak_resident_bytes
         ),
         Err(e) => {
             eprintln!("serve failed: {e}");
@@ -228,14 +258,18 @@ fn cmd_health(args: &[String]) {
             println!("cohorts={}", stats.len());
             for s in stats {
                 println!(
-                    "cohort={} rounds={} partial={} reports={} bits_in={} bits_out={} open={}",
+                    "cohort={} rounds={} partial={} reports={} bits_in={} bits_out={} open={} \
+                     shed={} quarantined={} resident={}",
                     s.cohort,
                     s.rounds_completed,
                     s.rounds_partial,
                     s.reports,
                     s.bits_in,
                     s.bits_out,
-                    s.open_rounds
+                    s.open_rounds,
+                    s.shed,
+                    s.quarantined,
+                    s.resident_bytes
                 );
             }
         }
@@ -262,6 +296,7 @@ fn cmd_exp(args: &[String]) {
                 }
             },
             "out" => opts.out_dir = Some(v),
+            "addr" => opts.addr = Some(v),
             _ => {}
         }
     }

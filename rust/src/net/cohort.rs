@@ -49,6 +49,7 @@
 //! leader bit for bit. See the [`crate::store`] docs for the formats
 //! and the fsync policy trade-off.
 
+use super::screen::{screen_decoded, RoundScreen, ScreenMode, ScreenStats, DEFAULT_SLACK};
 use super::Traffic;
 use crate::coordinator::CodecSpec;
 use crate::quant::{Message, VectorCodec};
@@ -117,6 +118,15 @@ pub enum Submit {
     Late(RoundResult),
     /// The report was refused and not folded.
     Rejected(String),
+    /// Load-shed: refused by admission control (open-round/cohort caps,
+    /// resident-byte budget) or by the pre-decode frame screen. The
+    /// report never touched the WAL or the accumulator; the client
+    /// should back off `retry_after_ms` and retry.
+    Shed { reason: String, retry_after_ms: u64 },
+    /// Screened out after decoding: the values were implausible
+    /// (NaN/Inf, or past the distance filter). Not retryable — the
+    /// payload itself is bad. The accumulator and WAL are untouched.
+    Quarantined(String),
 }
 
 /// Live per-cohort accounting for the health endpoint, in the paper's
@@ -132,6 +142,27 @@ pub struct CohortStats {
     /// Leader→client bits: `64·d` per estimate recipient.
     pub bits_out: u64,
     pub open_rounds: u32,
+    /// Reports refused before decode: admission control, rate limiting
+    /// (attributed by the service via [`CohortTable::note_shed`]) or
+    /// the frame-coherence screen.
+    pub shed: u64,
+    /// Reports screened out after decoding (NaN/Inf or the distance
+    /// filter) — see [`super::screen`].
+    pub quarantined: u64,
+    /// Resident accumulator bytes currently held for this cohort's open
+    /// rounds (filled by [`CohortTable::stats`] at read time).
+    pub resident_bytes: u64,
+}
+
+impl CohortStats {
+    /// The screening view of this cohort's ledger.
+    pub fn screen_stats(&self) -> ScreenStats {
+        ScreenStats {
+            accepted: self.reports,
+            shed: self.shed,
+            quarantined: self.quarantined,
+        }
+    }
 }
 
 /// Where one open round's accumulator lives.
@@ -165,6 +196,9 @@ struct OpenRound {
     received: usize,
     /// Absolute deadline, caller's millisecond clock.
     deadline_ms: u64,
+    /// Cached size probe for screening (built lazily on the first
+    /// screened report; `None` while screening is off).
+    screen: Option<RoundScreen>,
 }
 
 impl OpenRound {
@@ -230,6 +264,23 @@ pub struct CohortTable {
     /// Storage failures survived so far (each also degraded gracefully:
     /// a rejected report, a kept-in-RAM round, or a lost close marker).
     store_errors: u64,
+    /// Report-screening level; `Off` keeps every path bit-identical to
+    /// the pre-screening table.
+    screen: ScreenMode,
+    /// ℓ∞ plausibility slack for [`ScreenMode::Distance`].
+    distance_slack: f64,
+    /// Admission cap: total open rounds across all cohorts.
+    max_open_rounds: usize,
+    /// Admission cap: distinct cohorts with at least one open round.
+    max_open_cohorts: usize,
+    /// Admission cap: resident accumulator bytes (a hard refusal, on
+    /// top of `mem_budget`'s soft spill threshold).
+    max_resident_bytes: usize,
+    /// Backoff hint carried in [`Submit::Shed`].
+    retry_after_ms: u64,
+    /// High-water mark of resident accumulator bytes (tracked only
+    /// while a resident cap or spill budget is configured).
+    peak_resident: usize,
 }
 
 impl Default for CohortTable {
@@ -244,6 +295,13 @@ impl Default for CohortTable {
             mem_budget: usize::MAX,
             replaying: false,
             store_errors: 0,
+            screen: ScreenMode::Off,
+            distance_slack: DEFAULT_SLACK,
+            max_open_rounds: usize::MAX,
+            max_open_cohorts: usize::MAX,
+            max_resident_bytes: usize::MAX,
+            retry_after_ms: 50,
+            peak_resident: 0,
         }
     }
 }
@@ -290,7 +348,17 @@ impl CohortTable {
                         Submit::Pending { .. } | Submit::Complete(_) => {
                             report.reports_replayed += 1;
                         }
-                        Submit::Late(_) | Submit::Rejected(_) => report.warnings += 1,
+                        // Shed/Quarantined cannot occur on replay (the
+                        // table's screen and caps are still at their
+                        // defaults while `durable` runs; the service
+                        // configures them afterwards, so the WAL holds
+                        // only previously-accepted reports) — counted
+                        // as warnings for the same reason duplicates
+                        // are.
+                        Submit::Late(_)
+                        | Submit::Rejected(_)
+                        | Submit::Shed { .. }
+                        | Submit::Quarantined(_) => report.warnings += 1,
                     }
                 }
                 WalRecord::Close {
@@ -343,6 +411,73 @@ impl CohortTable {
         self.store.as_ref().map(|s| s.wal_len())
     }
 
+    /// Set the report-screening level (default `Off` — bit-identical to
+    /// the unscreened table).
+    pub fn set_screen(&mut self, mode: ScreenMode) {
+        self.screen = mode;
+    }
+
+    pub fn screen_mode(&self) -> ScreenMode {
+        self.screen
+    }
+
+    /// Set the ℓ∞ plausibility slack for [`ScreenMode::Distance`]
+    /// (default [`DEFAULT_SLACK`]).
+    pub fn set_distance_slack(&mut self, slack: f64) {
+        self.distance_slack = slack;
+    }
+
+    /// Configure admission-control caps (each defaults to `usize::MAX`
+    /// = uncapped). A report that would *open* a round past a cap is
+    /// shed; reports into already-open rounds always pass admission.
+    pub fn set_limits(
+        &mut self,
+        max_open_rounds: usize,
+        max_open_cohorts: usize,
+        max_resident_bytes: usize,
+    ) {
+        self.max_open_rounds = max_open_rounds;
+        self.max_open_cohorts = max_open_cohorts;
+        self.max_resident_bytes = max_resident_bytes;
+    }
+
+    /// Backoff hint carried in [`Submit::Shed`] (default 50 ms).
+    pub fn set_retry_after(&mut self, ms: u64) {
+        self.retry_after_ms = ms;
+    }
+
+    /// Resident accumulator bytes across all open rounds, right now.
+    pub fn resident_bytes(&self) -> usize {
+        self.open.values().map(OpenRound::ram_bytes).sum()
+    }
+
+    /// High-water mark of [`Self::resident_bytes`], tracked while a
+    /// resident cap or spill budget is configured (0 otherwise — the
+    /// uncapped table does not pay the O(open) scan per report).
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.peak_resident
+    }
+
+    /// Attribute one service-edge shed (connection cap or rate limit)
+    /// to a cohort's ledger, so the health endpoint accounts for every
+    /// refused report regardless of which layer refused it.
+    pub fn note_shed(&mut self, cohort: u64) {
+        let s = self.stats.entry(cohort).or_insert_with(|| CohortStats {
+            cohort,
+            ..CohortStats::default()
+        });
+        s.shed += 1;
+    }
+
+    /// Record a shed against `cohort` and build the typed refusal.
+    fn shed(&mut self, cohort: u64, reason: String) -> Submit {
+        self.note_shed(cohort);
+        Submit::Shed {
+            reason,
+            retry_after_ms: self.retry_after_ms,
+        }
+    }
+
     /// Fold one client report into its round. `now_ms` is the caller's
     /// monotonic millisecond clock; a *new* round's deadline is set to
     /// `now_ms + deadline_ms` (the first report opens the round).
@@ -372,6 +507,42 @@ impl CohortTable {
                 "client id {client} out of range for cohort of n={}",
                 spec.n
             ));
+        }
+        // Admission control: a report that would *open* a new round must
+        // fit under the caps. Reports into already-open rounds always
+        // pass (they grow nothing but a Spilled round's pending queue,
+        // which `mem_budget` compaction bounds). Replay is exempt — the
+        // WAL's rounds were admitted by the previous process.
+        if !self.replaying && !self.open.contains_key(&key) {
+            if self.open.len() >= self.max_open_rounds {
+                return self.shed(
+                    key.cohort,
+                    format!("open-round cap {} reached", self.max_open_rounds),
+                );
+            }
+            if self.max_open_cohorts != usize::MAX
+                && !self.open.keys().any(|k| k.cohort == key.cohort)
+            {
+                let distinct: std::collections::HashSet<u64> =
+                    self.open.keys().map(|k| k.cohort).collect();
+                if distinct.len() >= self.max_open_cohorts {
+                    return self.shed(
+                        key.cohort,
+                        format!("open-cohort cap {} reached", self.max_open_cohorts),
+                    );
+                }
+            }
+            if self.max_resident_bytes != usize::MAX
+                && self.resident_bytes().saturating_add(16 * spec.d) > self.max_resident_bytes
+            {
+                return self.shed(
+                    key.cohort,
+                    format!(
+                        "resident accumulator budget {} bytes would be exceeded",
+                        self.max_resident_bytes
+                    ),
+                );
+            }
         }
         let round = match self.open.entry(key) {
             Entry::Occupied(e) => {
@@ -406,15 +577,61 @@ impl CohortTable {
                     got: vec![false; spec.n],
                     received: 0,
                     deadline_ms: now_ms.saturating_add(deadline_ms),
+                    screen: None,
                 })
             }
         };
         if round.got[client] {
             return Submit::Rejected(format!("duplicate report from client {client}"));
         }
+        // Screening: validate the report before it touches the WAL or
+        // the accumulator, so a screened-out report is bit-invisible.
+        // If this report just opened the round, roll the open back —
+        // hostile traffic must not pin empty rounds (every open round
+        // holds ≥ 1 folded report).
+        let mode = self.screen;
+        let mut screened: Option<Vec<f64>> = None;
+        if mode != ScreenMode::Off {
+            if round.screen.is_none() {
+                round.screen = Some(RoundScreen::probe(&round.spec, key.round));
+            }
+            let probe = round.screen.expect("probe just built");
+            if let Err(why) = probe.screen_frame(&round.spec, msg) {
+                let fresh = round.received == 0;
+                if fresh {
+                    self.open.remove(&key);
+                    let s = self.stats.get_mut(&key.cohort).expect("stats entry exists");
+                    s.open_rounds -= 1;
+                }
+                return self.shed(key.cohort, format!("screened: {why}"));
+            }
+            let mut z = vec![0.0; round.spec.d];
+            match &mut round.state {
+                AccState::Ram { codec, zeros, .. } => codec.decode_into(msg, zeros, &mut z),
+                AccState::Spilled { .. } => {
+                    let codec = cohort_codec(&round.spec, key.round);
+                    let zeros = vec![0.0; round.spec.d];
+                    codec.decode_into(msg, &zeros, &mut z);
+                }
+            }
+            if let Err(why) = screen_decoded(mode, round.spec.y, self.distance_slack, &z) {
+                let fresh = round.received == 0;
+                if fresh {
+                    self.open.remove(&key);
+                }
+                let s = self.stats.get_mut(&key.cohort).expect("stats entry exists");
+                if fresh {
+                    s.open_rounds -= 1;
+                }
+                s.quarantined += 1;
+                return Submit::Quarantined(format!("quarantined: {why}"));
+            }
+            screened = Some(z);
+        }
         // WAL hook: an accepted report hits the log *before* it is
         // folded, so a crash between here and delivery replays it.
         // Replay itself must not re-log what it is reading back.
+        // Screened-out reports return above and never reach the log.
         if !self.replaying {
             if let Some(store) = self.store.as_mut() {
                 if let Err(e) = store.log_report(key, spec, client as u32, deadline_ms, msg) {
@@ -424,9 +641,14 @@ impl CohortTable {
             }
         }
         match &mut round.state {
-            AccState::Ram { codec, zeros, acc } => {
-                codec.decode_accumulate_into(msg, zeros, 1.0, acc);
-            }
+            AccState::Ram { codec, zeros, acc } => match &screened {
+                // The `VectorCodec` contract pins the fused fold to be
+                // IEEE-op-for-op `decode_into` + `axpy`, and screening
+                // already paid for the decode — folding the scratch via
+                // `axpy` is bit-identical to the unscreened path.
+                Some(z) => crate::linalg::axpy(acc, 1.0, z),
+                None => codec.decode_accumulate_into(msg, zeros, 1.0, acc),
+            },
             AccState::Spilled {
                 pending,
                 pending_bytes,
@@ -446,6 +668,11 @@ impl CohortTable {
                 if pending.len() >= COMPACT_PENDING_MAX
                     || *pending_bytes >= COMPACT_PENDING_BYTES
         );
+        // High-water mark for the chaos harness's RSS proxy; only paid
+        // for when some resident bound is actually configured.
+        if self.max_resident_bytes != usize::MAX || self.mem_budget != usize::MAX {
+            self.peak_resident = self.peak_resident.max(self.resident_bytes());
+        }
         let stats = self.stats.get_mut(&key.cohort).expect("stats entry exists");
         stats.reports += 1;
         stats.bits_in += msg.bits;
@@ -495,9 +722,17 @@ impl CohortTable {
         }
     }
 
-    /// Per-cohort accounting, sorted by cohort id.
+    /// Per-cohort accounting, sorted by cohort id. `resident_bytes` is
+    /// filled from the open rounds at read time.
     pub fn stats(&self) -> Vec<CohortStats> {
+        let mut resident: HashMap<u64, u64> = HashMap::new();
+        for (k, r) in &self.open {
+            *resident.entry(k.cohort).or_insert(0) += r.ram_bytes() as u64;
+        }
         let mut v: Vec<CohortStats> = self.stats.values().copied().collect();
+        for s in v.iter_mut() {
+            s.resident_bytes = resident.get(&s.cohort).copied().unwrap_or(0);
+        }
         v.sort_unstable_by_key(|s| s.cohort);
         v
     }
@@ -882,5 +1117,167 @@ mod tests {
         let t = table.total_traffic();
         assert_eq!(t.recv_msgs, 64);
         assert!(t.recv_bits > 0);
+    }
+
+    #[test]
+    fn admission_caps_shed_new_rounds_but_not_open_ones() {
+        let cs = spec(2, 4);
+        let mut table = CohortTable::new();
+        table.set_limits(1, usize::MAX, usize::MAX);
+        table.set_retry_after(75);
+        let key_a = CohortKey { cohort: 1, round: 0 };
+        let key_b = CohortKey { cohort: 2, round: 0 };
+        let m = encode(&cs, 0, 0, &[1.0; 4]);
+        assert!(matches!(
+            table.submit(key_a, &cs, 0, &m, 0, 1000),
+            Submit::Pending { .. }
+        ));
+        // A second round would breach the cap: shed with the hint.
+        match table.submit(key_b, &cs, 0, &m, 0, 1000) {
+            Submit::Shed { retry_after_ms, .. } => assert_eq!(retry_after_ms, 75),
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        // The open round still accepts and completes.
+        let m1 = encode(&cs, 0, 1, &[3.0; 4]);
+        assert!(matches!(
+            table.submit(key_a, &cs, 1, &m1, 0, 1000),
+            Submit::Complete(_)
+        ));
+        let stats = table.stats();
+        let shed: u64 = stats.iter().map(|s| s.shed).sum();
+        assert_eq!(shed, 1);
+        assert_eq!(stats.iter().find(|s| s.cohort == 2).unwrap().shed, 1);
+    }
+
+    #[test]
+    fn resident_byte_cap_sheds_and_tracks_peak() {
+        let cs = spec(2, 8);
+        let mut table = CohortTable::new();
+        // One 16·8 = 128-byte accumulator fits; a second does not.
+        table.set_limits(usize::MAX, usize::MAX, 200);
+        let m = encode(&cs, 0, 0, &[1.0; 8]);
+        let key_a = CohortKey { cohort: 1, round: 0 };
+        let key_b = CohortKey { cohort: 1, round: 1 };
+        assert!(matches!(
+            table.submit(key_a, &cs, 0, &m, 0, 1000),
+            Submit::Pending { .. }
+        ));
+        assert!(matches!(
+            table.submit(key_b, &cs, 0, &m, 0, 1000),
+            Submit::Shed { .. }
+        ));
+        assert_eq!(table.resident_bytes(), 128);
+        assert_eq!(table.peak_resident_bytes(), 128);
+        assert_eq!(table.stats()[0].resident_bytes, 128);
+    }
+
+    #[test]
+    fn screened_honest_rounds_are_bit_identical_to_unscreened() {
+        let cs = spec(3, 16);
+        let key = CohortKey { cohort: 7, round: 2 };
+        let reports: Vec<(usize, Message)> = (0..3)
+            .map(|c| {
+                let x: Vec<f64> = (0..16).map(|i| ((c * 16 + i) as f64 * 0.21).sin() * 5.0).collect();
+                (c, encode(&cs, 2, c, &x))
+            })
+            .collect();
+        let mut run = |mode: ScreenMode| {
+            let mut table = CohortTable::new();
+            table.set_screen(mode);
+            let mut out = None;
+            for (c, m) in &reports {
+                match table.submit(key, &cs, *c, m, 0, 1000) {
+                    Submit::Pending { .. } => {}
+                    Submit::Complete(r) => out = Some(r),
+                    other => panic!("screen={mode:?}: unexpected {other:?}"),
+                }
+            }
+            out.expect("round completed")
+        };
+        let off = run(ScreenMode::Off);
+        let basic = run(ScreenMode::Basic);
+        let distance = run(ScreenMode::Distance);
+        // Bit-identical estimates — the screened fold is the same IEEE
+        // op sequence as the fused one.
+        assert_eq!(off, basic);
+        assert_eq!(off, distance);
+    }
+
+    #[test]
+    fn quarantined_report_leaves_round_bit_identical_to_never_arrived() {
+        let cs = CohortSpec {
+            n: 2,
+            d: 4,
+            spec: CodecSpec::Full,
+            y: 8.0,
+            seed: 3,
+        };
+        let key = CohortKey { cohort: 4, round: 0 };
+        let honest: Vec<(usize, Message)> = (0..2)
+            .map(|c| (c, encode(&cs, 0, c, &[1.5 + c as f64; 4])))
+            .collect();
+        // Hostile payloads at the exact probe size: raw f32 fields.
+        let craft = |v: f32| {
+            let mut bytes = Vec::new();
+            for _ in 0..cs.d {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            Message { bits: 32 * cs.d as u64, bytes }
+        };
+        let mut table = CohortTable::new();
+        table.set_screen(ScreenMode::Distance);
+        assert!(matches!(
+            table.submit(key, &cs, 0, &honest[0].1, 0, 1000),
+            Submit::Pending { .. }
+        ));
+        // NaN payload from client 1: quarantined, round untouched.
+        assert!(matches!(
+            table.submit(key, &cs, 1, &craft(f32::NAN), 0, 1000),
+            Submit::Quarantined(_)
+        ));
+        // Far-but-finite payload: quarantined by the distance filter.
+        assert!(matches!(
+            table.submit(key, &cs, 1, &craft(1.0e30), 0, 1000),
+            Submit::Quarantined(_)
+        ));
+        // The honest completion still matches the two-honest reference.
+        let result = match table.submit(key, &cs, 1, &honest[1].1, 0, 1000) {
+            Submit::Complete(r) => r,
+            other => panic!("expected Complete, got {other:?}"),
+        };
+        assert_eq!(result.estimate, reference_mean(&cs, 0, &honest));
+        let s = table.stats()[0];
+        assert_eq!((s.reports, s.quarantined, s.shed), (2, 2, 0));
+        assert_eq!(s.screen_stats().quarantined, 2);
+    }
+
+    #[test]
+    fn frame_screen_sheds_truncated_reports_and_rolls_back_fresh_rounds() {
+        let cs = spec(2, 8);
+        let key = CohortKey { cohort: 9, round: 1 };
+        let mut table = CohortTable::new();
+        table.set_screen(ScreenMode::Basic);
+        let mut bad = encode(&cs, 1, 0, &[2.0; 8]);
+        bad.bytes.pop();
+        bad.bits = 8 * bad.bytes.len() as u64;
+        // A shed first report must not leave an empty open round behind.
+        assert!(matches!(
+            table.submit(key, &cs, 0, &bad, 0, 1000),
+            Submit::Shed { .. }
+        ));
+        assert_eq!(table.open_rounds(), 0);
+        assert_eq!(table.stats()[0].open_rounds, 0);
+        assert_eq!(table.stats()[0].shed, 1);
+        // Honest traffic afterwards is unaffected.
+        let m0 = encode(&cs, 1, 0, &[2.0; 8]);
+        let m1 = encode(&cs, 1, 1, &[4.0; 8]);
+        assert!(matches!(
+            table.submit(key, &cs, 0, &m0, 0, 1000),
+            Submit::Pending { .. }
+        ));
+        assert!(matches!(
+            table.submit(key, &cs, 1, &m1, 0, 1000),
+            Submit::Complete(_)
+        ));
     }
 }

@@ -86,6 +86,11 @@ pub enum TransportError {
     /// report, stateful codec, …) — a protocol-level rejection carried
     /// back over a healthy connection.
     Rejected(String),
+    /// The service shed this request under overload (admission caps or
+    /// rate limiting). Retryable by construction: the server suggests a
+    /// backoff and [`super::service::report_round`] honors it through
+    /// the shared [`super::retry::RetrySchedule`].
+    Overloaded { retry_after_ms: u64 },
     /// A k-of-n round closed at its deadline with fewer reports than
     /// the straggler policy's minimum quorum. Recoverable: the session
     /// stays usable and the next round may succeed.
@@ -123,6 +128,9 @@ impl fmt::Display for TransportError {
             TransportError::Handshake(why) => write!(f, "mesh handshake failed: {why}"),
             TransportError::BadFrame(fe) => write!(f, "bad frame: {fe}"),
             TransportError::Rejected(why) => write!(f, "service rejected the request: {why}"),
+            TransportError::Overloaded { retry_after_ms } => {
+                write!(f, "service overloaded, retry after {retry_after_ms}ms")
+            }
             TransportError::QuorumFailed { got, need } => {
                 write!(f, "round closed with {got} of the {need} reports its quorum requires")
             }

@@ -99,6 +99,52 @@
 //! [`crate::store::SyncPolicy`]. What the policy prices is crash-window
 //! risk against fsync stalls on the serving path; the bit-cost ledger
 //! next to the paper's model lives in the [`crate::store`] module docs.
+//!
+//! # Overload & screening
+//!
+//! The layers above assume every byte arriving at the service edge is
+//! honest. A leader for "millions of users" cannot: the edge must
+//! survive floods, drip-feeds, and payloads crafted to poison the fold.
+//! [`service`] and [`cohort`] harden it in two tiers, both default-off
+//! (the unconfigured service is bit-identical to the pre-hardening one):
+//!
+//! **Admission control and backpressure** bound what load is accepted
+//! at all. [`service::ServeOpts`] caps concurrent connections
+//! (`max_conns`), open rounds and distinct open cohorts
+//! (`max_open_rounds` / `max_open_cohorts`), resident accumulator bytes
+//! (`max_resident_bytes` — a hard refusal on top of the durability
+//! layer's soft `mem_budget` spill), and per-reporter report rate
+//! ([`service::RateLimit`], a token bucket keyed by `(cohort, client)`).
+//! Excess load is *shed*, not queued: the server answers a typed
+//! `Busy { retry_after_ms }` ([`TransportError::Overloaded`] on the
+//! client) and stays responsive for admitted rounds, and the client
+//! entry points honor the hint through the shared
+//! [`retry::RetrySchedule`] backoff. A per-connection lifetime deadline
+//! (`conn_deadline`, on top of the per-read `read_timeout`) defeats
+//! slow-loris clients that keep individual reads alive forever.
+//!
+//! **Report screening** ([`screen`]) validates what admission lets in,
+//! *before* the WAL append and the fold — a screened-out report is
+//! bit-invisible to estimates, meters and the durability log. The
+//! `screen=off|basic|distance` knob selects: size coherence against a
+//! per-round zero-vector probe (every stateless codec's message size is
+//! input-independent, so a mismatch proves malformation — and keeps
+//! truncated bit streams away from the panic-on-overrun bit readers),
+//! float hygiene on the decoded vector (NaN/Inf never reach an
+//! accumulator), and the paper-grounded distance filter. The last is
+//! the point where the paper's geometry pays off operationally: because
+//! the error bounds depend on the *distance between inputs* rather than
+//! their norms (PAPER.md, Theorem 1.1 vs. the norm-bounded baselines),
+//! the cohort's `y` — an ℓ∞ bound on client vectors, decode reference
+//! zero — makes any decoded report with `‖z‖∞ > slack · y` implausible
+//! for *every* in-spec input, independent of what the other clients
+//! sent. Such reports are *quarantined*: dropped from the fold but
+//! tallied per cohort ([`cohort::CohortStats`]'s `shed`/`quarantined`,
+//! surfaced by the health endpoint) so the operator sees the attack
+//! instead of a silently-corrupted mean. The seeded chaos harness
+//! (`dme exp chaos`, `crate::exp::workload`) drives all of the above
+//! against a live server and asserts honest rounds still close with
+//! exact renormalized means.
 
 use crate::quant::Message;
 use std::collections::VecDeque;
@@ -110,6 +156,7 @@ pub mod error;
 pub mod faulty;
 pub mod frame;
 pub mod retry;
+pub mod screen;
 pub mod service;
 pub mod tcp;
 pub mod wire;

@@ -1,0 +1,297 @@
+//! Report screening — the validation pass between the wire and the fold.
+//!
+//! The service edge cannot trust a report just because it parsed: a
+//! frame of the right shape can still carry a payload that panics the
+//! decoder (short bit streams — [`crate::quant::bits::BitReader`] reads
+//! past the end of a truncated message), poisons the accumulator
+//! (NaN/Inf smuggled through a codec's float header), or drags the
+//! estimate arbitrarily far off (a huge-norm payload in an otherwise
+//! well-formed message). Screening runs *before* the report touches the
+//! WAL or the accumulator, so a screened-out report is bit-invisible:
+//! the fold, the durability log and the delivered estimates are
+//! identical to a run where the report never arrived.
+//!
+//! Three levels, selected by [`ScreenMode`]:
+//!
+//! - **Off** — today's behavior, bit for bit. No probe is built, no
+//!   extra decode happens, accepted reports take the fused
+//!   `decode_accumulate_into` path unchanged.
+//! - **Basic** — spec hygiene (`y` finite and positive) plus *size
+//!   coherence*: the expected `(bits, bytes)` of a well-formed message
+//!   is learned once per round by encoding the zero vector
+//!   ([`RoundScreen::probe`] — every stateless codec's message size is a
+//!   pure function of `(spec, round)`, independent of the input), and
+//!   any mismatch is shed before the decoder ever sees the bytes. This
+//!   is the panic guard: the bit-packed decoders assume length-checked
+//!   messages. Accepted reports are then decoded to a scratch buffer and
+//!   checked for NaN/Inf (float hygiene) before folding.
+//! - **Distance** — Basic plus the paper-grounded distance filter. The
+//!   paper's error bounds depend on the *distance between inputs*, not
+//!   their norms; under the cohort convention the decode reference is
+//!   the zero vector and `spec.y` is an ℓ∞ bound on the client vectors
+//!   themselves, so an honest decoded report satisfies
+//!   `‖z‖∞ ≤ y + (quantization radius)`. A decoded vector with
+//!   `‖z‖∞ > slack · y` (slack defaults to [`DEFAULT_SLACK`], comfortably
+//!   above any codec's radius at sane `q`) is implausible for *any*
+//!   in-spec input and is quarantined rather than folded.
+//!
+//! Screening verdicts are typed ([`Verdict`]): `Shed` for reports
+//! refused before decode (malformed frames — the sender is broken or
+//! hostile), `Quarantine` for reports that decoded to implausible
+//! values (corruption or an adversary). Both leave the round's
+//! accumulator and WAL untouched; per-cohort tallies surface through
+//! the health endpoint ([`super::cohort::CohortStats`]).
+//!
+//! Bit-identity of the screened accept path: the [`crate::quant::VectorCodec`]
+//! contract pins `decode_accumulate_into(msg, ref, w, acc)` to be
+//! IEEE-op-for-op identical to `decode_into(msg, ref, z)` followed by
+//! `axpy(acc, w, z)`. Screening decodes to `z` anyway (it has to look at
+//! the values), so folding the already-decoded scratch via `axpy` gives
+//! accumulators — and therefore estimates — bit-identical to the
+//! unscreened fused path.
+
+use super::cohort::{cohort_codec, CohortSpec};
+use crate::quant::Message;
+use crate::rng::{hash2, Rng};
+
+/// Default ℓ∞ plausibility slack for [`ScreenMode::Distance`]:
+/// quarantine decoded reports with `‖z‖∞ > slack · y`. An honest decode
+/// is within the codec's quantization radius of an input bounded by `y`,
+/// so 2 leaves generous headroom at any sane `q`.
+pub const DEFAULT_SLACK: f64 = 2.0;
+
+/// How aggressively the service screens reports before folding them.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ScreenMode {
+    /// No screening — bit-identical to the pre-screening service.
+    #[default]
+    Off,
+    /// Frame/size coherence + float hygiene on the decoded vector.
+    Basic,
+    /// `Basic` + the distance filter (`‖z‖∞ ≤ slack · y`).
+    Distance,
+}
+
+impl std::str::FromStr for ScreenMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "off" => Ok(ScreenMode::Off),
+            "basic" => Ok(ScreenMode::Basic),
+            "distance" => Ok(ScreenMode::Distance),
+            other => Err(format!("unknown screen mode '{other}' (off|basic|distance)")),
+        }
+    }
+}
+
+impl ScreenMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScreenMode::Off => "off",
+            ScreenMode::Basic => "basic",
+            ScreenMode::Distance => "distance",
+        }
+    }
+}
+
+/// Per-cohort screening tallies, derived from
+/// [`super::cohort::CohortStats`] (`accepted` = folded reports).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScreenStats {
+    pub accepted: u64,
+    /// Refused before decode (size/coherence) or by admission control.
+    pub shed: u64,
+    /// Decoded but implausible (NaN/Inf or distance filter).
+    pub quarantined: u64,
+}
+
+/// A screening verdict for one report.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Accept,
+    /// Refused before decode: the message cannot be a well-formed
+    /// encoding under this round's codec.
+    Shed(String),
+    /// Decoded, but the values are implausible for any in-spec input.
+    Quarantine(String),
+}
+
+/// The per-round screening state: the exact `(bits, bytes)` every
+/// well-formed message for this round must have.
+///
+/// Every stateless codec in the crate emits fixed-size messages — a
+/// byte-aligned float header plus `d` (or `reps`) fixed-width fields —
+/// so one probe encode of the zero vector at round open pins the size
+/// for the whole round. The probe draws from its own RNG stream
+/// (`hash2(round_seed, 0)`; clients use `hash2(round_seed, c + 1)`), so
+/// it perturbs nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundScreen {
+    pub expect_bits: u64,
+    pub expect_len: usize,
+}
+
+impl RoundScreen {
+    /// Learn the expected message size for `(spec, round)` by encoding
+    /// the zero vector under the round's shared codec.
+    pub fn probe(spec: &CohortSpec, round: u64) -> RoundScreen {
+        let mut codec = cohort_codec(spec, round);
+        let zeros = vec![0.0; spec.d];
+        let mut rng = Rng::new(hash2(hash2(spec.seed, round), 0));
+        let msg = codec.encode(&zeros, &mut rng);
+        RoundScreen {
+            expect_bits: msg.bits,
+            expect_len: msg.bytes.len(),
+        }
+    }
+
+    /// Frame-level sanity: spec hygiene plus size coherence against the
+    /// probe. Runs before any decode — this is what keeps truncated or
+    /// padded bit streams away from the panic-on-overrun bit readers.
+    pub fn screen_frame(&self, spec: &CohortSpec, msg: &Message) -> Result<(), String> {
+        if !spec.y.is_finite() || spec.y <= 0.0 {
+            return Err(format!("cohort y bound {} is not a positive finite float", spec.y));
+        }
+        if msg.bits > 8 * msg.bytes.len() as u64 {
+            return Err(format!(
+                "metered bits {} exceed payload capacity of {} bytes",
+                msg.bits,
+                msg.bytes.len()
+            ));
+        }
+        if msg.bits != self.expect_bits || msg.bytes.len() != self.expect_len {
+            return Err(format!(
+                "message size ({} bits, {} bytes) does not match the round codec's ({} bits, {} bytes)",
+                msg.bits,
+                msg.bytes.len(),
+                self.expect_bits,
+                self.expect_len
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Value-level screen over a decoded report: float hygiene always, the
+/// ℓ∞ distance filter under [`ScreenMode::Distance`].
+pub fn screen_decoded(mode: ScreenMode, y: f64, slack: f64, z: &[f64]) -> Result<(), String> {
+    let mut max_abs = 0.0f64;
+    for &v in z {
+        if !v.is_finite() {
+            return Err("decoded report contains a non-finite value".to_string());
+        }
+        max_abs = max_abs.max(v.abs());
+    }
+    if mode == ScreenMode::Distance && max_abs > slack * y {
+        return Err(format!(
+            "decoded report has ℓ∞ norm {max_abs:.3e}, implausibly far from the \
+             shared estimate for a cohort with y={y} (limit {:.3e})",
+            slack * y
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CodecSpec;
+    use crate::net::cohort::client_encoder_rng;
+
+    fn spec(codec: CodecSpec) -> CohortSpec {
+        CohortSpec {
+            n: 2,
+            d: 16,
+            spec: codec,
+            y: 8.0,
+            seed: 5,
+        }
+    }
+
+    /// Every stateless codec's message size must be input-independent —
+    /// the invariant the probe-equality screen rests on.
+    #[test]
+    fn probe_size_matches_honest_messages_for_every_stateless_codec() {
+        let codecs = [
+            CodecSpec::Lq { q: 64 },
+            CodecSpec::Rlq { q: 16 },
+            CodecSpec::LqHull { q: 8 },
+            CodecSpec::D4 { q: 16 },
+            CodecSpec::QsgdL2 { q: 16 },
+            CodecSpec::QsgdLinf { q: 16 },
+            CodecSpec::Hadamard { q: 16 },
+            CodecSpec::Vqsgd { reps: 6 },
+            CodecSpec::TernGrad,
+            CodecSpec::Full,
+        ];
+        for c in codecs {
+            let cs = spec(c);
+            let probe = RoundScreen::probe(&cs, 3);
+            for client in 0..2usize {
+                let x: Vec<f64> = (0..cs.d)
+                    .map(|i| ((client + 1) as f64) * ((i as f64 * 0.37).sin() * 6.0))
+                    .collect();
+                let mut codec = cohort_codec(&cs, 3);
+                let mut rng = client_encoder_rng(cs.seed, 3, client);
+                let msg = codec.encode(&x, &mut rng);
+                assert_eq!(
+                    (msg.bits, msg.bytes.len()),
+                    (probe.expect_bits, probe.expect_len),
+                    "{}: honest message size must equal the zero-probe size",
+                    cs.spec.label()
+                );
+                assert!(probe.screen_frame(&cs, &msg).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn frame_screen_sheds_wrong_sizes_and_bad_specs() {
+        let cs = spec(CodecSpec::Lq { q: 64 });
+        let probe = RoundScreen::probe(&cs, 0);
+        let mut codec = cohort_codec(&cs, 0);
+        let mut rng = client_encoder_rng(cs.seed, 0, 0);
+        let mut msg = codec.encode(&vec![1.0; cs.d], &mut rng);
+        // Truncated payload (bits adjusted so the Message contract holds).
+        msg.bytes.pop();
+        msg.bits = 8 * msg.bytes.len() as u64;
+        assert!(probe.screen_frame(&cs, &msg).is_err());
+        // bits > 8·len violates the Message contract outright.
+        let bad = Message {
+            bytes: vec![0u8; probe.expect_len],
+            bits: 8 * probe.expect_len as u64 + 1,
+        };
+        assert!(probe.screen_frame(&cs, &bad).is_err());
+        // Non-finite y is refused before any decode.
+        let ok = Message {
+            bytes: vec![0u8; probe.expect_len],
+            bits: probe.expect_bits,
+        };
+        let bad_spec = CohortSpec { y: f64::NAN, ..cs };
+        assert!(probe.screen_frame(&bad_spec, &ok).is_err());
+    }
+
+    #[test]
+    fn decoded_screen_catches_nan_and_distance() {
+        let z_ok = vec![1.0, -7.5, 0.0];
+        assert!(screen_decoded(ScreenMode::Basic, 8.0, DEFAULT_SLACK, &z_ok).is_ok());
+        assert!(screen_decoded(ScreenMode::Distance, 8.0, DEFAULT_SLACK, &z_ok).is_ok());
+        let z_nan = vec![1.0, f64::NAN];
+        assert!(screen_decoded(ScreenMode::Basic, 8.0, DEFAULT_SLACK, &z_nan).is_err());
+        let z_inf = vec![f64::INFINITY];
+        assert!(screen_decoded(ScreenMode::Basic, 8.0, DEFAULT_SLACK, &z_inf).is_err());
+        // Far-but-finite passes Basic, is quarantined by Distance.
+        let z_far = vec![1.0e6];
+        assert!(screen_decoded(ScreenMode::Basic, 8.0, DEFAULT_SLACK, &z_far).is_ok());
+        assert!(screen_decoded(ScreenMode::Distance, 8.0, DEFAULT_SLACK, &z_far).is_err());
+    }
+
+    #[test]
+    fn screen_mode_parses() {
+        assert_eq!("off".parse::<ScreenMode>().unwrap(), ScreenMode::Off);
+        assert_eq!("basic".parse::<ScreenMode>().unwrap(), ScreenMode::Basic);
+        assert_eq!("distance".parse::<ScreenMode>().unwrap(), ScreenMode::Distance);
+        assert!("paranoid".parse::<ScreenMode>().is_err());
+    }
+}

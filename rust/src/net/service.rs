@@ -26,24 +26,49 @@
 //! module docs): each accepted report charges its metered `msg.bits`
 //! inbound, each estimate delivery charges `64·d` outbound, framing is
 //! excluded.
+//!
+//! The service edge is overload-hardened (see the `net` module docs'
+//! "Overload & screening" section): connection, round, cohort and
+//! resident-byte caps plus per-reporter token-bucket rate limiting shed
+//! excess load with a typed [`Response::Busy`] carrying a backoff hint,
+//! a per-connection lifetime deadline defeats drip-feeding (slow-loris)
+//! clients, and reports pass the [`super::screen`] validation pass
+//! before they touch the WAL or an accumulator. The clients honor
+//! `Busy` through the shared [`super::retry::RetrySchedule`].
 
 use super::cohort::{
     client_encoder_rng, cohort_codec, CohortKey, CohortSpec, CohortStats, CohortTable, RoundResult,
     Submit,
 };
 use super::error::TransportError;
-use crate::store::DurabilityOpts;
+use super::retry::RetrySchedule;
+use super::screen::{ScreenMode, DEFAULT_SLACK};
 use super::wire::{read_request, read_response, write_request, write_response, Request, Response};
 use super::Traffic;
+use crate::rng::hash2;
+use crate::store::DurabilityOpts;
 use std::collections::HashMap;
-use std::io::Write;
+use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
+/// Per-reporter token-bucket rate limit, keyed by `(cohort, client)`.
+/// A reporter may burst `burst` reports, then refills at `per_sec`
+/// tokens per second; a report with no token is shed with
+/// [`Response::Busy`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RateLimit {
+    pub burst: f64,
+    pub per_sec: f64,
+}
+
 /// Server knobs. `Default` is sized for tests and the CI smoke run;
 /// long-running deployments mostly raise `max_rounds` to `None`.
+/// Every overload knob defaults to "unbounded / off", keeping the
+/// default service bit-identical to the pre-hardening one.
 #[derive(Clone, Debug)]
 pub struct ServeOpts {
     /// Round deadline applied when a report carries `deadline_ms == 0`.
@@ -51,14 +76,36 @@ pub struct ServeOpts {
     /// Exit the accept loop after this many completed rounds
     /// (`None` = run until a shutdown request).
     pub max_rounds: Option<u64>,
-    /// Per-connection read timeout — a silent client cannot park a
-    /// handler thread forever.
+    /// Per-connection *single-read* timeout — a silent client cannot
+    /// park a handler thread forever on one read.
     pub read_timeout: Duration,
+    /// Per-connection *total-lifetime* deadline for reading a request —
+    /// a drip-feeding (slow-loris) client that keeps each individual
+    /// read alive is still cut off once its connection is this old.
+    pub conn_deadline: Duration,
     /// When set, the table is durable: reports are WAL'd before the
     /// fold, accumulators spill past the memory budget, and [`serve`]
     /// recovers open rounds from the data dir on startup (see
     /// [`crate::store`]).
     pub durability: Option<DurabilityOpts>,
+    /// Report-screening level for the table (see [`super::screen`]).
+    pub screen: ScreenMode,
+    /// ℓ∞ plausibility slack for [`ScreenMode::Distance`].
+    pub distance_slack: f64,
+    /// Admission cap: concurrent connection-handler threads. Excess
+    /// connections are answered [`Response::Busy`] from the accept loop.
+    pub max_conns: usize,
+    /// Admission cap: total open rounds (see [`CohortTable::set_limits`]).
+    pub max_open_rounds: usize,
+    /// Admission cap: distinct cohorts with open rounds.
+    pub max_open_cohorts: usize,
+    /// Admission cap: resident accumulator bytes (hard refusal, on top
+    /// of the durability layer's soft spill budget).
+    pub max_resident_bytes: usize,
+    /// Per-reporter token-bucket rate limit (`None` = off).
+    pub rate_limit: Option<RateLimit>,
+    /// Backoff hint carried in every [`Response::Busy`].
+    pub retry_after_ms: u64,
 }
 
 impl Default for ServeOpts {
@@ -67,7 +114,16 @@ impl Default for ServeOpts {
             default_deadline_ms: 2_000,
             max_rounds: None,
             read_timeout: Duration::from_secs(10),
+            conn_deadline: Duration::from_secs(30),
             durability: None,
+            screen: ScreenMode::Off,
+            distance_slack: DEFAULT_SLACK,
+            max_conns: usize::MAX,
+            max_open_rounds: usize::MAX,
+            max_open_cohorts: usize::MAX,
+            max_resident_bytes: usize::MAX,
+            rate_limit: None,
+            retry_after_ms: 50,
         }
     }
 }
@@ -84,12 +140,36 @@ pub struct ServeSummary {
     /// Aggregate traffic from the server's seat (recv = reports in,
     /// sent = estimates out), paper units.
     pub traffic: Traffic,
+    /// Requests shed under overload: connection cap, rate limit,
+    /// admission caps and the pre-decode frame screen combined.
+    pub shed: u64,
+    /// Reports screened out after decoding (NaN/Inf or the distance
+    /// filter).
+    pub quarantined: u64,
+    /// High-water mark of resident accumulator bytes (0 unless a
+    /// resident cap or spill budget was configured — the RSS proxy the
+    /// chaos harness asserts against).
+    pub peak_resident_bytes: usize,
 }
+
+/// One reporter's token bucket (see [`RateLimit`]).
+struct TokenBucket {
+    tokens: f64,
+    last_ms: u64,
+}
+
+/// Bound on tracked reporter buckets; past it the map is reset rather
+/// than letting an adversary with unbounded `(cohort, client)` ids grow
+/// it without limit (a reset only forgives, never blocks, honest
+/// clients).
+const MAX_BUCKETS: usize = 65_536;
 
 struct State {
     table: super::cohort::CohortTable,
     /// Connections parked until their `(cohort, round)` closes.
     waiters: HashMap<CohortKey, Vec<TcpStream>>,
+    /// Per-reporter token buckets, keyed by `(cohort, client)`.
+    buckets: HashMap<(u64, u32), TokenBucket>,
     rounds_completed: u64,
     shutdown: bool,
 }
@@ -98,11 +178,60 @@ struct Shared {
     state: Mutex<State>,
     start: Instant,
     opts: ServeOpts,
+    /// Requests shed at the accept loop (connection cap) — counted
+    /// outside the state lock.
+    conn_shed: AtomicU64,
 }
 
 impl Shared {
     fn now_ms(&self) -> u64 {
         self.start.elapsed().as_millis() as u64
+    }
+}
+
+/// Refill-and-take on one reporter's token bucket. `true` = admitted.
+fn take_token(state: &mut State, rl: &RateLimit, key: (u64, u32), now_ms: u64) -> bool {
+    if state.buckets.len() > MAX_BUCKETS {
+        state.buckets.clear();
+    }
+    let b = state.buckets.entry(key).or_insert(TokenBucket {
+        tokens: rl.burst,
+        last_ms: now_ms,
+    });
+    let elapsed_ms = now_ms.saturating_sub(b.last_ms) as f64;
+    b.tokens = (b.tokens + elapsed_ms * rl.per_sec / 1000.0).min(rl.burst);
+    b.last_ms = now_ms;
+    if b.tokens >= 1.0 {
+        b.tokens -= 1.0;
+        true
+    } else {
+        false
+    }
+}
+
+/// A `Read` that enforces the per-connection lifetime deadline: each
+/// read re-checks the wall deadline and bounds the socket timeout by
+/// both the remaining lifetime and the per-read slice, so a client
+/// dripping one byte per slice cannot hold a handler past
+/// [`ServeOpts::conn_deadline`].
+struct DeadlineReader<'a> {
+    stream: &'a TcpStream,
+    deadline: Instant,
+    slice: Duration,
+}
+
+impl Read for DeadlineReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let now = Instant::now();
+        if now >= self.deadline {
+            return Err(io::Error::new(
+                io::ErrorKind::TimedOut,
+                "connection lifetime deadline exceeded",
+            ));
+        }
+        let budget = (self.deadline - now).min(self.slice).max(Duration::from_millis(1));
+        let _ = self.stream.set_read_timeout(Some(budget));
+        Read::read(&mut self.stream, buf)
     }
 }
 
@@ -164,15 +293,23 @@ fn sweep(shared: &Shared, state: &mut State, force_all: bool) {
 /// whose round is still pending parks the stream in the waiter table
 /// and returns — the closing report or the deadline sweeper answers it.
 fn handle_connection(shared: &Arc<Shared>, mut stream: TcpStream) {
-    let _ = stream.set_read_timeout(Some(shared.opts.read_timeout));
     let _ = stream.set_nodelay(true);
-    let req = match read_request(&mut stream) {
+    // The request is read through the lifetime-deadline reader: each
+    // individual read is bounded by `read_timeout`, the whole request
+    // by `conn_deadline` — a slow-loris client is dropped either way.
+    let mut reader = DeadlineReader {
+        stream: &stream,
+        deadline: Instant::now() + shared.opts.conn_deadline,
+        slice: shared.opts.read_timeout,
+    };
+    let req = match read_request(&mut reader) {
         Ok(req) => req,
         Err(e) => {
             let _ = write_response(&mut stream, &Response::Error(e.to_string()));
             return;
         }
     };
+    let _ = stream.set_read_timeout(Some(shared.opts.read_timeout));
     let mut state = shared.state.lock().expect("service state lock");
     // Sweep overdue rounds on the handling path too: with many handler
     // threads contending for the lock, the accept loop's sweep can be
@@ -203,6 +340,17 @@ fn handle_connection(shared: &Arc<Shared>, mut stream: TcpStream) {
                 u64::from(deadline_ms)
             };
             let now = shared.now_ms();
+            // Per-reporter rate limiting, ahead of the table: a flooding
+            // reporter is shed before it costs a WAL append or a decode.
+            if let Some(rl) = &shared.opts.rate_limit {
+                if !take_token(&mut state, rl, (cohort, client), now) {
+                    state.table.note_shed(cohort);
+                    let retry_after_ms = shared.opts.retry_after_ms;
+                    drop(state);
+                    let _ = write_response(&mut stream, &Response::Busy { retry_after_ms });
+                    return;
+                }
+            }
             match state.table.submit(key, &spec, client as usize, &msg, now, deadline) {
                 Submit::Pending { .. } => {
                     // Park; the stream is answered when the round closes.
@@ -223,6 +371,16 @@ fn handle_connection(shared: &Arc<Shared>, mut stream: TcpStream) {
                     }
                 }
                 Submit::Rejected(reason) => {
+                    drop(state);
+                    let _ = write_response(&mut stream, &Response::Error(reason));
+                }
+                Submit::Shed { retry_after_ms, .. } => {
+                    // Already tallied in the cohort's ledger by the table.
+                    drop(state);
+                    let _ = write_response(&mut stream, &Response::Busy { retry_after_ms });
+                }
+                Submit::Quarantined(reason) => {
+                    // Not retryable — the payload itself is implausible.
                     drop(state);
                     let _ = write_response(&mut stream, &Response::Error(reason));
                 }
@@ -263,31 +421,64 @@ pub fn serve(listener: TcpListener, opts: ServeOpts) -> Result<ServeSummary, Tra
 pub fn serve_with_table(
     listener: TcpListener,
     opts: ServeOpts,
-    table: CohortTable,
+    mut table: CohortTable,
 ) -> Result<ServeSummary, TransportError> {
     listener
         .set_nonblocking(true)
         .map_err(|e| TransportError::from_io(&e))?;
+    // Screening and admission knobs are applied here, *after* any
+    // durable recovery replayed the WAL — the log holds only reports a
+    // previous process already accepted, so replay must stay unscreened
+    // and uncapped for bit-identical recovery.
+    table.set_screen(opts.screen);
+    table.set_distance_slack(opts.distance_slack);
+    table.set_limits(opts.max_open_rounds, opts.max_open_cohorts, opts.max_resident_bytes);
+    table.set_retry_after(opts.retry_after_ms);
     let shared = Arc::new(Shared {
         state: Mutex::new(State {
             table,
             waiters: HashMap::new(),
+            buckets: HashMap::new(),
             rounds_completed: 0,
             shutdown: false,
         }),
         start: Instant::now(),
         opts,
+        conn_shed: AtomicU64::new(0),
     });
-    let mut handles = Vec::new();
+    let active_conns = Arc::new(AtomicUsize::new(0));
+    let mut handles: Vec<thread::JoinHandle<()>> = Vec::new();
     loop {
         match listener.accept() {
-            Ok((stream, _)) => {
+            Ok((mut stream, _)) => {
                 let _ = stream.set_nonblocking(false);
+                if active_conns.load(Ordering::SeqCst) >= shared.opts.max_conns {
+                    // Connection cap: shed inline with a bounded write;
+                    // never spawn a handler the cap was meant to prevent.
+                    shared.conn_shed.fetch_add(1, Ordering::SeqCst);
+                    let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
+                    let retry_after_ms = shared.opts.retry_after_ms;
+                    let _ = write_response(&mut stream, &Response::Busy { retry_after_ms });
+                    continue;
+                }
+                active_conns.fetch_add(1, Ordering::SeqCst);
                 let sh = Arc::clone(&shared);
+                let active = Arc::clone(&active_conns);
                 handles.push(
                     thread::Builder::new()
                         .name("dme-serve-conn".into())
-                        .spawn(move || handle_connection(&sh, stream))
+                        .spawn(move || {
+                            // Decrement on every exit path, panics included,
+                            // or the connection cap would leak closed slots.
+                            struct Slot(Arc<AtomicUsize>);
+                            impl Drop for Slot {
+                                fn drop(&mut self) {
+                                    self.0.fetch_sub(1, Ordering::SeqCst);
+                                }
+                            }
+                            let _slot = Slot(active);
+                            handle_connection(&sh, stream)
+                        })
                         .expect("spawn connection handler"),
                 );
             }
@@ -297,6 +488,9 @@ pub fn serve_with_table(
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
             Err(e) => return Err(TransportError::from_io(&e)),
         }
+        // Reap finished handler threads so a long-running service does
+        // not accumulate one JoinHandle per connection ever accepted.
+        handles.retain(|h| !h.is_finished());
         let mut state = shared.state.lock().expect("service state lock");
         sweep(&shared, &mut state, false);
         if state.shutdown {
@@ -318,6 +512,10 @@ pub fn serve_with_table(
         rounds_partial: stats.iter().map(|s| s.rounds_partial).sum(),
         cohorts: stats.len(),
         traffic: state.table.total_traffic(),
+        shed: stats.iter().map(|s| s.shed).sum::<u64>()
+            + shared.conn_shed.load(Ordering::SeqCst),
+        quarantined: stats.iter().map(|s| s.quarantined).sum(),
+        peak_resident_bytes: state.table.peak_resident_bytes(),
     })
 }
 
@@ -343,6 +541,44 @@ fn connect(addr: &str, timeout: Duration) -> Result<TcpStream, TransportError> {
     Ok(stream)
 }
 
+/// Run `op` under the shared retry schedule, retrying the transient
+/// failure classes: dial failures always, [`TransportError::Overloaded`]
+/// always (sleeping at least the server's `retry_after_ms` hint), and
+/// established-stream I/O / timeout failures only when `retry_io` —
+/// idempotent requests (health, shutdown) set it; a report does not,
+/// because a retry after the request bytes left could land as a
+/// duplicate of a report the server already folded.
+fn retry_transient<T>(
+    schedule: &RetrySchedule,
+    salt: u64,
+    retry_io: bool,
+    mut op: impl FnMut() -> Result<T, TransportError>,
+) -> Result<T, TransportError> {
+    let mut windows = schedule.windows(salt);
+    let mut attempt = 1;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                let transient = match &e {
+                    TransportError::Connect { .. } | TransportError::Overloaded { .. } => true,
+                    TransportError::Io { .. } | TransportError::Timeout { .. } => retry_io,
+                    _ => false,
+                };
+                if !transient || attempt >= schedule.attempts() {
+                    return Err(e);
+                }
+                attempt += 1;
+                let mut delay = windows.next().unwrap_or(schedule.backoff_base);
+                if let TransportError::Overloaded { retry_after_ms } = &e {
+                    delay = delay.max(Duration::from_millis(*retry_after_ms));
+                }
+                thread::sleep(delay);
+            }
+        }
+    }
+}
+
 /// Encode `input` under the cohort codec convention and report it for
 /// `(cohort, round)`, blocking until the round closes (all `n` reports
 /// in, or the deadline with `k ≤ n`) and returning the round's
@@ -362,62 +598,84 @@ pub fn report_round(
     let mut codec = cohort_codec(spec, round);
     let mut rng = client_encoder_rng(spec.seed, round, client);
     let msg = codec.encode(input, &mut rng);
-    let mut stream = connect(addr, timeout)?;
-    write_request(
-        &mut stream,
-        &Request::Report {
-            cohort,
-            round,
-            client: client as u32,
-            spec: *spec,
-            deadline_ms,
-            msg,
-        },
-    )
-    .map_err(|e| TransportError::from_io(&e))?;
-    match read_response(&mut stream)? {
-        Response::Estimate {
-            received,
-            expected,
-            partial,
-            estimate,
-        } => Ok(EstimateOut {
-            estimate,
-            received: received as usize,
-            expected: expected as usize,
-            partial,
-        }),
-        Response::Error(reason) => Err(TransportError::Rejected(reason)),
-        other => Err(TransportError::Rejected(format!(
-            "unexpected response to a report: {other:?}"
-        ))),
-    }
+    // Retries dial failures and Busy sheds; NOT mid-stream I/O errors —
+    // a report is not idempotent once its bytes may have landed.
+    let salt = hash2(hash2(cohort, round), client as u64);
+    retry_transient(&RetrySchedule::default(), salt, false, || {
+        let mut stream = connect(addr, timeout)?;
+        write_request(
+            &mut stream,
+            &Request::Report {
+                cohort,
+                round,
+                client: client as u32,
+                spec: *spec,
+                deadline_ms,
+                msg: msg.clone(),
+            },
+        )
+        .map_err(|e| TransportError::from_io(&e))?;
+        match read_response(&mut stream)? {
+            Response::Estimate {
+                received,
+                expected,
+                partial,
+                estimate,
+            } => Ok(EstimateOut {
+                estimate,
+                received: received as usize,
+                expected: expected as usize,
+                partial,
+            }),
+            Response::Busy { retry_after_ms } => {
+                Err(TransportError::Overloaded { retry_after_ms })
+            }
+            Response::Error(reason) => Err(TransportError::Rejected(reason)),
+            other => Err(TransportError::Rejected(format!(
+                "unexpected response to a report: {other:?}"
+            ))),
+        }
+    })
 }
 
-/// Fetch the per-cohort traffic/round statistics.
+/// Fetch the per-cohort traffic/round statistics. Idempotent, so
+/// transient dial/read failures and Busy sheds are retried through the
+/// shared schedule.
 pub fn fetch_stats(addr: &str, timeout: Duration) -> Result<Vec<CohortStats>, TransportError> {
-    let mut stream = connect(addr, timeout)?;
-    write_request(&mut stream, &Request::Health).map_err(|e| TransportError::from_io(&e))?;
-    match read_response(&mut stream)? {
-        Response::Stats(stats) => Ok(stats),
-        Response::Error(reason) => Err(TransportError::Rejected(reason)),
-        other => Err(TransportError::Rejected(format!(
-            "unexpected response to a health request: {other:?}"
-        ))),
-    }
+    retry_transient(&RetrySchedule::default(), 1, true, || {
+        let mut stream = connect(addr, timeout)?;
+        write_request(&mut stream, &Request::Health).map_err(|e| TransportError::from_io(&e))?;
+        match read_response(&mut stream)? {
+            Response::Stats(stats) => Ok(stats),
+            Response::Busy { retry_after_ms } => {
+                Err(TransportError::Overloaded { retry_after_ms })
+            }
+            Response::Error(reason) => Err(TransportError::Rejected(reason)),
+            other => Err(TransportError::Rejected(format!(
+                "unexpected response to a health request: {other:?}"
+            ))),
+        }
+    })
 }
 
 /// Ask a service to exit its accept loop (open rounds close partial).
+/// Idempotent (a second shutdown of a stopping service is a no-op), so
+/// transient failures are retried like [`fetch_stats`].
 pub fn request_shutdown(addr: &str, timeout: Duration) -> Result<(), TransportError> {
-    let mut stream = connect(addr, timeout)?;
-    write_request(&mut stream, &Request::Shutdown).map_err(|e| TransportError::from_io(&e))?;
-    match read_response(&mut stream)? {
-        Response::Ok => Ok(()),
-        Response::Error(reason) => Err(TransportError::Rejected(reason)),
-        other => Err(TransportError::Rejected(format!(
-            "unexpected response to a shutdown request: {other:?}"
-        ))),
-    }
+    retry_transient(&RetrySchedule::default(), 2, true, || {
+        let mut stream = connect(addr, timeout)?;
+        write_request(&mut stream, &Request::Shutdown).map_err(|e| TransportError::from_io(&e))?;
+        match read_response(&mut stream)? {
+            Response::Ok => Ok(()),
+            Response::Busy { retry_after_ms } => {
+                Err(TransportError::Overloaded { retry_after_ms })
+            }
+            Response::Error(reason) => Err(TransportError::Rejected(reason)),
+            other => Err(TransportError::Rejected(format!(
+                "unexpected response to a shutdown request: {other:?}"
+            ))),
+        }
+    })
 }
 
 #[cfg(test)]
@@ -636,5 +894,221 @@ mod tests {
         assert_eq!(out.estimate, want, "recovered round must be bit-identical");
         assert_eq!(summary.rounds_completed, 1);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A drip-feeding client (1 byte per poll) is cut off by the
+    /// connection-lifetime deadline while honest traffic keeps flowing.
+    #[test]
+    fn slow_loris_client_is_cut_off_by_the_connection_deadline() {
+        let (addr, server) = spawn_server(ServeOpts {
+            conn_deadline: Duration::from_millis(300),
+            read_timeout: Duration::from_millis(100),
+            ..ServeOpts::default()
+        });
+        let loris = {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut s = TcpStream::connect(&addr).expect("loris connect");
+                let start = Instant::now();
+                // A valid magic + report kind keeps the parser hungry,
+                // then the header drips in one byte per poll — each
+                // individual read stays alive, so only the lifetime
+                // deadline can cut this connection off (well before the
+                // 10 s give-up horizon).
+                let mut preamble = super::super::wire::REQ_MAGIC.to_le_bytes().to_vec();
+                preamble.push(0); // KIND_REPORT
+                if s.write_all(&preamble).is_err() {
+                    return start.elapsed();
+                }
+                for _ in 0..333u32 {
+                    if s.write_all(&[0u8]).is_err() || s.flush().is_err() {
+                        return start.elapsed();
+                    }
+                    thread::sleep(Duration::from_millis(30));
+                }
+                start.elapsed()
+            })
+        };
+        // Honest traffic is unaffected while the loris drips: an n=1
+        // round completes immediately.
+        let out = report_round(&addr, 2, 0, 0, &spec(1, 4), &[1.5; 4], 0, Duration::from_secs(10))
+            .expect("honest report while loris drips");
+        assert_eq!(out.received, 1);
+        let lifetime = loris.join().unwrap();
+        assert!(
+            lifetime < Duration::from_secs(5),
+            "loris connection survived {lifetime:?}, deadline did not fire"
+        );
+        request_shutdown(&addr, Duration::from_secs(5)).expect("shutdown");
+        server.join().unwrap();
+    }
+
+    /// Admission control sheds a round the cap forbids with a typed
+    /// `Busy`; the client's shared-backoff retry lands it once capacity
+    /// frees up.
+    #[test]
+    fn shed_report_is_retried_to_success_when_capacity_frees() {
+        let (addr, server) = spawn_server(ServeOpts {
+            max_open_rounds: 1,
+            ..ServeOpts::default()
+        });
+        // Cohort 1 opens the only allowed round and holds it until its
+        // second report arrives (the 60 s deadline never fires here).
+        let blocker = {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                report_round(&addr, 1, 0, 0, &spec(2, 4), &[1.0; 4], 60_000, Duration::from_secs(30))
+            })
+        };
+        // Wait until the blocking round is actually open.
+        loop {
+            let stats = fetch_stats(&addr, Duration::from_secs(5)).expect("health");
+            if stats.iter().any(|s| s.cohort == 1 && s.open_rounds > 0) {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        // Deterministic shed: with the only round slot held, a raw
+        // (retry-free) report for cohort 2 must bounce with Busy.
+        let cs = spec(1, 4);
+        let encode2 = || {
+            let mut codec = cohort_codec(&cs, 0);
+            let mut rng = client_encoder_rng(cs.seed, 0, 0);
+            codec.encode(&[4.0; 4], &mut rng)
+        };
+        let mut raw = TcpStream::connect(&addr).expect("connect");
+        raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write_request(
+            &mut raw,
+            &Request::Report {
+                cohort: 2,
+                round: 0,
+                client: 0,
+                spec: cs,
+                deadline_ms: 0,
+                msg: encode2(),
+            },
+        )
+        .expect("write raw report");
+        match read_response(&mut raw).expect("raw response") {
+            Response::Busy { retry_after_ms } => assert!(retry_after_ms > 0),
+            other => panic!("expected Busy under the round cap, got {other:?}"),
+        }
+        // Now race the retrying client against capacity freeing up: the
+        // second cohort-1 report closes the blocking round, after which
+        // one of cohort 2's backoff attempts must be admitted.
+        let retrier = {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                report_round(&addr, 2, 0, 0, &cs, &[4.0; 4], 0, Duration::from_secs(10))
+            })
+        };
+        thread::sleep(Duration::from_millis(60));
+        let closer = report_round(&addr, 1, 0, 1, &spec(2, 4), &[3.0; 4], 60_000, Duration::from_secs(30))
+            .expect("closing report");
+        assert_eq!(closer.received, 2);
+        let out = retrier.join().unwrap().expect("shed report must succeed on retry");
+        assert_eq!(out.received, 1);
+        let blocked = blocker.join().unwrap().expect("estimate");
+        assert!(!blocked.partial);
+        request_shutdown(&addr, Duration::from_secs(5)).expect("shutdown");
+        let summary = server.join().unwrap();
+        assert!(summary.shed >= 1, "the capped round must be accounted: {summary:?}");
+        assert_eq!(summary.rounds_completed, 2);
+    }
+
+    /// The per-reporter token bucket sheds a flooding reporter with
+    /// `Busy` while other reporters stay admitted.
+    #[test]
+    fn rate_limit_sheds_flooding_reporter_with_busy() {
+        let (addr, server) = spawn_server(ServeOpts {
+            // burst 1, no refill: a reporter's second report always
+            // sheds — deterministic for the assertion below.
+            rate_limit: Some(RateLimit { burst: 1.0, per_sec: 0.0 }),
+            ..ServeOpts::default()
+        });
+        let cs = spec(2, 4);
+        // Raw wire (no client-side retry): report 1 from client 0 parks.
+        let encode = |client: usize| {
+            let mut codec = cohort_codec(&cs, 0);
+            let mut rng = client_encoder_rng(cs.seed, 0, client);
+            codec.encode(&[2.0; 4], &mut rng)
+        };
+        let report_req = |client: usize| Request::Report {
+            cohort: 9,
+            round: 0,
+            client: client as u32,
+            spec: cs,
+            deadline_ms: 60_000,
+            msg: encode(client),
+        };
+        let mut parked = TcpStream::connect(&addr).expect("connect");
+        parked.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        write_request(&mut parked, &report_req(0)).expect("write report");
+        // Wait for it to register, then flood from the same reporter.
+        loop {
+            let stats = fetch_stats(&addr, Duration::from_secs(5)).expect("health");
+            if stats.iter().any(|s| s.cohort == 9 && s.reports == 1) {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        let mut flood = TcpStream::connect(&addr).expect("connect");
+        flood.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write_request(&mut flood, &report_req(0)).expect("write flood");
+        match read_response(&mut flood).expect("flood response") {
+            Response::Busy { retry_after_ms } => assert!(retry_after_ms > 0),
+            other => panic!("expected Busy for the flooding reporter, got {other:?}"),
+        }
+        // A different reporter still has its own bucket: client 1
+        // completes the round, which also answers the parked stream.
+        let mut other = TcpStream::connect(&addr).expect("connect");
+        other.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        write_request(&mut other, &report_req(1)).expect("write report");
+        match read_response(&mut other).expect("closing response") {
+            Response::Estimate { received, .. } => assert_eq!(received, 2),
+            other => panic!("expected Estimate, got {other:?}"),
+        }
+        match read_response(&mut parked).expect("parked response") {
+            Response::Estimate { received, .. } => assert_eq!(received, 2),
+            other => panic!("expected Estimate, got {other:?}"),
+        }
+        request_shutdown(&addr, Duration::from_secs(5)).expect("shutdown");
+        let summary = server.join().unwrap();
+        assert_eq!(summary.shed, 1);
+    }
+
+    /// Honest rounds under `screen=distance` are bit-identical to the
+    /// unscreened service, end to end over loopback.
+    #[test]
+    fn screened_service_matches_unscreened_bit_for_bit() {
+        let mut run = |mode: ScreenMode| {
+            let (addr, server) = spawn_server(ServeOpts {
+                max_rounds: Some(1),
+                screen: mode,
+                ..ServeOpts::default()
+            });
+            let handles: Vec<_> = (0..2)
+                .map(|c| {
+                    let addr = addr.clone();
+                    thread::spawn(move || {
+                        let x: Vec<f64> = (0..8).map(|i| (c as f64 + 1.0) * (i as f64 - 3.5)).collect();
+                        report_round(&addr, 3, 1, c, &spec(2, 8), &x, 0, Duration::from_secs(10))
+                            .expect("report")
+                    })
+                })
+                .collect();
+            let outs: Vec<EstimateOut> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            let summary = server.join().unwrap();
+            assert_eq!(summary.quarantined, 0);
+            assert_eq!(summary.shed, 0);
+            outs
+        };
+        let off = run(ScreenMode::Off);
+        let screened = run(ScreenMode::Distance);
+        // n=2 folds commute bitwise, so arrival order cannot perturb
+        // this comparison.
+        assert_eq!(off[0].estimate, screened[0].estimate);
+        assert_eq!(off[0].estimate, off[1].estimate);
     }
 }

@@ -31,6 +31,7 @@ const KIND_ESTIMATE: u8 = 0;
 const KIND_ERROR: u8 = 1;
 const KIND_STATS: u8 = 2;
 const KIND_OK: u8 = 3;
+const KIND_BUSY: u8 = 4;
 
 /// Hard cap on `d` accepted over the wire (an estimate response of this
 /// size is 64 MB — aligned with [`frame::MAX_FRAME_BYTES`]).
@@ -72,6 +73,10 @@ pub enum Response {
     Stats(Vec<CohortStats>),
     /// Shutdown acknowledged.
     Ok,
+    /// Load shed under overload: the request was refused *before* any
+    /// state changed. Retryable after the suggested backoff — the
+    /// client side maps this to [`TransportError::Overloaded`].
+    Busy { retry_after_ms: u64 },
 }
 
 /// `CodecSpec` wire form: tag byte + one u32 parameter (unused
@@ -281,9 +286,16 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> io::Result<()> {
                 put_u64(&mut buf, s.bits_in);
                 put_u64(&mut buf, s.bits_out);
                 put_u32(&mut buf, s.open_rounds);
+                put_u64(&mut buf, s.shed);
+                put_u64(&mut buf, s.quarantined);
+                put_u64(&mut buf, s.resident_bytes);
             }
         }
         Response::Ok => buf.push(KIND_OK),
+        Response::Busy { retry_after_ms } => {
+            buf.push(KIND_BUSY);
+            put_u64(&mut buf, *retry_after_ms);
+        }
     }
     w.write_all(&buf)
 }
@@ -334,11 +346,17 @@ pub fn read_response<R: Read>(r: &mut R) -> Result<Response, TransportError> {
                     bits_in: get_u64(r)?,
                     bits_out: get_u64(r)?,
                     open_rounds: get_u32(r)?,
+                    shed: get_u64(r)?,
+                    quarantined: get_u64(r)?,
+                    resident_bytes: get_u64(r)?,
                 });
             }
             Ok(Response::Stats(stats))
         }
         KIND_OK => Ok(Response::Ok),
+        KIND_BUSY => Ok(Response::Busy {
+            retry_after_ms: get_u64(r)?,
+        }),
         _ => Err(FrameError::BadHeader("unknown response kind").into()),
     }
 }
@@ -396,8 +414,12 @@ mod tests {
                 bits_in: 12345,
                 bits_out: 64 * 16 * 10,
                 open_rounds: 1,
+                shed: 5,
+                quarantined: 2,
+                resident_bytes: 256,
             }]),
             Response::Ok,
+            Response::Busy { retry_after_ms: 120 },
         ];
         for resp in responses {
             let mut wire = Vec::new();

@@ -117,6 +117,15 @@ impl VectorCodec for VqsgdCrossPolytope {
         for _ in 0..self.reps {
             let signed_idx = r.read(self.idx_width());
             let i = (signed_idx >> 1) as usize;
+            // An honest encoder only emits vertex indices < d, but
+            // `idx_width` bits can express larger values on hostile
+            // payloads. Poison instead of panicking: the NaN fill is
+            // caught by the service's float-hygiene screen, and honest
+            // messages never take this branch.
+            if i >= self.d {
+                out.fill(f64::NAN);
+                return;
+            }
             let sgn = if signed_idx & 1 == 1 { -1.0 } else { 1.0 };
             out[i] += sgn * scale;
         }

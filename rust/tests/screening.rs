@@ -1,0 +1,327 @@
+//! Property tests over the report-screening contract
+//! ([`dme::net::screen`] + [`dme::net::cohort`]).
+//!
+//! The pinned guarantees, exercised here under seeded adversarial bit
+//! patterns (same harness idiom as `tests/prop.rs` — the offline
+//! toolchain has no `proptest`, so failures print a `CASE_SEED`):
+//!
+//! - **no decode path panics or folds a non-finite value**: for every
+//!   stateless codec, a correctly-sized frame of arbitrary bytes is
+//!   either folded to all-finite values or quarantined — never a panic,
+//!   never NaN/Inf in the accumulator;
+//! - **quarantine is bit-invisible**: a quarantined report leaves the
+//!   round's estimate bit-identical to a run where it never arrived,
+//!   and leaves a durable table's WAL byte-for-byte untouched;
+//! - **short frames shed before decode** and a shed first report rolls
+//!   the freshly-opened round back (no empty open rounds to pin).
+
+use dme::coordinator::CodecSpec;
+use dme::net::cohort::{
+    client_encoder_rng, cohort_codec, CohortKey, CohortSpec, CohortTable, Submit,
+};
+use dme::net::screen::{RoundScreen, ScreenMode};
+use dme::quant::Message;
+use dme::rng::{hash2, Rng};
+use dme::store::DurabilityOpts;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `prop` over `cases` generated cases; panics with the case seed.
+fn check(name: &str, cases: u64, prop: impl Fn(&mut Rng)) {
+    let base = std::env::var("CASE_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    match base {
+        Some(seed) => {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }
+        None => {
+            for case in 0..cases {
+                let seed = hash2(0x5C4E, case);
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut rng = Rng::new(seed);
+                    prop(&mut rng);
+                }));
+                if let Err(e) = result {
+                    panic!("property '{name}' failed at CASE_SEED={seed}: {e:?}");
+                }
+            }
+        }
+    }
+}
+
+/// Every codec a stateless cohort can serve (the screen's domain).
+fn stateless_codecs() -> [CodecSpec; 10] {
+    [
+        CodecSpec::Lq { q: 64 },
+        CodecSpec::Rlq { q: 16 },
+        CodecSpec::LqHull { q: 8 },
+        CodecSpec::D4 { q: 16 },
+        CodecSpec::QsgdL2 { q: 16 },
+        CodecSpec::QsgdLinf { q: 16 },
+        CodecSpec::Hadamard { q: 16 },
+        CodecSpec::Vqsgd { reps: 6 },
+        CodecSpec::TernGrad,
+        CodecSpec::Full,
+    ]
+}
+
+fn spec(codec: CodecSpec, d: usize) -> CohortSpec {
+    CohortSpec {
+        n: 2,
+        d,
+        spec: codec,
+        y: 8.0,
+        seed: 5,
+    }
+}
+
+fn encode(cs: &CohortSpec, round: u64, client: usize, x: &[f64]) -> Message {
+    let mut codec = cohort_codec(cs, round);
+    let mut rng = client_encoder_rng(cs.seed, round, client);
+    codec.encode(x, &mut rng)
+}
+
+fn rand_bytes(rng: &mut Rng, len: usize) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(len + 8);
+    while bytes.len() < len {
+        bytes.extend_from_slice(&rng.next_u64().to_le_bytes());
+    }
+    bytes.truncate(len);
+    bytes
+}
+
+fn rand_input(rng: &mut Rng, d: usize, y: f64) -> Vec<f64> {
+    (0..d).map(|_| rng.uniform(-y / 2.0, y / 2.0)).collect()
+}
+
+/// Hostile `Full`-codec payload at the exact probe size: `d` raw f32s.
+fn f32_payload(d: usize, v: f32) -> Message {
+    let mut bytes = Vec::new();
+    for _ in 0..d {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    Message { bits: 32 * d as u64, bytes }
+}
+
+/// Fresh per-test scratch dir (no `Date::now` — counter + pid).
+fn temp_dir(tag: &str) -> PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!("dme-screen-{}-{tag}-{n}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// For every stateless codec: a frame of adversarial bytes at the exact
+/// probe size either folds to finite values or is quarantined. No panic
+/// reaches the caller, and the accumulator never goes non-finite — the
+/// leader survives arbitrary hostile payloads.
+#[test]
+fn prop_adversarial_bit_patterns_never_panic_or_fold_nonfinite() {
+    for codec in stateless_codecs() {
+        let name = format!("adversarial_bits[{}]", codec.label());
+        check(&name, 40, |rng| {
+            let cs = spec(codec, 16);
+            let key = CohortKey {
+                cohort: 1,
+                round: rng.next_below(4),
+            };
+            let probe = RoundScreen::probe(&cs, key.round);
+            let hostile = Message {
+                bytes: rand_bytes(rng, probe.expect_len),
+                bits: probe.expect_bits,
+            };
+            let mut table = CohortTable::new();
+            table.set_screen(ScreenMode::Basic);
+            let accepted = match table.submit(key, &cs, 0, &hostile, 0, 100) {
+                Submit::Pending { received, expected } => {
+                    assert_eq!((received, expected), (1, 2));
+                    true
+                }
+                Submit::Quarantined(why) => {
+                    assert!(why.contains("quarantined"), "unexpected reason: {why}");
+                    false
+                }
+                other => panic!("{}: unexpected {other:?}", cs.spec.label()),
+            };
+            // The honest report still lands; the closed round's estimate
+            // must be all-finite whether the hostile bytes folded or not.
+            let honest = encode(&cs, key.round, 1, &rand_input(rng, cs.d, cs.y));
+            let result = match table.submit(key, &cs, 1, &honest, 0, 100) {
+                Submit::Complete(r) => {
+                    assert!(accepted, "round completed without the hostile fold");
+                    r
+                }
+                Submit::Pending { received, .. } => {
+                    assert!(!accepted);
+                    assert_eq!(received, 1);
+                    let closed = table.expire(1_000);
+                    assert_eq!(closed.len(), 1);
+                    closed.into_iter().next().expect("one round closed").1
+                }
+                other => panic!("{}: unexpected {other:?}", cs.spec.label()),
+            };
+            assert_eq!(result.estimate.len(), cs.d);
+            for &v in &result.estimate {
+                assert!(v.is_finite(), "{}: non-finite fold {v}", cs.spec.label());
+            }
+            assert_eq!(table.open_rounds(), 0);
+        });
+    }
+}
+
+/// A quarantined report is bit-invisible: the attacked round's estimate
+/// equals, bit for bit, the estimate of a round the poison never
+/// reached. Poison is injected at a random position relative to the
+/// honest reports.
+#[test]
+fn prop_quarantined_reports_are_bit_invisible_to_the_estimate() {
+    check("quarantine_bit_invisible", 120, |rng| {
+        let d = [1, 3, 8, 16, 33][rng.next_below(5) as usize];
+        let cs = spec(CodecSpec::Full, d);
+        let key = CohortKey { cohort: 2, round: 1 };
+        let honest: Vec<Message> = (0..2)
+            .map(|c| encode(&cs, key.round, c, &rand_input(rng, d, cs.y)))
+            .collect();
+        // Hostile payload at the exact probe size: raw f32 fields, NaN
+        // or far-but-finite (caught by Basic resp. Distance).
+        let poison = f32_payload(d, if rng.next_bool() { f32::NAN } else { 1.0e30 });
+        let inject_first = rng.next_bool();
+
+        let mut reference = CohortTable::new();
+        reference.set_screen(ScreenMode::Distance);
+        let mut attacked = CohortTable::new();
+        attacked.set_screen(ScreenMode::Distance);
+
+        let complete = |table: &mut CohortTable, poisoned: bool| {
+            if poisoned && inject_first {
+                assert!(matches!(
+                    table.submit(key, &cs, 1, &poison, 0, 100),
+                    Submit::Quarantined(_)
+                ));
+            }
+            assert!(matches!(
+                table.submit(key, &cs, 0, &honest[0], 0, 100),
+                Submit::Pending { .. }
+            ));
+            if poisoned && !inject_first {
+                assert!(matches!(
+                    table.submit(key, &cs, 1, &poison, 0, 100),
+                    Submit::Quarantined(_)
+                ));
+            }
+            match table.submit(key, &cs, 1, &honest[1], 0, 100) {
+                Submit::Complete(r) => r,
+                other => panic!("expected Complete, got {other:?}"),
+            }
+        };
+        let want = complete(&mut reference, false);
+        let got = complete(&mut attacked, true);
+        let want_bits: Vec<u64> = want.estimate.iter().map(|v| v.to_bits()).collect();
+        let got_bits: Vec<u64> = got.estimate.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, want_bits, "quarantine perturbed the fold");
+        assert_eq!((got.received, got.expected, got.partial), (2, 2, false));
+        let s = attacked.stats()[0];
+        assert_eq!((s.quarantined, s.shed), (1, 0));
+    });
+}
+
+/// Quarantined and shed reports never touch a durable table's WAL: the
+/// log stays byte-for-byte identical across the hostile submissions,
+/// and the recovered estimate matches a clean in-RAM reference.
+#[test]
+fn quarantined_and_shed_reports_leave_the_wal_untouched() {
+    let dir = temp_dir("wal");
+    let cs = spec(CodecSpec::Full, 8);
+    let key = CohortKey { cohort: 3, round: 0 };
+    let honest: Vec<Message> = (0..2)
+        .map(|c| encode(&cs, key.round, c, &[0.5 + c as f64; 8]))
+        .collect();
+    let (mut table, _) = CohortTable::durable(&DurabilityOpts::new(&dir)).expect("durable table");
+    table.set_screen(ScreenMode::Distance);
+    assert!(matches!(
+        table.submit(key, &cs, 0, &honest[0], 0, 1000),
+        Submit::Pending { .. }
+    ));
+    let wal_before = table.wal_bytes().expect("durable table logs a WAL");
+    // NaN poison (quarantined after decode) and a truncated frame (shed
+    // before decode): neither may grow the log.
+    let poison = f32_payload(8, f32::NAN);
+    assert!(matches!(
+        table.submit(key, &cs, 1, &poison, 0, 1000),
+        Submit::Quarantined(_)
+    ));
+    let mut short = honest[1].clone();
+    short.bytes.pop();
+    short.bits = 8 * short.bytes.len() as u64;
+    assert!(matches!(
+        table.submit(key, &cs, 1, &short, 0, 1000),
+        Submit::Shed { .. }
+    ));
+    assert_eq!(
+        table.wal_bytes().expect("durable table logs a WAL"),
+        wal_before,
+        "hostile reports reached the WAL"
+    );
+    // The honest completion still matches a clean in-RAM reference.
+    let got = match table.submit(key, &cs, 1, &honest[1], 0, 1000) {
+        Submit::Complete(r) => r,
+        other => panic!("expected Complete, got {other:?}"),
+    };
+    let mut clean = CohortTable::new();
+    assert!(matches!(
+        clean.submit(key, &cs, 0, &honest[0], 0, 1000),
+        Submit::Pending { .. }
+    ));
+    let want = match clean.submit(key, &cs, 1, &honest[1], 0, 1000) {
+        Submit::Complete(r) => r,
+        other => panic!("expected Complete, got {other:?}"),
+    };
+    assert_eq!(got.estimate, want.estimate);
+    let s = table.stats()[0];
+    assert_eq!((s.reports, s.quarantined, s.shed), (2, 1, 1));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// For every stateless codec: a frame truncated by 1–3 bytes is shed
+/// before any decode, and a shed *first* report rolls the fresh round
+/// back — hostile traffic cannot pin empty open rounds.
+#[test]
+fn prop_short_frames_shed_before_decode_and_roll_back_fresh_rounds() {
+    for codec in stateless_codecs() {
+        let name = format!("short_frames[{}]", codec.label());
+        check(&name, 20, |rng| {
+            let cs = spec(codec, 16);
+            let key = CohortKey { cohort: 4, round: 0 };
+            let mut short = encode(&cs, key.round, 0, &rand_input(rng, cs.d, cs.y));
+            let cut = (1 + rng.next_below(3) as usize).min(short.bytes.len());
+            short.bytes.truncate(short.bytes.len() - cut);
+            short.bits = 8 * short.bytes.len() as u64;
+            let mut table = CohortTable::new();
+            table.set_screen(ScreenMode::Basic);
+            match table.submit(key, &cs, 0, &short, 0, 1000) {
+                Submit::Shed { reason, retry_after_ms } => {
+                    assert!(reason.contains("screened"), "unexpected reason: {reason}");
+                    assert!(retry_after_ms > 0);
+                }
+                other => panic!("{}: expected Shed, got {other:?}", cs.spec.label()),
+            }
+            assert_eq!(table.open_rounds(), 0, "{}: empty round pinned", cs.spec.label());
+            let s = table.stats()[0];
+            assert_eq!((s.shed, s.open_rounds), (1, 0));
+            // Honest traffic afterwards is unaffected.
+            let m0 = encode(&cs, key.round, 0, &rand_input(rng, cs.d, cs.y));
+            let m1 = encode(&cs, key.round, 1, &rand_input(rng, cs.d, cs.y));
+            assert!(matches!(
+                table.submit(key, &cs, 0, &m0, 0, 1000),
+                Submit::Pending { .. }
+            ));
+            assert!(matches!(
+                table.submit(key, &cs, 1, &m1, 0, 1000),
+                Submit::Complete(_)
+            ));
+        });
+    }
+}
